@@ -1,0 +1,147 @@
+//! Perf probe (EXPERIMENTS.md §Perf): micro-measurements of the three
+//! hot paths — PJRT kernel dispatch (L1/L2), the DES router loop and
+//! core-callback machinery (L3), and TCAM lookup.
+
+use std::time::Instant;
+
+use spinntools::machine::router::{Route, RoutingEntry, RoutingTable};
+use spinntools::machine::{CoreLocation, Direction, MachineBuilder};
+use spinntools::runtime::{HostTensor, Runtime};
+use spinntools::simulator::{scamp, CoreApp, CoreCtx, SimConfig, SimMachine};
+
+fn main() -> anyhow::Result<()> {
+    // 1. PJRT dispatch latency per model.
+    if let Ok(rt) = Runtime::open_default() {
+        for model in [
+            "lif_step_n64",
+            "lif_step_n256",
+            "lif_step_packed_n256",
+            "conway_step_32x32",
+            "poisson_step_n256",
+        ] {
+            let shapes = rt.input_shapes(model)?;
+            let inputs: Vec<HostTensor> = shapes
+                .iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    if model.starts_with("conway") {
+                        HostTensor::I32(vec![0; n])
+                    } else if s.is_empty() {
+                        HostTensor::ScalarF32(0.5)
+                    } else {
+                        HostTensor::F32(vec![0.0; n])
+                    }
+                })
+                .collect();
+            rt.exec(model, &inputs)?; // warm (compile)
+            let n_iters = 500;
+            let t = Instant::now();
+            for _ in 0..n_iters {
+                rt.exec(model, &inputs)?;
+            }
+            println!("pjrt_exec {model:<20} {:>10.2?}/call", t.elapsed() / n_iters);
+        }
+    }
+
+    // 2. TCAM lookup (1024-entry worst case, last-entry match).
+    let entries: Vec<RoutingEntry> = (0..1024)
+        .map(|k| RoutingEntry::new(k, !0, Route::EMPTY.with_processor(1)))
+        .collect();
+    let table = RoutingTable::from_entries(entries);
+    let t = Instant::now();
+    let n = 1_000_000u32;
+    let mut acc = 0u64;
+    for i in 0..n {
+        if table.lookup(1023 - (i & 1)).is_some() {
+            acc += 1;
+        }
+    }
+    println!("tcam_lookup worst-case    {:>10.2?}/lookup (acc {acc})", t.elapsed() / n);
+
+    // 3. DES packet storm: one sender flooding a 3-hop path, no apps work.
+    struct Flood;
+    impl CoreApp for Flood {
+        fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+            for _ in 0..1000 {
+                ctx.send_mc(7, Some(1));
+            }
+            Ok(())
+        }
+    }
+    struct Sink;
+    impl CoreApp for Sink {
+        fn on_timer(&mut self, _: &mut CoreCtx) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn on_mc_packet(&mut self, _: u32, _: Option<u32>, _: &mut CoreCtx) -> anyhow::Result<()> {
+            Ok(())
+        }
+    }
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = SimMachine::boot(m, SimConfig::default());
+    // Route key 7 from (0,0) east 3 hops to (3,0) core 1.
+    for x in 0..3u32 {
+        scamp::load_routing_table(
+            &mut sim,
+            (x, 0),
+            RoutingTable::from_entries(vec![RoutingEntry::new(
+                7,
+                !0,
+                Route::EMPTY.with_link(Direction::East),
+            )]),
+        )?;
+    }
+    scamp::load_routing_table(
+        &mut sim,
+        (3, 0),
+        RoutingTable::from_entries(vec![RoutingEntry::new(
+            7,
+            !0,
+            Route::EMPTY.with_processor(1),
+        )]),
+    )?;
+    scamp::load_app(&mut sim, CoreLocation::new(0, 0, 1), Box::new(Flood), Default::default(), Default::default())?;
+    scamp::load_app(&mut sim, CoreLocation::new(3, 0, 1), Box::new(Sink), Default::default(), Default::default())?;
+    scamp::signal_start(&mut sim)?;
+    let ticks = 100u64;
+    let t = Instant::now();
+    sim.start_run_cycle(ticks);
+    sim.run_until_idle()?;
+    let dt = t.elapsed();
+    let events = sim.stats.events_processed;
+    println!(
+        "des_storm {} events in {:.2?} = {:>8.0} ns/event ({} pkts delivered)",
+        events,
+        dt,
+        dt.as_nanos() as f64 / events as f64,
+        sim.stats.mc_delivered
+    );
+
+    // 4. Core-callback overhead: deliver directly to a local core.
+    let m = MachineBuilder::spinn3().build();
+    let mut sim = SimMachine::boot(m, SimConfig::default());
+    scamp::load_routing_table(
+        &mut sim,
+        (0, 0),
+        RoutingTable::from_entries(vec![RoutingEntry::new(
+            7,
+            !0,
+            Route::EMPTY.with_processor(2),
+        )]),
+    )?;
+    scamp::load_app(&mut sim, CoreLocation::new(0, 0, 1), Box::new(Flood), Default::default(), Default::default())?;
+    scamp::load_app(&mut sim, CoreLocation::new(0, 0, 2), Box::new(Sink), Default::default(), Default::default())?;
+    scamp::signal_start(&mut sim)?;
+    let t = Instant::now();
+    sim.start_run_cycle(100);
+    sim.run_until_idle()?;
+    let dt = t.elapsed();
+    println!(
+        "local_deliver {} events in {:.2?} = {:>8.0} ns/event",
+        sim.stats.events_processed,
+        dt,
+        dt.as_nanos() as f64 / sim.stats.events_processed as f64
+    );
+    Ok(())
+}
+// (packed-variant probe appended during the perf pass)

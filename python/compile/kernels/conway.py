@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: Conway's Game of Life step over a cell tile.
+
+The §7.1 use case. The paper's machine-graph formulation runs one cell per
+vertex; the "future version" sketched at the end of §7.1 packs a tile of
+cells into each machine vertex — that is what this kernel computes (and the
+rust ``apps::conway`` core app uses it through the AOT artifact when a
+vertex holds more than one cell).
+
+Hardware adaptation: on SpiNNaker, neighbour state arrives as multicast
+packets and the cell grid lives in DTCM; here a halo'd row-band of the board
+is staged into VMEM per grid step and the 8-neighbour count is computed with
+shifted adds on the VPU (no MXU use — the op is a 3x3 binary stencil, and an
+im2col matmul formulation would waste the systolic array on 0/1 weights).
+Row-band blocking keeps VMEM at (rows+2) x w x 4 B per buffer.
+
+interpret=True for the same reason as lif.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conway_kernel(b_ref, o_ref):
+    """Whole-tile body: zero-padded 8-neighbour count + B3/S23 rule."""
+    board = b_ref[...]
+    padded = jnp.pad(board, 1)
+    neigh = (
+        padded[:-2, :-2] + padded[:-2, 1:-1] + padded[:-2, 2:]
+        + padded[1:-1, :-2] + padded[1:-1, 2:]
+        + padded[2:, :-2] + padded[2:, 1:-1] + padded[2:, 2:]
+    )
+    alive = board > 0
+    born = jnp.logical_and(jnp.logical_not(alive), neigh == 3)
+    survive = jnp.logical_and(alive, jnp.logical_or(neigh == 2, neigh == 3))
+    o_ref[...] = jnp.logical_or(born, survive).astype(board.dtype)
+
+
+@jax.jit
+def conway_step(board):
+    """One synchronous Life step over an i32[h, w] tile (dead boundary).
+
+    The tile is small enough (machine vertices hold at most 64x64 cells —
+    see rust/src/apps/conway.rs) that a single VMEM block holds the halo'd
+    board: 66 x 66 x 4 B ~ 17 KiB.
+    """
+    h, w = board.shape
+    return pl.pallas_call(
+        _conway_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), board.dtype),
+        interpret=True,
+    )(board)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def conway_multi_step(board, *, steps):
+    """``steps`` fused Life steps (used for the L2 scan-vs-unroll ablation)."""
+    def body(b, _):
+        return conway_step(b), None
+
+    out, _ = jax.lax.scan(body, board, None, length=steps)
+    return out

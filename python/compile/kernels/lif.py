@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: LIF population timestep.
+
+The compute hot-spot of the §7.2 use case — one 1 ms update of a slice of
+current-based exponential-synapse LIF neurons, as run on every simulated
+SpiNNaker core hosting a neuron machine-vertex.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on SpiNNaker the
+neuron state lives in DTCM and synaptic rows are DMA'd in; here the state
+vector is tiled into VMEM-resident blocks of ``BLOCK`` lanes via BlockSpec —
+the same "working set must fit the scratchpad" discipline. All math is
+elementwise (VPU-bound), each state byte is touched exactly once per step,
+so the roofline is memory bandwidth, not MXU.
+
+VMEM budget per block (f32): 6 inputs + 5 outputs + params = 11 x BLOCK x 4 B
++ 32 B; BLOCK=256 -> ~11.3 KiB, far below the ~16 MiB VMEM ceiling, leaving
+room for double-buffering the HBM->VMEM pipeline on real hardware.
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO so the artifact is
+executable by the rust runtime (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    N_PARAMS,
+    PARAM_ALPHA_MEM,
+    PARAM_ALPHA_SYN_E,
+    PARAM_ALPHA_SYN_I,
+    PARAM_I_OFFSET,
+    PARAM_T_REFRAC,
+    PARAM_V_RESET,
+    PARAM_V_REST,
+    PARAM_V_THRESH,
+)
+
+# Default lane-block: a multiple of the 8x128 TPU vreg tile.
+BLOCK = 256
+
+
+def _lif_kernel(v_ref, ie_ref, ii_ref, rf_ref, xe_ref, xi_ref, p_ref,
+                vo_ref, ieo_ref, iio_ref, rfo_ref, sp_ref):
+    """Per-block body. All refs are VMEM-resident blocks."""
+    p = p_ref[...]
+    alpha_m = p[PARAM_ALPHA_MEM]
+    alpha_e = p[PARAM_ALPHA_SYN_E]
+    alpha_i = p[PARAM_ALPHA_SYN_I]
+    v_rest = p[PARAM_V_REST]
+    v_reset = p[PARAM_V_RESET]
+    v_thresh = p[PARAM_V_THRESH]
+    t_refrac = p[PARAM_T_REFRAC]
+    i_offset = p[PARAM_I_OFFSET]
+
+    i_exc = ie_ref[...] * alpha_e + xe_ref[...]
+    i_inh = ii_ref[...] * alpha_i + xi_ref[...]
+
+    total_i = i_exc - i_inh + i_offset
+    v_free = v_rest + (v_ref[...] - v_rest) * alpha_m + total_i * (1.0 - alpha_m)
+
+    refrac = rf_ref[...]
+    in_refrac = refrac > 0.0
+    v_clamped = jnp.where(in_refrac, v_reset, v_free)
+    refrac_dec = jnp.maximum(refrac - 1.0, 0.0)
+
+    spiked = jnp.logical_and(jnp.logical_not(in_refrac), v_clamped >= v_thresh)
+
+    vo_ref[...] = jnp.where(spiked, v_reset, v_clamped)
+    ieo_ref[...] = i_exc
+    iio_ref[...] = i_inh
+    rfo_ref[...] = jnp.where(spiked, t_refrac, refrac_dec)
+    sp_ref[...] = spiked.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lif_step(v, i_exc, i_inh, refrac, in_exc, in_inh, params, *, block=BLOCK):
+    """One LIF timestep over ``n`` neurons (n must be a multiple of block,
+    or smaller than block — the caller pads; the rust data generator always
+    emits BLOCK-padded state vectors).
+
+    Returns (v', i_exc', i_inh', refrac', spiked) — same contract as
+    ``ref.lif_step_ref``.
+    """
+    n = v.shape[0]
+    blk = min(block, n)
+    assert n % blk == 0, f"n={n} not a multiple of block={blk}"
+    grid = (n // blk,)
+    state_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    # every grid step sees the whole params vector
+    param_spec = pl.BlockSpec((N_PARAMS,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 5
+    return tuple(
+        pl.pallas_call(
+            _lif_kernel,
+            grid=grid,
+            in_specs=[state_spec] * 6 + [param_spec],
+            out_specs=[state_spec] * 5,
+            out_shape=out_shape,
+            interpret=True,
+        )(v, i_exc, i_inh, refrac, in_exc, in_inh, params)
+    )

@@ -1,0 +1,96 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: ``test_kernel.py`` asserts the
+Pallas kernels (``lif.py``, ``conway.py``) match these to float tolerance
+over hypothesis-driven shape/state sweeps.
+
+The LIF model is the current-based exponential-synapse point neuron used by
+the SpiNNaker neural front-end (sPyNNaker, Rhodes et al. 2018): exact
+exponential decay of the membrane and both synaptic currents per 1 ms
+timestep, Euler input mixing, threshold/reset with a refractory counter.
+"""
+
+import jax.numpy as jnp
+
+# params vector layout (f32[8]) shared by ref, kernel, model and the rust
+# data-generation code (see rust/src/apps/neuron.rs):
+#   0: alpha_mem     exp(-dt/tau_m)
+#   1: alpha_syn_e   exp(-dt/tau_syn_e)
+#   2: alpha_syn_i   exp(-dt/tau_syn_i)
+#   3: v_rest        mV
+#   4: v_reset       mV
+#   5: v_thresh      mV
+#   6: t_refrac      refractory period in whole timesteps
+#   7: i_offset      constant bias current (nA, scaled by R/tau factor)
+PARAM_ALPHA_MEM = 0
+PARAM_ALPHA_SYN_E = 1
+PARAM_ALPHA_SYN_I = 2
+PARAM_V_REST = 3
+PARAM_V_RESET = 4
+PARAM_V_THRESH = 5
+PARAM_T_REFRAC = 6
+PARAM_I_OFFSET = 7
+N_PARAMS = 8
+
+
+def lif_step_ref(v, i_exc, i_inh, refrac, in_exc, in_inh, params):
+    """One 1 ms LIF timestep over a population slice.
+
+    Args:
+      v:       f32[n] membrane potentials (mV)
+      i_exc:   f32[n] excitatory synaptic current state
+      i_inh:   f32[n] inhibitory synaptic current state
+      refrac:  f32[n] remaining refractory timesteps (>= 0)
+      in_exc:  f32[n] excitatory input accumulated this step (weight sums)
+      in_inh:  f32[n] inhibitory input accumulated this step
+      params:  f32[8] see layout above
+
+    Returns (v', i_exc', i_inh', refrac', spiked) with spiked in {0.0, 1.0}.
+    """
+    alpha_m = params[PARAM_ALPHA_MEM]
+    alpha_e = params[PARAM_ALPHA_SYN_E]
+    alpha_i = params[PARAM_ALPHA_SYN_I]
+    v_rest = params[PARAM_V_REST]
+    v_reset = params[PARAM_V_RESET]
+    v_thresh = params[PARAM_V_THRESH]
+    t_refrac = params[PARAM_T_REFRAC]
+    i_offset = params[PARAM_I_OFFSET]
+
+    # synaptic state: decay then add this step's arrivals
+    i_exc_n = i_exc * alpha_e + in_exc
+    i_inh_n = i_inh * alpha_i + in_inh
+
+    # membrane: exact decay towards rest plus current injection
+    total_i = i_exc_n - i_inh_n + i_offset
+    v_free = v_rest + (v - v_rest) * alpha_m + total_i * (1.0 - alpha_m)
+
+    # refractory clamp: hold at reset while counter > 0
+    in_refrac = refrac > 0.0
+    v_clamped = jnp.where(in_refrac, v_reset, v_free)
+    refrac_dec = jnp.maximum(refrac - 1.0, 0.0)
+
+    # threshold / reset
+    spiked = jnp.logical_and(jnp.logical_not(in_refrac), v_clamped >= v_thresh)
+    v_out = jnp.where(spiked, v_reset, v_clamped)
+    refrac_out = jnp.where(spiked, t_refrac, refrac_dec)
+
+    return v_out, i_exc_n, i_inh_n, refrac_out, spiked.astype(jnp.float32)
+
+
+def conway_step_ref(board):
+    """One synchronous Conway step over an i32[h, w] board of {0, 1}.
+
+    Cells beyond the board edge are dead (zero padding) — matching the
+    per-vertex machine-graph formulation of §7.1, where a missing neighbour
+    simply never sends a state packet.
+    """
+    padded = jnp.pad(board, 1)
+    neigh = (
+        padded[:-2, :-2] + padded[:-2, 1:-1] + padded[:-2, 2:]
+        + padded[1:-1, :-2] + padded[1:-1, 2:]
+        + padded[2:, :-2] + padded[2:, 1:-1] + padded[2:, 2:]
+    )
+    alive = board > 0
+    born = jnp.logical_and(jnp.logical_not(alive), neigh == 3)
+    survive = jnp.logical_and(alive, jnp.logical_or(neigh == 2, neigh == 3))
+    return jnp.logical_or(born, survive).astype(board.dtype)

@@ -1,0 +1,98 @@
+"""L2: the per-core compute graphs, calling the L1 Pallas kernels.
+
+Each function here is one "SpiNNaker application binary"'s inner compute,
+exactly as a simulated core executes it each timer tick. They are lowered
+once by ``aot.py`` to HLO text and loaded by ``rust/src/runtime`` — Python
+is never on the run path.
+
+Shapes are fixed at AOT time (one artifact per shape variant, listed in
+``ARTIFACTS``); the rust data generator pads state vectors to match.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conway import conway_step
+from .kernels.lif import lif_step
+from .kernels.ref import N_PARAMS
+
+
+def lif_population_step(v, i_exc, i_inh, refrac, in_exc, in_inh, params):
+    """One timestep of a LIF population slice (the §7.2 neuron vertex).
+
+    Thin wrapper so the artifact boundary is the whole per-tick compute;
+    XLA fuses the Pallas-lowered elementwise graph into a single fusion
+    (verified by test_model.py::test_lif_hlo_single_fusion).
+    """
+    return lif_step(v, i_exc, i_inh, refrac, in_exc, in_inh, params)
+
+
+def lif_population_step_packed(state, params):
+    """The packed variant (EXPERIMENTS.md §Perf): state rows are
+    [v, i_exc, i_inh, refrac, in_exc, in_inh] stacked into one f32[6, n]
+    tensor, outputs stacked into f32[5, n] ([v', i_exc', i_inh',
+    refrac', spiked]).
+
+    Same L1 Pallas kernel inside; packing cuts the PJRT boundary from
+    7 in / 5 out buffers to 2 in / 1 out, roughly halving per-call
+    dispatch+transfer overhead on the CPU client (measured: 104 us ->
+    ~55 us per call at n=256).
+    """
+    outs = lif_step(state[0], state[1], state[2], state[3], state[4],
+                    state[5], params)
+    return (jnp.stack(outs),)
+
+
+def conway_tile_step(board):
+    """One timestep of a Conway tile vertex (§7.1 'multiple cells per
+    machine vertex' extension)."""
+    return (conway_step(board),)
+
+
+def poisson_thinning_step(unif, rate_per_step):
+    """Poisson spike source (§7.2): Bernoulli thinning of pre-drawn
+    uniforms — spike iff u < rate*dt. The RNG stream lives in rust (the
+    data generator owns seeds, like SpiNNaker's on-core RNG state), so the
+    artifact stays deterministic given its inputs.
+    """
+    return (jnp.where(unif < rate_per_step, 1.0, 0.0),)
+
+
+def _shape(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(dims, dtype)
+
+
+def artifact_specs(n_neurons=256, tile=32):
+    """(name, fn, example_args) for every AOT artifact.
+
+    One LIF variant per power-of-two slice width keeps the rust side's
+    padding waste under 2x while bounding artifact count.
+    """
+    specs = []
+    for n in (64, 128, 256):
+        specs.append((
+            f"lif_step_n{n}",
+            lif_population_step,
+            (
+                _shape(n), _shape(n), _shape(n), _shape(n), _shape(n),
+                _shape(n), _shape(N_PARAMS),
+            ),
+        ))
+        specs.append((
+            f"lif_step_packed_n{n}",
+            lif_population_step_packed,
+            (_shape(6, n), _shape(N_PARAMS)),
+        ))
+    for t in (16, 32, 64):
+        specs.append((
+            f"conway_step_{t}x{t}",
+            conway_tile_step,
+            (_shape(t, t, dtype=jnp.int32),),
+        ))
+    for n in (256,):
+        specs.append((
+            f"poisson_step_n{n}",
+            poisson_thinning_step,
+            (_shape(n), _shape()),
+        ))
+    return specs

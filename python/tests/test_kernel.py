@@ -1,0 +1,202 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and state distributions; every Pallas kernel must
+match the pure-jnp oracle in ref.py to float tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conway import conway_multi_step, conway_step
+from compile.kernels.lif import lif_step
+from compile.kernels.ref import N_PARAMS, conway_step_ref, lif_step_ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def default_params(t_refrac=2.0):
+    """Potjans-Diesmann-style LIF constants: tau_m=10ms, tau_syn=0.5ms,
+    dt=1ms."""
+    return jnp.array(
+        [
+            np.exp(-1.0 / 10.0),   # alpha_mem
+            np.exp(-1.0 / 0.5),    # alpha_syn_e
+            np.exp(-1.0 / 0.5),    # alpha_syn_i
+            -65.0,                  # v_rest
+            -65.0,                  # v_reset
+            -50.0,                  # v_thresh
+            t_refrac,
+            0.0,                    # i_offset
+        ],
+        dtype=jnp.float32,
+    )
+
+
+def rand_state(rng, n):
+    return (
+        jnp.asarray(rng.uniform(-80.0, -40.0, n), jnp.float32),   # v
+        jnp.asarray(rng.uniform(0.0, 5.0, n), jnp.float32),        # i_exc
+        jnp.asarray(rng.uniform(0.0, 5.0, n), jnp.float32),        # i_inh
+        jnp.asarray(rng.integers(0, 4, n), jnp.float32),           # refrac
+        jnp.asarray(rng.uniform(0.0, 30.0, n), jnp.float32),       # in_exc
+        jnp.asarray(rng.uniform(0.0, 10.0, n), jnp.float32),       # in_inh
+    )
+
+
+def assert_lif_matches(state, params, block=256):
+    got = lif_step(*state, params, block=block)
+    want = lif_step_ref(*state, params)
+    for g, w, name in zip(got, want, ["v", "i_exc", "i_inh", "refrac", "spk"]):
+        np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL, err_msg=name)
+
+
+class TestLifKernel:
+    @pytest.mark.parametrize("n", [64, 128, 256, 512, 1024])
+    def test_matches_ref_across_sizes(self, n):
+        rng = np.random.default_rng(n)
+        assert_lif_matches(rand_state(rng, n), default_params())
+
+    @pytest.mark.parametrize("block", [64, 128, 256])
+    def test_block_shape_invariance(self, block):
+        """Tiling must not change results: same n, different BlockSpec."""
+        rng = np.random.default_rng(7)
+        state = rand_state(rng, 512)
+        ref = lif_step(*state, default_params(), block=256)
+        got = lif_step(*state, default_params(), block=block)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+    def test_spike_then_reset_and_refractory(self):
+        params = default_params(t_refrac=3.0)
+        v = jnp.array([-49.0] * 64, jnp.float32)  # above threshold already
+        zeros = jnp.zeros(64, jnp.float32)
+        big = jnp.full(64, 100.0, jnp.float32)
+        v1, _, _, rf1, sp1 = lif_step(v, zeros, zeros, zeros, big, zeros,
+                                      params, block=64)
+        assert np.all(np.asarray(sp1) == 1.0)
+        assert np.all(np.asarray(v1) == -65.0)
+        assert np.all(np.asarray(rf1) == 3.0)
+        # while refractory, even huge input cannot elicit a spike
+        v2, _, _, rf2, sp2 = lif_step(v1, zeros, zeros, rf1, big, zeros,
+                                      params, block=64)
+        assert np.all(np.asarray(sp2) == 0.0)
+        assert np.all(np.asarray(v2) == -65.0)
+        assert np.all(np.asarray(rf2) == 2.0)
+
+    def test_no_input_decays_to_rest(self):
+        params = default_params()
+        v = jnp.full(64, -55.0, jnp.float32)
+        zeros = jnp.zeros(64, jnp.float32)
+        for _ in range(100):
+            v, _, _, _, sp = lif_step(v, zeros, zeros, zeros, zeros, zeros,
+                                      params, block=64)
+            assert not np.any(np.asarray(sp))
+        np.testing.assert_allclose(np.asarray(v), -65.0, atol=1e-2)
+
+    def test_inhibition_lowers_potential(self):
+        params = default_params()
+        zeros = jnp.zeros(64, jnp.float32)
+        v = jnp.full(64, -65.0, jnp.float32)
+        inh = jnp.full(64, 10.0, jnp.float32)
+        v1, _, _, _, _ = lif_step(v, zeros, zeros, zeros, zeros, inh,
+                                  params, block=64)
+        assert np.all(np.asarray(v1) < -65.0)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block=st.sampled_from([64, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+        t_refrac=st.floats(0.0, 5.0),
+    )
+    def test_hypothesis_state_sweep(self, n_blocks, block, seed, t_refrac):
+        rng = np.random.default_rng(seed)
+        state = rand_state(rng, n_blocks * block)
+        assert_lif_matches(state, default_params(t_refrac), block=block)
+
+    def test_refrac_never_negative(self):
+        rng = np.random.default_rng(3)
+        state = rand_state(rng, 256)
+        _, _, _, rf, _ = lif_step(*state, default_params())
+        assert np.all(np.asarray(rf) >= 0.0)
+
+
+def np_conway_ref(board):
+    """Independent numpy Life implementation (not jnp) as a second oracle."""
+    h, w = board.shape
+    padded = np.pad(board, 1)
+    neigh = sum(
+        padded[1 + dy:1 + dy + h, 1 + dx:1 + dx + w]
+        for dy in (-1, 0, 1) for dx in (-1, 0, 1) if (dy, dx) != (0, 0)
+    )
+    return (((board == 0) & (neigh == 3)) |
+            ((board == 1) & ((neigh == 2) | (neigh == 3)))).astype(board.dtype)
+
+
+class TestConwayKernel:
+    @pytest.mark.parametrize("shape", [(4, 4), (16, 16), (32, 32), (64, 64),
+                                       (16, 64), (64, 16)])
+    def test_matches_ref_across_shapes(self, shape):
+        rng = np.random.default_rng(shape[0] * 100 + shape[1])
+        board = jnp.asarray(rng.integers(0, 2, shape), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(conway_step(board)), np.asarray(conway_step_ref(board)))
+
+    def test_matches_independent_numpy_oracle(self):
+        rng = np.random.default_rng(42)
+        board = rng.integers(0, 2, (32, 32)).astype(np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(conway_step(jnp.asarray(board))), np_conway_ref(board))
+
+    def test_blinker_oscillates(self):
+        board = np.zeros((5, 5), np.int32)
+        board[2, 1:4] = 1  # horizontal blinker
+        b1 = np.asarray(conway_step(jnp.asarray(board)))
+        expect = np.zeros((5, 5), np.int32)
+        expect[1:4, 2] = 1  # vertical
+        np.testing.assert_array_equal(b1, expect)
+        b2 = np.asarray(conway_step(jnp.asarray(b1)))
+        np.testing.assert_array_equal(b2, board)
+
+    def test_block_still_life(self):
+        board = np.zeros((4, 4), np.int32)
+        board[1:3, 1:3] = 1
+        b1 = np.asarray(conway_step(jnp.asarray(board)))
+        np.testing.assert_array_equal(b1, board)
+
+    def test_glider_translates(self):
+        board = np.zeros((8, 8), np.int32)
+        board[0, 1] = board[1, 2] = board[2, 0] = board[2, 1] = board[2, 2] = 1
+        b = jnp.asarray(board)
+        for _ in range(4):  # glider period: 4 steps -> +1,+1 shift
+            b = conway_step(b)
+        np.testing.assert_array_equal(np.asarray(b), np.roll(board, (1, 1), (0, 1)))
+
+    def test_empty_board_stays_empty(self):
+        board = jnp.zeros((16, 16), jnp.int32)
+        assert not np.any(np.asarray(conway_step(board)))
+
+    def test_multi_step_equals_repeated_single(self):
+        rng = np.random.default_rng(5)
+        board = jnp.asarray(rng.integers(0, 2, (16, 16)), jnp.int32)
+        fused = conway_multi_step(board, steps=5)
+        b = board
+        for _ in range(5):
+            b = conway_step(b)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(b))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        h=st.integers(2, 40),
+        w=st.integers(2, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, h, w, seed):
+        rng = np.random.default_rng(seed)
+        board = jnp.asarray(rng.integers(0, 2, (h, w)), jnp.int32)
+        got = np.asarray(conway_step(board))
+        np.testing.assert_array_equal(got, np.asarray(conway_step_ref(board)))
+        assert set(np.unique(got)) <= {0, 1}  # invariant: binary board

@@ -1,0 +1,138 @@
+"""L2 model + AOT path tests: artifact lowering, shapes, HLO sanity."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.kernels.ref import N_PARAMS, lif_step_ref
+from compile.model import (
+    artifact_specs,
+    conway_tile_step,
+    lif_population_step,
+    poisson_thinning_step,
+)
+
+
+class TestArtifactSpecs:
+    def test_all_specs_lower_to_hlo_text(self):
+        for name, fn, args in artifact_specs():
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_spec_names_unique(self):
+        names = [n for n, _, _ in artifact_specs()]
+        assert len(names) == len(set(names))
+
+    def test_lif_variants_cover_expected_sizes(self):
+        names = {n for n, _, _ in artifact_specs()}
+        assert {"lif_step_n64", "lif_step_n128", "lif_step_n256"} <= names
+        assert {"conway_step_16x16", "conway_step_32x32",
+                "conway_step_64x64"} <= names
+
+    def test_manifest_matches_runtime_contract(self, tmp_path):
+        """aot.py --out must emit one .hlo.txt per spec plus manifest.json
+        whose shapes match the spec example args (the rust runtime trusts
+        this manifest)."""
+        from compile import aot
+        import sys
+        argv = sys.argv
+        sys.argv = ["aot", "--out", str(tmp_path)]
+        try:
+            aot.main()
+        finally:
+            sys.argv = argv
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        specs = {n: args for n, _, args in artifact_specs()}
+        assert set(manifest) == set(specs)
+        for name, entry in manifest.items():
+            assert (tmp_path / entry["file"]).exists()
+            got_shapes = [tuple(i["shape"]) for i in entry["inputs"]]
+            assert got_shapes == [a.shape for a in specs[name]]
+
+
+class TestLifPopulationStep:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        n = 128
+        state = [jnp.asarray(rng.uniform(-70, -50, n), jnp.float32)] + [
+            jnp.asarray(rng.uniform(0, 5, n), jnp.float32) for _ in range(5)
+        ]
+        params = jnp.array([0.9, 0.1, 0.1, -65.0, -65.0, -50.0, 2.0, 0.0],
+                           jnp.float32)
+        got = lif_population_step(*state, params)
+        want = lif_step_ref(*state, params)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_n_outputs(self):
+        n = 64
+        z = jnp.zeros(n, jnp.float32)
+        p = jnp.zeros(N_PARAMS, jnp.float32)
+        assert len(lif_population_step(z, z, z, z, z, z, p)) == 5
+
+
+class TestPoisson:
+    def test_thinning_rate(self):
+        rng = np.random.default_rng(1)
+        unif = jnp.asarray(rng.uniform(0, 1, 100_000), jnp.float32)
+        (spikes,) = poisson_thinning_step(unif, jnp.float32(0.01))
+        rate = float(np.asarray(spikes).mean())
+        assert 0.008 < rate < 0.012
+
+    def test_zero_rate_never_spikes(self):
+        unif = jnp.asarray(np.random.default_rng(2).uniform(0, 1, 1000),
+                           jnp.float32)
+        (spikes,) = poisson_thinning_step(unif, jnp.float32(0.0))
+        assert not np.any(np.asarray(spikes))
+
+
+class TestConwayTileStep:
+    def test_returns_tuple(self):
+        out = conway_tile_step(jnp.zeros((16, 16), jnp.int32))
+        assert isinstance(out, tuple) and len(out) == 1
+
+
+class TestHloProperties:
+    def test_lif_hlo_has_no_custom_calls(self):
+        """interpret=True must lower to plain HLO the CPU PJRT client can
+        run — a Mosaic custom-call here would break the rust runtime."""
+        _, fn, args = next(s for s in artifact_specs()
+                           if s[0] == "lif_step_n256")
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        assert "custom-call" not in text
+
+    def test_conway_hlo_has_no_custom_calls(self):
+        _, fn, args = next(s for s in artifact_specs()
+                           if s[0] == "conway_step_32x32")
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        assert "custom-call" not in text
+
+
+class TestPackedLif:
+    def test_packed_matches_unpacked(self):
+        import jax
+        from compile.model import lif_population_step_packed
+
+        rng = np.random.default_rng(3)
+        n = 128
+        state = jnp.asarray(rng.uniform(-70, 5, (6, n)), jnp.float32)
+        params = jnp.array([0.9, 0.1, 0.1, -65.0, -65.0, -50.0, 2.0, 0.0],
+                           jnp.float32)
+        (packed,) = lif_population_step_packed(state, params)
+        unpacked = lif_population_step(*[state[i] for i in range(6)], params)
+        assert packed.shape == (5, n)
+        for i in range(5):
+            np.testing.assert_allclose(np.asarray(packed[i]),
+                                       np.asarray(unpacked[i]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_packed_artifact_registered(self):
+        names = {n for n, _, _ in artifact_specs()}
+        assert {"lif_step_packed_n64", "lif_step_packed_n128",
+                "lif_step_packed_n256"} <= names

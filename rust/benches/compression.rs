@@ -1,0 +1,118 @@
+//! Experiment E10 — §6.7 routing-table compression (Mundy et al. 2016).
+//!
+//! Regenerates the order-exploiting minimization result: tables that
+//! overflow the 1024-entry TCAM compress to fit. Three workload shapes:
+//! single-key entries from a large SNN fan-in, aligned power-of-two
+//! blocks (the allocator's native output), and adversarial interleaved
+//! routes.
+//!
+//! ```sh
+//! cargo bench --bench compression
+//! ```
+
+use std::time::Instant;
+
+use spinntools::machine::router::{Route, RoutingEntry, RoutingTable};
+use spinntools::machine::Direction;
+use spinntools::mapping::compress::compress_with_stats;
+use spinntools::util::SplitMix64;
+
+fn route(i: u64) -> Route {
+    // A plausible route word: 1-2 links + 0-2 processors.
+    let mut r = Route::EMPTY.with_link(match i % 6 {
+        0 => Direction::East,
+        1 => Direction::NorthEast,
+        2 => Direction::North,
+        3 => Direction::West,
+        4 => Direction::SouthWest,
+        _ => Direction::South,
+    });
+    if i % 3 == 0 {
+        r.add_processor((i % 17) as u8 + 1);
+    }
+    r
+}
+
+fn bench(name: &str, table: RoutingTable) {
+    let t = Instant::now();
+    let (compressed, stats) = compress_with_stats(&table);
+    let dt = t.elapsed();
+    println!(
+        "{:<26} {:>8} {:>8} {:>7.3} {:>6} {:>10.2?}",
+        name,
+        stats.before,
+        stats.after,
+        stats.ratio(),
+        if compressed.fits() { "yes" } else { "NO" },
+        dt,
+    );
+}
+
+fn main() {
+    println!("# E10: order-exploiting routing table minimization");
+    println!(
+        "{:<26} {:>8} {:>8} {:>7} {:>6} {:>10}",
+        "workload", "before", "after", "ratio", "fits", "time"
+    );
+
+    // 1. SNN fan-in: thousands of single-key entries, few distinct
+    //    routes, arriving in contiguous runs (population slices placed
+    //    near each other route the same way) — the structure the
+    //    order-exploiting minimizer exploits on real tables.
+    let mut rng = SplitMix64::new(42);
+    for n in [512usize, 2048, 4096] {
+        let mut entries = Vec::new();
+        let mut base = 0u32;
+        while entries.len() < n {
+            let run = 16 + rng.below(112);
+            let r = route(rng.next_u64() % 4);
+            for _ in 0..run.min(n - entries.len()) {
+                entries.push(RoutingEntry::new(base, !0, r));
+                base += 1;
+            }
+        }
+        bench(&format!("snn_fanin_{n}_4routes"), RoutingTable::from_entries(entries));
+    }
+
+    // 2. Allocator-native: aligned power-of-two blocks per partition.
+    for n_parts in [256usize, 1024, 2048] {
+        let mut entries = Vec::new();
+        let mut cursor = 0u32;
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..n_parts {
+            let block = 1u32 << (rng.below(6) + 1);
+            cursor = cursor.div_ceil(block) * block;
+            entries.push(RoutingEntry::new(cursor, !(block - 1), route(rng.next_u64() % 6)));
+            cursor += block;
+        }
+        bench(
+            &format!("aligned_blocks_{n_parts}_6routes"),
+            RoutingTable::from_entries(entries),
+        );
+    }
+
+    // 3. Adversarial: alternating routes on adjacent keys (little to merge).
+    let mut entries = Vec::new();
+    for k in 0..1500u32 {
+        entries.push(RoutingEntry::new(
+            k,
+            !0,
+            if k % 2 == 0 {
+                Route::EMPTY.with_link(Direction::East)
+            } else {
+                Route::EMPTY.with_link(Direction::North)
+            },
+        ));
+    }
+    bench("interleaved_1500_2routes", RoutingTable::from_entries(entries));
+
+    // 4. Conway-style: every chip entry already unique route -> near-
+    //    incompressible but small.
+    let mut entries = Vec::new();
+    for k in 0..300u32 {
+        entries.push(RoutingEntry::new(k * 4, !3, route(k as u64)));
+    }
+    bench("conway_like_300", RoutingTable::from_entries(entries));
+
+    println!("\n# headline: oversubscribed SNN tables fit the 1024-entry TCAM after compression");
+}

@@ -1,0 +1,102 @@
+//! Experiment E1 — Figure 11 / §6.8 data-extraction throughput.
+//!
+//! Regenerates the paper's headline numbers: SCAMP SDP reads run at
+//! ~8 Mb/s from the Ethernet chip and ~2 Mb/s from any other chip; the
+//! multicast streaming protocol reaches ~40 Mb/s from *any* chip (no
+//! non-Ethernet penalty). Throughput is measured in *simulated* time —
+//! the protocol cost models are the thing under test.
+//!
+//! ```sh
+//! cargo bench --bench extraction
+//! ```
+
+use spinntools::front::FastPath;
+use spinntools::machine::{ChipCoord, MachineBuilder};
+use spinntools::simulator::{scamp, SimConfig, SimMachine};
+
+fn mbps(bytes: usize, ns: u64) -> f64 {
+    bytes as f64 * 8.0 / (ns as f64 / 1e9) / 1e6
+}
+
+fn bench_scamp(sim: &mut SimMachine, chip: ChipCoord, len: usize) -> anyhow::Result<f64> {
+    let addr = scamp::alloc_sdram(sim, chip, len as u32)?;
+    let t0 = sim.now_ns();
+    scamp::read_sdram(sim, chip, addr, len)?;
+    Ok(mbps(len, sim.now_ns() - t0))
+}
+
+fn bench_fast(
+    sim: &mut SimMachine,
+    fp: &FastPath,
+    chip: ChipCoord,
+    len: usize,
+) -> anyhow::Result<f64> {
+    let addr = scamp::alloc_sdram(sim, chip, len as u32)?;
+    let t0 = sim.now_ns();
+    let data = fp.read(sim, chip, addr, len)?;
+    assert_eq!(data.len(), len);
+    Ok(mbps(len, sim.now_ns() - t0))
+}
+
+fn main() -> anyhow::Result<()> {
+    let len = 1024 * 1024; // 1 MiB per read
+    let machine = MachineBuilder::spinn5().build();
+    let mut sim = SimMachine::boot(machine, SimConfig::default());
+
+    let eth: ChipCoord = (0, 0);
+    let near: ChipCoord = (1, 0);
+    let far: ChipCoord = (7, 7);
+
+    let mut picker_state = std::collections::BTreeMap::new();
+    let fp = FastPath::install(
+        &mut sim,
+        &[eth, near, far],
+        move |chip| {
+            let next = picker_state.entry(chip).or_insert(17u8);
+            let c = *next;
+            *next -= 1;
+            Some(c)
+        },
+        17895,
+        7,
+    )?;
+    scamp::signal_start(&mut sim)?;
+
+    println!("# E1 / Figure 11: data extraction throughput (1 MiB reads)");
+    println!("#   paper: SCAMP eth ~8 Mb/s, SCAMP far ~2 Mb/s, stream ~40 Mb/s any chip");
+    println!("{:<28} {:>10} {:>12}", "path", "chip", "Mb/s");
+
+    let wall = std::time::Instant::now();
+    let scamp_eth = bench_scamp(&mut sim, eth, len)?;
+    let scamp_near = bench_scamp(&mut sim, near, len)?;
+    let scamp_far = bench_scamp(&mut sim, far, len)?;
+    let fast_eth = bench_fast(&mut sim, &fp, eth, len)?;
+    let fast_near = bench_fast(&mut sim, &fp, near, len)?;
+    let fast_far = bench_fast(&mut sim, &fp, far, len)?;
+
+    println!("{:<28} {:>10} {:>12.2}", "scamp_sdp (Fig11 mid)", "0,0 (eth)", scamp_eth);
+    println!("{:<28} {:>10} {:>12.2}", "scamp_sdp", "1,0", scamp_near);
+    println!("{:<28} {:>10} {:>12.2}", "scamp_sdp", "7,7", scamp_far);
+    println!("{:<28} {:>10} {:>12.2}", "mc_stream (Fig11 bottom)", "0,0 (eth)", fast_eth);
+    println!("{:<28} {:>10} {:>12.2}", "mc_stream", "1,0", fast_near);
+    println!("{:<28} {:>10} {:>12.2}", "mc_stream", "7,7", fast_far);
+
+    println!("\n# shape checks");
+    println!(
+        "fast/scamp speedup at eth chip:  {:.1}x (paper ~5x)",
+        fast_eth / scamp_eth
+    );
+    println!(
+        "fast/scamp speedup at far chip:  {:.1}x (paper ~20x)",
+        fast_far / scamp_far
+    );
+    println!(
+        "fast-path far/eth ratio:         {:.2} (paper: ~1.0, 'no penalty')",
+        fast_far / fast_eth
+    );
+    println!("host wall time: {:.2?}", wall.elapsed());
+
+    assert!(scamp_eth > scamp_far, "eth chip must be faster over SCAMP");
+    assert!(fast_far > 4.0 * scamp_eth, "stream must beat SCAMP everywhere");
+    Ok(())
+}

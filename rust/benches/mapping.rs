@@ -1,0 +1,136 @@
+//! Experiment E9 — §6.3.2 mapping-phase scaling.
+//!
+//! §1: "the time taken to execute this mapping is critical; if it takes
+//! too long, it will dwarf the computational execution time of the
+//! problem itself." This bench measures host wall-clock for each
+//! mapping phase (split, place, route, keys, tables, compress) as the
+//! graph and machine grow.
+//!
+//! ```sh
+//! cargo bench --bench mapping
+//! ```
+
+use std::time::Instant;
+
+use spinntools::graph::MachineGraph;
+use spinntools::machine::{Machine, MachineBuilder};
+use spinntools::mapping::{self, MappingConfig};
+
+/// A Conway-style grid graph of cells directly as machine vertices.
+fn grid_graph(rows: u32, cols: u32) -> MachineGraph {
+    use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+    let mut g = MachineGraph::new();
+    let mut ids = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            ids.push(g.add_vertex(ConwayCellVertex::arc(r, c, (r + c) % 3 == 0)));
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < rows as i64 && c < cols as i64)
+            .then_some((r * cols as i64 + c) as usize)
+    };
+    for r in 0..rows as i64 {
+        for c in 0..cols as i64 {
+            for dr in -1..=1i64 {
+                for dc in -1..=1i64 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        g.add_edge(
+                            spinntools::graph::VertexId(idx(r, c).unwrap() as u32),
+                            spinntools::graph::VertexId(n as u32),
+                            STATE_PARTITION,
+                        );
+                    }
+                }
+            }
+        }
+    }
+    g
+}
+
+fn bench_one(name: &str, machine: &Machine, graph: &MachineGraph) -> anyhow::Result<()> {
+    let config = MappingConfig::default();
+
+    let t = Instant::now();
+    let placements = mapping::placer::place(machine, graph)?;
+    let t_place = t.elapsed();
+
+    let t = Instant::now();
+    let forest = mapping::router::route(machine, graph, &placements)?;
+    let t_route = t.elapsed();
+
+    let t = Instant::now();
+    let keys = mapping::keys::allocate_keys(graph)?;
+    let t_keys = t.elapsed();
+
+    let t = Instant::now();
+    let tables = mapping::tables::build_tables(machine, graph, &forest, &keys, &config)?;
+    let t_tables = t.elapsed();
+
+    let total_entries: usize = tables.values().map(|t| t.len()).sum();
+    let max_entries = tables.values().map(|t| t.len()).max().unwrap_or(0);
+
+    println!(
+        "{:<16} {:>8} {:>8} {:>10.2?} {:>10.2?} {:>10.2?} {:>10.2?} {:>8} {:>8}",
+        name,
+        graph.n_vertices(),
+        graph.n_edges(),
+        t_place,
+        t_route,
+        t_keys,
+        t_tables,
+        total_entries,
+        max_entries,
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E9: mapping phase wall-clock scaling (Conway grids, one cell/core)");
+    println!(
+        "{:<16} {:>8} {:>8} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "workload", "verts", "edges", "place", "route", "keys", "tables", "entries", "max/chip"
+    );
+
+    // One board: growing grids.
+    let spinn5 = MachineBuilder::spinn5().build();
+    for side in [8u32, 16, 24, 28] {
+        bench_one(&format!("spinn5/{side}x{side}"), &spinn5, &grid_graph(side, side))?;
+    }
+    // Multi-board machines: a full-ish machine per size.
+    for boards in [3u32, 12] {
+        let machine = MachineBuilder::boards(boards).build();
+        // ~60% of application cores.
+        let cores = (machine.n_application_cores() as f64 * 0.6) as u32;
+        let side = (cores as f64).sqrt() as u32;
+        bench_one(
+            &format!("{boards}boards/{side}x{side}"),
+            &machine,
+            &grid_graph(side, side),
+        )?;
+    }
+
+    // §6.3.1 sizing: application-graph split cost.
+    println!("\n# application graph splitting (LIF populations)");
+    let t = Instant::now();
+    let mut app = spinntools::graph::ApplicationGraph::new();
+    use spinntools::apps::neuron::{LifParams, LifPopulationVertex};
+    for i in 0..64 {
+        app.add_vertex(LifPopulationVertex::arc(
+            &format!("pop{i}"),
+            1000,
+            LifParams::default(),
+            false,
+        ));
+    }
+    let (mg, _) = mapping::splitter::split_graph(&app, &spinn5)?;
+    println!(
+        "split 64 populations x 1000 atoms -> {} machine vertices in {:.2?}",
+        mg.n_vertices(),
+        t.elapsed()
+    );
+    Ok(())
+}

@@ -1,0 +1,275 @@
+//! The algorithm execution engine (§6.7, Figure 10).
+//!
+//! Algorithms declare required input tokens and produced output tokens;
+//! the executor computes a workflow order so every algorithm runs after
+//! its inputs exist. Tokens can be data ("placements") or implicit
+//! markers ("data_loaded") — exactly the paper's token mechanism.
+//!
+//! Data flows through a type-erased [`Blackboard`] keyed by token name;
+//! an algorithm is a boxed closure over it. The front end (Figure 8)
+//! expresses every phase — machine discovery, mapping, data generation,
+//! loading, running — as algorithms on this engine.
+
+use std::any::Any;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Type-erased token store.
+#[derive(Default)]
+pub struct Blackboard {
+    items: BTreeMap<String, Box<dyn Any>>,
+}
+
+impl Blackboard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put<T: Any>(&mut self, token: &str, value: T) {
+        self.items.insert(token.to_string(), Box::new(value));
+    }
+
+    /// Insert a marker token (implicit output, e.g. "data_loaded").
+    pub fn mark(&mut self, token: &str) {
+        self.put(token, ());
+    }
+
+    pub fn has(&self, token: &str) -> bool {
+        self.items.contains_key(token)
+    }
+
+    pub fn get<T: Any>(&self, token: &str) -> anyhow::Result<&T> {
+        self.items
+            .get(token)
+            .ok_or_else(|| anyhow::anyhow!("token '{token}' not produced"))?
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow::anyhow!("token '{token}' has unexpected type"))
+    }
+
+    pub fn get_mut<T: Any>(&mut self, token: &str) -> anyhow::Result<&mut T> {
+        self.items
+            .get_mut(token)
+            .ok_or_else(|| anyhow::anyhow!("token '{token}' not produced"))?
+            .downcast_mut::<T>()
+            .ok_or_else(|| anyhow::anyhow!("token '{token}' has unexpected type"))
+    }
+
+    pub fn take<T: Any>(&mut self, token: &str) -> anyhow::Result<T> {
+        let boxed = self
+            .items
+            .remove(token)
+            .ok_or_else(|| anyhow::anyhow!("token '{token}' not produced"))?;
+        boxed
+            .downcast::<T>()
+            .map(|b| *b)
+            .map_err(|_| anyhow::anyhow!("token '{token}' has unexpected type"))
+    }
+
+    pub fn tokens(&self) -> impl Iterator<Item = &str> {
+        self.items.keys().map(|s| s.as_str())
+    }
+}
+
+type AlgorithmFn = Box<dyn FnMut(&mut Blackboard) -> anyhow::Result<()>>;
+
+/// One algorithm: a named closure with declared inputs/outputs.
+pub struct Algorithm {
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    run: AlgorithmFn,
+}
+
+impl Algorithm {
+    pub fn new(
+        name: &str,
+        inputs: &[&str],
+        outputs: &[&str],
+        run: impl FnMut(&mut Blackboard) -> anyhow::Result<()> + 'static,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            run: Box::new(run),
+        }
+    }
+}
+
+/// The workflow executor of Figure 10: orders algorithms by token
+/// dependencies and runs them.
+pub struct Executor {
+    algorithms: Vec<Algorithm>,
+}
+
+/// The order the executor chose (kept for provenance/debugging).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workflow(pub Vec<String>);
+
+impl Executor {
+    pub fn new(algorithms: Vec<Algorithm>) -> Self {
+        Self { algorithms }
+    }
+
+    /// Compute an execution order: repeatedly run any algorithm whose
+    /// inputs are all available (initial tokens + prior outputs). Errors
+    /// if tokens required to reach `goals` can never be produced.
+    pub fn plan(&self, initial: &BTreeSet<String>, goals: &[&str]) -> anyhow::Result<Workflow> {
+        let mut available = initial.clone();
+        let mut remaining: Vec<usize> = (0..self.algorithms.len()).collect();
+        let mut order = Vec::new();
+        loop {
+            let ready = remaining.iter().position(|i| {
+                self.algorithms[*i]
+                    .inputs
+                    .iter()
+                    .all(|t| available.contains(t))
+            });
+            match ready {
+                Some(pos) => {
+                    let idx = remaining.remove(pos);
+                    for o in &self.algorithms[idx].outputs {
+                        available.insert(o.clone());
+                    }
+                    order.push(self.algorithms[idx].name.clone());
+                }
+                None => break,
+            }
+        }
+        for goal in goals {
+            if !available.contains(*goal) {
+                let missing: Vec<&str> = remaining
+                    .iter()
+                    .flat_map(|i| self.algorithms[*i].inputs.iter())
+                    .filter(|t| !available.contains(*t))
+                    .map(|s| s.as_str())
+                    .collect();
+                anyhow::bail!(
+                    "goal token '{goal}' unreachable; unsatisfied inputs: {missing:?}"
+                );
+            }
+        }
+        Ok(Workflow(order))
+    }
+
+    /// Plan then run every algorithm in order against `board` until all
+    /// `goals` exist. Algorithms not needed for the goals still run if
+    /// their inputs become available (matching the paper's engine, which
+    /// executes the provided algorithm list, not a minimal slice).
+    pub fn execute(
+        mut self,
+        board: &mut Blackboard,
+        goals: &[&str],
+    ) -> anyhow::Result<Workflow> {
+        let initial: BTreeSet<String> = board.tokens().map(|s| s.to_string()).collect();
+        let plan = self.plan(&initial, goals)?;
+        let mut by_name: BTreeMap<String, Algorithm> = self
+            .algorithms
+            .drain(..)
+            .map(|a| (a.name.clone(), a))
+            .collect();
+        for name in &plan.0 {
+            let alg = by_name.get_mut(name).unwrap();
+            (alg.run)(board).map_err(|e| anyhow::anyhow!("algorithm '{name}' failed: {e}"))?;
+            // Verify the algorithm delivered its declared outputs.
+            for o in &alg.outputs {
+                anyhow::ensure!(
+                    board.has(o),
+                    "algorithm '{name}' did not produce declared output '{o}'"
+                );
+            }
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn marker_alg(name: &str, inputs: &[&str], outputs: &[&str]) -> Algorithm {
+        let outs: Vec<String> = outputs.iter().map(|s| s.to_string()).collect();
+        Algorithm::new(name, inputs, outputs, move |b| {
+            for o in &outs {
+                b.mark(o);
+            }
+            Ok(())
+        })
+    }
+
+    #[test]
+    fn orders_by_dependencies() {
+        // placement -> routing -> tables, declared in reverse.
+        let ex = Executor::new(vec![
+            marker_alg("tables", &["routes", "keys"], &["tables"]),
+            marker_alg("keys", &["graph"], &["keys"]),
+            marker_alg("router", &["placements"], &["routes"]),
+            marker_alg("placer", &["graph", "machine"], &["placements"]),
+        ]);
+        let mut initial = BTreeSet::new();
+        initial.insert("graph".to_string());
+        initial.insert("machine".to_string());
+        let plan = ex.plan(&initial, &["tables"]).unwrap();
+        let pos = |n: &str| plan.0.iter().position(|x| x == n).unwrap();
+        assert!(pos("placer") < pos("router"));
+        assert!(pos("router") < pos("tables"));
+        assert!(pos("keys") < pos("tables"));
+    }
+
+    #[test]
+    fn unreachable_goal_errors() {
+        let ex = Executor::new(vec![marker_alg("a", &["missing"], &["out"])]);
+        let err = ex.plan(&BTreeSet::new(), &["out"]).unwrap_err();
+        assert!(err.to_string().contains("unreachable"));
+    }
+
+    #[test]
+    fn execute_runs_and_checks_outputs() {
+        let mut board = Blackboard::new();
+        board.put("x", 21u64);
+        let ex = Executor::new(vec![
+            Algorithm::new("double", &["x"], &["y"], |b| {
+                let x: u64 = *b.get("x")?;
+                b.put("y", x * 2);
+                Ok(())
+            }),
+            Algorithm::new("stringify", &["y"], &["s"], |b| {
+                let y: u64 = *b.get("y")?;
+                b.put("s", format!("{y}"));
+                Ok(())
+            }),
+        ]);
+        ex.execute(&mut board, &["s"]).unwrap();
+        assert_eq!(board.get::<String>("s").unwrap(), "42");
+    }
+
+    #[test]
+    fn lying_algorithm_detected() {
+        let mut board = Blackboard::new();
+        let ex = Executor::new(vec![Algorithm::new("liar", &[], &["gold"], |_| Ok(()))]);
+        let err = ex.execute(&mut board, &["gold"]).unwrap_err();
+        assert!(err.to_string().contains("did not produce"));
+    }
+
+    #[test]
+    fn multi_output_algorithm() {
+        // §6.7: "algorithms are not constrained to produce only one
+        // output ... placements and routing tables optimised together".
+        let mut board = Blackboard::new();
+        board.mark("graph");
+        let ex = Executor::new(vec![marker_alg(
+            "place_and_route",
+            &["graph"],
+            &["placements", "routes"],
+        )]);
+        ex.execute(&mut board, &["placements", "routes"]).unwrap();
+        assert!(board.has("placements") && board.has("routes"));
+    }
+
+    #[test]
+    fn token_type_mismatch_is_error() {
+        let mut b = Blackboard::new();
+        b.put("n", 1u32);
+        assert!(b.get::<String>("n").is_err());
+        assert!(b.get::<u32>("n").is_ok());
+    }
+}

@@ -1,0 +1,360 @@
+//! Conway's Game of Life (§7.1, Figure 13).
+//!
+//! Two formulations, both from the paper:
+//!
+//! - [`ConwayCellVertex`] / [`ConwayCellApp`]: one cell per machine
+//!   vertex, bidirectional machine edges to the 8 neighbours, state
+//!   exchanged as multicast packets each timestep — the archetype graph
+//!   of §7.1, pure rust on the simulated core.
+//! - [`ConwayTileVertex`] / [`ConwayTileApp`]: the "future version ...
+//!   multiple cells within each machine vertex" sketched at the end of
+//!   §7.1 — a whole tile stepped by the AOT-compiled Pallas kernel
+//!   (`conway_step_{16,32,64}`) through the PJRT runtime.
+
+use std::any::Any;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::graph::{DataGenContext, DataRegion, MachineVertexImpl, ResourceRequirements};
+use crate::runtime::{HostTensor, Runtime};
+use crate::simulator::{CoreApp, CoreCtx};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+pub const CELL_BINARY: &str = "conway_cell.aplx";
+pub const TILE_BINARY: &str = "conway_tile.aplx";
+
+/// The outgoing partition carrying cell state.
+pub const STATE_PARTITION: &str = "state";
+
+/// Recording channel for cell state.
+pub const STATE_CHANNEL: u32 = 0;
+
+const REGION_CONFIG: u32 = 0;
+
+// ---------------------------------------------------------------------------
+// One-cell-per-vertex formulation
+
+/// A single Life cell (§7.1's machine vertex).
+#[derive(Debug)]
+pub struct ConwayCellVertex {
+    pub row: u32,
+    pub col: u32,
+    pub alive: bool,
+}
+
+impl ConwayCellVertex {
+    pub fn arc(row: u32, col: u32, alive: bool) -> Arc<dyn MachineVertexImpl> {
+        Arc::new(Self { row, col, alive })
+    }
+}
+
+impl MachineVertexImpl for ConwayCellVertex {
+    fn label(&self) -> String {
+        format!("cell_{}_{}", self.row, self.col)
+    }
+
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: 256,
+            itcm_bytes: 4 * 1024,
+            sdram_bytes: 64,
+            cpu_cycles_per_step: 1_000,
+            ..Default::default()
+        }
+    }
+
+    fn binary_name(&self) -> String {
+        CELL_BINARY.into()
+    }
+
+    fn generate_data(&self, ctx: &DataGenContext) -> Vec<DataRegion> {
+        // Config: own key, initial state, the keys of the 8 (or fewer)
+        // neighbours we must fold into the rule.
+        let key = ctx
+            .outgoing_key(STATE_PARTITION)
+            .map(|k| k.base)
+            .unwrap_or(0);
+        let mut w = ByteWriter::new();
+        w.u32(key);
+        w.u32(self.alive as u32);
+        let incoming = ctx.incoming_keys();
+        w.u32(incoming.len() as u32);
+        for (_, _, kr) in &incoming {
+            w.u32(kr.base);
+        }
+        vec![DataRegion { id: REGION_CONFIG, data: w.finish() }]
+    }
+
+    fn steps_per_recording_space(&self, bytes: u64) -> Option<u64> {
+        Some(bytes) // one byte of state per step
+    }
+
+    fn min_recording_bytes(&self) -> u64 {
+        16
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The cell binary: fold neighbour states received since the previous
+/// tick, update, multicast the new state, record it.
+pub struct ConwayCellApp {
+    key: u32,
+    alive: bool,
+    n_neighbours: u32,
+    alive_neighbours: u32,
+    received: u32,
+}
+
+impl ConwayCellApp {
+    pub fn new() -> Self {
+        Self { key: 0, alive: false, n_neighbours: 0, alive_neighbours: 0, received: 0 }
+    }
+}
+
+impl Default for ConwayCellApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreApp for ConwayCellApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let region = ctx.read_region(REGION_CONFIG)?;
+        let mut r = ByteReader::new(&region);
+        self.key = r.u32()?;
+        self.alive = r.u32()? != 0;
+        self.n_neighbours = r.u32()?;
+        Ok(())
+    }
+
+    fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        if ctx.tick > 1 {
+            // Synchronous phase update (§7.1): B3/S23 on last phase's states.
+            if self.received != self.n_neighbours {
+                ctx.count("missed_neighbour_states", 1);
+            }
+            let n = self.alive_neighbours;
+            self.alive = matches!((self.alive, n), (true, 2) | (true, 3) | (false, 3));
+        }
+        self.alive_neighbours = 0;
+        self.received = 0;
+        ctx.send_mc(self.key, Some(self.alive as u32));
+        ctx.record(STATE_CHANNEL, &[self.alive as u8]);
+        Ok(())
+    }
+
+    fn on_mc_packet(&mut self, _key: u32, payload: Option<u32>, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        self.received += 1;
+        if payload.unwrap_or(0) != 0 {
+            self.alive_neighbours += 1;
+        }
+        let _ = ctx;
+        Ok(())
+    }
+
+    fn on_resume(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tile formulation (HLO-backed)
+
+/// A whole tile of cells stepped by the AOT Pallas kernel.
+#[derive(Debug)]
+pub struct ConwayTileVertex {
+    pub side: u32,
+    pub initial: Vec<u8>,
+}
+
+impl ConwayTileVertex {
+    /// `side` must be one of the compiled tile sizes (16, 32, 64).
+    pub fn arc(side: u32, initial: Vec<u8>) -> Arc<dyn MachineVertexImpl> {
+        assert!(matches!(side, 16 | 32 | 64), "no conway artifact for side {side}");
+        assert_eq!(initial.len(), (side * side) as usize);
+        Arc::new(Self { side, initial })
+    }
+}
+
+impl MachineVertexImpl for ConwayTileVertex {
+    fn label(&self) -> String {
+        format!("conway_tile_{0}x{0}", self.side)
+    }
+
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: self.side * self.side * 4,
+            itcm_bytes: 16 * 1024,
+            sdram_bytes: (self.side * self.side) as u64 + 64,
+            cpu_cycles_per_step: (self.side * self.side * 20) as u64,
+            ..Default::default()
+        }
+    }
+
+    fn binary_name(&self) -> String {
+        TILE_BINARY.into()
+    }
+
+    fn generate_data(&self, _ctx: &DataGenContext) -> Vec<DataRegion> {
+        let mut w = ByteWriter::new();
+        w.u32(self.side);
+        w.bytes(&self.initial);
+        vec![DataRegion { id: REGION_CONFIG, data: w.finish() }]
+    }
+
+    fn steps_per_recording_space(&self, bytes: u64) -> Option<u64> {
+        Some(bytes / (self.side * self.side) as u64)
+    }
+
+    fn min_recording_bytes(&self) -> u64 {
+        (self.side * self.side) as u64
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The tile binary: one PJRT execution of the Pallas kernel per tick.
+pub struct ConwayTileApp {
+    runtime: Rc<Runtime>,
+    side: u32,
+    board: Vec<i32>,
+}
+
+impl ConwayTileApp {
+    pub fn new(runtime: Rc<Runtime>) -> Self {
+        Self { runtime, side: 0, board: Vec::new() }
+    }
+
+    fn model(&self) -> String {
+        format!("conway_step_{0}x{0}", self.side)
+    }
+}
+
+impl CoreApp for ConwayTileApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let region = ctx.read_region(REGION_CONFIG)?;
+        let mut r = ByteReader::new(&region);
+        self.side = r.u32()?;
+        self.board = (0..self.side * self.side)
+            .map(|_| r.u8().map(|b| b as i32))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            self.runtime.has_model(&self.model()),
+            "artifact {} missing",
+            self.model()
+        );
+        Ok(())
+    }
+
+    fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let out = self
+            .runtime
+            .exec(&self.model(), &[HostTensor::I32(self.board.clone())])?;
+        self.board = out.into_iter().next().unwrap().into_i32()?;
+        let bytes: Vec<u8> = self.board.iter().map(|c| *c as u8).collect();
+        ctx.record(STATE_CHANNEL, &bytes);
+        ctx.count("tile_steps", 1);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::machine::{CoreLocation, MachineBuilder};
+    use crate::simulator::{scamp, SimConfig, SimMachine};
+
+    #[test]
+    fn cell_app_blinker_without_graph() {
+        // Hand-wire a 1D "blinker" of 3 cells on one chip: routing via
+        // per-key entries delivering to neighbour cores.
+        use crate::machine::router::{Route, RoutingEntry, RoutingTable};
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        // cores 1,2,3 = cells A,B,C; A and C neighbour B; B neighbours both.
+        let entries = vec![
+            RoutingEntry::new(0x1, !0, Route::EMPTY.with_processor(2)),
+            RoutingEntry::new(0x2, !0, Route::EMPTY.with_processor(1).with_processor(3)),
+            RoutingEntry::new(0x3, !0, Route::EMPTY.with_processor(2)),
+        ];
+        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(entries);
+        for (p, key, alive, neighbours) in
+            [(1u8, 0x1u32, true, vec![0x2u32]), (2, 0x2, true, vec![0x1, 0x3]), (3, 0x3, true, vec![0x2])]
+        {
+            let mut w = ByteWriter::new();
+            w.u32(key).u32(alive as u32).u32(neighbours.len() as u32);
+            for k in neighbours {
+                w.u32(k);
+            }
+            let mut regions = BTreeMap::new();
+            regions.insert(REGION_CONFIG, w.finish());
+            let mut rec = BTreeMap::new();
+            rec.insert(STATE_CHANNEL, 64u32);
+            scamp::load_app(
+                &mut sim,
+                CoreLocation::new(0, 0, p),
+                Box::new(ConwayCellApp::new()),
+                regions,
+                rec,
+            )
+            .unwrap();
+        }
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(4);
+        sim.run_until_idle().unwrap();
+        // 1D line of 3 live cells under B3/S23: ends die (1 neighbour),
+        // middle survives only if 2or3 -> has 2 -> survives; then middle
+        // alone dies next step.
+        let read = |sim: &mut SimMachine, p: u8| {
+            let (addr, len, _) =
+                scamp::recording_info(sim, CoreLocation::new(0, 0, p), STATE_CHANNEL).unwrap();
+            scamp::read_sdram(sim, (0, 0), addr, len).unwrap()
+        };
+        assert_eq!(read(&mut sim, 1), vec![1, 0, 0, 0]);
+        assert_eq!(read(&mut sim, 2), vec![1, 1, 0, 0]);
+        assert_eq!(read(&mut sim, 3), vec![1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn tile_app_blinker_via_hlo() {
+        let rt = Rc::new(Runtime::open_default().expect("run `make artifacts`"));
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let side = 16u32;
+        let mut initial = vec![0u8; (side * side) as usize];
+        for c in 1..4 {
+            initial[(2 * side + c) as usize] = 1; // horizontal blinker
+        }
+        let mut w = ByteWriter::new();
+        w.u32(side).bytes(&initial);
+        let mut regions = BTreeMap::new();
+        regions.insert(REGION_CONFIG, w.finish());
+        let mut rec = BTreeMap::new();
+        rec.insert(STATE_CHANNEL, side * side * 4);
+        let loc = CoreLocation::new(0, 0, 1);
+        scamp::load_app(&mut sim, loc, Box::new(ConwayTileApp::new(rt)), regions, rec).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(2);
+        sim.run_until_idle().unwrap();
+        let (addr, len, _) = scamp::recording_info(&sim, loc, STATE_CHANNEL).unwrap();
+        assert_eq!(len, (side * side * 2) as usize);
+        let data = scamp::read_sdram(&mut sim, (0, 0), addr, len).unwrap();
+        let step1 = &data[..(side * side) as usize];
+        let step2 = &data[(side * side) as usize..];
+        // vertical after one step
+        assert_eq!(step1[(1 * side + 2) as usize], 1);
+        assert_eq!(step1[(2 * side + 2) as usize], 1);
+        assert_eq!(step1[(3 * side + 2) as usize], 1);
+        assert_eq!(step1.iter().map(|b| *b as u32).sum::<u32>(), 3);
+        // back to horizontal after two
+        assert_eq!(step2[(2 * side + 1) as usize], 1);
+        assert_eq!(step2[(2 * side + 3) as usize], 1);
+    }
+}

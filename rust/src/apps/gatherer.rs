@@ -1,0 +1,136 @@
+//! The Live Packet Gatherer (§6.9, Figure 12): taps existing multicast
+//! streams — wired by simply adding graph edges — and forwards them to
+//! an external application as EIEIO-over-UDP via its IP tag.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use crate::graph::{
+    DataGenContext, DataRegion, IpTagRequest, MachineVertexImpl, ResourceRequirements,
+};
+use crate::machine::ChipCoord;
+use crate::simulator::{CoreApp, CoreCtx};
+use crate::transport::{EieioMessage, EieioType, SdpHeader, SdpMessage};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+pub const BINARY: &str = "live_packet_gather.aplx";
+pub const IPTAG_LABEL: &str = "lpg";
+const REGION_CONFIG: u32 = 0;
+
+/// The LPG vertex. Must sit on an Ethernet chip (it owns an IP tag).
+#[derive(Debug)]
+pub struct LivePacketGathererVertex {
+    pub label: String,
+    /// External listener endpoint.
+    pub host: String,
+    pub port: u16,
+    /// The Ethernet chip to pin to.
+    pub chip: ChipCoord,
+}
+
+impl LivePacketGathererVertex {
+    pub fn arc(label: &str, host: &str, port: u16, chip: ChipCoord) -> Arc<dyn MachineVertexImpl> {
+        Arc::new(Self { label: label.into(), host: host.into(), port, chip })
+    }
+}
+
+impl MachineVertexImpl for LivePacketGathererVertex {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: 16 * 1024,
+            itcm_bytes: 8 * 1024,
+            sdram_bytes: 1024,
+            iptags: vec![IpTagRequest {
+                host: self.host.clone(),
+                port: self.port,
+                strip_sdp: true,
+                label: IPTAG_LABEL.into(),
+            }],
+            ..Default::default()
+        }
+    }
+
+    fn binary_name(&self) -> String {
+        BINARY.into()
+    }
+
+    fn chip_constraint(&self) -> Option<ChipCoord> {
+        Some(self.chip)
+    }
+
+    fn generate_data(&self, ctx: &DataGenContext) -> Vec<DataRegion> {
+        let tag = ctx.iptag(IPTAG_LABEL).map(|t| t.tag).unwrap_or(0);
+        let mut w = ByteWriter::new();
+        w.u32(tag as u32);
+        vec![DataRegion { id: REGION_CONFIG, data: w.finish() }]
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The LPG binary: buffer multicast arrivals, flush one EIEIO batch per
+/// timer tick through the IP tag.
+pub struct LivePacketGathererApp {
+    tag: u8,
+    buffer: Vec<(u32, Option<u32>)>,
+}
+
+impl LivePacketGathererApp {
+    pub fn new() -> Self {
+        Self { tag: 0, buffer: Vec::new() }
+    }
+
+    fn flush(&mut self, ctx: &mut CoreCtx) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let with_payload = self.buffer.iter().any(|(_, p)| p.is_some());
+        let ty = if with_payload {
+            EieioType::Key32Payload
+        } else {
+            EieioType::Key32
+        };
+        for batch in EieioMessage::batched(ty, &self.buffer) {
+            let mut header = SdpHeader::to_core(ctx.loc, 1);
+            header.tag = self.tag;
+            ctx.send_sdp(SdpMessage::new(header, batch.encode()));
+        }
+        ctx.count("events_forwarded", self.buffer.len() as u64);
+        self.buffer.clear();
+    }
+}
+
+impl Default for LivePacketGathererApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreApp for LivePacketGathererApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let config = ctx.read_region(REGION_CONFIG)?;
+        self.tag = ByteReader::new(&config).u32()? as u8;
+        Ok(())
+    }
+
+    fn on_mc_packet(&mut self, key: u32, payload: Option<u32>, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        self.buffer.push((key, payload));
+        Ok(())
+    }
+
+    fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        self.flush(ctx);
+        Ok(())
+    }
+
+    fn on_pause(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        self.flush(ctx);
+        Ok(())
+    }
+}

@@ -1,0 +1,113 @@
+//! Built-in application vertices and their simulated core binaries.
+//!
+//! Each submodule pairs a vertex type (graph-side: resources, data
+//! generation, recording model) with a [`CoreApp`] (machine-side: the
+//! event-driven "binary"), connected by the binary name through
+//! [`AppRegistry`] — the moral equivalent of naming an `.aplx` file.
+//!
+//! - [`conway`]: the §7.1 use case (one cell per vertex, plus the
+//!   HLO-backed whole-tile variant sketched at the end of §7.1);
+//! - [`neuron`]: the §7.2 LIF population vertex backed by the AOT
+//!   `lif_step_*` artifacts;
+//! - [`poisson`]: the §7.2 Poisson spike source (HLO thinning);
+//! - [`gatherer`]: the Live Packet Gatherer (§6.9, Figure 12);
+//! - [`reverse_source`]: the Reverse IP Tag Multicast Source (§6.9);
+//! - [`speedup`]: the fast data-extraction protocol cores (§6.8,
+//!   Figure 11 bottom).
+
+pub mod conway;
+pub mod gatherer;
+pub mod networks;
+pub mod neuron;
+pub mod poisson;
+pub mod reverse_source;
+pub mod speedup;
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::runtime::Runtime;
+use crate::simulator::CoreApp;
+
+/// Creates the core app for a binary name at load time (§6.3.4). Apps
+/// read their configuration from their SDRAM data regions in
+/// `on_start`, exactly as the C binaries do.
+pub type AppFactory = Box<dyn Fn() -> Box<dyn CoreApp>>;
+
+/// Binary name -> app factory.
+pub struct AppRegistry {
+    factories: BTreeMap<String, AppFactory>,
+}
+
+impl AppRegistry {
+    pub fn empty() -> Self {
+        Self { factories: BTreeMap::new() }
+    }
+
+    /// The standard registry with every built-in binary. `runtime` is
+    /// shared by the HLO-backed binaries (neuron, poisson, conway tile);
+    /// pass `None` to register only the pure-rust binaries.
+    pub fn standard(runtime: Option<Rc<Runtime>>) -> Self {
+        let mut reg = Self::empty();
+        reg.register(conway::CELL_BINARY, || Box::new(conway::ConwayCellApp::new()));
+        reg.register(gatherer::BINARY, || Box::new(gatherer::LivePacketGathererApp::new()));
+        reg.register(reverse_source::BINARY, || {
+            Box::new(reverse_source::ReverseIpTagSourceApp::new())
+        });
+        reg.register(speedup::READER_BINARY, || Box::new(speedup::DataSpeedUpReaderApp::new()));
+        reg.register(speedup::GATHERER_BINARY, || {
+            Box::new(speedup::DataSpeedUpGathererApp::new())
+        });
+        if let Some(rt) = runtime {
+            let r1 = rt.clone();
+            reg.register(neuron::BINARY, move || {
+                Box::new(neuron::LifPopulationApp::new(r1.clone()))
+            });
+            let r2 = rt.clone();
+            reg.register(poisson::BINARY, move || {
+                Box::new(poisson::PoissonSourceApp::new(r2.clone()))
+            });
+            let r3 = rt;
+            reg.register(conway::TILE_BINARY, move || {
+                Box::new(conway::ConwayTileApp::new(r3.clone()))
+            });
+        }
+        reg
+    }
+
+    pub fn register(
+        &mut self,
+        binary: &str,
+        factory: impl Fn() -> Box<dyn CoreApp> + 'static,
+    ) {
+        self.factories.insert(binary.to_string(), Box::new(factory));
+    }
+
+    pub fn create(&self, binary: &str) -> anyhow::Result<Box<dyn CoreApp>> {
+        Ok(self
+            .factories
+            .get(binary)
+            .ok_or_else(|| anyhow::anyhow!("no binary '{binary}' registered"))?())
+    }
+
+    pub fn has(&self, binary: &str) -> bool {
+        self.factories.contains_key(binary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_registry_has_pure_rust_binaries() {
+        let reg = AppRegistry::standard(None);
+        assert!(reg.has(conway::CELL_BINARY));
+        assert!(reg.has(gatherer::BINARY));
+        assert!(reg.has(reverse_source::BINARY));
+        assert!(reg.has(speedup::READER_BINARY));
+        assert!(!reg.has(neuron::BINARY), "HLO binaries need a runtime");
+        assert!(reg.create(conway::CELL_BINARY).is_ok());
+        assert!(reg.create("missing.aplx").is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Workload builders for the paper's two use cases (§7), shared by the
+//! examples, the benches and the integration tests.
+
+use std::collections::BTreeMap;
+
+use crate::front::SpiNNTools;
+use crate::graph::{AppVertexId, VertexId};
+
+use super::conway::{ConwayCellVertex, STATE_PARTITION};
+use super::neuron::{Connector, LifParams, LifPopulationVertex, SynapseSpec, SPIKES_PARTITION};
+use super::poisson::PoissonSourceVertex;
+
+/// Build the §7.1 Conway machine graph: an `rows x cols` grid of cell
+/// vertices, each bidirectionally connected to its 8 neighbours
+/// (Figure 13). Returns vertex ids in row-major order.
+pub fn build_conway_grid(
+    tools: &mut SpiNNTools,
+    rows: u32,
+    cols: u32,
+    live: &[(u32, u32)],
+) -> anyhow::Result<Vec<VertexId>> {
+    let mut ids = Vec::with_capacity((rows * cols) as usize);
+    for r in 0..rows {
+        for c in 0..cols {
+            let alive = live.contains(&(r, c));
+            ids.push(tools.add_machine_vertex(ConwayCellVertex::arc(r, c, alive))?);
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < rows as i64 && c < cols as i64)
+            .then_some((r * cols as i64 + c) as usize)
+    };
+    for r in 0..rows as i64 {
+        for c in 0..cols as i64 {
+            for dr in -1..=1i64 {
+                for dc in -1..=1i64 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        tools.add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(ids)
+}
+
+/// Population names of the Potjans–Diesmann microcircuit (Figure 14).
+pub const PD_POPULATIONS: [&str; 8] =
+    ["L23E", "L23I", "L4E", "L4I", "L5E", "L5I", "L6E", "L6I"];
+
+/// Full-scale population sizes (Potjans & Diesmann 2014, Table 1).
+pub const PD_SIZES: [u32; 8] = [20683, 5834, 21915, 5479, 4850, 1065, 14395, 2948];
+
+/// Connection probabilities target<-source (Potjans & Diesmann 2014,
+/// Table 5; rows = target population, columns = source population).
+pub const PD_CONN: [[f64; 8]; 8] = [
+    [0.1009, 0.1689, 0.0437, 0.0818, 0.0323, 0.0000, 0.0076, 0.0000],
+    [0.1346, 0.1371, 0.0316, 0.0515, 0.0755, 0.0000, 0.0042, 0.0000],
+    [0.0077, 0.0059, 0.0497, 0.1350, 0.0067, 0.0003, 0.0453, 0.0000],
+    [0.0691, 0.0029, 0.0794, 0.1597, 0.0033, 0.0000, 0.1057, 0.0000],
+    [0.1004, 0.0622, 0.0505, 0.0057, 0.0831, 0.3726, 0.0204, 0.0000],
+    [0.0548, 0.0269, 0.0257, 0.0022, 0.0600, 0.3158, 0.0086, 0.0000],
+    [0.0156, 0.0066, 0.0211, 0.0166, 0.0572, 0.0197, 0.0396, 0.2252],
+    [0.0364, 0.0010, 0.0034, 0.0005, 0.0277, 0.0080, 0.0658, 0.1443],
+];
+
+/// External (background) input rates per population, in expected spikes
+/// per neuron per timestep at full scale (derived from the paper's
+/// 8 Hz x K_ext background).
+pub const PD_EXT_INPUTS: [u32; 8] = [1600, 1500, 2100, 1900, 2000, 1900, 2900, 2100];
+
+/// A built microcircuit: application vertex handles per population.
+pub struct Microcircuit {
+    pub populations: BTreeMap<&'static str, AppVertexId>,
+    pub sources: BTreeMap<&'static str, AppVertexId>,
+    pub sizes: BTreeMap<&'static str, u32>,
+}
+
+/// Build a scaled Potjans–Diesmann cortical microcircuit (§7.2,
+/// Figure 14): 8 LIF populations with the PD connectivity map, each
+/// driven by its own Poisson background source.
+///
+/// `scale` scales the population sizes; connection probabilities are
+/// kept and weights are synapse-count-preserving-ish for small scales.
+pub fn build_microcircuit(
+    tools: &mut SpiNNTools,
+    scale: f64,
+    seed: u64,
+    record: bool,
+) -> anyhow::Result<Microcircuit> {
+    // Weights tuned for the scaled network: exc PSP-equivalent current,
+    // inhibition at the paper's g = -4 relative strength.
+    let w_exc = 1.2f32;
+    let g = 5.0f32;
+    let params = LifParams::default();
+
+    let mut populations = BTreeMap::new();
+    let mut sources = BTreeMap::new();
+    let mut sizes = BTreeMap::new();
+    for (i, name) in PD_POPULATIONS.iter().enumerate() {
+        let n = ((PD_SIZES[i] as f64 * scale).round() as u32).max(8);
+        sizes.insert(*name, n);
+        let pop = tools.add_application_vertex(LifPopulationVertex::arc(
+            name,
+            n,
+            params.clone(),
+            record,
+        ))?;
+        populations.insert(*name, pop);
+        // Background drive: the paper's K_ext independent 8 Hz inputs per
+        // neuron are aggregated into ONE Poisson source per neuron whose
+        // weight preserves the mean input current (K_ext * 8 Hz * w_exc).
+        // DESIGN.md documents this variance-reducing substitution.
+        let src_rate_hz = 500.0f32;
+        let ext_events_per_ms = PD_EXT_INPUTS[i] as f64 * 8.0 / 1000.0;
+        // 0.66: operating point just below threshold, so firing is
+        // fluctuation-driven (the PD asynchronous-irregular regime)
+        // rather than mean-driven.
+        let w_bg = (ext_events_per_ms / (src_rate_hz as f64 / 1000.0)) * w_exc as f64 * 0.66;
+        let src = tools.add_application_vertex(PoissonSourceVertex::arc(
+            &format!("ext_{name}"),
+            n,
+            src_rate_hz,
+            seed ^ (i as u64) << 8,
+            false,
+        ))?;
+        sources.insert(*name, src);
+        tools.add_application_edge(
+            src,
+            pop,
+            SPIKES_PARTITION,
+            Some(SynapseSpec::excitatory(w_bg as f32, Connector::OneToOne, seed ^ 0xEE)),
+        )?;
+    }
+
+    // Recurrent connectivity (probabilities preserved; at small scales
+    // the in-degree shrinks with n_pre, partially offset by weight).
+    let comp = (1.0 / scale.sqrt()).min(6.0) as f32;
+    for (t, target) in PD_POPULATIONS.iter().enumerate() {
+        for (s, source) in PD_POPULATIONS.iter().enumerate() {
+            let p = PD_CONN[t][s];
+            if p == 0.0 {
+                continue;
+            }
+            let inhibitory = s % 2 == 1;
+            let w = if inhibitory { w_exc * g * comp } else { w_exc * comp };
+            let spec = std::sync::Arc::new(SynapseSpec {
+                weight: w,
+                inhibitory,
+                connector: Connector::FixedProbability(p),
+                seed: seed ^ ((t as u64) << 32 | s as u64),
+            });
+            tools.add_application_edge(
+                populations[source],
+                populations[target],
+                SPIKES_PARTITION,
+                Some(spec),
+            )?;
+        }
+    }
+
+    Ok(Microcircuit { populations, sources, sizes })
+}
+
+/// Per-population firing rates (Hz) from recorded spike bitmaps.
+pub fn firing_rates(
+    tools: &SpiNNTools,
+    circuit: &Microcircuit,
+    run_ms: f64,
+) -> BTreeMap<&'static str, f64> {
+    let mut rates = BTreeMap::new();
+    for (name, pop) in &circuit.populations {
+        let n = circuit.sizes[name];
+        let mut spikes = 0usize;
+        for (slice, data) in tools.app_recordings(*pop) {
+            spikes += super::neuron::decode_spike_bitmaps(data, slice.n_atoms()).len();
+        }
+        let rate = spikes as f64 / n as f64 / (run_ms / 1000.0);
+        rates.insert(*name, rate);
+    }
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pd_tables_consistent() {
+        assert_eq!(PD_POPULATIONS.len(), 8);
+        assert_eq!(PD_SIZES.iter().sum::<u32>(), 77169);
+        for row in &PD_CONN {
+            for p in row {
+                assert!((0.0..=1.0).contains(p));
+            }
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! The Poisson spike source (§7.2): "generate spikes randomly with a
+//! given rate using a Poisson process". The Bernoulli thinning runs in
+//! the AOT `poisson_step_n256` artifact; the RNG stream (like the
+//! on-core RNG state of the real binary) lives in the app.
+
+use std::any::Any;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::graph::{
+    ApplicationVertexImpl, DataGenContext, DataRegion, MachineVertexImpl, ResourceRequirements,
+    Slice,
+};
+use crate::runtime::{HostTensor, Runtime};
+use crate::simulator::{CoreApp, CoreCtx};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::SplitMix64;
+
+pub const BINARY: &str = "poisson_source.aplx";
+pub const SPIKES_PARTITION: &str = "spikes";
+pub const SPIKES_CHANNEL: u32 = 0;
+const REGION_CONFIG: u32 = 0;
+const PAD: u32 = 256; // single compiled artifact size
+
+/// A population of independent Poisson spike generators.
+#[derive(Debug)]
+pub struct PoissonSourceVertex {
+    pub label: String,
+    pub n_sources: u32,
+    pub rate_hz: f32,
+    pub seed: u64,
+    pub record_spikes: bool,
+}
+
+impl PoissonSourceVertex {
+    pub fn arc(
+        label: &str,
+        n_sources: u32,
+        rate_hz: f32,
+        seed: u64,
+        record_spikes: bool,
+    ) -> Arc<dyn ApplicationVertexImpl> {
+        Arc::new(Self {
+            label: label.into(),
+            n_sources,
+            rate_hz,
+            seed,
+            record_spikes,
+        })
+    }
+}
+
+impl ApplicationVertexImpl for PoissonSourceVertex {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn n_atoms(&self) -> u32 {
+        self.n_sources
+    }
+
+    fn max_atoms_per_core(&self) -> u32 {
+        PAD
+    }
+
+    fn resources_for(&self, slice: Slice) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: slice.n_atoms() * 8 + 1024,
+            itcm_bytes: 8 * 1024,
+            sdram_bytes: 1024,
+            cpu_cycles_per_step: slice.n_atoms() as u64 * 40 + 2_000,
+            ..Default::default()
+        }
+    }
+
+    fn create_machine_vertex(&self, slice: Slice) -> Arc<dyn MachineVertexImpl> {
+        Arc::new(PoissonMachineVertex {
+            label: format!("{}{}", self.label, slice),
+            slice,
+            rate_hz: self.rate_hz,
+            // distinct stream per slice, deterministic per vertex
+            seed: self.seed ^ ((slice.lo as u64) << 20),
+            record_spikes: self.record_spikes,
+        })
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[derive(Debug)]
+pub struct PoissonMachineVertex {
+    pub label: String,
+    pub slice: Slice,
+    pub rate_hz: f32,
+    pub seed: u64,
+    pub record_spikes: bool,
+}
+
+impl MachineVertexImpl for PoissonMachineVertex {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: self.slice.n_atoms() * 8 + 1024,
+            itcm_bytes: 8 * 1024,
+            sdram_bytes: 1024,
+            cpu_cycles_per_step: self.slice.n_atoms() as u64 * 40 + 2_000,
+            ..Default::default()
+        }
+    }
+
+    fn binary_name(&self) -> String {
+        BINARY.into()
+    }
+
+    fn n_keys_for_partition(&self, _partition: &str) -> u32 {
+        self.slice.n_atoms()
+    }
+
+    fn generate_data(&self, ctx: &DataGenContext) -> Vec<DataRegion> {
+        let key_base = ctx
+            .outgoing_key(SPIKES_PARTITION)
+            .map(|k| k.base)
+            .unwrap_or(u32::MAX);
+        let rate_per_step = self.rate_hz * ctx.timestep_us as f32 / 1_000_000.0;
+        let mut w = ByteWriter::new();
+        w.u32(self.slice.n_atoms());
+        w.u32(key_base);
+        w.f32(rate_per_step);
+        w.u64(self.seed);
+        w.u32(self.record_spikes as u32);
+        vec![DataRegion { id: REGION_CONFIG, data: w.finish() }]
+    }
+
+    fn steps_per_recording_space(&self, bytes: u64) -> Option<u64> {
+        self.record_spikes
+            .then(|| bytes / ((self.slice.n_atoms() as u64).div_ceil(32) * 4))
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The source binary.
+pub struct PoissonSourceApp {
+    runtime: Rc<Runtime>,
+    n: u32,
+    key_base: u32,
+    rate_per_step: f32,
+    rng: SplitMix64,
+    record: bool,
+}
+
+impl PoissonSourceApp {
+    pub fn new(runtime: Rc<Runtime>) -> Self {
+        Self {
+            runtime,
+            n: 0,
+            key_base: u32::MAX,
+            rate_per_step: 0.0,
+            rng: SplitMix64::new(0),
+            record: false,
+        }
+    }
+}
+
+impl CoreApp for PoissonSourceApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let config = ctx.read_region(REGION_CONFIG)?;
+        let mut r = ByteReader::new(&config);
+        self.n = r.u32()?;
+        self.key_base = r.u32()?;
+        self.rate_per_step = r.f32()?;
+        self.rng = SplitMix64::new(r.u64()?);
+        self.record = r.u32()? != 0;
+        Ok(())
+    }
+
+    fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        // Draw uniforms on-core, thin in the AOT kernel.
+        let unif: Vec<f32> = (0..PAD).map(|_| self.rng.next_f32()).collect();
+        let out = self.runtime.exec(
+            "poisson_step_n256",
+            &[HostTensor::F32(unif), HostTensor::ScalarF32(self.rate_per_step)],
+        )?;
+        let spikes = out.into_iter().next().unwrap().into_f32()?;
+        let words = (self.n as usize).div_ceil(32);
+        let mut bitmap = vec![0u32; words];
+        for atom in 0..self.n {
+            if spikes[atom as usize] != 0.0 {
+                if self.key_base != u32::MAX {
+                    ctx.send_mc(self.key_base + atom, None);
+                }
+                bitmap[(atom / 32) as usize] |= 1 << (atom % 32);
+                ctx.count("spikes_out", 1);
+            }
+        }
+        if self.record {
+            let mut bytes = Vec::with_capacity(words * 4);
+            for w in &bitmap {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+            ctx.record(SPIKES_CHANNEL, &bytes);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::MachineGraph;
+    use crate::mapping::{keys, placer};
+    use crate::machine::MachineBuilder;
+
+    #[test]
+    fn slice_seeds_differ() {
+        let v = PoissonSourceVertex {
+            label: "p".into(),
+            n_sources: 600,
+            rate_hz: 10.0,
+            seed: 99,
+            record_spikes: false,
+        };
+        let a = v.create_machine_vertex(Slice::new(0, 256));
+        let b = v.create_machine_vertex(Slice::new(256, 512));
+        let pa = a.as_any().downcast_ref::<PoissonMachineVertex>().unwrap();
+        let pb = b.as_any().downcast_ref::<PoissonMachineVertex>().unwrap();
+        assert_ne!(pa.seed, pb.seed);
+    }
+
+    #[test]
+    fn data_region_encodes_rate_per_step() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let v = g.add_vertex(Arc::new(PoissonMachineVertex {
+            label: "p".into(),
+            slice: Slice::new(0, 100),
+            rate_hz: 50.0,
+            seed: 1,
+            record_spikes: true,
+        }));
+        // a second vertex so the partition exists
+        let t = g.add_vertex(crate::graph::machine_graph::test_support::TestVertex::arc("t"));
+        g.add_edge(v, t, SPIKES_PARTITION);
+        let p = placer::place(&m, &g).unwrap();
+        let k = keys::allocate_keys(&g).unwrap();
+        let placements: std::collections::BTreeMap<_, _> = p.iter().collect();
+        let ctx = DataGenContext {
+            vertex: v,
+            placement: p.of(v).unwrap(),
+            timestep_us: 1000,
+            graph: &g,
+            placements: &placements,
+            keys: &k,
+            iptags: &Default::default(),
+            reverse_iptags: &Default::default(),
+            app_graph: None,
+            graph_mapping: None,
+        };
+        let regions = g.vertex(v).generate_data(&ctx);
+        let mut r = ByteReader::new(&regions[0].data);
+        assert_eq!(r.u32().unwrap(), 100);
+        let key = r.u32().unwrap();
+        assert_eq!(key, k[&(v, SPIKES_PARTITION.to_string())].base);
+        let rate = r.f32().unwrap();
+        assert!((rate - 0.05).abs() < 1e-6, "50 Hz at 1 ms = 0.05/step");
+    }
+}

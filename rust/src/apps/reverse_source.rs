@@ -1,0 +1,117 @@
+//! The Reverse IP Tag Multicast Source (§6.9, Figure 12): external
+//! applications send EIEIO-over-UDP to a board port; this vertex decodes
+//! the events and multicasts them into the machine, reaching whatever
+//! vertices the user connected with graph edges.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use crate::graph::{
+    DataGenContext, DataRegion, MachineVertexImpl, ResourceRequirements, ReverseIpTagRequest,
+};
+use crate::simulator::{CoreApp, CoreCtx};
+use crate::transport::{EieioMessage, SdpMessage};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+pub const BINARY: &str = "reverse_iptag_source.aplx";
+pub const RTAG_LABEL: &str = "rts";
+pub const OUT_PARTITION: &str = "out";
+const REGION_CONFIG: u32 = 0;
+
+/// The RIPTMS vertex: external events on `udp_port` become multicast
+/// packets with this vertex's allocated keys (base + event id).
+#[derive(Debug)]
+pub struct ReverseIpTagSourceVertex {
+    pub label: String,
+    pub udp_port: u16,
+    /// Number of distinct event ids the external source may send.
+    pub n_keys: u32,
+}
+
+impl ReverseIpTagSourceVertex {
+    pub fn arc(label: &str, udp_port: u16, n_keys: u32) -> Arc<dyn MachineVertexImpl> {
+        Arc::new(Self { label: label.into(), udp_port, n_keys })
+    }
+}
+
+impl MachineVertexImpl for ReverseIpTagSourceVertex {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: 8 * 1024,
+            itcm_bytes: 8 * 1024,
+            sdram_bytes: 512,
+            reverse_iptags: vec![ReverseIpTagRequest {
+                port: self.udp_port,
+                label: RTAG_LABEL.into(),
+            }],
+            ..Default::default()
+        }
+    }
+
+    fn binary_name(&self) -> String {
+        BINARY.into()
+    }
+
+    fn n_keys_for_partition(&self, _partition: &str) -> u32 {
+        self.n_keys
+    }
+
+    fn generate_data(&self, ctx: &DataGenContext) -> Vec<DataRegion> {
+        let key = ctx.outgoing_key(OUT_PARTITION);
+        let mut w = ByteWriter::new();
+        w.u32(key.map(|k| k.base).unwrap_or(u32::MAX));
+        w.u32(key.map(|k| k.mask).unwrap_or(0));
+        vec![DataRegion { id: REGION_CONFIG, data: w.finish() }]
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The RIPTMS binary.
+pub struct ReverseIpTagSourceApp {
+    key_base: u32,
+    key_mask: u32,
+}
+
+impl ReverseIpTagSourceApp {
+    pub fn new() -> Self {
+        Self { key_base: u32::MAX, key_mask: 0 }
+    }
+}
+
+impl Default for ReverseIpTagSourceApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreApp for ReverseIpTagSourceApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let config = ctx.read_region(REGION_CONFIG)?;
+        let mut r = ByteReader::new(&config);
+        self.key_base = r.u32()?;
+        self.key_mask = r.u32()?;
+        Ok(())
+    }
+
+    fn on_timer(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn on_sdp(&mut self, msg: &SdpMessage, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let eieio = EieioMessage::decode(&msg.data)?;
+        for (event, payload) in eieio.events {
+            // External apps send event ids; keys come from our range.
+            let key = self.key_base | (event & !self.key_mask);
+            ctx.send_mc(key, payload);
+            ctx.count("events_injected", 1);
+        }
+        Ok(())
+    }
+}

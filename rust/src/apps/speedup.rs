@@ -1,0 +1,383 @@
+//! The fast data-extraction protocol (§6.8, Figure 11 bottom).
+//!
+//! One reader core per chip streams SDRAM as multicast packets to a
+//! gatherer core on the Ethernet chip, which reassembles them into
+//! sequence-numbered SDP frames for the host. The host re-requests
+//! missing sequences (the machine is configured so the single-path
+//! stream is loss-free, but the logic exists and is tested). Compared
+//! with SCAMP reads: no per-256-byte request/response round trip and no
+//! SDP headers crossing the fabric — which is exactly why the paper
+//! measures ~40 Mb/s from *any* chip versus 8/2 Mb/s over SCAMP.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use crate::graph::{
+    DataGenContext, DataRegion, IpTagRequest, MachineVertexImpl, ResourceRequirements,
+};
+use crate::machine::ChipCoord;
+use crate::simulator::{CoreApp, CoreCtx};
+use crate::transport::{SdpHeader, SdpMessage};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+pub const READER_BINARY: &str = "data_speed_up_reader.aplx";
+pub const GATHERER_BINARY: &str = "data_speed_up_gather.aplx";
+pub const STREAM_PARTITION: &str = "stream";
+pub const IPTAG_LABEL: &str = "dsg";
+const REGION_CONFIG: u32 = 0;
+
+/// SDP port the reader listens for read commands on.
+pub const READER_SDP_PORT: u8 = 2;
+
+/// Words per host-bound SDP frame (64 x 4 B = 256 B of data).
+const WORDS_PER_FRAME: usize = 64;
+
+/// Command message: "stream `len` bytes from `addr`" (host → reader).
+pub fn encode_read_command(addr: u32, len: u32) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u32(0xDA7A_0001); // magic
+    w.u32(addr);
+    w.u32(len);
+    w.finish()
+}
+
+/// Re-request command for missing sequence numbers.
+pub fn encode_rerequest(addr: u32, len: u32, missing: &[u32]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u32(0xDA7A_0002);
+    w.u32(addr);
+    w.u32(len);
+    w.u32(missing.len() as u32);
+    w.u32s(missing);
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Reader (one per chip being read from)
+
+/// The per-chip reader vertex.
+#[derive(Debug)]
+pub struct DataSpeedUpReaderVertex {
+    pub chip: ChipCoord,
+}
+
+impl DataSpeedUpReaderVertex {
+    pub fn arc(chip: ChipCoord) -> Arc<dyn MachineVertexImpl> {
+        Arc::new(Self { chip })
+    }
+}
+
+impl MachineVertexImpl for DataSpeedUpReaderVertex {
+    fn label(&self) -> String {
+        format!("ds_reader_{}_{}", self.chip.0, self.chip.1)
+    }
+
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: 8 * 1024,
+            itcm_bytes: 8 * 1024,
+            sdram_bytes: 256,
+            ..Default::default()
+        }
+    }
+
+    fn binary_name(&self) -> String {
+        READER_BINARY.into()
+    }
+
+    fn chip_constraint(&self) -> Option<ChipCoord> {
+        Some(self.chip)
+    }
+
+    fn generate_data(&self, ctx: &DataGenContext) -> Vec<DataRegion> {
+        let key = ctx.outgoing_key(STREAM_PARTITION);
+        let mut w = ByteWriter::new();
+        w.u32(key.map(|k| k.base).unwrap_or(u32::MAX));
+        vec![DataRegion { id: REGION_CONFIG, data: w.finish() }]
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The reader binary: on command, DMA SDRAM and stream it as multicast
+/// words (one 32-bit payload per packet; the stream key identifies the
+/// transfer).
+pub struct DataSpeedUpReaderApp {
+    stream_key: u32,
+}
+
+impl DataSpeedUpReaderApp {
+    pub fn new() -> Self {
+        Self { stream_key: u32::MAX }
+    }
+
+    fn stream(&self, ctx: &mut CoreCtx, addr: u32, len: u32, only: Option<Vec<u32>>) -> anyhow::Result<()> {
+        let data = ctx.read_sdram(addr, len as usize)?;
+        let n_words = data.len().div_ceil(4);
+        // Header packet: total word count (payload), distinguished by
+        // key | 1 (the stream key range is 2 keys wide).
+        if only.is_none() {
+            ctx.send_mc(self.stream_key | 1, Some(n_words as u32));
+        }
+        for w in 0..n_words {
+            if let Some(only) = &only {
+                let frame = (w / WORDS_PER_FRAME) as u32;
+                if !only.contains(&frame) {
+                    continue;
+                }
+            }
+            let mut word = [0u8; 4];
+            let lo = w * 4;
+            let hi = (lo + 4).min(data.len());
+            word[..hi - lo].copy_from_slice(&data[lo..hi]);
+            ctx.send_mc(self.stream_key, Some(u32::from_le_bytes(word)));
+        }
+        ctx.count("words_streamed", n_words as u64);
+        Ok(())
+    }
+}
+
+impl Default for DataSpeedUpReaderApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreApp for DataSpeedUpReaderApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let config = ctx.read_region(REGION_CONFIG)?;
+        self.stream_key = ByteReader::new(&config).u32()?;
+        Ok(())
+    }
+
+    fn on_timer(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn on_sdp(&mut self, msg: &SdpMessage, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(&msg.data);
+        match r.u32()? {
+            0xDA7A_0001 => {
+                let addr = r.u32()?;
+                let len = r.u32()?;
+                self.stream(ctx, addr, len, None)
+            }
+            0xDA7A_0002 => {
+                let addr = r.u32()?;
+                let len = r.u32()?;
+                let n = r.u32()?;
+                let missing = r.u32s(n as usize)?;
+                self.stream(ctx, addr, len, Some(missing))
+            }
+            other => anyhow::bail!("unknown speed-up command {other:#x}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gatherer (one on the Ethernet chip)
+
+/// The Ethernet-chip gatherer vertex.
+#[derive(Debug)]
+pub struct DataSpeedUpGathererVertex {
+    pub host: String,
+    pub port: u16,
+    pub chip: ChipCoord,
+}
+
+impl DataSpeedUpGathererVertex {
+    pub fn arc(host: &str, port: u16, chip: ChipCoord) -> Arc<dyn MachineVertexImpl> {
+        Arc::new(Self { host: host.into(), port, chip })
+    }
+}
+
+impl MachineVertexImpl for DataSpeedUpGathererVertex {
+    fn label(&self) -> String {
+        format!("ds_gather_{}_{}", self.chip.0, self.chip.1)
+    }
+
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements {
+            dtcm_bytes: 32 * 1024,
+            itcm_bytes: 8 * 1024,
+            sdram_bytes: 1024,
+            iptags: vec![IpTagRequest {
+                host: self.host.clone(),
+                port: self.port,
+                strip_sdp: true,
+                label: IPTAG_LABEL.into(),
+            }],
+            ..Default::default()
+        }
+    }
+
+    fn binary_name(&self) -> String {
+        GATHERER_BINARY.into()
+    }
+
+    fn chip_constraint(&self) -> Option<ChipCoord> {
+        Some(self.chip)
+    }
+
+    fn generate_data(&self, ctx: &DataGenContext) -> Vec<DataRegion> {
+        let tag = ctx.iptag(IPTAG_LABEL).map(|t| t.tag).unwrap_or(0);
+        let mut w = ByteWriter::new();
+        w.u32(tag as u32);
+        vec![DataRegion { id: REGION_CONFIG, data: w.finish() }]
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The gatherer binary: reassemble the word stream into 256-byte
+/// sequence-numbered SDP frames for the host ("the SDP is only formed
+/// at the Ethernet chip", §6.8).
+pub struct DataSpeedUpGathererApp {
+    tag: u8,
+    expected_words: Option<usize>,
+    words: Vec<u32>,
+    seq: u32,
+}
+
+impl DataSpeedUpGathererApp {
+    pub fn new() -> Self {
+        Self { tag: 0, expected_words: None, words: Vec::new(), seq: 0 }
+    }
+
+    fn flush_frames(&mut self, ctx: &mut CoreCtx, force: bool) {
+        while self.words.len() >= WORDS_PER_FRAME
+            || (force && !self.words.is_empty())
+        {
+            let take = self.words.len().min(WORDS_PER_FRAME);
+            let frame: Vec<u32> = self.words.drain(..take).collect();
+            let mut w = ByteWriter::new();
+            w.u32(self.seq);
+            w.u32s(&frame);
+            let mut header = SdpHeader::to_core(ctx.loc, 1);
+            header.tag = self.tag;
+            ctx.send_sdp(SdpMessage::new(header, w.finish()));
+            self.seq += 1;
+        }
+    }
+}
+
+impl Default for DataSpeedUpGathererApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreApp for DataSpeedUpGathererApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let config = ctx.read_region(REGION_CONFIG)?;
+        self.tag = ByteReader::new(&config).u32()? as u8;
+        Ok(())
+    }
+
+    fn on_timer(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn on_mc_packet(&mut self, key: u32, payload: Option<u32>, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let payload = payload.unwrap_or(0);
+        if key & 1 == 1 {
+            // Stream header: expected length; reset reassembly.
+            self.expected_words = Some(payload as usize);
+            self.words.clear();
+            self.seq = 0;
+            return Ok(());
+        }
+        self.words.push(payload);
+        let done = self
+            .expected_words
+            .map(|n| self.seq as usize * WORDS_PER_FRAME + self.words.len() >= n)
+            .unwrap_or(false);
+        self.flush_frames(ctx, done);
+        Ok(())
+    }
+}
+
+/// Host-side reassembly of the gatherer's frames: returns (data,
+/// missing frame sequence numbers).
+pub fn reassemble(frames: &[Vec<u8>], len: usize) -> (Vec<u8>, Vec<u32>) {
+    let n_words = len.div_ceil(4);
+    let n_frames = n_words.div_ceil(WORDS_PER_FRAME);
+    let mut by_seq: Vec<Option<&[u8]>> = vec![None; n_frames];
+    for f in frames {
+        if f.len() < 4 {
+            continue;
+        }
+        let seq = u32::from_le_bytes(f[..4].try_into().unwrap()) as usize;
+        if seq < n_frames {
+            by_seq[seq] = Some(&f[4..]);
+        }
+    }
+    let mut data = Vec::with_capacity(len);
+    let mut missing = Vec::new();
+    for (seq, frame) in by_seq.iter().enumerate() {
+        match frame {
+            Some(bytes) => data.extend_from_slice(bytes),
+            None => missing.push(seq as u32),
+        }
+    }
+    data.truncate(len);
+    (data, missing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn command_round_trip() {
+        let cmd = encode_read_command(0x6000_0100, 4096);
+        let mut r = ByteReader::new(&cmd);
+        assert_eq!(r.u32().unwrap(), 0xDA7A_0001);
+        assert_eq!(r.u32().unwrap(), 0x6000_0100);
+        assert_eq!(r.u32().unwrap(), 4096);
+    }
+
+    #[test]
+    fn reassemble_in_order() {
+        // 2 frames of 64 words + 1 word tail.
+        let len = (64 * 2 + 1) * 4;
+        let mut frames = Vec::new();
+        for seq in 0..3u32 {
+            let mut w = ByteWriter::new();
+            w.u32(seq);
+            let n = if seq == 2 { 1 } else { 64 };
+            for i in 0..n {
+                w.u32(seq * 1000 + i);
+            }
+            frames.push(w.finish());
+        }
+        let (data, missing) = reassemble(&frames, len);
+        assert!(missing.is_empty());
+        assert_eq!(data.len(), len);
+        assert_eq!(u32::from_le_bytes(data[..4].try_into().unwrap()), 0);
+        assert_eq!(
+            u32::from_le_bytes(data[64 * 4..64 * 4 + 4].try_into().unwrap()),
+            1000
+        );
+    }
+
+    #[test]
+    fn reassemble_detects_missing() {
+        let len = 64 * 3 * 4;
+        let mut frames = Vec::new();
+        for seq in [0u32, 2] {
+            let mut w = ByteWriter::new();
+            w.u32(seq);
+            for i in 0..64 {
+                w.u32(i);
+            }
+            frames.push(w.finish());
+        }
+        let (_, missing) = reassemble(&frames, len);
+        assert_eq!(missing, vec![1]);
+    }
+}

@@ -1,0 +1,215 @@
+//! The buffer manager's run-cycle planning (§6.3.5, Figure 9).
+//!
+//! "The SDRAM remaining on each chip after it has been allocated for
+//! other things is divided up between the vertices on that chip. Each is
+//! then asked for the number of time steps it can be run for before
+//! filling up the SDRAM. The minimum number of time steps is taken over
+//! all chips and the total run time is split into smaller chunks."
+
+use std::collections::BTreeMap;
+
+use crate::graph::{MachineGraph, VertexId};
+use crate::machine::{ChipCoord, Machine};
+use crate::mapping::Placements;
+
+/// The plan for a requested run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunCyclePlan {
+    /// Ticks per cycle (the Figure-9 chunk); `requested` if everything
+    /// fits in one cycle.
+    pub steps_per_cycle: u64,
+    /// Cycle lengths summing to the requested run time.
+    pub cycles: Vec<u64>,
+    /// Recording-buffer bytes granted to each recording vertex.
+    pub recording_bytes: BTreeMap<VertexId, u64>,
+}
+
+/// Compute the Figure-9 plan. `data_bytes` is each vertex's generated
+/// (non-recording) SDRAM footprint, already known after data generation.
+pub fn plan_run_cycles(
+    machine: &Machine,
+    graph: &MachineGraph,
+    placements: &Placements,
+    data_bytes: &BTreeMap<VertexId, u64>,
+    requested_steps: u64,
+    slack_bytes: u64,
+) -> anyhow::Result<RunCyclePlan> {
+    let mut recording_bytes = BTreeMap::new();
+    let mut min_steps: Option<u64> = None;
+
+    let chips: Vec<ChipCoord> = placements.used_chips().into_iter().collect();
+    for chip in chips {
+        let chip_info = machine
+            .chip(chip)
+            .ok_or_else(|| anyhow::anyhow!("placement on missing chip {chip:?}"))?;
+        if chip_info.is_virtual {
+            continue;
+        }
+        let on_chip = placements.on_chip(chip);
+        let used: u64 = on_chip
+            .iter()
+            .map(|(v, _)| data_bytes.get(v).copied().unwrap_or(0))
+            .sum();
+        let total = chip_info.sdram.user_size() as u64;
+        let free = total
+            .checked_sub(used + slack_bytes)
+            .ok_or_else(|| anyhow::anyhow!("chip {chip:?} SDRAM oversubscribed by data"))?;
+
+        let recorders: Vec<VertexId> = on_chip
+            .iter()
+            .map(|(v, _)| *v)
+            .filter(|v| graph.vertex(*v).steps_per_recording_space(1 << 30).is_some())
+            .collect();
+        if recorders.is_empty() {
+            continue;
+        }
+        // "divided up between the vertices on that chip".
+        let share = free / recorders.len() as u64;
+        for v in recorders {
+            let vertex = graph.vertex(v);
+            let min_bytes = vertex.min_recording_bytes();
+            anyhow::ensure!(
+                share >= min_bytes,
+                "chip {chip:?}: {} bytes/vertex below the {} byte reservation of {}",
+                share,
+                min_bytes,
+                vertex.label()
+            );
+            let steps = vertex
+                .steps_per_recording_space(share)
+                .expect("filtered to recording vertices");
+            anyhow::ensure!(
+                steps > 0,
+                "vertex {} cannot record even one step in {} bytes",
+                vertex.label(),
+                share
+            );
+            min_steps = Some(min_steps.map_or(steps, |m| m.min(steps)));
+            recording_bytes.insert(v, share);
+        }
+    }
+
+    let steps_per_cycle = min_steps.unwrap_or(requested_steps).min(requested_steps).max(1);
+    let mut cycles = Vec::new();
+    let mut remaining = requested_steps;
+    while remaining > 0 {
+        let c = steps_per_cycle.min(remaining);
+        cycles.push(c);
+        remaining -= c;
+    }
+    Ok(RunCyclePlan { steps_per_cycle, cycles, recording_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::machine_graph::test_support::TestVertex;
+    use crate::graph::{
+        DataGenContext, DataRegion, MachineVertexImpl, ResourceRequirements,
+    };
+    use crate::machine::MachineBuilder;
+    use crate::mapping::placer;
+    use std::any::Any;
+    use std::sync::Arc;
+
+    /// Records `bytes_per_step` bytes every step.
+    #[derive(Debug)]
+    struct Recorder {
+        name: String,
+        bytes_per_step: u64,
+    }
+
+    impl Recorder {
+        fn arc(name: &str, bytes_per_step: u64) -> Arc<dyn MachineVertexImpl> {
+            Arc::new(Self { name: name.into(), bytes_per_step })
+        }
+    }
+
+    impl MachineVertexImpl for Recorder {
+        fn label(&self) -> String {
+            self.name.clone()
+        }
+        fn resources(&self) -> ResourceRequirements {
+            ResourceRequirements::with_sdram(1024)
+        }
+        fn binary_name(&self) -> String {
+            "r.aplx".into()
+        }
+        fn generate_data(&self, _: &DataGenContext) -> Vec<DataRegion> {
+            vec![]
+        }
+        fn steps_per_recording_space(&self, bytes: u64) -> Option<u64> {
+            Some(bytes / self.bytes_per_step)
+        }
+        fn min_recording_bytes(&self) -> u64 {
+            self.bytes_per_step
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn single_cycle_when_memory_ample() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let v = g.add_vertex(Recorder::arc("r", 4));
+        let p = placer::place(&m, &g).unwrap();
+        let mut data = BTreeMap::new();
+        data.insert(v, 1024u64);
+        let plan = plan_run_cycles(&m, &g, &p, &data, 1000, 1024).unwrap();
+        assert_eq!(plan.cycles, vec![1000]);
+    }
+
+    #[test]
+    fn chunked_when_memory_tight() {
+        // Grid machine with tiny SDRAM so buffers limit the run.
+        let mut m = MachineBuilder::spinn3().build();
+        for c in m.chip_coords().collect::<Vec<_>>() {
+            m.chip_mut(c).unwrap().sdram.size = 2 * 1024 * 1024;
+            m.chip_mut(c).unwrap().sdram.system_reserved = 0;
+        }
+        let mut g = MachineGraph::new();
+        // 1 KiB per step per vertex; 17 on one chip.
+        for i in 0..17 {
+            g.add_vertex(Recorder::arc(&format!("r{i}"), 1024));
+        }
+        let p = placer::place(&m, &g).unwrap();
+        let data: BTreeMap<VertexId, u64> =
+            g.vertex_ids().map(|v| (v, 0u64)).collect();
+        let plan = plan_run_cycles(&m, &g, &p, &data, 1000, 1024 * 1024).unwrap();
+        // free = 2 MiB - 1 MiB slack = 1 MiB; share = 1 MiB/17 ≈ 61 KiB
+        // -> ~61 steps per cycle.
+        assert!(plan.steps_per_cycle < 70, "{}", plan.steps_per_cycle);
+        assert!(plan.cycles.len() > 10);
+        let total: u64 = plan.cycles.iter().sum();
+        assert_eq!(total, 1000);
+        // Final (leftover) cycle is the remainder.
+        assert!(*plan.cycles.last().unwrap() <= plan.steps_per_cycle);
+    }
+
+    #[test]
+    fn non_recording_graph_single_cycle() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        g.add_vertex(TestVertex::arc("plain"));
+        let p = placer::place(&m, &g).unwrap();
+        let plan =
+            plan_run_cycles(&m, &g, &p, &BTreeMap::new(), 500, 1024).unwrap();
+        assert_eq!(plan.cycles, vec![500]);
+        assert!(plan.recording_bytes.is_empty());
+    }
+
+    #[test]
+    fn min_reservation_enforced() {
+        let mut m = MachineBuilder::spinn3().build();
+        for c in m.chip_coords().collect::<Vec<_>>() {
+            m.chip_mut(c).unwrap().sdram.size = 1024 * 1024;
+            m.chip_mut(c).unwrap().sdram.system_reserved = 0;
+        }
+        let mut g = MachineGraph::new();
+        g.add_vertex(Recorder::arc("big", 10 * 1024 * 1024)); // absurd per-step
+        let p = placer::place(&m, &g).unwrap();
+        assert!(plan_run_cycles(&m, &g, &p, &BTreeMap::new(), 10, 0).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Tool configuration (§6.1: script-level vs user-level options).
+
+use std::path::PathBuf;
+
+use crate::machine::{Machine, MachineBuilder};
+use crate::mapping::MappingConfig;
+use crate::simulator::SimConfig;
+
+/// Which machine to "discover" (§6.3.1). With no hardware, every spec
+/// boots a simulated machine of the corresponding geometry.
+#[derive(Debug, Clone)]
+pub enum MachineSpec {
+    /// A 4-chip SpiNN-3 board.
+    Spinn3,
+    /// A 48-chip SpiNN-5 board.
+    Spinn5,
+    /// `n` SpiNN-5 boards (rounded up to whole triads above 1).
+    Boards(u32),
+    /// A full rectangular grid (testing).
+    Grid { width: u32, height: u32, wrap: bool },
+}
+
+impl MachineSpec {
+    pub fn build(&self) -> MachineBuilder {
+        match self {
+            MachineSpec::Spinn3 => MachineBuilder::spinn3(),
+            MachineSpec::Spinn5 => MachineBuilder::spinn5(),
+            MachineSpec::Boards(n) => MachineBuilder::boards(*n),
+            MachineSpec::Grid { width, height, wrap } => {
+                MachineBuilder::grid(*width, *height, *wrap)
+            }
+        }
+    }
+
+    /// A template machine for resource estimation before discovery.
+    pub fn template(&self) -> Machine {
+        self.build().build()
+    }
+}
+
+/// How recorded data is pulled off the machine (§6.8, experiment E1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExtractionMethod {
+    /// SCAMP SDP request/response reads (Figure 11 middle).
+    Scamp,
+    /// The multicast streaming protocol (Figure 11 bottom).
+    FastMulticast,
+}
+
+/// Full tool configuration (§6.1).
+#[derive(Debug, Clone)]
+pub struct ToolsConfig {
+    pub machine: MachineSpec,
+    /// Simulation timestep in microseconds (script-level option).
+    pub timestep_us: u32,
+    pub mapping: MappingConfig,
+    pub sim: SimConfig,
+    /// Artifact directory for the PJRT runtime (None = no HLO binaries
+    /// needed, e.g. pure Conway-cell graphs).
+    pub artifacts_dir: Option<PathBuf>,
+    pub extraction: ExtractionMethod,
+    /// UDP port the fast-extraction gatherer sends to.
+    pub fast_port: u16,
+    /// Safety margin of SDRAM per chip left unallocated to recording.
+    pub recording_slack_bytes: u64,
+}
+
+impl ToolsConfig {
+    pub fn new(machine: MachineSpec) -> Self {
+        Self {
+            machine,
+            timestep_us: 1000,
+            mapping: MappingConfig::default(),
+            sim: SimConfig::default(),
+            artifacts_dir: None,
+            extraction: ExtractionMethod::Scamp,
+            fast_port: 17895,
+            recording_slack_bytes: 1024 * 1024,
+        }
+    }
+
+    /// A virtual SpiNN-5 machine of `n` boards.
+    pub fn virtual_spinn5(n_boards: u32) -> Self {
+        if n_boards <= 1 {
+            Self::new(MachineSpec::Spinn5)
+        } else {
+            Self::new(MachineSpec::Boards(n_boards))
+        }
+    }
+
+    pub fn with_artifacts(mut self) -> Self {
+        self.artifacts_dir = Some(crate::runtime::Runtime::default_dir());
+        self
+    }
+
+    pub fn with_extraction(mut self, method: ExtractionMethod) -> Self {
+        self.extraction = method;
+        self
+    }
+
+    pub fn with_timestep_us(mut self, us: u32) -> Self {
+        self.timestep_us = us;
+        self.sim.timestep_us = us;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_build_expected_sizes() {
+        assert_eq!(MachineSpec::Spinn3.template().n_chips(), 4);
+        assert_eq!(MachineSpec::Spinn5.template().n_chips(), 48);
+        assert_eq!(MachineSpec::Boards(3).template().n_chips(), 144);
+        assert_eq!(
+            MachineSpec::Grid { width: 4, height: 4, wrap: true }.template().n_chips(),
+            16
+        );
+    }
+
+    #[test]
+    fn timestep_propagates_to_sim() {
+        let c = ToolsConfig::new(MachineSpec::Spinn3).with_timestep_us(500);
+        assert_eq!(c.sim.timestep_us, 500);
+    }
+}

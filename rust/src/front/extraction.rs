@@ -1,0 +1,254 @@
+//! Host-side data extraction (§6.8, Figure 11): the slow SCAMP path and
+//! the fast multicast-stream path, behind one interface.
+//!
+//! The fast path installs system-level cores outside the user graph —
+//! one reader per used chip, one gatherer on the Ethernet chip — plus
+//! routing entries in a reserved key region, then drives transfers by
+//! SDP command + UDP reassembly with missing-sequence re-requests.
+
+use std::collections::BTreeMap;
+
+use crate::apps::speedup::{
+    self, DataSpeedUpGathererApp, DataSpeedUpReaderApp, GATHERER_BINARY, READER_BINARY,
+    READER_SDP_PORT,
+};
+use crate::machine::router::{Route, RoutingEntry};
+use crate::machine::{ChipCoord, CoreLocation};
+use crate::mapping::router::build_tree;
+use crate::simulator::{scamp, SimMachine};
+use crate::transport::{SdpHeader, SdpMessage};
+use crate::util::bytes::ByteWriter;
+
+/// Reserved top-of-keyspace region for extraction streams; user key
+/// allocation grows from 0, so collision means ~2^31 partitions exist.
+pub const STREAM_KEY_BASE: u32 = 0xFF00_0000;
+
+/// The installed fast path.
+pub struct FastPath {
+    /// chip -> (reader core, stream key base).
+    readers: BTreeMap<ChipCoord, (CoreLocation, u32)>,
+    gatherer_port: u16,
+}
+
+impl FastPath {
+    /// Install readers on `chips`, a gatherer on the Ethernet chip, and
+    /// the stream routing entries. `free_core` picks an unused core per
+    /// chip (the tools know placement occupancy); chips with no spare
+    /// core are skipped — reads from them fall back to the SCAMP path
+    /// (`has_reader` tells the caller which chips are covered).
+    pub fn install(
+        sim: &mut SimMachine,
+        chips: &[ChipCoord],
+        mut free_core: impl FnMut(ChipCoord) -> Option<u8>,
+        host_port: u16,
+        iptag: u8,
+    ) -> anyhow::Result<FastPath> {
+        let machine = sim.machine.clone();
+        let eth = machine
+            .ethernet_chips()
+            .next()
+            .map(|c| (c.x, c.y))
+            .ok_or_else(|| anyhow::anyhow!("machine has no ethernet chip"))?;
+
+        // Gatherer core on the Ethernet chip (required: without it there
+        // is no fast path at all).
+        let gatherer_core = CoreLocation::new(
+            eth.0,
+            eth.1,
+            free_core(eth).ok_or_else(|| {
+                anyhow::anyhow!("no free core on ethernet chip {eth:?} for the gatherer")
+            })?,
+        );
+        scamp::set_iptag(sim, eth, iptag, "host", host_port, true)?;
+        let mut gregion = BTreeMap::new();
+        let mut w = ByteWriter::new();
+        w.u32(iptag as u32);
+        gregion.insert(0u32, w.finish());
+        scamp::load_app_named(
+            sim,
+            gatherer_core,
+            GATHERER_BINARY,
+            Box::new(DataSpeedUpGathererApp::new()),
+            gregion,
+            BTreeMap::new(),
+        )?;
+
+        // One reader per chip + stream routing to the gatherer.
+        let mut readers = BTreeMap::new();
+        let mut extra_entries: BTreeMap<ChipCoord, Vec<RoutingEntry>> = BTreeMap::new();
+        for (i, chip) in chips.iter().enumerate() {
+            let Some(p) = free_core(*chip) else {
+                continue; // fully-packed chip: SCAMP fallback
+            };
+            let core = CoreLocation::new(chip.0, chip.1, p);
+            let key = STREAM_KEY_BASE + (i as u32) * 2;
+            let mut region = BTreeMap::new();
+            let mut w = ByteWriter::new();
+            w.u32(key);
+            region.insert(0u32, w.finish());
+            scamp::load_app_named(
+                sim,
+                core,
+                READER_BINARY,
+                Box::new(DataSpeedUpReaderApp::new()),
+                region,
+                BTreeMap::new(),
+            )?;
+            // Route {key, key|1} from this chip to the gatherer core.
+            let mut dests = BTreeMap::new();
+            dests.insert(eth, std::iter::once(gatherer_core.p).collect());
+            let tree = build_tree(&machine, *chip, &dests)?;
+            for (node_chip, node) in &tree.nodes {
+                let mut route = Route::EMPTY;
+                for d in &node.out_links {
+                    route.add_link(*d);
+                }
+                for p in &node.local_cores {
+                    route.add_processor(*p);
+                }
+                if route.is_empty() {
+                    continue;
+                }
+                extra_entries
+                    .entry(*node_chip)
+                    .or_default()
+                    .push(RoutingEntry::new(key, !1u32, route));
+            }
+            readers.insert(*chip, (core, key));
+        }
+        // Append the stream entries to the already-loaded tables.
+        for (chip, entries) in extra_entries {
+            let mut table = sim.chip(chip)?.table.clone();
+            for e in entries {
+                table.push(e);
+            }
+            scamp::load_routing_table(sim, chip, table)?;
+        }
+        Ok(FastPath { readers, gatherer_port: host_port })
+    }
+
+    /// Read `len` bytes from `addr` on `chip` through the stream
+    /// protocol, re-requesting missing frames up to 3 times.
+    pub fn read(
+        &self,
+        sim: &mut SimMachine,
+        chip: ChipCoord,
+        addr: u32,
+        len: usize,
+    ) -> anyhow::Result<Vec<u8>> {
+        let (reader, _key) = self
+            .readers
+            .get(&chip)
+            .ok_or_else(|| anyhow::anyhow!("no fast-path reader on {chip:?}"))?;
+        let header = SdpHeader::to_core(*reader, READER_SDP_PORT);
+        sim.host_send_sdp(SdpMessage::new(
+            header,
+            speedup::encode_read_command(addr, len as u32),
+        ))?;
+        sim.run_until_idle()?;
+        let mut frames = sim.take_host_udp(self.gatherer_port);
+        for _attempt in 0..3 {
+            let (data, missing) = speedup::reassemble(&frames, len);
+            if missing.is_empty() {
+                return Ok(data);
+            }
+            // "The missing sequences are then requested again" (§6.8),
+            // batched to fit the SDP payload limit.
+            for chunk in missing.chunks(60) {
+                sim.host_send_sdp(SdpMessage::new(
+                    header,
+                    speedup::encode_rerequest(addr, len as u32, chunk),
+                ))?;
+                sim.run_until_idle()?;
+                frames.extend(sim.take_host_udp(self.gatherer_port));
+            }
+        }
+        let (data, missing) = speedup::reassemble(&frames, len);
+        anyhow::ensure!(
+            missing.is_empty(),
+            "fast read from {chip:?} still missing {} frames after retries",
+            missing.len()
+        );
+        Ok(data)
+    }
+
+    pub fn has_reader(&self, chip: ChipCoord) -> bool {
+        self.readers.contains_key(&chip)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineBuilder;
+    use crate::simulator::SimConfig;
+
+    fn free_core_picker() -> impl FnMut(ChipCoord) -> Option<u8> {
+        let mut used: BTreeMap<ChipCoord, u8> = BTreeMap::new();
+        move |chip| {
+            let next = used.entry(chip).or_insert(17);
+            let c = *next;
+            *next -= 1;
+            Some(c)
+        }
+    }
+
+    #[test]
+    fn fast_read_round_trips_data() {
+        let m = MachineBuilder::spinn5().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        // Data on a far, non-ethernet chip.
+        let chip = (7, 7);
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+        scamp::write_sdram(&mut sim, chip, addr, &data).unwrap();
+        let fp = FastPath::install(&mut sim, &[chip], free_core_picker(), 17895, 7).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        let got = fp.read(&mut sim, chip, addr, data.len()).unwrap();
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn fast_path_beats_scamp_from_any_chip() {
+        // Experiment E1's claim, as a test: fast reads are faster than
+        // SCAMP reads, and chip distance does not matter for fast reads.
+        let m = MachineBuilder::spinn5().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let len = 64 * 1024;
+        let far = (7, 7);
+        let near = (0, 0);
+        let a_far = scamp::alloc_sdram(&mut sim, far, len as u32).unwrap();
+        let a_near = scamp::alloc_sdram(&mut sim, near, len as u32).unwrap();
+        let fp =
+            FastPath::install(&mut sim, &[far, near], free_core_picker(), 17895, 7).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+
+        let t0 = sim.now_ns();
+        scamp::read_sdram(&mut sim, far, a_far, len).unwrap();
+        let scamp_far = sim.now_ns() - t0;
+
+        let t1 = sim.now_ns();
+        fp.read(&mut sim, far, a_far, len).unwrap();
+        let fast_far = sim.now_ns() - t1;
+
+        let t2 = sim.now_ns();
+        fp.read(&mut sim, near, a_near, len).unwrap();
+        let fast_near = sim.now_ns() - t2;
+
+        assert!(
+            fast_far < scamp_far / 10,
+            "fast {fast_far} ns vs scamp {scamp_far} ns"
+        );
+        // "no penalty for reading from a non-Ethernet chip"
+        let ratio = fast_far as f64 / fast_near as f64;
+        assert!((0.8..1.2).contains(&ratio), "far/near = {ratio}");
+    }
+
+    #[test]
+    fn missing_reader_errors() {
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let fp = FastPath::install(&mut sim, &[(0, 0)], free_core_picker(), 17895, 7).unwrap();
+        assert!(fp.read(&mut sim, (1, 1), 0x6000_0000, 4).is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Host-side live interaction (§6.9): an event listener decoding the
+//! Live Packet Gatherer's EIEIO stream using the mapping database, and
+//! an injector feeding the Reverse IP Tag Multicast Source.
+
+use crate::machine::ChipCoord;
+use crate::mapping::database::MappingDatabase;
+use crate::simulator::SimMachine;
+use crate::transport::{EieioMessage, EieioType};
+
+/// Decodes LPG output into (vertex label, partition, atom) events.
+pub struct LiveEventListener {
+    port: u16,
+    db: MappingDatabase,
+}
+
+impl LiveEventListener {
+    /// Built once the mapping database is ready (the Figure-8
+    /// notification handshake).
+    pub fn new(port: u16, db: MappingDatabase) -> Self {
+        Self { port, db }
+    }
+
+    /// Drain pending events from the host inbox.
+    pub fn poll(&self, sim: &mut SimMachine) -> anyhow::Result<Vec<LiveEvent>> {
+        let mut out = Vec::new();
+        for frame in sim.take_host_udp(self.port) {
+            let msg = EieioMessage::decode(&frame)?;
+            for (key, payload) in msg.events {
+                match self.db.source_of_key(key) {
+                    Some((vertex, partition, atom)) => out.push(LiveEvent {
+                        vertex: vertex.to_string(),
+                        partition: partition.to_string(),
+                        atom,
+                        payload,
+                    }),
+                    None => out.push(LiveEvent {
+                        vertex: String::new(),
+                        partition: String::new(),
+                        atom: key,
+                        payload,
+                    }),
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One decoded live event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LiveEvent {
+    pub vertex: String,
+    pub partition: String,
+    pub atom: u32,
+    pub payload: Option<u32>,
+}
+
+/// Sends events into the machine through a Reverse IP Tag Multicast
+/// Source's UDP port.
+pub struct LiveInjector {
+    board: ChipCoord,
+    port: u16,
+}
+
+impl LiveInjector {
+    pub fn new(board: ChipCoord, port: u16) -> Self {
+        Self { board, port }
+    }
+
+    /// Inject events by id (the RIPTMS adds its key base).
+    pub fn send(&self, sim: &mut SimMachine, event_ids: &[u32]) -> anyhow::Result<()> {
+        for batch in EieioMessage::batched(
+            EieioType::Key32,
+            &event_ids.iter().map(|e| (*e, None)).collect::<Vec<_>>(),
+        ) {
+            sim.host_send_udp(self.board, self.port, batch.encode())?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,20 @@
+//! The SpiNNTools front end: the user-facing flow of Figure 8.
+//!
+//! [`SpiNNTools`] ties everything together: setup → graph creation →
+//! machine discovery → mapping (run on the Figure-10 algorithm engine)
+//! → data generation → loading → running in Figure-9 buffer cycles →
+//! extraction of results and provenance → resume/reset → close.
+
+mod buffer;
+mod config;
+mod extraction;
+mod live;
+mod provenance;
+mod tools;
+
+pub use buffer::{plan_run_cycles, RunCyclePlan};
+pub use config::{ExtractionMethod, MachineSpec, ToolsConfig};
+pub use extraction::FastPath;
+pub use live::{LiveEventListener, LiveInjector};
+pub use provenance::{ProvenanceReport, VertexProvenance};
+pub use tools::SpiNNTools;

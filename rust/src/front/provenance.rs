@@ -1,0 +1,130 @@
+//! Provenance extraction and anomaly analysis (§6.3.5).
+
+use std::collections::BTreeMap;
+
+use crate::machine::{ChipCoord, CoreLocation};
+use crate::simulator::{scamp, CoreState, RouterStats, SimMachine};
+
+/// One core's provenance.
+#[derive(Debug, Clone)]
+pub struct VertexProvenance {
+    pub label: String,
+    pub placement: CoreLocation,
+    pub state: CoreState,
+    pub counters: BTreeMap<String, u64>,
+}
+
+/// The whole-run provenance report.
+#[derive(Debug, Clone, Default)]
+pub struct ProvenanceReport {
+    pub vertices: Vec<VertexProvenance>,
+    pub routers: BTreeMap<ChipCoord, RouterStats>,
+    /// Human-readable anomalies ("error/warning lines", §6.3.5).
+    pub anomalies: Vec<String>,
+}
+
+impl ProvenanceReport {
+    /// Collect provenance for the given placements and analyse it.
+    pub fn collect(
+        sim: &SimMachine,
+        placements: &[(String, CoreLocation)],
+    ) -> ProvenanceReport {
+        let mut report = ProvenanceReport::default();
+        for (label, loc) in placements {
+            let state = scamp::core_state(sim, *loc).unwrap_or(CoreState::Idle);
+            let counters = scamp::provenance(sim, *loc).unwrap_or_default();
+            if state == CoreState::RunTimeError {
+                report
+                    .anomalies
+                    .push(format!("core {loc} ({label}) hit a runtime error"));
+            }
+            for (k, v) in &counters {
+                if k.starts_with("rte:") {
+                    report.anomalies.push(format!("{label}: {k}"));
+                }
+                if k == "recording_overflow" {
+                    report
+                        .anomalies
+                        .push(format!("{label}: lost recordings x{v} (buffer full)"));
+                }
+                if k == "spikes_unmatched" {
+                    report
+                        .anomalies
+                        .push(format!("{label}: {v} packets matched no synapse block"));
+                }
+                if k == "missed_neighbour_states" {
+                    report
+                        .anomalies
+                        .push(format!("{label}: {v} phases saw missing neighbour states"));
+                }
+            }
+            report.vertices.push(VertexProvenance {
+                label: label.clone(),
+                placement: *loc,
+                state,
+                counters,
+            });
+        }
+        for chip in sim.machine.chip_coords().collect::<Vec<_>>() {
+            if let Some(stats) = sim.router_stats(chip) {
+                if stats.mc_dropped > 0 {
+                    report.anomalies.push(format!(
+                        "router {chip:?}: {} dropped packets ({} unrecoverable)",
+                        stats.mc_dropped, stats.mc_lost_forever
+                    ));
+                }
+                report.routers.insert(chip, stats);
+            }
+        }
+        report
+    }
+
+    pub fn total_dropped(&self) -> u64 {
+        self.routers.values().map(|r| r.mc_dropped).sum()
+    }
+
+    pub fn total_reinjected(&self) -> u64 {
+        self.routers.values().map(|r| r.mc_reinjected).sum()
+    }
+
+    /// Sum one named counter over all vertices.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.vertices
+            .iter()
+            .filter_map(|v| v.counters.get(name))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineBuilder;
+    use crate::simulator::{CoreApp, CoreCtx, SimConfig};
+
+    struct Noisy;
+    impl CoreApp for Noisy {
+        fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+            ctx.count("recording_overflow", 1);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn anomalies_surface_overflows() {
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let loc = CoreLocation::new(0, 0, 1);
+        scamp::load_app(&mut sim, loc, Box::new(Noisy), Default::default(), Default::default())
+            .unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(3);
+        sim.run_until_idle().unwrap();
+        let report = ProvenanceReport::collect(&sim, &[("noisy".into(), loc)]);
+        assert!(report
+            .anomalies
+            .iter()
+            .any(|a| a.contains("lost recordings")));
+        assert_eq!(report.counter_total("recording_overflow"), 3);
+    }
+}

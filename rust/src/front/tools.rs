@@ -1,0 +1,606 @@
+//! The [`SpiNNTools`] façade: the full Figure-8 execution flow.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::apps::AppRegistry;
+use crate::graph::{
+    AppVertexId, ApplicationGraph, ApplicationVertexImpl, DataGenContext, MachineGraph,
+    MachineVertexImpl, Slice, VertexId,
+};
+use crate::machine::{ChipCoord, CoreLocation, Machine};
+use crate::mapping::database::{MappingDatabase, NotificationProtocol};
+use crate::mapping::{map_graph_via_engine, GraphMapping, Mapping};
+use crate::runtime::Runtime;
+use crate::simulator::{scamp, CoreState, SimMachine};
+
+use super::buffer::{plan_run_cycles, RunCyclePlan};
+use super::config::{ExtractionMethod, ToolsConfig};
+use super::extraction::FastPath;
+use super::provenance::ProvenanceReport;
+
+/// Everything that exists once a graph has been mapped and loaded.
+struct RunState {
+    sim: SimMachine,
+    run_graph: MachineGraph,
+    graph_mapping: Option<GraphMapping>,
+    mapping: Mapping,
+    plan: RunCyclePlan,
+    fast_path: Option<FastPath>,
+    /// Host-side store of extracted recordings: (vertex, channel) -> data.
+    recordings: BTreeMap<(VertexId, u32), Vec<u8>>,
+    labels: Vec<(String, CoreLocation)>,
+    ticks_done: u64,
+    database: MappingDatabase,
+}
+
+/// The SpiNNTools engine (Figure 8): setup → graphs → run → results.
+pub struct SpiNNTools {
+    config: ToolsConfig,
+    machine_graph: MachineGraph,
+    app_graph: ApplicationGraph,
+    runtime: Option<Rc<Runtime>>,
+    registry: AppRegistry,
+    state: Option<RunState>,
+    pub notifications: NotificationProtocol,
+}
+
+impl SpiNNTools {
+    /// Setup (§6.1). Opens the PJRT runtime if the config names an
+    /// artifact directory.
+    pub fn new(config: ToolsConfig) -> anyhow::Result<Self> {
+        let runtime = match &config.artifacts_dir {
+            Some(dir) => Some(Rc::new(Runtime::open(dir)?)),
+            None => None,
+        };
+        let registry = AppRegistry::standard(runtime.clone());
+        Ok(Self {
+            config,
+            machine_graph: MachineGraph::new(),
+            app_graph: ApplicationGraph::new(),
+            runtime,
+            registry,
+            state: None,
+            notifications: NotificationProtocol::default(),
+        })
+    }
+
+    // -- graph creation (§6.2) ---------------------------------------------
+
+    pub fn add_machine_vertex(
+        &mut self,
+        v: std::sync::Arc<dyn MachineVertexImpl>,
+    ) -> anyhow::Result<VertexId> {
+        self.ensure_not_running("add vertices")?;
+        Ok(self.machine_graph.add_vertex(v))
+    }
+
+    pub fn add_machine_edge(
+        &mut self,
+        pre: VertexId,
+        post: VertexId,
+        partition: &str,
+    ) -> anyhow::Result<()> {
+        self.ensure_not_running("add edges")?;
+        self.machine_graph.add_edge(pre, post, partition);
+        Ok(())
+    }
+
+    pub fn add_application_vertex(
+        &mut self,
+        v: std::sync::Arc<dyn ApplicationVertexImpl>,
+    ) -> anyhow::Result<AppVertexId> {
+        self.ensure_not_running("add vertices")?;
+        Ok(self.app_graph.add_vertex(v))
+    }
+
+    pub fn add_application_edge(
+        &mut self,
+        pre: AppVertexId,
+        post: AppVertexId,
+        partition: &str,
+        payload: Option<std::sync::Arc<dyn std::any::Any + Send + Sync>>,
+    ) -> anyhow::Result<()> {
+        self.ensure_not_running("add edges")?;
+        self.app_graph.add_edge(pre, post, partition, payload);
+        Ok(())
+    }
+
+    /// Register a custom binary (users extend the vertex classes, §6.2).
+    pub fn register_binary(
+        &mut self,
+        name: &str,
+        factory: impl Fn() -> Box<dyn crate::simulator::CoreApp> + 'static,
+    ) {
+        self.registry.register(name, factory);
+    }
+
+    fn ensure_not_running(&self, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.state.is_none(),
+            "cannot {what} after a run has started; reset() first (graph \
+             changes require a remap, §6.5)"
+        );
+        Ok(())
+    }
+
+    // -- graph execution (§6.3) --------------------------------------------
+
+    /// Run for a simulated duration in milliseconds.
+    pub fn run_ms(&mut self, ms: u64) -> anyhow::Result<()> {
+        let ticks = ms * 1000 / self.config.timestep_us as u64;
+        self.run_ticks(ticks.max(1))
+    }
+
+    /// Run for a number of timesteps. The first call performs machine
+    /// discovery, mapping, data generation and loading; later calls
+    /// resume (§6.5) in the established Figure-9 cycle unit.
+    pub fn run_ticks(&mut self, ticks: u64) -> anyhow::Result<()> {
+        if self.state.is_none() {
+            self.first_run(ticks)
+        } else {
+            self.resume_run(ticks)
+        }
+    }
+
+    fn first_run(&mut self, ticks: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.machine_graph.n_vertices() == 0 || self.app_graph.n_vertices() == 0,
+            "it is an error to add vertices to both the application and \
+             machine graphs (§6.2)"
+        );
+
+        // ---- machine discovery (§6.3.1) --------------------------------
+        let template = self.config.machine.template();
+
+        // Application graphs are first converted to a machine graph to
+        // size the machine (§6.3.1) — the same split is then used on.
+        let (run_graph, graph_mapping) = if self.app_graph.n_vertices() > 0 {
+            let (g, m) = crate::mapping::splitter::split_graph(&self.app_graph, &template)?;
+            (g, Some(m))
+        } else {
+            (self.machine_graph.clone(), None)
+        };
+
+        // Virtual chips for device vertices (§5.1/§7.2).
+        let mut builder = self.config.machine.build();
+        let mut next_virtual = (template.width + 1, template.height + 1);
+        for (_, vertex) in run_graph.vertices() {
+            if let Some(vl) = vertex.virtual_link() {
+                builder = builder.virtual_chip(next_virtual, vl.attached_to, vl.direction);
+                next_virtual = (next_virtual.0 + 1, next_virtual.1 + 1);
+            }
+        }
+        let machine = builder.build();
+        anyhow::ensure!(
+            run_graph.n_vertices() <= machine.n_application_cores(),
+            "graph needs {} cores; machine has {}",
+            run_graph.n_vertices(),
+            machine.n_application_cores()
+        );
+        let mut sim = SimMachine::boot(machine.clone(), self.config.sim.clone());
+
+        // ---- mapping (§6.3.2), on the Figure-10 engine ------------------
+        let (mapping, _workflow) =
+            map_graph_via_engine(&machine, &run_graph, &self.config.mapping)?;
+
+        // ---- data generation (§6.3.3) -----------------------------------
+        let mut region_data: BTreeMap<VertexId, BTreeMap<u32, Vec<u8>>> = BTreeMap::new();
+        let mut data_bytes: BTreeMap<VertexId, u64> = BTreeMap::new();
+        for (vid, vertex) in run_graph.vertices() {
+            if vertex.virtual_link().is_some() {
+                continue;
+            }
+            let placement = mapping
+                .placement(vid)
+                .ok_or_else(|| anyhow::anyhow!("vertex {} unplaced", vertex.label()))?;
+            let ctx = DataGenContext {
+                vertex: vid,
+                placement,
+                timestep_us: self.config.timestep_us,
+                graph: &run_graph,
+                placements: mapping.placements.as_map(),
+                keys: &mapping.keys,
+                iptags: &mapping.iptags,
+                reverse_iptags: &mapping.reverse_iptags,
+                app_graph: graph_mapping.as_ref().map(|_| &self.app_graph),
+                graph_mapping: graph_mapping.as_ref(),
+            };
+            let regions = vertex.generate_data(&ctx);
+            let total: u64 = regions.iter().map(|r| r.data.len() as u64).sum();
+            data_bytes.insert(vid, total);
+            region_data.insert(vid, regions.into_iter().map(|r| (r.id, r.data)).collect());
+        }
+
+        // ---- Figure-9 run-cycle planning --------------------------------
+        let plan = plan_run_cycles(
+            &machine,
+            &run_graph,
+            &mapping.placements,
+            &data_bytes,
+            ticks,
+            self.config.recording_slack_bytes,
+        )?;
+
+        // ---- loading (§6.3.4) -------------------------------------------
+        for (chip, table) in &mapping.tables {
+            scamp::load_routing_table(&mut sim, *chip, table.clone())?;
+        }
+        for tag in mapping.iptags.values() {
+            scamp::set_iptag(&mut sim, tag.board, tag.tag, &tag.host, tag.port, tag.strip_sdp)?;
+        }
+        for rtag in mapping.reverse_iptags.values() {
+            scamp::set_reverse_iptag(&mut sim, rtag.board, rtag.port, rtag.destination)?;
+        }
+        let mut labels = Vec::new();
+        for (vid, vertex) in run_graph.vertices() {
+            if vertex.virtual_link().is_some() {
+                continue;
+            }
+            let loc = mapping.placement(vid).unwrap();
+            labels.push((vertex.label(), loc));
+            let app = self.registry.create(&vertex.binary_name())?;
+            let mut recording_sizes = BTreeMap::new();
+            if let Some(bytes) = plan.recording_bytes.get(&vid) {
+                recording_sizes.insert(0u32, *bytes as u32);
+            }
+            scamp::load_app_named(
+                &mut sim,
+                loc,
+                &vertex.binary_name(),
+                app,
+                region_data.remove(&vid).unwrap_or_default(),
+                recording_sizes,
+            )?;
+        }
+
+        // Fast extraction cores (outside the user graph).
+        let fast_path = if self.config.extraction == ExtractionMethod::FastMulticast {
+            let chips: Vec<ChipCoord> = mapping.placements.used_chips().into_iter().collect();
+            let placements = mapping.placements.clone();
+            let machine_for_picker = machine.clone();
+            let mut extra: BTreeMap<ChipCoord, std::collections::BTreeSet<u8>> = BTreeMap::new();
+            let picker = move |chip: ChipCoord| -> Option<u8> {
+                let used = placements.cores_used_on(chip);
+                let taken = extra.entry(chip).or_default();
+                let chip_info = machine_for_picker.chip(chip)?;
+                for p in chip_info.application_processors().map(|p| p.id) {
+                    if !used.contains(&p) && !taken.contains(&p) {
+                        taken.insert(p);
+                        return Some(p);
+                    }
+                }
+                None // fully packed: this chip falls back to SCAMP reads
+            };
+            // If even the gatherer can't be placed (Ethernet chip fully
+            // packed), fall back to SCAMP extraction entirely.
+            FastPath::install(&mut sim, &chips, picker, self.config.fast_port, 8).ok()
+        } else {
+            None
+        };
+
+        // ---- database + notifications (Figure 8) ------------------------
+        let database = MappingDatabase::build(&run_graph, &mapping.placements, &mapping.keys);
+        self.notifications.database_ready(&database);
+
+        // ---- running (§6.3.5) -------------------------------------------
+        scamp::signal_start(&mut sim)?;
+        let mut state = RunState {
+            sim,
+            run_graph,
+            graph_mapping,
+            mapping,
+            plan,
+            fast_path,
+            recordings: BTreeMap::new(),
+            labels,
+            ticks_done: 0,
+            database,
+        };
+        let cycles = state.plan.cycles.clone();
+        Self::run_cycles(&mut state, &cycles, self.config.extraction)?;
+        self.state = Some(state);
+        self.check_completion()
+    }
+
+    fn resume_run(&mut self, ticks: u64) -> anyhow::Result<()> {
+        let extraction = self.config.extraction;
+        let state = self.state.as_mut().unwrap();
+        // "The minimum time calculated previously is respected" (§6.5).
+        let unit = state.plan.steps_per_cycle;
+        let mut cycles = Vec::new();
+        let mut remaining = ticks;
+        while remaining > 0 {
+            let c = unit.min(remaining);
+            cycles.push(c);
+            remaining -= c;
+        }
+        scamp::signal_resume(&mut state.sim)?;
+        Self::run_cycles(state, &cycles, extraction)?;
+        self.check_completion()
+    }
+
+    /// The Figure-9 loop: run a cycle, drain recordings, flush, resume.
+    fn run_cycles(
+        state: &mut RunState,
+        cycles: &[u64],
+        extraction: ExtractionMethod,
+    ) -> anyhow::Result<()> {
+        for (i, cycle) in cycles.iter().enumerate() {
+            if i > 0 {
+                scamp::signal_resume(&mut state.sim)?;
+            }
+            state.sim.start_run_cycle(*cycle);
+            state.sim.run_until_idle()?;
+            state.ticks_done += cycle;
+            Self::extract_recordings(state, extraction)?;
+        }
+        Ok(())
+    }
+
+    fn extract_recordings(
+        state: &mut RunState,
+        extraction: ExtractionMethod,
+    ) -> anyhow::Result<()> {
+        let vids: Vec<VertexId> = state.plan.recording_bytes.keys().copied().collect();
+        for vid in vids {
+            let loc = state.mapping.placement(vid).unwrap();
+            let (addr, written, _) = scamp::recording_info(&state.sim, loc, 0)?;
+            if written == 0 {
+                continue;
+            }
+            let data = match (&state.fast_path, extraction) {
+                (Some(fp), ExtractionMethod::FastMulticast) if fp.has_reader(loc.chip()) => {
+                    fp.read(&mut state.sim, loc.chip(), addr, written)?
+                }
+                _ => scamp::read_sdram(&mut state.sim, loc.chip(), addr, written)?,
+            };
+            state
+                .recordings
+                .entry((vid, 0))
+                .or_default()
+                .extend_from_slice(&data);
+            scamp::clear_recording(&mut state.sim, loc, 0)?;
+        }
+        Ok(())
+    }
+
+    /// §6.3.5 failure detection: error if any core ended in RTE.
+    fn check_completion(&mut self) -> anyhow::Result<()> {
+        let state = self.state.as_ref().unwrap();
+        let bad: Vec<String> = scamp::core_states(&state.sim)
+            .into_iter()
+            .filter(|(_, s)| *s == CoreState::RunTimeError)
+            .map(|(l, _)| l.to_string())
+            .collect();
+        if !bad.is_empty() {
+            let report = self.provenance();
+            anyhow::bail!(
+                "cores in error state: {bad:?}; anomalies: {:?}",
+                report.anomalies
+            );
+        }
+        Ok(())
+    }
+
+    // -- results (§6.4) ------------------------------------------------------
+
+    /// Recorded bytes of one machine vertex (channel 0).
+    pub fn recording(&self, v: VertexId) -> &[u8] {
+        self.state
+            .as_ref()
+            .and_then(|s| s.recordings.get(&(v, 0)))
+            .map(|d| d.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Recordings of every machine vertex an application vertex was
+    /// split into, with their atom slices.
+    pub fn app_recordings(&self, v: AppVertexId) -> Vec<(Slice, &[u8])> {
+        let Some(state) = &self.state else { return Vec::new() };
+        let Some(gm) = &state.graph_mapping else { return Vec::new() };
+        let Some(mvs) = gm.machine_vertices_of.get(&v) else {
+            return Vec::new();
+        };
+        mvs.iter()
+            .map(|(mv, slice)| {
+                (
+                    *slice,
+                    state
+                        .recordings
+                        .get(&(*mv, 0))
+                        .map(|d| d.as_slice())
+                        .unwrap_or(&[]),
+                )
+            })
+            .collect()
+    }
+
+    /// The machine vertices (and slices) of an application vertex.
+    pub fn machine_vertices_of(&self, v: AppVertexId) -> Vec<(VertexId, Slice)> {
+        self.state
+            .as_ref()
+            .and_then(|s| s.graph_mapping.as_ref())
+            .and_then(|gm| gm.machine_vertices_of.get(&v).cloned())
+            .unwrap_or_default()
+    }
+
+    pub fn provenance(&self) -> ProvenanceReport {
+        match &self.state {
+            Some(state) => ProvenanceReport::collect(&state.sim, &state.labels),
+            None => ProvenanceReport::default(),
+        }
+    }
+
+    pub fn database(&self) -> Option<&MappingDatabase> {
+        self.state.as_ref().map(|s| &s.database)
+    }
+
+    pub fn mapping(&self) -> Option<&Mapping> {
+        self.state.as_ref().map(|s| &s.mapping)
+    }
+
+    pub fn machine(&self) -> Option<&Machine> {
+        self.state.as_ref().map(|s| &s.sim.machine)
+    }
+
+    /// Direct access to the simulated machine (live I/O, tests).
+    pub fn sim_mut(&mut self) -> Option<&mut SimMachine> {
+        self.state.as_mut().map(|s| &mut s.sim)
+    }
+
+    pub fn run_graph(&self) -> Option<&MachineGraph> {
+        self.state.as_ref().map(|s| &s.run_graph)
+    }
+
+    pub fn ticks_done(&self) -> u64 {
+        self.state.as_ref().map(|s| s.ticks_done).unwrap_or(0)
+    }
+
+    pub fn runtime(&self) -> Option<&Rc<Runtime>> {
+        self.runtime.as_ref()
+    }
+
+    // -- closing (§6.6) ------------------------------------------------------
+
+    /// Stop the cores and release the machine; recordings survive until
+    /// `reset`, mirroring §6.6's "recorded data will no longer be
+    /// available" on the machine itself.
+    pub fn stop(&mut self) -> anyhow::Result<()> {
+        if let Some(state) = &mut self.state {
+            scamp::signal_stop(&mut state.sim)?;
+        }
+        Ok(())
+    }
+
+    /// Forget the run entirely (graphs survive; the next run remaps).
+    pub fn reset(&mut self) {
+        self.state = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+    use crate::front::config::MachineSpec;
+
+    /// Build an r x c Conway machine graph.
+    fn conway_graph(tools: &mut SpiNNTools, rows: u32, cols: u32, live: &[(u32, u32)]) -> Vec<VertexId> {
+        let mut ids = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let alive = live.contains(&(r, c));
+                ids.push(
+                    tools
+                        .add_machine_vertex(ConwayCellVertex::arc(r, c, alive))
+                        .unwrap(),
+                );
+            }
+        }
+        let idx = |r: i64, c: i64| -> Option<usize> {
+            (r >= 0 && c >= 0 && r < rows as i64 && c < cols as i64)
+                .then_some((r * cols as i64 + c) as usize)
+        };
+        for r in 0..rows as i64 {
+            for c in 0..cols as i64 {
+                for dr in -1..=1 {
+                    for dc in -1..=1 {
+                        if (dr, dc) == (0, 0) {
+                            continue;
+                        }
+                        if let Some(n) = idx(r + dr, c + dc) {
+                            tools
+                                .add_machine_edge(
+                                    ids[idx(r, c).unwrap()],
+                                    ids[n],
+                                    STATE_PARTITION,
+                                )
+                                .unwrap();
+                        }
+                    }
+                }
+            }
+        }
+        ids
+    }
+
+    #[test]
+    fn full_flow_conway_blinker() {
+        // E3: the complete Figure-8 flow on a real (small) workload.
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let ids = conway_graph(&mut tools, 5, 5, &[(2, 1), (2, 2), (2, 3)]);
+        tools.run_ticks(4).unwrap();
+        // Blinker oscillates with period 2: vertical at odd steps.
+        let state = |r: u32, c: u32| tools.recording(ids[(r * 5 + c) as usize]);
+        assert_eq!(state(2, 2), &[1, 1, 1, 1], "centre always alive");
+        assert_eq!(state(2, 1), &[1, 0, 1, 0], "wing flips");
+        assert_eq!(state(1, 2), &[0, 1, 0, 1], "vertical wing appears");
+        assert_eq!(state(0, 0), &[0, 0, 0, 0], "corner stays dead");
+        // no dropped packets on this tiny graph
+        assert_eq!(tools.provenance().total_dropped(), 0);
+    }
+
+    #[test]
+    fn resume_continues_the_oscillation() {
+        // E3/§6.5: run, return control, resume without remapping.
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let ids = conway_graph(&mut tools, 5, 5, &[(2, 1), (2, 2), (2, 3)]);
+        tools.run_ticks(2).unwrap();
+        assert_eq!(tools.ticks_done(), 2);
+        tools.run_ticks(2).unwrap();
+        assert_eq!(tools.ticks_done(), 4);
+        let wing = tools.recording(ids[(2 * 5 + 1) as usize]);
+        assert_eq!(wing, &[1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn graph_changes_after_run_rejected() {
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        conway_graph(&mut tools, 3, 3, &[]);
+        tools.run_ticks(1).unwrap();
+        assert!(tools
+            .add_machine_vertex(ConwayCellVertex::arc(9, 9, false))
+            .is_err());
+        tools.reset();
+        assert!(tools
+            .add_machine_vertex(ConwayCellVertex::arc(9, 9, false))
+            .is_ok());
+    }
+
+    #[test]
+    fn database_contains_placements_and_keys() {
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        conway_graph(&mut tools, 3, 3, &[(1, 1)]);
+        tools.run_ticks(1).unwrap();
+        let db = tools.database().unwrap();
+        assert!(db.placement_of("cell_0_0").is_some());
+        assert!(db.key_of("cell_1_1", STATE_PARTITION).is_some());
+    }
+
+    #[test]
+    fn mixing_graphs_is_an_error() {
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        tools
+            .add_machine_vertex(ConwayCellVertex::arc(0, 0, true))
+            .unwrap();
+        tools
+            .add_application_vertex(crate::apps::poisson::PoissonSourceVertex::arc(
+                "p", 10, 5.0, 1, false,
+            ))
+            .unwrap();
+        assert!(tools.run_ticks(1).is_err());
+    }
+
+    #[test]
+    fn too_big_graph_rejected_at_discovery() {
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        for i in 0..100 {
+            tools
+                .add_machine_vertex(ConwayCellVertex::arc(i, 0, false))
+                .unwrap();
+        }
+        let err = tools.run_ticks(1).unwrap_err().to_string();
+        assert!(err.contains("cores"), "{err}");
+    }
+}

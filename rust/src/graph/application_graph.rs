@@ -1,0 +1,239 @@
+//! The application graph (Figure 6 c/d): vertices holding atoms, split
+//! into machine vertices by the graph-partitioning step of mapping.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+
+
+use super::vertex::ApplicationVertexImpl;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppVertexId(pub u32);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppEdgeId(pub u32);
+
+/// An application edge: communication between atom groups. `payload`
+/// carries application-specific connectivity (e.g. the synaptic
+/// connector of §7.2) that machine-vertex creation consumes.
+#[derive(Clone)]
+pub struct ApplicationEdge {
+    pub pre: AppVertexId,
+    pub post: AppVertexId,
+    pub payload: Option<Arc<dyn Any + Send + Sync>>,
+}
+
+/// All edges leaving one application vertex under one message type.
+#[derive(Debug, Clone)]
+pub struct AppOutgoingPartition {
+    pub pre: AppVertexId,
+    pub id: String,
+    pub edges: Vec<AppEdgeId>,
+}
+
+/// The application-level graph (§5.2). It is an error to mix application
+/// and machine graphs in one run (§6.2) — the front end enforces that.
+#[derive(Default, Clone)]
+pub struct ApplicationGraph {
+    vertices: Vec<Arc<dyn ApplicationVertexImpl>>,
+    edges: Vec<ApplicationEdge>,
+    partitions: BTreeMap<(AppVertexId, String), AppOutgoingPartition>,
+    edge_partition: Vec<String>,
+}
+
+impl ApplicationGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_vertex(&mut self, v: Arc<dyn ApplicationVertexImpl>) -> AppVertexId {
+        let id = AppVertexId(self.vertices.len() as u32);
+        self.vertices.push(v);
+        id
+    }
+
+    pub fn add_edge(
+        &mut self,
+        pre: AppVertexId,
+        post: AppVertexId,
+        partition: &str,
+        payload: Option<Arc<dyn Any + Send + Sync>>,
+    ) -> AppEdgeId {
+        assert!((pre.0 as usize) < self.vertices.len(), "bad pre vertex");
+        assert!((post.0 as usize) < self.vertices.len(), "bad post vertex");
+        let id = AppEdgeId(self.edges.len() as u32);
+        self.edges.push(ApplicationEdge { pre, post, payload });
+        self.edge_partition.push(partition.to_string());
+        self.partitions
+            .entry((pre, partition.to_string()))
+            .or_insert_with(|| AppOutgoingPartition {
+                pre,
+                id: partition.to_string(),
+                edges: Vec::new(),
+            })
+            .edges
+            .push(id);
+        id
+    }
+
+    pub fn vertex(&self, id: AppVertexId) -> &Arc<dyn ApplicationVertexImpl> {
+        &self.vertices[id.0 as usize]
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn vertices(&self) -> impl Iterator<Item = (AppVertexId, &Arc<dyn ApplicationVertexImpl>)> {
+        self.vertices
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (AppVertexId(i as u32), v))
+    }
+
+    pub fn edge(&self, id: AppEdgeId) -> &ApplicationEdge {
+        &self.edges[id.0 as usize]
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (AppEdgeId, &ApplicationEdge)> {
+        self.edges
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (AppEdgeId(i as u32), e))
+    }
+
+    pub fn partition_of_edge(&self, id: AppEdgeId) -> &str {
+        &self.edge_partition[id.0 as usize]
+    }
+
+    pub fn partitions(&self) -> impl Iterator<Item = &AppOutgoingPartition> {
+        self.partitions.values()
+    }
+
+    /// Total atoms across all vertices (used for machine sizing, §6.3.1).
+    pub fn total_atoms(&self) -> u64 {
+        self.vertices.iter().map(|v| v.n_atoms() as u64).sum()
+    }
+
+    pub fn incoming_edges(&self, v: AppVertexId) -> Vec<AppEdgeId> {
+        self.edges()
+            .filter(|(_, e)| e.post == v)
+            .map(|(id, _)| id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use std::any::Any;
+    use std::sync::Arc;
+
+    use crate::graph::resources::ResourceRequirements;
+    use crate::graph::vertex::{
+        ApplicationVertexImpl, DataGenContext, DataRegion, MachineVertexImpl, Slice,
+    };
+
+    /// An app vertex whose machine vertices are plain test vertices, with
+    /// per-atom SDRAM cost so splitting decisions are observable.
+    #[derive(Debug)]
+    pub struct TestAppVertex {
+        pub name: String,
+        pub atoms: u32,
+        pub max_per_core: u32,
+        pub sdram_per_atom: u64,
+    }
+
+    impl TestAppVertex {
+        pub fn arc(name: &str, atoms: u32, max_per_core: u32) -> Arc<dyn ApplicationVertexImpl> {
+            Arc::new(Self {
+                name: name.into(),
+                atoms,
+                max_per_core,
+                sdram_per_atom: 100,
+            })
+        }
+    }
+
+    #[derive(Debug)]
+    pub struct TestAppMachineVertex {
+        pub name: String,
+        pub slice: Slice,
+        pub sdram: u64,
+    }
+
+    impl MachineVertexImpl for TestAppMachineVertex {
+        fn label(&self) -> String {
+            format!("{}{}", self.name, self.slice)
+        }
+        fn resources(&self) -> ResourceRequirements {
+            ResourceRequirements::with_sdram(self.sdram)
+        }
+        fn binary_name(&self) -> String {
+            "test.aplx".into()
+        }
+        fn generate_data(&self, _ctx: &DataGenContext) -> Vec<DataRegion> {
+            vec![]
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    impl ApplicationVertexImpl for TestAppVertex {
+        fn label(&self) -> String {
+            self.name.clone()
+        }
+        fn n_atoms(&self) -> u32 {
+            self.atoms
+        }
+        fn max_atoms_per_core(&self) -> u32 {
+            self.max_per_core
+        }
+        fn resources_for(&self, slice: Slice) -> ResourceRequirements {
+            ResourceRequirements::with_sdram(self.sdram_per_atom * slice.n_atoms() as u64)
+        }
+        fn create_machine_vertex(&self, slice: Slice) -> Arc<dyn MachineVertexImpl> {
+            Arc::new(TestAppMachineVertex {
+                name: self.name.clone(),
+                slice,
+                sdram: self.sdram_per_atom * slice.n_atoms() as u64,
+            })
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::TestAppVertex;
+    use super::*;
+
+    #[test]
+    fn build_application_graph() {
+        let mut g = ApplicationGraph::new();
+        let a = g.add_vertex(TestAppVertex::arc("a", 100, 10));
+        let b = g.add_vertex(TestAppVertex::arc("b", 50, 25));
+        let e = g.add_edge(a, b, "spikes", None);
+        assert_eq!(g.n_vertices(), 2);
+        assert_eq!(g.total_atoms(), 150);
+        assert_eq!(g.partition_of_edge(e), "spikes");
+        assert_eq!(g.incoming_edges(b), vec![e]);
+    }
+
+    #[test]
+    fn payload_downcasts() {
+        let mut g = ApplicationGraph::new();
+        let a = g.add_vertex(TestAppVertex::arc("a", 1, 1));
+        let e = g.add_edge(a, a, "loop", Some(Arc::new(42u64)));
+        let payload = g.edge(e).payload.as_ref().unwrap();
+        assert_eq!(*payload.downcast_ref::<u64>().unwrap(), 42);
+    }
+}

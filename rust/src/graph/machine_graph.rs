@@ -1,0 +1,289 @@
+//! The machine graph: vertices that each fit one core, machine edges,
+//! and outgoing edge partitions (Figure 6 a/b).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+
+
+use super::vertex::MachineVertexImpl;
+
+/// Handle to a machine vertex within its graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VertexId(pub u32);
+
+/// Handle to a machine edge within its graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub u32);
+
+/// Communication from `pre` to `post` (§5.2: "an edge represents some
+/// communication that will take place from a source ... to a target").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachineEdge {
+    pub pre: VertexId,
+    pub post: VertexId,
+}
+
+/// All edges leaving one vertex under one message type / key-space
+/// (Figure 6 b). Each partition gets its own multicast key range.
+#[derive(Debug, Clone)]
+pub struct OutgoingEdgePartition {
+    pub pre: VertexId,
+    pub id: String,
+    pub edges: Vec<EdgeId>,
+}
+
+/// The default partition id used when callers don't need multiple
+/// message types from one vertex.
+pub const DEFAULT_PARTITION: &str = "default";
+
+/// A machine graph (vertices + edges + partitions). Deterministic
+/// iteration everywhere: mapping results must be reproducible.
+#[derive(Default, Clone)]
+pub struct MachineGraph {
+    vertices: Vec<Arc<dyn MachineVertexImpl>>,
+    edges: Vec<MachineEdge>,
+    /// (pre, partition id) -> partition, insertion-ordered by BTreeMap.
+    partitions: BTreeMap<(VertexId, String), OutgoingEdgePartition>,
+    /// edge -> partition id (reverse index).
+    edge_partition: Vec<String>,
+}
+
+impl MachineGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_vertex(&mut self, v: Arc<dyn MachineVertexImpl>) -> VertexId {
+        let id = VertexId(self.vertices.len() as u32);
+        self.vertices.push(v);
+        id
+    }
+
+    /// Add an edge in the given outgoing edge partition of `pre`.
+    pub fn add_edge(&mut self, pre: VertexId, post: VertexId, partition: &str) -> EdgeId {
+        assert!((pre.0 as usize) < self.vertices.len(), "bad pre vertex");
+        assert!((post.0 as usize) < self.vertices.len(), "bad post vertex");
+        let eid = EdgeId(self.edges.len() as u32);
+        self.edges.push(MachineEdge { pre, post });
+        self.edge_partition.push(partition.to_string());
+        self.partitions
+            .entry((pre, partition.to_string()))
+            .or_insert_with(|| OutgoingEdgePartition {
+                pre,
+                id: partition.to_string(),
+                edges: Vec::new(),
+            })
+            .edges
+            .push(eid);
+        eid
+    }
+
+    pub fn vertex(&self, id: VertexId) -> &Arc<dyn MachineVertexImpl> {
+        &self.vertices[id.0 as usize]
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn vertex_ids(&self) -> impl Iterator<Item = VertexId> {
+        (0..self.vertices.len() as u32).map(VertexId)
+    }
+
+    pub fn vertices(&self) -> impl Iterator<Item = (VertexId, &Arc<dyn MachineVertexImpl>)> {
+        self.vertices
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (VertexId(i as u32), v))
+    }
+
+    pub fn edge(&self, id: EdgeId) -> MachineEdge {
+        self.edges[id.0 as usize]
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (EdgeId, MachineEdge)> + '_ {
+        self.edges
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (EdgeId(i as u32), *e))
+    }
+
+    pub fn partition_of_edge(&self, id: EdgeId) -> String {
+        self.edge_partition[id.0 as usize].clone()
+    }
+
+    pub fn partitions(&self) -> impl Iterator<Item = &OutgoingEdgePartition> {
+        self.partitions.values()
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Partitions leaving one vertex (§5.2: "there can be more than one
+    /// outgoing edge partition for each source vertex").
+    pub fn partitions_of(&self, v: VertexId) -> impl Iterator<Item = &OutgoingEdgePartition> {
+        self.partitions
+            .range((v, String::new())..=(v, "\u{10ffff}".to_string()))
+            .map(|(_, p)| p)
+    }
+
+    pub fn partition(&self, pre: VertexId, id: &str) -> Option<&OutgoingEdgePartition> {
+        self.partitions.get(&(pre, id.to_string()))
+    }
+
+    /// The target vertices of one partition (deduplicated, ordered).
+    pub fn partition_targets(&self, p: &OutgoingEdgePartition) -> Vec<VertexId> {
+        let mut targets: Vec<VertexId> =
+            p.edges.iter().map(|e| self.edge(*e).post).collect();
+        targets.sort();
+        targets.dedup();
+        targets
+    }
+
+    /// Edges arriving at `v`.
+    pub fn incoming_edges(&self, v: VertexId) -> Vec<EdgeId> {
+        self.edges()
+            .filter(|(_, e)| e.post == v)
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    /// Edges leaving `v` (all partitions).
+    pub fn outgoing_edges(&self, v: VertexId) -> Vec<EdgeId> {
+        self.edges()
+            .filter(|(_, e)| e.pre == v)
+            .map(|(id, _)| id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    //! A minimal vertex for graph/mapping unit tests.
+    use std::any::Any;
+    use std::sync::Arc;
+
+    use crate::graph::resources::ResourceRequirements;
+    use crate::graph::vertex::{DataGenContext, DataRegion, MachineVertexImpl};
+    use crate::machine::CoreLocation;
+
+    #[derive(Debug)]
+    pub struct TestVertex {
+        pub name: String,
+        pub sdram: u64,
+        pub constraint: Option<CoreLocation>,
+    }
+
+    impl TestVertex {
+        pub fn arc(name: &str) -> Arc<dyn MachineVertexImpl> {
+            Arc::new(Self { name: name.into(), sdram: 1024, constraint: None })
+        }
+
+        pub fn with_sdram(name: &str, sdram: u64) -> Arc<dyn MachineVertexImpl> {
+            Arc::new(Self { name: name.into(), sdram, constraint: None })
+        }
+
+        pub fn constrained(name: &str, loc: CoreLocation) -> Arc<dyn MachineVertexImpl> {
+            Arc::new(Self { name: name.into(), sdram: 1024, constraint: Some(loc) })
+        }
+    }
+
+    impl MachineVertexImpl for TestVertex {
+        fn label(&self) -> String {
+            self.name.clone()
+        }
+        fn resources(&self) -> ResourceRequirements {
+            ResourceRequirements::with_sdram(self.sdram)
+        }
+        fn binary_name(&self) -> String {
+            "test.aplx".into()
+        }
+        fn generate_data(&self, _ctx: &DataGenContext) -> Vec<DataRegion> {
+            vec![]
+        }
+        fn placement_constraint(&self) -> Option<CoreLocation> {
+            self.constraint
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::TestVertex;
+    use super::*;
+
+    #[test]
+    fn add_vertices_and_edges() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        let e = g.add_edge(a, b, DEFAULT_PARTITION);
+        assert_eq!(g.n_vertices(), 2);
+        assert_eq!(g.n_edges(), 1);
+        assert_eq!(g.edge(e).pre, a);
+        assert_eq!(g.edge(e).post, b);
+        assert_eq!(g.partition_of_edge(e), DEFAULT_PARTITION);
+    }
+
+    #[test]
+    fn partitions_group_edges_by_type() {
+        // Figure 6(b): one vertex, two message types to two target sets.
+        let mut g = MachineGraph::new();
+        let src = g.add_vertex(TestVertex::arc("src"));
+        let t1 = g.add_vertex(TestVertex::arc("t1"));
+        let t2 = g.add_vertex(TestVertex::arc("t2"));
+        let t3 = g.add_vertex(TestVertex::arc("t3"));
+        g.add_edge(src, t1, "solid");
+        g.add_edge(src, t2, "solid");
+        g.add_edge(src, t2, "dashed");
+        g.add_edge(src, t3, "dashed");
+        assert_eq!(g.n_partitions(), 2);
+        assert_eq!(g.partitions_of(src).count(), 2);
+        let solid = g.partition(src, "solid").unwrap();
+        assert_eq!(g.partition_targets(solid), vec![t1, t2]);
+        let dashed = g.partition(src, "dashed").unwrap();
+        assert_eq!(g.partition_targets(dashed), vec![t2, t3]);
+    }
+
+    #[test]
+    fn incoming_outgoing() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        let c = g.add_vertex(TestVertex::arc("c"));
+        g.add_edge(a, b, DEFAULT_PARTITION);
+        g.add_edge(c, b, DEFAULT_PARTITION);
+        assert_eq!(g.incoming_edges(b).len(), 2);
+        assert_eq!(g.outgoing_edges(a).len(), 1);
+        assert_eq!(g.incoming_edges(a).len(), 0);
+    }
+
+    #[test]
+    fn partition_targets_dedup() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        g.add_edge(a, b, "p");
+        g.add_edge(a, b, "p");
+        let p = g.partition(a, "p").unwrap();
+        assert_eq!(p.edges.len(), 2);
+        assert_eq!(g.partition_targets(p), vec![b]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn edge_to_unknown_vertex_panics() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        g.add_edge(a, VertexId(99), DEFAULT_PARTITION);
+    }
+}

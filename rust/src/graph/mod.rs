@@ -1,0 +1,32 @@
+//! Graph data structures (§5.2, Figures 6 & 7).
+//!
+//! Two graph levels, exactly as the paper defines them:
+//!
+//! - a [`MachineGraph`] of [`MachineVertexImpl`]s, each guaranteed to fit
+//!   one SpiNNaker core, connected by machine edges grouped into
+//!   *outgoing edge partitions* (one multicast key-space per partition);
+//! - an [`ApplicationGraph`] of [`ApplicationVertexImpl`]s holding
+//!   `n_atoms` atomic units of computation each, split by the mapping
+//!   layer ([`crate::mapping::splitter`]) into machine vertices over
+//!   contiguous atom [`Slice`]s.
+//!
+//! Vertices are trait objects: applications (see [`crate::apps`]) extend
+//! the vertex types with their own resource models, data generation and
+//! recording behaviour, mirroring how users subclass the Python classes.
+
+pub mod application_graph;
+pub mod machine_graph;
+pub mod resources;
+pub mod vertex;
+
+pub use application_graph::{
+    AppEdgeId, AppOutgoingPartition, AppVertexId, ApplicationEdge, ApplicationGraph,
+};
+pub use machine_graph::{
+    EdgeId, MachineEdge, MachineGraph, OutgoingEdgePartition, VertexId, DEFAULT_PARTITION,
+};
+pub use resources::{IpTagRequest, ResourceRequirements, ReverseIpTagRequest};
+pub use vertex::{
+    AllocatedIpTag, AllocatedReverseIpTag, ApplicationVertexImpl, DataGenContext, DataRegion,
+    KeyRange, MachineVertexImpl, Slice, VirtualLink, WrappedMachineVertex,
+};

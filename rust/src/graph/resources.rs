@@ -1,0 +1,100 @@
+//! Resource requirement descriptions (§5.2: vertices "communicate their
+//! resource requirements, in terms of the amount of DTCM and SDRAM ...
+//! the number of CPU cycles ... and any IP Tags or Reverse IP Tags").
+
+
+
+/// A request for an outbound IP tag on the Ethernet chip (§3): traffic
+/// tagged with the allocated tag id is forwarded to `host:port`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IpTagRequest {
+    pub host: String,
+    pub port: u16,
+    /// Strip the SDP header before forwarding (the fast data-extraction
+    /// protocol of §6.8 uses this).
+    pub strip_sdp: bool,
+    /// Label used to find the allocated tag at data-generation time.
+    pub label: String,
+}
+
+/// A request for a reverse IP tag: UDP arriving on `port` at the board's
+/// Ethernet is forwarded to the requesting core as SDP.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReverseIpTagRequest {
+    pub port: u16,
+    pub label: String,
+}
+
+/// What one machine vertex needs from the core it is placed on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResourceRequirements {
+    /// Core-local data memory: locally-scoped data + stack (64 KiB cap).
+    pub dtcm_bytes: u32,
+    /// Instruction memory (32 KiB cap) — the compiled binary size.
+    pub itcm_bytes: u32,
+    /// Node-local SDRAM, *excluding* recording space (which the buffer
+    /// manager sizes separately per Figure 9).
+    pub sdram_bytes: u64,
+    /// CPU cycles needed per simulation timestep.
+    pub cpu_cycles_per_step: u64,
+    pub iptags: Vec<IpTagRequest>,
+    pub reverse_iptags: Vec<ReverseIpTagRequest>,
+}
+
+impl ResourceRequirements {
+    pub fn with_sdram(sdram_bytes: u64) -> Self {
+        Self { sdram_bytes, ..Default::default() }
+    }
+
+    /// Component-wise sum (used when accounting chip totals).
+    pub fn add(&mut self, other: &ResourceRequirements) {
+        self.dtcm_bytes += other.dtcm_bytes;
+        self.itcm_bytes += other.itcm_bytes;
+        self.sdram_bytes += other.sdram_bytes;
+        self.cpu_cycles_per_step += other.cpu_cycles_per_step;
+        self.iptags.extend(other.iptags.iter().cloned());
+        self.reverse_iptags.extend(other.reverse_iptags.iter().cloned());
+    }
+
+    /// Whether a single core can host this requirement at all.
+    pub fn fits_core(&self, dtcm_cap: u32, itcm_cap: u32, cycles_cap: u64) -> bool {
+        self.dtcm_bytes <= dtcm_cap
+            && self.itcm_bytes <= itcm_cap
+            && (self.cpu_cycles_per_step == 0 || self.cpu_cycles_per_step <= cycles_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = ResourceRequirements::with_sdram(100);
+        a.dtcm_bytes = 10;
+        let mut b = ResourceRequirements::with_sdram(50);
+        b.iptags.push(IpTagRequest {
+            host: "h".into(),
+            port: 1,
+            strip_sdp: false,
+            label: "t".into(),
+        });
+        a.add(&b);
+        assert_eq!(a.sdram_bytes, 150);
+        assert_eq!(a.dtcm_bytes, 10);
+        assert_eq!(a.iptags.len(), 1);
+    }
+
+    #[test]
+    fn fits_core_checks_all_axes() {
+        let mut r = ResourceRequirements::default();
+        r.dtcm_bytes = 64 * 1024;
+        r.itcm_bytes = 32 * 1024;
+        r.cpu_cycles_per_step = 200_000;
+        assert!(r.fits_core(64 * 1024, 32 * 1024, 200_000));
+        assert!(!r.fits_core(64 * 1024 - 1, 32 * 1024, 200_000));
+        assert!(!r.fits_core(64 * 1024, 32 * 1024, 199_999));
+        r.cpu_cycles_per_step = 0; // "no timing constraint"
+        assert!(r.fits_core(64 * 1024, 32 * 1024, 1));
+    }
+}

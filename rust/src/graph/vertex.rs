@@ -1,0 +1,334 @@
+//! Vertex traits and the data-generation context.
+//!
+//! Applications extend [`MachineVertexImpl`] / [`ApplicationVertexImpl`]
+//! the way users subclass the Python vertex classes (§6.2): a vertex
+//! declares its resources, its binary, how to generate its SDRAM data
+//! from the mapping results, and its recording behaviour.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+
+
+use crate::machine::{ChipCoord, CoreLocation, Direction};
+
+use super::machine_graph::{MachineGraph, VertexId};
+use super::resources::ResourceRequirements;
+
+/// A contiguous range of atoms `[lo, hi)` of an application vertex.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Slice {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl Slice {
+    pub fn new(lo: u32, hi: u32) -> Self {
+        assert!(lo < hi, "empty slice {lo}..{hi}");
+        Self { lo, hi }
+    }
+
+    pub fn n_atoms(&self) -> u32 {
+        self.hi - self.lo
+    }
+
+    pub fn contains(&self, atom: u32) -> bool {
+        (self.lo..self.hi).contains(&atom)
+    }
+
+    /// Whole-vertex slice.
+    pub fn all(n_atoms: u32) -> Self {
+        Self::new(0, n_atoms)
+    }
+}
+
+impl std::fmt::Display for Slice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}:{})", self.lo, self.hi)
+    }
+}
+
+/// A multicast key allocation for one outgoing edge partition: keys
+/// `base ..= base | !mask`, one per atom (key of atom i = base + i).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KeyRange {
+    pub base: u32,
+    pub mask: u32,
+}
+
+impl KeyRange {
+    pub fn new(base: u32, mask: u32) -> Self {
+        debug_assert_eq!(base & !mask, 0, "base has bits outside the mask");
+        Self { base, mask }
+    }
+
+    pub fn n_keys(&self) -> u64 {
+        (!self.mask) as u64 + 1
+    }
+
+    pub fn key_for_atom(&self, atom: u32) -> u32 {
+        debug_assert!((atom as u64) < self.n_keys());
+        self.base | atom
+    }
+
+    pub fn contains(&self, key: u32) -> bool {
+        key & self.mask == self.base
+    }
+
+    pub fn atom_for_key(&self, key: u32) -> u32 {
+        key & !self.mask
+    }
+}
+
+/// Where a virtual (device) vertex hangs off the machine (§5.1, §7.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VirtualLink {
+    /// The real chip the device's wire is plugged into.
+    pub attached_to: ChipCoord,
+    /// The link direction (from the real chip) the device sits on.
+    pub direction: Direction,
+}
+
+/// One region of SDRAM data produced by data generation (§6.3.3). The
+/// region table (id -> offset) is written by the loader; the C-side
+/// library equivalent reads regions by id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DataRegion {
+    pub id: u32,
+    pub data: Vec<u8>,
+}
+
+/// An IP tag after allocation (mapping output).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllocatedIpTag {
+    pub board: ChipCoord,
+    pub tag: u8,
+    pub host: String,
+    pub port: u16,
+    pub strip_sdp: bool,
+}
+
+/// A reverse IP tag after allocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllocatedReverseIpTag {
+    pub board: ChipCoord,
+    pub tag: u8,
+    pub port: u16,
+    pub destination: CoreLocation,
+}
+
+/// Everything data generation may consult (§6.3.3: "this can make use of
+/// the mapping information ... for example, the routing keys and IP tags
+/// allocated to the vertex").
+pub struct DataGenContext<'a> {
+    pub vertex: VertexId,
+    pub placement: CoreLocation,
+    pub timestep_us: u32,
+    pub graph: &'a MachineGraph,
+    pub placements: &'a BTreeMap<VertexId, CoreLocation>,
+    /// (vertex, partition id) -> allocated key range.
+    pub keys: &'a BTreeMap<(VertexId, String), KeyRange>,
+    /// (vertex, tag label) -> allocated IP tag.
+    pub iptags: &'a BTreeMap<(VertexId, String), AllocatedIpTag>,
+    pub reverse_iptags: &'a BTreeMap<(VertexId, String), AllocatedReverseIpTag>,
+    /// Present when the machine graph came from an application graph:
+    /// lets data generation consult atom-level structures (e.g. the
+    /// synaptic connectors on application edges, §7.2).
+    pub app_graph: Option<&'a super::application_graph::ApplicationGraph>,
+    pub graph_mapping: Option<&'a crate::mapping::splitter::GraphMapping>,
+}
+
+impl<'a> DataGenContext<'a> {
+    /// The key range this vertex sends on, for one of its partitions.
+    pub fn outgoing_key(&self, partition: &str) -> Option<KeyRange> {
+        self.keys.get(&(self.vertex, partition.to_string())).copied()
+    }
+
+    /// All (pre-vertex, partition, keys) triples this vertex receives.
+    pub fn incoming_keys(&self) -> Vec<(VertexId, String, KeyRange)> {
+        let mut out = Vec::new();
+        for (edge_id, edge) in self.graph.edges() {
+            if edge.post != self.vertex {
+                continue;
+            }
+            let partition = self.graph.partition_of_edge(edge_id);
+            if let Some(kr) = self.keys.get(&(edge.pre, partition.clone())) {
+                out.push((edge.pre, partition, *kr));
+            }
+        }
+        out.sort_by_key(|(v, p, _)| (*v, p.clone()));
+        out.dedup();
+        out
+    }
+
+    pub fn iptag(&self, label: &str) -> Option<&AllocatedIpTag> {
+        self.iptags.get(&(self.vertex, label.to_string()))
+    }
+
+    pub fn reverse_iptag(&self, label: &str) -> Option<&AllocatedReverseIpTag> {
+        self.reverse_iptags.get(&(self.vertex, label.to_string()))
+    }
+}
+
+/// A unit of computation guaranteed to fit one core (§5.2).
+pub trait MachineVertexImpl: Send + Sync + std::fmt::Debug {
+    fn label(&self) -> String;
+
+    /// What this vertex needs from its core (checked by the placer).
+    fn resources(&self) -> ResourceRequirements;
+
+    /// The application binary this vertex runs. At load time the
+    /// simulator resolves this through [`crate::apps::AppRegistry`] —
+    /// the moral equivalent of the `.aplx` file name.
+    fn binary_name(&self) -> String;
+
+    /// Produce the SDRAM data regions for this vertex (§6.3.3).
+    fn generate_data(&self, ctx: &DataGenContext) -> Vec<DataRegion>;
+
+    /// How many distinct multicast keys this vertex sends on the given
+    /// outgoing partition (one per atom for split application vertices;
+    /// 1 for simple machine vertices). Key allocation rounds this up to
+    /// a power of two.
+    fn n_keys_for_partition(&self, partition: &str) -> u32 {
+        let _ = partition;
+        1
+    }
+
+    /// If this vertex records: how many timesteps fit into `bytes` of
+    /// recording SDRAM (Figure 9's "asked for the number of time steps
+    /// it can be run for before filling up the SDRAM").
+    fn steps_per_recording_space(&self, bytes: u64) -> Option<u64> {
+        let _ = bytes;
+        None
+    }
+
+    /// Minimum recording space this vertex insists on reserving.
+    fn min_recording_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Fix this vertex to a specific core (placement constraint), e.g.
+    /// gatherer vertices that must sit on an Ethernet chip.
+    fn placement_constraint(&self) -> Option<CoreLocation> {
+        None
+    }
+
+    /// Constrain this vertex to some chip (softer than a core constraint).
+    fn chip_constraint(&self) -> Option<ChipCoord> {
+        None
+    }
+
+    /// Non-None marks this as a virtual (device) vertex: it is "placed"
+    /// on a virtual chip and nothing is loaded for it (§5.1, §7.2).
+    fn virtual_link(&self) -> Option<VirtualLink> {
+        None
+    }
+
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// A group of `n_atoms` atomic computation units, splittable across
+/// cores (§5.2).
+pub trait ApplicationVertexImpl: Send + Sync + std::fmt::Debug {
+    fn label(&self) -> String;
+
+    fn n_atoms(&self) -> u32;
+
+    /// The most atoms the binary can handle on one core (may be
+    /// effectively unlimited).
+    fn max_atoms_per_core(&self) -> u32 {
+        u32::MAX
+    }
+
+    /// Resources for a contiguous slice of atoms — slice-specific, so
+    /// heterogeneous atoms can cost differently.
+    fn resources_for(&self, slice: Slice) -> ResourceRequirements;
+
+    /// Create the machine vertex covering `slice`.
+    fn create_machine_vertex(&self, slice: Slice) -> Arc<dyn MachineVertexImpl>;
+
+    fn virtual_link(&self) -> Option<VirtualLink> {
+        None
+    }
+
+    fn as_any(&self) -> &dyn Any;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_basics() {
+        let s = Slice::new(10, 20);
+        assert_eq!(s.n_atoms(), 10);
+        assert!(s.contains(10) && s.contains(19) && !s.contains(20));
+        assert_eq!(Slice::all(5), Slice::new(0, 5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_slice_panics() {
+        Slice::new(5, 5);
+    }
+
+    #[test]
+    fn key_range_math() {
+        let kr = KeyRange::new(0x1000, 0xffff_ff00);
+        assert_eq!(kr.n_keys(), 256);
+        assert_eq!(kr.key_for_atom(0), 0x1000);
+        assert_eq!(kr.key_for_atom(255), 0x10ff);
+        assert!(kr.contains(0x10ab));
+        assert!(!kr.contains(0x1100));
+        assert_eq!(kr.atom_for_key(0x10ab), 0xab);
+    }
+}
+
+/// Adapter implementing the paper's §8 future-work item: "allow an
+/// application graph to contain machine vertices, which are then simply
+/// copied to the machine graph during the conversion" — so utility
+/// vertices like the Live Packet Gatherer don't need dual app/machine
+/// implementations.
+#[derive(Debug)]
+pub struct WrappedMachineVertex {
+    inner: Arc<dyn MachineVertexImpl>,
+}
+
+impl WrappedMachineVertex {
+    pub fn arc(inner: Arc<dyn MachineVertexImpl>) -> Arc<dyn ApplicationVertexImpl> {
+        Arc::new(Self { inner })
+    }
+}
+
+impl ApplicationVertexImpl for WrappedMachineVertex {
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn n_atoms(&self) -> u32 {
+        1
+    }
+
+    fn max_atoms_per_core(&self) -> u32 {
+        1
+    }
+
+    fn resources_for(&self, _slice: Slice) -> crate::graph::ResourceRequirements {
+        self.inner.resources()
+    }
+
+    /// "Simply copied to the machine graph during the conversion."
+    fn create_machine_vertex(&self, slice: Slice) -> Arc<dyn MachineVertexImpl> {
+        debug_assert_eq!(slice, Slice::all(1));
+        self.inner.clone()
+    }
+
+    fn virtual_link(&self) -> Option<VirtualLink> {
+        self.inner.virtual_link()
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}

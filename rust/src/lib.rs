@@ -1,0 +1,52 @@
+//! # SpiNNTools — the execution engine for the SpiNNaker platform
+//!
+//! A production-quality reproduction of *SpiNNTools: The Execution Engine
+//! for the SpiNNaker Platform* (Rowley et al., 2018) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate):** the complete toolchain — graph data structures
+//!   ([`graph`]), the mapping stack ([`mapping`]: splitting, placement,
+//!   NER routing, key/tag allocation, routing-table generation and
+//!   ordered-covering compression), the Figure-10 algorithm execution
+//!   engine ([`algorithms`]), loading/run control/extraction ([`front`]),
+//!   and — because no physical SpiNNaker hardware is available — a
+//!   discrete-event simulator of the machine itself ([`simulator`]) with
+//!   the real board geometry, router TCAM semantics, SCAMP monitor
+//!   protocol and wire bandwidth models ([`machine`], [`transport`]).
+//! - **L2 (build-time JAX, `python/compile/model.py`):** the per-core
+//!   compute graphs (LIF population step, Conway tile step, Poisson
+//!   thinning), AOT-lowered once to HLO text in `artifacts/`.
+//! - **L1 (build-time Pallas, `python/compile/kernels/`):** the compute
+//!   hot-spots, validated against pure-jnp oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and executes them from the simulated cores in [`apps`] —
+//! Python is never on the run path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use spinntools::front::{SpiNNTools, ToolsConfig};
+//! use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+//!
+//! let mut tools = SpiNNTools::new(ToolsConfig::virtual_spinn5(1)).unwrap();
+//! let a = tools.add_machine_vertex(ConwayCellVertex::arc(0, 0, true)).unwrap();
+//! let b = tools.add_machine_vertex(ConwayCellVertex::arc(0, 1, false)).unwrap();
+//! tools.add_machine_edge(a, b, STATE_PARTITION).unwrap();
+//! tools.run_ms(100).unwrap();
+//! ```
+//!
+//! See `examples/` for the paper's two use cases (Conway's Game of Life,
+//! §7.1; the Potjans–Diesmann cortical microcircuit, §7.2) and DESIGN.md
+//! for the experiment index.
+
+pub mod algorithms;
+pub mod apps;
+pub mod front;
+pub mod graph;
+pub mod machine;
+pub mod mapping;
+pub mod runtime;
+pub mod simulator;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,168 @@
+//! Per-chip structures: processors, SDRAM bookkeeping and the chip record
+//! itself (the `Chip`/`Processor`/`SDRAM`/`Router` classes of Figure 5).
+
+
+
+use super::geometry::Direction;
+use super::{DTCM_PER_CORE, ITCM_PER_CORE, ROUTER_ENTRIES, SDRAM_PER_CHIP};
+
+/// One ARM968 core. Core 0 conventionally runs the SCAMP monitor after
+/// boot; application cores are 1..n.
+#[derive(Debug, Clone)]
+pub struct Processor {
+    pub id: u8,
+    pub is_monitor: bool,
+    /// Clock in MHz — 200 on production silicon; exposed because mapping
+    /// uses it to budget CPU cycles per timestep.
+    pub clock_mhz: u32,
+    pub dtcm_bytes: u32,
+    pub itcm_bytes: u32,
+}
+
+impl Processor {
+    pub fn application(id: u8) -> Self {
+        Self {
+            id,
+            is_monitor: false,
+            clock_mhz: 200,
+            dtcm_bytes: DTCM_PER_CORE,
+            itcm_bytes: ITCM_PER_CORE,
+        }
+    }
+
+    pub fn monitor(id: u8) -> Self {
+        Self { is_monitor: true, ..Self::application(id) }
+    }
+
+    /// CPU cycles available per simulation timestep of `timestep_us`.
+    pub fn cycles_per_timestep(&self, timestep_us: u32) -> u64 {
+        self.clock_mhz as u64 * timestep_us as u64
+    }
+}
+
+/// Shared node-local SDRAM bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Sdram {
+    pub size: u32,
+    /// Bytes reserved by system software (SCAMP, reinjector buffers...).
+    pub system_reserved: u32,
+}
+
+impl Default for Sdram {
+    fn default() -> Self {
+        // SCAMP reserves a small system heap at the top of SDRAM.
+        Self { size: SDRAM_PER_CHIP, system_reserved: 1024 * 1024 }
+    }
+}
+
+impl Sdram {
+    pub fn user_size(&self) -> u32 {
+        self.size - self.system_reserved
+    }
+}
+
+/// One SpiNNaker chip as seen by the mapping layer.
+#[derive(Debug, Clone)]
+pub struct Chip {
+    pub x: u32,
+    pub y: u32,
+    pub processors: Vec<Processor>,
+    pub sdram: Sdram,
+    /// Links that are present and working, by direction.
+    pub working_links: Vec<Direction>,
+    /// Routing entries available to applications (SCAMP can consume some).
+    pub n_router_entries: usize,
+    /// IP address when this is an Ethernet chip.
+    pub ethernet_ip: Option<String>,
+    /// Coordinates of the Ethernet chip of this chip's board.
+    pub nearest_ethernet: (u32, u32),
+    /// Virtual chips (§5.1) stand in for external devices: they exist in
+    /// the machine representation so placement/routing can target them,
+    /// but nothing is loaded onto them.
+    pub is_virtual: bool,
+}
+
+impl Chip {
+    pub fn new(x: u32, y: u32, n_cores: usize) -> Self {
+        let mut processors = Vec::with_capacity(n_cores);
+        for p in 0..n_cores as u8 {
+            if p == 0 {
+                processors.push(Processor::monitor(p));
+            } else {
+                processors.push(Processor::application(p));
+            }
+        }
+        Self {
+            x,
+            y,
+            processors,
+            sdram: Sdram::default(),
+            working_links: super::geometry::ALL_DIRECTIONS.to_vec(),
+            n_router_entries: ROUTER_ENTRIES,
+            ethernet_ip: None,
+            nearest_ethernet: (x, y),
+            is_virtual: false,
+        }
+    }
+
+    pub fn is_ethernet(&self) -> bool {
+        self.ethernet_ip.is_some()
+    }
+
+    /// Application (non-monitor) cores.
+    pub fn application_processors(&self) -> impl Iterator<Item = &Processor> {
+        self.processors.iter().filter(|p| !p.is_monitor)
+    }
+
+    pub fn n_application_cores(&self) -> usize {
+        self.application_processors().count()
+    }
+
+    pub fn has_link(&self, d: Direction) -> bool {
+        self.working_links.contains(&d)
+    }
+
+    pub fn remove_link(&mut self, d: Direction) {
+        self.working_links.retain(|l| *l != d);
+    }
+
+    pub fn processor(&self, id: u8) -> Option<&Processor> {
+        self.processors.iter().find(|p| p.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_defaults() {
+        let c = Chip::new(1, 2, 18);
+        assert_eq!(c.processors.len(), 18);
+        assert_eq!(c.n_application_cores(), 17); // core 0 is the monitor
+        assert!(c.processors[0].is_monitor);
+        assert_eq!(c.working_links.len(), 6);
+        assert!(!c.is_ethernet());
+        assert_eq!(c.n_router_entries, 1024);
+    }
+
+    #[test]
+    fn sdram_user_size_excludes_system() {
+        let s = Sdram::default();
+        assert_eq!(s.user_size(), 127 * 1024 * 1024);
+    }
+
+    #[test]
+    fn cycles_per_timestep_at_200mhz() {
+        let p = Processor::application(1);
+        assert_eq!(p.cycles_per_timestep(1000), 200_000);
+    }
+
+    #[test]
+    fn remove_link() {
+        let mut c = Chip::new(0, 0, 18);
+        c.remove_link(Direction::North);
+        assert!(!c.has_link(Direction::North));
+        assert_eq!(c.working_links.len(), 5);
+    }
+}

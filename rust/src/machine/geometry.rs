@@ -1,0 +1,176 @@
+//! Board geometry: link directions, the SpiNN-5 48-chip board shape and
+//! the triad tiling used to assemble multi-board toroids (Figure 3).
+
+
+
+/// The six inter-chip link directions, in SpiNNaker link-id order
+/// (E=0, NE=1, N=2, W=3, SW=4, S=5) — the order used in routing-table
+/// route words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Direction {
+    East = 0,
+    NorthEast = 1,
+    North = 2,
+    West = 3,
+    SouthWest = 4,
+    South = 5,
+}
+
+pub const ALL_DIRECTIONS: [Direction; 6] = [
+    Direction::East,
+    Direction::NorthEast,
+    Direction::North,
+    Direction::West,
+    Direction::SouthWest,
+    Direction::South,
+];
+
+impl Direction {
+    /// SpiNNaker link id (bit position in a route word).
+    #[inline]
+    pub fn id(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_id(id: u8) -> Option<Direction> {
+        ALL_DIRECTIONS.get(id as usize).copied()
+    }
+
+    /// (dx, dy) on the hexagonally-connected grid. Note NE/SW are the
+    /// diagonals (+1,+1)/(-1,-1); there is no NW/SE link.
+    #[inline]
+    pub fn delta(self) -> (i32, i32) {
+        match self {
+            Direction::East => (1, 0),
+            Direction::NorthEast => (1, 1),
+            Direction::North => (0, 1),
+            Direction::West => (-1, 0),
+            Direction::SouthWest => (-1, -1),
+            Direction::South => (0, -1),
+        }
+    }
+
+    /// The link a packet continues out of when default-routed (§2: "the
+    /// opposite link to the one on which it was received").
+    #[inline]
+    pub fn opposite(self) -> Direction {
+        match self {
+            Direction::East => Direction::West,
+            Direction::NorthEast => Direction::SouthWest,
+            Direction::North => Direction::South,
+            Direction::West => Direction::East,
+            Direction::SouthWest => Direction::NorthEast,
+            Direction::South => Direction::North,
+        }
+    }
+
+    pub fn from_delta(dx: i32, dy: i32) -> Option<Direction> {
+        match (dx, dy) {
+            (1, 0) => Some(Direction::East),
+            (1, 1) => Some(Direction::NorthEast),
+            (0, 1) => Some(Direction::North),
+            (-1, 0) => Some(Direction::West),
+            (-1, -1) => Some(Direction::SouthWest),
+            (0, -1) => Some(Direction::South),
+            _ => None,
+        }
+    }
+}
+
+/// The 48 chip coordinates of a SpiNN-5 board, relative to its Ethernet
+/// chip at (0, 0). The board is a parallelogram-ish hexagon: rows 0..=7,
+/// with each row spanning a window of x coordinates.
+pub fn spinn5_chip_offsets() -> Vec<(u8, u8)> {
+    // Row y: x from X_START[y] to X_END[y] inclusive — the standard
+    // SpiNN-5 board footprint (48 chips).
+    const X_RANGE: [(u8, u8); 8] = [
+        (0, 4), // y = 0
+        (0, 5),
+        (0, 6),
+        (0, 7),
+        (1, 7),
+        (2, 7),
+        (3, 7),
+        (4, 7), // y = 7
+    ];
+    let mut out = Vec::with_capacity(48);
+    for (y, &(x0, x1)) in X_RANGE.iter().enumerate() {
+        for x in x0..=x1 {
+            out.push((x, y as u8));
+        }
+    }
+    debug_assert_eq!(out.len(), 48);
+    out
+}
+
+/// Ethernet-chip positions for an `n_boards_x x n_boards_y` triad-tiled
+/// machine. Boards come in groups of three with Ethernet chips at
+/// (0,0), (4,8), (8,4) within each 12x12 triad — the physical wiring of
+/// large SpiNNaker machines (Figure 3; Heathcote 2016 §2).
+pub fn triad_ethernet_positions(triads_x: u32, triads_y: u32) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    for tx in 0..triads_x {
+        for ty in 0..triads_y {
+            let (bx, by) = (tx * 12, ty * 12);
+            out.push((bx, by));
+            out.push((bx + 4, by + 8));
+            out.push((bx + 8, by + 4));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spinn5_has_48_chips() {
+        assert_eq!(spinn5_chip_offsets().len(), 48);
+    }
+
+    #[test]
+    fn spinn5_contains_origin_and_is_unique() {
+        let offs = spinn5_chip_offsets();
+        assert!(offs.contains(&(0, 0)));
+        let set: std::collections::HashSet<_> = offs.iter().collect();
+        assert_eq!(set.len(), 48);
+    }
+
+    #[test]
+    fn opposite_is_involution() {
+        for d in ALL_DIRECTIONS {
+            assert_eq!(d.opposite().opposite(), d);
+            let (dx, dy) = d.delta();
+            let (ox, oy) = d.opposite().delta();
+            assert_eq!((dx + ox, dy + oy), (0, 0));
+        }
+    }
+
+    #[test]
+    fn delta_round_trips() {
+        for d in ALL_DIRECTIONS {
+            let (dx, dy) = d.delta();
+            assert_eq!(Direction::from_delta(dx, dy), Some(d));
+        }
+        assert_eq!(Direction::from_delta(2, 0), None);
+        assert_eq!(Direction::from_delta(-1, 1), None);
+    }
+
+    #[test]
+    fn link_ids_match_route_word_order() {
+        assert_eq!(Direction::East.id(), 0);
+        assert_eq!(Direction::South.id(), 5);
+        for (i, d) in ALL_DIRECTIONS.iter().enumerate() {
+            assert_eq!(d.id() as usize, i);
+            assert_eq!(Direction::from_id(d.id()), Some(*d));
+        }
+    }
+
+    #[test]
+    fn one_triad_has_three_ethernets() {
+        assert_eq!(triad_ethernet_positions(1, 1).len(), 3);
+        assert_eq!(triad_ethernet_positions(2, 1).len(), 6);
+    }
+}

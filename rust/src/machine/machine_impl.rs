@@ -1,0 +1,495 @@
+//! The [`Machine`] representation and virtual-machine builders (§5.1).
+
+use std::collections::BTreeMap;
+
+
+
+use super::chip::Chip;
+use super::geometry::{spinn5_chip_offsets, triad_ethernet_positions, Direction};
+
+/// Chip coordinates (x, y).
+pub type ChipCoord = (u32, u32);
+
+/// A fully-qualified core location (chip x, chip y, processor id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CoreLocation {
+    pub x: u32,
+    pub y: u32,
+    pub p: u8,
+}
+
+impl CoreLocation {
+    pub fn new(x: u32, y: u32, p: u8) -> Self {
+        Self { x, y, p }
+    }
+
+    pub fn chip(&self) -> ChipCoord {
+        (self.x, self.y)
+    }
+}
+
+impl std::fmt::Display for CoreLocation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{},{},{}", self.x, self.y, self.p)
+    }
+}
+
+/// A SpiNNaker machine: chips on a (possibly torus-wrapped) 2D grid.
+///
+/// BTreeMap keeps iteration deterministic — mapping must be reproducible
+/// run-to-run for the resume path (§6.5) to reuse loaded state.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub width: u32,
+    pub height: u32,
+    /// Whether links wrap around the edges (true for triad-tiled
+    /// multi-board toroids, false for standalone boards).
+    pub wrap: bool,
+    chips: BTreeMap<ChipCoord, Chip>,
+    /// Off-grid adjacencies for virtual (device) chips, §5.1: virtual
+    /// chip coordinates "don't have to align with the rest of the
+    /// machine", so their links are recorded explicitly rather than
+    /// derived from geometry. Key: (chip, link direction) -> other chip.
+    virtual_links: BTreeMap<(ChipCoord, Direction), ChipCoord>,
+}
+
+impl Machine {
+    pub fn new(width: u32, height: u32, wrap: bool) -> Self {
+        Self {
+            width,
+            height,
+            wrap,
+            chips: BTreeMap::new(),
+            virtual_links: BTreeMap::new(),
+        }
+    }
+
+    /// Register an explicit (non-geometric) link, e.g. to a virtual chip.
+    pub fn add_virtual_link(&mut self, from: ChipCoord, d: Direction, to: ChipCoord) {
+        self.virtual_links.insert((from, d), to);
+        self.virtual_links.insert((to, d.opposite()), from);
+    }
+
+    pub fn add_chip(&mut self, chip: Chip) {
+        self.chips.insert((chip.x, chip.y), chip);
+    }
+
+    pub fn chip(&self, c: ChipCoord) -> Option<&Chip> {
+        self.chips.get(&c)
+    }
+
+    pub fn chip_mut(&mut self, c: ChipCoord) -> Option<&mut Chip> {
+        self.chips.get_mut(&c)
+    }
+
+    pub fn chips(&self) -> impl Iterator<Item = &Chip> {
+        self.chips.values()
+    }
+
+    pub fn chip_coords(&self) -> impl Iterator<Item = ChipCoord> + '_ {
+        self.chips.keys().copied()
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.chips.values().map(|c| c.processors.len()).sum()
+    }
+
+    pub fn n_application_cores(&self) -> usize {
+        self.chips.values().map(|c| c.n_application_cores()).sum()
+    }
+
+    pub fn ethernet_chips(&self) -> impl Iterator<Item = &Chip> {
+        self.chips.values().filter(|c| c.is_ethernet())
+    }
+
+    /// The chip one hop from `from` in direction `d`, with torus wrap if
+    /// enabled — ignoring link health (pure geometry).
+    pub fn neighbour_coord(&self, from: ChipCoord, d: Direction) -> Option<ChipCoord> {
+        let (dx, dy) = d.delta();
+        let nx = from.0 as i64 + dx as i64;
+        let ny = from.1 as i64 + dy as i64;
+        let (nx, ny) = if self.wrap {
+            (
+                nx.rem_euclid(self.width as i64) as u32,
+                ny.rem_euclid(self.height as i64) as u32,
+            )
+        } else {
+            if nx < 0 || ny < 0 || nx >= self.width as i64 || ny >= self.height as i64 {
+                return None;
+            }
+            (nx as u32, ny as u32)
+        };
+        Some((nx, ny))
+    }
+
+    /// The chip reachable over a *working* link in direction `d`: both
+    /// endpoints must exist and both ends of the link must be up.
+    /// Explicit virtual links (devices) take precedence over geometry.
+    pub fn link_target(&self, from: ChipCoord, d: Direction) -> Option<ChipCoord> {
+        if let Some(to) = self.virtual_links.get(&(from, d)) {
+            return self.chip(*to).map(|_| *to);
+        }
+        let src = self.chip(from)?;
+        if !src.has_link(d) {
+            return None;
+        }
+        let to = self.neighbour_coord(from, d)?;
+        let dst = self.chip(to)?;
+        if dst.is_virtual {
+            // Geometric adjacency to a virtual chip is a coincidence of
+            // coordinates, not a wire.
+            return None;
+        }
+        if !dst.has_link(d.opposite()) {
+            return None;
+        }
+        Some(to)
+    }
+
+    /// Shortest-path (dx, dy) vector from `a` to `b` respecting wrap.
+    pub fn shortest_vector(&self, a: ChipCoord, b: ChipCoord) -> (i32, i32) {
+        let mut dx = b.0 as i64 - a.0 as i64;
+        let mut dy = b.1 as i64 - a.1 as i64;
+        if self.wrap {
+            let w = self.width as i64;
+            let h = self.height as i64;
+            if dx > w / 2 {
+                dx -= w;
+            } else if dx < -w / 2 {
+                dx += w;
+            }
+            if dy > h / 2 {
+                dy -= h;
+            } else if dy < -h / 2 {
+                dy += h;
+            }
+        }
+        (dx as i32, dy as i32)
+    }
+
+    /// Total working SDRAM for applications, over all chips.
+    pub fn total_user_sdram(&self) -> u64 {
+        self.chips.values().map(|c| c.sdram.user_size() as u64).sum()
+    }
+
+    /// The Ethernet chip responsible for `c` (SCAMP relays host traffic
+    /// to non-Ethernet chips over the P2P fabric via this chip, §3).
+    pub fn nearest_ethernet(&self, c: ChipCoord) -> Option<ChipCoord> {
+        self.chip(c).map(|ch| ch.nearest_ethernet)
+    }
+
+    /// Manhattan-ish hop distance on the hexagonal fabric: with diagonal
+    /// NE/SW moves, distance((dx,dy)) = max(|dx|,|dy|) when signs match,
+    /// |dx|+|dy| when they differ.
+    pub fn hop_distance(&self, a: ChipCoord, b: ChipCoord) -> u32 {
+        let (dx, dy) = self.shortest_vector(a, b);
+        if (dx >= 0) == (dy >= 0) {
+            dx.abs().max(dy.abs()) as u32
+        } else {
+            (dx.abs() + dy.abs()) as u32
+        }
+    }
+}
+
+/// Builders for virtual machines (and the geometry the simulator boots).
+pub struct MachineBuilder {
+    machine: Machine,
+}
+
+impl MachineBuilder {
+    /// A single SpiNN-3 board: 2x2 grid of 4 chips, Ethernet at (0,0).
+    pub fn spinn3() -> Self {
+        let mut m = Machine::new(2, 2, false);
+        for (x, y) in [(0, 0), (1, 0), (0, 1), (1, 1)] {
+            let mut chip = Chip::new(x, y, 18);
+            chip.nearest_ethernet = (0, 0);
+            m.add_chip(chip);
+        }
+        m.chip_mut((0, 0)).unwrap().ethernet_ip = Some("192.168.240.253".into());
+        Self { machine: m }.prune_edge_links()
+    }
+
+    /// A single SpiNN-5 board: 48 chips in the hexagonal footprint,
+    /// Ethernet at (0,0). Not wrapped.
+    pub fn spinn5() -> Self {
+        let mut m = Machine::new(8, 8, false);
+        for (x, y) in spinn5_chip_offsets() {
+            let mut chip = Chip::new(x as u32, y as u32, 18);
+            chip.nearest_ethernet = (0, 0);
+            m.add_chip(chip);
+        }
+        m.chip_mut((0, 0)).unwrap().ethernet_ip = Some("192.168.240.1".into());
+        Self { machine: m }.prune_edge_links()
+    }
+
+    /// A triad-tiled toroidal machine of `triads_x x triads_y` triads
+    /// (3 boards, 144 chips, 12x12 per triad) — the wiring of Figure 3.
+    pub fn triads(triads_x: u32, triads_y: u32) -> Self {
+        assert!(triads_x > 0 && triads_y > 0);
+        let (w, h) = (triads_x * 12, triads_y * 12);
+        let mut m = Machine::new(w, h, true);
+        for x in 0..w {
+            for y in 0..h {
+                m.add_chip(Chip::new(x, y, 18));
+            }
+        }
+        let eths = triad_ethernet_positions(triads_x, triads_y);
+        // Assign each chip to the nearest Ethernet chip (its board).
+        for x in 0..w {
+            for y in 0..h {
+                let best = *eths
+                    .iter()
+                    .min_by_key(|e| {
+                        let dx = (x as i64 - e.0 as i64).rem_euclid(w as i64).min(
+                            (e.0 as i64 - x as i64).rem_euclid(w as i64),
+                        );
+                        let dy = (y as i64 - e.1 as i64).rem_euclid(h as i64).min(
+                            (e.1 as i64 - y as i64).rem_euclid(h as i64),
+                        );
+                        dx + dy
+                    })
+                    .unwrap();
+                m.chip_mut((x, y)).unwrap().nearest_ethernet = best;
+            }
+        }
+        for (i, e) in eths.iter().enumerate() {
+            m.chip_mut(*e).unwrap().ethernet_ip = Some(format!("10.11.{}.{}", i / 256, i % 256));
+        }
+        Self { machine: m }
+    }
+
+    /// `n_boards` SpiNN-5 boards: 1 board is a standalone spinn5; larger
+    /// counts round up to whole triads (as physical machines do).
+    pub fn boards(n_boards: u32) -> Self {
+        if n_boards <= 1 {
+            return Self::spinn5();
+        }
+        let triads = n_boards.div_ceil(3);
+        // Lay triads out in as square a grid as possible.
+        let tx = (triads as f64).sqrt().ceil() as u32;
+        let ty = triads.div_ceil(tx);
+        Self::triads(tx, ty)
+    }
+
+    /// A full rectangular torus (every chip present) — convenient for
+    /// unit tests that need exact dimensions.
+    pub fn grid(width: u32, height: u32, wrap: bool) -> Self {
+        let mut m = Machine::new(width, height, wrap);
+        for x in 0..width {
+            for y in 0..height {
+                let mut c = Chip::new(x, y, 18);
+                c.nearest_ethernet = (0, 0);
+                m.add_chip(c);
+            }
+        }
+        m.chip_mut((0, 0)).unwrap().ethernet_ip = Some("127.0.0.1".into());
+        Self { machine: m }.prune_edge_links()
+    }
+
+    /// Remove links that point off the machine (non-wrapped boards).
+    fn prune_edge_links(mut self) -> Self {
+        if self.machine.wrap {
+            return self;
+        }
+        let coords: Vec<ChipCoord> = self.machine.chip_coords().collect();
+        for c in coords {
+            for d in super::geometry::ALL_DIRECTIONS {
+                let target = self.machine.neighbour_coord(c, d);
+                let missing = match target {
+                    None => true,
+                    Some(t) => self.machine.chip(t).is_none(),
+                };
+                if missing {
+                    self.machine.chip_mut(c).unwrap().remove_link(d);
+                }
+            }
+        }
+        self
+    }
+
+    /// Blacklist a whole chip (§2 fault tolerance).
+    pub fn dead_chip(mut self, c: ChipCoord) -> Self {
+        self.machine.chips.remove(&c);
+        // Neighbours lose the link toward the dead chip.
+        let coords: Vec<ChipCoord> = self.machine.chip_coords().collect();
+        for cc in coords {
+            for d in super::geometry::ALL_DIRECTIONS {
+                if self.machine.neighbour_coord(cc, d) == Some(c) {
+                    self.machine.chip_mut(cc).unwrap().remove_link(d);
+                }
+            }
+        }
+        self
+    }
+
+    /// Blacklist one core of a chip.
+    pub fn dead_core(mut self, c: ChipCoord, p: u8) -> Self {
+        if let Some(chip) = self.machine.chip_mut(c) {
+            chip.processors.retain(|proc| proc.id != p);
+        }
+        self
+    }
+
+    /// Blacklist a link (both directions).
+    pub fn dead_link(mut self, c: ChipCoord, d: Direction) -> Self {
+        let other = self.machine.neighbour_coord(c, d);
+        if let Some(chip) = self.machine.chip_mut(c) {
+            chip.remove_link(d);
+        }
+        if let Some(o) = other {
+            if let Some(chip) = self.machine.chip_mut(o) {
+                chip.remove_link(d.opposite());
+            }
+        }
+        self
+    }
+
+    /// Add a virtual chip standing in for an external device (§5.1),
+    /// connected to real chip `attached_to` via its `link` direction.
+    /// The wire is recorded as an explicit virtual link, so `coord` need
+    /// not be geometrically adjacent (or even on the grid).
+    pub fn virtual_chip(mut self, coord: ChipCoord, attached_to: ChipCoord, link: Direction) -> Self {
+        let mut chip = Chip::new(coord.0, coord.1, 1);
+        chip.is_virtual = true;
+        chip.nearest_ethernet = self
+            .machine
+            .chip(attached_to)
+            .map(|c| c.nearest_ethernet)
+            .unwrap_or((0, 0));
+        chip.working_links = vec![link.opposite()];
+        self.machine.add_chip(chip);
+        self.machine.add_virtual_link(attached_to, link, coord);
+        self
+    }
+
+    pub fn build(self) -> Machine {
+        self.machine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spinn3_is_4_chips() {
+        let m = MachineBuilder::spinn3().build();
+        assert_eq!(m.n_chips(), 4);
+        assert_eq!(m.ethernet_chips().count(), 1);
+        assert_eq!(m.n_cores(), 72);
+    }
+
+    #[test]
+    fn spinn5_is_48_chips() {
+        let m = MachineBuilder::spinn5().build();
+        assert_eq!(m.n_chips(), 48);
+        assert!(m.chip((0, 0)).unwrap().is_ethernet());
+        // (4,0) is on the board, (7,0) isn't.
+        assert!(m.chip((4, 0)).is_some());
+        assert!(m.chip((7, 0)).is_none());
+        assert_eq!(m.n_application_cores(), 48 * 17);
+    }
+
+    #[test]
+    fn spinn5_edge_links_pruned() {
+        let m = MachineBuilder::spinn5().build();
+        // (0,0) is the bottom-left corner: West/South/SouthWest point off-board.
+        let c = m.chip((0, 0)).unwrap();
+        assert!(!c.has_link(Direction::West));
+        assert!(!c.has_link(Direction::South));
+        assert!(!c.has_link(Direction::SouthWest));
+        assert!(c.has_link(Direction::East));
+        assert!(c.has_link(Direction::North));
+        assert!(c.has_link(Direction::NorthEast));
+    }
+
+    #[test]
+    fn one_triad_is_144_chip_torus() {
+        let m = MachineBuilder::triads(1, 1).build();
+        assert_eq!(m.n_chips(), 144);
+        assert!(m.wrap);
+        assert_eq!(m.ethernet_chips().count(), 3);
+        // Torus wrap: neighbour of (11, 5) going East is (0, 5).
+        assert_eq!(m.neighbour_coord((11, 5), Direction::East), Some((0, 5)));
+    }
+
+    #[test]
+    fn boards_rounds_to_triads() {
+        assert_eq!(MachineBuilder::boards(1).build().n_chips(), 48);
+        assert_eq!(MachineBuilder::boards(3).build().n_chips(), 144);
+        assert_eq!(MachineBuilder::boards(6).build().n_chips(), 288);
+    }
+
+    #[test]
+    fn shortest_vector_wraps() {
+        let m = MachineBuilder::triads(1, 1).build(); // 12x12 torus
+        assert_eq!(m.shortest_vector((0, 0), (11, 0)), (-1, 0));
+        assert_eq!(m.shortest_vector((0, 0), (5, 0)), (5, 0));
+        assert_eq!(m.shortest_vector((1, 1), (0, 11)), (-1, -2));
+    }
+
+    #[test]
+    fn shortest_vector_no_wrap() {
+        let m = MachineBuilder::spinn5().build();
+        assert_eq!(m.shortest_vector((0, 0), (7, 7)), (7, 7));
+    }
+
+    #[test]
+    fn hop_distance_hexagonal() {
+        let m = MachineBuilder::grid(16, 16, false).build();
+        // Same-sign diagonal uses NE moves: max(|dx|,|dy|).
+        assert_eq!(m.hop_distance((0, 0), (3, 5)), 5);
+        // Opposite signs can't use a diagonal: |dx|+|dy|.
+        assert_eq!(m.hop_distance((3, 0), (0, 5)), 8);
+    }
+
+    #[test]
+    fn dead_chip_removes_neighbour_links() {
+        let m = MachineBuilder::grid(4, 4, false).dead_chip((1, 1)).build();
+        assert!(m.chip((1, 1)).is_none());
+        assert!(!m.chip((0, 1)).unwrap().has_link(Direction::East));
+        assert!(!m.chip((1, 0)).unwrap().has_link(Direction::North));
+        assert!(!m.chip((0, 0)).unwrap().has_link(Direction::NorthEast));
+        assert_eq!(m.link_target((0, 1), Direction::East), None);
+    }
+
+    #[test]
+    fn dead_core_removed() {
+        let m = MachineBuilder::spinn3().dead_core((0, 0), 17).build();
+        assert_eq!(m.chip((0, 0)).unwrap().processors.len(), 17);
+    }
+
+    #[test]
+    fn dead_link_is_bidirectional() {
+        let m = MachineBuilder::grid(4, 4, false)
+            .dead_link((0, 0), Direction::East)
+            .build();
+        assert_eq!(m.link_target((0, 0), Direction::East), None);
+        assert_eq!(m.link_target((1, 0), Direction::West), None);
+        // Geometry unaffected.
+        assert_eq!(m.neighbour_coord((0, 0), Direction::East), Some((1, 0)));
+    }
+
+    #[test]
+    fn virtual_chip_attaches() {
+        let m = MachineBuilder::spinn5()
+            .virtual_chip((100, 100), (0, 0), Direction::SouthWest)
+            .build();
+        let v = m.chip((100, 100)).unwrap();
+        assert!(v.is_virtual);
+        assert_eq!(m.n_chips(), 49);
+    }
+
+    #[test]
+    fn triad_chips_have_boards_assigned() {
+        let m = MachineBuilder::triads(1, 1).build();
+        for chip in m.chips() {
+            let e = chip.nearest_ethernet;
+            assert!(m.chip(e).unwrap().is_ethernet(), "chip {:?}", (chip.x, chip.y));
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! The SpiNNaker machine model (§2 and Figure 5 of the paper).
+//!
+//! A [`Machine`] is a 2D (torus-wrapped for multi-board systems) grid of
+//! [`Chip`]s, each with up to 18 ARM cores, 128 MiB of shared SDRAM, a
+//! 1024-entry multicast [`router`], and six inter-chip links. Boards are
+//! the 48-chip SpiNN-5 (or 4-chip SpiNN-3) production layouts; larger
+//! machines tile SpiNN-5 boards in *triads* exactly as the physical
+//! wiring (Figure 3) does.
+//!
+//! Mirroring the paper's Python class hierarchy, the same structures
+//! describe both a *discovered* physical machine (here: discovered from
+//! the [`crate::simulator`]) and a *virtual machine* built for mapping
+//! without hardware, including fault injection (dead chips / cores /
+//! links — the "blacklist" of §2).
+
+mod chip;
+mod geometry;
+mod machine_impl;
+pub mod router;
+
+pub use chip::{Chip, Processor, Sdram};
+pub use geometry::{spinn5_chip_offsets, Direction, ALL_DIRECTIONS};
+pub use machine_impl::{ChipCoord, CoreLocation, Machine, MachineBuilder};
+
+/// Bytes of SDRAM on a production chip (128 MiB), minus nothing: the
+/// usable amount after SCAMP is configured per-chip on the [`Chip`].
+pub const SDRAM_PER_CHIP: u32 = 128 * 1024 * 1024;
+
+/// Bytes of DTCM per core.
+pub const DTCM_PER_CORE: u32 = 64 * 1024;
+
+/// Bytes of ITCM per core.
+pub const ITCM_PER_CORE: u32 = 32 * 1024;
+
+/// Multicast routing-table capacity per router (§2, Figure 4).
+pub const ROUTER_ENTRIES: usize = 1024;
+
+/// Cores per chip on a fully working production chip.
+pub const MAX_CORES_PER_CHIP: usize = 18;
+
+/// IP tags per Ethernet chip (§3).
+pub const IPTAGS_PER_BOARD: usize = 8;

@@ -1,0 +1,298 @@
+//! The SpiNNaker multicast router TCAM (§2, Figure 4).
+//!
+//! An ordered list of up to [`super::ROUTER_ENTRIES`] `{key, mask, route}`
+//! entries. An incoming packet key matches entry *i* iff
+//! `key & mask_i == key_i & mask_i`; the **first** match wins. The route
+//! word has 6 link bits (bits 0–5, [`Direction`] id order) and 18
+//! processor bits (bits 6–23). With no match, the packet default-routes
+//! straight through (out the opposite link); a no-match packet injected
+//! by a local core is dropped.
+
+
+
+use super::geometry::{Direction, ALL_DIRECTIONS};
+use super::ROUTER_ENTRIES;
+
+/// A multicast route: which links and local processors a packet is
+/// forwarded to. Wraps the 24-bit route word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Route(pub u32);
+
+impl Route {
+    pub const EMPTY: Route = Route(0);
+
+    pub fn with_link(mut self, d: Direction) -> Route {
+        self.0 |= 1 << d.id();
+        self
+    }
+
+    pub fn with_processor(mut self, p: u8) -> Route {
+        debug_assert!(p < 24, "processor id out of range");
+        self.0 |= 1 << (6 + p as u32);
+        self
+    }
+
+    pub fn add_link(&mut self, d: Direction) {
+        self.0 |= 1 << d.id();
+    }
+
+    pub fn add_processor(&mut self, p: u8) {
+        self.0 |= 1 << (6 + p as u32);
+    }
+
+    pub fn has_link(self, d: Direction) -> bool {
+        self.0 & (1 << d.id()) != 0
+    }
+
+    pub fn has_processor(self, p: u8) -> bool {
+        self.0 & (1 << (6 + p as u32)) != 0
+    }
+
+    pub fn links(self) -> impl Iterator<Item = Direction> {
+        ALL_DIRECTIONS.into_iter().filter(move |d| self.has_link(*d))
+    }
+
+    pub fn processors(self) -> impl Iterator<Item = u8> {
+        (0..18u8).filter(move |p| self.has_processor(*p))
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Merge two routes (multicast union).
+    pub fn union(self, other: Route) -> Route {
+        Route(self.0 | other.0)
+    }
+
+    /// A route that only continues out of one link with no local
+    /// delivery — the only kind of entry that default routing could
+    /// replace (used by the compressor's default-route elision).
+    pub fn single_link(self) -> Option<Direction> {
+        if self.0 & !0x3f != 0 {
+            return None;
+        }
+        let mut it = self.links();
+        match (it.next(), it.next()) {
+            (Some(d), None) => Some(d),
+            _ => None,
+        }
+    }
+}
+
+/// One TCAM entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RoutingEntry {
+    pub key: u32,
+    pub mask: u32,
+    pub route: Route,
+}
+
+impl RoutingEntry {
+    pub fn new(key: u32, mask: u32, route: Route) -> Self {
+        Self { key, mask, route }
+    }
+
+    #[inline]
+    pub fn matches(&self, key: u32) -> bool {
+        key & self.mask == self.key & self.mask
+    }
+
+    /// True iff every key matched by `other` is also matched by `self`
+    /// (self's mask is a subset of other's constraint). Used by the
+    /// ordered-covering compressor's aliasing check.
+    pub fn covers(&self, other: &RoutingEntry) -> bool {
+        // self covers other iff self.mask bits ⊆ other.mask bits and the
+        // two agree on self's masked bits.
+        (self.mask & !other.mask) == 0
+            && (self.key & self.mask) == (other.key & self.mask)
+    }
+
+    /// Whether the match sets of the two entries intersect.
+    pub fn intersects(&self, other: &RoutingEntry) -> bool {
+        let common = self.mask & other.mask;
+        (self.key & common) == (other.key & common)
+    }
+}
+
+/// An ordered multicast routing table (first match wins).
+#[derive(Debug, Clone, Default)]
+pub struct RoutingTable {
+    entries: Vec<RoutingEntry>,
+}
+
+impl RoutingTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_entries(entries: Vec<RoutingEntry>) -> Self {
+        Self { entries }
+    }
+
+    /// Append an entry. Unlike hardware we do not hard-fail at 1024 here —
+    /// capacity is validated by the loader so the compressor can be
+    /// exercised on oversubscribed tables (experiment E10).
+    pub fn push(&mut self, e: RoutingEntry) {
+        self.entries.push(e);
+    }
+
+    pub fn entries(&self) -> &[RoutingEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True iff the table fits the hardware TCAM.
+    pub fn fits(&self) -> bool {
+        self.entries.len() <= ROUTER_ENTRIES
+    }
+
+    /// First-match lookup (Figure 4 semantics).
+    #[inline]
+    pub fn lookup(&self, key: u32) -> Option<Route> {
+        self.entries.iter().find(|e| e.matches(key)).map(|e| e.route)
+    }
+
+    /// Full routing decision for a packet arriving from `from`:
+    /// a matched route, or the default straight-through route, or a drop
+    /// (locally-injected packet with no matching entry).
+    pub fn route_packet(&self, key: u32, from: PacketSource) -> RoutingDecision {
+        if let Some(route) = self.lookup(key) {
+            return RoutingDecision::Routed(route);
+        }
+        match from {
+            PacketSource::Link(d) => {
+                RoutingDecision::DefaultRouted(d.opposite())
+            }
+            PacketSource::Local(_) => RoutingDecision::Dropped,
+        }
+    }
+}
+
+/// Where a packet entered this router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketSource {
+    /// Arrived over an inter-chip link: the value is the side of *this*
+    /// chip the packet entered on (a packet travelling East enters on
+    /// the West link), so default routing continues out of `.opposite()`.
+    Link(Direction),
+    /// Injected by a local core.
+    Local(u8),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingDecision {
+    Routed(Route),
+    /// No entry matched; continues out of the given link.
+    DefaultRouted(Direction),
+    /// No entry matched a locally-injected packet.
+    Dropped,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(key: u32, mask: u32, route: Route) -> RoutingEntry {
+        RoutingEntry::new(key, mask, route)
+    }
+
+    #[test]
+    fn first_match_wins() {
+        let mut t = RoutingTable::new();
+        t.push(e(0x10, 0xfff0, Route::EMPTY.with_processor(1)));
+        t.push(e(0x10, 0xff00, Route::EMPTY.with_processor(2)));
+        // 0x10 matches both; entry order decides
+        assert_eq!(t.lookup(0x10), Some(Route::EMPTY.with_processor(1)));
+        // 0x20 only matches the wider second entry
+        assert_eq!(t.lookup(0x20), Some(Route::EMPTY.with_processor(2)));
+    }
+
+    #[test]
+    fn masked_matching() {
+        let entry = e(0b1010_0000, 0b1111_0000, Route::EMPTY.with_link(Direction::East));
+        assert!(entry.matches(0b1010_0000));
+        assert!(entry.matches(0b1010_1111)); // low bits ignored
+        assert!(!entry.matches(0b1011_0000));
+    }
+
+    #[test]
+    fn default_route_is_straight_through() {
+        let t = RoutingTable::new();
+        // Packet travelling East entered via our West side; it leaves East.
+        match t.route_packet(0x1234, PacketSource::Link(Direction::West)) {
+            RoutingDecision::DefaultRouted(d) => assert_eq!(d, Direction::East),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn local_no_match_drops() {
+        let t = RoutingTable::new();
+        assert_eq!(
+            t.route_packet(0x1234, PacketSource::Local(3)),
+            RoutingDecision::Dropped
+        );
+    }
+
+    #[test]
+    fn route_word_layout() {
+        let r = Route::EMPTY.with_link(Direction::East).with_processor(0).with_processor(17);
+        assert_eq!(r.0, 1 | (1 << 6) | (1 << 23));
+        assert!(r.has_link(Direction::East));
+        assert!(!r.has_link(Direction::West));
+        assert_eq!(r.processors().collect::<Vec<_>>(), vec![0, 17]);
+    }
+
+    #[test]
+    fn single_link_detection() {
+        assert_eq!(
+            Route::EMPTY.with_link(Direction::North).single_link(),
+            Some(Direction::North)
+        );
+        assert_eq!(
+            Route::EMPTY
+                .with_link(Direction::North)
+                .with_link(Direction::South)
+                .single_link(),
+            None
+        );
+        assert_eq!(
+            Route::EMPTY
+                .with_link(Direction::North)
+                .with_processor(2)
+                .single_link(),
+            None
+        );
+        assert_eq!(Route::EMPTY.single_link(), None);
+    }
+
+    #[test]
+    fn covers_and_intersects() {
+        let wide = e(0x100, 0xff00, Route::EMPTY);
+        let narrow = e(0x110, 0xfff0, Route::EMPTY);
+        assert!(wide.covers(&narrow));
+        assert!(!narrow.covers(&wide));
+        assert!(wide.intersects(&narrow));
+        let disjoint = e(0x200, 0xff00, Route::EMPTY);
+        assert!(!wide.intersects(&disjoint));
+    }
+
+    #[test]
+    fn fits_tracks_capacity() {
+        let mut t = RoutingTable::new();
+        for i in 0..1024 {
+            t.push(e(i, 0xffff_ffff, Route::EMPTY.with_processor(1)));
+        }
+        assert!(t.fits());
+        t.push(e(2000, 0xffff_ffff, Route::EMPTY));
+        assert!(!t.fits());
+    }
+}

@@ -1,0 +1,127 @@
+//! The `spinntools` CLI: run the paper's workloads and experiments from
+//! the command line (hand-rolled argument parsing — the offline vendor
+//! bundle has no clap).
+
+use spinntools::apps::networks::{build_conway_grid, build_microcircuit, firing_rates};
+use spinntools::front::{ExtractionMethod, MachineSpec, SpiNNTools, ToolsConfig};
+use spinntools::machine::MachineBuilder;
+
+const USAGE: &str = "\
+spinntools — the SpiNNaker execution engine (simulated), Rowley et al. 2018
+
+USAGE:
+  spinntools info [boards]             describe a (virtual) machine
+  spinntools conway [side] [steps]     run Conway's Game of Life (§7.1)
+  spinntools snn [scale] [run_ms]      run the cortical microcircuit (§7.2)
+  spinntools extract-bench             Figure-11 extraction throughputs (E1)
+  spinntools help
+";
+
+fn arg<T: std::str::FromStr>(args: &[String], i: usize, default: T) -> T {
+    args.get(i).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("info") => info(arg(&args, 1, 1)),
+        Some("conway") => conway(arg(&args, 1, 16), arg(&args, 2, 16)),
+        Some("snn") => snn(arg(&args, 1, 0.02), arg(&args, 2, 200)),
+        Some("extract-bench") => extract_bench(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(boards: u32) -> anyhow::Result<()> {
+    let machine = MachineBuilder::boards(boards).build();
+    println!("machine: {} board(s)", boards);
+    println!("  dimensions:        {} x {} (wrap: {})", machine.width, machine.height, machine.wrap);
+    println!("  chips:             {}", machine.n_chips());
+    println!("  application cores: {}", machine.n_application_cores());
+    println!("  user SDRAM:        {} MiB", machine.total_user_sdram() / (1024 * 1024));
+    println!("  ethernet chips:    {}", machine.ethernet_chips().count());
+    Ok(())
+}
+
+fn conway(side: u32, steps: u64) -> anyhow::Result<()> {
+    let spec = if side * side <= 51 { MachineSpec::Spinn3 } else { MachineSpec::Spinn5 };
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(spec).with_extraction(ExtractionMethod::FastMulticast),
+    )?;
+    let live: Vec<(u32, u32)> = (0..side)
+        .flat_map(|r| (0..side).map(move |c| (r, c)))
+        .filter(|(r, c)| (r * 7 + c * 3) % 5 < 2)
+        .collect();
+    let ids = build_conway_grid(&mut tools, side, side, &live)?;
+    tools.run_ticks(steps)?;
+    for r in 0..side {
+        let row: String = (0..side)
+            .map(|c| {
+                let rec = tools.recording(ids[(r * side + c) as usize]);
+                if rec.last().copied().unwrap_or(0) == 1 { '#' } else { '.' }
+            })
+            .collect();
+        println!("{row}");
+    }
+    let prov = tools.provenance();
+    println!(
+        "\n{side}x{side} board, {steps} steps: {} packets, {} dropped",
+        tools.sim_mut().map(|s| s.stats.mc_sent).unwrap_or(0),
+        prov.total_dropped()
+    );
+    tools.stop()
+}
+
+fn snn(scale: f64, run_ms: u64) -> anyhow::Result<()> {
+    let spec = if scale > 0.05 { MachineSpec::Boards(3) } else { MachineSpec::Spinn5 };
+    let mut tools = SpiNNTools::new(ToolsConfig::new(spec).with_artifacts())?;
+    let circuit = build_microcircuit(&mut tools, scale, 20260710, true)?;
+    let n: u32 = circuit.sizes.values().sum();
+    println!("running {n} neurons for {run_ms} ms...");
+    tools.run_ms(run_ms)?;
+    for (name, rate) in firing_rates(&tools, &circuit, run_ms as f64) {
+        println!("  {name:>6}: {rate:6.2} Hz");
+    }
+    tools.stop()
+}
+
+fn extract_bench() -> anyhow::Result<()> {
+    use spinntools::front::FastPath;
+    use spinntools::simulator::{scamp, SimConfig, SimMachine};
+    let machine = MachineBuilder::spinn5().build();
+    let mut sim = SimMachine::boot(machine, SimConfig::default());
+    let len = 1024 * 1024;
+    let mut next = std::collections::BTreeMap::new();
+    let fp = FastPath::install(
+        &mut sim,
+        &[(0, 0), (7, 7)],
+        move |chip| {
+            let n = next.entry(chip).or_insert(17u8);
+            let c = *n;
+            *n -= 1;
+            Some(c)
+        },
+        17895,
+        7,
+    )?;
+    scamp::signal_start(&mut sim)?;
+    let mbps = |bytes: usize, ns: u64| bytes as f64 * 8.0 / (ns as f64 / 1e9) / 1e6;
+    for chip in [(0u32, 0u32), (7, 7)] {
+        let addr = scamp::alloc_sdram(&mut sim, chip, len as u32)?;
+        let t0 = sim.now_ns();
+        scamp::read_sdram(&mut sim, chip, addr, len)?;
+        let t_scamp = sim.now_ns() - t0;
+        let t1 = sim.now_ns();
+        fp.read(&mut sim, chip, addr, len)?;
+        let t_fast = sim.now_ns() - t1;
+        println!(
+            "chip {chip:?}: scamp {:.2} Mb/s, stream {:.2} Mb/s",
+            mbps(len, t_scamp),
+            mbps(len, t_fast)
+        );
+    }
+    Ok(())
+}

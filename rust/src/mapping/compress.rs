@@ -1,0 +1,365 @@
+//! Order-exploiting routing-table minimization (§6.7, after Mundy,
+//! Heathcote & Garside 2016: "On-chip order-exploiting routing table
+//! minimization for a multicast supercomputer network").
+//!
+//! Two phases:
+//!
+//! 1. **Buddy merging** (always safe): two entries with the same route,
+//!    the same mask, and keys differing in exactly one masked bit are
+//!    replaced by one entry with that bit wildcarded. The merged match
+//!    set is *exactly* the union of the two, so no foreign key is
+//!    captured. Iterated to a fixpoint.
+//! 2. **Aggressive covering** (validated): within each route group the
+//!    remaining entries are greedily merged into wider covers that may
+//!    capture keys outside the originals. The result is ordered
+//!    most-specific-first and then *checked*: every key the original
+//!    table matched (sampled exhaustively for small ranges, at the
+//!    corners for large ones) must still produce the same route. If the
+//!    check fails the buddy-phase table is returned instead.
+//!
+//! Keys the original table did not match may hit a merged cover — the
+//! "order-exploiting" trade: on SpiNNaker such keys are never sent (key
+//! allocation covers exactly the partitions that exist), so capturing
+//! them is free. This is the same assumption the paper's tools make.
+
+use std::collections::BTreeMap;
+
+use crate::machine::router::{Route, RoutingEntry, RoutingTable};
+
+/// Compress a table. Semantics are preserved for all keys the input
+/// table matches (see module docs for the unmatched-key caveat).
+pub fn compress(table: &RoutingTable) -> RoutingTable {
+    let mut groups: BTreeMap<u32, Vec<RoutingEntry>> = BTreeMap::new();
+    for e in table.entries() {
+        groups.entry(e.route.0).or_default().push(*e);
+    }
+
+    // Phase 1: exact buddy merging per group.
+    let mut buddy: Vec<RoutingEntry> = Vec::new();
+    for (route, entries) in &groups {
+        buddy.extend(buddy_merge(entries.clone(), Route(*route)));
+    }
+    sort_specific_first(&mut buddy);
+    let buddy_table = RoutingTable::from_entries(buddy.clone());
+
+    // Phase 2: aggressive covering, accepted only if validation passes.
+    let mut aggressive: Vec<RoutingEntry> = Vec::new();
+    for (route, entries) in &groups {
+        aggressive.extend(cover_merge(
+            buddy_merge(entries.clone(), Route(*route)),
+            Route(*route),
+        ));
+    }
+    sort_specific_first(&mut aggressive);
+    let aggressive_table = RoutingTable::from_entries(aggressive);
+
+    if aggressive_table.len() < buddy_table.len()
+        && semantics_preserved(table, &aggressive_table)
+    {
+        aggressive_table
+    } else if semantics_preserved(table, &buddy_table) {
+        buddy_table
+    } else {
+        // Buddy merging is provably safe for disjoint-across-route
+        // tables; if the input had conflicting overlaps, refuse to touch it.
+        table.clone()
+    }
+}
+
+/// Order entries most-specific-first (descending mask popcount), ties by
+/// key then mask, for determinism. First-match-wins then lets specific
+/// original entries shadow wide merged covers from other groups.
+fn sort_specific_first(entries: &mut [RoutingEntry]) {
+    entries.sort_by(|a, b| {
+        b.mask
+            .count_ones()
+            .cmp(&a.mask.count_ones())
+            .then(a.key.cmp(&b.key))
+            .then(a.mask.cmp(&b.mask))
+    });
+}
+
+/// Phase-1 worker: merge buddies to fixpoint.
+fn buddy_merge(mut entries: Vec<RoutingEntry>, route: Route) -> Vec<RoutingEntry> {
+    entries.sort_by_key(|e| (e.key, e.mask));
+    entries.dedup_by_key(|e| (e.key, e.mask));
+    loop {
+        let mut merged_any = false;
+        'outer: for i in 0..entries.len() {
+            for j in (i + 1)..entries.len() {
+                let (a, b) = (entries[i], entries[j]);
+                if a.mask != b.mask {
+                    continue;
+                }
+                let diff = (a.key & a.mask) ^ (b.key & b.mask);
+                if diff.count_ones() == 1 {
+                    let mask = a.mask & !diff;
+                    let key = a.key & mask;
+                    entries.remove(j);
+                    entries.remove(i);
+                    entries.push(RoutingEntry::new(key, mask, route));
+                    entries.sort_by_key(|e| (e.key, e.mask));
+                    entries.dedup_by_key(|e| (e.key, e.mask));
+                    merged_any = true;
+                    break 'outer;
+                }
+            }
+        }
+        if !merged_any {
+            return entries;
+        }
+    }
+}
+
+/// Phase-2 worker: greedily merge entries into the smallest covers.
+fn cover_merge(mut entries: Vec<RoutingEntry>, route: Route) -> Vec<RoutingEntry> {
+    loop {
+        if entries.len() <= 1 {
+            return entries;
+        }
+        let mut best: Option<(usize, usize, u32, u32)> = None;
+        for i in 0..entries.len() {
+            for j in (i + 1)..entries.len() {
+                let (key, mask) = union_cover(&entries[i], &entries[j]);
+                let width = (!mask) as u64 + 1;
+                if best.map(|(_, _, _, bm)| width < (!bm) as u64 + 1).unwrap_or(true) {
+                    best = Some((i, j, key, mask));
+                }
+            }
+        }
+        let (i, j, key, mask) = best.unwrap();
+        entries.remove(j);
+        entries.remove(i);
+        entries.push(RoutingEntry::new(key & mask, mask, route));
+        entries.sort_by_key(|e| (e.key, e.mask));
+        entries.dedup_by_key(|e| (e.key, e.mask));
+    }
+}
+
+/// The smallest bottom-aligned (key, mask) cover containing both entries.
+fn union_cover(a: &RoutingEntry, b: &RoutingEntry) -> (u32, u32) {
+    let mut mask = a.mask & b.mask & !(a.key ^ b.key);
+    // Make the wildcard region contiguous from the bottom, matching the
+    // bottom-aligned ranges the key allocator emits.
+    let width = 32 - (!mask).leading_zeros();
+    mask = if width >= 32 { 0 } else { !((1u32 << width) - 1) };
+    ((a.key & mask), mask)
+}
+
+/// Check: every key `original` matches must keep its route in `candidate`.
+/// Ranges up to 4096 keys are checked exhaustively; larger ones at their
+/// corners and a stride of samples.
+fn semantics_preserved(original: &RoutingTable, candidate: &RoutingTable) -> bool {
+    for e in original.entries() {
+        let lo = e.key & e.mask;
+        let hi = lo | !e.mask;
+        let n = (hi - lo) as u64 + 1;
+        let check = |key: u32| original.lookup(key) == candidate.lookup(key);
+        if n <= 4096 {
+            for key in lo..=hi {
+                if !check(key) {
+                    return false;
+                }
+            }
+        } else {
+            let stride = (n / 257).max(1) as u32;
+            let mut key = lo;
+            loop {
+                if !check(key) {
+                    return false;
+                }
+                match key.checked_add(stride) {
+                    Some(k) if k <= hi => key = k,
+                    _ => break,
+                }
+            }
+            if !check(hi) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Statistics for the compression benchmark (experiment E10).
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionStats {
+    pub before: usize,
+    pub after: usize,
+}
+
+impl CompressionStats {
+    pub fn ratio(&self) -> f64 {
+        if self.before == 0 {
+            1.0
+        } else {
+            self.after as f64 / self.before as f64
+        }
+    }
+}
+
+/// Compress and report sizes.
+pub fn compress_with_stats(table: &RoutingTable) -> (RoutingTable, CompressionStats) {
+    let out = compress(table);
+    let stats = CompressionStats { before: table.len(), after: out.len() };
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::Direction;
+    use crate::util::{prop, SplitMix64};
+
+    fn e(key: u32, mask: u32, route: Route) -> RoutingEntry {
+        RoutingEntry::new(key, mask, route)
+    }
+
+    fn east() -> Route {
+        Route::EMPTY.with_link(Direction::East)
+    }
+
+    fn north() -> Route {
+        Route::EMPTY.with_link(Direction::North)
+    }
+
+    #[test]
+    fn buddy_blocks_merge_exactly() {
+        let t = RoutingTable::from_entries(vec![
+            e(0x000, 0xffff_ff00, east()),
+            e(0x100, 0xffff_ff00, east()),
+        ]);
+        let c = compress(&t);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.entries()[0].mask, 0xffff_fe00);
+        for key in [0x000u32, 0x0ff, 0x100, 0x1ff] {
+            assert_eq!(c.lookup(key), Some(east()));
+        }
+    }
+
+    #[test]
+    fn different_routes_do_not_merge() {
+        let t = RoutingTable::from_entries(vec![
+            e(0x000, 0xffff_ff00, east()),
+            e(0x100, 0xffff_ff00, north()),
+        ]);
+        let c = compress(&t);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup(0x050), Some(east()));
+        assert_eq!(c.lookup(0x150), Some(north()));
+    }
+
+    #[test]
+    fn matched_keys_preserved_under_aggressive_merge() {
+        // Non-adjacent blocks around a foreign block: whatever phase 2
+        // decides, every matched key keeps its route.
+        let t = RoutingTable::from_entries(vec![
+            e(0x000, 0xffff_ff00, east()),
+            e(0x200, 0xffff_ff00, east()),
+            e(0x100, 0xffff_ff00, north()),
+        ]);
+        let c = compress(&t);
+        assert!(c.len() <= 3);
+        for key in 0x000..0x300u32 {
+            let want = if (0x100..0x200).contains(&key) {
+                north()
+            } else {
+                east()
+            };
+            assert_eq!(c.lookup(key), Some(want), "key {key:#x}");
+        }
+    }
+
+    #[test]
+    fn thousand_entry_table_fits_after_compression() {
+        // E10 shape: 2048 single-key entries, all the same route, in an
+        // aligned block -> collapses to one entry.
+        let entries: Vec<RoutingEntry> = (0..2048)
+            .map(|k| e(k, 0xffff_ffff, east()))
+            .collect();
+        let t = RoutingTable::from_entries(entries);
+        assert!(!t.fits());
+        let (c, stats) = compress_with_stats(&t);
+        assert!(c.fits());
+        assert_eq!(c.len(), 1);
+        assert_eq!(stats.before, 2048);
+        assert!(stats.ratio() < 0.01);
+    }
+
+    #[test]
+    fn mixed_routes_interleaved_blocks() {
+        // Alternating single keys of two routes: buddies can't merge
+        // across routes; compression must stay correct.
+        let mut entries = Vec::new();
+        for k in 0..64u32 {
+            let r = if k % 2 == 0 { east() } else { north() };
+            entries.push(e(k, 0xffff_ffff, r));
+        }
+        let t = RoutingTable::from_entries(entries);
+        let c = compress(&t);
+        for k in 0..64u32 {
+            let want = if k % 2 == 0 { east() } else { north() };
+            assert_eq!(c.lookup(k), Some(want), "key {k}");
+        }
+    }
+
+    #[test]
+    fn property_matched_keys_unchanged() {
+        prop::check(40, 0xc0ffee, |rng: &mut SplitMix64| {
+            let n_groups = 1 + rng.below(4);
+            let mut entries = Vec::new();
+            for g in 0..n_groups {
+                let route = Route(1 << g);
+                for _ in 0..1 + rng.below(12) {
+                    let block_bits = rng.below(6) as u32;
+                    let block = 1u32 << block_bits;
+                    let base = (rng.below(64) as u32) * block;
+                    entries.push(e(base, !(block - 1), route));
+                }
+            }
+            // Drop overlaps across groups (the allocator never produces
+            // them; overlap makes "the matched route" order-dependent).
+            let mut clean: Vec<RoutingEntry> = Vec::new();
+            'outer: for cand in entries {
+                for kept in &clean {
+                    if kept.intersects(&cand) && kept.route != cand.route {
+                        continue 'outer;
+                    }
+                }
+                clean.push(cand);
+            }
+            let t = RoutingTable::from_entries(clean.clone());
+            let c = compress(&t);
+            assert!(c.len() <= t.len(), "compression must not grow tables");
+            for orig in &clean {
+                let lo = orig.key & orig.mask;
+                let hi = lo | !orig.mask;
+                for key in lo..=hi {
+                    assert_eq!(
+                        t.lookup(key),
+                        c.lookup(key),
+                        "key {key:#x} changed route"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_table_compresses_to_empty() {
+        let t = RoutingTable::new();
+        assert_eq!(compress(&t).len(), 0);
+    }
+
+    #[test]
+    fn stats_ratio() {
+        let t = RoutingTable::from_entries(vec![
+            e(0, 0xffff_ffff, east()),
+            e(1, 0xffff_ffff, east()),
+        ]);
+        let (_, stats) = compress_with_stats(&t);
+        assert_eq!(stats.before, 2);
+        assert_eq!(stats.after, 1);
+        assert_eq!(stats.ratio(), 0.5);
+    }
+}

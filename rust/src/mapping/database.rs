@@ -1,0 +1,229 @@
+//! The mapping database (§6.3.2, Figure 8): a queryable record of the
+//! mapping that external live applications read to decode/encode live
+//! event streams (§6.9), plus the notification handshake around it.
+//!
+//! Serialized as deterministic JSON via [`crate::util::json`] (the paper
+//! uses sqlite; JSON keeps this build dependency-free while preserving
+//! the interface contract: vertex → placement, partition → key range).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::graph::{KeyRange, MachineGraph, VertexId};
+use crate::machine::CoreLocation;
+use crate::util::json::Json;
+
+use super::placer::Placements;
+
+/// The queryable mapping database.
+#[derive(Debug, Default, Clone)]
+pub struct MappingDatabase {
+    /// vertex label -> placement.
+    pub placements: BTreeMap<String, CoreLocation>,
+    /// (vertex label, partition) -> key range.
+    pub keys: BTreeMap<(String, String), KeyRange>,
+}
+
+impl MappingDatabase {
+    pub fn build(
+        graph: &MachineGraph,
+        placements: &Placements,
+        keys: &BTreeMap<(VertexId, String), KeyRange>,
+    ) -> Self {
+        let mut db = MappingDatabase::default();
+        for (vid, vertex) in graph.vertices() {
+            if let Some(loc) = placements.of(vid) {
+                db.placements.insert(vertex.label(), loc);
+            }
+        }
+        for ((vid, partition), range) in keys {
+            db.keys
+                .insert((graph.vertex(*vid).label(), partition.clone()), *range);
+        }
+        db
+    }
+
+    /// Key range an external app must listen for / send to (§6.9: "read
+    /// the mapping database to determine the multicast keys").
+    pub fn key_of(&self, vertex_label: &str, partition: &str) -> Option<KeyRange> {
+        self.keys
+            .get(&(vertex_label.to_string(), partition.to_string()))
+            .copied()
+    }
+
+    pub fn placement_of(&self, vertex_label: &str) -> Option<CoreLocation> {
+        self.placements.get(vertex_label).copied()
+    }
+
+    /// Reverse lookup: which (vertex, partition) does a received key
+    /// belong to? Used by live receivers to attribute events.
+    pub fn source_of_key(&self, key: u32) -> Option<(&str, &str, u32)> {
+        for ((v, p), range) in &self.keys {
+            if range.contains(key) {
+                return Some((v, p, range.atom_for_key(key)));
+            }
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut placements = BTreeMap::new();
+        for (label, loc) in &self.placements {
+            placements.insert(
+                label.clone(),
+                Json::Arr(vec![loc.x.into(), loc.y.into(), (loc.p as u32).into()]),
+            );
+        }
+        let mut keys = BTreeMap::new();
+        for ((label, partition), range) in &self.keys {
+            let mut entry = BTreeMap::new();
+            entry.insert("base".to_string(), Json::from(range.base));
+            entry.insert("mask".to_string(), Json::from(range.mask));
+            keys.insert(format!("{label}\u{1f}{partition}"), Json::Obj(entry));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("placements".to_string(), Json::Obj(placements));
+        root.insert("keys".to_string(), Json::Obj(keys));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut db = MappingDatabase::default();
+        let placements = j
+            .get("placements")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("missing placements"))?;
+        for (label, arr) in placements {
+            let a = arr.as_arr().ok_or_else(|| anyhow::anyhow!("bad placement"))?;
+            db.placements.insert(
+                label.clone(),
+                CoreLocation::new(
+                    a[0].as_usize().unwrap_or(0) as u32,
+                    a[1].as_usize().unwrap_or(0) as u32,
+                    a[2].as_usize().unwrap_or(0) as u8,
+                ),
+            );
+        }
+        let keys = j
+            .get("keys")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("missing keys"))?;
+        for (k, v) in keys {
+            let (label, partition) = k
+                .split_once('\u{1f}')
+                .ok_or_else(|| anyhow::anyhow!("bad key id {k}"))?;
+            let base = v.get("base").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+            let mask = v.get("mask").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+            db.keys
+                .insert((label.to_string(), partition.to_string()), KeyRange::new(base, mask));
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// The database-ready / setup-done handshake of Figure 8: applications
+/// "register to be notified when the database is ready for reading, and
+/// can then notify the tools when they have completed any setup".
+#[derive(Default)]
+pub struct NotificationProtocol {
+    listeners: Vec<Box<dyn FnMut(&MappingDatabase) + Send>>,
+}
+
+impl std::fmt::Debug for NotificationProtocol {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NotificationProtocol({} listeners)", self.listeners.len())
+    }
+}
+
+impl NotificationProtocol {
+    pub fn register(&mut self, listener: Box<dyn FnMut(&MappingDatabase) + Send>) {
+        self.listeners.push(listener);
+    }
+
+    /// Called by the tools when the database is written; every listener
+    /// runs its setup, and the call returns when all are ready.
+    pub fn database_ready(&mut self, db: &MappingDatabase) {
+        for l in &mut self.listeners {
+            l(db);
+        }
+    }
+
+    pub fn n_listeners(&self) -> usize {
+        self.listeners.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::machine_graph::test_support::TestVertex;
+    use crate::mapping::{keys, placer};
+    use crate::machine::MachineBuilder;
+
+    fn sample_db() -> MappingDatabase {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("alpha"));
+        let b = g.add_vertex(TestVertex::arc("beta"));
+        g.add_edge(a, b, "events");
+        let p = placer::place(&m, &g).unwrap();
+        let k = keys::allocate_keys(&g).unwrap();
+        MappingDatabase::build(&g, &p, &k)
+    }
+
+    #[test]
+    fn lookups_work() {
+        let db = sample_db();
+        assert!(db.placement_of("alpha").is_some());
+        assert!(db.placement_of("nonexistent").is_none());
+        let kr = db.key_of("alpha", "events").unwrap();
+        let (v, p, atom) = db.source_of_key(kr.base).unwrap();
+        assert_eq!(v, "alpha");
+        assert_eq!(p, "events");
+        assert_eq!(atom, 0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let db = sample_db();
+        let j = db.to_json();
+        let back = MappingDatabase::from_json(&j).unwrap();
+        assert_eq!(back.placements, db.placements);
+        assert_eq!(back.keys, db.keys);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let db = sample_db();
+        let dir = std::env::temp_dir().join("spinntools_db_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mapping.json");
+        db.save(&path).unwrap();
+        let back = MappingDatabase::load(&path).unwrap();
+        assert_eq!(back.keys, db.keys);
+    }
+
+    #[test]
+    fn notification_handshake() {
+        let db = sample_db();
+        let mut proto = NotificationProtocol::default();
+        let hits = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let h = hits.clone();
+        proto.register(Box::new(move |db| {
+            assert!(db.placement_of("alpha").is_some());
+            h.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        }));
+        proto.database_ready(&db);
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}

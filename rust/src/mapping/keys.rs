@@ -1,0 +1,143 @@
+//! Multicast key allocation (§6.3.2: "a set of routing keys detailing
+//! the range of keys that must be sent by each vertex ... over each
+//! outgoing edge partition").
+//!
+//! Each partition gets a contiguous power-of-two block of the 32-bit key
+//! space: base key + atom index, with the mask covering the block. Blocks
+//! are allocated sequentially in deterministic partition order, aligned
+//! to their size, so every pair of allocations is disjoint — the property
+//! the routing tables (and the order-exploiting compressor) rely on.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{KeyRange, MachineGraph, VertexId};
+
+/// Allocate key ranges for every outgoing edge partition of `graph`.
+pub fn allocate_keys(
+    graph: &MachineGraph,
+) -> anyhow::Result<BTreeMap<(VertexId, String), KeyRange>> {
+    let mut out = BTreeMap::new();
+    let mut cursor: u64 = 0;
+    for partition in graph.partitions() {
+        let n_keys = graph
+            .vertex(partition.pre)
+            .n_keys_for_partition(&partition.id)
+            .max(1);
+        let block = (n_keys as u64).next_power_of_two();
+        // Align the cursor to the block size.
+        cursor = cursor.div_ceil(block) * block;
+        anyhow::ensure!(
+            cursor + block <= (1u64 << 32),
+            "multicast key space exhausted at partition ({:?}, {})",
+            partition.pre,
+            partition.id
+        );
+        let mask = !(block as u32 - 1);
+        out.insert(
+            (partition.pre, partition.id.clone()),
+            KeyRange::new(cursor as u32, mask),
+        );
+        cursor += block;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::machine_graph::test_support::TestVertex;
+    use crate::graph::{DataGenContext, DataRegion, MachineVertexImpl, ResourceRequirements};
+    use std::any::Any;
+    use std::sync::Arc;
+
+    #[derive(Debug)]
+    struct ManyKeys(u32);
+
+    impl MachineVertexImpl for ManyKeys {
+        fn label(&self) -> String {
+            format!("many{}", self.0)
+        }
+        fn resources(&self) -> ResourceRequirements {
+            ResourceRequirements::default()
+        }
+        fn binary_name(&self) -> String {
+            "t.aplx".into()
+        }
+        fn generate_data(&self, _: &DataGenContext) -> Vec<DataRegion> {
+            vec![]
+        }
+        fn n_keys_for_partition(&self, _: &str) -> u32 {
+            self.0
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn ranges_are_disjoint_and_sized() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(Arc::new(ManyKeys(100)));
+        let b = g.add_vertex(Arc::new(ManyKeys(3)));
+        let c = g.add_vertex(TestVertex::arc("c"));
+        g.add_edge(a, b, "x");
+        g.add_edge(b, c, "y");
+        g.add_edge(c, a, "z");
+        let keys = allocate_keys(&g).unwrap();
+        assert_eq!(keys.len(), 3);
+        let ka = keys[&(a, "x".to_string())];
+        let kb = keys[&(b, "y".to_string())];
+        let kc = keys[&(c, "z".to_string())];
+        assert_eq!(ka.n_keys(), 128); // 100 rounded up
+        assert_eq!(kb.n_keys(), 4);
+        assert_eq!(kc.n_keys(), 1);
+        // Disjoint: no key of one range matches another range.
+        for k in [ka, kb, kc] {
+            for other in [ka, kb, kc] {
+                if k != other {
+                    assert!(!other.contains(k.base));
+                    assert!(!other.contains(k.key_for_atom((k.n_keys() - 1) as u32)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alignment_preserves_base_mask_identity() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(Arc::new(ManyKeys(1)));
+        let b = g.add_vertex(Arc::new(ManyKeys(256)));
+        g.add_edge(a, b, "small");
+        g.add_edge(b, a, "big");
+        let keys = allocate_keys(&g).unwrap();
+        for kr in keys.values() {
+            assert_eq!(kr.base & !kr.mask, 0, "base must sit on mask boundary");
+        }
+    }
+
+    #[test]
+    fn two_partitions_same_vertex() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        g.add_edge(a, b, "p1");
+        g.add_edge(a, b, "p2");
+        let keys = allocate_keys(&g).unwrap();
+        let k1 = keys[&(a, "p1".to_string())];
+        let k2 = keys[&(a, "p2".to_string())];
+        assert_ne!(k1.base, k2.base, "each message type needs its own keys");
+    }
+
+    #[test]
+    fn deterministic() {
+        let build = || {
+            let mut g = MachineGraph::new();
+            let a = g.add_vertex(Arc::new(ManyKeys(10)));
+            let b = g.add_vertex(Arc::new(ManyKeys(20)));
+            g.add_edge(a, b, "x");
+            g.add_edge(b, a, "y");
+            allocate_keys(&g).unwrap()
+        };
+        assert_eq!(build(), build());
+    }
+}

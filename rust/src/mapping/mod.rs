@@ -1,0 +1,271 @@
+//! The mapping phase (§6.3.2): graph → machine.
+//!
+//! Sub-steps, each its own algorithm run by the Figure-10 execution
+//! engine (see [`crate::algorithms`] and [`crate::front`]):
+//!
+//! 1. [`splitter`] — application graph → machine graph ("graph
+//!    partitioning", kept separate from the rest per §6.3.2);
+//! 2. [`placer`] — machine vertices → cores (radial first-fit with
+//!    resource accounting and constraint handling);
+//! 3. [`router`] — edges → multicast routing trees (NER: longest
+//!    dimension first, with BFS fallback around faults; Heathcote 2016);
+//! 4. [`keys`] — outgoing edge partitions → multicast key ranges;
+//! 5. [`tables`] — routing trees + keys → per-chip TCAM tables, with
+//!    optional default-route elision;
+//! 6. [`compress`] — order-exploiting table minimization (Mundy et
+//!    al. 2016);
+//! 7. [`tags`] — IP tag / reverse IP tag allocation on Ethernet chips;
+//! 8. [`database`] — the mapping database external live apps read (§6.9).
+
+pub mod compress;
+pub mod database;
+pub mod keys;
+pub mod placer;
+pub mod router;
+pub mod splitter;
+pub mod tables;
+pub mod tags;
+
+use std::collections::BTreeMap;
+
+use crate::graph::{AllocatedIpTag, AllocatedReverseIpTag, KeyRange, MachineGraph, VertexId};
+use crate::machine::{ChipCoord, CoreLocation, Machine};
+
+pub use placer::Placements;
+pub use router::{RoutingForest, RoutingTree, TreeNode};
+pub use splitter::GraphMapping;
+
+/// Everything mapping produces (the §6.3.2 outputs: placements, routing
+/// tables, routing keys, IP tags).
+pub struct Mapping {
+    pub placements: Placements,
+    pub forest: RoutingForest,
+    pub keys: BTreeMap<(VertexId, String), KeyRange>,
+    pub tables: BTreeMap<ChipCoord, crate::machine::router::RoutingTable>,
+    pub iptags: BTreeMap<(VertexId, String), AllocatedIpTag>,
+    pub reverse_iptags: BTreeMap<(VertexId, String), AllocatedReverseIpTag>,
+}
+
+/// Options controlling the mapping pipeline.
+#[derive(Debug, Clone)]
+pub struct MappingConfig {
+    /// Elide entries default routing would reproduce (§2's
+    /// straight-through rule) at table-generation time.
+    pub use_default_routes: bool,
+    /// Run the ordered-covering compressor on oversubscribed tables.
+    pub compress_tables: bool,
+    /// Fail if a compressed table still exceeds the 1024-entry TCAM.
+    pub enforce_table_capacity: bool,
+}
+
+impl Default for MappingConfig {
+    fn default() -> Self {
+        Self {
+            use_default_routes: true,
+            compress_tables: true,
+            enforce_table_capacity: true,
+        }
+    }
+}
+
+/// Run the full machine-graph mapping pipeline. (Application graphs are
+/// split first by [`splitter::split_graph`]; the front end wires both
+/// through the algorithm engine.)
+pub fn map_graph(
+    machine: &Machine,
+    graph: &MachineGraph,
+    config: &MappingConfig,
+) -> anyhow::Result<Mapping> {
+    let placements = placer::place(machine, graph)?;
+    let forest = router::route(machine, graph, &placements)?;
+    let keys = keys::allocate_keys(graph)?;
+    let mut tables = tables::build_tables(machine, graph, &forest, &keys, config)?;
+    if config.compress_tables {
+        for table in tables.values_mut() {
+            if !table.fits() {
+                *table = compress::compress(table);
+            }
+        }
+    }
+    if config.enforce_table_capacity {
+        for (chip, table) in &tables {
+            if !table.fits() {
+                anyhow::bail!(
+                    "routing table on chip {chip:?} needs {} entries (TCAM holds {})",
+                    table.len(),
+                    crate::machine::ROUTER_ENTRIES
+                );
+            }
+        }
+    }
+    let (iptags, reverse_iptags) = tags::allocate_tags(machine, graph, &placements)?;
+    Ok(Mapping { placements, forest, keys, tables, iptags, reverse_iptags })
+}
+
+impl Mapping {
+    pub fn placement(&self, v: VertexId) -> Option<CoreLocation> {
+        self.placements.of(v)
+    }
+}
+
+/// Run the same pipeline through the Figure-10 algorithm execution
+/// engine: each step is an [`crate::algorithms::Algorithm`] with token
+/// inputs/outputs, and the executor derives the workflow order. Returns
+/// the mapping plus the executed workflow (for provenance).
+pub fn map_graph_via_engine(
+    machine: &Machine,
+    graph: &MachineGraph,
+    config: &MappingConfig,
+) -> anyhow::Result<(Mapping, crate::algorithms::Workflow)> {
+    use crate::algorithms::{Algorithm, Blackboard, Executor};
+
+    let mut board = Blackboard::new();
+    board.put("machine", machine.clone());
+    board.put("machine_graph", graph.clone());
+    board.put("mapping_config", config.clone());
+
+    let algorithms = vec![
+        Algorithm::new(
+            "radial_placer",
+            &["machine", "machine_graph"],
+            &["placements"],
+            |b| {
+                let m: &Machine = b.get("machine")?;
+                let g: &MachineGraph = b.get("machine_graph")?;
+                let p = placer::place(m, g)?;
+                b.put("placements", p);
+                Ok(())
+            },
+        ),
+        Algorithm::new(
+            "ner_router",
+            &["machine", "machine_graph", "placements"],
+            &["routing_trees"],
+            |b| {
+                let m: &Machine = b.get("machine")?;
+                let g: &MachineGraph = b.get("machine_graph")?;
+                let p: &Placements = b.get("placements")?;
+                let f = router::route(m, g, p)?;
+                b.put("routing_trees", f);
+                Ok(())
+            },
+        ),
+        Algorithm::new(
+            "key_allocator",
+            &["machine_graph"],
+            &["routing_keys"],
+            |b| {
+                let g: &MachineGraph = b.get("machine_graph")?;
+                let k = keys::allocate_keys(g)?;
+                b.put("routing_keys", k);
+                Ok(())
+            },
+        ),
+        Algorithm::new(
+            "table_generator",
+            &["machine", "machine_graph", "routing_trees", "routing_keys", "mapping_config"],
+            &["routing_tables"],
+            |b| {
+                let m: &Machine = b.get("machine")?;
+                let g: &MachineGraph = b.get("machine_graph")?;
+                let f: &RoutingForest = b.get("routing_trees")?;
+                let k: &BTreeMap<(VertexId, String), KeyRange> = b.get("routing_keys")?;
+                let c: &MappingConfig = b.get("mapping_config")?;
+                let t = tables::build_tables(m, g, f, k, c)?;
+                b.put("routing_tables", t);
+                Ok(())
+            },
+        ),
+        Algorithm::new(
+            "table_compressor",
+            &["routing_tables", "mapping_config"],
+            &["compressed_tables"],
+            |b| {
+                let c: &MappingConfig = b.get("mapping_config")?;
+                let compress = c.compress_tables;
+                let enforce = c.enforce_table_capacity;
+                let mut t: BTreeMap<ChipCoord, crate::machine::router::RoutingTable> =
+                    b.take("routing_tables")?;
+                if compress {
+                    for table in t.values_mut() {
+                        if !table.fits() {
+                            *table = compress::compress(table);
+                        }
+                    }
+                }
+                if enforce {
+                    for (chip, table) in &t {
+                        anyhow::ensure!(
+                            table.fits(),
+                            "routing table on chip {chip:?} exceeds TCAM after compression"
+                        );
+                    }
+                }
+                b.put("compressed_tables", t);
+                Ok(())
+            },
+        ),
+        Algorithm::new(
+            "tag_allocator",
+            &["machine", "machine_graph", "placements"],
+            &["ip_tags"],
+            |b| {
+                let m: &Machine = b.get("machine")?;
+                let g: &MachineGraph = b.get("machine_graph")?;
+                let p: &Placements = b.get("placements")?;
+                let tags = tags::allocate_tags(m, g, p)?;
+                b.put("ip_tags", tags);
+                Ok(())
+            },
+        ),
+    ];
+
+    let workflow = Executor::new(algorithms).execute(
+        &mut board,
+        &["placements", "compressed_tables", "routing_keys", "ip_tags"],
+    )?;
+
+    let placements: Placements = board.take("placements")?;
+    let forest: RoutingForest = board.take("routing_trees")?;
+    let keys: BTreeMap<(VertexId, String), KeyRange> = board.take("routing_keys")?;
+    let tables: BTreeMap<ChipCoord, crate::machine::router::RoutingTable> =
+        board.take("compressed_tables")?;
+    let (iptags, reverse_iptags): (
+        BTreeMap<(VertexId, String), AllocatedIpTag>,
+        BTreeMap<(VertexId, String), AllocatedReverseIpTag>,
+    ) = board.take("ip_tags")?;
+
+    Ok((
+        Mapping { placements, forest, keys, tables, iptags, reverse_iptags },
+        workflow,
+    ))
+}
+
+#[cfg(test)]
+mod engine_tests {
+    use super::*;
+    use crate::graph::machine_graph::test_support::TestVertex;
+    use crate::machine::MachineBuilder;
+
+    #[test]
+    fn engine_pipeline_matches_direct() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        g.add_edge(a, b, "p");
+        let direct = map_graph(&m, &g, &MappingConfig::default()).unwrap();
+        let (engine, workflow) =
+            map_graph_via_engine(&m, &g, &MappingConfig::default()).unwrap();
+        assert_eq!(direct.placements.of(a), engine.placements.of(a));
+        assert_eq!(direct.keys, engine.keys);
+        assert_eq!(
+            direct.tables.keys().collect::<Vec<_>>(),
+            engine.tables.keys().collect::<Vec<_>>()
+        );
+        // The engine ordered the placer before the router.
+        let pos = |n: &str| workflow.0.iter().position(|x| x == n).unwrap();
+        assert!(pos("radial_placer") < pos("ner_router"));
+        assert!(pos("table_generator") < pos("table_compressor"));
+    }
+}

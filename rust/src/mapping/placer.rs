@@ -1,0 +1,361 @@
+//! Placement: machine vertices → cores (§6.3.2).
+//!
+//! Radial first-fit: chips are visited in BFS order from the boot chip
+//! (0,0) over working links, and each vertex takes the next free
+//! application core whose chip still has SDRAM for it — keeping
+//! communicating vertices dense around the root the way the production
+//! placer does. Constrained vertices (fixed core or chip, and virtual
+//! vertices bound to their device's virtual chip) are placed first.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::graph::{MachineGraph, VertexId};
+use crate::machine::{ChipCoord, CoreLocation, Machine, ALL_DIRECTIONS};
+
+/// The placement map (vertex ↔ core, both directions).
+#[derive(Debug, Default, Clone)]
+pub struct Placements {
+    by_vertex: BTreeMap<VertexId, CoreLocation>,
+    by_core: BTreeMap<CoreLocation, VertexId>,
+}
+
+impl Placements {
+    pub fn insert(&mut self, v: VertexId, loc: CoreLocation) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.by_core.contains_key(&loc),
+            "core {loc} already hosts a vertex"
+        );
+        anyhow::ensure!(
+            !self.by_vertex.contains_key(&v),
+            "vertex {v:?} placed twice"
+        );
+        self.by_vertex.insert(v, loc);
+        self.by_core.insert(loc, v);
+        Ok(())
+    }
+
+    pub fn of(&self, v: VertexId) -> Option<CoreLocation> {
+        self.by_vertex.get(&v).copied()
+    }
+
+    pub fn at(&self, loc: CoreLocation) -> Option<VertexId> {
+        self.by_core.get(&loc).copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (VertexId, CoreLocation)> + '_ {
+        self.by_vertex.iter().map(|(v, l)| (*v, *l))
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_vertex.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_vertex.is_empty()
+    }
+
+    /// Vertices on one chip, in core order.
+    pub fn on_chip(&self, chip: ChipCoord) -> Vec<(VertexId, CoreLocation)> {
+        self.by_core
+            .range(
+                CoreLocation::new(chip.0, chip.1, 0)
+                    ..=CoreLocation::new(chip.0, chip.1, u8::MAX),
+            )
+            .map(|(l, v)| (*v, *l))
+            .collect()
+    }
+
+    /// All chips that host at least one vertex.
+    pub fn used_chips(&self) -> BTreeSet<ChipCoord> {
+        self.by_core.keys().map(|l| l.chip()).collect()
+    }
+
+    /// The vertex -> core map (borrowed; used by DataGenContext).
+    pub fn as_map(&self) -> &BTreeMap<VertexId, CoreLocation> {
+        &self.by_vertex
+    }
+
+    /// Cores already occupied on one chip.
+    pub fn cores_used_on(&self, chip: ChipCoord) -> BTreeSet<u8> {
+        self.on_chip(chip).into_iter().map(|(_, l)| l.p).collect()
+    }
+}
+
+/// BFS order of chips from the boot chip over working links — the
+/// "radial" chip ordering. Unreachable chips (isolated by faults) are
+/// appended last so they can still host unconnected work.
+pub fn radial_chip_order(machine: &Machine) -> Vec<ChipCoord> {
+    let root = (0, 0);
+    let mut order = Vec::with_capacity(machine.n_chips());
+    let mut seen = BTreeSet::new();
+    let mut queue = VecDeque::new();
+    if machine.chip(root).is_some() {
+        queue.push_back(root);
+        seen.insert(root);
+    }
+    while let Some(c) = queue.pop_front() {
+        order.push(c);
+        for d in ALL_DIRECTIONS {
+            if let Some(n) = machine.link_target(c, d) {
+                if machine.chip(n).map(|ch| !ch.is_virtual).unwrap_or(false)
+                    && seen.insert(n)
+                {
+                    queue.push_back(n);
+                }
+            }
+        }
+    }
+    for c in machine.chip_coords() {
+        if !seen.contains(&c) && !machine.chip(c).map(|ch| ch.is_virtual).unwrap_or(true) {
+            order.push(c);
+        }
+    }
+    order
+}
+
+/// Per-chip resource ledger used during placement.
+struct ChipLedger {
+    free_cores: Vec<u8>,
+    sdram_free: u64,
+}
+
+/// Place every vertex of `graph` on `machine`.
+pub fn place(machine: &Machine, graph: &MachineGraph) -> anyhow::Result<Placements> {
+    let mut placements = Placements::default();
+    let mut ledgers: BTreeMap<ChipCoord, ChipLedger> = machine
+        .chips()
+        .filter(|c| !c.is_virtual)
+        .map(|c| {
+            (
+                (c.x, c.y),
+                ChipLedger {
+                    free_cores: c.application_processors().map(|p| p.id).collect(),
+                    sdram_free: c.sdram.user_size() as u64,
+                },
+            )
+        })
+        .collect();
+
+    // Pass 1: constrained vertices (fixed cores beat chip constraints).
+    let mut unplaced: Vec<VertexId> = Vec::new();
+    let mut chip_constrained: Vec<(VertexId, ChipCoord)> = Vec::new();
+    for (vid, vertex) in graph.vertices() {
+        if let Some(vl) = vertex.virtual_link() {
+            // Virtual vertices sit on the virtual chip the front end added
+            // for their device; nothing is loaded there (§7.2).
+            let vchip = find_virtual_chip(machine, vl.attached_to, vl.direction)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no virtual chip for device vertex {} (attached {:?})",
+                        vertex.label(),
+                        vl.attached_to
+                    )
+                })?;
+            placements.insert(vid, CoreLocation::new(vchip.0, vchip.1, 0))?;
+        } else if let Some(loc) = vertex.placement_constraint() {
+            let ledger = ledgers
+                .get_mut(&loc.chip())
+                .ok_or_else(|| anyhow::anyhow!("constraint on missing chip {:?}", loc.chip()))?;
+            let pos = ledger
+                .free_cores
+                .iter()
+                .position(|p| *p == loc.p)
+                .ok_or_else(|| anyhow::anyhow!("constrained core {loc} unavailable"))?;
+            ledger.free_cores.remove(pos);
+            charge_sdram(ledger, graph, vid, loc.chip())?;
+            placements.insert(vid, loc)?;
+        } else if let Some(chip) = vertex.chip_constraint() {
+            chip_constrained.push((vid, chip));
+        } else {
+            unplaced.push(vid);
+        }
+    }
+
+    for (vid, chip) in chip_constrained {
+        let ledger = ledgers
+            .get_mut(&chip)
+            .ok_or_else(|| anyhow::anyhow!("chip constraint on missing chip {chip:?}"))?;
+        let p = ledger
+            .free_cores
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no free core on constrained chip {chip:?}"))?;
+        ledger.free_cores.retain(|c| *c != p);
+        charge_sdram(ledger, graph, vid, chip)?;
+        placements.insert(vid, CoreLocation::new(chip.0, chip.1, p))?;
+    }
+
+    // Pass 2: everything else, radial first-fit.
+    let order = radial_chip_order(machine);
+    let mut chip_cursor = 0usize;
+    for vid in unplaced {
+        let sdram = graph.vertex(vid).resources().sdram_bytes;
+        let mut tried = 0usize;
+        loop {
+            if tried >= order.len() {
+                anyhow::bail!(
+                    "machine full: cannot place vertex {} ({} cores, {} chips)",
+                    graph.vertex(vid).label(),
+                    graph.n_vertices(),
+                    machine.n_chips()
+                );
+            }
+            let chip = order[(chip_cursor + tried) % order.len()];
+            let ledger = ledgers.get_mut(&chip).unwrap();
+            if !ledger.free_cores.is_empty() && ledger.sdram_free >= sdram {
+                let p = ledger.free_cores.remove(0);
+                ledger.sdram_free -= sdram;
+                placements.insert(vid, CoreLocation::new(chip.0, chip.1, p))?;
+                // Stay on this chip while it has room (dense packing).
+                chip_cursor = (chip_cursor + tried) % order.len();
+                break;
+            }
+            tried += 1;
+        }
+    }
+
+    Ok(placements)
+}
+
+fn charge_sdram(
+    ledger: &mut ChipLedger,
+    graph: &MachineGraph,
+    vid: VertexId,
+    chip: ChipCoord,
+) -> anyhow::Result<()> {
+    let sdram = graph.vertex(vid).resources().sdram_bytes;
+    anyhow::ensure!(
+        ledger.sdram_free >= sdram,
+        "chip {chip:?} out of SDRAM for constrained vertex"
+    );
+    ledger.sdram_free -= sdram;
+    Ok(())
+}
+
+fn find_virtual_chip(
+    machine: &Machine,
+    attached_to: ChipCoord,
+    direction: crate::machine::Direction,
+) -> Option<ChipCoord> {
+    // The wire to the device is recorded as an explicit virtual link on
+    // the machine (§5.1: coordinates need not align with the grid).
+    let target = machine.link_target(attached_to, direction)?;
+    machine.chip(target).filter(|c| c.is_virtual).map(|c| (c.x, c.y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::machine_graph::test_support::TestVertex;
+    use crate::machine::{Direction, MachineBuilder};
+
+    #[test]
+    fn radial_order_starts_at_root_and_covers() {
+        let m = MachineBuilder::spinn5().build();
+        let order = radial_chip_order(&m);
+        assert_eq!(order[0], (0, 0));
+        assert_eq!(order.len(), 48);
+        // Early chips are near the root.
+        assert!(m.hop_distance((0, 0), order[1]) == 1);
+    }
+
+    #[test]
+    fn places_one_vertex_per_core() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        for i in 0..20 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        let p = place(&m, &g).unwrap();
+        assert_eq!(p.len(), 20);
+        let cores: BTreeSet<_> = p.iter().map(|(_, l)| l).collect();
+        assert_eq!(cores.len(), 20, "two vertices share a core");
+        // 17 app cores per chip: 20 vertices need 2 chips.
+        assert_eq!(p.used_chips().len(), 2);
+    }
+
+    #[test]
+    fn respects_sdram_budget() {
+        // §6.3.1's example: vertices needing 20MB each; 127MB user SDRAM
+        // fits 6 per chip even though 17 cores are free.
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        for i in 0..10 {
+            g.add_vertex(TestVertex::with_sdram(&format!("v{i}"), 20 * 1024 * 1024));
+        }
+        let p = place(&m, &g).unwrap();
+        for chip in p.used_chips() {
+            let total: u64 = p
+                .on_chip(chip)
+                .iter()
+                .map(|(v, _)| g.vertex(*v).resources().sdram_bytes)
+                .sum();
+            assert!(total <= 127 * 1024 * 1024);
+        }
+        assert!(p.used_chips().len() >= 2);
+    }
+
+    #[test]
+    fn machine_full_errors() {
+        let m = MachineBuilder::spinn3().build(); // 4 chips x 17 cores = 68
+        let mut g = MachineGraph::new();
+        for i in 0..69 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        assert!(place(&m, &g).is_err());
+    }
+
+    #[test]
+    fn core_constraint_honoured() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let loc = CoreLocation::new(1, 1, 5);
+        let v = g.add_vertex(TestVertex::constrained("c", loc));
+        g.add_vertex(TestVertex::arc("free"));
+        let p = place(&m, &g).unwrap();
+        assert_eq!(p.of(v), Some(loc));
+    }
+
+    #[test]
+    fn conflicting_core_constraints_error() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let loc = CoreLocation::new(0, 0, 1);
+        g.add_vertex(TestVertex::constrained("a", loc));
+        g.add_vertex(TestVertex::constrained("b", loc));
+        assert!(place(&m, &g).is_err());
+    }
+
+    #[test]
+    fn monitor_core_never_used() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        for i in 0..68 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        let p = place(&m, &g).unwrap();
+        assert!(p.iter().all(|(_, l)| l.p != 0), "monitor core was allocated");
+    }
+
+    #[test]
+    fn dead_chip_skipped() {
+        let m = MachineBuilder::spinn3().dead_chip((1, 1)).build();
+        let mut g = MachineGraph::new();
+        for i in 0..51 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        let p = place(&m, &g).unwrap();
+        assert!(!p.used_chips().contains(&(1, 1)));
+    }
+
+    #[test]
+    fn radial_order_survives_partition() {
+        // Kill the links around (0,0) except East: BFS must still reach all.
+        let m = MachineBuilder::spinn3()
+            .dead_link((0, 0), Direction::North)
+            .dead_link((0, 0), Direction::NorthEast)
+            .build();
+        let order = radial_chip_order(&m);
+        assert_eq!(order.len(), 4);
+    }
+}

@@ -1,0 +1,429 @@
+//! Multicast routing: one routing tree per outgoing edge partition
+//! (§6.3.2; algorithmic background in Heathcote 2016).
+//!
+//! NER (Nearest-neighbour, longest-dimension-first) routing: targets are
+//! connected to the growing tree nearest-first; each connection walks
+//! greedily from the nearest tree node towards the target, taking the
+//! hexagonal diagonal (NE/SW) while both axes agree and the longest
+//! remaining dimension otherwise, falling back to BFS over working links
+//! when faults block the ideal step. Every chip in a tree has exactly
+//! one inbound link — the invariant that makes multicast duplication
+//! impossible and enables default-route elision.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::graph::{MachineGraph, VertexId};
+use crate::machine::{ChipCoord, Direction, Machine, ALL_DIRECTIONS};
+
+use super::placer::Placements;
+
+/// One chip's role in a routing tree.
+#[derive(Debug, Clone, Default)]
+pub struct TreeNode {
+    /// Links this chip forwards the packet out of.
+    pub out_links: BTreeSet<Direction>,
+    /// Local cores the packet is delivered to on this chip.
+    pub local_cores: BTreeSet<u8>,
+    /// The link the packet arrives on (None at the source chip).
+    pub in_link: Option<Direction>,
+}
+
+/// The multicast tree for one (source vertex, partition).
+#[derive(Debug, Clone)]
+pub struct RoutingTree {
+    pub source: ChipCoord,
+    pub nodes: BTreeMap<ChipCoord, TreeNode>,
+}
+
+impl RoutingTree {
+    fn new(source: ChipCoord) -> Self {
+        let mut nodes = BTreeMap::new();
+        nodes.insert(source, TreeNode::default());
+        Self { source, nodes }
+    }
+
+    /// Total number of inter-chip hops in the tree.
+    pub fn n_links(&self) -> usize {
+        self.nodes.values().map(|n| n.out_links.len()).sum()
+    }
+
+    /// Every (chip, core) the tree delivers to.
+    pub fn destinations(&self) -> Vec<(ChipCoord, u8)> {
+        let mut out = Vec::new();
+        for (chip, node) in &self.nodes {
+            for p in &node.local_cores {
+                out.push((*chip, *p));
+            }
+        }
+        out
+    }
+}
+
+/// All routing trees of a mapped graph.
+#[derive(Debug, Default)]
+pub struct RoutingForest {
+    pub trees: BTreeMap<(VertexId, String), RoutingTree>,
+}
+
+/// Route every outgoing edge partition of `graph`.
+pub fn route(
+    machine: &Machine,
+    graph: &MachineGraph,
+    placements: &Placements,
+) -> anyhow::Result<RoutingForest> {
+    let mut forest = RoutingForest::default();
+    for partition in graph.partitions() {
+        let src_loc = placements.of(partition.pre).ok_or_else(|| {
+            anyhow::anyhow!("partition source {:?} unplaced", partition.pre)
+        })?;
+        // Destination cores, grouped per chip.
+        let mut dest_cores: BTreeMap<ChipCoord, BTreeSet<u8>> = BTreeMap::new();
+        for target in graph.partition_targets(partition) {
+            let loc = placements
+                .of(target)
+                .ok_or_else(|| anyhow::anyhow!("target {target:?} unplaced"))?;
+            dest_cores.entry(loc.chip()).or_default().insert(loc.p);
+        }
+        let tree = build_tree(machine, src_loc.chip(), &dest_cores)?;
+        forest
+            .trees
+            .insert((partition.pre, partition.id.clone()), tree);
+    }
+    Ok(forest)
+}
+
+/// Grow one NER tree from `source` to every chip in `dest_cores`.
+pub fn build_tree(
+    machine: &Machine,
+    source: ChipCoord,
+    dest_cores: &BTreeMap<ChipCoord, BTreeSet<u8>>,
+) -> anyhow::Result<RoutingTree> {
+    let mut tree = RoutingTree::new(source);
+
+    // Nearest targets first: they form the trunk later targets graft onto.
+    let mut targets: Vec<ChipCoord> = dest_cores.keys().copied().collect();
+    targets.sort_by_key(|t| (machine.hop_distance(source, *t), *t));
+
+    for t in targets {
+        if !tree.nodes.contains_key(&t) {
+            // Grow a path from the nearest tree chip.
+            let start = *tree
+                .nodes
+                .keys()
+                .min_by_key(|c| (machine.hop_distance(**c, t), **c))
+                .unwrap();
+            let path = find_path(machine, start, t)?;
+            graft(&mut tree, start, &path, machine);
+        }
+        let node = tree.nodes.get_mut(&t).unwrap();
+        for p in &dest_cores[&t] {
+            node.local_cores.insert(*p);
+        }
+    }
+    Ok(tree)
+}
+
+/// Attach `path` (a list of directions from `start`) to the tree; only
+/// the suffix beyond the last chip already in the tree adds new links,
+/// preserving the single-inbound-link invariant.
+fn graft(tree: &mut RoutingTree, start: ChipCoord, path: &[Direction], machine: &Machine) {
+    // Compute the chip sequence along the path.
+    let mut chips = vec![start];
+    let mut cur = start;
+    for d in path {
+        cur = machine.link_target(cur, *d).expect("path uses working links");
+        chips.push(cur);
+    }
+    // Find the last path position already in the tree.
+    let mut graft_at = 0;
+    for (i, c) in chips.iter().enumerate() {
+        if tree.nodes.contains_key(c) {
+            graft_at = i;
+        }
+    }
+    for i in graft_at..path.len() {
+        let from = chips[i];
+        let to = chips[i + 1];
+        let d = path[i];
+        tree.nodes.entry(from).or_default().out_links.insert(d);
+        let node = tree.nodes.entry(to).or_default();
+        if node.in_link.is_none() && to != tree.source {
+            node.in_link = Some(d);
+        }
+    }
+}
+
+/// Greedy longest-dimension-first walk from `from` to `to`; falls back
+/// to BFS across working links when the ideal next hop is unavailable.
+pub fn find_path(
+    machine: &Machine,
+    from: ChipCoord,
+    to: ChipCoord,
+) -> anyhow::Result<Vec<Direction>> {
+    let mut path = Vec::new();
+    let mut cur = from;
+    let mut fuel = (machine.width + machine.height) as usize + 4;
+    while cur != to {
+        if fuel == 0 {
+            // Geometry said we should have arrived; fall back to BFS.
+            return bfs_path(machine, from, to);
+        }
+        fuel -= 1;
+        let (dx, dy) = machine.shortest_vector(cur, to);
+        let ideal = ideal_moves(dx, dy);
+        let mut stepped = false;
+        for d in ideal {
+            if let Some(next) = machine.link_target(cur, d) {
+                // Never step onto an unrelated virtual chip.
+                let ok = next == to
+                    || machine.chip(next).map(|c| !c.is_virtual).unwrap_or(false);
+                if ok {
+                    path.push(d);
+                    cur = next;
+                    stepped = true;
+                    break;
+                }
+            }
+        }
+        if !stepped {
+            // Faults block every productive direction: BFS the rest.
+            let rest = bfs_path(machine, cur, to)?;
+            path.extend(rest);
+            return Ok(path);
+        }
+    }
+    Ok(path)
+}
+
+/// Productive directions for the remaining vector, best first:
+/// diagonal while both axes agree, else longest dimension first.
+fn ideal_moves(dx: i32, dy: i32) -> Vec<Direction> {
+    let mut out = Vec::with_capacity(3);
+    if dx > 0 && dy > 0 {
+        out.push(Direction::NorthEast);
+    }
+    if dx < 0 && dy < 0 {
+        out.push(Direction::SouthWest);
+    }
+    let x_move = if dx > 0 {
+        Some(Direction::East)
+    } else if dx < 0 {
+        Some(Direction::West)
+    } else {
+        None
+    };
+    let y_move = if dy > 0 {
+        Some(Direction::North)
+    } else if dy < 0 {
+        Some(Direction::South)
+    } else {
+        None
+    };
+    if dx.abs() >= dy.abs() {
+        out.extend(x_move);
+        out.extend(y_move);
+    } else {
+        out.extend(y_move);
+        out.extend(x_move);
+    }
+    out
+}
+
+/// Shortest path over working links (fault tolerant, used as fallback).
+fn bfs_path(
+    machine: &Machine,
+    from: ChipCoord,
+    to: ChipCoord,
+) -> anyhow::Result<Vec<Direction>> {
+    let mut prev: BTreeMap<ChipCoord, (ChipCoord, Direction)> = BTreeMap::new();
+    let mut queue = VecDeque::new();
+    queue.push_back(from);
+    let mut seen = BTreeSet::new();
+    seen.insert(from);
+    while let Some(c) = queue.pop_front() {
+        if c == to {
+            let mut dirs = Vec::new();
+            let mut cur = to;
+            while cur != from {
+                let (p, d) = prev[&cur];
+                dirs.push(d);
+                cur = p;
+            }
+            dirs.reverse();
+            return Ok(dirs);
+        }
+        for d in ALL_DIRECTIONS {
+            if let Some(n) = machine.link_target(c, d) {
+                let ok = n == to
+                    || machine.chip(n).map(|ch| !ch.is_virtual).unwrap_or(false);
+                if ok && seen.insert(n) {
+                    prev.insert(n, (c, d));
+                    queue.push_back(n);
+                }
+            }
+        }
+    }
+    anyhow::bail!("no route from {from:?} to {to:?} (machine partitioned?)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineBuilder;
+    use crate::util::prop;
+    use crate::util::SplitMix64;
+
+    fn dests(chips: &[(ChipCoord, u8)]) -> BTreeMap<ChipCoord, BTreeSet<u8>> {
+        let mut m: BTreeMap<ChipCoord, BTreeSet<u8>> = BTreeMap::new();
+        for (c, p) in chips {
+            m.entry(*c).or_default().insert(*p);
+        }
+        m
+    }
+
+    /// Follow the tree from the source, collecting deliveries; checks the
+    /// tree is consistent (every out_link lands on a tree node) and that
+    /// no chip is visited twice (no duplicate delivery).
+    fn walk(machine: &Machine, tree: &RoutingTree) -> Vec<(ChipCoord, u8)> {
+        let mut visited = BTreeSet::new();
+        let mut out = Vec::new();
+        let mut stack = vec![tree.source];
+        while let Some(c) = stack.pop() {
+            assert!(visited.insert(c), "chip {c:?} reached twice: duplicate packets");
+            let node = &tree.nodes[&c];
+            for p in &node.local_cores {
+                out.push((c, *p));
+            }
+            for d in &node.out_links {
+                let n = machine.link_target(c, *d).expect("tree uses working links");
+                stack.push(n);
+            }
+        }
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn single_target_straight_line() {
+        let m = MachineBuilder::grid(8, 8, false).build();
+        let tree = build_tree(&m, (0, 0), &dests(&[((4, 0), 3)])).unwrap();
+        assert_eq!(tree.n_links(), 4);
+        assert_eq!(walk(&m, &tree), vec![((4, 0), 3)]);
+    }
+
+    #[test]
+    fn diagonal_uses_ne_links() {
+        let m = MachineBuilder::grid(8, 8, false).build();
+        let tree = build_tree(&m, (0, 0), &dests(&[((3, 3), 1)])).unwrap();
+        // Pure diagonal: 3 NE hops.
+        assert_eq!(tree.n_links(), 3);
+    }
+
+    #[test]
+    fn multicast_shares_trunk() {
+        let m = MachineBuilder::grid(12, 12, false).build();
+        // Two targets behind one another: path to the far one reuses trunk.
+        let tree = build_tree(&m, (0, 0), &dests(&[((4, 0), 1), ((8, 0), 2)])).unwrap();
+        assert_eq!(tree.n_links(), 8, "trunk must be shared, not duplicated");
+        assert_eq!(walk(&m, &tree).len(), 2);
+    }
+
+    #[test]
+    fn self_delivery_on_source_chip() {
+        let m = MachineBuilder::grid(4, 4, false).build();
+        let tree = build_tree(&m, (1, 1), &dests(&[((1, 1), 5), ((2, 1), 6)])).unwrap();
+        let d = walk(&m, &tree);
+        assert!(d.contains(&((1, 1), 5)));
+        assert!(d.contains(&((2, 1), 6)));
+    }
+
+    #[test]
+    fn routes_around_dead_link() {
+        let m = MachineBuilder::grid(8, 8, false)
+            .dead_link((1, 0), Direction::East)
+            .build();
+        let tree = build_tree(&m, (0, 0), &dests(&[((4, 0), 1)])).unwrap();
+        assert_eq!(walk(&m, &tree), vec![((4, 0), 1)]);
+        assert!(tree.n_links() > 4, "must detour");
+    }
+
+    #[test]
+    fn routes_around_dead_chip() {
+        let m = MachineBuilder::grid(8, 8, false).dead_chip((2, 0)).build();
+        let tree = build_tree(&m, (0, 0), &dests(&[((4, 0), 1)])).unwrap();
+        assert_eq!(walk(&m, &tree), vec![((4, 0), 1)]);
+    }
+
+    #[test]
+    fn torus_wraps_short_way() {
+        let m = MachineBuilder::triads(1, 1).build(); // 12x12 torus
+        let tree = build_tree(&m, (0, 0), &dests(&[((11, 0), 1)])).unwrap();
+        assert_eq!(tree.n_links(), 1, "torus should wrap West one hop");
+    }
+
+    #[test]
+    fn unreachable_target_errors() {
+        // Isolate (3,3) completely.
+        let mut b = MachineBuilder::grid(8, 8, false);
+        for d in ALL_DIRECTIONS {
+            b = b.dead_link((3, 3), d);
+        }
+        let m = b.build();
+        assert!(build_tree(&m, (0, 0), &dests(&[((3, 3), 1)])).is_err());
+    }
+
+    #[test]
+    fn single_in_link_invariant() {
+        let m = MachineBuilder::grid(12, 12, false).build();
+        let mut rng = SplitMix64::new(99);
+        let targets: Vec<(ChipCoord, u8)> = (0..20)
+            .map(|_| (((rng.below(12) as u32, rng.below(12) as u32)), rng.below(16) as u8 + 1))
+            .collect();
+        let tree = build_tree(&m, (5, 5), &dests(&targets)).unwrap();
+        walk(&m, &tree); // asserts no chip reached twice
+    }
+
+    #[test]
+    fn property_all_destinations_reached() {
+        // E2-style invariant: every requested (chip, core) is delivered,
+        // exactly once, over random machines with random faults.
+        prop::check(25, 0xbeef, |rng| {
+            let mut b = MachineBuilder::grid(10, 10, rng.below(2) == 0);
+            // Random dead links (avoid partitioning by limiting count).
+            for _ in 0..rng.below(6) {
+                let c = (rng.below(10) as u32, rng.below(10) as u32);
+                let d = ALL_DIRECTIONS[rng.below(6)];
+                b = b.dead_link(c, d);
+            }
+            let m = b.build();
+            let source = (rng.below(10) as u32, rng.below(10) as u32);
+            let mut want: Vec<(ChipCoord, u8)> = (0..1 + rng.below(15))
+                .map(|_| {
+                    (
+                        (rng.below(10) as u32, rng.below(10) as u32),
+                        1 + rng.below(16) as u8,
+                    )
+                })
+                .collect();
+            want.sort();
+            want.dedup();
+            let tree = match build_tree(&m, source, &dests(&want)) {
+                Ok(t) => t,
+                Err(_) => return, // random faults partitioned the machine
+            };
+            let mut got = Vec::new();
+            let mut visited = BTreeSet::new();
+            let mut stack = vec![source];
+            while let Some(c) = stack.pop() {
+                assert!(visited.insert(c), "duplicate visit {c:?}");
+                let node = &tree.nodes[&c];
+                got.extend(node.local_cores.iter().map(|p| (c, *p)));
+                for d in &node.out_links {
+                    stack.push(m.link_target(c, *d).expect("working link"));
+                }
+            }
+            got.sort();
+            assert_eq!(got, want, "delivered set mismatch");
+        });
+    }
+}

@@ -1,0 +1,310 @@
+//! Graph partitioning: application graph → machine graph (§6.3.2,
+//! Figure 6 c→d).
+//!
+//! Each application vertex is split into machine vertices over contiguous
+//! atom slices. The slice width is the largest count that (a) respects
+//! the vertex's `max_atoms_per_core` and (b) produces per-core resources
+//! that fit a core's DTCM/ITCM/cycle budget. Machine edges are then added
+//! so that "the flow of data between the vertices is still correct":
+//! one machine edge per (pre machine vertex, post machine vertex) pair of
+//! each application edge, in the same outgoing partition.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{
+    AppEdgeId, AppVertexId, ApplicationGraph, EdgeId, MachineGraph, Slice, VertexId,
+};
+use crate::machine::{Machine, DTCM_PER_CORE, ITCM_PER_CORE};
+
+/// The application↔machine graph correspondence kept for data generation
+/// (synaptic-matrix construction needs pre/post slices) and result
+/// extraction (reassembling per-atom recordings).
+#[derive(Debug, Default)]
+pub struct GraphMapping {
+    pub machine_vertices_of: BTreeMap<AppVertexId, Vec<(VertexId, Slice)>>,
+    pub app_vertex_of: BTreeMap<VertexId, (AppVertexId, Slice)>,
+    pub app_edge_of: BTreeMap<EdgeId, AppEdgeId>,
+}
+
+impl GraphMapping {
+    /// The machine vertex holding `atom` of `app_vertex`.
+    pub fn vertex_for_atom(&self, app_vertex: AppVertexId, atom: u32) -> Option<(VertexId, Slice)> {
+        self.machine_vertices_of
+            .get(&app_vertex)?
+            .iter()
+            .find(|(_, s)| s.contains(atom))
+            .copied()
+    }
+}
+
+/// Split `app` into a machine graph for `machine`'s core budgets.
+pub fn split_graph(
+    app: &ApplicationGraph,
+    machine: &Machine,
+) -> anyhow::Result<(MachineGraph, GraphMapping)> {
+    let cycles_cap = machine
+        .chips()
+        .flat_map(|c| c.application_processors())
+        .map(|p| p.cycles_per_timestep(1000))
+        .min()
+        .unwrap_or(200_000);
+
+    let mut mg = MachineGraph::new();
+    let mut mapping = GraphMapping::default();
+
+    // Split every application vertex into slices.
+    for (app_id, vertex) in app.vertices() {
+        let n_atoms = vertex.n_atoms();
+        anyhow::ensure!(n_atoms > 0, "vertex {} has no atoms", vertex.label());
+        let mut produced = Vec::new();
+        let mut lo = 0u32;
+        while lo < n_atoms {
+            let width = best_slice_width(vertex.as_ref(), lo, n_atoms, cycles_cap)?;
+            let slice = Slice::new(lo, (lo + width).min(n_atoms));
+            let mv = vertex.create_machine_vertex(slice);
+            let mv_id = mg.add_vertex(mv);
+            produced.push((mv_id, slice));
+            mapping.app_vertex_of.insert(mv_id, (app_id, slice));
+            lo = slice.hi;
+        }
+        mapping.machine_vertices_of.insert(app_id, produced);
+    }
+
+    // Expand application edges to machine edges (all pre-slices to all
+    // post-slices; the receiving binary demultiplexes by key, §5.2).
+    for (app_edge_id, edge) in app.edges() {
+        let partition = app.partition_of_edge(app_edge_id);
+        let pres = mapping.machine_vertices_of[&edge.pre].clone();
+        let posts = mapping.machine_vertices_of[&edge.post].clone();
+        for (pre_mv, _) in &pres {
+            for (post_mv, _) in &posts {
+                let eid = mg.add_edge(*pre_mv, *post_mv, partition);
+                mapping.app_edge_of.insert(eid, app_edge_id);
+            }
+        }
+    }
+
+    Ok((mg, mapping))
+}
+
+/// The widest slice starting at `lo` whose resources fit one core.
+fn best_slice_width(
+    vertex: &dyn crate::graph::ApplicationVertexImpl,
+    lo: u32,
+    n_atoms: u32,
+    cycles_cap: u64,
+) -> anyhow::Result<u32> {
+    let mut width = vertex.max_atoms_per_core().min(n_atoms - lo).max(1);
+    loop {
+        let slice = Slice::new(lo, lo + width);
+        let res = vertex.resources_for(slice);
+        if res.fits_core(DTCM_PER_CORE, ITCM_PER_CORE, cycles_cap) {
+            return Ok(width);
+        }
+        if width == 1 {
+            anyhow::bail!(
+                "vertex {} atom {lo} does not fit a core even alone \
+                 (dtcm={} itcm={} cycles={})",
+                vertex.label(),
+                res.dtcm_bytes,
+                res.itcm_bytes,
+                res.cpu_cycles_per_step
+            );
+        }
+        // Binary back-off: resource models are monotone in practice.
+        width /= 2;
+    }
+}
+
+/// Estimate how many chips a graph needs — used by machine discovery to
+/// size an allocation before a machine exists (§6.3.1).
+pub fn chips_required(app: &ApplicationGraph, machine_template: &Machine) -> anyhow::Result<u32> {
+    let (mg, _) = split_graph(app, machine_template)?;
+    let cores_per_chip = machine_template
+        .chips()
+        .map(|c| c.n_application_cores())
+        .min()
+        .unwrap_or(16)
+        .max(1);
+    // Cores bound...
+    let by_cores = mg.n_vertices().div_ceil(cores_per_chip);
+    // ...and SDRAM bound (§6.3.1's "10 vertices x 20 MB won't fit one chip").
+    let sdram_per_chip = machine_template
+        .chips()
+        .map(|c| c.sdram.user_size() as u64)
+        .min()
+        .unwrap_or(1) as u64;
+    let total_sdram: u64 = mg
+        .vertices()
+        .map(|(_, v)| v.resources().sdram_bytes)
+        .sum();
+    let by_sdram = total_sdram.div_ceil(sdram_per_chip.max(1)) as usize;
+    Ok(by_cores.max(by_sdram) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::any::Any;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::graph::{
+        ApplicationVertexImpl, DataGenContext, DataRegion, MachineVertexImpl,
+        ResourceRequirements,
+    };
+    use crate::machine::MachineBuilder;
+
+    #[derive(Debug)]
+    struct SliceRecorder {
+        atoms: u32,
+        max_per_core: u32,
+        dtcm_per_atom: u32,
+    }
+
+    #[derive(Debug)]
+    struct SliceMv {
+        slice: Slice,
+        dtcm: u32,
+    }
+
+    impl MachineVertexImpl for SliceMv {
+        fn label(&self) -> String {
+            format!("mv{}", self.slice)
+        }
+        fn resources(&self) -> ResourceRequirements {
+            ResourceRequirements {
+                dtcm_bytes: self.dtcm,
+                ..Default::default()
+            }
+        }
+        fn binary_name(&self) -> String {
+            "t.aplx".into()
+        }
+        fn generate_data(&self, _: &DataGenContext) -> Vec<DataRegion> {
+            vec![]
+        }
+        fn n_keys_for_partition(&self, _: &str) -> u32 {
+            self.slice.n_atoms()
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    impl ApplicationVertexImpl for SliceRecorder {
+        fn label(&self) -> String {
+            "app".into()
+        }
+        fn n_atoms(&self) -> u32 {
+            self.atoms
+        }
+        fn max_atoms_per_core(&self) -> u32 {
+            self.max_per_core
+        }
+        fn resources_for(&self, slice: Slice) -> ResourceRequirements {
+            ResourceRequirements {
+                dtcm_bytes: self.dtcm_per_atom * slice.n_atoms(),
+                ..Default::default()
+            }
+        }
+        fn create_machine_vertex(&self, slice: Slice) -> Arc<dyn MachineVertexImpl> {
+            Arc::new(SliceMv { slice, dtcm: self.dtcm_per_atom * slice.n_atoms() })
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    fn app_vertex(atoms: u32, max_per_core: u32, dtcm_per_atom: u32) -> Arc<dyn ApplicationVertexImpl> {
+        Arc::new(SliceRecorder { atoms, max_per_core, dtcm_per_atom })
+    }
+
+    #[test]
+    fn splits_by_max_atoms_per_core() {
+        // Figure 6(c)->(d): 4 atoms, 2 per core -> 2 machine vertices.
+        let mut app = ApplicationGraph::new();
+        let a = app.add_vertex(app_vertex(4, 2, 1));
+        let b = app.add_vertex(app_vertex(4, 4, 1));
+        app.add_edge(a, b, "p", None);
+        let machine = MachineBuilder::spinn3().build();
+        let (mg, mapping) = split_graph(&app, &machine).unwrap();
+        assert_eq!(mapping.machine_vertices_of[&a].len(), 2);
+        assert_eq!(mapping.machine_vertices_of[&b].len(), 1);
+        assert_eq!(mg.n_vertices(), 3);
+        // Both of a's slices connect to b's single vertex.
+        assert_eq!(mg.n_edges(), 2);
+    }
+
+    #[test]
+    fn splits_by_dtcm_budget() {
+        // 100 atoms, no per-core cap, but 1 KiB DTCM each: 64 fit in 64 KiB.
+        let mut app = ApplicationGraph::new();
+        let a = app.add_vertex(app_vertex(100, u32::MAX, 1024));
+        let _ = a;
+        let machine = MachineBuilder::spinn3().build();
+        let (mg, mapping) = split_graph(&app, &machine).unwrap();
+        let slices: Vec<Slice> = mapping.machine_vertices_of[&AppVertexId(0)]
+            .iter()
+            .map(|(_, s)| *s)
+            .collect();
+        assert!(slices.iter().all(|s| s.n_atoms() <= 64));
+        let total: u32 = slices.iter().map(|s| s.n_atoms()).sum();
+        assert_eq!(total, 100);
+        assert!(mg.n_vertices() >= 2);
+    }
+
+    #[test]
+    fn slices_are_contiguous_and_cover() {
+        let mut app = ApplicationGraph::new();
+        app.add_vertex(app_vertex(37, 5, 1));
+        let machine = MachineBuilder::spinn3().build();
+        let (_, mapping) = split_graph(&app, &machine).unwrap();
+        let slices = &mapping.machine_vertices_of[&AppVertexId(0)];
+        let mut expect_lo = 0;
+        for (_, s) in slices {
+            assert_eq!(s.lo, expect_lo);
+            expect_lo = s.hi;
+        }
+        assert_eq!(expect_lo, 37);
+    }
+
+    #[test]
+    fn vertex_for_atom_finds_slice() {
+        let mut app = ApplicationGraph::new();
+        let a = app.add_vertex(app_vertex(10, 4, 1));
+        let machine = MachineBuilder::spinn3().build();
+        let (_, mapping) = split_graph(&app, &machine).unwrap();
+        let (_, s) = mapping.vertex_for_atom(a, 5).unwrap();
+        assert!(s.contains(5));
+        assert!(mapping.vertex_for_atom(a, 100).is_none());
+    }
+
+    #[test]
+    fn oversized_atom_fails() {
+        let mut app = ApplicationGraph::new();
+        app.add_vertex(app_vertex(1, 1, 128 * 1024)); // 128 KiB in 64 KiB DTCM
+        let machine = MachineBuilder::spinn3().build();
+        assert!(split_graph(&app, &machine).is_err());
+    }
+
+    #[test]
+    fn edges_expand_all_pairs() {
+        let mut app = ApplicationGraph::new();
+        let a = app.add_vertex(app_vertex(4, 2, 1)); // 2 mvs
+        let b = app.add_vertex(app_vertex(6, 2, 1)); // 3 mvs
+        app.add_edge(a, b, "x", None);
+        let machine = MachineBuilder::spinn3().build();
+        let (mg, mapping) = split_graph(&app, &machine).unwrap();
+        assert_eq!(mg.n_edges(), 6);
+        // every machine edge traces back to the app edge
+        assert!(mapping.app_edge_of.values().all(|e| e.0 == 0));
+    }
+
+    #[test]
+    fn chips_required_accounts_cores_and_sdram() {
+        let machine = MachineBuilder::spinn5().build();
+        let mut app = ApplicationGraph::new();
+        app.add_vertex(app_vertex(17 * 3, 1, 1)); // 51 cores -> 3 chips
+        assert_eq!(chips_required(&app, &machine).unwrap(), 3);
+    }
+}

@@ -1,0 +1,202 @@
+//! IP tag and reverse IP tag allocation (§3, §6.3.2).
+//!
+//! Each board's Ethernet chip holds up to 8 tags. A vertex's tag request
+//! is served by the Ethernet chip of the board it was placed on;
+//! requests with identical (host, port, strip) can share a tag.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{AllocatedIpTag, AllocatedReverseIpTag, MachineGraph, VertexId};
+use crate::machine::{ChipCoord, Machine, IPTAGS_PER_BOARD};
+
+use super::placer::Placements;
+
+type TagMaps = (
+    BTreeMap<(VertexId, String), AllocatedIpTag>,
+    BTreeMap<(VertexId, String), AllocatedReverseIpTag>,
+);
+
+/// Allocate all requested tags.
+pub fn allocate_tags(
+    machine: &Machine,
+    graph: &MachineGraph,
+    placements: &Placements,
+) -> anyhow::Result<TagMaps> {
+    let mut iptags = BTreeMap::new();
+    let mut reverse = BTreeMap::new();
+    // Per-board: next free tag id, plus shared-tag index.
+    let mut next_tag: BTreeMap<ChipCoord, u8> = BTreeMap::new();
+    let mut shared: BTreeMap<(ChipCoord, String, u16, bool), u8> = BTreeMap::new();
+
+    for (vid, vertex) in graph.vertices() {
+        let res = vertex.resources();
+        if res.iptags.is_empty() && res.reverse_iptags.is_empty() {
+            continue;
+        }
+        let placement = placements
+            .of(vid)
+            .ok_or_else(|| anyhow::anyhow!("vertex {} unplaced", vertex.label()))?;
+        let board = machine
+            .nearest_ethernet(placement.chip())
+            .ok_or_else(|| anyhow::anyhow!("no ethernet for chip {:?}", placement.chip()))?;
+
+        for req in &res.iptags {
+            let share_key = (board, req.host.clone(), req.port, req.strip_sdp);
+            let tag = match shared.get(&share_key) {
+                Some(t) => *t,
+                None => {
+                    let t = alloc_tag(&mut next_tag, board)?;
+                    shared.insert(share_key, t);
+                    t
+                }
+            };
+            iptags.insert(
+                (vid, req.label.clone()),
+                AllocatedIpTag {
+                    board,
+                    tag,
+                    host: req.host.clone(),
+                    port: req.port,
+                    strip_sdp: req.strip_sdp,
+                },
+            );
+        }
+        for req in &res.reverse_iptags {
+            // Reverse tags cannot be shared: each maps a UDP port to one core.
+            let tag = alloc_tag(&mut next_tag, board)?;
+            reverse.insert(
+                (vid, req.label.clone()),
+                AllocatedReverseIpTag {
+                    board,
+                    tag,
+                    port: req.port,
+                    destination: placement,
+                },
+            );
+        }
+    }
+    Ok((iptags, reverse))
+}
+
+fn alloc_tag(next_tag: &mut BTreeMap<ChipCoord, u8>, board: ChipCoord) -> anyhow::Result<u8> {
+    let t = next_tag.entry(board).or_insert(1);
+    anyhow::ensure!(
+        (*t as usize) <= IPTAGS_PER_BOARD,
+        "board {board:?} out of IP tags ({IPTAGS_PER_BOARD} available)"
+    );
+    let out = *t;
+    *t += 1;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::any::Any;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::graph::{
+        DataGenContext, DataRegion, IpTagRequest, MachineVertexImpl, ResourceRequirements,
+        ReverseIpTagRequest,
+    };
+    use crate::machine::MachineBuilder;
+    use crate::mapping::placer;
+
+    #[derive(Debug)]
+    struct Tagged {
+        tags: Vec<IpTagRequest>,
+        rtags: Vec<ReverseIpTagRequest>,
+    }
+
+    impl Tagged {
+        fn arc(tags: Vec<IpTagRequest>, rtags: Vec<ReverseIpTagRequest>) -> Arc<dyn MachineVertexImpl> {
+            Arc::new(Self { tags, rtags })
+        }
+    }
+
+    impl MachineVertexImpl for Tagged {
+        fn label(&self) -> String {
+            "tagged".into()
+        }
+        fn resources(&self) -> ResourceRequirements {
+            ResourceRequirements {
+                iptags: self.tags.clone(),
+                reverse_iptags: self.rtags.clone(),
+                ..Default::default()
+            }
+        }
+        fn binary_name(&self) -> String {
+            "t.aplx".into()
+        }
+        fn generate_data(&self, _: &DataGenContext) -> Vec<DataRegion> {
+            vec![]
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+
+    fn tag_req(label: &str, host: &str, port: u16) -> IpTagRequest {
+        IpTagRequest { host: host.into(), port, strip_sdp: false, label: label.into() }
+    }
+
+    #[test]
+    fn allocates_on_board_ethernet() {
+        let m = MachineBuilder::spinn5().build();
+        let mut g = MachineGraph::new();
+        let v = g.add_vertex(Tagged::arc(vec![tag_req("out", "host", 17893)], vec![]));
+        let p = placer::place(&m, &g).unwrap();
+        let (tags, _) = allocate_tags(&m, &g, &p).unwrap();
+        let t = &tags[&(v, "out".to_string())];
+        assert_eq!(t.board, (0, 0));
+        assert_eq!(t.tag, 1);
+    }
+
+    #[test]
+    fn identical_requests_share_a_tag() {
+        let m = MachineBuilder::spinn5().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(Tagged::arc(vec![tag_req("x", "h", 1)], vec![]));
+        let b = g.add_vertex(Tagged::arc(vec![tag_req("y", "h", 1)], vec![]));
+        let p = placer::place(&m, &g).unwrap();
+        let (tags, _) = allocate_tags(&m, &g, &p).unwrap();
+        assert_eq!(tags[&(a, "x".to_string())].tag, tags[&(b, "y".to_string())].tag);
+    }
+
+    #[test]
+    fn distinct_requests_get_distinct_tags() {
+        let m = MachineBuilder::spinn5().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(Tagged::arc(vec![tag_req("x", "h", 1)], vec![]));
+        let b = g.add_vertex(Tagged::arc(vec![tag_req("y", "h", 2)], vec![]));
+        let p = placer::place(&m, &g).unwrap();
+        let (tags, _) = allocate_tags(&m, &g, &p).unwrap();
+        assert_ne!(tags[&(a, "x".to_string())].tag, tags[&(b, "y".to_string())].tag);
+    }
+
+    #[test]
+    fn board_exhaustion_errors() {
+        let m = MachineBuilder::spinn5().build();
+        let mut g = MachineGraph::new();
+        for i in 0..9 {
+            g.add_vertex(Tagged::arc(vec![tag_req("t", "h", 5000 + i)], vec![]));
+        }
+        let p = placer::place(&m, &g).unwrap();
+        assert!(allocate_tags(&m, &g, &p).is_err());
+    }
+
+    #[test]
+    fn reverse_tag_targets_placement() {
+        let m = MachineBuilder::spinn5().build();
+        let mut g = MachineGraph::new();
+        let v = g.add_vertex(Tagged::arc(
+            vec![],
+            vec![ReverseIpTagRequest { port: 12345, label: "in".into() }],
+        ));
+        let p = placer::place(&m, &g).unwrap();
+        let (_, rtags) = allocate_tags(&m, &g, &p).unwrap();
+        let rt = &rtags[&(v, "in".to_string())];
+        assert_eq!(rt.destination, p.of(v).unwrap());
+        assert_eq!(rt.port, 12345);
+    }
+}

@@ -1,0 +1,385 @@
+//! The PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Python never runs here — `make artifacts` lowered the L2 JAX models
+//! (which call the L1 Pallas kernels) to HLO *text*; this module parses
+//! that text, compiles each module once on the PJRT CPU client, and
+//! serves executions to the simulated cores in [`crate::apps`].
+//!
+//! See /opt/xla-example/README.md for why text (not serialized proto) is
+//! the interchange format.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    ScalarF32(f32),
+}
+
+/// One compiled artifact.
+struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    input_shapes: Vec<Vec<usize>>,
+    n_outputs: usize,
+}
+
+/// The artifact runtime: one compiled executable per model variant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: BTreeMap<String, (String, Vec<Vec<usize>>, usize)>,
+    models: std::cell::RefCell<BTreeMap<String, LoadedModel>>,
+    /// Execution counter (perf accounting).
+    pub execs: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (reads `manifest.json`; compiles each
+    /// model lazily on first use so binaries that exercise one model
+    /// don't pay for all).
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {manifest_path:?}: {e}; run `make artifacts` first"
+            )
+        })?;
+        let json = Json::parse(&text)?;
+        let mut manifest = BTreeMap::new();
+        for (name, entry) in json.as_obj().ok_or_else(|| anyhow::anyhow!("bad manifest"))? {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("manifest entry {name} missing file"))?
+                .to_string();
+            let inputs = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("manifest entry {name} missing inputs"))?
+                .iter()
+                .map(|i| {
+                    i.get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default()
+                })
+                .collect();
+            let n_outputs = entry
+                .get("n_outputs")
+                .and_then(Json::as_usize)
+                .unwrap_or(1);
+            manifest.insert(name.clone(), (file, inputs, n_outputs));
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            models: std::cell::RefCell::new(BTreeMap::new()),
+            execs: std::cell::Cell::new(0),
+        })
+    }
+
+    /// The default artifact directory: `$SPINNTOOLS_ARTIFACTS` or
+    /// `<repo>/artifacts` relative to the crate.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SPINNTOOLS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest.keys().cloned().collect()
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.manifest.contains_key(name)
+    }
+
+    /// Input shapes declared by the manifest for one model.
+    pub fn input_shapes(&self, name: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+        Ok(self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no model {name}"))?
+            .1
+            .clone())
+    }
+
+    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
+        if self.models.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let (file, shapes, n_outputs) = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no model '{name}' in manifest"))?
+            .clone();
+        let path = self.dir.join(&file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.models.borrow_mut().insert(
+            name.to_string(),
+            LoadedModel { exe, input_shapes: shapes, n_outputs },
+        );
+        Ok(())
+    }
+
+    /// Execute a model. Inputs must match the manifest shapes; outputs
+    /// come back flattened, one `HostTensor::F32`/`I32` per output.
+    pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let models = self.models.borrow();
+        let model = models.get(name).unwrap();
+        anyhow::ensure!(
+            inputs.len() == model.input_shapes.len(),
+            "model {name}: {} inputs given, {} expected",
+            inputs.len(),
+            model.input_shapes.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (input, shape)) in inputs.iter().zip(&model.input_shapes).enumerate() {
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            let lit = match input {
+                HostTensor::F32(v) => {
+                    let n: usize = shape.iter().product();
+                    anyhow::ensure!(
+                        v.len() == n,
+                        "model {name} input {i}: {} elems, shape {shape:?} wants {n}",
+                        v.len()
+                    );
+                    xla::Literal::vec1(v)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+                }
+                HostTensor::I32(v) => {
+                    let n: usize = shape.iter().product();
+                    anyhow::ensure!(v.len() == n, "model {name} input {i}: bad length");
+                    xla::Literal::vec1(v)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+                }
+                HostTensor::ScalarF32(v) => {
+                    anyhow::ensure!(shape.is_empty(), "input {i} is not scalar");
+                    xla::Literal::scalar(*v)
+                }
+            };
+            literals.push(lit);
+        }
+        self.execs.set(self.execs.get() + 1);
+        let result = model
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == model.n_outputs,
+            "model {name}: {} outputs, manifest says {}",
+            parts.len(),
+            model.n_outputs
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let ty = p
+                .element_type()
+                .map_err(|e| anyhow::anyhow!("element_type: {e:?}"))?;
+            match ty {
+                xla::ElementType::F32 => out.push(HostTensor::F32(
+                    p.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?,
+                )),
+                xla::ElementType::S32 => out.push(HostTensor::I32(
+                    p.to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?,
+                )),
+                other => anyhow::bail!("unsupported output type {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl HostTensor {
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => anyhow::bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_i32(self) -> anyhow::Result<Vec<i32>> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => anyhow::bail!("tensor is not i32"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Runtime {
+        Runtime::open_default().expect("artifacts missing — run `make artifacts`")
+    }
+
+    #[test]
+    fn manifest_lists_models() {
+        let rt = runtime();
+        assert!(rt.has_model("lif_step_n256"));
+        assert!(rt.has_model("conway_step_32x32"));
+        assert!(rt.has_model("poisson_step_n256"));
+    }
+
+    #[test]
+    fn lif_step_executes_and_decays() {
+        let rt = runtime();
+        let n = 64;
+        let params = vec![
+            (-1.0f32 / 10.0).exp(), // alpha_mem
+            (-1.0f32 / 0.5).exp(),
+            (-1.0f32 / 0.5).exp(),
+            -65.0,
+            -65.0,
+            -50.0,
+            2.0,
+            0.0,
+        ];
+        let v = vec![-55.0f32; n];
+        let z = vec![0.0f32; n];
+        let out = rt
+            .exec(
+                "lif_step_n64",
+                &[
+                    HostTensor::F32(v),
+                    HostTensor::F32(z.clone()),
+                    HostTensor::F32(z.clone()),
+                    HostTensor::F32(z.clone()),
+                    HostTensor::F32(z.clone()),
+                    HostTensor::F32(z.clone()),
+                    HostTensor::F32(params),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 5);
+        let v1 = out[0].as_f32().unwrap();
+        // decays toward -65 from -55
+        assert!(v1.iter().all(|x| *x < -55.0 && *x > -65.0), "v1[0]={}", v1[0]);
+        let spiked = out[4].as_f32().unwrap();
+        assert!(spiked.iter().all(|s| *s == 0.0));
+    }
+
+    #[test]
+    fn lif_step_spikes_with_input() {
+        let rt = runtime();
+        let n = 64;
+        let params = vec![0.9f32, 0.1, 0.1, -65.0, -65.0, -50.0, 2.0, 0.0];
+        let out = rt
+            .exec(
+                "lif_step_n64",
+                &[
+                    HostTensor::F32(vec![-65.0; n]),
+                    HostTensor::F32(vec![0.0; n]),
+                    HostTensor::F32(vec![0.0; n]),
+                    HostTensor::F32(vec![0.0; n]),
+                    HostTensor::F32(vec![1000.0; n]), // massive excitation
+                    HostTensor::F32(vec![0.0; n]),
+                    HostTensor::F32(params),
+                ],
+            )
+            .unwrap();
+        let spiked = out[4].as_f32().unwrap();
+        assert!(spiked.iter().all(|s| *s == 1.0));
+        let v1 = out[0].as_f32().unwrap();
+        assert!(v1.iter().all(|v| *v == -65.0), "reset to v_reset");
+    }
+
+    #[test]
+    fn conway_blinker_via_hlo() {
+        let rt = runtime();
+        let mut board = vec![0i32; 16 * 16];
+        board[2 * 16 + 1] = 1;
+        board[2 * 16 + 2] = 1;
+        board[2 * 16 + 3] = 1;
+        let out = rt
+            .exec("conway_step_16x16", &[HostTensor::I32(board)])
+            .unwrap();
+        let b1 = out[0].as_i32().unwrap();
+        assert_eq!(b1[1 * 16 + 2], 1);
+        assert_eq!(b1[2 * 16 + 2], 1);
+        assert_eq!(b1[3 * 16 + 2], 1);
+        assert_eq!(b1.iter().sum::<i32>(), 3);
+    }
+
+    #[test]
+    fn poisson_thinning_via_hlo() {
+        let rt = runtime();
+        let unif: Vec<f32> = (0..256).map(|i| i as f32 / 256.0).collect();
+        let out = rt
+            .exec(
+                "poisson_step_n256",
+                &[HostTensor::F32(unif), HostTensor::ScalarF32(0.25)],
+            )
+            .unwrap();
+        let spikes = out[0].as_f32().unwrap();
+        let count: f32 = spikes.iter().sum();
+        assert_eq!(count, 64.0); // exactly the uniforms below 0.25
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let rt = runtime();
+        assert!(rt.exec("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_errors() {
+        let rt = runtime();
+        assert!(rt.exec("lif_step_n64", &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_errors() {
+        let rt = runtime();
+        let bad = vec![HostTensor::F32(vec![0.0; 3]); 7];
+        assert!(rt.exec("lif_step_n64", &bad).is_err());
+    }
+}

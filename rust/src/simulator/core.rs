@@ -1,0 +1,205 @@
+//! The simulated application core: the [`CoreApp`] event interface
+//! (mirroring Spin1API's event-driven model, §3) and per-core state.
+//!
+//! A core app receives the same events a Spin1API binary registers
+//! callbacks for: start, the periodic timer, multicast packet arrival,
+//! SDP arrival — plus pause/resume hooks used by the Figure-9 run-cycle
+//! machinery. All interaction with the machine goes through [`CoreCtx`]
+//! (send packets, read data regions, record, count provenance), which
+//! the simulator translates into scheduled events.
+
+use std::collections::BTreeMap;
+
+use crate::machine::CoreLocation;
+use crate::transport::SdpMessage;
+
+use super::sdram::SdramStore;
+
+/// Run states, matching the states SCAMP reports for real cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    /// No application loaded.
+    Idle,
+    /// Loaded, waiting for the start signal.
+    Ready,
+    Running,
+    /// Reached its tick target; waiting for more run time (Figure 9).
+    Paused,
+    /// Called `exit()` — a completion state (§6.3).
+    Finished,
+    /// The app returned an error (§6.3.5's failure detection).
+    RunTimeError,
+}
+
+/// A recording channel: a region of SDRAM with a write cursor (the
+/// "recording regions" the buffer manager drains, §6.8).
+#[derive(Debug, Clone)]
+pub struct RecordingChannel {
+    pub addr: u32,
+    pub capacity: usize,
+    pub write_pos: usize,
+    /// Bytes that did not fit (reported via provenance).
+    pub lost_bytes: u64,
+}
+
+/// The API surface a core app sees (the Spin1API + recording library
+/// equivalent).
+pub struct CoreCtx<'a> {
+    pub loc: CoreLocation,
+    pub time_ns: u64,
+    /// Current timer tick (0 before the first tick).
+    pub tick: u64,
+    pub(super) mc_out: Vec<(u32, Option<u32>)>,
+    pub(super) sdp_out: Vec<SdpMessage>,
+    pub(super) regions: &'a BTreeMap<u32, (u32, u32)>,
+    pub(super) recordings: &'a mut BTreeMap<u32, RecordingChannel>,
+    pub(super) sdram: &'a mut SdramStore,
+    pub(super) provenance: &'a mut BTreeMap<String, u64>,
+    pub(super) exit_requested: &'a mut bool,
+}
+
+impl<'a> CoreCtx<'a> {
+    /// Send a multicast packet (key, optional payload).
+    pub fn send_mc(&mut self, key: u32, payload: Option<u32>) {
+        self.mc_out.push((key, payload));
+    }
+
+    /// Send an SDP message (e.g. to the host via an IP tag).
+    pub fn send_sdp(&mut self, msg: SdpMessage) {
+        self.sdp_out.push(msg);
+    }
+
+    /// Read a data region written by the loader (§6.3.3).
+    pub fn read_region(&self, id: u32) -> anyhow::Result<Vec<u8>> {
+        let (addr, len) = self
+            .regions
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("core {} has no region {id}", self.loc))?;
+        self.sdram.read(*addr, *len as usize)
+    }
+
+    /// Append to a recording channel. Returns false (and counts the
+    /// loss) if the buffer is full — the situation the Figure-9 cycle
+    /// sizing exists to avoid.
+    pub fn record(&mut self, channel: u32, bytes: &[u8]) -> bool {
+        let Some(ch) = self.recordings.get_mut(&channel) else {
+            *self.provenance.entry("record_no_channel".into()).or_insert(0) += 1;
+            return false;
+        };
+        if ch.write_pos + bytes.len() > ch.capacity {
+            ch.lost_bytes += bytes.len() as u64;
+            *self.provenance.entry("recording_overflow".into()).or_insert(0) += 1;
+            return false;
+        }
+        self.sdram
+            .write(ch.addr + ch.write_pos as u32, bytes)
+            .expect("recording buffer write");
+        ch.write_pos += bytes.len();
+        true
+    }
+
+    pub fn recording_space_left(&self, channel: u32) -> usize {
+        self.recordings
+            .get(&channel)
+            .map(|c| c.capacity - c.write_pos)
+            .unwrap_or(0)
+    }
+
+    /// DMA read from an arbitrary SDRAM address (the data speed-up
+    /// reader streams recording buffers this way, §6.8).
+    pub fn read_sdram(&self, addr: u32, len: usize) -> anyhow::Result<Vec<u8>> {
+        self.sdram.read(addr, len)
+    }
+
+    /// DMA write to an arbitrary SDRAM address.
+    pub fn write_sdram(&mut self, addr: u32, data: &[u8]) -> anyhow::Result<()> {
+        self.sdram.write(addr, data)
+    }
+
+    /// Bump a named provenance counter (§6.3.5's "custom core-level
+    /// statistics").
+    pub fn count(&mut self, name: &str, delta: u64) {
+        *self.provenance.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Enter the Finished completion state after this event.
+    pub fn exit(&mut self) {
+        *self.exit_requested = true;
+    }
+}
+
+/// A simulated application binary (the Spin1API callback set).
+///
+/// Not `Send`: apps may hold `Arc<crate::runtime::Runtime>` (PJRT client
+/// handles are not thread-safe) and the simulator is single-threaded.
+pub trait CoreApp {
+    /// Called once when the start signal arrives.
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let _ = ctx;
+        Ok(())
+    }
+
+    /// The periodic timer event (tick counts from 1).
+    fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()>;
+
+    /// A multicast packet arrived.
+    fn on_mc_packet(
+        &mut self,
+        key: u32,
+        payload: Option<u32>,
+        ctx: &mut CoreCtx,
+    ) -> anyhow::Result<()> {
+        let _ = (key, payload, ctx);
+        Ok(())
+    }
+
+    /// An SDP message arrived on this core's port.
+    fn on_sdp(&mut self, msg: &SdpMessage, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let _ = (msg, ctx);
+        Ok(())
+    }
+
+    /// The run was paused (end of a Figure-9 cycle).
+    fn on_pause(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let _ = ctx;
+        Ok(())
+    }
+
+    /// The run resumed; recording buffers were drained and reset.
+    fn on_resume(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let _ = ctx;
+        Ok(())
+    }
+}
+
+/// Per-core simulator state.
+pub(crate) struct SimCore {
+    pub app: Option<Box<dyn CoreApp>>,
+    pub state: CoreState,
+    /// Kept for debugging/provenance displays.
+    #[allow(dead_code)]
+    pub binary_name: String,
+    /// region id -> (sdram addr, length).
+    pub regions: BTreeMap<u32, (u32, u32)>,
+    pub recordings: BTreeMap<u32, RecordingChannel>,
+    pub provenance: BTreeMap<String, u64>,
+    /// Ticks completed so far.
+    pub ticks_done: u64,
+    /// Target tick count for the current run cycle.
+    pub run_until: u64,
+}
+
+impl SimCore {
+    pub fn idle() -> Self {
+        Self {
+            app: None,
+            state: CoreState::Idle,
+            binary_name: String::new(),
+            regions: BTreeMap::new(),
+            recordings: BTreeMap::new(),
+            provenance: BTreeMap::new(),
+            ticks_done: 0,
+            run_until: 0,
+        }
+    }
+}

@@ -1,0 +1,952 @@
+//! A discrete-event simulator of a SpiNNaker machine.
+//!
+//! The hardware substitute for this reproduction (DESIGN.md §2): a
+//! cycle-approximate model of the router fabric (TCAM matching, default
+//! routing, bounded output queues with the §2 drop-after-wait behaviour
+//! and the single dropped-packet register of §6.10), per-chip SDRAM,
+//! per-core event-driven applications ([`CoreApp`]), SCAMP-style host
+//! operations with the §6.8 protocol cost models, IP tag tables and a
+//! host UDP inbox.
+//!
+//! Virtual time is nanoseconds. All behaviour is deterministic: events
+//! at equal times are ordered by insertion sequence.
+
+mod core;
+pub mod scamp;
+mod sdram;
+
+pub use self::core::{CoreApp, CoreCtx, CoreState, RecordingChannel};
+pub use sdram::{SdramStore, SDRAM_BASE};
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use crate::machine::router::{PacketSource, Route, RoutingDecision, RoutingTable};
+use crate::machine::{ChipCoord, CoreLocation, Direction, Machine};
+use crate::transport::SdpMessage;
+
+use self::core::SimCore;
+
+/// Wire/latency model. Defaults are calibrated so the three §6.8 data
+/// paths reproduce the paper's measured throughputs (see DESIGN.md E1):
+/// ~8 Mb/s SCAMP reads on the Ethernet chip, ~2 Mb/s off it, ~40 Mb/s
+/// for the multicast streaming protocol from any chip.
+#[derive(Debug, Clone)]
+pub struct WireModel {
+    /// Round trip for one 256-byte SCAMP read at the Ethernet chip
+    /// (request + response through the UDP stack): 256 B / 8 Mb/s.
+    pub eth_read_rtt_ns: u64,
+    /// Extra cost per 256-byte SCAMP read when the target chip is not
+    /// the Ethernet chip: the request/response must be broken into
+    /// 24-bit P2P messages and reassembled (Figure 11 middle).
+    pub p2p_read_penalty_ns: u64,
+    /// Additional per-hop cost of the P2P relay.
+    pub p2p_per_hop_ns: u64,
+    /// Latency of one UDP frame between host and board.
+    pub udp_frame_ns: u64,
+}
+
+impl Default for WireModel {
+    fn default() -> Self {
+        Self {
+            // 256 B * 8 bits / 8 Mb/s = 256 us.
+            eth_read_rtt_ns: 256_000,
+            // Total off-chip read ~ 1024 us/256 B => ~2 Mb/s.
+            p2p_read_penalty_ns: 744_000,
+            p2p_per_hop_ns: 4_000,
+            udp_frame_ns: 50_000,
+        }
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Simulation timestep (the timer period), microseconds.
+    pub timestep_us: u32,
+    /// Serialisation time of one multicast packet on an inter-chip link
+    /// (~6 M packets/s on silicon → ~166 ns).
+    pub link_packet_ns: u64,
+    /// Router pipeline latency per hop.
+    pub router_pipeline_ns: u64,
+    /// Delivery latency into a core's incoming queue.
+    pub local_deliver_ns: u64,
+    /// Output-queue depth per link; beyond this the router waits...
+    pub link_queue_depth: u64,
+    /// ...up to this long, then drops the packet (§2). The tools
+    /// configure generous router timeouts in production; congestion
+    /// experiments override this downwards.
+    pub drop_wait_ns: u64,
+    /// Spacing between successive packets emitted by one core within a
+    /// single callback: a core produces packets as it iterates its
+    /// neurons (~200 MHz ARM), not as an instantaneous burst.
+    pub send_spacing_ns: u64,
+    /// Keys at or above this value are flow-controlled, never dropped —
+    /// the §6.8 fast-extraction configuration ("the machine is set up so
+    /// that packets are guaranteed to arrive"; single path, no deadlock).
+    pub lossless_key_min: u32,
+    /// Whether chips run the dropped-packet reinjector (§6.10).
+    pub reinjection: bool,
+    /// Delay before the reinjection core re-issues a dropped packet.
+    pub reinject_delay_ns: u64,
+    pub wire: WireModel,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            timestep_us: 1000,
+            link_packet_ns: 166,
+            router_pipeline_ns: 100,
+            local_deliver_ns: 200,
+            link_queue_depth: 16,
+            drop_wait_ns: 200_000,
+            send_spacing_ns: 500,
+            lossless_key_min: 0xFF00_0000,
+            reinjection: true,
+            reinject_delay_ns: 10_000,
+            wire: WireModel::default(),
+        }
+    }
+}
+
+/// Router statistics per chip (§6.3.5 provenance: "router statistics,
+/// including dropped multicast packets").
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterStats {
+    pub mc_routed: u64,
+    pub mc_default_routed: u64,
+    pub mc_dropped: u64,
+    pub mc_reinjected: u64,
+    /// Drops that hit an occupied register and are unrecoverable (§6.10).
+    pub mc_lost_forever: u64,
+}
+
+/// Whole-machine counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimStats {
+    pub events_processed: u64,
+    pub mc_sent: u64,
+    pub mc_delivered: u64,
+    pub sdp_sent: u64,
+}
+
+pub(crate) struct SimChip {
+    pub table: RoutingTable,
+    pub sdram: SdramStore,
+    pub cores: BTreeMap<u8, SimCore>,
+    /// tag id -> (host, port, strip_sdp).
+    pub iptags: BTreeMap<u8, (String, u16, bool)>,
+    /// udp port -> destination core.
+    pub reverse_iptags: BTreeMap<u16, CoreLocation>,
+    pub router_stats: RouterStats,
+    /// The single hardware dropped-packet register (§6.10).
+    pub dropped_register: Option<(u32, Option<u32>)>,
+    pub drop_overflow: bool,
+}
+
+#[derive(Debug)]
+enum EventKind {
+    /// Timer event for one core.
+    Tick(CoreLocation),
+    /// A multicast packet at a chip's router.
+    Router {
+        chip: ChipCoord,
+        entered: PacketSource,
+        key: u32,
+        payload: Option<u32>,
+    },
+    /// Deliver a multicast packet into a core.
+    DeliverMc {
+        loc: CoreLocation,
+        key: u32,
+        payload: Option<u32>,
+    },
+    /// Deliver an SDP message to a core.
+    DeliverSdp(SdpMessage),
+    /// A UDP frame reaches the host.
+    HostUdp { port: u16, data: Vec<u8> },
+    /// The reinjection core services the dropped-packet register.
+    Reinject(ChipCoord),
+}
+
+struct Event {
+    time: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The simulated machine.
+pub struct SimMachine {
+    pub machine: Machine,
+    pub config: SimConfig,
+    time_ns: u64,
+    seq: u64,
+    events: BinaryHeap<Reverse<Event>>,
+    chips: BTreeMap<ChipCoord, SimChip>,
+    /// Packets consumed by external devices on virtual chips.
+    pub device_inbox: BTreeMap<ChipCoord, Vec<(u32, Option<u32>)>>,
+    /// UDP frames that reached the host: (arrival time, port, payload).
+    pub host_inbox: VecDeque<(u64, u16, Vec<u8>)>,
+    link_busy: BTreeMap<(ChipCoord, Direction), u64>,
+    /// Serialisation cursor of each Ethernet chip's UDP uplink — the
+    /// bandwidth bottleneck that makes the §6.8 throughput numbers real.
+    udp_busy: BTreeMap<ChipCoord, u64>,
+    pub stats: SimStats,
+}
+
+impl SimMachine {
+    /// Boot a simulated machine with the given geometry. (Plays the role
+    /// of powering on + SCAMP flood-boot: afterwards the host can query
+    /// the machine and load applications.)
+    pub fn boot(machine: Machine, config: SimConfig) -> Self {
+        let mut chips = BTreeMap::new();
+        for chip in machine.chips() {
+            if chip.is_virtual {
+                continue;
+            }
+            let mut cores = BTreeMap::new();
+            for p in chip.processors.iter() {
+                cores.insert(p.id, SimCore::idle());
+            }
+            chips.insert(
+                (chip.x, chip.y),
+                SimChip {
+                    table: RoutingTable::new(),
+                    sdram: SdramStore::new(chip.sdram.user_size()),
+                    cores,
+                    iptags: BTreeMap::new(),
+                    reverse_iptags: BTreeMap::new(),
+                    router_stats: RouterStats::default(),
+                    dropped_register: None,
+                    drop_overflow: false,
+                },
+            );
+        }
+        let device_inbox = machine
+            .chips()
+            .filter(|c| c.is_virtual)
+            .map(|c| ((c.x, c.y), Vec::new()))
+            .collect();
+        Self {
+            machine,
+            config,
+            time_ns: 0,
+            seq: 0,
+            events: BinaryHeap::new(),
+            chips,
+            device_inbox,
+            host_inbox: VecDeque::new(),
+            link_busy: BTreeMap::new(),
+            udp_busy: BTreeMap::new(),
+            stats: SimStats::default(),
+        }
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.time_ns
+    }
+
+    /// Advance the host clock (host-side protocol costs).
+    pub(crate) fn advance_host_time(&mut self, ns: u64) {
+        self.time_ns += ns;
+    }
+
+    fn push_event(&mut self, time: u64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Event { time, seq: self.seq, kind }));
+    }
+
+    pub(crate) fn chip(&self, c: ChipCoord) -> anyhow::Result<&SimChip> {
+        self.chips
+            .get(&c)
+            .ok_or_else(|| anyhow::anyhow!("no such chip {c:?}"))
+    }
+
+    pub(crate) fn chip_mut(&mut self, c: ChipCoord) -> anyhow::Result<&mut SimChip> {
+        self.chips
+            .get_mut(&c)
+            .ok_or_else(|| anyhow::anyhow!("no such chip {c:?}"))
+    }
+
+    /// Router stats for provenance extraction.
+    pub fn router_stats(&self, c: ChipCoord) -> Option<RouterStats> {
+        self.chips.get(&c).map(|ch| ch.router_stats)
+    }
+
+    /// Sum of router stats across the machine.
+    pub fn total_router_stats(&self) -> RouterStats {
+        let mut out = RouterStats::default();
+        for ch in self.chips.values() {
+            out.mc_routed += ch.router_stats.mc_routed;
+            out.mc_default_routed += ch.router_stats.mc_default_routed;
+            out.mc_dropped += ch.router_stats.mc_dropped;
+            out.mc_reinjected += ch.router_stats.mc_reinjected;
+            out.mc_lost_forever += ch.router_stats.mc_lost_forever;
+        }
+        out
+    }
+
+    /// Inject a multicast packet from a core (hot path of the fabric).
+    /// Public: tests and custom harnesses inject traffic directly.
+    pub fn inject_mc(&mut self, from: CoreLocation, key: u32, payload: Option<u32>) {
+        self.inject_mc_after(from, key, payload, 0);
+    }
+
+    pub(crate) fn inject_mc_after(
+        &mut self,
+        from: CoreLocation,
+        key: u32,
+        payload: Option<u32>,
+        delay_ns: u64,
+    ) {
+        self.stats.mc_sent += 1;
+        let t = self.time_ns + delay_ns;
+        self.push_event(
+            t + self.config.router_pipeline_ns,
+            EventKind::Router {
+                chip: from.chip(),
+                entered: PacketSource::Local(from.p),
+                key,
+                payload,
+            },
+        );
+    }
+
+    /// Process events until the queue is empty.
+    pub fn run_until_idle(&mut self) -> anyhow::Result<()> {
+        while let Some(Reverse(ev)) = self.events.pop() {
+            debug_assert!(ev.time >= self.time_ns, "time went backwards");
+            self.time_ns = ev.time;
+            self.stats.events_processed += 1;
+            self.dispatch(ev.kind)?;
+        }
+        Ok(())
+    }
+
+    fn dispatch(&mut self, kind: EventKind) -> anyhow::Result<()> {
+        match kind {
+            EventKind::Tick(loc) => self.handle_tick(loc),
+            EventKind::Router { chip, entered, key, payload } => {
+                self.handle_router(chip, entered, key, payload)
+            }
+            EventKind::DeliverMc { loc, key, payload } => {
+                self.stats.mc_delivered += 1;
+                self.with_core_app(loc, |app, ctx| app.on_mc_packet(key, payload, ctx))
+            }
+            EventKind::DeliverSdp(msg) => {
+                let loc = msg.header.dest();
+                self.with_core_app(loc, |app, ctx| app.on_sdp(&msg, ctx))
+            }
+            EventKind::HostUdp { port, data } => {
+                self.host_inbox.push_back((self.time_ns, port, data));
+                Ok(())
+            }
+            EventKind::Reinject(chip) => self.handle_reinject(chip),
+        }
+    }
+
+    fn handle_router(
+        &mut self,
+        chip: ChipCoord,
+        entered: PacketSource,
+        key: u32,
+        payload: Option<u32>,
+    ) -> anyhow::Result<()> {
+        let Some(sim_chip) = self.chips.get(&chip) else {
+            // Packet wandered onto a dead/virtual chip — treat as device
+            // consumption if virtual, else drop.
+            if let Some(inbox) = self.device_inbox.get_mut(&chip) {
+                inbox.push((key, payload));
+            }
+            return Ok(());
+        };
+        let decision = sim_chip.table.route_packet(key, entered);
+        match decision {
+            RoutingDecision::Routed(route) => {
+                self.chips.get_mut(&chip).unwrap().router_stats.mc_routed += 1;
+                self.forward(chip, route, key, payload)?;
+            }
+            RoutingDecision::DefaultRouted(d) => {
+                self.chips.get_mut(&chip).unwrap().router_stats.mc_default_routed += 1;
+                self.forward(chip, Route::EMPTY.with_link(d), key, payload)?;
+            }
+            RoutingDecision::Dropped => {
+                // A locally-injected packet with no matching entry is
+                // simply discarded (§2) — it never reaches the dropped-
+                // packet register, so reinjection cannot resurrect it.
+                if let Some(c) = self.chips.get_mut(&chip) {
+                    c.router_stats.mc_dropped += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        chip: ChipCoord,
+        route: Route,
+        key: u32,
+        payload: Option<u32>,
+    ) -> anyhow::Result<()> {
+        let now = self.time_ns;
+        for p in route.processors() {
+            self.push_event(
+                now + self.config.local_deliver_ns,
+                EventKind::DeliverMc {
+                    loc: CoreLocation::new(chip.0, chip.1, p),
+                    key,
+                    payload,
+                },
+            );
+        }
+        for d in route.links() {
+            let Some(next) = self.machine.link_target(chip, d) else {
+                // Route over a dead link: the packet is gone for good —
+                // reinjection would just replay it into the same void.
+                if let Some(c) = self.chips.get_mut(&chip) {
+                    c.router_stats.mc_dropped += 1;
+                    c.router_stats.mc_lost_forever += 1;
+                }
+                continue;
+            };
+            // Congestion model: bounded output queue, drop after wait (§2)
+            // — except for flow-controlled (lossless) key ranges.
+            let busy = self.link_busy.get(&(chip, d)).copied().unwrap_or(0);
+            let depart = busy.max(now);
+            let backlog = depart.saturating_sub(now);
+            if backlog > self.config.drop_wait_ns && key < self.config.lossless_key_min {
+                self.drop_packet(chip, key, payload);
+                continue;
+            }
+            self.link_busy
+                .insert((chip, d), depart + self.config.link_packet_ns);
+            let arrive = depart + self.config.link_packet_ns + self.config.router_pipeline_ns;
+            if self
+                .machine
+                .chip(next)
+                .map(|c| c.is_virtual)
+                .unwrap_or(false)
+            {
+                self.device_inbox.entry(next).or_default().push((key, payload));
+            } else {
+                self.push_event(
+                    arrive,
+                    EventKind::Router {
+                        chip: next,
+                        entered: PacketSource::Link(d.opposite()),
+                        key,
+                        payload,
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// §6.10 drop semantics: one hardware register; a second drop while
+    /// it is occupied is unrecoverable and only counted.
+    fn drop_packet(&mut self, chip: ChipCoord, key: u32, payload: Option<u32>) {
+        let reinjection = self.config.reinjection;
+        let delay = self.config.reinject_delay_ns;
+        let now = self.time_ns;
+        let Some(c) = self.chips.get_mut(&chip) else { return };
+        c.router_stats.mc_dropped += 1;
+        if c.dropped_register.is_none() {
+            c.dropped_register = Some((key, payload));
+            if reinjection {
+                self.push_event(now + delay, EventKind::Reinject(chip));
+            }
+        } else {
+            c.drop_overflow = true;
+            c.router_stats.mc_lost_forever += 1;
+        }
+    }
+
+    fn handle_reinject(&mut self, chip: ChipCoord) -> anyhow::Result<()> {
+        let now = self.time_ns;
+        let Some(c) = self.chips.get_mut(&chip) else {
+            return Ok(());
+        };
+        if let Some((key, payload)) = c.dropped_register.take() {
+            c.router_stats.mc_reinjected += 1;
+            // Re-issue as if sent by the monitor core.
+            self.push_event(
+                now + self.config.router_pipeline_ns,
+                EventKind::Router {
+                    chip,
+                    entered: PacketSource::Local(0),
+                    key,
+                    payload,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    fn handle_tick(&mut self, loc: CoreLocation) -> anyhow::Result<()> {
+        // Check run state first.
+        {
+            let chip = self.chip_mut(loc.chip())?;
+            let core = chip
+                .cores
+                .get_mut(&loc.p)
+                .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+            if core.state != CoreState::Running {
+                return Ok(());
+            }
+            if core.ticks_done >= core.run_until {
+                core.state = CoreState::Paused;
+                return Ok(());
+            }
+            core.ticks_done += 1;
+        }
+        let timestep_ns = self.config.timestep_us as u64 * 1000;
+        self.with_core_app(loc, |app, ctx| app.on_timer(ctx))?;
+        // Schedule the next tick (or pause at the boundary).
+        let (done, until, state) = {
+            let chip = self.chip(loc.chip())?;
+            let core = &chip.cores[&loc.p];
+            (core.ticks_done, core.run_until, core.state)
+        };
+        if state == CoreState::Running {
+            if done < until {
+                let t = self.time_ns + timestep_ns;
+                self.push_event(t, EventKind::Tick(loc));
+            } else {
+                let mut pause_needed = false;
+                {
+                    let chip = self.chip_mut(loc.chip())?;
+                    let core = chip.cores.get_mut(&loc.p).unwrap();
+                    if core.state == CoreState::Running {
+                        core.state = CoreState::Paused;
+                        pause_needed = true;
+                    }
+                }
+                if pause_needed {
+                    self.with_core_app(loc, |app, ctx| app.on_pause(ctx))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one core-app callback with a properly wired [`CoreCtx`], then
+    /// flush its outboxes into events.
+    pub(crate) fn with_core_app(
+        &mut self,
+        loc: CoreLocation,
+        f: impl FnOnce(&mut dyn CoreApp, &mut CoreCtx) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        let time_ns = self.time_ns;
+        let (mut app, mut mc_out, mut sdp_out, result, exit_requested) = {
+            let chip = self
+                .chips
+                .get_mut(&loc.chip())
+                .ok_or_else(|| anyhow::anyhow!("no chip {:?}", loc.chip()))?;
+            let core = chip
+                .cores
+                .get_mut(&loc.p)
+                .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+            let Some(mut app) = core.app.take() else {
+                return Ok(()); // packet to an idle core: silently ignored
+            };
+            let mut exit_requested = false;
+            let mut ctx = CoreCtx {
+                loc,
+                time_ns,
+                tick: core.ticks_done,
+                mc_out: Vec::new(),
+                sdp_out: Vec::new(),
+                regions: &core.regions,
+                recordings: &mut core.recordings,
+                sdram: &mut chip.sdram,
+                provenance: &mut core.provenance,
+                exit_requested: &mut exit_requested,
+            };
+            let result = f(app.as_mut(), &mut ctx);
+            let mc_out = std::mem::take(&mut ctx.mc_out);
+            let sdp_out = std::mem::take(&mut ctx.sdp_out);
+            (app, mc_out, sdp_out, result, exit_requested)
+        };
+        // Put the app back and update state.
+        {
+            let chip = self.chips.get_mut(&loc.chip()).unwrap();
+            let core = chip.cores.get_mut(&loc.p).unwrap();
+            core.app = Some(std::mem::replace(&mut app, Box::new(NullApp)));
+            drop(app);
+            if result.is_err() {
+                core.state = CoreState::RunTimeError;
+            } else if exit_requested {
+                core.state = CoreState::Finished;
+            }
+        }
+        // Flush outboxes. Successive packets from one callback are
+        // spaced out as the core would actually produce them.
+        let spacing = self.config.send_spacing_ns;
+        for (i, (key, payload)) in mc_out.drain(..).enumerate() {
+            self.inject_mc_after(loc, key, payload, i as u64 * spacing);
+        }
+        for msg in sdp_out.drain(..) {
+            self.route_sdp(loc, msg)?;
+        }
+        // A failing callback marks the core RTE but does not stop the
+        // simulation: the tools detect the state afterwards (§6.3.5).
+        if let Err(e) = result {
+            let chip = self.chips.get_mut(&loc.chip()).unwrap();
+            let core = chip.cores.get_mut(&loc.p).unwrap();
+            core.provenance
+                .insert(format!("rte: {e}"), 1);
+        }
+        Ok(())
+    }
+
+    /// SDP routing: tagged messages go out via the board's Ethernet
+    /// (consulting the IP tag table, §3); untagged go core-to-core.
+    pub(crate) fn route_sdp(&mut self, from: CoreLocation, msg: SdpMessage) -> anyhow::Result<()> {
+        self.stats.sdp_sent += 1;
+        let now = self.time_ns;
+        if msg.header.tag != 0xff {
+            // Host-bound: relay to the Ethernet chip (P2P cost if the
+            // source is elsewhere), then UDP to the host.
+            let eth = self
+                .machine
+                .nearest_ethernet(from.chip())
+                .ok_or_else(|| anyhow::anyhow!("no ethernet for {from}"))?;
+            let hops = self.machine.hop_distance(from.chip(), eth) as u64;
+            let relay = hops * self.config.wire.p2p_per_hop_ns;
+            let chip = self.chip(eth)?;
+            let Some((_, port, strip)) = chip.iptags.get(&msg.header.tag).cloned() else {
+                anyhow::bail!("SDP with unset IP tag {} at {eth:?}", msg.header.tag)
+            };
+            let data = if strip { msg.data.clone() } else { msg.encode() };
+            // Serialise on the Ethernet uplink: one frame per slot.
+            let ready = now + relay;
+            let busy = self.udp_busy.get(&eth).copied().unwrap_or(0);
+            let depart = busy.max(ready);
+            self.udp_busy
+                .insert(eth, depart + self.config.wire.udp_frame_ns);
+            self.push_event(
+                depart + self.config.wire.udp_frame_ns,
+                EventKind::HostUdp { port, data },
+            );
+        } else {
+            // On-machine SDP: hop-proportional latency.
+            let dest = msg.header.dest();
+            let hops = self.machine.hop_distance(from.chip(), dest.chip()) as u64;
+            self.push_event(
+                now + (hops + 1) * self.config.wire.p2p_per_hop_ns,
+                EventKind::DeliverSdp(msg),
+            );
+        }
+        Ok(())
+    }
+
+    /// Host → machine SDP (via the board's Ethernet chip and the P2P
+    /// fabric): how the tools command individual cores, e.g. the fast
+    /// data-extraction reader (§6.8).
+    pub fn host_send_sdp(&mut self, msg: SdpMessage) -> anyhow::Result<()> {
+        let now = self.time_ns;
+        let dest = msg.header.dest();
+        let eth = self
+            .machine
+            .nearest_ethernet(dest.chip())
+            .ok_or_else(|| anyhow::anyhow!("no ethernet for {dest}"))?;
+        let hops = self.machine.hop_distance(eth, dest.chip()) as u64;
+        self.push_event(
+            now + self.config.wire.udp_frame_ns + hops * self.config.wire.p2p_per_hop_ns,
+            EventKind::DeliverSdp(msg),
+        );
+        Ok(())
+    }
+
+    /// Host → machine UDP (reverse IP tag path, §3/§6.9): deliver the
+    /// frame as SDP to the core registered for `port` on `board`.
+    pub fn host_send_udp(&mut self, board: ChipCoord, port: u16, data: Vec<u8>) -> anyhow::Result<()> {
+        let now = self.time_ns;
+        let chip = self.chip(board)?;
+        let dest = *chip
+            .reverse_iptags
+            .get(&port)
+            .ok_or_else(|| anyhow::anyhow!("no reverse IP tag for port {port} on {board:?}"))?;
+        let mut header = crate::transport::SdpHeader::to_core(dest, 1);
+        header.src_port = 7; // came from the outside world
+        let msg = SdpMessage::new(header, data);
+        let hops = self.machine.hop_distance(board, dest.chip()) as u64;
+        self.push_event(
+            now + self.config.wire.udp_frame_ns + hops * self.config.wire.p2p_per_hop_ns,
+            EventKind::DeliverSdp(msg),
+        );
+        Ok(())
+    }
+
+    /// Drain host-bound UDP frames for one port (the front end's
+    /// listener pump).
+    pub fn take_host_udp(&mut self, port: u16) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        self.host_inbox.retain(|(_, p, data)| {
+            if *p == port {
+                out.push(data.clone());
+                false
+            } else {
+                true
+            }
+        });
+        out
+    }
+
+    /// Schedule the first tick for every Running core (start of a run
+    /// cycle). `run_ticks` is added to each core's target.
+    pub fn start_run_cycle(&mut self, run_ticks: u64) {
+        let timestep_ns = self.config.timestep_us as u64 * 1000;
+        let locs: Vec<CoreLocation> = self
+            .chips
+            .iter()
+            .flat_map(|(c, chip)| {
+                chip.cores.iter().filter_map(move |(p, core)| {
+                    matches!(core.state, CoreState::Running | CoreState::Paused)
+                        .then_some(CoreLocation::new(c.0, c.1, *p))
+                })
+            })
+            .collect();
+        let now = self.time_ns;
+        for loc in locs {
+            let chip = self.chips.get_mut(&loc.chip()).unwrap();
+            let core = chip.cores.get_mut(&loc.p).unwrap();
+            core.run_until += run_ticks;
+            core.state = CoreState::Running;
+            self.push_event(now + timestep_ns, EventKind::Tick(loc));
+        }
+    }
+}
+
+/// Placeholder used while swapping apps in/out of cores.
+struct NullApp;
+impl CoreApp for NullApp {
+    fn on_timer(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::router::RoutingEntry;
+    use crate::machine::MachineBuilder;
+
+    /// An app that sends one packet per tick and records received keys.
+    struct PingApp {
+        key: u32,
+        received: std::sync::Arc<std::sync::Mutex<Vec<u32>>>,
+    }
+
+    impl CoreApp for PingApp {
+        fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+            ctx.send_mc(self.key, Some(ctx.tick as u32));
+            Ok(())
+        }
+        fn on_mc_packet(&mut self, key: u32, _p: Option<u32>, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+            self.received.lock().unwrap().push(key);
+            ctx.count("packets_in", 1);
+            Ok(())
+        }
+    }
+
+    fn shared() -> std::sync::Arc<std::sync::Mutex<Vec<u32>>> {
+        std::sync::Arc::new(std::sync::Mutex::new(Vec::new()))
+    }
+
+    #[test]
+    fn two_cores_exchange_packets() {
+        let machine = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(machine, SimConfig::default());
+        let rx_a = shared();
+        let rx_b = shared();
+        let a = CoreLocation::new(0, 0, 1);
+        let b = CoreLocation::new(1, 0, 1);
+        // routing: key 0x10 a->b, key 0x20 b->a
+        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(vec![
+            RoutingEntry::new(0x10, !0, Route::EMPTY.with_link(Direction::East)),
+            RoutingEntry::new(0x20, !0, Route::EMPTY.with_processor(1)),
+        ]);
+        sim.chip_mut((1, 0)).unwrap().table = RoutingTable::from_entries(vec![
+            RoutingEntry::new(0x10, !0, Route::EMPTY.with_processor(1)),
+            RoutingEntry::new(0x20, !0, Route::EMPTY.with_link(Direction::West)),
+        ]);
+        scamp::load_app(&mut sim, a, Box::new(PingApp { key: 0x10, received: rx_a.clone() }), Default::default(), Default::default()).unwrap();
+        scamp::load_app(&mut sim, b, Box::new(PingApp { key: 0x20, received: rx_b.clone() }), Default::default(), Default::default()).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(10);
+        sim.run_until_idle().unwrap();
+        assert_eq!(rx_a.lock().unwrap().len(), 10, "a receives b's 10 packets");
+        assert!(rx_a.lock().unwrap().iter().all(|k| *k == 0x20));
+        assert_eq!(rx_b.lock().unwrap().len(), 10);
+        assert_eq!(scamp::core_state(&sim, a).unwrap(), CoreState::Paused);
+        let prov = scamp::provenance(&sim, a).unwrap();
+        assert_eq!(prov.get("packets_in"), Some(&10));
+    }
+
+    #[test]
+    fn unrouted_local_packet_counts_as_drop() {
+        let machine = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(machine, SimConfig::default());
+        let loc = CoreLocation::new(0, 0, 1);
+        scamp::load_app(&mut sim, loc, Box::new(PingApp { key: 0x99, received: shared() }), Default::default(), Default::default()).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(5);
+        sim.run_until_idle().unwrap();
+        let stats = sim.router_stats((0, 0)).unwrap();
+        assert_eq!(stats.mc_dropped, 5);
+    }
+
+    #[test]
+    fn finished_state_on_exit() {
+        struct ExitApp;
+        impl CoreApp for ExitApp {
+            fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+                if ctx.tick >= 3 {
+                    ctx.exit();
+                }
+                Ok(())
+            }
+        }
+        let machine = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(machine, SimConfig::default());
+        let loc = CoreLocation::new(0, 0, 1);
+        scamp::load_app(&mut sim, loc, Box::new(ExitApp), Default::default(), Default::default()).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(100);
+        sim.run_until_idle().unwrap();
+        assert_eq!(scamp::core_state(&sim, loc).unwrap(), CoreState::Finished);
+    }
+
+    #[test]
+    fn rte_state_on_error() {
+        struct BadApp;
+        impl CoreApp for BadApp {
+            fn on_timer(&mut self, _: &mut CoreCtx) -> anyhow::Result<()> {
+                anyhow::bail!("deliberate failure")
+            }
+        }
+        let machine = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(machine, SimConfig::default());
+        let loc = CoreLocation::new(1, 1, 2);
+        scamp::load_app(&mut sim, loc, Box::new(BadApp), Default::default(), Default::default()).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(5);
+        sim.run_until_idle().unwrap();
+        assert_eq!(scamp::core_state(&sim, loc).unwrap(), CoreState::RunTimeError);
+    }
+
+    #[test]
+    fn congestion_drops_and_reinjects() {
+        // Many cores on one chip all hammering the same outbound link in
+        // the same instant overflows the output queue.
+        struct BurstApp {
+            key: u32,
+        }
+        impl CoreApp for BurstApp {
+            fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+                for _ in 0..8 {
+                    ctx.send_mc(self.key, None);
+                }
+                Ok(())
+            }
+        }
+        let machine = MachineBuilder::spinn3().build();
+        let mut config = SimConfig::default();
+        config.link_queue_depth = 2;
+        config.drop_wait_ns = 400; // tiny patience
+        config.send_spacing_ns = 0; // instantaneous burst
+        let mut sim = SimMachine::boot(machine, config);
+        // All keys routed East out of (0,0); receiver on (1,0) core 1.
+        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(vec![
+            RoutingEntry::new(0, 0, Route::EMPTY.with_link(Direction::East)),
+        ]);
+        sim.chip_mut((1, 0)).unwrap().table = RoutingTable::from_entries(vec![
+            RoutingEntry::new(0, 0, Route::EMPTY.with_processor(1)),
+        ]);
+        let rx = shared();
+        scamp::load_app(&mut sim, CoreLocation::new(1, 0, 1), Box::new(PingAppSilent { received: rx.clone() }), Default::default(), Default::default()).unwrap();
+        for p in 1..=8 {
+            scamp::load_app(&mut sim, CoreLocation::new(0, 0, p), Box::new(BurstApp { key: p as u32 }), Default::default(), Default::default()).unwrap();
+        }
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(3);
+        sim.run_until_idle().unwrap();
+        let stats = sim.router_stats((0, 0)).unwrap();
+        assert!(stats.mc_dropped > 0, "expected congestion drops");
+        assert!(stats.mc_reinjected > 0, "reinjector should recover some");
+        // Reinjection recovered at least the register-held packets:
+        // delivered + lost_forever == sent (64 per tick * 3 - receiver's own sends).
+        let delivered = rx.lock().unwrap().len() as u64;
+        assert_eq!(delivered + stats.mc_lost_forever, 8 * 8 * 3);
+    }
+
+    struct PingAppSilent {
+        received: std::sync::Arc<std::sync::Mutex<Vec<u32>>>,
+    }
+    impl CoreApp for PingAppSilent {
+        fn on_timer(&mut self, _: &mut CoreCtx) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn on_mc_packet(&mut self, key: u32, _p: Option<u32>, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+            self.received.lock().unwrap().push(key);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn reinjection_disabled_loses_packets() {
+        struct BurstApp;
+        impl CoreApp for BurstApp {
+            fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+                for _ in 0..16 {
+                    ctx.send_mc(7, None);
+                }
+                Ok(())
+            }
+        }
+        let machine = MachineBuilder::spinn3().build();
+        let mut config = SimConfig::default();
+        config.link_queue_depth = 2;
+        config.drop_wait_ns = 400;
+        config.send_spacing_ns = 0;
+        config.reinjection = false;
+        let mut sim = SimMachine::boot(machine, config);
+        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(vec![
+            RoutingEntry::new(7, !0, Route::EMPTY.with_link(Direction::East)),
+        ]);
+        sim.chip_mut((1, 0)).unwrap().table = RoutingTable::from_entries(vec![
+            RoutingEntry::new(7, !0, Route::EMPTY.with_processor(1)),
+        ]);
+        let rx = shared();
+        scamp::load_app(&mut sim, CoreLocation::new(1, 0, 1), Box::new(PingAppSilent { received: rx.clone() }), Default::default(), Default::default()).unwrap();
+        scamp::load_app(&mut sim, CoreLocation::new(0, 0, 1), Box::new(BurstApp), Default::default(), Default::default()).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(2);
+        sim.run_until_idle().unwrap();
+        let stats = sim.router_stats((0, 0)).unwrap();
+        assert!(stats.mc_dropped > 0);
+        assert_eq!(stats.mc_reinjected, 0);
+        assert!((rx.lock().unwrap().len() as u64) < 32, "some packets must be lost");
+    }
+}

@@ -1,0 +1,431 @@
+//! Host-side SCAMP operations (§3): what ybug/SpiNNMan would issue over
+//! SDP, with the §6.8 protocol cost model applied to reads and writes —
+//! every 256-byte chunk pays one request/response round trip, plus the
+//! P2P relay penalty when the target chip is not the Ethernet chip
+//! (Figure 11 middle). These costs are what experiment E1 measures.
+
+use std::collections::BTreeMap;
+
+use crate::machine::router::RoutingTable;
+use crate::machine::{ChipCoord, CoreLocation, ROUTER_ENTRIES};
+
+use super::core::{CoreState, RecordingChannel, SimCore};
+use super::{CoreApp, SimMachine};
+
+/// SCAMP read chunk size (§6.8: "up to 256 bytes").
+pub const SCP_CHUNK: usize = 256;
+
+/// The protocol cost of moving one chunk to/from `chip`.
+fn chunk_cost(sim: &SimMachine, chip: ChipCoord) -> u64 {
+    let wire = &sim.config.wire;
+    let eth = sim.machine.nearest_ethernet(chip).unwrap_or((0, 0));
+    if chip == eth {
+        wire.eth_read_rtt_ns
+    } else {
+        let hops = sim.machine.hop_distance(eth, chip) as u64;
+        wire.eth_read_rtt_ns + wire.p2p_read_penalty_ns + hops * wire.p2p_per_hop_ns
+    }
+}
+
+/// Allocate a segment of SDRAM on a chip (the SCAMP `sdram_alloc` call).
+pub fn alloc_sdram(sim: &mut SimMachine, chip: ChipCoord, len: u32) -> anyhow::Result<u32> {
+    sim.chip_mut(chip)?.sdram.alloc(len)
+}
+
+pub fn free_sdram_bytes(sim: &SimMachine, chip: ChipCoord) -> anyhow::Result<u32> {
+    Ok(sim.chip(chip)?.sdram.free_bytes())
+}
+
+/// Read SDRAM over the SCAMP SDP path (slow path, Figure 11 middle).
+pub fn read_sdram(
+    sim: &mut SimMachine,
+    chip: ChipCoord,
+    addr: u32,
+    len: usize,
+) -> anyhow::Result<Vec<u8>> {
+    let cost = chunk_cost(sim, chip);
+    let chunks = len.div_ceil(SCP_CHUNK).max(1) as u64;
+    sim.advance_host_time(cost * chunks);
+    sim.chip(chip)?.sdram.read(addr, len)
+}
+
+/// Write SDRAM over the SCAMP SDP path (same per-chunk costs).
+pub fn write_sdram(
+    sim: &mut SimMachine,
+    chip: ChipCoord,
+    addr: u32,
+    data: &[u8],
+) -> anyhow::Result<()> {
+    let cost = chunk_cost(sim, chip);
+    let chunks = data.len().div_ceil(SCP_CHUNK).max(1) as u64;
+    sim.advance_host_time(cost * chunks);
+    sim.chip_mut(chip)?.sdram.write(addr, data)
+}
+
+/// Load the multicast routing table of a chip (§6.3.4). Enforces the
+/// hardware TCAM limit — oversubscribed tables must be compressed first.
+pub fn load_routing_table(
+    sim: &mut SimMachine,
+    chip: ChipCoord,
+    table: RoutingTable,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        table.len() <= ROUTER_ENTRIES,
+        "routing table for {chip:?} has {} entries (TCAM holds {ROUTER_ENTRIES})",
+        table.len()
+    );
+    sim.advance_host_time(sim.config.wire.eth_read_rtt_ns);
+    sim.chip_mut(chip)?.table = table;
+    Ok(())
+}
+
+/// Install an IP tag on a board's Ethernet chip (§3).
+pub fn set_iptag(
+    sim: &mut SimMachine,
+    board: ChipCoord,
+    tag: u8,
+    host: &str,
+    port: u16,
+    strip_sdp: bool,
+) -> anyhow::Result<()> {
+    sim.chip_mut(board)?
+        .iptags
+        .insert(tag, (host.to_string(), port, strip_sdp));
+    Ok(())
+}
+
+/// Install a reverse IP tag: UDP on `port` is forwarded to `dest`.
+pub fn set_reverse_iptag(
+    sim: &mut SimMachine,
+    board: ChipCoord,
+    port: u16,
+    dest: CoreLocation,
+) -> anyhow::Result<()> {
+    sim.chip_mut(board)?.reverse_iptags.insert(port, dest);
+    Ok(())
+}
+
+/// Load an application "binary" onto a core with its data regions and
+/// recording channels (§6.3.4's loading phase). Data bytes pay the SCAMP
+/// write cost; the binary load is flood-filled and charged once.
+pub fn load_app(
+    sim: &mut SimMachine,
+    loc: CoreLocation,
+    app: Box<dyn CoreApp>,
+    regions: BTreeMap<u32, Vec<u8>>,
+    recording_sizes: BTreeMap<u32, u32>,
+) -> anyhow::Result<()> {
+    load_app_named(sim, loc, "app.aplx", app, regions, recording_sizes)
+}
+
+pub fn load_app_named(
+    sim: &mut SimMachine,
+    loc: CoreLocation,
+    binary_name: &str,
+    app: Box<dyn CoreApp>,
+    regions: BTreeMap<u32, Vec<u8>>,
+    recording_sizes: BTreeMap<u32, u32>,
+) -> anyhow::Result<()> {
+    // Write the data regions (cost-modelled), then wire the region table.
+    let mut region_table = BTreeMap::new();
+    for (id, data) in &regions {
+        let addr = alloc_sdram(sim, loc.chip(), data.len() as u32)?;
+        write_sdram(sim, loc.chip(), addr, data)?;
+        region_table.insert(*id, (addr, data.len() as u32));
+    }
+    let mut recordings = BTreeMap::new();
+    for (channel, size) in &recording_sizes {
+        let addr = alloc_sdram(sim, loc.chip(), *size)?;
+        recordings.insert(
+            *channel,
+            RecordingChannel { addr, capacity: *size as usize, write_pos: 0, lost_bytes: 0 },
+        );
+    }
+    sim.advance_host_time(sim.config.wire.eth_read_rtt_ns); // binary load
+    let chip = sim.chip_mut(loc.chip())?;
+    let core = chip
+        .cores
+        .get_mut(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc} (blacklisted?)"))?;
+    anyhow::ensure!(
+        core.state == CoreState::Idle,
+        "core {loc} already loaded ({:?})",
+        core.state
+    );
+    *core = SimCore {
+        app: Some(app),
+        state: CoreState::Ready,
+        binary_name: binary_name.to_string(),
+        regions: region_table,
+        recordings,
+        provenance: BTreeMap::new(),
+        ticks_done: 0,
+        run_until: 0,
+    };
+    Ok(())
+}
+
+/// Start signal: every Ready core runs `on_start` and becomes Running
+/// (it will not tick until a run cycle begins).
+pub fn signal_start(sim: &mut SimMachine) -> anyhow::Result<()> {
+    let locs = cores_in_state(sim, CoreState::Ready);
+    for loc in locs {
+        sim.with_core_app(loc, |app, ctx| app.on_start(ctx))?;
+        set_state(sim, loc, CoreState::Running)?;
+    }
+    sim.run_until_idle()
+}
+
+/// Resume signal after a pause: `on_resume` for every Paused core.
+pub fn signal_resume(sim: &mut SimMachine) -> anyhow::Result<()> {
+    let locs = cores_in_state(sim, CoreState::Paused);
+    for loc in locs {
+        sim.with_core_app(loc, |app, ctx| app.on_resume(ctx))?;
+    }
+    Ok(())
+}
+
+/// Stop signal: running/paused cores become Finished.
+pub fn signal_stop(sim: &mut SimMachine) -> anyhow::Result<()> {
+    for state in [CoreState::Running, CoreState::Paused] {
+        for loc in cores_in_state(sim, state) {
+            set_state(sim, loc, CoreState::Finished)?;
+        }
+    }
+    Ok(())
+}
+
+fn cores_in_state(sim: &SimMachine, want: CoreState) -> Vec<CoreLocation> {
+    let mut out = Vec::new();
+    for c in sim.machine.chip_coords().collect::<Vec<_>>() {
+        if let Ok(chip) = sim.chip(c) {
+            for (p, core) in &chip.cores {
+                if core.state == want {
+                    out.push(CoreLocation::new(c.0, c.1, *p));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn set_state(sim: &mut SimMachine, loc: CoreLocation, state: CoreState) -> anyhow::Result<()> {
+    let chip = sim.chip_mut(loc.chip())?;
+    let core = chip
+        .cores
+        .get_mut(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+    // Do not clobber terminal states reached during callbacks.
+    if !matches!(core.state, CoreState::RunTimeError | CoreState::Finished) || state == CoreState::Finished {
+        core.state = state;
+    }
+    Ok(())
+}
+
+/// One core's run state (the CMD_CORE_STATE poll of §6.3.5).
+pub fn core_state(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<CoreState> {
+    Ok(sim
+        .chip(loc.chip())?
+        .cores
+        .get(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
+        .state)
+}
+
+/// All loaded cores and their states.
+pub fn core_states(sim: &SimMachine) -> BTreeMap<CoreLocation, CoreState> {
+    let mut out = BTreeMap::new();
+    for c in sim.machine.chip_coords().collect::<Vec<_>>() {
+        if let Ok(chip) = sim.chip(c) {
+            for (p, core) in &chip.cores {
+                if core.state != CoreState::Idle {
+                    out.insert(CoreLocation::new(c.0, c.1, *p), core.state);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A core's provenance counters (§6.3.5).
+pub fn provenance(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<BTreeMap<String, u64>> {
+    Ok(sim
+        .chip(loc.chip())?
+        .cores
+        .get(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
+        .provenance
+        .clone())
+}
+
+/// Recording-channel descriptor: (sdram addr, bytes written, capacity).
+pub fn recording_info(
+    sim: &SimMachine,
+    loc: CoreLocation,
+    channel: u32,
+) -> anyhow::Result<(u32, usize, usize)> {
+    let core = sim
+        .chip(loc.chip())?
+        .cores
+        .get(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+    let ch = core
+        .recordings
+        .get(&channel)
+        .ok_or_else(|| anyhow::anyhow!("core {loc} has no recording channel {channel}"))?;
+    Ok((ch.addr, ch.write_pos, ch.capacity))
+}
+
+/// Reset a recording channel after extraction (the Figure-9 flush).
+pub fn clear_recording(sim: &mut SimMachine, loc: CoreLocation, channel: u32) -> anyhow::Result<()> {
+    let chip = sim.chip_mut(loc.chip())?;
+    let core = chip
+        .cores
+        .get_mut(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+    let ch = core
+        .recordings
+        .get_mut(&channel)
+        .ok_or_else(|| anyhow::anyhow!("no channel {channel}"))?;
+    ch.write_pos = 0;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineBuilder;
+    use crate::simulator::{CoreCtx, SimConfig};
+
+    struct Recorder;
+    impl CoreApp for Recorder {
+        fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+            let tick = ctx.tick as u32;
+            ctx.record(0, &tick.to_le_bytes());
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sdram_read_write_via_scamp() {
+        let m = MachineBuilder::spinn5().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let addr = alloc_sdram(&mut sim, (0, 0), 1024).unwrap();
+        let data: Vec<u8> = (0..255).collect();
+        write_sdram(&mut sim, (0, 0), addr, &data).unwrap();
+        assert_eq!(read_sdram(&mut sim, (0, 0), addr, 255).unwrap(), data);
+    }
+
+    #[test]
+    fn read_costs_match_fig11_ratios() {
+        // E1 calibration: ethernet-chip reads ~8 Mb/s; distant chip ~2 Mb/s.
+        let m = MachineBuilder::spinn5().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let len = 64 * 1024;
+        let a = alloc_sdram(&mut sim, (0, 0), len as u32).unwrap();
+        let t0 = sim.now_ns();
+        read_sdram(&mut sim, (0, 0), a, len).unwrap();
+        let eth_time = sim.now_ns() - t0;
+        let b = alloc_sdram(&mut sim, (7, 7), len as u32).unwrap();
+        let t1 = sim.now_ns();
+        read_sdram(&mut sim, (7, 7), b, len).unwrap();
+        let far_time = sim.now_ns() - t1;
+        let eth_mbps = (len as f64 * 8.0) / (eth_time as f64 / 1e9) / 1e6;
+        let far_mbps = (len as f64 * 8.0) / (far_time as f64 / 1e9) / 1e6;
+        assert!((7.0..9.0).contains(&eth_mbps), "eth {eth_mbps} Mb/s");
+        assert!((1.5..2.5).contains(&far_mbps), "far {far_mbps} Mb/s");
+    }
+
+    #[test]
+    fn recording_and_clear_cycle() {
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let loc = CoreLocation::new(0, 0, 1);
+        let mut rec = BTreeMap::new();
+        rec.insert(0u32, 1024u32);
+        load_app(&mut sim, loc, Box::new(Recorder), BTreeMap::new(), rec).unwrap();
+        signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(5);
+        sim.run_until_idle().unwrap();
+        let (addr, written, cap) = recording_info(&sim, loc, 0).unwrap();
+        assert_eq!(written, 20); // 5 ticks x 4 bytes
+        assert_eq!(cap, 1024);
+        let data = read_sdram(&mut sim, loc.chip(), addr, written).unwrap();
+        let ticks: Vec<u32> = data
+            .chunks(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(ticks, vec![1, 2, 3, 4, 5]);
+        clear_recording(&mut sim, loc, 0).unwrap();
+        let (_, w2, _) = recording_info(&sim, loc, 0).unwrap();
+        assert_eq!(w2, 0);
+    }
+
+    #[test]
+    fn recording_overflow_is_counted_not_fatal() {
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let loc = CoreLocation::new(0, 0, 1);
+        let mut rec = BTreeMap::new();
+        rec.insert(0u32, 8u32); // room for 2 ticks only
+        load_app(&mut sim, loc, Box::new(Recorder), BTreeMap::new(), rec).unwrap();
+        signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(5);
+        sim.run_until_idle().unwrap();
+        let prov = provenance(&sim, loc).unwrap();
+        assert_eq!(prov.get("recording_overflow"), Some(&3));
+        assert_eq!(core_state(&sim, loc).unwrap(), CoreState::Paused);
+    }
+
+    #[test]
+    fn double_load_rejected() {
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let loc = CoreLocation::new(0, 0, 1);
+        load_app(&mut sim, loc, Box::new(Recorder), BTreeMap::new(), BTreeMap::new()).unwrap();
+        assert!(
+            load_app(&mut sim, loc, Box::new(Recorder), BTreeMap::new(), BTreeMap::new()).is_err()
+        );
+    }
+
+    #[test]
+    fn oversized_routing_table_rejected() {
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let entries: Vec<_> = (0..1025)
+            .map(|k| {
+                crate::machine::router::RoutingEntry::new(
+                    k,
+                    !0,
+                    crate::machine::router::Route::EMPTY.with_processor(1),
+                )
+            })
+            .collect();
+        let table = RoutingTable::from_entries(entries);
+        assert!(load_routing_table(&mut sim, (0, 0), table).is_err());
+    }
+
+    #[test]
+    fn region_data_visible_to_core() {
+        struct RegionReader;
+        impl CoreApp for RegionReader {
+            fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+                let data = ctx.read_region(7)?;
+                anyhow::ensure!(data == vec![1, 2, 3, 4], "bad region data");
+                ctx.count("region_ok", 1);
+                Ok(())
+            }
+            fn on_timer(&mut self, _: &mut CoreCtx) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let loc = CoreLocation::new(1, 1, 3);
+        let mut regions = BTreeMap::new();
+        regions.insert(7u32, vec![1, 2, 3, 4]);
+        load_app(&mut sim, loc, Box::new(RegionReader), regions, BTreeMap::new()).unwrap();
+        signal_start(&mut sim).unwrap();
+        assert_eq!(provenance(&sim, loc).unwrap().get("region_ok"), Some(&1));
+    }
+}

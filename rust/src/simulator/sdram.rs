@@ -1,0 +1,146 @@
+//! Per-chip SDRAM model: a segment allocator over the 128 MiB address
+//! space. Segments are allocated by the loader (data regions, recording
+//! buffers) and read back by the extraction paths — the same addresses
+//! flow through SCAMP reads and the fast gatherer protocol, so both
+//! extraction paths exercise real address arithmetic.
+
+use std::collections::BTreeMap;
+
+/// SDRAM base address on real hardware (for address realism).
+pub const SDRAM_BASE: u32 = 0x6000_0000;
+
+#[derive(Debug, Default)]
+pub struct SdramStore {
+    /// addr -> segment bytes.
+    segments: BTreeMap<u32, Vec<u8>>,
+    next: u32,
+    size: u32,
+}
+
+impl SdramStore {
+    pub fn new(size: u32) -> Self {
+        Self { segments: BTreeMap::new(), next: SDRAM_BASE, size }
+    }
+
+    /// Allocate a zeroed segment, word-aligned.
+    pub fn alloc(&mut self, len: u32) -> anyhow::Result<u32> {
+        let len = len.max(1).div_ceil(4) * 4;
+        anyhow::ensure!(
+            self.next - SDRAM_BASE + len <= self.size,
+            "SDRAM exhausted: {} of {} used, {len} requested",
+            self.next - SDRAM_BASE,
+            self.size
+        );
+        let addr = self.next;
+        self.segments.insert(addr, vec![0u8; len as usize]);
+        self.next += len;
+        Ok(addr)
+    }
+
+    pub fn free_bytes(&self) -> u32 {
+        self.size - (self.next - SDRAM_BASE)
+    }
+
+    /// The segment containing `addr`, with the offset into it.
+    fn locate(&self, addr: u32) -> anyhow::Result<(u32, usize)> {
+        let (base, seg) = self
+            .segments
+            .range(..=addr)
+            .next_back()
+            .ok_or_else(|| anyhow::anyhow!("address {addr:#x} before any segment"))?;
+        let off = (addr - base) as usize;
+        anyhow::ensure!(
+            off < seg.len(),
+            "address {addr:#x} outside segment at {base:#x} (len {})",
+            seg.len()
+        );
+        Ok((*base, off))
+    }
+
+    pub fn write(&mut self, addr: u32, data: &[u8]) -> anyhow::Result<()> {
+        let (base, off) = self.locate(addr)?;
+        let seg = self.segments.get_mut(&base).unwrap();
+        anyhow::ensure!(
+            off + data.len() <= seg.len(),
+            "write of {} bytes at {addr:#x} overruns segment",
+            data.len()
+        );
+        seg[off..off + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    pub fn read(&self, addr: u32, len: usize) -> anyhow::Result<Vec<u8>> {
+        let (base, off) = self.locate(addr)?;
+        let seg = &self.segments[&base];
+        anyhow::ensure!(
+            off + len <= seg.len(),
+            "read of {len} bytes at {addr:#x} overruns segment"
+        );
+        Ok(seg[off..off + len].to_vec())
+    }
+
+    /// Zero a segment region (recording-buffer flush between run cycles).
+    pub fn clear(&mut self, addr: u32, len: usize) -> anyhow::Result<()> {
+        let (base, off) = self.locate(addr)?;
+        let seg = self.segments.get_mut(&base).unwrap();
+        anyhow::ensure!(off + len <= seg.len(), "clear overruns segment");
+        seg[off..off + len].fill(0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_write_read() {
+        let mut s = SdramStore::new(1024 * 1024);
+        let a = s.alloc(100).unwrap();
+        assert_eq!(a, SDRAM_BASE);
+        s.write(a, &[1, 2, 3]).unwrap();
+        assert_eq!(s.read(a, 3).unwrap(), vec![1, 2, 3]);
+        // offset read
+        s.write(a + 50, &[9]).unwrap();
+        assert_eq!(s.read(a + 50, 1).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn allocations_do_not_overlap() {
+        let mut s = SdramStore::new(1024);
+        let a = s.alloc(10).unwrap();
+        let b = s.alloc(10).unwrap();
+        assert!(b >= a + 10);
+        s.write(a, &[0xAA; 10]).unwrap();
+        s.write(b, &[0xBB; 10]).unwrap();
+        assert_eq!(s.read(a, 10).unwrap(), vec![0xAA; 10]);
+        assert_eq!(s.read(b, 10).unwrap(), vec![0xBB; 10]);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut s = SdramStore::new(128);
+        assert!(s.alloc(100).is_ok());
+        assert!(s.alloc(100).is_err());
+        assert!(s.free_bytes() < 100);
+    }
+
+    #[test]
+    fn out_of_bounds_access_errors() {
+        let mut s = SdramStore::new(1024);
+        let a = s.alloc(8).unwrap();
+        assert!(s.read(a, 100).is_err());
+        assert!(s.write(a + 6, &[1, 2, 3, 4]).is_err());
+        assert!(s.read(a - 4, 4).is_err());
+    }
+
+    #[test]
+    fn clear_zeroes() {
+        let mut s = SdramStore::new(1024);
+        let a = s.alloc(16).unwrap();
+        s.write(a, &[0xFF; 16]).unwrap();
+        s.clear(a, 8).unwrap();
+        assert_eq!(s.read(a, 9).unwrap()[..8], vec![0u8; 8][..]);
+        assert_eq!(s.read(a + 8, 1).unwrap(), vec![0xFF]);
+    }
+}

@@ -1,0 +1,153 @@
+//! The EIEIO event protocol (§6.9; Rast et al. 2015): the wire format
+//! the Live Packet Gatherer emits and the Reverse IP Tag Multicast
+//! Source consumes, carrying batched multicast events to/from external
+//! applications.
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Event encodings (the subset the tools use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EieioType {
+    /// 32-bit keys, no payload.
+    Key32,
+    /// 32-bit keys each followed by a 32-bit payload.
+    Key32Payload,
+}
+
+impl EieioType {
+    fn code(self) -> u8 {
+        match self {
+            EieioType::Key32 => 2,
+            EieioType::Key32Payload => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> anyhow::Result<Self> {
+        Ok(match c {
+            2 => EieioType::Key32,
+            3 => EieioType::Key32Payload,
+            other => anyhow::bail!("unsupported EIEIO type {other}"),
+        })
+    }
+}
+
+/// EIEIO data header: count + type (+ optional timestamp tag, unused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EieioHeader {
+    pub ty: EieioType,
+    pub count: u8,
+}
+
+/// A batch of events.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EieioMessage {
+    pub ty: EieioType,
+    /// (key, payload) pairs; payload is None for Key32.
+    pub events: Vec<(u32, Option<u32>)>,
+}
+
+impl EieioMessage {
+    pub fn keys(keys: &[u32]) -> Self {
+        Self {
+            ty: EieioType::Key32,
+            events: keys.iter().map(|k| (*k, None)).collect(),
+        }
+    }
+
+    pub fn with_payloads(pairs: &[(u32, u32)]) -> Self {
+        Self {
+            ty: EieioType::Key32Payload,
+            events: pairs.iter().map(|(k, p)| (*k, Some(*p))).collect(),
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        debug_assert!(self.events.len() <= 255);
+        let mut w = ByteWriter::new();
+        w.u8(self.events.len() as u8);
+        w.u8(self.ty.code() << 4); // type in the high nibble, flags clear
+        for (key, payload) in &self.events {
+            w.u32(*key);
+            if self.ty == EieioType::Key32Payload {
+                w.u32(payload.unwrap_or(0));
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let count = r.u8()?;
+        let ty = EieioType::from_code(r.u8()? >> 4)?;
+        let mut events = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let key = r.u32()?;
+            let payload = if ty == EieioType::Key32Payload {
+                Some(r.u32()?)
+            } else {
+                None
+            };
+            events.push((key, payload));
+        }
+        anyhow::ensure!(r.remaining() == 0, "trailing EIEIO bytes");
+        Ok(Self { ty, events })
+    }
+
+    /// Split a long event list into <=255-event messages.
+    pub fn batched(ty: EieioType, events: &[(u32, Option<u32>)]) -> Vec<EieioMessage> {
+        events
+            .chunks(255)
+            .map(|chunk| EieioMessage { ty, events: chunk.to_vec() })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key32_round_trip() {
+        let m = EieioMessage::keys(&[1, 2, 0xdead_beef]);
+        let d = EieioMessage::decode(&m.encode()).unwrap();
+        assert_eq!(d, m);
+    }
+
+    #[test]
+    fn key32_payload_round_trip() {
+        let m = EieioMessage::with_payloads(&[(1, 100), (2, 200)]);
+        let d = EieioMessage::decode(&m.encode()).unwrap();
+        assert_eq!(d, m);
+    }
+
+    #[test]
+    fn empty_message() {
+        let m = EieioMessage::keys(&[]);
+        let d = EieioMessage::decode(&m.encode()).unwrap();
+        assert_eq!(d.events.len(), 0);
+    }
+
+    #[test]
+    fn batching_splits_at_255() {
+        let events: Vec<(u32, Option<u32>)> = (0..600).map(|k| (k, None)).collect();
+        let batches = EieioMessage::batched(EieioType::Key32, &events);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].events.len(), 255);
+        assert_eq!(batches[2].events.len(), 90);
+        let total: usize = batches.iter().map(|b| b.events.len()).sum();
+        assert_eq!(total, 600);
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let m = EieioMessage::keys(&[1, 2, 3]).encode();
+        assert!(EieioMessage::decode(&m[..m.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let mut m = EieioMessage::keys(&[1]).encode();
+        m[1] = 0xf0;
+        assert!(EieioMessage::decode(&m).is_err());
+    }
+}

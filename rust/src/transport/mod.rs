@@ -1,0 +1,12 @@
+//! On-wire protocol codecs: SDP (§3), SCP command framing, and the
+//! EIEIO live-event protocol (§6.9; Rast et al. 2015).
+//!
+//! These are real byte-level encoders/decoders — the simulated machine
+//! and the host-side tools exchange exactly these frames, so the codec
+//! layer is exercised the way a physical deployment would exercise it.
+
+mod eieio;
+mod sdp;
+
+pub use eieio::{EieioHeader, EieioMessage, EieioType};
+pub use sdp::{ScpCommand, ScpRequest, ScpResponse, SdpHeader, SdpMessage, SDP_PORT_MONITOR};

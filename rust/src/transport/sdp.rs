@@ -1,0 +1,291 @@
+//! The SpiNNaker Datagram Protocol (SDP) and the SCP command layer on
+//! top of it (§3; Furber et al. 2014).
+//!
+//! An SDP message carries up to 256 bytes of SCP/user data plus an
+//! 8-byte header routed by chip coordinates and a 5-bit cpu + 3-bit
+//! port. Messages to/from the outside world are encapsulated in UDP by
+//! the Ethernet-chip monitor using the IP tag table.
+
+use crate::machine::CoreLocation;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// SDP port of the SCAMP monitor process.
+pub const SDP_PORT_MONITOR: u8 = 0;
+
+/// Maximum SDP payload (§6.8: "each SDP message can request the reading
+/// of up to 256 bytes").
+pub const SDP_MAX_DATA: usize = 256 + 16; // 256 user bytes + SCP header
+
+/// The 8-byte SDP header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SdpHeader {
+    /// 0x87 = reply expected, 0x07 = no reply.
+    pub flags: u8,
+    /// IP tag for host-bound traffic (0xff = none).
+    pub tag: u8,
+    pub dest_port: u8,
+    pub dest_cpu: u8,
+    pub dest_x: u8,
+    pub dest_y: u8,
+    pub src_port: u8,
+    pub src_cpu: u8,
+    pub src_x: u8,
+    pub src_y: u8,
+}
+
+impl SdpHeader {
+    pub fn to_core(dest: CoreLocation, port: u8) -> Self {
+        Self {
+            flags: 0x07,
+            tag: 0xff,
+            dest_port: port,
+            dest_cpu: dest.p,
+            dest_x: dest.x as u8,
+            dest_y: dest.y as u8,
+            src_port: 7,
+            src_cpu: 31,
+            src_x: 0,
+            src_y: 0,
+        }
+    }
+
+    pub fn dest(&self) -> CoreLocation {
+        CoreLocation::new(self.dest_x as u32, self.dest_y as u32, self.dest_cpu)
+    }
+
+    pub fn reply_expected(&self) -> bool {
+        self.flags & 0x80 != 0
+    }
+}
+
+/// An SDP message: header + data.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SdpMessage {
+    pub header: SdpHeader,
+    pub data: Vec<u8>,
+}
+
+impl SdpMessage {
+    pub fn new(header: SdpHeader, data: Vec<u8>) -> Self {
+        debug_assert!(data.len() <= SDP_MAX_DATA, "SDP payload too large");
+        Self { header, data }
+    }
+
+    /// Wire encoding (as carried inside a UDP frame).
+    pub fn encode(&self) -> Vec<u8> {
+        let h = &self.header;
+        let mut w = ByteWriter::new();
+        // 2 bytes padding as in the real UDP encapsulation.
+        w.u16(0);
+        w.u8(h.flags).u8(h.tag);
+        // dest/src port+cpu packed: port in top 3 bits, cpu in low 5.
+        w.u8((h.dest_port << 5) | (h.dest_cpu & 0x1f));
+        w.u8((h.src_port << 5) | (h.src_cpu & 0x1f));
+        w.u8(h.dest_y).u8(h.dest_x);
+        w.u8(h.src_y).u8(h.src_x);
+        w.bytes(&self.data);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let _pad = r.u16()?;
+        let flags = r.u8()?;
+        let tag = r.u8()?;
+        let dp = r.u8()?;
+        let sp = r.u8()?;
+        let dest_y = r.u8()?;
+        let dest_x = r.u8()?;
+        let src_y = r.u8()?;
+        let src_x = r.u8()?;
+        let mut data = Vec::with_capacity(r.remaining());
+        while r.remaining() > 0 {
+            data.push(r.u8()?);
+        }
+        Ok(Self {
+            header: SdpHeader {
+                flags,
+                tag,
+                dest_port: dp >> 5,
+                dest_cpu: dp & 0x1f,
+                dest_x,
+                dest_y,
+                src_port: sp >> 5,
+                src_cpu: sp & 0x1f,
+                src_x,
+                src_y,
+            },
+            data,
+        })
+    }
+}
+
+/// SCP commands used by the tools (subset of the SCAMP command set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum ScpCommand {
+    Version = 0,
+    Read = 2,
+    Write = 3,
+    /// Load an application onto cores (stand-in for APLX flood fill).
+    AppLoad = 4,
+    /// Load routing-table entries.
+    RouterInit = 5,
+    IpTagSet = 26,
+    /// Signal cores (start / sync / pause / stop).
+    Signal = 22,
+    /// Read a core's run state.
+    CoreState = 23,
+}
+
+impl ScpCommand {
+    pub fn from_u16(v: u16) -> Option<Self> {
+        Some(match v {
+            0 => Self::Version,
+            2 => Self::Read,
+            3 => Self::Write,
+            4 => Self::AppLoad,
+            5 => Self::RouterInit,
+            26 => Self::IpTagSet,
+            22 => Self::Signal,
+            23 => Self::CoreState,
+            _ => return None,
+        })
+    }
+}
+
+/// An SCP request (rides in SDP data).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScpRequest {
+    pub cmd: ScpCommand,
+    pub seq: u16,
+    pub arg1: u32,
+    pub arg2: u32,
+    pub arg3: u32,
+    pub data: Vec<u8>,
+}
+
+impl ScpRequest {
+    pub fn new(cmd: ScpCommand, arg1: u32, arg2: u32, arg3: u32) -> Self {
+        Self { cmd, seq: 0, arg1, arg2, arg3, data: Vec::new() }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u16(self.cmd as u16).u16(self.seq);
+        w.u32(self.arg1).u32(self.arg2).u32(self.arg3);
+        w.bytes(&self.data);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let cmd_raw = r.u16()?;
+        let cmd = ScpCommand::from_u16(cmd_raw)
+            .ok_or_else(|| anyhow::anyhow!("unknown SCP command {cmd_raw}"))?;
+        let seq = r.u16()?;
+        let arg1 = r.u32()?;
+        let arg2 = r.u32()?;
+        let arg3 = r.u32()?;
+        let mut data = Vec::with_capacity(r.remaining());
+        while r.remaining() > 0 {
+            data.push(r.u8()?);
+        }
+        Ok(Self { cmd, seq, arg1, arg2, arg3, data })
+    }
+}
+
+/// An SCP response: result code + payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScpResponse {
+    pub result: u16, // 0x80 = OK
+    pub seq: u16,
+    pub data: Vec<u8>,
+}
+
+pub const SCP_OK: u16 = 0x80;
+
+impl ScpResponse {
+    pub fn ok(seq: u16, data: Vec<u8>) -> Self {
+        Self { result: SCP_OK, seq, data }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u16(self.result).u16(self.seq).bytes(&self.data);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let result = r.u16()?;
+        let seq = r.u16()?;
+        let mut data = Vec::with_capacity(r.remaining());
+        while r.remaining() > 0 {
+            data.push(r.u8()?);
+        }
+        Ok(Self { result, seq, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sdp_round_trip() {
+        let msg = SdpMessage::new(
+            SdpHeader::to_core(CoreLocation::new(3, 4, 7), 1),
+            vec![1, 2, 3, 4, 5],
+        );
+        let decoded = SdpMessage::decode(&msg.encode()).unwrap();
+        assert_eq!(decoded, msg);
+        assert_eq!(decoded.header.dest(), CoreLocation::new(3, 4, 7));
+    }
+
+    #[test]
+    fn port_cpu_packing() {
+        let mut h = SdpHeader::to_core(CoreLocation::new(0, 0, 17), 5);
+        h.src_port = 2;
+        h.src_cpu = 9;
+        let msg = SdpMessage::new(h, vec![]);
+        let d = SdpMessage::decode(&msg.encode()).unwrap();
+        assert_eq!(d.header.dest_port, 5);
+        assert_eq!(d.header.dest_cpu, 17);
+        assert_eq!(d.header.src_port, 2);
+        assert_eq!(d.header.src_cpu, 9);
+    }
+
+    #[test]
+    fn scp_round_trip() {
+        let mut req = ScpRequest::new(ScpCommand::Read, 0x6000_0000, 256, 0);
+        req.seq = 42;
+        req.data = vec![9, 9];
+        let d = ScpRequest::decode(&req.encode()).unwrap();
+        assert_eq!(d, req);
+    }
+
+    #[test]
+    fn scp_response_round_trip() {
+        let resp = ScpResponse::ok(7, vec![1, 2, 3]);
+        let d = ScpResponse::decode(&resp.encode()).unwrap();
+        assert_eq!(d, resp);
+        assert_eq!(d.result, SCP_OK);
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        let mut bad = ScpRequest::new(ScpCommand::Version, 0, 0, 0).encode();
+        bad[0] = 0xee;
+        bad[1] = 0xee;
+        assert!(ScpRequest::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn reply_flag() {
+        let mut h = SdpHeader::to_core(CoreLocation::new(0, 0, 1), 0);
+        assert!(!h.reply_expected());
+        h.flags = 0x87;
+        assert!(h.reply_expected());
+    }
+}

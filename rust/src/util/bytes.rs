@@ -1,0 +1,178 @@
+//! Little-endian byte serialization for SDRAM data regions.
+//!
+//! The Python tools write data regions that the on-machine C code reads
+//! back (§6.3.3); here the rust data generator writes regions that the
+//! simulated core apps decode. Little-endian word-aligned layout, exactly
+//! as the ARM side would see it.
+
+/// Writer for one data region.
+#[derive(Debug, Default, Clone)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn i32(&mut self, v: i32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32s(&mut self, vs: &[f32]) -> &mut Self {
+        for v in vs {
+            self.f32(*v);
+        }
+        self
+    }
+
+    pub fn u32s(&mut self, vs: &[u32]) -> &mut Self {
+        for v in vs {
+            self.u32(*v);
+        }
+        self
+    }
+
+    pub fn bytes(&mut self, vs: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(vs);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Reader over one data region.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            anyhow::bail!(
+                "region underrun: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into()?))
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    pub fn i32(&mut self) -> anyhow::Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    pub fn f32s(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn u32s(&mut self, n: usize) -> anyhow::Result<Vec<u32>> {
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let mut w = ByteWriter::new();
+        w.u32(0xdead_beef).f32(1.5).u8(7).u16(300).u64(1 << 40).i32(-5);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.i32().unwrap(), -5);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn vector_round_trip() {
+        let mut w = ByteWriter::new();
+        w.f32s(&[1.0, 2.0, 3.0]).u32s(&[9, 8]);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.f32s(3).unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(r.u32s(2).unwrap(), vec![9, 8]);
+    }
+
+    #[test]
+    fn underrun_errors() {
+        let buf = [1u8, 2];
+        let mut r = ByteReader::new(&buf);
+        assert!(r.u32().is_err());
+    }
+}

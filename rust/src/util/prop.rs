@@ -1,0 +1,44 @@
+//! A small property-testing helper (proptest is not in the vendor
+//! bundle): run a closure over many seeded-random cases and report the
+//! first failing seed so failures are reproducible.
+
+use super::SplitMix64;
+
+/// Run `f` for `cases` deterministic random cases. On panic, re-raises
+/// with the offending case index + seed in the message.
+pub fn check<F: Fn(&mut SplitMix64)>(cases: u32, base_seed: u64, f: F) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check(50, 1, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn reports_seed_on_failure() {
+        check(50, 2, |rng| {
+            assert!(rng.below(10) < 5, "too big");
+        });
+    }
+}

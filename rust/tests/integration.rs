@@ -1,0 +1,463 @@
+//! Integration tests across the whole stack (experiment ids from
+//! DESIGN.md §5): the Figure-8 flow, Figure-9 pause/resume, live I/O,
+//! the application-graph SNN path with the AOT HLO artifacts, and the
+//! simulated-hardware behaviours the toolchain depends on.
+
+use spinntools::apps::conway::{ConwayTileVertex, STATE_PARTITION};
+use spinntools::apps::gatherer::LivePacketGathererVertex;
+use spinntools::apps::networks::{build_conway_grid, build_microcircuit, firing_rates};
+use spinntools::apps::neuron::{
+    decode_spike_bitmaps, Connector, LifParams, LifPopulationVertex, SynapseSpec,
+    SPIKES_PARTITION,
+};
+use spinntools::apps::poisson::PoissonSourceVertex;
+use spinntools::apps::reverse_source::{ReverseIpTagSourceVertex, OUT_PARTITION};
+use spinntools::front::{
+    ExtractionMethod, LiveEventListener, LiveInjector, MachineSpec, SpiNNTools, ToolsConfig,
+};
+
+fn artifacts_available() -> bool {
+    spinntools::runtime::Runtime::default_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+// -- E4: Figure-9 auto pause/resume ------------------------------------------
+
+#[test]
+fn e4_chunked_run_cycles_preserve_results() {
+    // Tiny SDRAM forces multiple run cycles; results must equal a
+    // single-cycle run.
+    let run = |shrink_sdram: bool| -> Vec<u8> {
+        let mut config = ToolsConfig::new(MachineSpec::Spinn3);
+        if shrink_sdram {
+            // 2 MiB per chip: with 1 MiB slack, buffers get tiny.
+            config.recording_slack_bytes = 126 * 1024 * 1024;
+        }
+        let mut tools = SpiNNTools::new(config).unwrap();
+        let ids = build_conway_grid(&mut tools, 4, 4, &[(1, 1), (1, 2), (2, 1), (2, 2)]).unwrap();
+        tools.run_ticks(50).unwrap();
+        tools.recording(ids[5]).to_vec()
+    };
+    let single = run(false);
+    let chunked = run(true);
+    assert_eq!(single.len(), 50);
+    assert_eq!(single, chunked, "chunked cycles must not change results");
+    // A block is a still life: always alive.
+    assert!(single.iter().all(|b| *b == 1));
+}
+
+// -- E3 + E8: application graph -> machine graph with HLO neurons ------------
+
+#[test]
+fn e8_small_snn_runs_and_spikes() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut tools =
+        SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3).with_artifacts()).unwrap();
+    // 100 Poisson sources driving 100 LIF neurons one-to-one, strongly.
+    let src = tools
+        .add_application_vertex(PoissonSourceVertex::arc("src", 100, 200.0, 42, false))
+        .unwrap();
+    let pop = tools
+        .add_application_vertex(LifPopulationVertex::arc(
+            "pop",
+            100,
+            LifParams::default(),
+            true,
+        ))
+        .unwrap();
+    tools
+        .add_application_edge(
+            src,
+            pop,
+            SPIKES_PARTITION,
+            Some(SynapseSpec::excitatory(30.0, Connector::OneToOne, 7)),
+        )
+        .unwrap();
+    tools.run_ms(100).unwrap();
+    let recs = tools.app_recordings(pop);
+    assert_eq!(recs.len(), 1, "100 neurons fit one core");
+    let (slice, data) = &recs[0];
+    let spikes = decode_spike_bitmaps(data, slice.n_atoms());
+    assert!(!spikes.is_empty(), "strong 200 Hz drive must elicit spikes");
+    // Refractoriness bounds the rate: <= 1 spike / 3 ms / neuron.
+    assert!(spikes.len() <= 100 * 100 / 3 + 100);
+    let prov = tools.provenance();
+    assert_eq!(prov.counter_total("spikes_unmatched"), 0);
+}
+
+#[test]
+fn e8_inhibition_suppresses_firing() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rate_with = |inhibit: bool| -> usize {
+        let mut tools =
+            SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3).with_artifacts()).unwrap();
+        let src = tools
+            .add_application_vertex(PoissonSourceVertex::arc("src", 64, 100.0, 1, false))
+            .unwrap();
+        let pop = tools
+            .add_application_vertex(LifPopulationVertex::arc(
+                "pop",
+                64,
+                LifParams::default(),
+                true,
+            ))
+            .unwrap();
+        tools
+            .add_application_edge(
+                src,
+                pop,
+                SPIKES_PARTITION,
+                Some(SynapseSpec::excitatory(200.0, Connector::OneToOne, 3)),
+            )
+            .unwrap();
+        if inhibit {
+            let inh = tools
+                .add_application_vertex(PoissonSourceVertex::arc("inh", 64, 400.0, 9, false))
+                .unwrap();
+            tools
+                .add_application_edge(
+                    inh,
+                    pop,
+                    SPIKES_PARTITION,
+                    Some(SynapseSpec::inhibitory(400.0, Connector::OneToOne, 5)),
+                )
+                .unwrap();
+        }
+        tools.run_ms(100).unwrap();
+        tools
+            .app_recordings(pop)
+            .iter()
+            .map(|(s, d)| decode_spike_bitmaps(d, s.n_atoms()).len())
+            .sum()
+    };
+    let base = rate_with(false);
+    let suppressed = rate_with(true);
+    assert!(base > 0);
+    assert!(
+        suppressed < base / 2,
+        "inhibition should at least halve firing ({base} -> {suppressed})"
+    );
+}
+
+#[test]
+fn e8_population_splits_across_cores() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut tools =
+        SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3).with_artifacts()).unwrap();
+    let pop = tools
+        .add_application_vertex(LifPopulationVertex::arc(
+            "big",
+            600,
+            LifParams { i_offset: 30.0, ..LifParams::default() },
+            true,
+        ))
+        .unwrap();
+    tools.run_ms(20).unwrap();
+    let mvs = tools.machine_vertices_of(pop);
+    assert!(mvs.len() >= 3, "600 atoms at <=256/core needs >=3 cores");
+    let total: u32 = mvs.iter().map(|(_, s)| s.n_atoms()).sum();
+    assert_eq!(total, 600);
+    // Every slice fires (constant i_offset drive).
+    for (slice, data) in tools.app_recordings(pop) {
+        assert!(
+            !decode_spike_bitmaps(data, slice.n_atoms()).is_empty(),
+            "slice {slice} silent"
+        );
+    }
+}
+
+// -- E6: live I/O (Figure 12) -------------------------------------------------
+
+#[test]
+fn e6_live_output_via_lpg_and_input_via_riptms() {
+    // A Conway grid wired to an LPG; a RIPTMS wired to nothing (it only
+    // needs to inject; the cells it targets are the proof).
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn3).with_extraction(ExtractionMethod::Scamp),
+    )
+    .unwrap();
+    let ids = build_conway_grid(&mut tools, 3, 3, &[(1, 0), (1, 1), (1, 2)]).unwrap();
+    let lpg = tools
+        .add_machine_vertex(LivePacketGathererVertex::arc("lpg", "host", 19999, (0, 0)))
+        .unwrap();
+    // Tap the centre cell's existing multicast stream (Figure 12: "the
+    // simple addition of an edge to the graph").
+    tools.add_machine_edge(ids[4], lpg, STATE_PARTITION).unwrap();
+    let riptms = tools
+        .add_machine_vertex(ReverseIpTagSourceVertex::arc("inject", 18888, 4))
+        .unwrap();
+    tools.add_machine_edge(riptms, ids[0], OUT_PARTITION).unwrap();
+
+    tools.run_ticks(5).unwrap();
+
+    let db = tools.database().unwrap().clone();
+    let listener = LiveEventListener::new(19999, db);
+    let events = listener.poll(tools.sim_mut().unwrap()).unwrap();
+    // The LPG flushes on its own timer, so live events lag one tick:
+    // after 5 ticks the states of ticks 1..4 have been forwarded.
+    assert_eq!(events.len(), 4, "one state event per completed tick");
+    assert!(events.iter().all(|e| e.vertex == "cell_1_1"));
+    // Payload carries the cell state; blinker centre is always alive.
+    assert!(events.iter().all(|e| e.payload == Some(1)));
+
+    // Live input: inject an event; the RIPTMS multicasts it to cell 0,0.
+    let injector = LiveInjector::new((0, 0), 18888);
+    injector.send(tools.sim_mut().unwrap(), &[0]).unwrap();
+    tools.sim_mut().unwrap().run_until_idle().unwrap();
+    let prov = tools.provenance();
+    assert_eq!(prov.counter_total("events_injected"), 1);
+}
+
+// -- E1 sanity through the public config --------------------------------------
+
+#[test]
+fn e1_fast_extraction_end_to_end() {
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn3).with_extraction(ExtractionMethod::FastMulticast),
+    )
+    .unwrap();
+    // 3x3 leaves cores for the extraction reader + gatherer on chip 0,0.
+    let ids = build_conway_grid(&mut tools, 3, 3, &[(0, 0), (0, 1), (1, 0), (1, 1)]).unwrap();
+    tools.run_ticks(20).unwrap();
+    // Same results as the SCAMP path would give: block still life.
+    assert_eq!(tools.recording(ids[0]), &[1u8; 20][..]);
+    assert_eq!(tools.recording(ids[8]), &[0u8; 20][..]);
+}
+
+// -- E7 tile variant: HLO conway behind an app-level vertex -------------------
+
+#[test]
+fn e7_hlo_tile_matches_cell_graph() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Same 16x16 board as a cell graph and as one HLO tile: identical
+    // evolution (both use dead boundaries).
+    let glider = [(0u32, 1u32), (1, 2), (2, 0), (2, 1), (2, 2)];
+    let steps = 8usize;
+
+    // The cell app records the state it *sends* each tick, i.e. the
+    // state after t-1 updates — so reaching s_8 takes 9 ticks.
+    let mut cell_tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let ids = build_conway_grid(&mut cell_tools, 16, 16, &glider).unwrap();
+    cell_tools.run_ticks(steps as u64 + 1).unwrap();
+    let mut cell_final = vec![0u8; 256];
+    for (i, id) in ids.iter().enumerate() {
+        cell_final[i] = *cell_tools.recording(*id).last().unwrap();
+    }
+
+    let mut tile_tools =
+        SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3).with_artifacts()).unwrap();
+    let mut initial = vec![0u8; 256];
+    for (r, c) in glider {
+        initial[(r * 16 + c) as usize] = 1;
+    }
+    let tile = tile_tools
+        .add_machine_vertex(ConwayTileVertex::arc(16, initial))
+        .unwrap();
+    tile_tools.run_ticks(steps as u64).unwrap();
+    let rec = tile_tools.recording(tile);
+    let tile_final = &rec[256 * (steps - 1)..256 * steps];
+
+    assert_eq!(cell_final.as_slice(), tile_final, "cell graph and Pallas tile diverge");
+}
+
+// -- E9/E5: mapping on faulty machines through the full flow ------------------
+
+#[test]
+fn flow_survives_dead_cores_and_links() {
+    let mut config = ToolsConfig::new(MachineSpec::Spinn3);
+    config.machine = MachineSpec::Grid { width: 4, height: 4, wrap: false };
+    let mut tools = SpiNNTools::new(config).unwrap();
+    // Note: faults are modelled at machine-build time in MachineSpec
+    // only via builder in unit tests; here we check a full-size graph on
+    // the healthy grid still maps when constrained.
+    let ids = build_conway_grid(&mut tools, 8, 8, &[(3, 3), (3, 4), (4, 3), (4, 4)]).unwrap();
+    tools.run_ticks(10).unwrap();
+    assert_eq!(tools.recording(ids[3 * 8 + 3]), &[1u8; 10][..]);
+    let mapping = tools.mapping().unwrap();
+    assert!(mapping.placements.used_chips().len() > 1);
+}
+
+// -- E8 headline: the scaled microcircuit -------------------------------------
+
+#[test]
+fn e8_microcircuit_mini_runs_with_plausible_rates() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut tools =
+        SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5).with_artifacts()).unwrap();
+    let circuit = build_microcircuit(&mut tools, 0.01, 1234, true).unwrap();
+    tools.run_ms(100).unwrap();
+    let rates = firing_rates(&tools, &circuit, 100.0);
+    // Shape check, not absolute: every population alive, none epileptic.
+    for (name, rate) in &rates {
+        assert!(*rate > 0.1, "{name} silent ({rate:.2} Hz)");
+        assert!(*rate < 120.0, "{name} runaway ({rate:.2} Hz)");
+    }
+    let prov = tools.provenance();
+    assert_eq!(prov.counter_total("spikes_unmatched"), 0);
+}
+
+// -- §7.2 extension: external device via a virtual vertex ----------------------
+
+/// A device vertex: stands in for a robot motor wired to chip (0,0)'s
+/// SpiNNaker-Link (§5.1/§7.2). Nothing is loaded on it; routed packets
+/// are consumed by the simulated device.
+#[derive(Debug)]
+struct MotorVertex;
+
+impl spinntools::graph::MachineVertexImpl for MotorVertex {
+    fn label(&self) -> String {
+        "motor".into()
+    }
+    fn resources(&self) -> spinntools::graph::ResourceRequirements {
+        Default::default()
+    }
+    fn binary_name(&self) -> String {
+        "<device>".into()
+    }
+    fn generate_data(
+        &self,
+        _: &spinntools::graph::DataGenContext,
+    ) -> Vec<spinntools::graph::DataRegion> {
+        vec![]
+    }
+    fn virtual_link(&self) -> Option<spinntools::graph::VirtualLink> {
+        Some(spinntools::graph::VirtualLink {
+            attached_to: (0, 0),
+            direction: spinntools::machine::Direction::SouthWest,
+        })
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[test]
+fn device_vertex_receives_routed_packets() {
+    // Figure-13 cells driving a device: "the tools will automatically
+    // detect this, and add a virtual chip to the discovered machine ...
+    // with edges to and from the device being routed as appropriate".
+    let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+    let ids = build_conway_grid(&mut tools, 3, 3, &[(1, 0), (1, 1), (1, 2)]).unwrap();
+    let motor = tools
+        .add_machine_vertex(std::sync::Arc::new(MotorVertex))
+        .unwrap();
+    // The centre cell's state drives the motor.
+    tools.add_machine_edge(ids[4], motor, STATE_PARTITION).unwrap();
+    tools.run_ticks(5).unwrap();
+    // The virtual chip consumed one packet per tick.
+    let sim = tools.sim_mut().unwrap();
+    let consumed: usize = sim.device_inbox.values().map(|v| v.len()).sum();
+    assert_eq!(consumed, 5, "device should see the centre cell's 5 state packets");
+    // And the neighbours still work (routing to the device didn't break
+    // the rest of the multicast tree).
+    let wing = tools.recording(ids[3]);
+    assert_eq!(wing, &[1, 0, 1, 0, 1], "blinker wing");
+}
+
+// -- E2/E10 property: the whole mapping pipeline routes every key --------------
+
+#[test]
+fn property_full_pipeline_routes_all_keys() {
+    use spinntools::graph::machine_graph::DEFAULT_PARTITION;
+    use spinntools::mapping::{map_graph, tables::check_tables, MappingConfig};
+    use spinntools::util::{prop, SplitMix64};
+
+    prop::check(15, 0x5EED, |rng: &mut SplitMix64| {
+        // Random machine with a couple of faults.
+        let mut b = spinntools::machine::MachineBuilder::grid(6, 6, rng.below(2) == 0);
+        for _ in 0..rng.below(3) {
+            let c = (rng.below(6) as u32, rng.below(6) as u32);
+            let d = spinntools::machine::ALL_DIRECTIONS[rng.below(6)];
+            b = b.dead_link(c, d);
+        }
+        let machine = b.build();
+        // Random graph.
+        let mut g = spinntools::graph::MachineGraph::new();
+        let n = 5 + rng.below(40) as u32;
+        let ids: Vec<_> = (0..n)
+            .map(|i| {
+                g.add_vertex(spinntools::apps::conway::ConwayCellVertex::arc(i, 0, false))
+            })
+            .collect();
+        for _ in 0..n * 2 {
+            let a = ids[rng.below(ids.len())];
+            let b2 = ids[rng.below(ids.len())];
+            if a != b2 {
+                g.add_edge(a, b2, DEFAULT_PARTITION);
+            }
+        }
+        let Ok(mapping) = map_graph(&machine, &g, &MappingConfig::default()) else {
+            return; // machine too broken for this graph: acceptable
+        };
+        // Every partition's keys must reach exactly the partition targets.
+        for p in g.partitions() {
+            let src = mapping.placement(p.pre).unwrap();
+            let key = mapping.keys[&(p.pre, p.id.clone())];
+            let expected: Vec<_> = g
+                .partition_targets(p)
+                .into_iter()
+                .map(|t| {
+                    let loc = mapping.placement(t).unwrap();
+                    (loc.chip(), loc.p)
+                })
+                .collect();
+            check_tables(&machine, &mapping.tables, src.chip(), key.base, &expected)
+                .expect("pipeline produced wrong routing");
+        }
+    });
+}
+
+// -- §8 future work: machine vertices inside an application graph -------------
+
+#[test]
+fn wrapped_machine_vertex_in_application_graph() {
+    // "Allow an application graph to contain machine vertices, which are
+    // then simply copied to the machine graph during the conversion" —
+    // here an LPG (a machine-level utility vertex) taps an application
+    // population's spikes without a dual implementation.
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use spinntools::graph::WrappedMachineVertex;
+    let mut tools =
+        SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3).with_artifacts()).unwrap();
+    let pop = tools
+        .add_application_vertex(LifPopulationVertex::arc(
+            "pop",
+            32,
+            LifParams { i_offset: 40.0, ..LifParams::default() }, // tonic firing
+            false,
+        ))
+        .unwrap();
+    let lpg = tools
+        .add_application_vertex(WrappedMachineVertex::arc(LivePacketGathererVertex::arc(
+            "lpg", "viz", 20123, (0, 0),
+        )))
+        .unwrap();
+    tools
+        .add_application_edge(pop, lpg, SPIKES_PARTITION, None)
+        .unwrap();
+    tools.run_ms(20).unwrap();
+    let db = tools.database().unwrap().clone();
+    let listener = LiveEventListener::new(20123, db);
+    let events = listener.poll(tools.sim_mut().unwrap()).unwrap();
+    assert!(!events.is_empty(), "LPG should forward the population's spikes");
+    assert!(events.iter().all(|e| e.vertex.starts_with("pop")));
+}
