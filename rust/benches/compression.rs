@@ -114,5 +114,46 @@ fn main() {
     }
     bench("conway_like_300", RoutingTable::from_entries(entries));
 
+    // 5. Whole-machine sharded minimisation: 64 oversubscribed per-chip
+    //    tables compressed on the §6.3.2 worker pool. Per-chip tables
+    //    are independent, so this is the compression half of the E9
+    //    parallel-mapping experiment in isolation.
+    println!("\n# sharded whole-machine compression (64 SNN-shaped tables)");
+    println!("{:>8} {:>12} {:>8}", "threads", "wall", "speedup");
+    let tables: Vec<RoutingTable> = (0..64u64)
+        .map(|chip| {
+            let mut rng = SplitMix64::new(0x600D + chip);
+            let mut entries = Vec::new();
+            let mut base = 0u32;
+            while entries.len() < 2048 {
+                let run = 16 + rng.below(112);
+                let r = route(rng.next_u64() % 4);
+                for _ in 0..run.min(2048 - entries.len()) {
+                    entries.push(RoutingEntry::new(base, !0, r));
+                    base += 1;
+                }
+            }
+            RoutingTable::from_entries(entries)
+        })
+        .collect();
+    let mut serial_ms = 0.0f64;
+    let mut serial_sizes: Vec<usize> = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let t = Instant::now();
+        let done = spinntools::util::par::par_map(threads, &tables, |_, table| {
+            compress_with_stats(table).0
+        });
+        let wall = t.elapsed().as_secs_f64() * 1e3;
+        let sizes: Vec<usize> = done.iter().map(|t| t.len()).collect();
+        if threads == 1 {
+            serial_ms = wall;
+            serial_sizes = sizes;
+            println!("{:>8} {:>10.1}ms {:>8}", threads, wall, "1.00x");
+        } else {
+            assert_eq!(serial_sizes, sizes, "sharded compression diverged");
+            println!("{:>8} {:>10.1}ms {:>7.2}x", threads, wall, serial_ms / wall);
+        }
+    }
+
     println!("\n# headline: oversubscribed SNN tables fit the 1024-entry TCAM after compression");
 }

@@ -1,136 +1,239 @@
-//! Experiment E9 — §6.3.2 mapping-phase scaling.
+//! Experiment E9 — §6.3.2 mapping-phase scaling, serial *and* sharded.
 //!
 //! §1: "the time taken to execute this mapping is critical; if it takes
 //! too long, it will dwarf the computational execution time of the
-//! problem itself." This bench measures host wall-clock for each
-//! mapping phase (split, place, route, keys, tables, compress) as the
-//! graph and machine grow.
+//! problem itself." This bench measures host wall-clock for the
+//! shardable mapping phases (NER routing, table generation,
+//! ordered-covering compression) on a 576-chip (12-board) virtual
+//! machine at 1/2/4/8 worker threads, for the paper's two workload
+//! shapes (§7.1 Conway grid, §7.2 microcircuit), and records the results
+//! to `BENCH_mapping.json` at the repository root.
+//!
+//! The compression phase runs the ordered-covering pass over *every*
+//! generated table (offline whole-machine minimisation, Mundy et al.
+//! 2016) so the phase has real work even when no single table
+//! oversubscribes its TCAM.
 //!
 //! ```sh
 //! cargo bench --bench mapping
 //! ```
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use spinntools::apps::networks::{conway_machine_graph, microcircuit_machine_graph};
 use spinntools::graph::MachineGraph;
 use spinntools::machine::{Machine, MachineBuilder};
-use spinntools::mapping::{self, MappingConfig};
+use spinntools::mapping::{compress, keys, placer, router, tables, MappingConfig, MappingOptions};
+use spinntools::util::json::Json;
+use spinntools::util::par;
 
-/// A Conway-style grid graph of cells directly as machine vertices.
-fn grid_graph(rows: u32, cols: u32) -> MachineGraph {
-    use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
-    let mut g = MachineGraph::new();
-    let mut ids = Vec::new();
-    for r in 0..rows {
-        for c in 0..cols {
-            ids.push(g.add_vertex(ConwayCellVertex::arc(r, c, (r + c) % 3 == 0)));
-        }
-    }
-    let idx = |r: i64, c: i64| -> Option<usize> {
-        (r >= 0 && c >= 0 && r < rows as i64 && c < cols as i64)
-            .then_some((r * cols as i64 + c) as usize)
-    };
-    for r in 0..rows as i64 {
-        for c in 0..cols as i64 {
-            for dr in -1..=1i64 {
-                for dc in -1..=1i64 {
-                    if (dr, dc) == (0, 0) {
-                        continue;
-                    }
-                    if let Some(n) = idx(r + dr, c + dc) {
-                        g.add_edge(
-                            spinntools::graph::VertexId(idx(r, c).unwrap() as u32),
-                            spinntools::graph::VertexId(n as u32),
-                            STATE_PARTITION,
-                        );
-                    }
-                }
-            }
-        }
-    }
-    g
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+struct PhaseTimes {
+    threads: usize,
+    route_ms: f64,
+    tables_ms: f64,
+    compress_ms: f64,
+    /// Summary of the outputs, compared across thread counts as a
+    /// cheap determinism guard (the test suite does the strict one).
+    summary: (usize, usize, usize),
 }
 
-fn bench_one(name: &str, machine: &Machine, graph: &MachineGraph) -> anyhow::Result<()> {
-    let config = MappingConfig::default();
+impl PhaseTimes {
+    fn tables_plus_compress_ms(&self) -> f64 {
+        self.tables_ms + self.compress_ms
+    }
+}
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+fn run_once(
+    machine: &Machine,
+    graph: &MachineGraph,
+    placements: &placer::Placements,
+    key_map: &BTreeMap<(spinntools::graph::VertexId, String), spinntools::graph::KeyRange>,
+    threads: usize,
+) -> anyhow::Result<PhaseTimes> {
+    let config = MappingConfig {
+        options: MappingOptions::with_threads(threads),
+        ..Default::default()
+    };
 
     let t = Instant::now();
-    let placements = mapping::placer::place(machine, graph)?;
-    let t_place = t.elapsed();
+    let forest = router::route_sharded(machine, graph, placements, threads)?;
+    let route_ms = ms(t);
 
     let t = Instant::now();
-    let forest = mapping::router::route(machine, graph, &placements)?;
-    let t_route = t.elapsed();
+    let built = tables::build_tables(machine, graph, &forest, key_map, &config)?;
+    let tables_ms = ms(t);
 
+    // Offline whole-machine minimisation: compress every table.
+    let inputs: Vec<_> = built.values().collect();
     let t = Instant::now();
-    let keys = mapping::keys::allocate_keys(graph)?;
-    let t_keys = t.elapsed();
+    let compressed = par::par_map(threads, &inputs, |_, table| compress::compress(table));
+    let compress_ms = ms(t);
 
-    let t = Instant::now();
-    let tables = mapping::tables::build_tables(machine, graph, &forest, &keys, &config)?;
-    let t_tables = t.elapsed();
+    let total_links: usize = forest.trees.values().map(|tr| tr.n_links()).sum();
+    let entries_before: usize = built.values().map(|t| t.len()).sum();
+    let entries_after: usize = compressed.iter().map(|t| t.len()).sum();
+    Ok(PhaseTimes {
+        threads,
+        route_ms,
+        tables_ms,
+        compress_ms,
+        summary: (total_links, entries_before, entries_after),
+    })
+}
 
-    let total_entries: usize = tables.values().map(|t| t.len()).sum();
-    let max_entries = tables.values().map(|t| t.len()).max().unwrap_or(0);
+fn bench_workload(
+    name: &str,
+    machine: &Machine,
+    graph: &MachineGraph,
+) -> anyhow::Result<Json> {
+    // Place + key once: both phases are serial and shared by every run.
+    let placements = placer::place(machine, graph)?;
+    let key_map = keys::allocate_keys(graph)?;
 
     println!(
-        "{:<16} {:>8} {:>8} {:>10.2?} {:>10.2?} {:>10.2?} {:>10.2?} {:>8} {:>8}",
-        name,
+        "\n## {name}: {} vertices, {} edges, {} partitions",
         graph.n_vertices(),
         graph.n_edges(),
-        t_place,
-        t_route,
-        t_keys,
-        t_tables,
-        total_entries,
-        max_entries,
+        graph.n_partitions()
     );
-    Ok(())
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>14}",
+        "threads", "route", "tables", "compress", "tables+comp"
+    );
+
+    let mut runs = Vec::new();
+    for threads in THREAD_SWEEP {
+        let r = run_once(machine, graph, &placements, &key_map, threads)?;
+        println!(
+            "{:>8} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>12.1}ms",
+            r.threads,
+            r.route_ms,
+            r.tables_ms,
+            r.compress_ms,
+            r.tables_plus_compress_ms()
+        );
+        runs.push(r);
+    }
+
+    let deterministic = runs.iter().all(|r| r.summary == runs[0].summary);
+    let serial = &runs[0];
+    let best_tc = runs
+        .iter()
+        .skip(1)
+        .map(|r| r.tables_plus_compress_ms())
+        .fold(f64::INFINITY, f64::min);
+    let best_route = runs
+        .iter()
+        .skip(1)
+        .map(|r| r.route_ms)
+        .fold(f64::INFINITY, f64::min);
+    // .max(1e-6): keep the ratio finite even if a phase rounds to 0 ms.
+    let tc_speedup = serial.tables_plus_compress_ms() / best_tc.max(1e-6);
+    let route_speedup = serial.route_ms / best_route.max(1e-6);
+    println!(
+        "   best multi-thread speedup: route {route_speedup:.2}x, tables+compress {tc_speedup:.2}x \
+         | outputs identical across widths: {deterministic}"
+    );
+    if tc_speedup <= 1.0 {
+        println!("   WARNING: multi-threaded tables+compress not faster than serial on this host");
+    }
+
+    let mut obj = BTreeMap::new();
+    obj.insert("name".to_string(), Json::Str(name.to_string()));
+    obj.insert("vertices".to_string(), Json::Num(graph.n_vertices() as f64));
+    obj.insert("edges".to_string(), Json::Num(graph.n_edges() as f64));
+    obj.insert("partitions".to_string(), Json::Num(graph.n_partitions() as f64));
+    obj.insert(
+        "table_entries_before_compression".to_string(),
+        Json::Num(serial.summary.1 as f64),
+    );
+    obj.insert(
+        "table_entries_after_compression".to_string(),
+        Json::Num(serial.summary.2 as f64),
+    );
+    obj.insert(
+        "runs".to_string(),
+        Json::Arr(
+            runs.iter()
+                .map(|r| {
+                    let mut run = BTreeMap::new();
+                    run.insert("threads".to_string(), Json::Num(r.threads as f64));
+                    run.insert("route_ms".to_string(), Json::Num(r.route_ms));
+                    run.insert("tables_ms".to_string(), Json::Num(r.tables_ms));
+                    run.insert("compress_ms".to_string(), Json::Num(r.compress_ms));
+                    run.insert(
+                        "tables_plus_compress_ms".to_string(),
+                        Json::Num(r.tables_plus_compress_ms()),
+                    );
+                    Json::Obj(run)
+                })
+                .collect(),
+        ),
+    );
+    obj.insert("route_speedup_best".to_string(), Json::Num(route_speedup));
+    obj.insert(
+        "tables_plus_compress_speedup_best".to_string(),
+        Json::Num(tc_speedup),
+    );
+    obj.insert(
+        "multithreaded_strictly_better".to_string(),
+        Json::Bool(tc_speedup > 1.0),
+    );
+    obj.insert("deterministic_summary".to_string(), Json::Bool(deterministic));
+    Ok(Json::Obj(obj))
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("# E9: mapping phase wall-clock scaling (Conway grids, one cell/core)");
+    println!("# E9: sharded mapping back-end on a 576-chip (12-board) virtual machine");
+    let machine = MachineBuilder::boards(12).build();
+    assert_eq!(machine.n_chips(), 576, "expected the 24x24 triad torus");
     println!(
-        "{:<16} {:>8} {:>8} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}",
-        "workload", "verts", "edges", "place", "route", "keys", "tables", "entries", "max/chip"
+        "machine: {}x{} torus, {} chips, {} application cores, {} hardware threads here",
+        machine.width,
+        machine.height,
+        machine.n_chips(),
+        machine.n_application_cores(),
+        par::effective_threads(0)
     );
 
-    // One board: growing grids.
-    let spinn5 = MachineBuilder::spinn5().build();
-    for side in [8u32, 16, 24, 28] {
-        bench_one(&format!("spinn5/{side}x{side}"), &spinn5, &grid_graph(side, side))?;
-    }
-    // Multi-board machines: a full-ish machine per size.
-    for boards in [3u32, 12] {
-        let machine = MachineBuilder::boards(boards).build();
-        // ~60% of application cores.
-        let cores = (machine.n_application_cores() as f64 * 0.6) as u32;
-        let side = (cores as f64).sqrt() as u32;
-        bench_one(
-            &format!("{boards}boards/{side}x{side}"),
-            &machine,
-            &grid_graph(side, side),
-        )?;
-    }
+    // §7.1: one Conway cell per core over ~80% of the machine.
+    let conway = conway_machine_graph(88, 88, |r, c| (r + c) % 3 == 0);
+    // §7.2: the full-scale Potjans–Diesmann microcircuit.
+    let micro = microcircuit_machine_graph(&machine, 1.0, 0xE9)?;
 
-    // §6.3.1 sizing: application-graph split cost.
-    println!("\n# application graph splitting (LIF populations)");
-    let t = Instant::now();
-    let mut app = spinntools::graph::ApplicationGraph::new();
-    use spinntools::apps::neuron::{LifParams, LifPopulationVertex};
-    for i in 0..64 {
-        app.add_vertex(LifPopulationVertex::arc(
-            &format!("pop{i}"),
-            1000,
-            LifParams::default(),
-            false,
-        ));
-    }
-    let (mg, _) = mapping::splitter::split_graph(&app, &spinn5)?;
-    println!(
-        "split 64 populations x 1000 atoms -> {} machine vertices in {:.2?}",
-        mg.n_vertices(),
-        t.elapsed()
+    let workloads = vec![
+        bench_workload("conway_88x88", &machine, &conway)?,
+        bench_workload("microcircuit_full", &machine, &micro)?,
+    ];
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "experiment".to_string(),
+        Json::Str("E9_parallel_sharded_mapping".to_string()),
     );
+    root.insert("machine_chips".to_string(), Json::Num(machine.n_chips() as f64));
+    root.insert("machine_boards".to_string(), Json::Num(12.0));
+    root.insert(
+        "host_hardware_threads".to_string(),
+        Json::Num(par::effective_threads(0) as f64),
+    );
+    root.insert("thread_sweep".to_string(), Json::Arr(
+        THREAD_SWEEP.iter().map(|t| Json::Num(*t as f64)).collect(),
+    ));
+    root.insert("workloads".to_string(), Json::Arr(workloads));
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_mapping.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
     Ok(())
 }

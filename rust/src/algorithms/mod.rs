@@ -71,12 +71,23 @@ impl Blackboard {
 
 type AlgorithmFn = Box<dyn FnMut(&mut Blackboard) -> anyhow::Result<()>>;
 
+/// A sharded algorithm body: called with the executor's worker-pool
+/// width; internally splits, fans out, and joins.
+type ShardedFn = Box<dyn FnMut(&mut Blackboard, usize) -> anyhow::Result<()>>;
+
+/// How an algorithm executes: a plain closure, or a declared shardable
+/// inner loop the executor fans out over its worker pool.
+enum Body {
+    Plain(AlgorithmFn),
+    Sharded(ShardedFn),
+}
+
 /// One algorithm: a named closure with declared inputs/outputs.
 pub struct Algorithm {
     pub name: String,
     pub inputs: Vec<String>,
     pub outputs: Vec<String>,
-    run: AlgorithmFn,
+    body: Body,
 }
 
 impl Algorithm {
@@ -90,15 +101,66 @@ impl Algorithm {
             name: name.to_string(),
             inputs: inputs.iter().map(|s| s.to_string()).collect(),
             outputs: outputs.iter().map(|s| s.to_string()).collect(),
-            run: Box::new(run),
+            body: Body::Plain(Box::new(run)),
         }
+    }
+
+    /// An algorithm with a declared shardable inner loop, in three
+    /// phases the executor drives:
+    ///
+    /// 1. `split` (serial, on the blackboard) produces a shared context
+    ///    and a list of independent work items;
+    /// 2. `process` runs once per item on the executor's worker pool —
+    ///    it sees only the context and its item, never the blackboard;
+    /// 3. `merge` (serial) receives the outputs **in item order** and
+    ///    writes the declared output tokens.
+    ///
+    /// Because the join preserves item order, a sharded algorithm's
+    /// result is identical at any pool width.
+    pub fn sharded<C, I, O, S, P, M>(
+        name: &str,
+        inputs: &[&str],
+        outputs: &[&str],
+        split: S,
+        process: P,
+        merge: M,
+    ) -> Self
+    where
+        C: Sync + 'static,
+        I: Sync + 'static,
+        O: Send + 'static,
+        S: FnMut(&mut Blackboard) -> anyhow::Result<(C, Vec<I>)> + 'static,
+        P: Fn(&C, &I) -> anyhow::Result<O> + Sync + 'static,
+        M: FnMut(&mut Blackboard, C, Vec<O>) -> anyhow::Result<()> + 'static,
+    {
+        let mut split = split;
+        let mut merge = merge;
+        let body = move |board: &mut Blackboard, threads: usize| -> anyhow::Result<()> {
+            let (ctx, items) = split(board)?;
+            let outs =
+                crate::util::par::try_par_map(threads, &items, |_, item| process(&ctx, item))?;
+            merge(board, ctx, outs)
+        };
+        Self {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            body: Body::Sharded(Box::new(body)),
+        }
+    }
+
+    /// Whether this algorithm declares a shardable inner loop.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.body, Body::Sharded(_))
     }
 }
 
 /// The workflow executor of Figure 10: orders algorithms by token
-/// dependencies and runs them.
+/// dependencies and runs them, fanning sharded algorithms out over a
+/// worker pool of the configured width.
 pub struct Executor {
     algorithms: Vec<Algorithm>,
+    threads: usize,
 }
 
 /// The order the executor chose (kept for provenance/debugging).
@@ -107,7 +169,14 @@ pub struct Workflow(pub Vec<String>);
 
 impl Executor {
     pub fn new(algorithms: Vec<Algorithm>) -> Self {
-        Self { algorithms }
+        Self { algorithms, threads: 1 }
+    }
+
+    /// Set the worker-pool width sharded algorithms fan out to
+    /// (`1` = serial, `0` = one worker per hardware thread).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     /// Compute an execution order: repeatedly run any algorithm whose
@@ -162,6 +231,7 @@ impl Executor {
     ) -> anyhow::Result<Workflow> {
         let initial: BTreeSet<String> = board.tokens().map(|s| s.to_string()).collect();
         let plan = self.plan(&initial, goals)?;
+        let threads = self.threads;
         let mut by_name: BTreeMap<String, Algorithm> = self
             .algorithms
             .drain(..)
@@ -169,7 +239,11 @@ impl Executor {
             .collect();
         for name in &plan.0 {
             let alg = by_name.get_mut(name).unwrap();
-            (alg.run)(board).map_err(|e| anyhow::anyhow!("algorithm '{name}' failed: {e}"))?;
+            match &mut alg.body {
+                Body::Plain(run) => run(board),
+                Body::Sharded(run) => run(board, threads),
+            }
+            .map_err(|e| anyhow::anyhow!("algorithm '{name}' failed: {e}"))?;
             // Verify the algorithm delivered its declared outputs.
             for o in &alg.outputs {
                 anyhow::ensure!(
@@ -271,5 +345,68 @@ mod tests {
         b.put("n", 1u32);
         assert!(b.get::<String>("n").is_err());
         assert!(b.get::<u32>("n").is_ok());
+    }
+
+    fn square_sum_alg() -> Algorithm {
+        Algorithm::sharded(
+            "square_sum",
+            &["numbers"],
+            &["total"],
+            |b: &mut Blackboard| {
+                let ns: &Vec<u64> = b.get("numbers")?;
+                Ok((2u64, ns.clone()))
+            },
+            |scale: &u64, n: &u64| Ok(n * n * scale),
+            |b: &mut Blackboard, _scale, squares: Vec<u64>| {
+                b.put("total", squares.iter().sum::<u64>());
+                Ok(())
+            },
+        )
+    }
+
+    #[test]
+    fn sharded_algorithm_fans_out_and_joins() {
+        let serial = {
+            let mut board = Blackboard::new();
+            board.put("numbers", (0u64..100).collect::<Vec<u64>>());
+            Executor::new(vec![square_sum_alg()])
+                .with_threads(1)
+                .execute(&mut board, &["total"])
+                .unwrap();
+            *board.get::<u64>("total").unwrap()
+        };
+        for threads in [2usize, 8] {
+            let mut board = Blackboard::new();
+            board.put("numbers", (0u64..100).collect::<Vec<u64>>());
+            let ex = Executor::new(vec![square_sum_alg()]).with_threads(threads);
+            assert!(ex.algorithms[0].is_sharded());
+            ex.execute(&mut board, &["total"]).unwrap();
+            assert_eq!(*board.get::<u64>("total").unwrap(), serial, "threads={threads}");
+        }
+        assert_eq!(serial, 2 * (0u64..100).map(|n| n * n).sum::<u64>());
+    }
+
+    #[test]
+    fn sharded_algorithm_propagates_item_errors() {
+        let alg = Algorithm::sharded(
+            "fails",
+            &[],
+            &["out"],
+            |_: &mut Blackboard| Ok(((), vec![1u32, 2, 3])),
+            |_: &(), n: &u32| {
+                anyhow::ensure!(*n != 2, "item {n} broke");
+                Ok(*n)
+            },
+            |b: &mut Blackboard, _, _outs: Vec<u32>| {
+                b.put("out", ());
+                Ok(())
+            },
+        );
+        let mut board = Blackboard::new();
+        let err = Executor::new(vec![alg])
+            .with_threads(4)
+            .execute(&mut board, &["out"])
+            .unwrap_err();
+        assert!(err.to_string().contains("item 2 broke"), "{err}");
     }
 }

@@ -4,7 +4,8 @@
 use std::collections::BTreeMap;
 
 use crate::front::SpiNNTools;
-use crate::graph::{AppVertexId, VertexId};
+use crate::graph::{AppVertexId, ApplicationGraph, MachineGraph, VertexId};
+use crate::machine::Machine;
 
 use super::conway::{ConwayCellVertex, STATE_PARTITION};
 use super::neuron::{Connector, LifParams, LifPopulationVertex, SynapseSpec, SPIKES_PARTITION};
@@ -45,6 +46,43 @@ pub fn build_conway_grid(
         }
     }
     Ok(ids)
+}
+
+/// The §7.1 grid as a *bare* machine graph — no [`SpiNNTools`] — for
+/// mapping-only benches and tests: one cell vertex per grid square
+/// (liveness chosen by `alive`), each bidirectionally connected to its
+/// 8 neighbours in [`STATE_PARTITION`].
+pub fn conway_machine_graph(
+    rows: u32,
+    cols: u32,
+    alive: impl Fn(u32, u32) -> bool,
+) -> MachineGraph {
+    let mut g = MachineGraph::new();
+    let mut ids = Vec::with_capacity((rows * cols) as usize);
+    for r in 0..rows {
+        for c in 0..cols {
+            ids.push(g.add_vertex(ConwayCellVertex::arc(r, c, alive(r, c))));
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < rows as i64 && c < cols as i64)
+            .then_some((r * cols as i64 + c) as usize)
+    };
+    for r in 0..rows as i64 {
+        for c in 0..cols as i64 {
+            for dr in -1..=1i64 {
+                for dc in -1..=1i64 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        g.add_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION);
+                    }
+                }
+            }
+        }
+    }
+    g
 }
 
 /// Population names of the Potjans–Diesmann microcircuit (Figure 14).
@@ -163,6 +201,59 @@ pub fn build_microcircuit(
     }
 
     Ok(Microcircuit { populations, sources, sizes })
+}
+
+/// The §7.2 microcircuit as a *bare* application graph — no
+/// [`SpiNNTools`]: the same populations, background sources and PD
+/// connectivity map as [`build_microcircuit`], with nominal weights,
+/// for mapping-only benches and tests that never run the network
+/// (mapping never samples the synaptic matrices).
+pub fn microcircuit_app_graph(scale: f64, seed: u64) -> ApplicationGraph {
+    let mut app = ApplicationGraph::new();
+    let mut pops = Vec::new();
+    for (i, name) in PD_POPULATIONS.iter().enumerate() {
+        let n = ((PD_SIZES[i] as f64 * scale).round() as u32).max(8);
+        let pop =
+            app.add_vertex(LifPopulationVertex::arc(name, n, LifParams::default(), false));
+        let src = app.add_vertex(PoissonSourceVertex::arc(
+            &format!("ext_{name}"),
+            n,
+            500.0,
+            seed ^ (i as u64),
+            false,
+        ));
+        app.add_edge(
+            src,
+            pop,
+            SPIKES_PARTITION,
+            Some(SynapseSpec::excitatory(1.2, Connector::OneToOne, seed)),
+        );
+        pops.push(pop);
+    }
+    for (t, _target) in PD_POPULATIONS.iter().enumerate() {
+        for (s, _source) in PD_POPULATIONS.iter().enumerate() {
+            let p = PD_CONN[t][s];
+            if p == 0.0 {
+                continue;
+            }
+            let spec = if s % 2 == 1 {
+                SynapseSpec::inhibitory(4.8, Connector::FixedProbability(p), seed)
+            } else {
+                SynapseSpec::excitatory(1.2, Connector::FixedProbability(p), seed)
+            };
+            app.add_edge(pops[s], pops[t], SPIKES_PARTITION, Some(spec));
+        }
+    }
+    app
+}
+
+/// [`microcircuit_app_graph`] split into a machine graph for `machine`.
+pub fn microcircuit_machine_graph(
+    machine: &Machine,
+    scale: f64,
+    seed: u64,
+) -> anyhow::Result<MachineGraph> {
+    Ok(crate::mapping::splitter::split_graph(&microcircuit_app_graph(scale, seed), machine)?.0)
 }
 
 /// Per-population firing rates (Hz) from recorded spike bitmaps.

@@ -103,6 +103,15 @@ impl ToolsConfig {
         self.sim.timestep_us = us;
         self
     }
+
+    /// Worker threads for the shardable mapping stages (NER routing,
+    /// table generation, ordered-covering compression). `1` = serial,
+    /// `0` = one per hardware thread. Mapping output is byte-identical
+    /// at any setting — this is purely a host wall-clock knob (§6.3.2).
+    pub fn with_mapping_threads(mut self, threads: usize) -> Self {
+        self.mapping.options.threads = threads;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -124,5 +133,22 @@ mod tests {
     fn timestep_propagates_to_sim() {
         let c = ToolsConfig::new(MachineSpec::Spinn3).with_timestep_us(500);
         assert_eq!(c.sim.timestep_us, 500);
+    }
+
+    #[test]
+    fn mapping_threads_propagate() {
+        let c = ToolsConfig::new(MachineSpec::Spinn3).with_mapping_threads(8);
+        assert_eq!(c.mapping.options.threads, 8);
+        assert_eq!(c.mapping.options.effective_threads(), 8);
+        // Default is serial; 0 resolves to the hardware width.
+        assert_eq!(ToolsConfig::new(MachineSpec::Spinn3).mapping.options.threads, 1);
+        assert!(
+            ToolsConfig::new(MachineSpec::Spinn3)
+                .with_mapping_threads(0)
+                .mapping
+                .options
+                .effective_threads()
+                >= 1
+        );
     }
 }

@@ -115,6 +115,22 @@ impl SpiNNTools {
         self.registry.register(name, factory);
     }
 
+    /// Change the mapping worker-pool width (see
+    /// [`ToolsConfig::with_mapping_threads`]). A user-level option in the
+    /// §6.1 sense: it never changes mapping *results*, only host
+    /// wall-clock, so unlike graph edits it is allowed before any run —
+    /// but not between runs, since mapping has already happened.
+    pub fn set_mapping_threads(&mut self, threads: usize) -> anyhow::Result<()> {
+        self.ensure_not_running("change mapping threads")?;
+        self.config.mapping.options.threads = threads;
+        Ok(())
+    }
+
+    /// The configured mapping worker-pool width.
+    pub fn mapping_threads(&self) -> usize {
+        self.config.mapping.options.threads
+    }
+
     fn ensure_not_running(&self, what: &str) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.state.is_none(),
@@ -552,6 +568,34 @@ mod tests {
         assert_eq!(tools.ticks_done(), 4);
         let wing = tools.recording(ids[(2 * 5 + 1) as usize]);
         assert_eq!(wing, &[1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn mapping_threads_do_not_change_results() {
+        let run = |threads: usize| -> Vec<u8> {
+            let mut tools = SpiNNTools::new(
+                ToolsConfig::new(MachineSpec::Spinn3).with_mapping_threads(threads),
+            )
+            .unwrap();
+            let ids = conway_graph(&mut tools, 5, 5, &[(2, 1), (2, 2), (2, 3)]);
+            assert_eq!(tools.mapping_threads(), threads);
+            tools.run_ticks(4).unwrap();
+            tools.recording(ids[(2 * 5 + 1) as usize]).to_vec()
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(4), "threaded mapping changed the simulation");
+        assert_eq!(serial, &[1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn mapping_threads_locked_once_running() {
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        tools.set_mapping_threads(2).unwrap();
+        conway_graph(&mut tools, 3, 3, &[]);
+        tools.run_ticks(1).unwrap();
+        assert!(tools.set_mapping_threads(4).is_err());
+        tools.reset();
+        assert!(tools.set_mapping_threads(4).is_ok());
     }
 
     #[test]

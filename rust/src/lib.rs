@@ -20,8 +20,10 @@
 //!   hot-spots, validated against pure-jnp oracles.
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) and executes them from the simulated cores in [`apps`] —
-//! Python is never on the run path.
+//! (`xla` crate, behind the off-by-default `pjrt` cargo feature) and
+//! executes them from the simulated cores in [`apps`] — Python is never
+//! on the run path. Without the feature the crate still builds and the
+//! whole mapping/simulation stack works; only HLO-backed vertices need it.
 //!
 //! ## Quickstart
 //!

@@ -25,22 +25,34 @@
 use std::collections::BTreeMap;
 
 use crate::machine::router::{Route, RoutingEntry, RoutingTable};
+use crate::machine::ChipCoord;
 
-/// Compress a table. Semantics are preserved for all keys the input
-/// table matches (see module docs for the unmatched-key caveat).
-pub fn compress(table: &RoutingTable) -> RoutingTable {
+/// Group a table's entries by route word.
+fn route_groups(table: &RoutingTable) -> BTreeMap<u32, Vec<RoutingEntry>> {
     let mut groups: BTreeMap<u32, Vec<RoutingEntry>> = BTreeMap::new();
     for e in table.entries() {
         groups.entry(e.route.0).or_default().push(*e);
     }
+    groups
+}
 
-    // Phase 1: exact buddy merging per group.
+/// Phase 1 over every route group: exact buddy merging.
+fn buddy_table(groups: &BTreeMap<u32, Vec<RoutingEntry>>) -> RoutingTable {
     let mut buddy: Vec<RoutingEntry> = Vec::new();
-    for (route, entries) in &groups {
+    for (route, entries) in groups {
         buddy.extend(buddy_merge(entries.clone(), Route(*route)));
     }
     sort_specific_first(&mut buddy);
-    let buddy_table = RoutingTable::from_entries(buddy.clone());
+    RoutingTable::from_entries(buddy)
+}
+
+/// Compress a table. Semantics are preserved for all keys the input
+/// table matches (see module docs for the unmatched-key caveat).
+pub fn compress(table: &RoutingTable) -> RoutingTable {
+    let groups = route_groups(table);
+
+    // Phase 1: exact buddy merging per group.
+    let buddy_table = buddy_table(&groups);
 
     // Phase 2: aggressive covering, accepted only if validation passes.
     let mut aggressive: Vec<RoutingEntry> = Vec::new();
@@ -63,6 +75,42 @@ pub fn compress(table: &RoutingTable) -> RoutingTable {
         // Buddy merging is provably safe for disjoint-across-route
         // tables; if the input had conflicting overlaps, refuse to touch it.
         table.clone()
+    }
+}
+
+/// Compress a table preserving the semantics of **every** 32-bit key,
+/// matched or not: only the exact buddy phase runs. A buddy-merged
+/// entry's match set is precisely the union of the two originals, so a
+/// key the input table dropped is still dropped — unlike [`compress`],
+/// whose aggressive covers may capture never-allocated keys (the
+/// order-exploiting trade). The price is a weaker compression ratio.
+pub fn compress_exact(table: &RoutingTable) -> RoutingTable {
+    let buddy = buddy_table(&route_groups(table));
+    if semantics_preserved(table, &buddy) {
+        buddy
+    } else {
+        // Conflicting cross-route overlaps in the input: refuse.
+        table.clone()
+    }
+}
+
+/// Compress every oversubscribed table in `tables` in place, sharding
+/// across up to `threads` workers (chips are independent). Tables that
+/// already fit are left untouched, matching the serial pipeline.
+pub fn compress_tables_in_place(
+    tables: &mut BTreeMap<ChipCoord, RoutingTable>,
+    threads: usize,
+) {
+    let victims: Vec<ChipCoord> = tables
+        .iter()
+        .filter(|(_, t)| !t.fits())
+        .map(|(c, _)| *c)
+        .collect();
+    let inputs: Vec<&RoutingTable> = victims.iter().map(|c| &tables[c]).collect();
+    let compressed = crate::util::par::par_map(threads, &inputs, |_, t| compress(t));
+    drop(inputs);
+    for (chip, table) in victims.into_iter().zip(compressed) {
+        tables.insert(chip, table);
     }
 }
 
@@ -349,6 +397,63 @@ mod tests {
     fn empty_table_compresses_to_empty() {
         let t = RoutingTable::new();
         assert_eq!(compress(&t).len(), 0);
+        assert_eq!(compress_exact(&t).len(), 0);
+    }
+
+    #[test]
+    fn exact_compression_keeps_dead_keys_dead() {
+        // Two non-adjacent blocks: aggressive covering would swallow the
+        // gap; the exact compressor must not.
+        let t = RoutingTable::from_entries(vec![
+            e(0x000, 0xffff_ff00, east()),
+            e(0x200, 0xffff_ff00, east()),
+        ]);
+        let c = compress_exact(&t);
+        for key in 0x100..0x200u32 {
+            assert_eq!(c.lookup(key), None, "dead key {key:#x} came alive");
+        }
+        for key in (0x000..0x100u32).chain(0x200..0x300) {
+            assert_eq!(c.lookup(key), Some(east()));
+        }
+    }
+
+    #[test]
+    fn exact_compression_merges_buddies() {
+        let t = RoutingTable::from_entries(vec![
+            e(0x000, 0xffff_ff00, east()),
+            e(0x100, 0xffff_ff00, east()),
+        ]);
+        assert_eq!(compress_exact(&t).len(), 1);
+    }
+
+    #[test]
+    fn sharded_whole_map_compression_matches_serial() {
+        use std::collections::BTreeMap;
+        // Two just-oversubscribed single-route tables (cheap to buddy-
+        // merge) plus one that already fits and must be left untouched.
+        let build = || -> BTreeMap<crate::machine::ChipCoord, RoutingTable> {
+            let mut m = BTreeMap::new();
+            for i in 0..2u32 {
+                let entries: Vec<RoutingEntry> =
+                    (0..1040u32).map(|k| e(k + i, !0, east())).collect();
+                m.insert((i, 0u32), RoutingTable::from_entries(entries));
+            }
+            m.insert(
+                (9, 9),
+                RoutingTable::from_entries(vec![e(0, !0, north()), e(1, !0, north())]),
+            );
+            m
+        };
+        let mut serial = build();
+        compress_tables_in_place(&mut serial, 1);
+        let mut sharded = build();
+        compress_tables_in_place(&mut sharded, 4);
+        assert_eq!(serial.len(), sharded.len());
+        for (chip, t) in &serial {
+            assert_eq!(t.entries(), sharded[chip].entries(), "chip {chip:?}");
+        }
+        // The fitting table was not compressed.
+        assert_eq!(sharded[&(9, 9)].len(), 2);
     }
 
     #[test]

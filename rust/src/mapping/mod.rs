@@ -46,6 +46,36 @@ pub struct Mapping {
     pub reverse_iptags: BTreeMap<(VertexId, String), AllocatedReverseIpTag>,
 }
 
+/// Host-side execution options for the mapping pipeline: §1 warns that
+/// mapping time "will dwarf the computational execution time" if it does
+/// not scale with the machine, so the shardable stages (NER routing,
+/// table generation, ordered-covering compression) run on a scoped
+/// worker pool this wide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MappingOptions {
+    /// Worker threads for the shardable mapping stages. `1` = serial
+    /// (the default); `0` = one worker per available hardware thread.
+    /// Output is byte-identical at any setting.
+    pub threads: usize,
+}
+
+impl Default for MappingOptions {
+    fn default() -> Self {
+        Self { threads: 1 }
+    }
+}
+
+impl MappingOptions {
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads }
+    }
+
+    /// The actual pool width (resolves `0` to the hardware parallelism).
+    pub fn effective_threads(&self) -> usize {
+        crate::util::par::effective_threads(self.threads)
+    }
+}
+
 /// Options controlling the mapping pipeline.
 #[derive(Debug, Clone)]
 pub struct MappingConfig {
@@ -56,6 +86,8 @@ pub struct MappingConfig {
     pub compress_tables: bool,
     /// Fail if a compressed table still exceeds the 1024-entry TCAM.
     pub enforce_table_capacity: bool,
+    /// Host-side execution options (worker-pool width).
+    pub options: MappingOptions,
 }
 
 impl Default for MappingConfig {
@@ -64,6 +96,7 @@ impl Default for MappingConfig {
             use_default_routes: true,
             compress_tables: true,
             enforce_table_capacity: true,
+            options: MappingOptions::default(),
         }
     }
 }
@@ -76,16 +109,13 @@ pub fn map_graph(
     graph: &MachineGraph,
     config: &MappingConfig,
 ) -> anyhow::Result<Mapping> {
+    let threads = config.options.threads;
     let placements = placer::place(machine, graph)?;
-    let forest = router::route(machine, graph, &placements)?;
+    let forest = router::route_sharded(machine, graph, &placements, threads)?;
     let keys = keys::allocate_keys(graph)?;
     let mut tables = tables::build_tables(machine, graph, &forest, &keys, config)?;
     if config.compress_tables {
-        for table in tables.values_mut() {
-            if !table.fits() {
-                *table = compress::compress(table);
-            }
-        }
+        compress::compress_tables_in_place(&mut tables, threads);
     }
     if config.enforce_table_capacity {
         for (chip, table) in &tables {
@@ -110,14 +140,19 @@ impl Mapping {
 
 /// Run the same pipeline through the Figure-10 algorithm execution
 /// engine: each step is an [`crate::algorithms::Algorithm`] with token
-/// inputs/outputs, and the executor derives the workflow order. Returns
-/// the mapping plus the executed workflow (for provenance).
+/// inputs/outputs, and the executor derives the workflow order. The
+/// router, table generator and compressor declare shardable inner loops
+/// the executor fans out over `config.options.threads` workers; their
+/// order-preserving joins keep the result byte-identical to the serial
+/// [`map_graph`] path. Returns the mapping plus the executed workflow
+/// (for provenance).
 pub fn map_graph_via_engine(
     machine: &Machine,
     graph: &MachineGraph,
     config: &MappingConfig,
 ) -> anyhow::Result<(Mapping, crate::algorithms::Workflow)> {
     use crate::algorithms::{Algorithm, Blackboard, Executor};
+    use crate::machine::router::RoutingTable;
 
     let mut board = Blackboard::new();
     board.put("machine", machine.clone());
@@ -137,16 +172,33 @@ pub fn map_graph_via_engine(
                 Ok(())
             },
         ),
-        Algorithm::new(
+        // Sharded: one work item per outgoing edge partition; each tree
+        // is grown independently against a shared machine context. The
+        // machine token rides through the context (no clone) and the
+        // merge returns it to the blackboard for the later algorithms.
+        Algorithm::sharded(
             "ner_router",
             &["machine", "machine_graph", "placements"],
             &["routing_trees"],
-            |b| {
-                let m: &Machine = b.get("machine")?;
-                let g: &MachineGraph = b.get("machine_graph")?;
-                let p: &Placements = b.get("placements")?;
-                let f = router::route(m, g, p)?;
-                b.put("routing_trees", f);
+            |b: &mut Blackboard| {
+                let items = {
+                    let g: &MachineGraph = b.get("machine_graph")?;
+                    let p: &Placements = b.get("placements")?;
+                    router::route_items(g, p)?
+                };
+                let m: Machine = b.take("machine")?;
+                Ok((m, items))
+            },
+            |m: &Machine, item: &router::RouteItem| {
+                Ok((item.key.clone(), router::build_tree(m, item.source, &item.dests)?))
+            },
+            |b: &mut Blackboard, m, keyed_trees: Vec<((VertexId, String), router::RoutingTree)>| {
+                b.put("machine", m);
+                let mut forest = RoutingForest::default();
+                for (key, tree) in keyed_trees {
+                    forest.trees.insert(key, tree);
+                }
+                b.put("routing_trees", forest);
                 Ok(())
             },
         ),
@@ -161,37 +213,77 @@ pub fn map_graph_via_engine(
                 Ok(())
             },
         ),
-        Algorithm::new(
+        // Sharded: one work item per chip. The forest is *moved* into
+        // the context (split into parallel key/tree vectors, no clone)
+        // so workers never touch the blackboard; the merge reassembles
+        // it and returns the routing_trees token.
+        Algorithm::sharded(
             "table_generator",
             &["machine", "machine_graph", "routing_trees", "routing_keys", "mapping_config"],
             &["routing_tables"],
-            |b| {
-                let m: &Machine = b.get("machine")?;
-                let g: &MachineGraph = b.get("machine_graph")?;
-                let f: &RoutingForest = b.get("routing_trees")?;
-                let k: &BTreeMap<(VertexId, String), KeyRange> = b.get("routing_keys")?;
-                let c: &MappingConfig = b.get("mapping_config")?;
-                let t = tables::build_tables(m, g, f, k, c)?;
+            |b: &mut Blackboard| {
+                let f: RoutingForest = b.take("routing_trees")?;
+                let (ranges, work, use_default) = {
+                    let m: &Machine = b.get("machine")?;
+                    let k: &BTreeMap<(VertexId, String), KeyRange> = b.get("routing_keys")?;
+                    let c: &MappingConfig = b.get("mapping_config")?;
+                    let (trees_ref, ranges, work) = tables::plan_chips(m, &f, k)?;
+                    drop(trees_ref);
+                    (ranges, work, c.use_default_routes)
+                };
+                // Forest order matches plan_chips' range/index order.
+                let (tree_keys, trees): (Vec<(VertexId, String)>, Vec<router::RoutingTree>) =
+                    f.trees.into_iter().unzip();
+                Ok(((tree_keys, trees, ranges, use_default), work))
+            },
+            |ctx: &(Vec<(VertexId, String)>, Vec<router::RoutingTree>, Vec<KeyRange>, bool),
+             item: &tables::ChipWork| {
+                let (_, trees, ranges, use_default) = ctx;
+                Ok((item.0, tables::chip_table(trees, ranges, item.0, &item.1, *use_default)))
+            },
+            |b: &mut Blackboard, ctx, chip_tables: Vec<(ChipCoord, RoutingTable)>| {
+                let (tree_keys, trees, _, _) = ctx;
+                b.put("routing_trees", RoutingForest {
+                    trees: tree_keys.into_iter().zip(trees).collect(),
+                });
+                let t: BTreeMap<ChipCoord, RoutingTable> = chip_tables
+                    .into_iter()
+                    .filter(|(_, table)| !table.is_empty())
+                    .collect();
                 b.put("routing_tables", t);
                 Ok(())
             },
         ),
-        Algorithm::new(
+        // Sharded: one work item per oversubscribed table; fitting
+        // tables ride along in the context untouched.
+        Algorithm::sharded(
             "table_compressor",
             &["routing_tables", "mapping_config"],
             &["compressed_tables"],
-            |b| {
+            |b: &mut Blackboard| {
                 let c: &MappingConfig = b.get("mapping_config")?;
-                let compress = c.compress_tables;
+                let run_compressor = c.compress_tables;
                 let enforce = c.enforce_table_capacity;
-                let mut t: BTreeMap<ChipCoord, crate::machine::router::RoutingTable> =
-                    b.take("routing_tables")?;
-                if compress {
-                    for table in t.values_mut() {
-                        if !table.fits() {
-                            *table = compress::compress(table);
-                        }
+                let mut t: BTreeMap<ChipCoord, RoutingTable> = b.take("routing_tables")?;
+                let mut victims = Vec::new();
+                if run_compressor {
+                    let chips: Vec<ChipCoord> =
+                        t.iter().filter(|(_, tb)| !tb.fits()).map(|(c, _)| *c).collect();
+                    for chip in chips {
+                        let table = t.remove(&chip).unwrap();
+                        victims.push((chip, table));
                     }
+                }
+                Ok(((t, enforce), victims))
+            },
+            |_ctx: &(BTreeMap<ChipCoord, RoutingTable>, bool),
+             item: &(ChipCoord, RoutingTable)| {
+                Ok((item.0, compress::compress(&item.1)))
+            },
+            |b: &mut Blackboard, ctx, compressed: Vec<(ChipCoord, RoutingTable)>| {
+                let (mut t, enforce) = ctx;
+                for (chip, table) in compressed {
+                    t.insert(chip, table);
                 }
                 if enforce {
                     for (chip, table) in &t {
@@ -220,10 +312,12 @@ pub fn map_graph_via_engine(
         ),
     ];
 
-    let workflow = Executor::new(algorithms).execute(
-        &mut board,
-        &["placements", "compressed_tables", "routing_keys", "ip_tags"],
-    )?;
+    let workflow = Executor::new(algorithms)
+        .with_threads(config.options.threads)
+        .execute(
+            &mut board,
+            &["placements", "compressed_tables", "routing_keys", "ip_tags"],
+        )?;
 
     let placements: Placements = board.take("placements")?;
     let forest: RoutingForest = board.take("routing_trees")?;

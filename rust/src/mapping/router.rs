@@ -65,29 +65,73 @@ pub struct RoutingForest {
     pub trees: BTreeMap<(VertexId, String), RoutingTree>,
 }
 
-/// Route every outgoing edge partition of `graph`.
+/// One routing work item: an outgoing edge partition with its placements
+/// resolved. Items are independent of one another — the unit of sharding
+/// for the parallel router.
+#[derive(Debug, Clone)]
+pub struct RouteItem {
+    /// The forest key: (source vertex, partition id).
+    pub key: (VertexId, String),
+    /// The chip the source vertex is placed on.
+    pub source: ChipCoord,
+    /// Destination cores, grouped per chip.
+    pub dests: BTreeMap<ChipCoord, BTreeSet<u8>>,
+}
+
+/// Resolve every outgoing edge partition of `graph` to a [`RouteItem`]
+/// (the cheap, serial half of routing).
+pub fn route_items(
+    graph: &MachineGraph,
+    placements: &Placements,
+) -> anyhow::Result<Vec<RouteItem>> {
+    let mut items = Vec::with_capacity(graph.n_partitions());
+    for partition in graph.partitions() {
+        let src_loc = placements.of(partition.pre).ok_or_else(|| {
+            anyhow::anyhow!("partition source {:?} unplaced", partition.pre)
+        })?;
+        let mut dests: BTreeMap<ChipCoord, BTreeSet<u8>> = BTreeMap::new();
+        for target in graph.partition_targets(partition) {
+            let loc = placements
+                .of(target)
+                .ok_or_else(|| anyhow::anyhow!("target {target:?} unplaced"))?;
+            dests.entry(loc.chip()).or_default().insert(loc.p);
+        }
+        items.push(RouteItem {
+            key: (partition.pre, partition.id.clone()),
+            source: src_loc.chip(),
+            dests,
+        });
+    }
+    Ok(items)
+}
+
+/// Route every outgoing edge partition of `graph` (serial).
 pub fn route(
     machine: &Machine,
     graph: &MachineGraph,
     placements: &Placements,
 ) -> anyhow::Result<RoutingForest> {
+    route_sharded(machine, graph, placements, 1)
+}
+
+/// Route every outgoing edge partition of `graph`, building trees on up
+/// to `threads` workers. Each partition's tree depends only on the
+/// machine and that partition's placements, and the forest is merged in
+/// partition order — output is byte-identical to the serial path at any
+/// thread count.
+pub fn route_sharded(
+    machine: &Machine,
+    graph: &MachineGraph,
+    placements: &Placements,
+    threads: usize,
+) -> anyhow::Result<RoutingForest> {
+    let items = route_items(graph, placements)?;
+    let trees = crate::util::par::try_par_map(threads, &items, |_, item| {
+        build_tree(machine, item.source, &item.dests)
+    })?;
     let mut forest = RoutingForest::default();
-    for partition in graph.partitions() {
-        let src_loc = placements.of(partition.pre).ok_or_else(|| {
-            anyhow::anyhow!("partition source {:?} unplaced", partition.pre)
-        })?;
-        // Destination cores, grouped per chip.
-        let mut dest_cores: BTreeMap<ChipCoord, BTreeSet<u8>> = BTreeMap::new();
-        for target in graph.partition_targets(partition) {
-            let loc = placements
-                .of(target)
-                .ok_or_else(|| anyhow::anyhow!("target {target:?} unplaced"))?;
-            dest_cores.entry(loc.chip()).or_default().insert(loc.p);
-        }
-        let tree = build_tree(machine, src_loc.chip(), &dest_cores)?;
-        forest
-            .trees
-            .insert((partition.pre, partition.id.clone()), tree);
+    for (item, tree) in items.into_iter().zip(trees) {
+        forest.trees.insert(item.key, tree);
     }
     Ok(forest)
 }

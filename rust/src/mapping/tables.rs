@@ -7,17 +7,97 @@
 //! single outbound link exactly opposite, no local delivery) can be
 //! elided entirely: the router's default routing reproduces it (§2) —
 //! the cheapest form of table compression, applied at generation time.
+//!
+//! Generation is sharded **per chip**: each chip's table depends only on
+//! the trees that touch that chip, so chips are independent work items.
+//! Entries within a chip are emitted in forest order — the same order
+//! the historical tree-major loop produced — so the result is identical
+//! at any thread count.
 
+use std::borrow::Borrow;
 use std::collections::BTreeMap;
 
 use crate::graph::{KeyRange, MachineGraph, VertexId};
 use crate::machine::router::{Route, RoutingEntry, RoutingTable};
 use crate::machine::{ChipCoord, Machine};
 
-use super::router::RoutingForest;
+use super::router::{RoutingForest, RoutingTree};
 use super::MappingConfig;
 
-/// Build the per-chip routing tables for a routed, keyed graph.
+/// One table-generation work item: a chip plus the forest-order indices
+/// of the trees that have a node on it.
+pub type ChipWork = (ChipCoord, Vec<usize>);
+
+/// The serial planning half of table generation: resolve each tree's key
+/// range (forest order) and group tree indices per non-virtual chip.
+pub fn plan_chips<'f>(
+    machine: &Machine,
+    forest: &'f RoutingForest,
+    keys: &BTreeMap<(VertexId, String), KeyRange>,
+) -> anyhow::Result<(Vec<&'f RoutingTree>, Vec<KeyRange>, Vec<ChipWork>)> {
+    let mut trees = Vec::with_capacity(forest.trees.len());
+    let mut ranges = Vec::with_capacity(forest.trees.len());
+    let mut per_chip: BTreeMap<ChipCoord, Vec<usize>> = BTreeMap::new();
+    for (i, ((vertex, partition), tree)) in forest.trees.iter().enumerate() {
+        let range = keys
+            .get(&(*vertex, partition.clone()))
+            .ok_or_else(|| anyhow::anyhow!("no keys for ({vertex:?}, {partition})"))?;
+        for chip in tree.nodes.keys() {
+            // Skip virtual chips: nothing is loaded on them (§7.2); the
+            // device itself consumes the packets.
+            if machine.chip(*chip).map(|c| c.is_virtual).unwrap_or(false) {
+                continue;
+            }
+            per_chip.entry(*chip).or_default().push(i);
+        }
+        trees.push(tree);
+        ranges.push(*range);
+    }
+    Ok((trees, ranges, per_chip.into_iter().collect()))
+}
+
+/// Generate one chip's table from the trees that touch it, in forest
+/// order. Generic over tree ownership so both the borrowed direct path
+/// and the engine's owned-context path share it.
+pub fn chip_table<T: Borrow<RoutingTree>>(
+    trees: &[T],
+    ranges: &[KeyRange],
+    chip: ChipCoord,
+    tree_idxs: &[usize],
+    use_default_routes: bool,
+) -> RoutingTable {
+    let mut table = RoutingTable::new();
+    for &i in tree_idxs {
+        let node = &trees[i].borrow().nodes[&chip];
+        let range = &ranges[i];
+        let mut route = Route::EMPTY;
+        for d in &node.out_links {
+            route.add_link(*d);
+        }
+        for p in &node.local_cores {
+            route.add_processor(*p);
+        }
+        if route.is_empty() {
+            // Leaf with no delivery — shouldn't occur, but harmless.
+            continue;
+        }
+        if use_default_routes {
+            if let (Some(in_link), Some(out)) = (node.in_link, route.single_link()) {
+                if in_link == out {
+                    // Packet continues straight: default routing
+                    // handles it with no table entry.
+                    continue;
+                }
+            }
+        }
+        table.push(RoutingEntry::new(range.base, range.mask, route));
+    }
+    table
+}
+
+/// Build the per-chip routing tables for a routed, keyed graph, sharded
+/// per chip over `config.options.threads` workers. Chips whose every
+/// node was elided produce no table at all (not an empty one).
 pub fn build_tables(
     machine: &Machine,
     _graph: &MachineGraph,
@@ -25,44 +105,18 @@ pub fn build_tables(
     keys: &BTreeMap<(VertexId, String), KeyRange>,
     config: &MappingConfig,
 ) -> anyhow::Result<BTreeMap<ChipCoord, RoutingTable>> {
-    let mut tables: BTreeMap<ChipCoord, RoutingTable> = BTreeMap::new();
-    for ((vertex, partition), tree) in &forest.trees {
-        let range = keys
-            .get(&(*vertex, partition.clone()))
-            .ok_or_else(|| anyhow::anyhow!("no keys for ({vertex:?}, {partition})"))?;
-        for (chip, node) in &tree.nodes {
-            // Skip virtual chips: nothing is loaded on them (§7.2); the
-            // device itself consumes the packets.
-            if machine.chip(*chip).map(|c| c.is_virtual).unwrap_or(false) {
-                continue;
-            }
-            let mut route = Route::EMPTY;
-            for d in &node.out_links {
-                route.add_link(*d);
-            }
-            for p in &node.local_cores {
-                route.add_processor(*p);
-            }
-            if route.is_empty() {
-                // Leaf with no delivery — shouldn't occur, but harmless.
-                continue;
-            }
-            if config.use_default_routes {
-                if let (Some(in_link), Some(out)) = (node.in_link, route.single_link()) {
-                    if in_link == out {
-                        // Packet continues straight: default routing
-                        // handles it with no table entry.
-                        continue;
-                    }
-                }
-            }
-            tables
-                .entry(*chip)
-                .or_default()
-                .push(RoutingEntry::new(range.base, range.mask, route));
-        }
-    }
-    Ok(tables)
+    let (trees, ranges, work) = plan_chips(machine, forest, keys)?;
+    let built = crate::util::par::par_map(
+        config.options.threads,
+        &work,
+        |_, (chip, idxs)| chip_table(&trees, &ranges, *chip, idxs, config.use_default_routes),
+    );
+    Ok(work
+        .iter()
+        .zip(built)
+        .filter(|(_, table)| !table.is_empty())
+        .map(|((chip, _), table)| (*chip, table))
+        .collect())
 }
 
 /// Verify that the generated tables route every key of every partition

@@ -8,10 +8,19 @@
 //!
 //! See /opt/xla-example/README.md for why text (not serialized proto) is
 //! the interchange format.
+//!
+//! The PJRT backing is gated behind the off-by-default `pjrt` cargo
+//! feature: without it the crate builds on machines that lack the XLA
+//! toolchain, and [`Runtime::open`] returns a descriptive error instead.
+//! Everything that does not execute HLO — the whole mapping stack, the
+//! simulator, the pure-Rust apps — is unaffected.
 
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+#[cfg(feature = "pjrt")]
+use std::collections::BTreeMap;
+
+#[cfg(feature = "pjrt")]
 use crate::util::json::Json;
 
 /// A host-side tensor crossing the PJRT boundary.
@@ -22,7 +31,16 @@ pub enum HostTensor {
     ScalarF32(f32),
 }
 
+/// The default artifact directory: `$SPINNTOOLS_ARTIFACTS` or
+/// `<repo>/artifacts` relative to the crate.
+fn artifacts_default_dir() -> PathBuf {
+    std::env::var("SPINNTOOLS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
 /// One compiled artifact.
+#[cfg(feature = "pjrt")]
 struct LoadedModel {
     exe: xla::PjRtLoadedExecutable,
     input_shapes: Vec<Vec<usize>>,
@@ -30,6 +48,7 @@ struct LoadedModel {
 }
 
 /// The artifact runtime: one compiled executable per model variant.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -39,6 +58,7 @@ pub struct Runtime {
     pub execs: std::cell::Cell<u64>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open an artifact directory (reads `manifest.json`; compiles each
     /// model lazily on first use so binaries that exercise one model
@@ -87,12 +107,9 @@ impl Runtime {
         })
     }
 
-    /// The default artifact directory: `$SPINNTOOLS_ARTIFACTS` or
-    /// `<repo>/artifacts` relative to the crate.
+    /// See [`artifacts_default_dir`].
     pub fn default_dir() -> PathBuf {
-        std::env::var("SPINNTOOLS_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+        artifacts_default_dir()
     }
 
     pub fn open_default() -> anyhow::Result<Self> {
@@ -223,6 +240,60 @@ impl Runtime {
     }
 }
 
+/// The artifact runtime, built **without** the `pjrt` feature: a stub
+/// with the same API whose constructors fail with a clear error. No
+/// instance can ever exist, so the accessor methods are unreachable —
+/// they only keep callers compiling.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    /// Execution counter (perf accounting).
+    pub execs: std::cell::Cell<u64>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    fn unavailable(what: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "{what}: spinntools was built without the `pjrt` feature, so the \
+             PJRT/XLA runtime that executes the AOT HLO artifacts is \
+             unavailable. Rebuild with `cargo build --features pjrt` (needs \
+             the XLA toolchain; see Cargo.toml) to run HLO-backed workloads."
+        )
+    }
+
+    /// Always fails: the PJRT backing is not compiled in.
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let _ = dir;
+        Err(Self::unavailable("Runtime::open"))
+    }
+
+    /// See [`artifacts_default_dir`].
+    pub fn default_dir() -> PathBuf {
+        artifacts_default_dir()
+    }
+
+    /// Always fails: the PJRT backing is not compiled in.
+    pub fn open_default() -> anyhow::Result<Self> {
+        Err(Self::unavailable("Runtime::open_default"))
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn has_model(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn input_shapes(&self, _name: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+        Err(Self::unavailable("Runtime::input_shapes"))
+    }
+
+    pub fn exec(&self, _name: &str, _inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        Err(Self::unavailable("Runtime::exec"))
+    }
+}
+
 impl HostTensor {
     pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
         match self {
@@ -254,6 +325,28 @@ impl HostTensor {
 }
 
 #[cfg(test)]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn default_dir_is_stable() {
+        // Shared by both backings: the artifact directory is derived
+        // from the env var or the crate root.
+        let d = Runtime::default_dir();
+        assert!(d.to_string_lossy().contains("artifacts") || std::env::var("SPINNTOOLS_ARTIFACTS").is_ok());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_open_reports_missing_feature() {
+        let err = Runtime::open_default().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        let err = Runtime::open(Path::new("/nonexistent")).unwrap_err().to_string();
+        assert!(err.contains("without the `pjrt` feature"), "{err}");
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -4,6 +4,7 @@
 
 pub mod bytes;
 pub mod json;
+pub mod par;
 pub mod prop;
 
 /// SplitMix64 PRNG — deterministic, dependency-free randomness for the

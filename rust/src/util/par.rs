@@ -1,0 +1,151 @@
+//! A minimal scoped worker pool (the vendor bundle has no rayon): an
+//! order-preserving parallel map over independent work items, used by
+//! the sharded mapping stages (§6.3.2 scaling) and the Figure-10
+//! engine's fan-out/join support.
+//!
+//! Work is pulled from a shared atomic cursor so uneven items balance
+//! across workers, but results are re-assembled **in item order** — the
+//! caller sees exactly the sequence a serial map would produce, which is
+//! what lets the mapping pipeline promise byte-identical output at any
+//! thread count.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Normalise a thread-count knob: `0` means one worker per available
+/// hardware thread; anything else is taken literally.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped workers, preserving
+/// item order in the result. `threads <= 1` (after [`effective_threads`]
+/// normalisation) runs serially on the caller's thread with no pool.
+///
+/// On error, the error of the **lowest-indexed** failing item is
+/// returned, so failures are as deterministic as the successes: the
+/// cursor hands indices out in increasing order and the cancel flag is
+/// only consulted *before claiming new work* — an index already claimed
+/// is always evaluated, so by the time any failure is recorded the
+/// lowest failing index has been claimed and will record its own error.
+/// Cancellation just stops workers from starting further (discarded)
+/// items after the first failure.
+pub fn try_par_map<T, R, F>(threads: usize, items: &[T], f: F) -> anyhow::Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> anyhow::Result<R> + Sync,
+{
+    let threads = effective_threads(threads).min(items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+    let errors: Mutex<Vec<(usize, anyhow::Error)>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                while !failed.load(Ordering::Relaxed) {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    match f(i, &items[i]) {
+                        Ok(r) => local.push((i, r)),
+                        Err(e) => {
+                            errors.lock().unwrap().push((i, e));
+                            failed.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+                results.lock().unwrap().append(&mut local);
+            });
+        }
+    });
+
+    let mut errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        errors.sort_by_key(|(i, _)| *i);
+        return Err(errors.remove(0).1);
+    }
+    let mut collected = results.into_inner().unwrap();
+    collected.sort_by_key(|(i, _)| *i);
+    anyhow::ensure!(
+        collected.len() == items.len(),
+        "worker pool lost results ({} of {})",
+        collected.len(),
+        items.len()
+    );
+    Ok(collected.into_iter().map(|(_, r)| r).collect())
+}
+
+/// Infallible variant of [`try_par_map`].
+pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    try_par_map(threads, items, |i, t| Ok(f(i, t))).expect("infallible map failed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_at_any_thread_count() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * 3).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let got = par_map(threads, &items, |_, x| x * 3);
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let got: Vec<u32> = par_map(4, &[] as &[u32], |_, x| *x);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn index_matches_item() {
+        let items: Vec<usize> = (0..100).collect();
+        let got = par_map(4, &items, |i, x| i == *x);
+        assert!(got.into_iter().all(|ok| ok));
+    }
+
+    #[test]
+    fn first_error_wins_deterministically() {
+        let items: Vec<u32> = (0..200).collect();
+        for threads in [1, 2, 8] {
+            let err = try_par_map(threads, &items, |_, x| {
+                if *x >= 50 {
+                    anyhow::bail!("item {x} failed")
+                }
+                Ok(*x)
+            })
+            .unwrap_err();
+            // Workers may also fail on later items, but the reported
+            // error must be the lowest-indexed failure.
+            assert_eq!(err.to_string(), "item 50 failed", "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn effective_zero_means_hardware() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

@@ -1,0 +1,85 @@
+//! Satellite: the full `Mapping` output — placements, routing forest,
+//! keys, tables, IP tags — is identical for worker-pool widths 1, 2 and
+//! 8, on both of the paper's workload shapes (§7.1 Conway grid, §7.2
+//! microcircuit), and repeated runs are stable. The engine path
+//! (Figure 10, with sharded algorithms) must also match the direct path
+//! byte-for-byte.
+
+use spinntools::apps::networks::{conway_machine_graph, microcircuit_machine_graph};
+use spinntools::graph::MachineGraph;
+use spinntools::machine::{Machine, MachineBuilder};
+use spinntools::mapping::{
+    map_graph, map_graph_via_engine, Mapping, MappingConfig, MappingOptions,
+};
+
+/// Canonical text form of everything mapping produces; equal strings
+/// mean equal mappings (every constituent is a deterministic
+/// `BTreeMap`/`Vec` with derived `Debug`).
+fn fingerprint(m: &Mapping) -> String {
+    format!(
+        "{:?}\n{:?}\n{:?}\n{:?}\n{:?}\n{:?}",
+        m.placements, m.forest, m.keys, m.tables, m.iptags, m.reverse_iptags
+    )
+}
+
+fn config(threads: usize) -> MappingConfig {
+    MappingConfig {
+        options: MappingOptions::with_threads(threads),
+        ..Default::default()
+    }
+}
+
+fn assert_thread_invariant(machine: &Machine, graph: &MachineGraph, label: &str) {
+    let baseline = fingerprint(&map_graph(machine, graph, &config(1)).unwrap());
+    // Repeated serial runs are stable.
+    let again = fingerprint(&map_graph(machine, graph, &config(1)).unwrap());
+    assert_eq!(baseline, again, "{label}: serial mapping not reproducible");
+    for threads in [2usize, 8] {
+        let sharded = fingerprint(&map_graph(machine, graph, &config(threads)).unwrap());
+        assert_eq!(
+            baseline, sharded,
+            "{label}: mapping differs at {threads} threads"
+        );
+        // Repeated sharded runs are stable too.
+        let sharded_again =
+            fingerprint(&map_graph(machine, graph, &config(threads)).unwrap());
+        assert_eq!(
+            sharded, sharded_again,
+            "{label}: {threads}-thread mapping not reproducible"
+        );
+    }
+}
+
+#[test]
+fn conway_mapping_identical_at_1_2_8_threads() {
+    let machine = MachineBuilder::spinn5().build();
+    let graph = conway_machine_graph(16, 16, |r, c| (r + c) % 2 == 0);
+    assert_thread_invariant(&machine, &graph, "conway 16x16 / spinn5");
+}
+
+#[test]
+fn microcircuit_mapping_identical_at_1_2_8_threads() {
+    let machine = MachineBuilder::boards(3).build();
+    let graph = microcircuit_machine_graph(&machine, 0.05, 20260728).expect("split");
+    assert!(graph.n_vertices() >= 16, "workload too small to exercise sharding");
+    assert_thread_invariant(&machine, &graph, "microcircuit 5% / 3 boards");
+}
+
+#[test]
+fn engine_path_matches_direct_byte_for_byte() {
+    let machine = MachineBuilder::spinn5().build();
+    let graph = conway_machine_graph(12, 12, |r, c| (r + c) % 2 == 0);
+    for threads in [1usize, 2, 8] {
+        let direct = map_graph(&machine, &graph, &config(threads)).unwrap();
+        let (engine, workflow) =
+            map_graph_via_engine(&machine, &graph, &config(threads)).unwrap();
+        assert_eq!(
+            fingerprint(&direct),
+            fingerprint(&engine),
+            "engine and direct mappings diverge at {threads} threads"
+        );
+        // The engine actually ran the sharded stages.
+        assert!(workflow.0.contains(&"ner_router".to_string()));
+        assert!(workflow.0.contains(&"table_compressor".to_string()));
+    }
+}

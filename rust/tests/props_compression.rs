@@ -1,0 +1,149 @@
+//! Property tests (experiment E10 hardening): ordered-covering routing
+//! table compression is semantics-preserving.
+//!
+//! Two compressors, two contracts:
+//!
+//! - [`compress_exact`] preserves the semantics of **every** 32-bit key:
+//!   a key that matched before compression routes to the same link/core
+//!   set after, and a previously-dead key stays dead (buddy merges are
+//!   exact unions).
+//! - [`compress`] (the production ordered-covering pass) preserves every
+//!   **matched** key; never-matched keys may be captured by a wider
+//!   cover — the order-exploiting trade of Mundy et al. 2016, safe on
+//!   SpiNNaker because unallocated keys are never sent. The properties
+//!   here pin down exactly that boundary: a key whose route *changes*
+//!   must have been dead before.
+
+use spinntools::machine::router::{Route, RoutingEntry, RoutingTable};
+use spinntools::mapping::compress::{compress, compress_exact};
+use spinntools::util::{prop, SplitMix64};
+
+/// Allocator-shaped random table: aligned power-of-two blocks in a
+/// handful of route groups, with cross-route overlaps dropped (the key
+/// allocator never produces them, and overlap makes "the matched route"
+/// order-dependent).
+fn random_table(rng: &mut SplitMix64) -> RoutingTable {
+    let n_groups = 1 + rng.below(4);
+    let mut entries = Vec::new();
+    for g in 0..n_groups {
+        let route = Route(1 << g);
+        for _ in 0..1 + rng.below(12) {
+            let block_bits = rng.below(6) as u32;
+            let block = 1u32 << block_bits;
+            let base = (rng.below(64) as u32) * block;
+            entries.push(RoutingEntry::new(base, !(block - 1), route));
+        }
+    }
+    let mut clean: Vec<RoutingEntry> = Vec::new();
+    'outer: for cand in entries {
+        for kept in &clean {
+            if kept.intersects(&cand) && kept.route != cand.route {
+                continue 'outer;
+            }
+        }
+        clean.push(cand);
+    }
+    RoutingTable::from_entries(clean)
+}
+
+/// Every key any original entry matches (blocks here are at most 32
+/// keys, so exhaustive enumeration is cheap).
+fn matched_keys(table: &RoutingTable) -> Vec<u32> {
+    let mut keys = Vec::new();
+    for e in table.entries() {
+        let lo = e.key & e.mask;
+        let hi = lo | !e.mask;
+        keys.extend(lo..=hi);
+    }
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+#[test]
+fn property_exact_compression_preserves_all_keys() {
+    prop::check(60, 0xE10_AC7, |rng| {
+        let t = random_table(rng);
+        let c = compress_exact(&t);
+        assert!(c.len() <= t.len(), "exact compression grew the table");
+
+        // 1. Every matched key keeps its exact route word.
+        for key in matched_keys(&t) {
+            assert_eq!(
+                t.lookup(key),
+                c.lookup(key),
+                "matched key {key:#x} changed route"
+            );
+        }
+
+        // 2. No previously-dead key becomes live: the populated region
+        // (all blocks live below 64 * 32 = 2048) is swept densely, and
+        // the rest of the 32-bit space is sampled at random.
+        for key in 0..4096u32 {
+            assert_eq!(
+                t.lookup(key),
+                c.lookup(key),
+                "key {key:#x} changed liveness/route"
+            );
+        }
+        for _ in 0..2000 {
+            let key = rng.next_u64() as u32;
+            assert_eq!(
+                t.lookup(key),
+                c.lookup(key),
+                "sampled key {key:#x} changed liveness/route"
+            );
+        }
+    });
+}
+
+#[test]
+fn property_aggressive_compression_preserves_matched_keys() {
+    prop::check(60, 0xE10_FACE, |rng| {
+        let t = random_table(rng);
+        let c = compress(&t);
+        assert!(c.len() <= t.len(), "compression grew the table");
+
+        // Every matched key keeps its route...
+        for key in matched_keys(&t) {
+            assert_eq!(
+                t.lookup(key),
+                c.lookup(key),
+                "matched key {key:#x} changed route"
+            );
+        }
+
+        // ...and any key whose lookup changed must have been dead before
+        // (only never-sent keys may be captured by a wider cover), and
+        // it must land on a route that already existed in the table.
+        let live_routes: Vec<Route> =
+            t.entries().iter().map(|e| e.route).collect();
+        for key in 0..4096u32 {
+            let before = t.lookup(key);
+            let after = c.lookup(key);
+            if before != after {
+                assert_eq!(before, None, "live key {key:#x} was rerouted");
+                let got = after.expect("changed key must now match something");
+                assert!(
+                    live_routes.contains(&got),
+                    "captured key {key:#x} got a novel route {got:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn property_compression_is_idempotent_enough_to_fit() {
+    // Compressing an already-compressed table never grows it and keeps
+    // matched-key semantics (a regression guard for the sort order).
+    prop::check(20, 0x1D_E4, |rng| {
+        let t = random_table(rng);
+        let once = compress(&t);
+        let twice = compress(&once);
+        assert!(twice.len() <= once.len());
+        for key in matched_keys(&t) {
+            assert_eq!(t.lookup(key), twice.lookup(key), "key {key:#x}");
+        }
+    });
+}

@@ -1,0 +1,168 @@
+//! Property tests (E2/E5 hardening): NER multicast routing validity on
+//! random machine graphs over random machines, including machines with
+//! faulty links and dead chips.
+//!
+//! For every outgoing edge partition the routing step must produce a
+//! tree that
+//!   1. is rooted at the source vertex's chip,
+//!   2. contains no cycles (each chip is reached exactly once — the
+//!      duplicate-delivery invariant of §6.3.2),
+//!   3. only ever hops over links that exist *and* work,
+//!   4. covers every source→sink pair: the delivered (chip, core) set is
+//!      exactly the placed target set,
+//! and the sharded router must produce the identical forest at any
+//! worker-pool width.
+
+use std::collections::BTreeSet;
+
+use spinntools::apps::conway::ConwayCellVertex;
+use spinntools::graph::MachineGraph;
+use spinntools::machine::{ChipCoord, Machine, MachineBuilder, ALL_DIRECTIONS};
+use spinntools::mapping::placer::{self, Placements};
+use spinntools::mapping::router::{self, RoutingTree};
+use spinntools::util::{prop, SplitMix64};
+
+/// A random machine: grid of random size, coin-flip torus wrap, a few
+/// dead links and sometimes a dead chip.
+fn random_machine(rng: &mut SplitMix64) -> Machine {
+    let side = 5 + rng.below(5) as u32;
+    let mut b = MachineBuilder::grid(side, side, rng.below(2) == 0);
+    for _ in 0..rng.below(7) {
+        let c = (rng.below(side as usize) as u32, rng.below(side as usize) as u32);
+        let d = ALL_DIRECTIONS[rng.below(6)];
+        b = b.dead_link(c, d);
+    }
+    if rng.below(3) == 0 {
+        // Never the boot chip: the radial placer roots its BFS there.
+        let c = (1 + rng.below((side - 1) as usize) as u32, rng.below(side as usize) as u32);
+        b = b.dead_chip(c);
+    }
+    b.build()
+}
+
+/// A random machine graph with a couple of partitions per vertex.
+fn random_graph(rng: &mut SplitMix64) -> MachineGraph {
+    let mut g = MachineGraph::new();
+    let n = 5 + rng.below(40) as u32;
+    let ids: Vec<_> = (0..n)
+        .map(|i| g.add_vertex(ConwayCellVertex::arc(i, 0, false)))
+        .collect();
+    for _ in 0..n * 2 {
+        let a = ids[rng.below(ids.len())];
+        let b = ids[rng.below(ids.len())];
+        if a != b {
+            let partition = if rng.below(3) == 0 { "aux" } else { "state" };
+            g.add_edge(a, b, partition);
+        }
+    }
+    g
+}
+
+/// Walk `tree` from its source, enforcing the structural invariants.
+/// Returns the delivered (chip, core) set.
+fn validate_tree(machine: &Machine, tree: &RoutingTree) -> Vec<(ChipCoord, u8)> {
+    let mut delivered = Vec::new();
+    let mut visited = BTreeSet::new();
+    let mut stack = vec![tree.source];
+    assert!(
+        tree.nodes[&tree.source].in_link.is_none(),
+        "source chip has an inbound link"
+    );
+    while let Some(chip) = stack.pop() {
+        assert!(
+            visited.insert(chip),
+            "chip {chip:?} reached twice: cycle or duplicate delivery"
+        );
+        let node = tree
+            .nodes
+            .get(&chip)
+            .unwrap_or_else(|| panic!("walk reached {chip:?}, not a tree node"));
+        for p in &node.local_cores {
+            delivered.push((chip, *p));
+        }
+        for d in &node.out_links {
+            let next = machine
+                .link_target(chip, *d)
+                .unwrap_or_else(|| panic!("tree hop {chip:?} -> {d:?} is not a working link"));
+            assert_eq!(
+                tree.nodes.get(&next).and_then(|n| n.in_link),
+                Some(*d),
+                "inbound link of {next:?} disagrees with the walk"
+            );
+            stack.push(next);
+        }
+    }
+    // No orphan nodes: every tree node was reached from the source.
+    let node_chips: BTreeSet<ChipCoord> = tree.nodes.keys().copied().collect();
+    assert_eq!(visited, node_chips, "unreachable nodes in the tree");
+    delivered.sort();
+    delivered
+}
+
+fn expected_targets(
+    graph: &MachineGraph,
+    placements: &Placements,
+    partition: &spinntools::graph::machine_graph::OutgoingEdgePartition,
+) -> Vec<(ChipCoord, u8)> {
+    let mut want: Vec<(ChipCoord, u8)> = graph
+        .partition_targets(partition)
+        .into_iter()
+        .map(|t| {
+            let loc = placements.of(t).expect("target placed");
+            (loc.chip(), loc.p)
+        })
+        .collect();
+    want.sort();
+    want.dedup();
+    want
+}
+
+#[test]
+fn property_ner_trees_are_valid_on_faulty_machines() {
+    prop::check(40, 0x0E2_5EED, |rng| {
+        let machine = random_machine(rng);
+        let graph = random_graph(rng);
+        let placements = match placer::place(&machine, &graph) {
+            Ok(p) => p,
+            Err(_) => return, // machine too small/broken for this graph
+        };
+        let forest = match router::route(&machine, &graph, &placements) {
+            Ok(f) => f,
+            Err(_) => return, // faults partitioned the machine: acceptable
+        };
+        assert_eq!(forest.trees.len(), graph.n_partitions());
+        for partition in graph.partitions() {
+            let tree = &forest.trees[&(partition.pre, partition.id.clone())];
+            let src = placements.of(partition.pre).unwrap();
+            assert_eq!(tree.source, src.chip(), "tree rooted off-source");
+            let delivered = validate_tree(&machine, tree);
+            let want = expected_targets(&graph, &placements, partition);
+            assert_eq!(delivered, want, "delivered set mismatch for {:?}", partition.id);
+        }
+    });
+}
+
+#[test]
+fn property_sharded_router_matches_serial() {
+    prop::check(25, 0x5AA5_0001, |rng| {
+        let machine = random_machine(rng);
+        let graph = random_graph(rng);
+        let Ok(placements) = placer::place(&machine, &graph) else { return };
+        let Ok(serial) = router::route(&machine, &graph, &placements) else {
+            // If the serial router fails, the sharded one must too (with
+            // the deterministic lowest-item error).
+            assert!(
+                router::route_sharded(&machine, &graph, &placements, 4).is_err(),
+                "sharded router succeeded where serial failed"
+            );
+            return;
+        };
+        let threads = 2 + rng.below(7);
+        let sharded = router::route_sharded(&machine, &graph, &placements, threads).unwrap();
+        assert_eq!(
+            format!("{serial:?}"),
+            format!("{sharded:?}"),
+            "forest differs at {threads} threads"
+        );
+    });
+}
