@@ -1,0 +1,120 @@
+//! Experiment E11 — fabric throughput: the fast packet fabric (flat
+//! chip arena, per-chip route cache, calendar event queue) against the
+//! pre-change fabric (`BTreeMap` chip store, per-packet first-match
+//! TCAM scans, `BinaryHeap` event queue), on the paper's two workload
+//! shapes (§7.1 Conway, §7.2 microcircuit topology).
+//!
+//! The legacy path is not a remembered number: `FabricMode::Legacy`
+//! still runs the original data structures, so every row here is a
+//! same-binary, same-workload A/B measurement — and the two runs must
+//! agree on a full behavioural digest, or the speedup is meaningless.
+//!
+//! Results go to `BENCH_fabric.json` at the repository root. Target
+//! (ISSUE 2): ≥ 3x packets/sec on the Conway workload.
+//!
+//! ```sh
+//! cargo bench --bench fabric
+//! ```
+
+use std::collections::BTreeMap;
+
+use spinntools::front::fabric_probe::{run_fabric_probe, ProbeResult, ProbeWorkload};
+use spinntools::simulator::FabricMode;
+use spinntools::util::json::Json;
+
+const TARGET_SPEEDUP: f64 = 3.0;
+
+fn print_row(r: &ProbeResult) {
+    println!(
+        "{:<24} {:>7} {:>7} ticks {:>9.3}s {:>12.0} ev/s {:>12.0} hops/s {:>11.0} pkts/s",
+        r.workload,
+        r.mode_name(),
+        r.ticks,
+        r.wall_seconds,
+        r.events_per_sec(),
+        r.hops_per_sec(),
+        r.sent_per_sec(),
+    );
+}
+
+fn bench_workload(workload: ProbeWorkload, ticks: u64) -> anyhow::Result<Json> {
+    let legacy = run_fabric_probe(workload, ticks, FabricMode::Legacy)?;
+    print_row(&legacy);
+    let fast = run_fabric_probe(workload, ticks, FabricMode::Fast)?;
+    print_row(&fast);
+
+    let equivalent = fast.digest == legacy.digest;
+    // The acceptance criterion (ISSUE 2 / E11) is packets/sec; with
+    // identical behaviour the packet, hop and event counts are equal
+    // across modes, so all three ratios reduce to the wall-clock ratio —
+    // but the recorded gate is the named metric.
+    let speedup = fast.sent_per_sec() / legacy.sent_per_sec().max(1e-9);
+    println!(
+        "   packets/sec speedup {speedup:.2}x | cache hit rate {:.1}% | behaviour identical: {equivalent}",
+        100.0 * fast.cache_hits as f64 / (fast.cache_hits + fast.cache_misses).max(1) as f64,
+    );
+    assert!(
+        equivalent,
+        "{}: fast and legacy fabrics diverged (digest {:016x} vs {:016x})",
+        fast.workload, fast.digest, legacy.digest
+    );
+
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(fast.workload.clone()));
+    o.insert("legacy".to_string(), legacy.to_json());
+    o.insert("fast".to_string(), fast.to_json());
+    o.insert("speedup_packets_per_sec".to_string(), Json::Num(speedup));
+    o.insert(
+        "speedup_hops_per_sec".to_string(),
+        Json::Num(fast.hops_per_sec() / legacy.hops_per_sec().max(1e-9)),
+    );
+    o.insert(
+        "speedup_events_per_sec".to_string(),
+        Json::Num(fast.events_per_sec() / legacy.events_per_sec().max(1e-9)),
+    );
+    o.insert("behaviour_identical".to_string(), Json::Bool(equivalent));
+    o.insert(
+        "meets_target".to_string(),
+        Json::Bool(equivalent && speedup >= TARGET_SPEEDUP),
+    );
+    Ok(Json::Obj(o))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E11: packet-fabric throughput, fast vs legacy (same binary, same workload)");
+
+    // §7.1 at scale: 4096 cells on a 576-chip (12-board) machine.
+    let conway = bench_workload(ProbeWorkload::Conway { side: 64, boards: 12 }, 24)?;
+    // §7.2 topology at quarter scale on 3 boards, ~30% firing rate.
+    let storm =
+        bench_workload(ProbeWorkload::MicrocircuitStorm { scale: 0.25, boards: 3 }, 48)?;
+
+    let conway_speedup = conway
+        .get("speedup_packets_per_sec")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    println!(
+        "\n# conway packets/sec speedup {conway_speedup:.2}x (target ≥ {TARGET_SPEEDUP}x): {}",
+        if conway_speedup >= TARGET_SPEEDUP { "MET" } else { "NOT MET" }
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "experiment".to_string(),
+        Json::Str("E11_fabric_throughput".to_string()),
+    );
+    root.insert("target_speedup".to_string(), Json::Num(TARGET_SPEEDUP));
+    root.insert(
+        "meets_target".to_string(),
+        Json::Bool(conway_speedup >= TARGET_SPEEDUP),
+    );
+    root.insert("workloads".to_string(), Json::Arr(vec![conway, storm]));
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_fabric.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("results written to {}", out.display());
+    Ok(())
+}

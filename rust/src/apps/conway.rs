@@ -284,7 +284,7 @@ mod tests {
             RoutingEntry::new(0x2, !0, Route::EMPTY.with_processor(1).with_processor(3)),
             RoutingEntry::new(0x3, !0, Route::EMPTY.with_processor(2)),
         ];
-        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(entries);
+        sim.chip_mut((0, 0)).unwrap().install_table(RoutingTable::from_entries(entries));
         for (p, key, alive, neighbours) in
             [(1u8, 0x1u32, true, vec![0x2u32]), (2, 0x2, true, vec![0x1, 0x3]), (3, 0x3, true, vec![0x2])]
         {

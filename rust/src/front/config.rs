@@ -104,6 +104,14 @@ impl ToolsConfig {
         self
     }
 
+    /// Select the simulator fabric implementation (experiment E11).
+    /// `Legacy` keeps the pre-E11 structures for benchmarking; results
+    /// are identical in both modes — this is purely a wall-clock knob.
+    pub fn with_fabric(mut self, mode: crate::simulator::FabricMode) -> Self {
+        self.sim.fabric = mode;
+        self
+    }
+
     /// Worker threads for the shardable mapping stages (NER routing,
     /// table generation, ordered-covering compression). `1` = serial,
     /// `0` = one per hardware thread. Mapping output is byte-identical

@@ -1,0 +1,351 @@
+//! Experiment E11 — the fabric-throughput probe harness, shared by
+//! `benches/fabric.rs` and the `fabric-smoke` test
+//! (`tests/fabric_smoke.rs`) so the bench workloads cannot rot out of
+//! the test suite.
+//!
+//! Two workloads exercise the packet fabric:
+//!
+//! - **Conway** (§7.1) through the complete SpiNNTools flow — mapping,
+//!   loading, Figure-9 run cycles, SCAMP extraction — so the probe also
+//!   covers the SDP/host paths.
+//! - **Microcircuit storm** (§7.2 topology): the real Potjans–Diesmann
+//!   machine graph is mapped (placements, keys, compressed tables) and
+//!   then driven by a deterministic pure-Rust traffic generator standing
+//!   in for the HLO-backed neuron binaries (which need the `pjrt`
+//!   feature). The fabric sees the microcircuit's genuine multicast
+//!   trees and fan-out at a configurable firing rate.
+//!
+//! Each probe runs its workload under one [`FabricMode`] and reports
+//! throughput plus a state digest; running both modes and comparing
+//! digests (the bench and the equivalence suite both do) proves the
+//! fast fabric reproduced the legacy fabric's behaviour exactly.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::apps::networks::{build_conway_grid, microcircuit_machine_graph};
+use crate::front::{MachineSpec, SpiNNTools, ToolsConfig};
+use crate::machine::MachineBuilder;
+use crate::mapping::{map_graph, MappingConfig};
+use crate::simulator::{scamp, CoreApp, CoreCtx, FabricMode, SimConfig, SimMachine};
+use crate::util::json::Json;
+use crate::util::SplitMix64;
+
+/// Which E11 workload to run.
+#[derive(Debug, Clone, Copy)]
+pub enum ProbeWorkload {
+    /// §7.1: a `side x side` Conway grid via the full tool flow on
+    /// `boards` SpiNN-5 boards.
+    Conway { side: u32, boards: u32 },
+    /// §7.2: the microcircuit topology at `scale`, mapped onto `boards`
+    /// boards and driven by storm apps firing each partition with
+    /// probability ~0.3 per tick.
+    MicrocircuitStorm { scale: f64, boards: u32 },
+}
+
+impl ProbeWorkload {
+    pub fn name(&self) -> String {
+        match self {
+            ProbeWorkload::Conway { side, .. } => format!("conway_{side}x{side}"),
+            ProbeWorkload::MicrocircuitStorm { scale, .. } => {
+                format!("microcircuit_storm_{scale}")
+            }
+        }
+    }
+}
+
+/// One measured probe run.
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub workload: String,
+    pub mode: FabricMode,
+    /// Timed simulation ticks (a warm-up run of the same length runs
+    /// first and is excluded).
+    pub ticks: u64,
+    pub wall_seconds: f64,
+    pub sim_ns: u64,
+    pub events: u64,
+    pub mc_sent: u64,
+    pub mc_delivered: u64,
+    /// Router work units over the timed window: matched plus
+    /// default-routed packets, summed over every hop. Like every other
+    /// counter here, a delta over the timed window only.
+    pub hops: u64,
+    pub dropped: u64,
+    pub reinjected: u64,
+    pub lost_forever: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// FNV-1a digest over end-of-run state (semantic router stats, sim
+    /// stats, core states, provenance, recordings). Equal digests across
+    /// modes mean byte-identical behaviour.
+    pub digest: u64,
+}
+
+impl ProbeResult {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    pub fn hops_per_sec(&self) -> f64 {
+        self.hops as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    pub fn sent_per_sec(&self) -> f64 {
+        self.mc_sent as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        match self.mode {
+            FabricMode::Fast => "fast",
+            FabricMode::Legacy => "legacy",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("mode".to_string(), Json::Str(self.mode_name().to_string()));
+        o.insert("ticks".to_string(), Json::Num(self.ticks as f64));
+        o.insert("wall_seconds".to_string(), Json::Num(self.wall_seconds));
+        o.insert("sim_ns".to_string(), Json::Num(self.sim_ns as f64));
+        o.insert("events".to_string(), Json::Num(self.events as f64));
+        o.insert("mc_sent".to_string(), Json::Num(self.mc_sent as f64));
+        o.insert("mc_delivered".to_string(), Json::Num(self.mc_delivered as f64));
+        o.insert("hops".to_string(), Json::Num(self.hops as f64));
+        o.insert("dropped".to_string(), Json::Num(self.dropped as f64));
+        o.insert("reinjected".to_string(), Json::Num(self.reinjected as f64));
+        o.insert("lost_forever".to_string(), Json::Num(self.lost_forever as f64));
+        o.insert("cache_hits".to_string(), Json::Num(self.cache_hits as f64));
+        o.insert("cache_misses".to_string(), Json::Num(self.cache_misses as f64));
+        o.insert("events_per_sec".to_string(), Json::Num(self.events_per_sec()));
+        o.insert("hops_per_sec".to_string(), Json::Num(self.hops_per_sec()));
+        o.insert("packets_per_sec".to_string(), Json::Num(self.sent_per_sec()));
+        o.insert("digest".to_string(), Json::Str(format!("{:016x}", self.digest)));
+        Json::Obj(o)
+    }
+}
+
+/// Run one workload under one fabric mode. The workload is warmed up
+/// with an identical untimed run first (mapping, loading and allocator
+/// warm-up stay out of the measurement), then `ticks` simulation ticks
+/// are timed.
+pub fn run_fabric_probe(
+    workload: ProbeWorkload,
+    ticks: u64,
+    mode: FabricMode,
+) -> anyhow::Result<ProbeResult> {
+    match workload {
+        ProbeWorkload::Conway { side, boards } => run_conway(side, boards, ticks, mode),
+        ProbeWorkload::MicrocircuitStorm { scale, boards } => {
+            run_storm(scale, boards, ticks, mode)
+        }
+    }
+    .map(|mut r| {
+        r.workload = workload.name();
+        r
+    })
+}
+
+// ---------------------------------------------------------------------------
+// digesting
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn fnv1a_u64(h: &mut u64, v: u64) {
+    fnv1a(h, &v.to_le_bytes());
+}
+
+/// Digest the mode-independent end state of a simulated machine:
+/// semantic router stats, sim stats, virtual time, per-core state and
+/// provenance. Cache counters are deliberately excluded (the legacy
+/// fabric never caches).
+fn digest_sim(sim: &SimMachine, h: &mut u64) {
+    let t = sim.total_router_stats();
+    for v in [
+        t.mc_routed,
+        t.mc_default_routed,
+        t.mc_dropped,
+        t.mc_reinjected,
+        t.mc_lost_forever,
+        sim.stats.events_processed,
+        sim.stats.mc_sent,
+        sim.stats.mc_delivered,
+        sim.stats.sdp_sent,
+        sim.now_ns(),
+    ] {
+        fnv1a_u64(h, v);
+    }
+    for (loc, state) in scamp::core_states(sim) {
+        fnv1a(h, loc.to_string().as_bytes());
+        fnv1a(h, format!("{state:?}").as_bytes());
+        if let Ok(prov) = scamp::provenance(sim, loc) {
+            for (k, v) in prov {
+                fnv1a(h, k.as_bytes());
+                fnv1a_u64(h, v);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workload: Conway via the full tool flow
+
+fn run_conway(side: u32, boards: u32, ticks: u64, mode: FabricMode) -> anyhow::Result<ProbeResult> {
+    let spec = if boards <= 1 { MachineSpec::Spinn5 } else { MachineSpec::Boards(boards) };
+    let mut tools = SpiNNTools::new(ToolsConfig::new(spec).with_fabric(mode))?;
+    let live: Vec<(u32, u32)> = (0..side)
+        .flat_map(|r| (0..side).map(move |c| (r, c)))
+        .filter(|(r, c)| (r * 7 + c * 3) % 5 < 2)
+        .collect();
+    let ids = build_conway_grid(&mut tools, side, side, &live)?;
+
+    // Warm-up: mapping, data generation, loading and the first `ticks`
+    // of simulation. Planning with the full tick count keeps the
+    // Figure-9 cycle unit at `ticks`, so the timed resume below is one
+    // uninterrupted cycle.
+    tools.run_ticks(ticks)?;
+
+    let before = {
+        let sim = tools.sim_mut().expect("run started");
+        (sim.stats, sim.total_router_stats())
+    };
+    let t0 = Instant::now();
+    tools.run_ticks(ticks)?;
+    let wall_seconds = t0.elapsed().as_secs_f64();
+
+    let mut digest = FNV_OFFSET;
+    for id in &ids {
+        fnv1a(&mut digest, tools.recording(*id));
+    }
+    let sim = tools.sim_mut().expect("run started");
+    let result = windowed_result(sim, mode, ticks, wall_seconds, before);
+    let sim = tools.sim_mut().expect("run started");
+    digest_sim(sim, &mut digest);
+    tools.stop()?;
+    Ok(ProbeResult { digest, ..result })
+}
+
+/// Assemble a [`ProbeResult`] whose counters are all deltas over the
+/// timed window (`before` = stats snapshot at the start of the window).
+fn windowed_result(
+    sim: &SimMachine,
+    mode: FabricMode,
+    ticks: u64,
+    wall_seconds: f64,
+    before: (crate::simulator::SimStats, crate::simulator::RouterStats),
+) -> ProbeResult {
+    let (s0, r0) = before;
+    let t = sim.total_router_stats();
+    ProbeResult {
+        workload: String::new(), // filled by run_fabric_probe
+        mode,
+        ticks,
+        wall_seconds,
+        sim_ns: sim.now_ns(),
+        events: sim.stats.events_processed - s0.events_processed,
+        mc_sent: sim.stats.mc_sent - s0.mc_sent,
+        mc_delivered: sim.stats.mc_delivered - s0.mc_delivered,
+        hops: (t.mc_routed + t.mc_default_routed) - (r0.mc_routed + r0.mc_default_routed),
+        dropped: t.mc_dropped - r0.mc_dropped,
+        reinjected: t.mc_reinjected - r0.mc_reinjected,
+        lost_forever: t.mc_lost_forever - r0.mc_lost_forever,
+        cache_hits: t.cache_hits - r0.cache_hits,
+        cache_misses: t.cache_misses - r0.cache_misses,
+        digest: 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workload: microcircuit-shaped storm
+
+/// Deterministic traffic generator: fires each of its allocated
+/// partition keys with probability `rate` per tick and counts received
+/// packets. A pure-Rust stand-in for the HLO-backed neuron binaries
+/// with the same multicast footprint.
+struct StormApp {
+    keys: Vec<u32>,
+    rate: f64,
+    rng: SplitMix64,
+    received: u64,
+}
+
+impl CoreApp for StormApp {
+    fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let rate = self.rate;
+        let rng = &mut self.rng;
+        for &key in &self.keys {
+            if rng.next_f64() < rate {
+                ctx.send_mc(key, Some(ctx.tick as u32));
+            }
+        }
+        Ok(())
+    }
+
+    fn on_mc_packet(&mut self, _key: u32, _payload: Option<u32>, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        self.received += 1;
+        Ok(())
+    }
+
+    fn on_pause(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        ctx.count("storm_rx", self.received);
+        self.received = 0;
+        Ok(())
+    }
+}
+
+fn run_storm(scale: f64, boards: u32, ticks: u64, mode: FabricMode) -> anyhow::Result<ProbeResult> {
+    let seed = 0xE11u64;
+    let machine = MachineBuilder::boards(boards).build();
+    let graph = microcircuit_machine_graph(&machine, scale, seed)?;
+    let mapping = map_graph(&machine, &graph, &MappingConfig::default())?;
+
+    let config = SimConfig { fabric: mode, ..SimConfig::default() };
+    let mut sim = SimMachine::boot(machine, config);
+    for (chip, table) in &mapping.tables {
+        scamp::load_routing_table(&mut sim, *chip, table.clone())?;
+    }
+    for (vid, _vertex) in graph.vertices() {
+        let Some(loc) = mapping.placement(vid) else { continue };
+        let keys: Vec<u32> = mapping
+            .keys
+            .iter()
+            .filter(|((v, _), _)| *v == vid)
+            .map(|(_, kr)| kr.base)
+            .collect();
+        scamp::load_app(
+            &mut sim,
+            loc,
+            Box::new(StormApp {
+                keys,
+                rate: 0.3,
+                rng: SplitMix64::new(seed ^ ((vid.0 as u64) << 8)),
+                received: 0,
+            }),
+            BTreeMap::new(),
+            BTreeMap::new(),
+        )?;
+    }
+    scamp::signal_start(&mut sim)?;
+
+    // Warm-up cycle (untimed), then the timed cycle.
+    sim.start_run_cycle(ticks);
+    sim.run_until_idle()?;
+    let before = (sim.stats, sim.total_router_stats());
+    let t0 = Instant::now();
+    sim.start_run_cycle(ticks);
+    sim.run_until_idle()?;
+    let wall_seconds = t0.elapsed().as_secs_f64();
+
+    let mut digest = FNV_OFFSET;
+    digest_sim(&sim, &mut digest);
+    let result = windowed_result(&sim, mode, ticks, wall_seconds, before);
+    Ok(ProbeResult { digest, ..result })
+}

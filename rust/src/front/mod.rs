@@ -8,6 +8,7 @@
 mod buffer;
 mod config;
 mod extraction;
+pub mod fabric_probe;
 mod live;
 mod provenance;
 mod tools;

@@ -182,6 +182,22 @@ impl Machine {
         self.chip(c).map(|ch| ch.nearest_ethernet)
     }
 
+    /// Dense bounding-box dimensions of the *real* (non-virtual) chips:
+    /// the smallest `(w, h)` such that every real chip has `x < w` and
+    /// `y < h`, never smaller than the declared grid. The simulator
+    /// sizes its flat chip arena (index `y * w + x`) from this, so
+    /// virtual device chips parked at off-grid coordinates (§5.1) cost
+    /// nothing.
+    pub fn real_extent(&self) -> (u32, u32) {
+        let mut w = self.width.max(1);
+        let mut h = self.height.max(1);
+        for c in self.chips.values().filter(|c| !c.is_virtual) {
+            w = w.max(c.x + 1);
+            h = h.max(c.y + 1);
+        }
+        (w, h)
+    }
+
     /// Manhattan-ish hop distance on the hexagonal fabric: with diagonal
     /// NE/SW moves, distance((dx,dy)) = max(|dx|,|dy|) when signs match,
     /// |dx|+|dy| when they differ.
@@ -472,6 +488,15 @@ mod tests {
         assert_eq!(m.link_target((1, 0), Direction::West), None);
         // Geometry unaffected.
         assert_eq!(m.neighbour_coord((0, 0), Direction::East), Some((1, 0)));
+    }
+
+    #[test]
+    fn real_extent_ignores_virtual_chips() {
+        let m = MachineBuilder::spinn5()
+            .virtual_chip((100, 100), (0, 0), Direction::SouthWest)
+            .build();
+        assert_eq!(m.real_extent(), (8, 8), "device chip must not inflate the arena");
+        assert_eq!(MachineBuilder::spinn3().build().real_extent(), (2, 2));
     }
 
     #[test]

@@ -10,8 +10,29 @@
 
 
 
+use std::collections::HashMap;
+
 use super::geometry::{Direction, ALL_DIRECTIONS};
 use super::ROUTER_ENTRIES;
+
+/// Iterate the set bits of a word, lowest first. Shared by the route
+/// accessors so link/processor iteration is one `trailing_zeros` per
+/// member instead of a scan over every possible position.
+struct Bits(u32);
+
+impl Iterator for Bits {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.0 == 0 {
+            return None;
+        }
+        let b = self.0.trailing_zeros();
+        self.0 &= self.0 - 1;
+        Some(b)
+    }
+}
 
 /// A multicast route: which links and local processors a packet is
 /// forwarded to. Wraps the 24-bit route word.
@@ -27,7 +48,9 @@ impl Route {
     }
 
     pub fn with_processor(mut self, p: u8) -> Route {
-        debug_assert!(p < 24, "processor id out of range");
+        // The route word has exactly 18 processor bits (6..=23), the
+        // same range `processors()` iterates.
+        debug_assert!(p < 18, "processor id out of range");
         self.0 |= 1 << (6 + p as u32);
         self
     }
@@ -37,6 +60,7 @@ impl Route {
     }
 
     pub fn add_processor(&mut self, p: u8) {
+        debug_assert!(p < 18, "processor id out of range");
         self.0 |= 1 << (6 + p as u32);
     }
 
@@ -49,11 +73,11 @@ impl Route {
     }
 
     pub fn links(self) -> impl Iterator<Item = Direction> {
-        ALL_DIRECTIONS.into_iter().filter(move |d| self.has_link(*d))
+        Bits(self.0 & 0x3f).map(|b| ALL_DIRECTIONS[b as usize])
     }
 
     pub fn processors(self) -> impl Iterator<Item = u8> {
-        (0..18u8).filter(move |p| self.has_processor(*p))
+        Bits((self.0 >> 6) & 0x3_ffff).map(|b| b as u8)
     }
 
     pub fn is_empty(self) -> bool {
@@ -164,15 +188,67 @@ impl RoutingTable {
     /// a matched route, or the default straight-through route, or a drop
     /// (locally-injected packet with no matching entry).
     pub fn route_packet(&self, key: u32, from: PacketSource) -> RoutingDecision {
-        if let Some(route) = self.lookup(key) {
-            return RoutingDecision::Routed(route);
+        RoutingDecision::from_lookup(self.lookup(key), from)
+    }
+}
+
+/// A memoising front for [`RoutingTable`] lookups — the simulator's
+/// per-chip route cache (experiment E11). A chip sees a small bounded
+/// set of distinct keys (the partitions whose multicast trees touch
+/// it), so the first-match linear scan over up to 1024 TCAM entries
+/// amortises to a single hash probe. Only the *lookup* is cached — the
+/// default-route/drop outcome still depends on where the packet entered
+/// and is derived per packet, so one cache serves every [`PacketSource`].
+///
+/// The owner must [`RouteCache::clear`] whenever the table changes; the
+/// simulator routes every table load through `SimChip::install_table`,
+/// which does exactly that.
+#[derive(Debug, Clone, Default)]
+pub struct RouteCache {
+    map: HashMap<u32, Option<Route>>,
+}
+
+impl RouteCache {
+    /// Bound on distinct cached keys. Past it the cache resets — a
+    /// safety valve against adversarial key streams; real workloads
+    /// stay orders of magnitude below (keys per chip ≈ table entries).
+    pub const MAX_ENTRIES: usize = 8192;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Invalidate every memoised lookup (table load/clear).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Route `key` through `table`, memoising the TCAM scan. Returns
+    /// the decision plus whether it was served from the cache.
+    #[inline]
+    pub fn route(
+        &mut self,
+        table: &RoutingTable,
+        key: u32,
+        from: PacketSource,
+    ) -> (RoutingDecision, bool) {
+        if let Some(&cached) = self.map.get(&key) {
+            return (RoutingDecision::from_lookup(cached, from), true);
         }
-        match from {
-            PacketSource::Link(d) => {
-                RoutingDecision::DefaultRouted(d.opposite())
-            }
-            PacketSource::Local(_) => RoutingDecision::Dropped,
+        let looked = table.lookup(key);
+        if self.map.len() >= Self::MAX_ENTRIES {
+            self.map.clear();
         }
+        self.map.insert(key, looked);
+        (RoutingDecision::from_lookup(looked, from), false)
     }
 }
 
@@ -194,6 +270,22 @@ pub enum RoutingDecision {
     DefaultRouted(Direction),
     /// No entry matched a locally-injected packet.
     Dropped,
+}
+
+impl RoutingDecision {
+    /// Decision for a TCAM lookup result plus the packet's entry point —
+    /// the Figure-4 semantics shared by [`RoutingTable::route_packet`]
+    /// and the memoised [`RouteCache`] path.
+    #[inline]
+    pub fn from_lookup(route: Option<Route>, from: PacketSource) -> RoutingDecision {
+        match route {
+            Some(r) => RoutingDecision::Routed(r),
+            None => match from {
+                PacketSource::Link(d) => RoutingDecision::DefaultRouted(d.opposite()),
+                PacketSource::Local(_) => RoutingDecision::Dropped,
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -283,6 +375,57 @@ mod tests {
         assert!(wide.intersects(&narrow));
         let disjoint = e(0x200, 0xff00, Route::EMPTY);
         assert!(!wide.intersects(&disjoint));
+    }
+
+    #[test]
+    fn cache_agrees_with_table_for_every_source() {
+        let table = RoutingTable::from_entries(vec![
+            e(0x100, 0xff00, Route::EMPTY.with_processor(3)),
+            e(0x1000, 0xf000, Route::EMPTY.with_link(Direction::North)),
+        ]);
+        let mut cache = RouteCache::new();
+        let sources = [
+            PacketSource::Local(1),
+            PacketSource::Link(Direction::West),
+            PacketSource::Link(Direction::SouthWest),
+        ];
+        for key in [0x100u32, 0x1fe, 0x1234, 0xdead_0000, 0x1001] {
+            for from in sources {
+                let (first, _) = cache.route(&table, key, from);
+                assert_eq!(first, table.route_packet(key, from), "key {key:#x}");
+                // Second time round must hit and agree.
+                let (again, hit) = cache.route(&table, key, from);
+                assert!(hit);
+                assert_eq!(again, first);
+            }
+        }
+        assert_eq!(cache.len(), 5, "one entry per distinct key");
+    }
+
+    #[test]
+    fn cache_clear_forgets_stale_routes() {
+        let a = RoutingTable::from_entries(vec![e(7, !0, Route::EMPTY.with_processor(1))]);
+        let b = RoutingTable::from_entries(vec![e(7, !0, Route::EMPTY.with_processor(2))]);
+        let mut cache = RouteCache::new();
+        let from = PacketSource::Local(0);
+        assert_eq!(cache.route(&a, 7, from).0, RoutingDecision::Routed(Route::EMPTY.with_processor(1)));
+        // Without a clear the memo would mask the new table.
+        cache.clear();
+        assert!(cache.is_empty());
+        let (decision, hit) = cache.route(&b, 7, from);
+        assert!(!hit);
+        assert_eq!(decision, RoutingDecision::Routed(Route::EMPTY.with_processor(2)));
+    }
+
+    #[test]
+    fn cache_resets_at_capacity_instead_of_growing() {
+        let table = RoutingTable::new();
+        let mut cache = RouteCache::new();
+        for key in 0..(RouteCache::MAX_ENTRIES as u32 + 10) {
+            cache.route(&table, key, PacketSource::Local(0));
+        }
+        assert!(cache.len() <= RouteCache::MAX_ENTRIES);
+        assert!(!cache.is_empty());
     }
 
     #[test]

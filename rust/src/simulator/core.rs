@@ -117,9 +117,15 @@ impl<'a> CoreCtx<'a> {
     }
 
     /// Bump a named provenance counter (§6.3.5's "custom core-level
-    /// statistics").
+    /// statistics"). Counters are bumped per packet on hot paths, so the
+    /// repeat case avoids allocating a `String` for a key that already
+    /// exists.
     pub fn count(&mut self, name: &str, delta: u64) {
-        *self.provenance.entry(name.to_string()).or_insert(0) += delta;
+        if let Some(v) = self.provenance.get_mut(name) {
+            *v += delta;
+        } else {
+            self.provenance.insert(name.to_string(), delta);
+        }
     }
 
     /// Enter the Finished completion state after this event.

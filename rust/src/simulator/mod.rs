@@ -10,22 +10,50 @@
 //!
 //! Virtual time is nanoseconds. All behaviour is deterministic: events
 //! at equal times are ordered by insertion sequence.
+//!
+//! # The fabric fast path (experiment E11)
+//!
+//! The per-packet-per-hop hot path runs on three structures chosen by
+//! [`FabricMode`] (DESIGN.md §4): a flat chip arena indexed `y * width
+//! + x` with per-(chip, link) busy cursors and frozen link targets in
+//! dense slots, a per-chip [`RouteCache`] memoising the first-match
+//! TCAM scan, and a bucketed calendar [`queue::CalendarQueue`] making
+//! same-cycle fan-out O(1). `FabricMode::Legacy` keeps the original
+//! `BTreeMap` + linear-scan + `BinaryHeap` fabric for before/after
+//! benchmarking; `tests/fabric_equivalence.rs` proves the two modes
+//! byte-identical.
 
 mod core;
+pub mod queue;
 pub mod scamp;
 mod sdram;
 
 pub use self::core::{CoreApp, CoreCtx, CoreState, RecordingChannel};
 pub use sdram::{SdramStore, SDRAM_BASE};
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
-use crate::machine::router::{PacketSource, Route, RoutingDecision, RoutingTable};
-use crate::machine::{ChipCoord, CoreLocation, Direction, Machine};
+use crate::machine::router::{PacketSource, Route, RouteCache, RoutingDecision, RoutingTable};
+use crate::machine::{Chip, ChipCoord, CoreLocation, Direction, Machine, ALL_DIRECTIONS};
 use crate::transport::SdpMessage;
 
 use self::core::SimCore;
+use self::queue::{CalendarQueue, EventQueue, HeapQueue};
+
+/// Which fabric implementation the simulator runs on. The two modes are
+/// behaviourally identical — same event order, same statistics, same
+/// results (enforced by `tests/fabric_equivalence.rs`); `Legacy` exists
+/// so experiment E11 can measure the fast path against the real
+/// pre-change fabric rather than a remembered number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FabricMode {
+    /// Flat chip arena + per-chip route cache + calendar event queue.
+    #[default]
+    Fast,
+    /// `BTreeMap` chip store, uncached first-match TCAM scans and a
+    /// `BinaryHeap` event queue — the pre-E11 fabric.
+    Legacy,
+}
 
 /// Wire/latency model. Defaults are calibrated so the three §6.8 data
 /// paths reproduce the paper's measured throughputs (see DESIGN.md E1):
@@ -89,6 +117,9 @@ pub struct SimConfig {
     pub reinjection: bool,
     /// Delay before the reinjection core re-issues a dropped packet.
     pub reinject_delay_ns: u64,
+    /// Which fabric implementation to run on (E11). Purely a host
+    /// wall-clock knob: results are identical in both modes.
+    pub fabric: FabricMode,
     pub wire: WireModel,
 }
 
@@ -105,6 +136,7 @@ impl Default for SimConfig {
             lossless_key_min: 0xFF00_0000,
             reinjection: true,
             reinject_delay_ns: 10_000,
+            fabric: FabricMode::default(),
             wire: WireModel::default(),
         }
     }
@@ -112,7 +144,7 @@ impl Default for SimConfig {
 
 /// Router statistics per chip (§6.3.5 provenance: "router statistics,
 /// including dropped multicast packets").
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct RouterStats {
     pub mc_routed: u64,
     pub mc_default_routed: u64,
@@ -120,10 +152,31 @@ pub struct RouterStats {
     pub mc_reinjected: u64,
     /// Drops that hit an occupied register and are unrecoverable (§6.10).
     pub mc_lost_forever: u64,
+    /// Route-cache hits (fast fabric only; always zero on the legacy
+    /// path, which scans the TCAM per packet).
+    pub cache_hits: u64,
+    /// Route-cache misses (first sighting of a key, or after a table
+    /// load invalidated the cache).
+    pub cache_misses: u64,
+}
+
+impl RouterStats {
+    /// The routing-semantics counters — identical across [`FabricMode`]s
+    /// even though the cache counters differ (the legacy path never
+    /// caches). The equivalence suite compares these.
+    pub fn semantic(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.mc_routed,
+            self.mc_default_routed,
+            self.mc_dropped,
+            self.mc_reinjected,
+            self.mc_lost_forever,
+        )
+    }
 }
 
 /// Whole-machine counters.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SimStats {
     pub events_processed: u64,
     pub mc_sent: u64,
@@ -133,6 +186,8 @@ pub struct SimStats {
 
 pub(crate) struct SimChip {
     pub table: RoutingTable,
+    /// Memoised TCAM lookups (fast fabric); cleared on every table load.
+    pub route_cache: RouteCache,
     pub sdram: SdramStore,
     pub cores: BTreeMap<u8, SimCore>,
     /// tag id -> (host, port, strip_sdp).
@@ -143,6 +198,238 @@ pub(crate) struct SimChip {
     /// The single hardware dropped-packet register (§6.10).
     pub dropped_register: Option<(u32, Option<u32>)>,
     pub drop_overflow: bool,
+}
+
+impl SimChip {
+    fn boot_from(chip: &Chip) -> SimChip {
+        SimChip {
+            table: RoutingTable::new(),
+            route_cache: RouteCache::new(),
+            sdram: SdramStore::new(chip.sdram.user_size()),
+            cores: chip.processors.iter().map(|p| (p.id, SimCore::idle())).collect(),
+            iptags: BTreeMap::new(),
+            reverse_iptags: BTreeMap::new(),
+            router_stats: RouterStats::default(),
+            dropped_register: None,
+            drop_overflow: false,
+        }
+    }
+
+    /// Replace the routing table, invalidating the route cache. Every
+    /// table load — §6.3.4 loading, the fast-path stream entries, tests
+    /// — must go through here; assigning `.table` directly would leave
+    /// stale memoised routes behind.
+    pub(crate) fn install_table(&mut self, table: RoutingTable) {
+        self.table = table;
+        self.route_cache.clear();
+    }
+}
+
+/// Where one (chip, link) leads, frozen at boot ([`Machine::link_target`]
+/// is pure after boot: the simulator owns the machine and nothing
+/// rewires links mid-run).
+#[derive(Debug, Clone, Copy)]
+enum LinkDest {
+    /// No working link: packets routed here are gone for good.
+    Dead,
+    /// Another chip's router.
+    Chip(ChipCoord),
+    /// A virtual (device) chip: packets land in the device inbox.
+    Device(ChipCoord),
+}
+
+fn classify_link(machine: &Machine, from: ChipCoord, d: Direction) -> LinkDest {
+    match machine.link_target(from, d) {
+        None => LinkDest::Dead,
+        Some(next) => {
+            if machine.chip(next).map(|c| c.is_virtual).unwrap_or(false) {
+                LinkDest::Device(next)
+            } else {
+                LinkDest::Chip(next)
+            }
+        }
+    }
+}
+
+/// Chip + link-state storage, selected by [`FabricMode`]. `Fast` is a
+/// flat arena with dense slot ids (`slot = y * width + x`, link slot =
+/// `slot * 6 + link id`); `Legacy` is the original `BTreeMap` layout.
+enum ChipStore {
+    Fast {
+        width: u32,
+        height: u32,
+        slots: Vec<Option<SimChip>>,
+        /// slot * 6 + link id -> serialisation cursor of that output link.
+        link_busy: Vec<u64>,
+        /// slot -> serialisation cursor of the chip's UDP uplink.
+        udp_busy: Vec<u64>,
+        /// slot * 6 + link id -> frozen link target.
+        link_dest: Vec<LinkDest>,
+    },
+    Legacy {
+        chips: BTreeMap<ChipCoord, SimChip>,
+        link_busy: BTreeMap<(ChipCoord, Direction), u64>,
+        udp_busy: BTreeMap<ChipCoord, u64>,
+    },
+}
+
+impl ChipStore {
+    fn boot_from(machine: &Machine, mode: FabricMode) -> ChipStore {
+        match mode {
+            FabricMode::Fast => {
+                let (width, height) = machine.real_extent();
+                let n = (width as usize) * (height as usize);
+                let mut slots: Vec<Option<SimChip>> = (0..n).map(|_| None).collect();
+                let mut link_dest = vec![LinkDest::Dead; n * 6];
+                for chip in machine.chips().filter(|c| !c.is_virtual) {
+                    let slot = (chip.y * width + chip.x) as usize;
+                    for d in ALL_DIRECTIONS {
+                        link_dest[slot * 6 + d.id() as usize] =
+                            classify_link(machine, (chip.x, chip.y), d);
+                    }
+                    slots[slot] = Some(SimChip::boot_from(chip));
+                }
+                ChipStore::Fast {
+                    width,
+                    height,
+                    slots,
+                    link_busy: vec![0; n * 6],
+                    udp_busy: vec![0; n],
+                    link_dest,
+                }
+            }
+            FabricMode::Legacy => ChipStore::Legacy {
+                chips: machine
+                    .chips()
+                    .filter(|c| !c.is_virtual)
+                    .map(|c| ((c.x, c.y), SimChip::boot_from(c)))
+                    .collect(),
+                link_busy: BTreeMap::new(),
+                udp_busy: BTreeMap::new(),
+            },
+        }
+    }
+
+    #[inline]
+    fn slot_of(width: u32, height: u32, c: ChipCoord) -> Option<usize> {
+        if c.0 < width && c.1 < height {
+            Some((c.1 * width + c.0) as usize)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    fn get(&self, c: ChipCoord) -> Option<&SimChip> {
+        match self {
+            ChipStore::Fast { width, height, slots, .. } => {
+                Self::slot_of(*width, *height, c).and_then(|i| slots[i].as_ref())
+            }
+            ChipStore::Legacy { chips, .. } => chips.get(&c),
+        }
+    }
+
+    #[inline]
+    fn get_mut(&mut self, c: ChipCoord) -> Option<&mut SimChip> {
+        match self {
+            ChipStore::Fast { width, height, slots, .. } => {
+                Self::slot_of(*width, *height, c).and_then(|i| slots[i].as_mut())
+            }
+            ChipStore::Legacy { chips, .. } => chips.get_mut(&c),
+        }
+    }
+
+    #[inline]
+    fn link_dest(&self, machine: &Machine, c: ChipCoord, d: Direction) -> LinkDest {
+        match self {
+            ChipStore::Fast { width, height, link_dest, .. } => {
+                match Self::slot_of(*width, *height, c) {
+                    Some(i) => link_dest[i * 6 + d.id() as usize],
+                    None => LinkDest::Dead,
+                }
+            }
+            ChipStore::Legacy { .. } => classify_link(machine, c, d),
+        }
+    }
+
+    #[inline]
+    fn link_busy(&self, c: ChipCoord, d: Direction) -> u64 {
+        match self {
+            ChipStore::Fast { width, height, link_busy, .. } => {
+                match Self::slot_of(*width, *height, c) {
+                    Some(i) => link_busy[i * 6 + d.id() as usize],
+                    None => 0,
+                }
+            }
+            ChipStore::Legacy { link_busy, .. } => {
+                link_busy.get(&(c, d)).copied().unwrap_or(0)
+            }
+        }
+    }
+
+    #[inline]
+    fn set_link_busy(&mut self, c: ChipCoord, d: Direction, until: u64) {
+        match self {
+            ChipStore::Fast { width, height, link_busy, .. } => {
+                if let Some(i) = Self::slot_of(*width, *height, c) {
+                    link_busy[i * 6 + d.id() as usize] = until;
+                }
+            }
+            ChipStore::Legacy { link_busy, .. } => {
+                link_busy.insert((c, d), until);
+            }
+        }
+    }
+
+    #[inline]
+    fn udp_busy(&self, c: ChipCoord) -> u64 {
+        match self {
+            ChipStore::Fast { width, height, udp_busy, .. } => {
+                match Self::slot_of(*width, *height, c) {
+                    Some(i) => udp_busy[i],
+                    None => 0,
+                }
+            }
+            ChipStore::Legacy { udp_busy, .. } => udp_busy.get(&c).copied().unwrap_or(0),
+        }
+    }
+
+    #[inline]
+    fn set_udp_busy(&mut self, c: ChipCoord, until: u64) {
+        match self {
+            ChipStore::Fast { width, height, udp_busy, .. } => {
+                if let Some(i) = Self::slot_of(*width, *height, c) {
+                    udp_busy[i] = until;
+                }
+            }
+            ChipStore::Legacy { udp_busy, .. } => {
+                udp_busy.insert(c, until);
+            }
+        }
+    }
+
+    /// Chips in `(x, y)`-lexicographic order — exactly the iteration
+    /// order of the legacy `BTreeMap<ChipCoord, _>`, so anything that
+    /// schedules events while iterating (e.g. [`SimMachine::
+    /// start_run_cycle`]) produces identical sequences in both modes.
+    fn ordered(&self) -> Vec<(ChipCoord, &SimChip)> {
+        match self {
+            ChipStore::Fast { width, height, slots, .. } => {
+                let mut out = Vec::new();
+                for x in 0..*width {
+                    for y in 0..*height {
+                        if let Some(chip) = slots[(y * width + x) as usize].as_ref() {
+                            out.push(((x, y), chip));
+                        }
+                    }
+                }
+                out
+            }
+            ChipStore::Legacy { chips, .. } => {
+                chips.iter().map(|(c, chip)| (*c, chip)).collect()
+            }
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -170,46 +457,22 @@ enum EventKind {
     Reinject(ChipCoord),
 }
 
-struct Event {
-    time: u64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time.cmp(&other.time).then(self.seq.cmp(&other.seq))
-    }
-}
-
 /// The simulated machine.
 pub struct SimMachine {
     pub machine: Machine,
     pub config: SimConfig,
     time_ns: u64,
-    seq: u64,
-    events: BinaryHeap<Reverse<Event>>,
-    chips: BTreeMap<ChipCoord, SimChip>,
+    events: EventQueue<EventKind>,
+    store: ChipStore,
     /// Packets consumed by external devices on virtual chips.
     pub device_inbox: BTreeMap<ChipCoord, Vec<(u32, Option<u32>)>>,
     /// UDP frames that reached the host: (arrival time, port, payload).
     pub host_inbox: VecDeque<(u64, u16, Vec<u8>)>,
-    link_busy: BTreeMap<(ChipCoord, Direction), u64>,
-    /// Serialisation cursor of each Ethernet chip's UDP uplink — the
-    /// bandwidth bottleneck that makes the §6.8 throughput numbers real.
-    udp_busy: BTreeMap<ChipCoord, u64>,
     pub stats: SimStats,
+    /// Reusable outbox buffers for [`Self::with_core_app`], so the per-
+    /// callback allocations disappear from the hot path.
+    scratch_mc: Vec<(u32, Option<u32>)>,
+    scratch_sdp: Vec<SdpMessage>,
 }
 
 impl SimMachine {
@@ -217,29 +480,11 @@ impl SimMachine {
     /// of powering on + SCAMP flood-boot: afterwards the host can query
     /// the machine and load applications.)
     pub fn boot(machine: Machine, config: SimConfig) -> Self {
-        let mut chips = BTreeMap::new();
-        for chip in machine.chips() {
-            if chip.is_virtual {
-                continue;
-            }
-            let mut cores = BTreeMap::new();
-            for p in chip.processors.iter() {
-                cores.insert(p.id, SimCore::idle());
-            }
-            chips.insert(
-                (chip.x, chip.y),
-                SimChip {
-                    table: RoutingTable::new(),
-                    sdram: SdramStore::new(chip.sdram.user_size()),
-                    cores,
-                    iptags: BTreeMap::new(),
-                    reverse_iptags: BTreeMap::new(),
-                    router_stats: RouterStats::default(),
-                    dropped_register: None,
-                    drop_overflow: false,
-                },
-            );
-        }
+        let store = ChipStore::boot_from(&machine, config.fabric);
+        let events = match config.fabric {
+            FabricMode::Fast => EventQueue::Calendar(CalendarQueue::new()),
+            FabricMode::Legacy => EventQueue::Heap(HeapQueue::new()),
+        };
         let device_inbox = machine
             .chips()
             .filter(|c| c.is_virtual)
@@ -249,14 +494,13 @@ impl SimMachine {
             machine,
             config,
             time_ns: 0,
-            seq: 0,
-            events: BinaryHeap::new(),
-            chips,
+            events,
+            store,
             device_inbox,
             host_inbox: VecDeque::new(),
-            link_busy: BTreeMap::new(),
-            udp_busy: BTreeMap::new(),
             stats: SimStats::default(),
+            scratch_mc: Vec::new(),
+            scratch_sdp: Vec::new(),
         }
     }
 
@@ -269,37 +513,39 @@ impl SimMachine {
         self.time_ns += ns;
     }
 
+    #[inline]
     fn push_event(&mut self, time: u64, kind: EventKind) {
-        self.seq += 1;
-        self.events.push(Reverse(Event { time, seq: self.seq, kind }));
+        self.events.push(time, kind);
     }
 
     pub(crate) fn chip(&self, c: ChipCoord) -> anyhow::Result<&SimChip> {
-        self.chips
-            .get(&c)
+        self.store
+            .get(c)
             .ok_or_else(|| anyhow::anyhow!("no such chip {c:?}"))
     }
 
     pub(crate) fn chip_mut(&mut self, c: ChipCoord) -> anyhow::Result<&mut SimChip> {
-        self.chips
-            .get_mut(&c)
+        self.store
+            .get_mut(c)
             .ok_or_else(|| anyhow::anyhow!("no such chip {c:?}"))
     }
 
     /// Router stats for provenance extraction.
     pub fn router_stats(&self, c: ChipCoord) -> Option<RouterStats> {
-        self.chips.get(&c).map(|ch| ch.router_stats)
+        self.store.get(c).map(|ch| ch.router_stats)
     }
 
     /// Sum of router stats across the machine.
     pub fn total_router_stats(&self) -> RouterStats {
         let mut out = RouterStats::default();
-        for ch in self.chips.values() {
+        for (_, ch) in self.store.ordered() {
             out.mc_routed += ch.router_stats.mc_routed;
             out.mc_default_routed += ch.router_stats.mc_default_routed;
             out.mc_dropped += ch.router_stats.mc_dropped;
             out.mc_reinjected += ch.router_stats.mc_reinjected;
             out.mc_lost_forever += ch.router_stats.mc_lost_forever;
+            out.cache_hits += ch.router_stats.cache_hits;
+            out.cache_misses += ch.router_stats.cache_misses;
         }
         out
     }
@@ -332,11 +578,11 @@ impl SimMachine {
 
     /// Process events until the queue is empty.
     pub fn run_until_idle(&mut self) -> anyhow::Result<()> {
-        while let Some(Reverse(ev)) = self.events.pop() {
-            debug_assert!(ev.time >= self.time_ns, "time went backwards");
-            self.time_ns = ev.time;
+        while let Some((time, kind)) = self.events.pop() {
+            debug_assert!(time >= self.time_ns, "time went backwards");
+            self.time_ns = time;
             self.stats.events_processed += 1;
-            self.dispatch(ev.kind)?;
+            self.dispatch(kind)?;
         }
         Ok(())
     }
@@ -370,7 +616,8 @@ impl SimMachine {
         key: u32,
         payload: Option<u32>,
     ) -> anyhow::Result<()> {
-        let Some(sim_chip) = self.chips.get(&chip) else {
+        let cached = self.config.fabric == FabricMode::Fast;
+        let Some(sim_chip) = self.store.get_mut(chip) else {
             // Packet wandered onto a dead/virtual chip — treat as device
             // consumption if virtual, else drop.
             if let Some(inbox) = self.device_inbox.get_mut(&chip) {
@@ -378,23 +625,32 @@ impl SimMachine {
             }
             return Ok(());
         };
-        let decision = sim_chip.table.route_packet(key, entered);
+        let decision = if cached {
+            let SimChip { table, route_cache, router_stats, .. } = &mut *sim_chip;
+            let (decision, hit) = route_cache.route(table, key, entered);
+            if hit {
+                router_stats.cache_hits += 1;
+            } else {
+                router_stats.cache_misses += 1;
+            }
+            decision
+        } else {
+            sim_chip.table.route_packet(key, entered)
+        };
         match decision {
             RoutingDecision::Routed(route) => {
-                self.chips.get_mut(&chip).unwrap().router_stats.mc_routed += 1;
+                sim_chip.router_stats.mc_routed += 1;
                 self.forward(chip, route, key, payload)?;
             }
             RoutingDecision::DefaultRouted(d) => {
-                self.chips.get_mut(&chip).unwrap().router_stats.mc_default_routed += 1;
+                sim_chip.router_stats.mc_default_routed += 1;
                 self.forward(chip, Route::EMPTY.with_link(d), key, payload)?;
             }
             RoutingDecision::Dropped => {
                 // A locally-injected packet with no matching entry is
                 // simply discarded (§2) — it never reaches the dropped-
                 // packet register, so reinjection cannot resurrect it.
-                if let Some(c) = self.chips.get_mut(&chip) {
-                    c.router_stats.mc_dropped += 1;
-                }
+                sim_chip.router_stats.mc_dropped += 1;
             }
         }
         Ok(())
@@ -419,33 +675,32 @@ impl SimMachine {
             );
         }
         for d in route.links() {
-            let Some(next) = self.machine.link_target(chip, d) else {
-                // Route over a dead link: the packet is gone for good —
-                // reinjection would just replay it into the same void.
-                if let Some(c) = self.chips.get_mut(&chip) {
-                    c.router_stats.mc_dropped += 1;
-                    c.router_stats.mc_lost_forever += 1;
+            let (next, is_device) = match self.store.link_dest(&self.machine, chip, d) {
+                LinkDest::Dead => {
+                    // Route over a dead link: the packet is gone for good —
+                    // reinjection would just replay it into the same void.
+                    if let Some(c) = self.store.get_mut(chip) {
+                        c.router_stats.mc_dropped += 1;
+                        c.router_stats.mc_lost_forever += 1;
+                    }
+                    continue;
                 }
-                continue;
+                LinkDest::Chip(n) => (n, false),
+                LinkDest::Device(n) => (n, true),
             };
             // Congestion model: bounded output queue, drop after wait (§2)
             // — except for flow-controlled (lossless) key ranges.
-            let busy = self.link_busy.get(&(chip, d)).copied().unwrap_or(0);
+            let busy = self.store.link_busy(chip, d);
             let depart = busy.max(now);
             let backlog = depart.saturating_sub(now);
             if backlog > self.config.drop_wait_ns && key < self.config.lossless_key_min {
                 self.drop_packet(chip, key, payload);
                 continue;
             }
-            self.link_busy
-                .insert((chip, d), depart + self.config.link_packet_ns);
+            self.store
+                .set_link_busy(chip, d, depart + self.config.link_packet_ns);
             let arrive = depart + self.config.link_packet_ns + self.config.router_pipeline_ns;
-            if self
-                .machine
-                .chip(next)
-                .map(|c| c.is_virtual)
-                .unwrap_or(false)
-            {
+            if is_device {
                 self.device_inbox.entry(next).or_default().push((key, payload));
             } else {
                 self.push_event(
@@ -468,7 +723,7 @@ impl SimMachine {
         let reinjection = self.config.reinjection;
         let delay = self.config.reinject_delay_ns;
         let now = self.time_ns;
-        let Some(c) = self.chips.get_mut(&chip) else { return };
+        let Some(c) = self.store.get_mut(chip) else { return };
         c.router_stats.mc_dropped += 1;
         if c.dropped_register.is_none() {
             c.dropped_register = Some((key, payload));
@@ -483,7 +738,7 @@ impl SimMachine {
 
     fn handle_reinject(&mut self, chip: ChipCoord) -> anyhow::Result<()> {
         let now = self.time_ns;
-        let Some(c) = self.chips.get_mut(&chip) else {
+        let Some(c) = self.store.get_mut(chip) else {
             return Ok(());
         };
         if let Some((key, payload)) = c.dropped_register.take() {
@@ -550,17 +805,23 @@ impl SimMachine {
     }
 
     /// Run one core-app callback with a properly wired [`CoreCtx`], then
-    /// flush its outboxes into events.
+    /// flush its outboxes into events. The outbox buffers are recycled
+    /// across calls (`scratch_mc`/`scratch_sdp`) so the per-event
+    /// allocations vanish from the fabric hot path.
     pub(crate) fn with_core_app(
         &mut self,
         loc: CoreLocation,
         f: impl FnOnce(&mut dyn CoreApp, &mut CoreCtx) -> anyhow::Result<()>,
     ) -> anyhow::Result<()> {
         let time_ns = self.time_ns;
+        // Taking leaves fresh empty vecs behind; the cold early-return
+        // paths below simply drop these and the next call re-allocates.
+        let mc_buf = std::mem::take(&mut self.scratch_mc);
+        let sdp_buf = std::mem::take(&mut self.scratch_sdp);
         let (mut app, mut mc_out, mut sdp_out, result, exit_requested) = {
             let chip = self
-                .chips
-                .get_mut(&loc.chip())
+                .store
+                .get_mut(loc.chip())
                 .ok_or_else(|| anyhow::anyhow!("no chip {:?}", loc.chip()))?;
             let core = chip
                 .cores
@@ -574,8 +835,8 @@ impl SimMachine {
                 loc,
                 time_ns,
                 tick: core.ticks_done,
-                mc_out: Vec::new(),
-                sdp_out: Vec::new(),
+                mc_out: mc_buf,
+                sdp_out: sdp_buf,
                 regions: &core.regions,
                 recordings: &mut core.recordings,
                 sdram: &mut chip.sdram,
@@ -589,7 +850,7 @@ impl SimMachine {
         };
         // Put the app back and update state.
         {
-            let chip = self.chips.get_mut(&loc.chip()).unwrap();
+            let chip = self.store.get_mut(loc.chip()).unwrap();
             let core = chip.cores.get_mut(&loc.p).unwrap();
             core.app = Some(std::mem::replace(&mut app, Box::new(NullApp)));
             drop(app);
@@ -608,10 +869,13 @@ impl SimMachine {
         for msg in sdp_out.drain(..) {
             self.route_sdp(loc, msg)?;
         }
+        // Hand the (drained) buffers back for the next callback.
+        self.scratch_mc = mc_out;
+        self.scratch_sdp = sdp_out;
         // A failing callback marks the core RTE but does not stop the
         // simulation: the tools detect the state afterwards (§6.3.5).
         if let Err(e) = result {
-            let chip = self.chips.get_mut(&loc.chip()).unwrap();
+            let chip = self.store.get_mut(loc.chip()).unwrap();
             let core = chip.cores.get_mut(&loc.p).unwrap();
             core.provenance
                 .insert(format!("rte: {e}"), 1);
@@ -640,10 +904,10 @@ impl SimMachine {
             let data = if strip { msg.data.clone() } else { msg.encode() };
             // Serialise on the Ethernet uplink: one frame per slot.
             let ready = now + relay;
-            let busy = self.udp_busy.get(&eth).copied().unwrap_or(0);
+            let busy = self.store.udp_busy(eth);
             let depart = busy.max(ready);
-            self.udp_busy
-                .insert(eth, depart + self.config.wire.udp_frame_ns);
+            self.store
+                .set_udp_busy(eth, depart + self.config.wire.udp_frame_ns);
             self.push_event(
                 depart + self.config.wire.udp_frame_ns,
                 EventKind::HostUdp { port, data },
@@ -717,19 +981,17 @@ impl SimMachine {
     /// cycle). `run_ticks` is added to each core's target.
     pub fn start_run_cycle(&mut self, run_ticks: u64) {
         let timestep_ns = self.config.timestep_us as u64 * 1000;
-        let locs: Vec<CoreLocation> = self
-            .chips
-            .iter()
-            .flat_map(|(c, chip)| {
-                chip.cores.iter().filter_map(move |(p, core)| {
-                    matches!(core.state, CoreState::Running | CoreState::Paused)
-                        .then_some(CoreLocation::new(c.0, c.1, *p))
-                })
-            })
-            .collect();
+        let mut locs: Vec<CoreLocation> = Vec::new();
+        for (c, chip) in self.store.ordered() {
+            for (p, core) in &chip.cores {
+                if matches!(core.state, CoreState::Running | CoreState::Paused) {
+                    locs.push(CoreLocation::new(c.0, c.1, *p));
+                }
+            }
+        }
         let now = self.time_ns;
         for loc in locs {
-            let chip = self.chips.get_mut(&loc.chip()).unwrap();
+            let chip = self.store.get_mut(loc.chip()).unwrap();
             let core = chip.cores.get_mut(&loc.p).unwrap();
             core.run_until += run_ticks;
             core.state = CoreState::Running;
@@ -774,34 +1036,64 @@ mod tests {
         std::sync::Arc::new(std::sync::Mutex::new(Vec::new()))
     }
 
-    #[test]
-    fn two_cores_exchange_packets() {
+    fn ping_exchange(mode: FabricMode) -> (Vec<u32>, Vec<u32>, SimMachine) {
         let machine = MachineBuilder::spinn3().build();
-        let mut sim = SimMachine::boot(machine, SimConfig::default());
+        let config = SimConfig { fabric: mode, ..SimConfig::default() };
+        let mut sim = SimMachine::boot(machine, config);
         let rx_a = shared();
         let rx_b = shared();
         let a = CoreLocation::new(0, 0, 1);
         let b = CoreLocation::new(1, 0, 1);
         // routing: key 0x10 a->b, key 0x20 b->a
-        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(vec![
+        sim.chip_mut((0, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
             RoutingEntry::new(0x10, !0, Route::EMPTY.with_link(Direction::East)),
             RoutingEntry::new(0x20, !0, Route::EMPTY.with_processor(1)),
-        ]);
-        sim.chip_mut((1, 0)).unwrap().table = RoutingTable::from_entries(vec![
+        ]));
+        sim.chip_mut((1, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
             RoutingEntry::new(0x10, !0, Route::EMPTY.with_processor(1)),
             RoutingEntry::new(0x20, !0, Route::EMPTY.with_link(Direction::West)),
-        ]);
+        ]));
         scamp::load_app(&mut sim, a, Box::new(PingApp { key: 0x10, received: rx_a.clone() }), Default::default(), Default::default()).unwrap();
         scamp::load_app(&mut sim, b, Box::new(PingApp { key: 0x20, received: rx_b.clone() }), Default::default(), Default::default()).unwrap();
         scamp::signal_start(&mut sim).unwrap();
         sim.start_run_cycle(10);
         sim.run_until_idle().unwrap();
-        assert_eq!(rx_a.lock().unwrap().len(), 10, "a receives b's 10 packets");
-        assert!(rx_a.lock().unwrap().iter().all(|k| *k == 0x20));
-        assert_eq!(rx_b.lock().unwrap().len(), 10);
+        let got_a = rx_a.lock().unwrap().clone();
+        let got_b = rx_b.lock().unwrap().clone();
+        (got_a, got_b, sim)
+    }
+
+    #[test]
+    fn two_cores_exchange_packets() {
+        let (rx_a, rx_b, sim) = ping_exchange(FabricMode::Fast);
+        assert_eq!(rx_a.len(), 10, "a receives b's 10 packets");
+        assert!(rx_a.iter().all(|k| *k == 0x20));
+        assert_eq!(rx_b.len(), 10);
+        let a = CoreLocation::new(0, 0, 1);
         assert_eq!(scamp::core_state(&sim, a).unwrap(), CoreState::Paused);
         let prov = scamp::provenance(&sim, a).unwrap();
         assert_eq!(prov.get("packets_in"), Some(&10));
+        // The cache served every repeat of the two keys.
+        let stats = sim.router_stats((0, 0)).unwrap();
+        assert!(stats.cache_hits > 0);
+        assert!(stats.cache_misses >= 1);
+    }
+
+    #[test]
+    fn legacy_fabric_is_byte_identical() {
+        let (fast_a, fast_b, fast_sim) = ping_exchange(FabricMode::Fast);
+        let (legacy_a, legacy_b, legacy_sim) = ping_exchange(FabricMode::Legacy);
+        assert_eq!(fast_a, legacy_a);
+        assert_eq!(fast_b, legacy_b);
+        assert_eq!(fast_sim.stats, legacy_sim.stats);
+        assert_eq!(fast_sim.now_ns(), legacy_sim.now_ns());
+        assert_eq!(
+            fast_sim.total_router_stats().semantic(),
+            legacy_sim.total_router_stats().semantic()
+        );
+        // The legacy path never touches the cache.
+        let legacy_total = legacy_sim.total_router_stats();
+        assert_eq!((legacy_total.cache_hits, legacy_total.cache_misses), (0, 0));
     }
 
     #[test]
@@ -856,8 +1148,7 @@ mod tests {
         assert_eq!(scamp::core_state(&sim, loc).unwrap(), CoreState::RunTimeError);
     }
 
-    #[test]
-    fn congestion_drops_and_reinjects() {
+    fn congestion_run(mode: FabricMode) -> (RouterStats, u64) {
         // Many cores on one chip all hammering the same outbound link in
         // the same instant overflows the output queue.
         struct BurstApp {
@@ -872,18 +1163,21 @@ mod tests {
             }
         }
         let machine = MachineBuilder::spinn3().build();
-        let mut config = SimConfig::default();
-        config.link_queue_depth = 2;
-        config.drop_wait_ns = 400; // tiny patience
-        config.send_spacing_ns = 0; // instantaneous burst
+        let config = SimConfig {
+            link_queue_depth: 2,
+            drop_wait_ns: 400,  // tiny patience
+            send_spacing_ns: 0, // instantaneous burst
+            fabric: mode,
+            ..SimConfig::default()
+        };
         let mut sim = SimMachine::boot(machine, config);
         // All keys routed East out of (0,0); receiver on (1,0) core 1.
-        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(vec![
+        sim.chip_mut((0, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
             RoutingEntry::new(0, 0, Route::EMPTY.with_link(Direction::East)),
-        ]);
-        sim.chip_mut((1, 0)).unwrap().table = RoutingTable::from_entries(vec![
+        ]));
+        sim.chip_mut((1, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
             RoutingEntry::new(0, 0, Route::EMPTY.with_processor(1)),
-        ]);
+        ]));
         let rx = shared();
         scamp::load_app(&mut sim, CoreLocation::new(1, 0, 1), Box::new(PingAppSilent { received: rx.clone() }), Default::default(), Default::default()).unwrap();
         for p in 1..=8 {
@@ -893,12 +1187,28 @@ mod tests {
         sim.start_run_cycle(3);
         sim.run_until_idle().unwrap();
         let stats = sim.router_stats((0, 0)).unwrap();
+        let delivered = rx.lock().unwrap().len() as u64;
+        (stats, delivered)
+    }
+
+    #[test]
+    fn congestion_drops_and_reinjects() {
+        let (stats, delivered) = congestion_run(FabricMode::Fast);
         assert!(stats.mc_dropped > 0, "expected congestion drops");
         assert!(stats.mc_reinjected > 0, "reinjector should recover some");
         // Reinjection recovered at least the register-held packets:
         // delivered + lost_forever == sent (64 per tick * 3 - receiver's own sends).
-        let delivered = rx.lock().unwrap().len() as u64;
         assert_eq!(delivered + stats.mc_lost_forever, 8 * 8 * 3);
+    }
+
+    #[test]
+    fn congestion_identical_across_fabrics() {
+        // The congestion/reinjection path is the most ordering-sensitive
+        // part of the fabric; both modes must agree packet for packet.
+        let (fast, fast_delivered) = congestion_run(FabricMode::Fast);
+        let (legacy, legacy_delivered) = congestion_run(FabricMode::Legacy);
+        assert_eq!(fast.semantic(), legacy.semantic());
+        assert_eq!(fast_delivered, legacy_delivered);
     }
 
     struct PingAppSilent {
@@ -926,18 +1236,20 @@ mod tests {
             }
         }
         let machine = MachineBuilder::spinn3().build();
-        let mut config = SimConfig::default();
-        config.link_queue_depth = 2;
-        config.drop_wait_ns = 400;
-        config.send_spacing_ns = 0;
-        config.reinjection = false;
+        let config = SimConfig {
+            link_queue_depth: 2,
+            drop_wait_ns: 400,
+            send_spacing_ns: 0,
+            reinjection: false,
+            ..SimConfig::default()
+        };
         let mut sim = SimMachine::boot(machine, config);
-        sim.chip_mut((0, 0)).unwrap().table = RoutingTable::from_entries(vec![
+        sim.chip_mut((0, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
             RoutingEntry::new(7, !0, Route::EMPTY.with_link(Direction::East)),
-        ]);
-        sim.chip_mut((1, 0)).unwrap().table = RoutingTable::from_entries(vec![
+        ]));
+        sim.chip_mut((1, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
             RoutingEntry::new(7, !0, Route::EMPTY.with_processor(1)),
-        ]);
+        ]));
         let rx = shared();
         scamp::load_app(&mut sim, CoreLocation::new(1, 0, 1), Box::new(PingAppSilent { received: rx.clone() }), Default::default(), Default::default()).unwrap();
         scamp::load_app(&mut sim, CoreLocation::new(0, 0, 1), Box::new(BurstApp), Default::default(), Default::default()).unwrap();
@@ -948,5 +1260,38 @@ mod tests {
         assert!(stats.mc_dropped > 0);
         assert_eq!(stats.mc_reinjected, 0);
         assert!((rx.lock().unwrap().len() as u64) < 32, "some packets must be lost");
+    }
+
+    #[test]
+    fn table_reload_invalidates_route_cache() {
+        // Route key 5 to core 1, warm the cache, then reroute to core 2:
+        // deliveries must follow the new table immediately.
+        let machine = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(machine, SimConfig::default());
+        let rx1 = shared();
+        let rx2 = shared();
+        scamp::load_app(&mut sim, CoreLocation::new(0, 0, 1), Box::new(PingAppSilent { received: rx1.clone() }), Default::default(), Default::default()).unwrap();
+        scamp::load_app(&mut sim, CoreLocation::new(0, 0, 2), Box::new(PingAppSilent { received: rx2.clone() }), Default::default(), Default::default()).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        scamp::load_routing_table(
+            &mut sim,
+            (0, 0),
+            RoutingTable::from_entries(vec![RoutingEntry::new(5, !0, Route::EMPTY.with_processor(1))]),
+        )
+        .unwrap();
+        sim.inject_mc(CoreLocation::new(0, 0, 3), 5, None);
+        sim.run_until_idle().unwrap();
+        scamp::load_routing_table(
+            &mut sim,
+            (0, 0),
+            RoutingTable::from_entries(vec![RoutingEntry::new(5, !0, Route::EMPTY.with_processor(2))]),
+        )
+        .unwrap();
+        sim.inject_mc(CoreLocation::new(0, 0, 3), 5, None);
+        sim.run_until_idle().unwrap();
+        assert_eq!(rx1.lock().unwrap().len(), 1, "first packet to the old route");
+        assert_eq!(rx2.lock().unwrap().len(), 1, "second must see the reloaded table");
+        let stats = sim.router_stats((0, 0)).unwrap();
+        assert_eq!(stats.cache_misses, 2, "reload must force a fresh TCAM scan");
     }
 }

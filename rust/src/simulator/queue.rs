@@ -1,0 +1,433 @@
+//! Event queues for the simulator fabric (DESIGN.md §4, "fabric fast
+//! path").
+//!
+//! The dispatch loop needs a priority queue ordered by `(time,
+//! insertion order)`: events at equal times must come out in the order
+//! they were scheduled, which is what makes the whole simulation
+//! deterministic. Two implementations share that contract:
+//!
+//! - [`HeapQueue`] — the legacy `BinaryHeap<Reverse<(time, seq)>>`
+//!   implementation, kept as the before/after baseline for experiment
+//!   E11 (`benches/fabric.rs`) and for the equivalence suite.
+//! - [`CalendarQueue`] — a hierarchical bucketed calendar queue. The
+//!   common case in the fabric is large same-cycle fan-out: one timer
+//!   tick produces thousands of packet events within a few microseconds
+//!   of virtual time. Those land in exact-nanosecond FIFO buckets, so
+//!   push and pop are O(1) with no comparisons at all.
+//!
+//! # Ordering contract
+//!
+//! Within one exact timestamp, events pop in push order (the simulator
+//! pushes with monotonically increasing sequence, so FIFO per timestamp
+//! *is* sequence order). Pushing strictly into the past is clamped to
+//! the read cursor — the fabric never does this (events are always
+//! scheduled at or after the current virtual time), the clamp just
+//! guarantees no event can be orphaned behind the cursor.
+//!
+//! # Structure of the calendar
+//!
+//! - **Level 0**: `L0_SPAN` buckets of exactly one nanosecond each,
+//!   covering the current *chunk* `[chunk * L0_SPAN, (chunk+1) *
+//!   L0_SPAN)`. A bucket is a FIFO of events sharing that timestamp.
+//! - **Level 1**: `L1_BUCKETS` ring slots of one chunk each, covering
+//!   the next ~16.8 ms of virtual time. Slot `c % L1_BUCKETS` holds the
+//!   events of chunk `c` unsorted; when the cursor enters chunk `c` the
+//!   slot is drained into level 0 (exact-ns distribution preserves the
+//!   per-timestamp FIFO order).
+//! - **Overflow**: a `BTreeMap<time, Vec>` for events beyond the level-1
+//!   horizon (timer ticks are ~1 ms, so almost nothing lands here).
+//!   Entries migrate into the ring as the horizon advances.
+
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+/// Level-0 bucket count (and span in nanoseconds): one chunk.
+const L0_BITS: u32 = 12;
+const L0_SPAN: u64 = 1 << L0_BITS;
+const L0_MASK: u64 = L0_SPAN - 1;
+
+/// Level-1 ring slots, one chunk each (~16.8 ms horizon).
+const L1_BUCKETS: u64 = 1 << 12;
+const L1_MASK: u64 = L1_BUCKETS - 1;
+
+/// Hierarchical bucketed calendar queue: O(1) push/pop for the fabric's
+/// same-cycle fan-out traffic. See the module docs for the layout and
+/// the ordering contract.
+pub struct CalendarQueue<T> {
+    /// Exact-nanosecond FIFO buckets of the current chunk.
+    l0: Vec<VecDeque<T>>,
+    /// One slot per upcoming chunk (ring, aliased modulo `L1_BUCKETS`).
+    l1: Vec<Vec<(u64, T)>>,
+    /// Events beyond the level-1 horizon, keyed by exact timestamp.
+    overflow: BTreeMap<u64, Vec<T>>,
+    /// The chunk the cursor is in (`cursor >> L0_BITS == chunk`).
+    chunk: u64,
+    /// All events before this time have been popped.
+    cursor: u64,
+    count: usize,
+    l0_count: usize,
+    l1_count: usize,
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            l0: (0..L0_SPAN).map(|_| VecDeque::new()).collect(),
+            l1: (0..L1_BUCKETS).map(|_| Vec::new()).collect(),
+            overflow: BTreeMap::new(),
+            chunk: 0,
+            cursor: 0,
+            count: 0,
+            l0_count: 0,
+            l1_count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn push(&mut self, time: u64, item: T) {
+        // The fabric never schedules into the past; clamping (rather
+        // than asserting) keeps a stale timestamp from orphaning an
+        // event behind the cursor.
+        debug_assert!(time >= self.cursor, "event scheduled in the past");
+        let t = time.max(self.cursor);
+        self.count += 1;
+        let c = t >> L0_BITS;
+        if c == self.chunk {
+            self.l0[(t & L0_MASK) as usize].push_back(item);
+            self.l0_count += 1;
+        } else if c - self.chunk <= L1_BUCKETS {
+            self.l1[(c & L1_MASK) as usize].push((t, item));
+            self.l1_count += 1;
+        } else {
+            self.overflow.entry(t).or_default().push(item);
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        if self.count == 0 {
+            return None;
+        }
+        loop {
+            if self.l0_count > 0 {
+                // Scan the current chunk forward from the cursor; the
+                // occupancy count guarantees a hit within the window.
+                loop {
+                    let b = (self.cursor & L0_MASK) as usize;
+                    if let Some(item) = self.l0[b].pop_front() {
+                        self.count -= 1;
+                        self.l0_count -= 1;
+                        return Some((self.cursor, item));
+                    }
+                    self.cursor += 1;
+                    debug_assert!(
+                        self.cursor >> L0_BITS <= self.chunk,
+                        "level-0 occupancy out of sync"
+                    );
+                }
+            }
+            if self.l1_count > 0 {
+                self.advance_one_chunk();
+            } else {
+                // Everything pending is in the overflow: jump straight
+                // to its first timestamp (the ladder between is empty).
+                let &t = self.overflow.keys().next().expect("count > 0 with empty levels");
+                self.chunk = t >> L0_BITS;
+                self.cursor = self.chunk << L0_BITS;
+                self.pull_overflow();
+            }
+        }
+    }
+
+    /// Move the cursor into the next chunk: drain its ring slot into
+    /// level 0 and migrate any overflow entries the horizon now covers.
+    fn advance_one_chunk(&mut self) {
+        self.chunk += 1;
+        self.cursor = self.chunk << L0_BITS;
+        let s = (self.chunk & L1_MASK) as usize;
+        let mut slot = std::mem::take(&mut self.l1[s]);
+        for (t, item) in slot.drain(..) {
+            debug_assert_eq!(t >> L0_BITS, self.chunk, "ring slot aliased a wrong chunk");
+            self.l0[(t & L0_MASK) as usize].push_back(item);
+            self.l1_count -= 1;
+            self.l0_count += 1;
+        }
+        self.l1[s] = slot; // keep the slot's capacity
+        self.pull_overflow();
+    }
+
+    /// Migrate overflow entries that fall inside the level-1 horizon
+    /// (or the current chunk itself, after a jump). Overflow entries
+    /// always predate ring/level-0 entries for the same timestamp, so
+    /// appending preserves per-timestamp FIFO order.
+    fn pull_overflow(&mut self) {
+        let horizon = self.chunk + L1_BUCKETS;
+        loop {
+            let Some(&t) = self.overflow.keys().next() else { return };
+            let c = t >> L0_BITS;
+            if c > horizon {
+                return;
+            }
+            let items = self.overflow.remove(&t).expect("key just observed");
+            if c == self.chunk {
+                let b = (t & L0_MASK) as usize;
+                for item in items {
+                    self.l0[b].push_back(item);
+                    self.l0_count += 1;
+                }
+            } else {
+                let s = (c & L1_MASK) as usize;
+                for item in items {
+                    self.l1[s].push((t, item));
+                    self.l1_count += 1;
+                }
+            }
+        }
+    }
+}
+
+/// The legacy event queue: a binary heap over `(time, sequence)`. Kept
+/// as the E11 baseline and as the reference model for the equivalence
+/// suite — it is exactly the pre-fast-path fabric ordering.
+pub struct HeapQueue<T> {
+    heap: BinaryHeap<std::cmp::Reverse<HeapEntry<T>>>,
+    seq: u64,
+}
+
+struct HeapEntry<T> {
+    time: u64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for HeapEntry<T> {}
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl<T> Default for HeapQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> HeapQueue<T> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push(&mut self, time: u64, item: T) {
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(HeapEntry { time, seq: self.seq, item }));
+    }
+
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        self.heap.pop().map(|std::cmp::Reverse(e)| (e.time, e.item))
+    }
+}
+
+/// Runtime-selectable queue backing, chosen by
+/// [`crate::simulator::FabricMode`]. The enum dispatch is one predicted
+/// branch; both variants honour the same ordering contract.
+pub enum EventQueue<T> {
+    Calendar(CalendarQueue<T>),
+    Heap(HeapQueue<T>),
+}
+
+impl<T> EventQueue<T> {
+    #[inline]
+    pub fn push(&mut self, time: u64, item: T) {
+        match self {
+            EventQueue::Calendar(q) => q.push(time, item),
+            EventQueue::Heap(q) => q.push(time, item),
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        match self {
+            EventQueue::Calendar(q) => q.pop(),
+            EventQueue::Heap(q) => q.pop(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            EventQueue::Calendar(q) => q.len(),
+            EventQueue::Heap(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    /// Drive both queues with the same (time, id) stream and compare the
+    /// full pop sequences. `HeapQueue` is the reference: it is the
+    /// pre-E11 fabric ordering by construction.
+    fn run_storm(seed: u64, ops: usize) -> (Vec<(u64, u32)>, Vec<(u64, u32)>) {
+        let mut rng = SplitMix64::new(seed);
+        let mut cal: CalendarQueue<u32> = CalendarQueue::new();
+        let mut heap: HeapQueue<u32> = HeapQueue::new();
+        let mut cal_out = Vec::new();
+        let mut heap_out = Vec::new();
+        let mut now = 0u64;
+        let mut next_id = 0u32;
+        for _ in 0..ops {
+            if rng.next_f64() < 0.6 || cal.is_empty() {
+                // Push at `now + delta`, mixing same-instant fan-out,
+                // router-scale deltas, tick-scale deltas and far-future
+                // (overflow-territory) deltas.
+                let delta = match rng.below(10) {
+                    0..=3 => 0,
+                    4..=6 => rng.next_u64() % 2_000,
+                    7 => 1_000_000,
+                    8 => rng.next_u64() % 5_000_000,
+                    _ => 20_000_000 + rng.next_u64() % 200_000_000,
+                };
+                let t = now + delta;
+                cal.push(t, next_id);
+                heap.push(t, next_id);
+                next_id += 1;
+            } else {
+                let a = cal.pop().expect("non-empty");
+                let b = heap.pop().expect("queues in lockstep");
+                now = a.0;
+                cal_out.push(a);
+                heap_out.push(b);
+            }
+            assert_eq!(cal.len(), heap.len());
+        }
+        while let Some(a) = cal.pop() {
+            let b = heap.pop().expect("queues in lockstep");
+            cal_out.push(a);
+            heap_out.push(b);
+        }
+        assert!(heap.pop().is_none());
+        (cal_out, heap_out)
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_storms() {
+        for seed in [1u64, 42, 0xE11, 0xDEAD_BEEF] {
+            let (cal, heap) = run_storm(seed, 4000);
+            assert_eq!(cal, heap, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn same_timestamp_pops_in_push_order() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::new();
+        for i in 0..100 {
+            q.push(777, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((777, i)));
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn time_order_across_levels() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::new();
+        // One event per structural level, pushed out of time order.
+        q.push(300_000_000, 3); // overflow
+        q.push(1_000_000, 2); // level-1 ring
+        q.push(10, 1); // level 0
+        q.push(0, 0); // level 0, first bucket
+        assert_eq!(q.pop(), Some((0, 0)));
+        assert_eq!(q.pop(), Some((10, 1)));
+        assert_eq!(q.pop(), Some((1_000_000, 2)));
+        assert_eq!(q.pop(), Some((300_000_000, 3)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn jump_over_long_idle_gap() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::new();
+        q.push(5, 0);
+        assert_eq!(q.pop(), Some((5, 0)));
+        // Nothing pending between the cursor and an event ~10 s away.
+        q.push(10_000_000_000, 1);
+        assert_eq!(q.pop(), Some((10_000_000_000, 1)));
+        // And the queue keeps working past the jump.
+        q.push(10_000_000_001, 2);
+        q.push(10_000_000_001, 3);
+        assert_eq!(q.pop(), Some((10_000_000_001, 2)));
+        assert_eq!(q.pop(), Some((10_000_000_001, 3)));
+    }
+
+    #[test]
+    fn interleaved_push_during_drain() {
+        // Mirrors dispatch: each pop schedules new events slightly ahead.
+        let mut q: CalendarQueue<u64> = CalendarQueue::new();
+        q.push(0, 0);
+        let mut popped = Vec::new();
+        while let Some((t, id)) = q.pop() {
+            popped.push((t, id));
+            if popped.len() < 500 {
+                q.push(t + 166, id + 1);
+                if id % 7 == 0 {
+                    q.push(t + 1_000_000, id + 1000);
+                }
+            }
+        }
+        // Times never go backwards.
+        for w in popped.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        assert!(popped.len() >= 500);
+    }
+
+    #[test]
+    fn len_tracks_pushes_and_pops() {
+        let mut q: CalendarQueue<u8> = CalendarQueue::new();
+        assert!(q.is_empty());
+        q.push(1, 1);
+        q.push(2_000_000, 2);
+        q.push(2_000_000_000, 3);
+        assert_eq!(q.len(), 3);
+        q.pop();
+        assert_eq!(q.len(), 2);
+        q.pop();
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -75,7 +75,8 @@ pub fn load_routing_table(
         table.len()
     );
     sim.advance_host_time(sim.config.wire.eth_read_rtt_ns);
-    sim.chip_mut(chip)?.table = table;
+    // Through install_table so the chip's route cache is invalidated.
+    sim.chip_mut(chip)?.install_table(table);
     Ok(())
 }
 

@@ -98,10 +98,7 @@ impl SdpMessage {
         let dest_x = r.u8()?;
         let src_y = r.u8()?;
         let src_x = r.u8()?;
-        let mut data = Vec::with_capacity(r.remaining());
-        while r.remaining() > 0 {
-            data.push(r.u8()?);
-        }
+        let data = r.rest().to_vec();
         Ok(Self {
             header: SdpHeader {
                 flags,
@@ -187,10 +184,7 @@ impl ScpRequest {
         let arg1 = r.u32()?;
         let arg2 = r.u32()?;
         let arg3 = r.u32()?;
-        let mut data = Vec::with_capacity(r.remaining());
-        while r.remaining() > 0 {
-            data.push(r.u8()?);
-        }
+        let data = r.rest().to_vec();
         Ok(Self { cmd, seq, arg1, arg2, arg3, data })
     }
 }
@@ -220,10 +214,7 @@ impl ScpResponse {
         let mut r = ByteReader::new(buf);
         let result = r.u16()?;
         let seq = r.u16()?;
-        let mut data = Vec::with_capacity(r.remaining());
-        while r.remaining() > 0 {
-            data.push(r.u8()?);
-        }
+        let data = r.rest().to_vec();
         Ok(Self { result, seq, data })
     }
 }

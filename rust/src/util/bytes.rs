@@ -135,6 +135,15 @@ impl<'a> ByteReader<'a> {
         (0..n).map(|_| self.u32()).collect()
     }
 
+    /// Consume and return every remaining byte (the tail payload of a
+    /// frame) in one slice — cheaper than a byte-at-a-time loop on the
+    /// UDP/SDP decode paths.
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
@@ -167,6 +176,16 @@ mod tests {
         let mut r = ByteReader::new(&buf);
         assert_eq!(r.f32s(3).unwrap(), vec![1.0, 2.0, 3.0]);
         assert_eq!(r.u32s(2).unwrap(), vec![9, 8]);
+    }
+
+    #[test]
+    fn rest_consumes_the_tail() {
+        let buf = [1u8, 2, 3, 4, 5];
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u16().unwrap(), u16::from_le_bytes([1, 2]));
+        assert_eq!(r.rest(), &[3, 4, 5]);
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.rest(), &[] as &[u8]);
     }
 
     #[test]

@@ -1,0 +1,41 @@
+//! E11 satellite: `fabric-smoke` — run the `benches/fabric.rs`
+//! workloads at tiny scale under `cargo test`, through the very same
+//! probe harness (`front::fabric_probe`), so the bench code paths are
+//! exercised on every test run and cannot rot.
+
+use spinntools::front::fabric_probe::{run_fabric_probe, ProbeWorkload};
+use spinntools::simulator::FabricMode;
+
+fn smoke(workload: ProbeWorkload, ticks: u64) {
+    let fast = run_fabric_probe(workload, ticks, FabricMode::Fast).unwrap();
+    let legacy = run_fabric_probe(workload, ticks, FabricMode::Legacy).unwrap();
+    assert_eq!(fast.ticks, ticks);
+    assert!(fast.wall_seconds > 0.0);
+    assert!(fast.events > 0, "{}: no events simulated", fast.workload);
+    assert!(fast.mc_sent > 0, "{}: no packets sent", fast.workload);
+    assert!(fast.hops > 0, "{}: no packets routed", fast.workload);
+    // Tiny-scale equivalence rides along for free.
+    assert_eq!(
+        fast.digest, legacy.digest,
+        "{}: fabrics diverged at smoke scale",
+        fast.workload
+    );
+    // The JSON serialisation the bench writes must stay well-formed.
+    let json = fast.to_json();
+    assert_eq!(
+        json.get("mode").and_then(|j| j.as_str()),
+        Some("fast"),
+        "probe JSON lost its mode field"
+    );
+    assert!(json.get("hops_per_sec").and_then(|j| j.as_f64()).unwrap() > 0.0);
+}
+
+#[test]
+fn fabric_smoke_conway() {
+    smoke(ProbeWorkload::Conway { side: 8, boards: 1 }, 4);
+}
+
+#[test]
+fn fabric_smoke_microcircuit_storm() {
+    smoke(ProbeWorkload::MicrocircuitStorm { scale: 0.02, boards: 1 }, 4);
+}
