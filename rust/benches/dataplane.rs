@@ -1,0 +1,240 @@
+//! Experiment E12 — bulk data plane throughput: fast data-in versus
+//! (batched) SCAMP writes, and multi-board parallel extraction versus a
+//! single board, in *simulated* time (the protocol cost models are the
+//! thing under test, exactly as in E1).
+//!
+//! Every transfer is digest-checked (FNV-1a) against its source or its
+//! slow-path twin — a speedup over corrupted data would be meaningless.
+//!
+//! Results go to `BENCH_dataplane.json` at the repository root.
+//! Targets (ISSUE 3): fast data-in ≥ 3x over batched SCAMP writes, and
+//! multi-board extraction scaling ≥ 2x over one board.
+//!
+//! ```sh
+//! cargo bench --bench dataplane
+//! ```
+
+use std::collections::BTreeMap;
+
+use spinntools::front::{DataPlaneOptions, FastPath};
+use spinntools::machine::{ChipCoord, Machine, MachineBuilder};
+use spinntools::simulator::{scamp, SimConfig, SimMachine};
+use spinntools::util::json::Json;
+use spinntools::util::{fnv1a_64, SplitMix64};
+
+/// Payload per covered chip.
+const CHIP_BYTES: usize = 256 * 1024;
+/// Chips covered per machine.
+const N_CHIPS: usize = 12;
+const IN_TARGET: f64 = 3.0;
+const SCALE_TARGET: f64 = 2.0;
+
+fn mbps(bytes: u64, ns: u64) -> f64 {
+    bytes as f64 * 8.0 / (ns as f64 / 1e9).max(1e-12) / 1e6
+}
+
+/// `n` chips spread evenly over the machine (and so over its boards).
+fn spread_chips(machine: &Machine, n: usize) -> Vec<ChipCoord> {
+    let coords: Vec<ChipCoord> = machine.chip_coords().collect();
+    (0..n).map(|i| coords[i * coords.len() / n]).collect()
+}
+
+struct MachineResult {
+    label: String,
+    n_eth: usize,
+    naive_in_mbps: f64,
+    batched_in_mbps: f64,
+    fast_in_mbps: f64,
+    scamp_out_mbps: f64,
+    fast_out_mbps: f64,
+}
+
+impl MachineResult {
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("label".to_string(), Json::Str(self.label.clone()));
+        o.insert("ethernet_chips".to_string(), Json::Num(self.n_eth as f64));
+        o.insert("chips_covered".to_string(), Json::Num(N_CHIPS as f64));
+        o.insert("bytes_per_chip".to_string(), Json::Num(CHIP_BYTES as f64));
+        o.insert("naive_scamp_in_mbps".to_string(), Json::Num(self.naive_in_mbps));
+        o.insert("batched_scamp_in_mbps".to_string(), Json::Num(self.batched_in_mbps));
+        o.insert("fast_in_mbps".to_string(), Json::Num(self.fast_in_mbps));
+        o.insert("scamp_out_mbps".to_string(), Json::Num(self.scamp_out_mbps));
+        o.insert("fast_out_mbps".to_string(), Json::Num(self.fast_out_mbps));
+        o.insert(
+            "fast_in_vs_batched".to_string(),
+            Json::Num(self.fast_in_mbps / self.batched_in_mbps.max(1e-9)),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Verify the stored image of every chip against its source pattern.
+fn check_digests(
+    sim: &mut SimMachine,
+    chips: &[ChipCoord],
+    addrs: &[u32],
+    datas: &[Vec<u8>],
+    what: &str,
+) -> anyhow::Result<()> {
+    for ((chip, addr), data) in chips.iter().zip(addrs).zip(datas) {
+        let got = scamp::read_sdram(sim, *chip, *addr, data.len())?;
+        anyhow::ensure!(
+            fnv1a_64(&got) == fnv1a_64(data),
+            "{what}: digest mismatch on {chip:?}"
+        );
+    }
+    Ok(())
+}
+
+fn bench_machine(label: &str, machine: Machine, seed: u64) -> anyhow::Result<MachineResult> {
+    let n_eth = machine.ethernet_chips().count();
+    let mut sim = SimMachine::boot(machine.clone(), SimConfig::default());
+    let chips = spread_chips(&machine, N_CHIPS);
+    let total = (N_CHIPS * CHIP_BYTES) as u64;
+
+    let mut rng = SplitMix64::new(seed);
+    let mut fresh_patterns = |salt: u64| -> Vec<Vec<u8>> {
+        (0..N_CHIPS)
+            .map(|_| {
+                let mut rng2 = SplitMix64::new(rng.next_u64() ^ salt);
+                (0..CHIP_BYTES).map(|_| (rng2.next_u64() & 0xff) as u8).collect()
+            })
+            .collect()
+    };
+    let addrs: Vec<u32> = chips
+        .iter()
+        .map(|c| scamp::alloc_sdram(&mut sim, *c, CHIP_BYTES as u32))
+        .collect::<anyhow::Result<_>>()?;
+
+    // Data-in, slow: one acknowledged round trip per 256-byte chunk.
+    let datas = fresh_patterns(1);
+    let t0 = sim.now_ns();
+    for ((chip, addr), data) in chips.iter().zip(&addrs).zip(&datas) {
+        scamp::write_sdram(&mut sim, *chip, *addr, data)?;
+    }
+    let naive_in_mbps = mbps(total, sim.now_ns() - t0);
+    check_digests(&mut sim, &chips, &addrs, &datas, "naive scamp write")?;
+
+    // Data-in, batched slow path (the fallback the fast path is gated on).
+    let datas = fresh_patterns(2);
+    let t0 = sim.now_ns();
+    for ((chip, addr), data) in chips.iter().zip(&addrs).zip(&datas) {
+        scamp::write_sdram_batched(&mut sim, *chip, *addr, data)?;
+    }
+    let batched_in_mbps = mbps(total, sim.now_ns() - t0);
+    check_digests(&mut sim, &chips, &addrs, &datas, "batched scamp write")?;
+
+    // Install the plane (one gatherer + dispatcher per board).
+    let mut used: BTreeMap<ChipCoord, u8> = BTreeMap::new();
+    let fp = FastPath::install(
+        &mut sim,
+        &chips,
+        move |chip| {
+            let next = used.entry(chip).or_insert(17u8);
+            let c = *next;
+            *next -= 1;
+            Some(c)
+        },
+        &DataPlaneOptions::default(),
+    )?;
+    scamp::signal_start(&mut sim)?;
+    assert_eq!(fp.n_boards(), n_eth, "a plane on every board");
+
+    // Data-in, fast: multi-board streamed load.
+    let datas = fresh_patterns(3);
+    let reqs: Vec<(ChipCoord, u32, &[u8])> = chips
+        .iter()
+        .zip(&addrs)
+        .zip(&datas)
+        .map(|((c, a), d)| (*c, *a, d.as_slice()))
+        .collect();
+    let t0 = sim.now_ns();
+    let stats = fp.write_many(&mut sim, &reqs)?;
+    let fast_in_mbps = mbps(total, sim.now_ns() - t0);
+    assert_eq!(stats.frames_resent, 0, "lossless fabric should not re-send");
+    check_digests(&mut sim, &chips, &addrs, &datas, "fast data-in")?;
+
+    // Extraction, slow: SCAMP reads of the stored image.
+    let t0 = sim.now_ns();
+    let mut slow_reads = Vec::new();
+    for ((chip, addr), data) in chips.iter().zip(&addrs).zip(&datas) {
+        slow_reads.push(scamp::read_sdram(&mut sim, *chip, *addr, data.len())?);
+    }
+    let scamp_out_mbps = mbps(total, sim.now_ns() - t0);
+
+    // Extraction, fast: per-board parallel drains.
+    let read_reqs: Vec<(ChipCoord, u32, usize)> = chips
+        .iter()
+        .zip(&addrs)
+        .map(|(c, a)| (*c, *a, CHIP_BYTES))
+        .collect();
+    let t0 = sim.now_ns();
+    let fast_reads = fp.read_many(&mut sim, &read_reqs)?;
+    let fast_out_mbps = mbps(total, sim.now_ns() - t0);
+    for ((slow, fast), chip) in slow_reads.iter().zip(&fast_reads).zip(&chips) {
+        anyhow::ensure!(
+            fnv1a_64(slow) == fnv1a_64(fast),
+            "extraction: fast ≠ scamp on {chip:?}"
+        );
+    }
+
+    println!(
+        "{label:<24} eth {n_eth:>2} | in: naive {naive_in_mbps:>7.2} batched {batched_in_mbps:>7.2} fast {fast_in_mbps:>8.2} Mb/s | out: scamp {scamp_out_mbps:>7.2} fast {fast_out_mbps:>8.2} Mb/s"
+    );
+    Ok(MachineResult {
+        label: label.to_string(),
+        n_eth,
+        naive_in_mbps,
+        batched_in_mbps,
+        fast_in_mbps,
+        scamp_out_mbps,
+        fast_out_mbps,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E12: bulk data plane throughput (simulated time), {N_CHIPS} chips x {CHIP_BYTES} B");
+
+    let single = bench_machine("1-board", MachineBuilder::boards(1).build(), 0xE12_0001)?;
+    // `boards(4)` rounds up to whole triads (6 boards / 6 Ethernet
+    // chips), as the physical machines do.
+    let multi = bench_machine("4-board (2 triads)", MachineBuilder::boards(4).build(), 0xE12_0004)?;
+
+    let in_speedup = (single.fast_in_mbps / single.batched_in_mbps.max(1e-9))
+        .min(multi.fast_in_mbps / multi.batched_in_mbps.max(1e-9));
+    let out_scaling = multi.fast_out_mbps / single.fast_out_mbps.max(1e-9);
+    let in_scaling = multi.fast_in_mbps / single.fast_in_mbps.max(1e-9);
+    let meets = in_speedup >= IN_TARGET && out_scaling >= SCALE_TARGET;
+    println!(
+        "\n# fast data-in vs batched SCAMP: {in_speedup:.2}x (target ≥ {IN_TARGET}x)\n\
+         # multi-board extraction scaling: {out_scaling:.2}x (target ≥ {SCALE_TARGET}x); loading scaling {in_scaling:.2}x\n\
+         # {}",
+        if meets { "MET" } else { "NOT MET" }
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "experiment".to_string(),
+        Json::Str("E12_bulk_data_plane".to_string()),
+    );
+    root.insert("target_in_speedup".to_string(), Json::Num(IN_TARGET));
+    root.insert("target_out_scaling".to_string(), Json::Num(SCALE_TARGET));
+    root.insert("fast_in_vs_batched".to_string(), Json::Num(in_speedup));
+    root.insert("multi_board_out_scaling".to_string(), Json::Num(out_scaling));
+    root.insert("multi_board_in_scaling".to_string(), Json::Num(in_scaling));
+    root.insert("digests_checked".to_string(), Json::Bool(true));
+    root.insert("meets_target".to_string(), Json::Bool(meets));
+    root.insert(
+        "machines".to_string(),
+        Json::Arr(vec![single.to_json(), multi.to_json()]),
+    );
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_dataplane.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("results written to {}", out.display());
+    Ok(())
+}

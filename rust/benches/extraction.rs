@@ -10,7 +10,7 @@
 //! cargo bench --bench extraction
 //! ```
 
-use spinntools::front::FastPath;
+use spinntools::front::{DataPlaneOptions, FastPath};
 use spinntools::machine::{ChipCoord, MachineBuilder};
 use spinntools::simulator::{scamp, SimConfig, SimMachine};
 
@@ -57,8 +57,7 @@ fn main() -> anyhow::Result<()> {
             *next -= 1;
             Some(c)
         },
-        17895,
-        7,
+        &DataPlaneOptions::default(),
     )?;
     scamp::signal_start(&mut sim)?;
 

@@ -1,13 +1,24 @@
-//! The fast data-extraction protocol (§6.8, Figure 11 bottom).
+//! The fast bulk-data protocols (§6.8, Figure 11 bottom) — both
+//! directions of the data plane.
 //!
-//! One reader core per chip streams SDRAM as multicast packets to a
-//! gatherer core on the Ethernet chip, which reassembles them into
-//! sequence-numbered SDP frames for the host. The host re-requests
-//! missing sequences (the machine is configured so the single-path
-//! stream is loss-free, but the logic exists and is tested). Compared
-//! with SCAMP reads: no per-256-byte request/response round trip and no
-//! SDP headers crossing the fabric — which is exactly why the paper
-//! measures ~40 Mb/s from *any* chip versus 8/2 Mb/s over SCAMP.
+//! **Extraction (data out).** One reader core per chip streams SDRAM as
+//! multicast packets to a gatherer core on its board's Ethernet chip,
+//! which reassembles them into sequence-numbered SDP frames for the
+//! host. The host re-requests missing sequences (the machine is
+//! configured so the single-path stream is loss-free, but the logic
+//! exists and is tested). Compared with SCAMP reads: no per-256-byte
+//! request/response round trip and no SDP headers crossing the fabric —
+//! which is exactly why the paper measures ~40 Mb/s from *any* chip
+//! versus 8/2 Mb/s over SCAMP.
+//!
+//! **Loading (data in).** The mirror image: the host sends
+//! sequence-numbered UDP frames (framed by [`crate::transport::bulk`])
+//! to a dispatcher core on each board's Ethernet chip, which fans each
+//! frame out as multicast packets on the target chip's stream key; a
+//! writer core on the target chip assembles the words back into SDRAM.
+//! The writer tracks which sequences arrived, and the host queries it
+//! for the missing ones and re-sends only those — the same re-request
+//! vocabulary as extraction, pointed the other way.
 
 use std::any::Any;
 use std::sync::Arc;
@@ -17,11 +28,13 @@ use crate::graph::{
 };
 use crate::machine::ChipCoord;
 use crate::simulator::{CoreApp, CoreCtx};
-use crate::transport::{SdpHeader, SdpMessage};
+use crate::transport::{bulk, SdpHeader, SdpMessage};
 use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub const READER_BINARY: &str = "data_speed_up_reader.aplx";
 pub const GATHERER_BINARY: &str = "data_speed_up_gather.aplx";
+pub const WRITER_BINARY: &str = "data_in_writer.aplx";
+pub const DISPATCHER_BINARY: &str = "data_in_dispatch.aplx";
 pub const STREAM_PARTITION: &str = "stream";
 pub const IPTAG_LABEL: &str = "dsg";
 const REGION_CONFIG: u32 = 0;
@@ -29,8 +42,18 @@ const REGION_CONFIG: u32 = 0;
 /// SDP port the reader listens for read commands on.
 pub const READER_SDP_PORT: u8 = 2;
 
+/// SDP port the data-in writer listens for session commands on.
+pub const WRITER_SDP_PORT: u8 = 3;
+
 /// Words per host-bound SDP frame (64 x 4 B = 256 B of data).
-const WORDS_PER_FRAME: usize = 64;
+const WORDS_PER_FRAME: usize = bulk::WORDS_PER_FRAME;
+
+/// High bit of a stream-header payload marking an *explicit* frame
+/// label: re-requested frames are re-sent under their original sequence
+/// numbers (low 31 bits) so the gatherer emits them where the host is
+/// actually missing them. Initial-stream headers carry the total word
+/// count instead (always < 2^31: SDRAM is 128 MiB).
+pub const EXPLICIT_SEQ_FLAG: u32 = 0x8000_0000;
 
 /// Command message: "stream `len` bytes from `addr`" (host → reader).
 pub fn encode_read_command(addr: u32, len: u32) -> Vec<u8> {
@@ -114,27 +137,42 @@ impl DataSpeedUpReaderApp {
     }
 
     fn stream(&self, ctx: &mut CoreCtx, addr: u32, len: u32, only: Option<Vec<u32>>) -> anyhow::Result<()> {
-        let data = ctx.read_sdram(addr, len as usize)?;
-        let n_words = data.len().div_ceil(4);
-        // Header packet: total word count (payload), distinguished by
-        // key | 1 (the stream key range is 2 keys wide).
-        if only.is_none() {
-            ctx.send_mc(self.stream_key | 1, Some(n_words as u32));
+        fn send_words(ctx: &mut CoreCtx, key: u32, data: &[u8]) {
+            for chunk in data.chunks(4) {
+                let mut word = [0u8; 4];
+                word[..chunk.len()].copy_from_slice(chunk);
+                ctx.send_mc(key, Some(u32::from_le_bytes(word)));
+            }
         }
-        for w in 0..n_words {
-            if let Some(only) = &only {
-                let frame = (w / WORDS_PER_FRAME) as u32;
-                if !only.contains(&frame) {
-                    continue;
+        let mut streamed = 0u64;
+        match only {
+            None => {
+                let data = ctx.read_sdram(addr, len as usize)?;
+                let n_words = data.len().div_ceil(4);
+                // Header packet: total word count (payload), distinguished
+                // by key | 1 (the stream key range is 2 keys wide).
+                ctx.send_mc(self.stream_key | 1, Some(n_words as u32));
+                send_words(ctx, self.stream_key, &data);
+                streamed = n_words as u64;
+            }
+            Some(missing) => {
+                // Re-request: each frame is DMAd and re-sent on its own,
+                // under an explicit sequence label so the gatherer emits
+                // it with the number the host is actually missing.
+                for frame in missing {
+                    let lo = frame as usize * WORDS_PER_FRAME * 4;
+                    if lo >= len as usize {
+                        continue;
+                    }
+                    let n = (len as usize - lo).min(WORDS_PER_FRAME * 4);
+                    let data = ctx.read_sdram(addr + lo as u32, n)?;
+                    ctx.send_mc(self.stream_key | 1, Some(EXPLICIT_SEQ_FLAG | frame));
+                    send_words(ctx, self.stream_key, &data);
+                    streamed += data.len().div_ceil(4) as u64;
                 }
             }
-            let mut word = [0u8; 4];
-            let lo = w * 4;
-            let hi = (lo + 4).min(data.len());
-            word[..hi - lo].copy_from_slice(&data[lo..hi]);
-            ctx.send_mc(self.stream_key, Some(u32::from_le_bytes(word)));
         }
-        ctx.count("words_streamed", n_words as u64);
+        ctx.count("words_streamed", streamed);
         Ok(())
     }
 }
@@ -285,10 +323,17 @@ impl CoreApp for DataSpeedUpGathererApp {
     fn on_mc_packet(&mut self, key: u32, payload: Option<u32>, ctx: &mut CoreCtx) -> anyhow::Result<()> {
         let payload = payload.unwrap_or(0);
         if key & 1 == 1 {
-            // Stream header: expected length; reset reassembly.
-            self.expected_words = Some(payload as usize);
-            self.words.clear();
-            self.seq = 0;
+            if payload & EXPLICIT_SEQ_FLAG != 0 {
+                // Re-requested frame: emit the following words under the
+                // original sequence number.
+                self.words.clear();
+                self.seq = payload & !EXPLICIT_SEQ_FLAG;
+            } else {
+                // Stream header: expected length; reset reassembly.
+                self.expected_words = Some(payload as usize);
+                self.words.clear();
+                self.seq = 0;
+            }
             return Ok(());
         }
         self.words.push(payload);
@@ -298,6 +343,146 @@ impl CoreApp for DataSpeedUpGathererApp {
             .unwrap_or(false);
         self.flush_frames(ctx, done);
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data-in dispatcher (one on each Ethernet chip)
+
+/// The data-in dispatcher binary: each UDP frame from the host (arriving
+/// as SDP through the board's reverse IP tag) is fanned out as multicast
+/// packets on the target chip's stream key — a header packet (`key | 1`)
+/// carrying the sequence number, then one packet per payload word. The
+/// host paces frames so one frame's words are on the wire before the
+/// next frame arrives (see `front::extraction`).
+#[derive(Debug, Default)]
+pub struct DataInDispatcherApp;
+
+impl CoreApp for DataInDispatcherApp {
+    fn on_timer(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn on_sdp(&mut self, msg: &SdpMessage, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let frame = bulk::decode_data_frame(&msg.data)?;
+        ctx.send_mc(frame.key | 1, Some(frame.seq));
+        for w in &frame.words {
+            ctx.send_mc(frame.key, Some(*w));
+        }
+        ctx.count("frames_dispatched", 1);
+        ctx.count("words_dispatched", frame.words.len() as u64);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data-in writer (one per chip being written to)
+
+/// The per-chip data-in writer binary: assembles the dispatcher's word
+/// stream back into SDRAM. A write *session* (opened by SDP command)
+/// names the target address and length; the writer marks each frame
+/// sequence as it arrives and answers missing-sequence queries with the
+/// `transport::bulk` report messages, tagged for the host.
+pub struct DataInWriterApp {
+    stream_key: u32,
+    reply_tag: u8,
+    addr: u32,
+    len: usize,
+    /// Per-frame arrival map of the current session.
+    received: Vec<bool>,
+    cur_seq: u32,
+    cur_word: usize,
+}
+
+impl DataInWriterApp {
+    pub fn new() -> Self {
+        Self {
+            stream_key: u32::MAX,
+            reply_tag: 0,
+            addr: 0,
+            len: 0,
+            received: Vec::new(),
+            cur_seq: 0,
+            cur_word: 0,
+        }
+    }
+}
+
+impl Default for DataInWriterApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreApp for DataInWriterApp {
+    fn on_start(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let config = ctx.read_region(REGION_CONFIG)?;
+        let mut r = ByteReader::new(&config);
+        self.stream_key = r.u32()?;
+        self.reply_tag = r.u32()? as u8;
+        Ok(())
+    }
+
+    fn on_timer(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn on_mc_packet(&mut self, key: u32, payload: Option<u32>, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let payload = payload.unwrap_or(0);
+        if key & 1 == 1 {
+            // Frame header: the following words belong to this sequence.
+            self.cur_seq = payload;
+            self.cur_word = 0;
+            match self.received.get_mut(payload as usize) {
+                Some(seen) => {
+                    *seen = true;
+                    ctx.count("frames_received", 1);
+                }
+                None => ctx.count("unknown_seq", 1),
+            }
+            return Ok(());
+        }
+        let offset = self.cur_seq as usize * bulk::BYTES_PER_FRAME + self.cur_word * 4;
+        self.cur_word += 1;
+        if offset >= self.len {
+            ctx.count("words_overrun", 1);
+            return Ok(());
+        }
+        let word = payload.to_le_bytes();
+        let n = (self.len - offset).min(4);
+        ctx.write_sdram(self.addr + offset as u32, &word[..n])?;
+        ctx.count("bytes_written", n as u64);
+        Ok(())
+    }
+
+    fn on_sdp(&mut self, msg: &SdpMessage, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(&msg.data);
+        match r.u32()? {
+            bulk::WRITE_CMD_MAGIC => {
+                self.addr = r.u32()?;
+                self.len = r.u32()? as usize;
+                self.received = vec![false; bulk::frames_of(self.len)];
+                ctx.count("write_sessions", 1);
+                Ok(())
+            }
+            bulk::CHECK_CMD_MAGIC => {
+                let missing: Vec<u32> = self
+                    .received
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, seen)| !**seen)
+                    .map(|(seq, _)| seq as u32)
+                    .collect();
+                ctx.count("missing_reported", missing.len() as u64);
+                for report in bulk::encode_missing_reports(&missing) {
+                    let mut header = SdpHeader::to_core(ctx.loc, 1);
+                    header.tag = self.reply_tag;
+                    ctx.send_sdp(SdpMessage::new(header, report));
+                }
+                Ok(())
+            }
+            other => anyhow::bail!("unknown data-in command {other:#x}"),
+        }
     }
 }
 

@@ -47,6 +47,22 @@ pub enum ExtractionMethod {
     FastMulticast,
 }
 
+/// How generated data regions are loaded onto the machine (§6.3.4 /
+/// §6.8's data-in mirror, experiment E12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMethod {
+    /// One acknowledged SCAMP write round trip per 256-byte chunk.
+    Scamp,
+    /// SCAMP writes with a pipelined command window
+    /// ([`crate::simulator::scamp::write_sdram_batched`]): the fastest
+    /// the monitor protocol alone can load.
+    ScampBatched,
+    /// The data-in stream protocol: sequence-numbered UDP frames fanned
+    /// out as multicast by a per-board dispatcher core. Chips without a
+    /// writer core fall back to the batched SCAMP path.
+    FastMulticast,
+}
+
 /// Full tool configuration (§6.1).
 #[derive(Debug, Clone)]
 pub struct ToolsConfig {
@@ -59,8 +75,15 @@ pub struct ToolsConfig {
     /// needed, e.g. pure Conway-cell graphs).
     pub artifacts_dir: Option<PathBuf>,
     pub extraction: ExtractionMethod,
-    /// UDP port the fast-extraction gatherer sends to.
+    /// How data regions are loaded (§6.3.4; E12).
+    pub loading: LoadMethod,
+    /// First UDP port of the data plane's per-board port pairs (board
+    /// `i` uses `fast_port + 2i` for extraction frames and
+    /// `fast_port + 2i + 1` for data-in frames and reports).
     pub fast_port: u16,
+    /// Worker threads for the host-side per-board extraction drains
+    /// (`0` = one per hardware thread). Purely a host wall-clock knob.
+    pub data_plane_threads: usize,
     /// Safety margin of SDRAM per chip left unallocated to recording.
     pub recording_slack_bytes: u64,
 }
@@ -74,7 +97,9 @@ impl ToolsConfig {
             sim: SimConfig::default(),
             artifacts_dir: None,
             extraction: ExtractionMethod::Scamp,
+            loading: LoadMethod::Scamp,
             fast_port: 17895,
+            data_plane_threads: 0,
             recording_slack_bytes: 1024 * 1024,
         }
     }
@@ -95,6 +120,18 @@ impl ToolsConfig {
 
     pub fn with_extraction(mut self, method: ExtractionMethod) -> Self {
         self.extraction = method;
+        self
+    }
+
+    /// Select the region-loading path (E12).
+    pub fn with_loading(mut self, method: LoadMethod) -> Self {
+        self.loading = method;
+        self
+    }
+
+    /// Worker threads for the host-side per-board extraction drains.
+    pub fn with_data_plane_threads(mut self, threads: usize) -> Self {
+        self.data_plane_threads = threads;
         self
     }
 
@@ -135,6 +172,14 @@ mod tests {
             MachineSpec::Grid { width: 4, height: 4, wrap: true }.template().n_chips(),
             16
         );
+    }
+
+    #[test]
+    fn loading_defaults_to_scamp() {
+        let c = ToolsConfig::new(MachineSpec::Spinn3);
+        assert_eq!(c.loading, LoadMethod::Scamp);
+        let c = c.with_loading(LoadMethod::FastMulticast);
+        assert_eq!(c.loading, LoadMethod::FastMulticast);
     }
 
     #[test]

@@ -1,103 +1,272 @@
-//! Host-side data extraction (§6.8, Figure 11): the slow SCAMP path and
-//! the fast multicast-stream path, behind one interface.
+//! The bulk data plane (§6.8, Figure 11): fast multicast paths for both
+//! *extraction* (machine → host) and *loading* (host → machine), with
+//! the SCAMP request/response protocol as the slow fallback — all
+//! behind one interface.
 //!
-//! The fast path installs system-level cores outside the user graph —
-//! one reader per used chip, one gatherer on the Ethernet chip — plus
-//! routing entries in a reserved key region, then drives transfers by
-//! SDP command + UDP reassembly with missing-sequence re-requests.
+//! The fast plane installs system-level cores outside the user graph,
+//! **per board**:
+//!
+//! - a *gatherer* on every Ethernet chip, reassembling the word streams
+//!   of that board's chips into sequence-numbered UDP frames for the
+//!   host (extraction);
+//! - a *dispatcher* on every Ethernet chip, fanning the host's
+//!   sequence-numbered UDP frames out as multicast words to the target
+//!   chip (loading);
+//! - a *reader* and a *writer* core on every covered chip, each with a
+//!   2-key-wide stream in a reserved top-of-keyspace region routed
+//!   to/from its board's Ethernet chip.
+//!
+//! Chips are assigned to their **nearest** Ethernet chip
+//! ([`crate::machine::Machine::nearest_ethernet`]), so on a multi-board
+//! machine every board's uplink carries only its own traffic and
+//! transfers to/from different boards overlap in simulated time — the
+//! scaling the E12 benchmark measures. Host-side per-board drains
+//! (frame reassembly) fan out on the [`crate::util::par`] worker pool.
+//!
+//! Both directions recover from frame loss by re-requesting missing
+//! sequence numbers (§6.8: "the missing sequences are then requested
+//! again"); the loss-injection entry points ([`FastPath::read_with_loss`],
+//! [`FastPath::write_with_loss`]) exist so tests can prove recovery is
+//! byte-identical.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::apps::speedup::{
-    self, DataSpeedUpGathererApp, DataSpeedUpReaderApp, GATHERER_BINARY, READER_BINARY,
-    READER_SDP_PORT,
+    self, DataInDispatcherApp, DataInWriterApp, DataSpeedUpGathererApp, DataSpeedUpReaderApp,
+    DISPATCHER_BINARY, GATHERER_BINARY, READER_BINARY, READER_SDP_PORT, WRITER_BINARY,
+    WRITER_SDP_PORT,
 };
 use crate::machine::router::{Route, RoutingEntry};
-use crate::machine::{ChipCoord, CoreLocation};
+use crate::machine::{ChipCoord, CoreLocation, ROUTER_ENTRIES};
 use crate::mapping::router::build_tree;
+use crate::mapping::tags::SystemTagAllocator;
 use crate::simulator::{scamp, SimMachine};
-use crate::transport::{SdpHeader, SdpMessage};
+use crate::transport::{bulk, SdpHeader, SdpMessage};
 use crate::util::bytes::ByteWriter;
 
 /// Reserved top-of-keyspace region for extraction streams; user key
 /// allocation grows from 0, so collision means ~2^31 partitions exist.
 pub const STREAM_KEY_BASE: u32 = 0xFF00_0000;
 
-/// The installed fast path.
+/// Reserved key region for data-in streams (disjoint from extraction;
+/// both sit above `SimConfig::lossless_key_min`, so the fabric treats
+/// the whole plane as flow-controlled, never dropped).
+pub const DATA_IN_KEY_BASE: u32 = 0xFF80_0000;
+
+/// Re-request rounds before a transfer is declared failed.
+const MAX_ATTEMPTS: u32 = 3;
+
+/// Installation options for the bulk data plane.
+#[derive(Debug, Clone)]
+pub struct DataPlaneOptions {
+    /// First UDP port of the per-board pair: board `i` receives
+    /// extraction frames on `port_base + 2i` and exchanges data-in
+    /// frames/reports on `port_base + 2i + 1`.
+    pub port_base: u16,
+    /// Install the extraction half (gatherers + readers). A
+    /// loading-only plane leaves those cores free.
+    pub extraction: bool,
+    /// Install the data-in half (dispatchers + writers). An
+    /// extraction-only plane leaves those cores free.
+    pub data_in: bool,
+    /// Worker threads for the host-side per-board drains (frame
+    /// reassembly); `0` = one per hardware thread.
+    pub threads: usize,
+}
+
+impl Default for DataPlaneOptions {
+    fn default() -> Self {
+        Self { port_base: 17895, extraction: true, data_in: true, threads: 0 }
+    }
+}
+
+/// Statistics of one fast write (or batch of writes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WriteStats {
+    /// Frames sent in first-attempt streams.
+    pub frames_sent: u64,
+    /// Frames re-sent after missing-sequence reports.
+    pub frames_resent: u64,
+}
+
+/// The data-in half of one board's plane.
+struct BoardDataIn {
+    /// Reverse-IP-tagged port the dispatcher receives frames on; also
+    /// the (forward) tag port the board's writers report missing
+    /// sequences to.
+    port: u16,
+    /// IP tag id for writer → host report messages.
+    reply_tag: u8,
+}
+
+/// The per-board system cores and host ports of the plane.
+struct BoardPlane {
+    /// Extraction gatherer, when the extraction half is installed.
+    gatherer: Option<CoreLocation>,
+    extract_port: u16,
+    data_in: Option<BoardDataIn>,
+}
+
+/// The installed bulk data plane.
 pub struct FastPath {
-    /// chip -> (reader core, stream key base).
+    /// Ethernet chip -> that board's plane.
+    boards: BTreeMap<ChipCoord, BoardPlane>,
+    /// chip -> (reader core, extraction stream key).
     readers: BTreeMap<ChipCoord, (CoreLocation, u32)>,
-    gatherer_port: u16,
+    /// chip -> (writer core, data-in stream key).
+    writers: BTreeMap<ChipCoord, (CoreLocation, u32)>,
+    /// Host-side drain pool width.
+    threads: usize,
+}
+
+/// Simulated-time gap the host leaves between successive frames to one
+/// board: the dispatcher must have fanned a frame's words onto the
+/// fabric before the next frame arrives, or two streams' words would
+/// interleave at their writers. 64 words + header at the core's packet
+/// emission spacing, plus margin.
+fn dispatch_frame_gap_ns(sim: &SimMachine) -> u64 {
+    (bulk::WORDS_PER_FRAME as u64 + 4) * sim.config.send_spacing_ns.max(1)
 }
 
 impl FastPath {
-    /// Install readers on `chips`, a gatherer on the Ethernet chip, and
+    /// Install the plane: per-board gatherers (and dispatchers, when
+    /// `opts.data_in`), per-chip readers (and writers) for `chips`, and
     /// the stream routing entries. `free_core` picks an unused core per
     /// chip (the tools know placement occupancy); chips with no spare
-    /// core are skipped — reads from them fall back to the SCAMP path
-    /// (`has_reader` tells the caller which chips are covered).
+    /// core — or whose board's Ethernet chip could not host its system
+    /// cores — are skipped, and transfers there fall back to the SCAMP
+    /// path ([`Self::has_reader`] / [`Self::has_writer`] tell the caller
+    /// which chips are covered). Errors only if *no* board could be set
+    /// up at all.
     pub fn install(
         sim: &mut SimMachine,
         chips: &[ChipCoord],
         mut free_core: impl FnMut(ChipCoord) -> Option<u8>,
-        host_port: u16,
-        iptag: u8,
+        opts: &DataPlaneOptions,
     ) -> anyhow::Result<FastPath> {
         let machine = sim.machine.clone();
-        let eth = machine
-            .ethernet_chips()
-            .next()
-            .map(|c| (c.x, c.y))
-            .ok_or_else(|| anyhow::anyhow!("machine has no ethernet chip"))?;
+        let eths: Vec<ChipCoord> = machine.ethernet_chips().map(|c| (c.x, c.y)).collect();
+        anyhow::ensure!(!eths.is_empty(), "machine has no ethernet chip");
 
-        // Gatherer core on the Ethernet chip (required: without it there
-        // is no fast path at all).
-        let gatherer_core = CoreLocation::new(
-            eth.0,
-            eth.1,
-            free_core(eth).ok_or_else(|| {
-                anyhow::anyhow!("no free core on ethernet chip {eth:?} for the gatherer")
-            })?,
-        );
-        scamp::set_iptag(sim, eth, iptag, "host", host_port, true)?;
-        let mut gregion = BTreeMap::new();
-        let mut w = ByteWriter::new();
-        w.u32(iptag as u32);
-        gregion.insert(0u32, w.finish());
-        scamp::load_app_named(
-            sim,
-            gatherer_core,
-            GATHERER_BINARY,
-            Box::new(DataSpeedUpGathererApp::new()),
-            gregion,
-            BTreeMap::new(),
-        )?;
+        // System tags must coexist with the graph tags already installed.
+        let mut tags = SystemTagAllocator::new();
+        for &eth in &eths {
+            for t in sim.chip(eth)?.iptags.keys() {
+                tags.mark_used(eth, *t);
+            }
+        }
 
-        // One reader per chip + stream routing to the gatherer.
-        let mut readers = BTreeMap::new();
-        let mut extra_entries: BTreeMap<ChipCoord, Vec<RoutingEntry>> = BTreeMap::new();
-        for (i, chip) in chips.iter().enumerate() {
-            let Some(p) = free_core(*chip) else {
-                continue; // fully-packed chip: SCAMP fallback
+        let mut boards: BTreeMap<ChipCoord, BoardPlane> = BTreeMap::new();
+        let mut board_errors: Vec<String> = Vec::new();
+        for (i, &eth) in eths.iter().enumerate() {
+            let extract_port = opts.port_base + 2 * i as u16;
+            let mut install_gatherer = || -> Result<CoreLocation, String> {
+                let p = free_core(eth).ok_or_else(|| {
+                    format!("no free core on ethernet chip {eth:?} for the gatherer")
+                })?;
+                let extract_tag = tags.alloc(eth).map_err(|e| e.to_string())?;
+                let gatherer = CoreLocation::new(eth.0, eth.1, p);
+                scamp::set_iptag(sim, eth, extract_tag, "host", extract_port, true)
+                    .map_err(|e| e.to_string())?;
+                let mut gregion = BTreeMap::new();
+                let mut w = ByteWriter::new();
+                w.u32(extract_tag as u32);
+                gregion.insert(0u32, w.finish());
+                scamp::load_app_named(
+                    sim,
+                    gatherer,
+                    GATHERER_BINARY,
+                    Box::new(DataSpeedUpGathererApp::new()),
+                    gregion,
+                    BTreeMap::new(),
+                )
+                .map_err(|e| e.to_string())?;
+                Ok(gatherer)
             };
-            let core = CoreLocation::new(chip.0, chip.1, p);
-            let key = STREAM_KEY_BASE + (i as u32) * 2;
-            let mut region = BTreeMap::new();
-            let mut w = ByteWriter::new();
-            w.u32(key);
-            region.insert(0u32, w.finish());
-            scamp::load_app_named(
-                sim,
-                core,
-                READER_BINARY,
-                Box::new(DataSpeedUpReaderApp::new()),
-                region,
-                BTreeMap::new(),
-            )?;
-            // Route {key, key|1} from this chip to the gatherer core.
+            let gatherer = if opts.extraction {
+                match install_gatherer() {
+                    Ok(g) => Some(g),
+                    Err(e) => {
+                        board_errors.push(e);
+                        // Extraction was asked for and this board cannot
+                        // serve it: skip the board entirely rather than
+                        // leave it half-installed.
+                        continue;
+                    }
+                }
+            } else {
+                None
+            };
+            let mut install_data_in = || -> Result<BoardDataIn, String> {
+                let p = free_core(eth).ok_or_else(|| {
+                    format!("no free core on ethernet chip {eth:?} for the data-in dispatcher")
+                })?;
+                let reply_tag = tags.alloc(eth).map_err(|e| e.to_string())?;
+                let dispatcher = CoreLocation::new(eth.0, eth.1, p);
+                let port = opts.port_base + 2 * i as u16 + 1;
+                // Never clobber a reverse tag the user graph registered.
+                let taken = sim
+                    .chip(eth)
+                    .map_err(|e| e.to_string())?
+                    .reverse_iptags
+                    .contains_key(&port);
+                if taken {
+                    return Err(format!(
+                        "UDP port {port} on board {eth:?} already has a reverse IP tag"
+                    ));
+                }
+                scamp::set_iptag(sim, eth, reply_tag, "host", port, true)
+                    .map_err(|e| e.to_string())?;
+                scamp::set_reverse_iptag(sim, eth, port, dispatcher).map_err(|e| e.to_string())?;
+                scamp::load_app_named(
+                    sim,
+                    dispatcher,
+                    DISPATCHER_BINARY,
+                    Box::new(DataInDispatcherApp),
+                    BTreeMap::new(),
+                    BTreeMap::new(),
+                )
+                .map_err(|e| e.to_string())?;
+                Ok(BoardDataIn { port, reply_tag })
+            };
+            let data_in = if opts.data_in {
+                match install_data_in() {
+                    Ok(din) => Some(din),
+                    Err(e) => {
+                        board_errors.push(e);
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            if gatherer.is_none() && data_in.is_none() {
+                continue; // nothing was installed on this board
+            }
+            boards.insert(eth, BoardPlane { gatherer, extract_port, data_in });
+        }
+        anyhow::ensure!(
+            !boards.is_empty(),
+            "bulk data plane unavailable on every board: {}",
+            board_errors.join("; ")
+        );
+
+        // Per-chip readers/writers + stream routing, batched into one
+        // table reload per touched chip. A chip is covered only if its
+        // stream's tree can be planned and every touched routing table
+        // still has TCAM room; otherwise the chip is skipped (SCAMP
+        // fallback) — coverage problems never abort the whole plane.
+        let mut readers = BTreeMap::new();
+        let mut writers = BTreeMap::new();
+        let mut extra_entries: BTreeMap<ChipCoord, Vec<RoutingEntry>> = BTreeMap::new();
+        let plan_tree = |source: ChipCoord,
+                         dest: CoreLocation,
+                         key: u32|
+         -> anyhow::Result<Vec<(ChipCoord, RoutingEntry)>> {
             let mut dests = BTreeMap::new();
-            dests.insert(eth, std::iter::once(gatherer_core.p).collect());
-            let tree = build_tree(&machine, *chip, &dests)?;
+            dests.insert(dest.chip(), std::iter::once(dest.p).collect());
+            let tree = build_tree(&machine, source, &dests)?;
+            let mut out = Vec::new();
             for (node_chip, node) in &tree.nodes {
                 let mut route = Route::EMPTY;
                 for d in &node.out_links {
@@ -109,14 +278,89 @@ impl FastPath {
                 if route.is_empty() {
                     continue;
                 }
-                extra_entries
-                    .entry(*node_chip)
-                    .or_default()
-                    .push(RoutingEntry::new(key, !1u32, route));
+                out.push((*node_chip, RoutingEntry::new(key, !1u32, route)));
             }
-            readers.insert(*chip, (core, key));
+            Ok(out)
+        };
+        let fits = |sim: &SimMachine,
+                    extra: &BTreeMap<ChipCoord, Vec<RoutingEntry>>,
+                    planned: &[(ChipCoord, RoutingEntry)]|
+         -> bool {
+            let mut add: BTreeMap<ChipCoord, usize> = BTreeMap::new();
+            for (c, _) in planned {
+                *add.entry(*c).or_default() += 1;
+            }
+            add.iter().all(|(c, n)| {
+                let loaded = sim.chip(*c).map(|ch| ch.table.len()).unwrap_or(ROUTER_ENTRIES);
+                let pending = extra.get(c).map(Vec::len).unwrap_or(0);
+                loaded + pending + n <= ROUTER_ENTRIES
+            })
+        };
+        for (i, chip) in chips.iter().enumerate() {
+            let Some(board) = machine.nearest_ethernet(*chip) else {
+                continue;
+            };
+            let Some(plane) = boards.get(&board) else {
+                continue; // board without system cores: SCAMP fallback
+            };
+            // Extraction reader: chip -> board gatherer.
+            if let Some(gatherer) = plane.gatherer {
+                let key = STREAM_KEY_BASE + (i as u32) * 2;
+                if let Ok(planned) = plan_tree(*chip, gatherer, key) {
+                    if fits(sim, &extra_entries, &planned) {
+                        if let Some(p) = free_core(*chip) {
+                            let core = CoreLocation::new(chip.0, chip.1, p);
+                            let mut region = BTreeMap::new();
+                            let mut w = ByteWriter::new();
+                            w.u32(key);
+                            region.insert(0u32, w.finish());
+                            scamp::load_app_named(
+                                sim,
+                                core,
+                                READER_BINARY,
+                                Box::new(DataSpeedUpReaderApp::new()),
+                                region,
+                                BTreeMap::new(),
+                            )?;
+                            for (c, e) in planned {
+                                extra_entries.entry(c).or_default().push(e);
+                            }
+                            readers.insert(*chip, (core, key));
+                        }
+                    }
+                }
+            }
+            // Data-in writer: board dispatcher -> chip.
+            if let Some(din) = &plane.data_in {
+                if let Some(p) = free_core(*chip) {
+                    let core = CoreLocation::new(chip.0, chip.1, p);
+                    let key = DATA_IN_KEY_BASE + (i as u32) * 2;
+                    if let Ok(planned) = plan_tree(board, core, key) {
+                        if fits(sim, &extra_entries, &planned) {
+                            let mut region = BTreeMap::new();
+                            let mut w = ByteWriter::new();
+                            w.u32(key);
+                            w.u32(din.reply_tag as u32);
+                            region.insert(0u32, w.finish());
+                            scamp::load_app_named(
+                                sim,
+                                core,
+                                WRITER_BINARY,
+                                Box::new(DataInWriterApp::new()),
+                                region,
+                                BTreeMap::new(),
+                            )?;
+                            for (c, e) in planned {
+                                extra_entries.entry(c).or_default().push(e);
+                            }
+                            writers.insert(*chip, (core, key));
+                        }
+                    }
+                }
+            }
         }
-        // Append the stream entries to the already-loaded tables.
+        // Append the stream entries to the already-loaded tables; the
+        // capacity planning above guarantees these reloads fit.
         for (chip, entries) in extra_entries {
             let mut table = sim.chip(chip)?.table.clone();
             for e in entries {
@@ -124,8 +368,23 @@ impl FastPath {
             }
             scamp::load_routing_table(sim, chip, table)?;
         }
-        Ok(FastPath { readers, gatherer_port: host_port })
+        Ok(FastPath { boards, readers, writers, threads: opts.threads })
     }
+
+    /// The board (Ethernet chip) serving `chip`, with its plane.
+    fn plane_of(&self, sim: &SimMachine, chip: ChipCoord) -> anyhow::Result<(ChipCoord, &BoardPlane)> {
+        let board = sim
+            .machine
+            .nearest_ethernet(chip)
+            .ok_or_else(|| anyhow::anyhow!("no ethernet chip for {chip:?}"))?;
+        let plane = self
+            .boards
+            .get(&board)
+            .ok_or_else(|| anyhow::anyhow!("no data plane on board {board:?}"))?;
+        Ok((board, plane))
+    }
+
+    // -- extraction (machine -> host) ----------------------------------------
 
     /// Read `len` bytes from `addr` on `chip` through the stream
     /// protocol, re-requesting missing frames up to 3 times.
@@ -136,18 +395,35 @@ impl FastPath {
         addr: u32,
         len: usize,
     ) -> anyhow::Result<Vec<u8>> {
-        let (reader, _key) = self
+        self.read_with_loss(sim, chip, addr, len, |_, _| false)
+    }
+
+    /// [`Self::read`] with fault injection: `drop(seq, attempt)` returning
+    /// `true` discards that received frame, as if the UDP datagram had
+    /// been lost on the wire. Recovery must still produce byte-identical
+    /// data — the loss suite proves it does.
+    pub fn read_with_loss(
+        &self,
+        sim: &mut SimMachine,
+        chip: ChipCoord,
+        addr: u32,
+        len: usize,
+        mut drop: impl FnMut(u32, u32) -> bool,
+    ) -> anyhow::Result<Vec<u8>> {
+        let (reader, _key) = *self
             .readers
             .get(&chip)
             .ok_or_else(|| anyhow::anyhow!("no fast-path reader on {chip:?}"))?;
-        let header = SdpHeader::to_core(*reader, READER_SDP_PORT);
+        let (_board, plane) = self.plane_of(sim, chip)?;
+        let port = plane.extract_port;
+        let header = SdpHeader::to_core(reader, READER_SDP_PORT);
         sim.host_send_sdp(SdpMessage::new(
             header,
             speedup::encode_read_command(addr, len as u32),
         ))?;
         sim.run_until_idle()?;
-        let mut frames = sim.take_host_udp(self.gatherer_port);
-        for _attempt in 0..3 {
+        let mut frames = filter_dropped(sim.take_host_udp(port), 0, &mut drop);
+        for attempt in 1..=MAX_ATTEMPTS {
             let (data, missing) = speedup::reassemble(&frames, len);
             if missing.is_empty() {
                 return Ok(data);
@@ -160,7 +436,7 @@ impl FastPath {
                     speedup::encode_rerequest(addr, len as u32, chunk),
                 ))?;
                 sim.run_until_idle()?;
-                frames.extend(sim.take_host_udp(self.gatherer_port));
+                frames.extend(filter_dropped(sim.take_host_udp(port), attempt, &mut drop));
             }
         }
         let (data, missing) = speedup::reassemble(&frames, len);
@@ -172,9 +448,374 @@ impl FastPath {
         Ok(data)
     }
 
+    /// Read a batch of transfers, sharded per board: one transfer per
+    /// board streams at a time, so on a multi-board machine every
+    /// board's uplink is busy concurrently (the simulated-time scaling
+    /// of E12), and the host-side frame reassembly of each round fans
+    /// out on the [`crate::util::par`] pool. Results come back in
+    /// request order.
+    pub fn read_many(
+        &self,
+        sim: &mut SimMachine,
+        reqs: &[(ChipCoord, u32, usize)],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); reqs.len()];
+        let mut by_board: BTreeMap<ChipCoord, VecDeque<usize>> = BTreeMap::new();
+        for (idx, (chip, _, _)) in reqs.iter().enumerate() {
+            anyhow::ensure!(
+                self.readers.contains_key(chip),
+                "no fast-path reader on {chip:?}"
+            );
+            let (board, _) = self.plane_of(sim, *chip)?;
+            by_board.entry(board).or_default().push_back(idx);
+        }
+        loop {
+            // One transfer per board this round.
+            let mut round: Vec<(usize, u16)> = Vec::new();
+            for (board, queue) in by_board.iter_mut() {
+                let Some(idx) = queue.pop_front() else { continue };
+                let (chip, addr, len) = reqs[idx];
+                let (reader, _) = self.readers[&chip];
+                let header = SdpHeader::to_core(reader, READER_SDP_PORT);
+                sim.host_send_sdp(SdpMessage::new(
+                    header,
+                    speedup::encode_read_command(addr, len as u32),
+                ))?;
+                round.push((idx, self.boards[board].extract_port));
+            }
+            if round.is_empty() {
+                break;
+            }
+            // All boards stream concurrently in simulated time.
+            sim.run_until_idle()?;
+            let collected: Vec<(usize, Vec<Vec<u8>>)> = round
+                .iter()
+                .map(|(idx, port)| (*idx, sim.take_host_udp(*port)))
+                .collect();
+            // Host-side per-board drains on the worker pool.
+            let assembled = crate::util::par::par_map(self.threads, &collected, |_, item| {
+                let (idx, frames) = item;
+                (*idx, speedup::reassemble(frames, reqs[*idx].2))
+            });
+            for (idx, (data, missing)) in assembled {
+                if missing.is_empty() {
+                    out[idx] = data;
+                } else {
+                    // Rare (the plane's keys are lossless on the fabric):
+                    // finish this transfer serially with re-requests.
+                    let (chip, addr, len) = reqs[idx];
+                    out[idx] = self.read(sim, chip, addr, len)?;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // -- loading (host -> machine) -------------------------------------------
+
+    /// Write `data` to `addr` on `chip` through the data-in stream.
+    pub fn write(
+        &self,
+        sim: &mut SimMachine,
+        chip: ChipCoord,
+        addr: u32,
+        data: &[u8],
+    ) -> anyhow::Result<WriteStats> {
+        self.write_with_loss(sim, chip, addr, data, |_, _| false)
+    }
+
+    /// [`Self::write`] with fault injection: `drop(seq, attempt)`
+    /// returning `true` suppresses that outbound frame, as if the UDP
+    /// datagram had been lost. The writer's missing-sequence report
+    /// drives re-sends until the SDRAM image is complete.
+    pub fn write_with_loss(
+        &self,
+        sim: &mut SimMachine,
+        chip: ChipCoord,
+        addr: u32,
+        data: &[u8],
+        mut drop: impl FnMut(u32, u32) -> bool,
+    ) -> anyhow::Result<WriteStats> {
+        let mut stats = WriteStats::default();
+        if data.is_empty() {
+            return Ok(stats);
+        }
+        let (writer, key) = *self
+            .writers
+            .get(&chip)
+            .ok_or_else(|| anyhow::anyhow!("no data-in writer on {chip:?}"))?;
+        let (board, plane) = self.plane_of(sim, chip)?;
+        let din = plane
+            .data_in
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no data-in dispatcher on board {board:?}"))?;
+        let port = din.port;
+        sim.host_send_sdp(SdpMessage::new(
+            SdpHeader::to_core(writer, WRITER_SDP_PORT),
+            bulk::encode_write_command(addr, data.len() as u32),
+        ))?;
+        sim.run_until_idle()?;
+        let frame_gap = dispatch_frame_gap_ns(sim);
+        let mut slot = 0u64;
+        for seq in 0..bulk::frames_of(data.len()) as u32 {
+            if !drop(seq, 0) {
+                sim.host_send_udp_after(
+                    board,
+                    port,
+                    bulk::encode_data_frame(key, seq, &data[bulk::frame_range(seq, data.len())]),
+                    slot,
+                )?;
+                stats.frames_sent += 1;
+            }
+            // A lost frame still occupied its slot on the wire.
+            slot += frame_gap;
+        }
+        sim.run_until_idle()?;
+        self.finish_write(sim, chip, data, &mut drop, &mut stats)
+    }
+
+    /// Drive one open write session to completion: query the writer for
+    /// missing sequences and re-send them, up to [`MAX_ATTEMPTS`] rounds.
+    fn finish_write(
+        &self,
+        sim: &mut SimMachine,
+        chip: ChipCoord,
+        data: &[u8],
+        drop: &mut impl FnMut(u32, u32) -> bool,
+        stats: &mut WriteStats,
+    ) -> anyhow::Result<WriteStats> {
+        let (writer, key) = self.writers[&chip];
+        let (board, plane) = self.plane_of(sim, chip)?;
+        let port = plane.data_in.as_ref().expect("session implies dispatcher").port;
+        let frame_gap = dispatch_frame_gap_ns(sim);
+        for attempt in 1..=MAX_ATTEMPTS {
+            let missing = self.query_missing(sim, writer, port)?;
+            if missing.is_empty() {
+                return Ok(*stats);
+            }
+            let mut slot = 0u64;
+            for seq in missing {
+                if !drop(seq, attempt) {
+                    sim.host_send_udp_after(
+                        board,
+                        port,
+                        bulk::encode_data_frame(
+                            key,
+                            seq,
+                            &data[bulk::frame_range(seq, data.len())],
+                        ),
+                        slot,
+                    )?;
+                    stats.frames_resent += 1;
+                }
+                slot += frame_gap;
+            }
+            sim.run_until_idle()?;
+        }
+        let missing = self.query_missing(sim, writer, port)?;
+        anyhow::ensure!(
+            missing.is_empty(),
+            "fast write to {chip:?} still missing {} frames after retries",
+            missing.len()
+        );
+        Ok(*stats)
+    }
+
+    /// Ask a writer for the missing sequences of its current session.
+    fn query_missing(
+        &self,
+        sim: &mut SimMachine,
+        writer: CoreLocation,
+        port: u16,
+    ) -> anyhow::Result<Vec<u32>> {
+        sim.host_send_sdp(SdpMessage::new(
+            SdpHeader::to_core(writer, WRITER_SDP_PORT),
+            bulk::encode_check_command(),
+        ))?;
+        sim.run_until_idle()?;
+        let msgs = sim.take_host_udp(port);
+        anyhow::ensure!(!msgs.is_empty(), "no missing-sequence report from {writer}");
+        let mut total = 0u32;
+        let mut seqs = Vec::new();
+        for m in &msgs {
+            let (t, s) = bulk::decode_missing_report(m)?;
+            total = t;
+            seqs.extend(s);
+        }
+        anyhow::ensure!(
+            seqs.len() == total as usize,
+            "incomplete missing-sequence report ({} of {total})",
+            seqs.len()
+        );
+        seqs.sort_unstable();
+        Ok(seqs)
+    }
+
+    /// Write a batch of transfers through the data-in streams. Transfers
+    /// to *different* chips are interleaved frame-by-frame: each board's
+    /// dispatcher paces its own stream (so per-board throughput is the
+    /// dispatcher fan-out rate) while the host NIC paces the aggregate —
+    /// on a multi-board machine the boards load concurrently in
+    /// simulated time. Multiple transfers to one chip run as successive
+    /// write sessions.
+    pub fn write_many(
+        &self,
+        sim: &mut SimMachine,
+        reqs: &[(ChipCoord, u32, &[u8])],
+    ) -> anyhow::Result<WriteStats> {
+        let mut stats = WriteStats::default();
+        let mut by_chip: BTreeMap<ChipCoord, VecDeque<usize>> = BTreeMap::new();
+        for (idx, (chip, _, data)) in reqs.iter().enumerate() {
+            if data.is_empty() {
+                continue;
+            }
+            anyhow::ensure!(
+                self.writers.contains_key(chip),
+                "no data-in writer on {chip:?}"
+            );
+            let (_board, plane) = self.plane_of(sim, *chip)?;
+            anyhow::ensure!(
+                plane.data_in.is_some(),
+                "no data-in dispatcher for {chip:?}"
+            );
+            by_chip.entry(*chip).or_default().push_back(idx);
+        }
+        loop {
+            // One open session per chip per wave.
+            let wave: Vec<usize> = by_chip.values_mut().filter_map(VecDeque::pop_front).collect();
+            if wave.is_empty() {
+                break;
+            }
+            self.write_wave(sim, reqs, &wave, &mut stats)?;
+        }
+        Ok(stats)
+    }
+
+    fn write_wave(
+        &self,
+        sim: &mut SimMachine,
+        reqs: &[(ChipCoord, u32, &[u8])],
+        wave: &[usize],
+        stats: &mut WriteStats,
+    ) -> anyhow::Result<()> {
+        // Open every session.
+        for &idx in wave {
+            let (chip, addr, data) = reqs[idx];
+            let (writer, _) = self.writers[&chip];
+            sim.host_send_sdp(SdpMessage::new(
+                SdpHeader::to_core(writer, WRITER_SDP_PORT),
+                bulk::encode_write_command(addr, data.len() as u32),
+            ))?;
+        }
+        sim.run_until_idle()?;
+        // Lay the frame schedule out as future events: per-board cursors
+        // keep one board's frames a dispatcher-window apart, the host
+        // cursor models NIC serialisation across boards. One
+        // run_until_idle then lets all boards stream concurrently.
+        struct Cursor {
+            idx: usize,
+            board: ChipCoord,
+            port: u16,
+            key: u32,
+            next: u32,
+            frames: u32,
+        }
+        let frame_gap = dispatch_frame_gap_ns(sim);
+        let host_gap = sim.config.wire.host_udp_gap_ns;
+        let mut cursors = Vec::with_capacity(wave.len());
+        for &idx in wave {
+            let (chip, _, data) = reqs[idx];
+            let (board, plane) = self.plane_of(sim, chip)?;
+            cursors.push(Cursor {
+                idx,
+                board,
+                port: plane.data_in.as_ref().expect("checked in write_many").port,
+                key: self.writers[&chip].1,
+                next: 0,
+                frames: bulk::frames_of(data.len()) as u32,
+            });
+        }
+        let mut host_free = 0u64;
+        let mut board_free: BTreeMap<ChipCoord, u64> = BTreeMap::new();
+        let mut active = true;
+        while active {
+            active = false;
+            for cur in cursors.iter_mut() {
+                if cur.next >= cur.frames {
+                    continue;
+                }
+                active = true;
+                let slot = host_free.max(board_free.get(&cur.board).copied().unwrap_or(0));
+                let (_, _, data) = reqs[cur.idx];
+                sim.host_send_udp_after(
+                    cur.board,
+                    cur.port,
+                    bulk::encode_data_frame(
+                        cur.key,
+                        cur.next,
+                        &data[bulk::frame_range(cur.next, data.len())],
+                    ),
+                    slot,
+                )?;
+                host_free = slot + host_gap;
+                board_free.insert(cur.board, slot + frame_gap);
+                stats.frames_sent += 1;
+                cur.next += 1;
+            }
+        }
+        sim.run_until_idle()?;
+        // Verify every session (normally one empty report each).
+        for &idx in wave {
+            let (chip, _, data) = reqs[idx];
+            self.finish_write(sim, chip, data, &mut |_, _| false, stats)?;
+        }
+        Ok(())
+    }
+
+    // -- coverage ------------------------------------------------------------
+
+    /// Whether `chip` has a fast extraction reader.
     pub fn has_reader(&self, chip: ChipCoord) -> bool {
         self.readers.contains_key(&chip)
     }
+
+    /// Whether `chip` has a fast data-in writer.
+    pub fn has_writer(&self, chip: ChipCoord) -> bool {
+        self.writers.contains_key(&chip)
+    }
+
+    /// The reader core on `chip`, if covered (tests, provenance).
+    pub fn reader_of(&self, chip: ChipCoord) -> Option<CoreLocation> {
+        self.readers.get(&chip).map(|(c, _)| *c)
+    }
+
+    /// The writer core on `chip`, if covered (tests, provenance).
+    pub fn writer_of(&self, chip: ChipCoord) -> Option<CoreLocation> {
+        self.writers.get(&chip).map(|(c, _)| *c)
+    }
+
+    /// Boards with an installed plane.
+    pub fn n_boards(&self) -> usize {
+        self.boards.len()
+    }
+}
+
+/// Apply host-side loss injection to a batch of received frames.
+fn filter_dropped(
+    frames: Vec<Vec<u8>>,
+    attempt: u32,
+    drop: &mut impl FnMut(u32, u32) -> bool,
+) -> Vec<Vec<u8>> {
+    frames
+        .into_iter()
+        .filter(|f| {
+            let seq = f
+                .get(..4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .unwrap_or(u32::MAX);
+            !drop(seq, attempt)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -202,10 +843,40 @@ mod tests {
         let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
         let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
         scamp::write_sdram(&mut sim, chip, addr, &data).unwrap();
-        let fp = FastPath::install(&mut sim, &[chip], free_core_picker(), 17895, 7).unwrap();
+        let fp = FastPath::install(
+            &mut sim,
+            &[chip],
+            free_core_picker(),
+            &DataPlaneOptions::default(),
+        )
+        .unwrap();
         scamp::signal_start(&mut sim).unwrap();
         let got = fp.read(&mut sim, chip, addr, data.len()).unwrap();
         assert_eq!(got, data);
+    }
+
+    #[test]
+    fn fast_write_round_trips_data() {
+        let m = MachineBuilder::spinn5().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let chip = (6, 3);
+        let data: Vec<u8> = (0..70_001u32).map(|i| (i % 249) as u8).collect();
+        let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+        let fp = FastPath::install(
+            &mut sim,
+            &[chip],
+            free_core_picker(),
+            &DataPlaneOptions::default(),
+        )
+        .unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        let stats = fp.write(&mut sim, chip, addr, &data).unwrap();
+        assert_eq!(stats.frames_sent as usize, bulk::frames_of(data.len()));
+        assert_eq!(stats.frames_resent, 0, "lossless fabric needs no re-sends");
+        assert_eq!(
+            scamp::read_sdram(&mut sim, chip, addr, data.len()).unwrap(),
+            data
+        );
     }
 
     #[test]
@@ -219,8 +890,13 @@ mod tests {
         let near = (0, 0);
         let a_far = scamp::alloc_sdram(&mut sim, far, len as u32).unwrap();
         let a_near = scamp::alloc_sdram(&mut sim, near, len as u32).unwrap();
-        let fp =
-            FastPath::install(&mut sim, &[far, near], free_core_picker(), 17895, 7).unwrap();
+        let fp = FastPath::install(
+            &mut sim,
+            &[far, near],
+            free_core_picker(),
+            &DataPlaneOptions::default(),
+        )
+        .unwrap();
         scamp::signal_start(&mut sim).unwrap();
 
         let t0 = sim.now_ns();
@@ -248,7 +924,33 @@ mod tests {
     fn missing_reader_errors() {
         let m = MachineBuilder::spinn3().build();
         let mut sim = SimMachine::boot(m, SimConfig::default());
-        let fp = FastPath::install(&mut sim, &[(0, 0)], free_core_picker(), 17895, 7).unwrap();
+        let fp = FastPath::install(
+            &mut sim,
+            &[(0, 0)],
+            free_core_picker(),
+            &DataPlaneOptions::default(),
+        )
+        .unwrap();
         assert!(fp.read(&mut sim, (1, 1), 0x6000_0000, 4).is_err());
+        assert!(fp.write(&mut sim, (1, 1), 0x6000_0000, &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn every_board_gets_a_plane() {
+        let m = MachineBuilder::triads(1, 1).build();
+        let mut sim = SimMachine::boot(m.clone(), SimConfig::default());
+        let chips: Vec<ChipCoord> = m.ethernet_chips().map(|c| (c.x, c.y)).collect();
+        let fp = FastPath::install(
+            &mut sim,
+            &chips,
+            free_core_picker(),
+            &DataPlaneOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(fp.n_boards(), 3, "one plane per ethernet chip");
+        for chip in &chips {
+            assert!(fp.has_reader(*chip));
+            assert!(fp.has_writer(*chip));
+        }
     }
 }

@@ -29,7 +29,7 @@ use crate::machine::MachineBuilder;
 use crate::mapping::{map_graph, MappingConfig};
 use crate::simulator::{scamp, CoreApp, CoreCtx, FabricMode, SimConfig, SimMachine};
 use crate::util::json::Json;
-use crate::util::SplitMix64;
+use crate::util::{fnv1a_64_extend as fnv1a, SplitMix64, FNV_OFFSET};
 
 /// Which E11 workload to run.
 #[derive(Debug, Clone, Copy)]
@@ -148,16 +148,6 @@ pub fn run_fabric_probe(
 
 // ---------------------------------------------------------------------------
 // digesting
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-fn fnv1a(h: &mut u64, bytes: &[u8]) {
-    for &b in bytes {
-        *h ^= b as u64;
-        *h = h.wrapping_mul(FNV_PRIME);
-    }
-}
 
 fn fnv1a_u64(h: &mut u64, v: u64) {
     fnv1a(h, &v.to_le_bytes());

@@ -14,8 +14,8 @@ mod provenance;
 mod tools;
 
 pub use buffer::{plan_run_cycles, RunCyclePlan};
-pub use config::{ExtractionMethod, MachineSpec, ToolsConfig};
-pub use extraction::FastPath;
+pub use config::{ExtractionMethod, LoadMethod, MachineSpec, ToolsConfig};
+pub use extraction::{DataPlaneOptions, FastPath, WriteStats};
 pub use live::{LiveEventListener, LiveInjector};
 pub use provenance::{ProvenanceReport, VertexProvenance};
 pub use tools::SpiNNTools;

@@ -15,8 +15,8 @@ use crate::runtime::Runtime;
 use crate::simulator::{scamp, CoreState, SimMachine};
 
 use super::buffer::{plan_run_cycles, RunCyclePlan};
-use super::config::{ExtractionMethod, ToolsConfig};
-use super::extraction::FastPath;
+use super::config::{ExtractionMethod, LoadMethod, ToolsConfig};
+use super::extraction::{DataPlaneOptions, FastPath};
 use super::provenance::ProvenanceReport;
 
 /// Everything that exists once a graph has been mapped and loaded.
@@ -27,6 +27,10 @@ struct RunState {
     mapping: Mapping,
     plan: RunCyclePlan,
     fast_path: Option<FastPath>,
+    /// Why the bulk data plane could not be installed, when it was
+    /// wanted but unavailable — surfaced through the provenance report
+    /// rather than silently falling back to SCAMP.
+    data_plane_error: Option<String>,
     /// Host-side store of extracted recordings: (vertex, channel) -> data.
     recordings: BTreeMap<(VertexId, u32), Vec<u8>>,
     labels: Vec<(String, CoreLocation)>,
@@ -248,30 +252,15 @@ impl SpiNNTools {
         for rtag in mapping.reverse_iptags.values() {
             scamp::set_reverse_iptag(&mut sim, rtag.board, rtag.port, rtag.destination)?;
         }
-        let mut labels = Vec::new();
-        for (vid, vertex) in run_graph.vertices() {
-            if vertex.virtual_link().is_some() {
-                continue;
-            }
-            let loc = mapping.placement(vid).unwrap();
-            labels.push((vertex.label(), loc));
-            let app = self.registry.create(&vertex.binary_name())?;
-            let mut recording_sizes = BTreeMap::new();
-            if let Some(bytes) = plan.recording_bytes.get(&vid) {
-                recording_sizes.insert(0u32, *bytes as u32);
-            }
-            scamp::load_app_named(
-                &mut sim,
-                loc,
-                &vertex.binary_name(),
-                app,
-                region_data.remove(&vid).unwrap_or_default(),
-                recording_sizes,
-            )?;
-        }
 
-        // Fast extraction cores (outside the user graph).
-        let fast_path = if self.config.extraction == ExtractionMethod::FastMulticast {
+        // Bulk data plane (system cores outside the user graph) — set up
+        // before app loading so region data can ride the fast data-in
+        // streams. A failed install is not swallowed: the reason lands
+        // in the provenance report, and loading/extraction fall back to
+        // the SCAMP paths.
+        let want_plane = self.config.extraction == ExtractionMethod::FastMulticast
+            || self.config.loading == LoadMethod::FastMulticast;
+        let (fast_path, data_plane_error) = if want_plane {
             let chips: Vec<ChipCoord> = mapping.placements.used_chips().into_iter().collect();
             let placements = mapping.placements.clone();
             let machine_for_picker = machine.clone();
@@ -286,14 +275,86 @@ impl SpiNNTools {
                         return Some(p);
                     }
                 }
-                None // fully packed: this chip falls back to SCAMP reads
+                None // fully packed: this chip falls back to the SCAMP paths
             };
-            // If even the gatherer can't be placed (Ethernet chip fully
-            // packed), fall back to SCAMP extraction entirely.
-            FastPath::install(&mut sim, &chips, picker, self.config.fast_port, 8).ok()
+            let opts = DataPlaneOptions {
+                port_base: self.config.fast_port,
+                extraction: self.config.extraction == ExtractionMethod::FastMulticast,
+                data_in: self.config.loading == LoadMethod::FastMulticast,
+                threads: self.config.data_plane_threads,
+            };
+            match FastPath::install(&mut sim, &chips, picker, &opts) {
+                Ok(fp) => {
+                    // Start the plane's system binaries now — the user
+                    // graph is not loaded yet, so only they are Ready —
+                    // else the data-in cores could not serve the region
+                    // load below (their on_start reads the stream config).
+                    scamp::signal_start(&mut sim)?;
+                    (Some(fp), None)
+                }
+                Err(e) => (None, Some(e.to_string())),
+            }
         } else {
-            None
+            (None, None)
         };
+
+        let mut labels = Vec::new();
+        // Region loading + binary attach. Fast data-in batches every
+        // region into one multi-board streamed load; chips without a
+        // writer core take the batched SCAMP fallback.
+        let mut fast_reqs: Vec<(ChipCoord, u32, Vec<u8>)> = Vec::new();
+        for (vid, vertex) in run_graph.vertices() {
+            if vertex.virtual_link().is_some() {
+                continue;
+            }
+            let loc = mapping.placement(vid).unwrap();
+            labels.push((vertex.label(), loc));
+            let app = self.registry.create(&vertex.binary_name())?;
+            let mut recording_sizes = BTreeMap::new();
+            if let Some(bytes) = plan.recording_bytes.get(&vid) {
+                recording_sizes.insert(0u32, *bytes as u32);
+            }
+            let regions = region_data.remove(&vid).unwrap_or_default();
+            let use_fast = self.config.loading == LoadMethod::FastMulticast
+                && fast_path.as_ref().is_some_and(|fp| fp.has_writer(loc.chip()));
+            if self.config.loading == LoadMethod::Scamp {
+                scamp::load_app_named(
+                    &mut sim,
+                    loc,
+                    &vertex.binary_name(),
+                    app,
+                    regions,
+                    recording_sizes,
+                )?;
+            } else {
+                let mut table = BTreeMap::new();
+                for (id, data) in regions {
+                    let addr = scamp::alloc_sdram(&mut sim, loc.chip(), data.len() as u32)?;
+                    table.insert(id, (addr, data.len() as u32));
+                    if use_fast {
+                        fast_reqs.push((loc.chip(), addr, data));
+                    } else if !data.is_empty() {
+                        scamp::write_sdram_batched(&mut sim, loc.chip(), addr, &data)?;
+                    }
+                }
+                scamp::install_app(
+                    &mut sim,
+                    loc,
+                    &vertex.binary_name(),
+                    app,
+                    table,
+                    recording_sizes,
+                )?;
+            }
+        }
+        if !fast_reqs.is_empty() {
+            let fp = fast_path.as_ref().expect("fast_reqs imply an installed plane");
+            let reqs: Vec<(ChipCoord, u32, &[u8])> = fast_reqs
+                .iter()
+                .map(|(chip, addr, data)| (*chip, *addr, data.as_slice()))
+                .collect();
+            fp.write_many(&mut sim, &reqs)?;
+        }
 
         // ---- database + notifications (Figure 8) ------------------------
         let database = MappingDatabase::build(&run_graph, &mapping.placements, &mapping.keys);
@@ -308,6 +369,7 @@ impl SpiNNTools {
             mapping,
             plan,
             fast_path,
+            data_plane_error,
             recordings: BTreeMap::new(),
             labels,
             ticks_done: 0,
@@ -359,18 +421,45 @@ impl SpiNNTools {
         extraction: ExtractionMethod,
     ) -> anyhow::Result<()> {
         let vids: Vec<VertexId> = state.plan.recording_bytes.keys().copied().collect();
+        // Split the pending channels between the paths first, so the
+        // fast reads batch into one per-board-parallel drain.
+        let mut fast: Vec<(VertexId, CoreLocation, u32, usize)> = Vec::new();
+        let mut slow: Vec<(VertexId, CoreLocation, u32, usize)> = Vec::new();
         for vid in vids {
             let loc = state.mapping.placement(vid).unwrap();
             let (addr, written, _) = scamp::recording_info(&state.sim, loc, 0)?;
             if written == 0 {
                 continue;
             }
-            let data = match (&state.fast_path, extraction) {
-                (Some(fp), ExtractionMethod::FastMulticast) if fp.has_reader(loc.chip()) => {
-                    fp.read(&mut state.sim, loc.chip(), addr, written)?
-                }
-                _ => scamp::read_sdram(&mut state.sim, loc.chip(), addr, written)?,
-            };
+            let use_fast = extraction == ExtractionMethod::FastMulticast
+                && state
+                    .fast_path
+                    .as_ref()
+                    .is_some_and(|fp| fp.has_reader(loc.chip()));
+            if use_fast {
+                fast.push((vid, loc, addr, written));
+            } else {
+                slow.push((vid, loc, addr, written));
+            }
+        }
+        if !fast.is_empty() {
+            let reqs: Vec<(ChipCoord, u32, usize)> = fast
+                .iter()
+                .map(|(_, loc, addr, written)| (loc.chip(), *addr, *written))
+                .collect();
+            let fp = state.fast_path.as_ref().unwrap();
+            let datas = fp.read_many(&mut state.sim, &reqs)?;
+            for ((vid, loc, _, _), data) in fast.iter().zip(datas) {
+                state
+                    .recordings
+                    .entry((*vid, 0))
+                    .or_default()
+                    .extend_from_slice(&data);
+                scamp::clear_recording(&mut state.sim, *loc, 0)?;
+            }
+        }
+        for (vid, loc, addr, written) in slow {
+            let data = scamp::read_sdram(&mut state.sim, loc.chip(), addr, written)?;
             state
                 .recordings
                 .entry((vid, 0))
@@ -443,7 +532,15 @@ impl SpiNNTools {
 
     pub fn provenance(&self) -> ProvenanceReport {
         match &self.state {
-            Some(state) => ProvenanceReport::collect(&state.sim, &state.labels),
+            Some(state) => {
+                let mut report = ProvenanceReport::collect(&state.sim, &state.labels);
+                if let Some(e) = &state.data_plane_error {
+                    report.anomalies.push(format!(
+                        "bulk data plane unavailable (SCAMP fallback in use): {e}"
+                    ));
+                }
+                report
+            }
             None => ProvenanceReport::default(),
         }
     }
@@ -634,6 +731,51 @@ mod tests {
             ))
             .unwrap();
         assert!(tools.run_ticks(1).is_err());
+    }
+
+    #[test]
+    fn fast_data_plane_loading_matches_scamp_loading() {
+        // E12 correctness half: the same workload, loaded over the
+        // data-in streams and extracted over per-board readers, produces
+        // byte-identical recordings to the pure-SCAMP flow.
+        // 3x3 leaves room on the Ethernet chip for all four plane cores.
+        let run = |config: ToolsConfig| -> Vec<Vec<u8>> {
+            let mut tools = SpiNNTools::new(config).unwrap();
+            let ids = conway_graph(&mut tools, 3, 3, &[(1, 0), (1, 1), (1, 2)]);
+            tools.run_ticks(4).unwrap();
+            ids.iter().map(|v| tools.recording(*v).to_vec()).collect()
+        };
+        let scamp = run(ToolsConfig::new(MachineSpec::Spinn3));
+        let fast = run(ToolsConfig::new(MachineSpec::Spinn3)
+            .with_loading(LoadMethod::FastMulticast)
+            .with_extraction(ExtractionMethod::FastMulticast));
+        let batched =
+            run(ToolsConfig::new(MachineSpec::Spinn3).with_loading(LoadMethod::ScampBatched));
+        assert_eq!(scamp, fast, "data plane changed the simulation");
+        assert_eq!(scamp, batched, "batched loading changed the simulation");
+    }
+
+    #[test]
+    fn failed_plane_install_lands_in_provenance() {
+        // Pack every application core so the plane has nowhere to live:
+        // the run must still succeed over SCAMP, and the report must say
+        // why the fast path is absent (no silent `.ok()` fallback).
+        let mut tools = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3).with_extraction(ExtractionMethod::FastMulticast),
+        )
+        .unwrap();
+        let ids = conway_graph(&mut tools, 4, 17, &[(1, 5)]);
+        assert_eq!(ids.len(), 68, "exactly the machine's application cores");
+        tools.run_ticks(2).unwrap();
+        let report = tools.provenance();
+        assert!(
+            report
+                .anomalies
+                .iter()
+                .any(|a| a.contains("bulk data plane unavailable")),
+            "anomalies: {:?}",
+            report.anomalies
+        );
     }
 
     #[test]

@@ -8,11 +8,12 @@
 //!   ([`graph`]), the mapping stack ([`mapping`]: splitting, placement,
 //!   NER routing, key/tag allocation, routing-table generation and
 //!   ordered-covering compression), the Figure-10 algorithm execution
-//!   engine ([`algorithms`]), loading/run control/extraction ([`front`]),
-//!   and — because no physical SpiNNaker hardware is available — a
-//!   discrete-event simulator of the machine itself ([`simulator`]) with
-//!   the real board geometry, router TCAM semantics, SCAMP monitor
-//!   protocol and wire bandwidth models ([`machine`], [`transport`]).
+//!   engine ([`algorithms`]), loading/run control/extraction including
+//!   the per-board bulk data plane of §6.8 ([`front`]), and — because
+//!   no physical SpiNNaker hardware is available — a discrete-event
+//!   simulator of the machine itself ([`simulator`]) with the real
+//!   board geometry, router TCAM semantics, SCAMP monitor protocol and
+//!   wire bandwidth models ([`machine`], [`transport`]).
 //! - **L2 (build-time JAX, `python/compile/model.py`):** the per-core
 //!   compute graphs (LIF population step, Conway tile step, Poisson
 //!   thinning), AOT-lowered once to HLO text in `artifacts/`.

@@ -89,7 +89,7 @@ fn snn(scale: f64, run_ms: u64) -> anyhow::Result<()> {
 }
 
 fn extract_bench() -> anyhow::Result<()> {
-    use spinntools::front::FastPath;
+    use spinntools::front::{DataPlaneOptions, FastPath};
     use spinntools::simulator::{scamp, SimConfig, SimMachine};
     let machine = MachineBuilder::spinn5().build();
     let mut sim = SimMachine::boot(machine, SimConfig::default());
@@ -104,8 +104,7 @@ fn extract_bench() -> anyhow::Result<()> {
             *n -= 1;
             Some(c)
         },
-        17895,
-        7,
+        &DataPlaneOptions::default(),
     )?;
     scamp::signal_start(&mut sim)?;
     let mbps = |bytes: usize, ns: u64| bytes as f64 * 8.0 / (ns as f64 / 1e9) / 1e6;

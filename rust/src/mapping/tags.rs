@@ -89,6 +89,43 @@ fn alloc_tag(next_tag: &mut BTreeMap<ChipCoord, u8>, board: ChipCoord) -> anyhow
     Ok(out)
 }
 
+/// Per-board allocation of *system-level* IP tags — tags for cores the
+/// tools install outside the user graph (the bulk data plane's gatherer
+/// and data-in reply channels). Unlike [`allocate_tags`], which owns the
+/// whole tag space during mapping, this allocator starts from the tags
+/// already committed on each board (seeded with [`mark_used`]) and hands
+/// out the remaining ids, so system tags never collide with graph tags.
+///
+/// [`mark_used`]: SystemTagAllocator::mark_used
+#[derive(Debug, Clone, Default)]
+pub struct SystemTagAllocator {
+    used: BTreeMap<ChipCoord, std::collections::BTreeSet<u8>>,
+}
+
+impl SystemTagAllocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `tag` on `board` is already taken (typically read
+    /// back from the machine's installed tag tables).
+    pub fn mark_used(&mut self, board: ChipCoord, tag: u8) {
+        self.used.entry(board).or_default().insert(tag);
+    }
+
+    /// Claim the lowest free tag id on `board`.
+    pub fn alloc(&mut self, board: ChipCoord) -> anyhow::Result<u8> {
+        let used = self.used.entry(board).or_default();
+        for t in 1..=IPTAGS_PER_BOARD as u8 {
+            if !used.contains(&t) {
+                used.insert(t);
+                return Ok(t);
+            }
+        }
+        anyhow::bail!("board {board:?} out of IP tags ({IPTAGS_PER_BOARD} available)")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use std::any::Any;
@@ -183,6 +220,27 @@ mod tests {
         }
         let p = placer::place(&m, &g).unwrap();
         assert!(allocate_tags(&m, &g, &p).is_err());
+    }
+
+    #[test]
+    fn system_tags_avoid_marked_ids() {
+        let mut alloc = SystemTagAllocator::new();
+        alloc.mark_used((0, 0), 1);
+        alloc.mark_used((0, 0), 3);
+        assert_eq!(alloc.alloc((0, 0)).unwrap(), 2);
+        assert_eq!(alloc.alloc((0, 0)).unwrap(), 4);
+        // An untouched board starts from 1.
+        assert_eq!(alloc.alloc((4, 8)).unwrap(), 1);
+    }
+
+    #[test]
+    fn system_tags_exhaust_per_board() {
+        let mut alloc = SystemTagAllocator::new();
+        for _ in 0..IPTAGS_PER_BOARD {
+            alloc.alloc((0, 0)).unwrap();
+        }
+        assert!(alloc.alloc((0, 0)).is_err());
+        assert!(alloc.alloc((4, 8)).is_ok(), "other boards unaffected");
     }
 
     #[test]

@@ -72,6 +72,17 @@ pub struct WireModel {
     pub p2p_per_hop_ns: u64,
     /// Latency of one UDP frame between host and board.
     pub udp_frame_ns: u64,
+    /// Chunks per pipelined window in *batched* SCAMP writes
+    /// (`scamp::write_sdram_batched`): in-window chunks stream at half
+    /// the round-trip cost and only the window boundary pays a full
+    /// acknowledged RTT. `1` degenerates to the unbatched cost.
+    pub scp_pipeline_window: u64,
+    /// Host NIC serialisation gap between successive outbound UDP
+    /// frames — the *aggregate* data-in ceiling across boards (per-board
+    /// throughput is bounded by the dispatcher core's fan-out rate, see
+    /// `front::extraction`). 5 µs/frame ≈ 400 Mb/s ≈ gigabit Ethernet
+    /// with headroom.
+    pub host_udp_gap_ns: u64,
 }
 
 impl Default for WireModel {
@@ -83,6 +94,8 @@ impl Default for WireModel {
             p2p_read_penalty_ns: 744_000,
             p2p_per_hop_ns: 4_000,
             udp_frame_ns: 50_000,
+            scp_pipeline_window: 8,
+            host_udp_gap_ns: 5_000,
         }
     }
 }
@@ -945,7 +958,22 @@ impl SimMachine {
     /// Host → machine UDP (reverse IP tag path, §3/§6.9): deliver the
     /// frame as SDP to the core registered for `port` on `board`.
     pub fn host_send_udp(&mut self, board: ChipCoord, port: u16, data: Vec<u8>) -> anyhow::Result<()> {
-        let now = self.time_ns;
+        self.host_send_udp_after(board, port, data, 0)
+    }
+
+    /// [`Self::host_send_udp`] scheduled `delay_ns` into the future —
+    /// how the host paces a burst of frames (the data-in loader) without
+    /// advancing its own clock between sends: the pacing plan is laid
+    /// out as future events, then one `run_until_idle` lets streams to
+    /// different boards overlap in simulated time.
+    pub fn host_send_udp_after(
+        &mut self,
+        board: ChipCoord,
+        port: u16,
+        data: Vec<u8>,
+        delay_ns: u64,
+    ) -> anyhow::Result<()> {
+        let now = self.time_ns + delay_ns;
         let chip = self.chip(board)?;
         let dest = *chip
             .reverse_iptags

@@ -1,0 +1,205 @@
+//! Wire framing of the bulk data plane (§6.8 and its data-in mirror).
+//!
+//! The fast data paths move SDRAM contents between the host and
+//! arbitrary chips in 256-byte *frames* — 64 little-endian words, the
+//! largest unit one SDP message can carry. Frames are sequence-numbered
+//! from 0 within one transfer, so either end can name exactly which
+//! frames it is missing and have only those re-sent.
+//!
+//! Three codecs live here:
+//!
+//! - **data-in frames** (host → board fan-out core): one UDP frame per
+//!   256-byte chunk, carrying the target stream key, the sequence
+//!   number and the payload words;
+//! - **write-session commands** (host → per-chip writer core over SDP):
+//!   open a write session at an SDRAM address, or ask for the missing
+//!   sequence numbers of the current session;
+//! - **missing-sequence reports** (writer core → host over a tagged SDP
+//!   message): the re-request vocabulary of the data-in direction.
+//!
+//! The extraction direction's equivalents (read command, re-request,
+//! host-side reassembly) predate this module and live with the reader /
+//! gatherer cores in [`crate::apps::speedup`]; both directions share
+//! the frame geometry defined here.
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Words in one frame (64 × 4 B = 256 B, the SDP data limit of §6.8).
+pub const WORDS_PER_FRAME: usize = 64;
+
+/// Bytes of payload in one full frame.
+pub const BYTES_PER_FRAME: usize = WORDS_PER_FRAME * 4;
+
+/// Magic of a data-in frame (host → fan-out core).
+pub const DATA_FRAME_MAGIC: u32 = 0xDA7A_0013;
+
+/// Magic of a write-session open command (host → writer core).
+pub const WRITE_CMD_MAGIC: u32 = 0xDA7A_0010;
+
+/// Magic of a missing-sequence query (host → writer core).
+pub const CHECK_CMD_MAGIC: u32 = 0xDA7A_0011;
+
+/// Magic of a missing-sequence report (writer core → host).
+pub const MISSING_REPORT_MAGIC: u32 = 0xDA7A_0012;
+
+/// Sequence numbers per missing-report SDP message (fits the 256-byte
+/// SDP payload next to the three header words).
+pub const SEQS_PER_REPORT: usize = 60;
+
+/// Number of frames a transfer of `len` bytes needs.
+pub fn frames_of(len: usize) -> usize {
+    len.div_ceil(BYTES_PER_FRAME)
+}
+
+/// The byte range of frame `seq` within a transfer of `len` bytes.
+pub fn frame_range(seq: u32, len: usize) -> std::ops::Range<usize> {
+    let lo = seq as usize * BYTES_PER_FRAME;
+    lo..len.min(lo + BYTES_PER_FRAME)
+}
+
+/// Encode one data-in frame: `[magic, key, seq, words…]`, the tail word
+/// zero-padded exactly as the SDRAM allocator pads segments.
+pub fn encode_data_frame(key: u32, seq: u32, data: &[u8]) -> Vec<u8> {
+    debug_assert!(data.len() <= BYTES_PER_FRAME, "frame payload too large");
+    let mut w = ByteWriter::new();
+    w.u32(DATA_FRAME_MAGIC);
+    w.u32(key);
+    w.u32(seq);
+    w.bytes(data);
+    // Pad the tail to a whole word so the fan-out core only ever
+    // handles full 32-bit packet payloads.
+    for _ in 0..data.len().div_ceil(4) * 4 - data.len() {
+        w.u8(0);
+    }
+    w.finish()
+}
+
+/// Decoded form of [`encode_data_frame`].
+pub struct DataInFrame {
+    /// Stream key of the target chip's writer core.
+    pub key: u32,
+    /// Frame sequence number within the transfer.
+    pub seq: u32,
+    /// The frame's payload words.
+    pub words: Vec<u32>,
+}
+
+/// Decode a data-in frame.
+pub fn decode_data_frame(buf: &[u8]) -> anyhow::Result<DataInFrame> {
+    let mut r = ByteReader::new(buf);
+    let magic = r.u32()?;
+    anyhow::ensure!(magic == DATA_FRAME_MAGIC, "not a data-in frame ({magic:#x})");
+    let key = r.u32()?;
+    let seq = r.u32()?;
+    anyhow::ensure!(r.remaining() % 4 == 0, "data-in frame tail not word-aligned");
+    let words = r.u32s(r.remaining() / 4)?;
+    anyhow::ensure!(
+        (1..=WORDS_PER_FRAME).contains(&words.len()),
+        "data-in frame with {} words",
+        words.len()
+    );
+    Ok(DataInFrame { key, seq, words })
+}
+
+/// Encode the write-session open command: stream `len` bytes to `addr`.
+pub fn encode_write_command(addr: u32, len: u32) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u32(WRITE_CMD_MAGIC);
+    w.u32(addr);
+    w.u32(len);
+    w.finish()
+}
+
+/// Encode the missing-sequence query for the current write session.
+pub fn encode_check_command() -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u32(CHECK_CMD_MAGIC);
+    w.finish()
+}
+
+/// Encode the missing-sequence report messages for one query: each
+/// message is `[magic, total_missing, n_here, seqs…]`, chunked to the
+/// SDP payload limit. A session with nothing missing still produces one
+/// (empty) report so the host can tell "complete" from "no answer".
+pub fn encode_missing_reports(missing: &[u32]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut emit = |chunk: &[u32]| {
+        let mut w = ByteWriter::new();
+        w.u32(MISSING_REPORT_MAGIC);
+        w.u32(missing.len() as u32);
+        w.u32(chunk.len() as u32);
+        w.u32s(chunk);
+        out.push(w.finish());
+    };
+    if missing.is_empty() {
+        emit(&[]);
+    } else {
+        for chunk in missing.chunks(SEQS_PER_REPORT) {
+            emit(chunk);
+        }
+    }
+    out
+}
+
+/// Decode one missing-sequence report message into `(total, seqs)`.
+pub fn decode_missing_report(buf: &[u8]) -> anyhow::Result<(u32, Vec<u32>)> {
+    let mut r = ByteReader::new(buf);
+    let magic = r.u32()?;
+    anyhow::ensure!(magic == MISSING_REPORT_MAGIC, "not a missing report ({magic:#x})");
+    let total = r.u32()?;
+    let n = r.u32()?;
+    Ok((total, r.u32s(n as usize)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_frame_round_trip() {
+        let data: Vec<u8> = (0..=255).collect();
+        let f = decode_data_frame(&encode_data_frame(0xFF80_0004, 9, &data)).unwrap();
+        assert_eq!(f.key, 0xFF80_0004);
+        assert_eq!(f.seq, 9);
+        assert_eq!(f.words.len(), WORDS_PER_FRAME);
+        assert_eq!(f.words[0], u32::from_le_bytes([0, 1, 2, 3]));
+    }
+
+    #[test]
+    fn tail_frame_pads_to_word() {
+        let f = decode_data_frame(&encode_data_frame(2, 0, &[7, 8, 9])).unwrap();
+        assert_eq!(f.words, vec![u32::from_le_bytes([7, 8, 9, 0])]);
+    }
+
+    #[test]
+    fn frame_geometry() {
+        assert_eq!(frames_of(0), 0);
+        assert_eq!(frames_of(1), 1);
+        assert_eq!(frames_of(256), 1);
+        assert_eq!(frames_of(257), 2);
+        assert_eq!(frame_range(1, 300), 256..300);
+    }
+
+    #[test]
+    fn missing_reports_chunk_and_round_trip() {
+        let missing: Vec<u32> = (0..150).collect();
+        let msgs = encode_missing_reports(&missing);
+        assert_eq!(msgs.len(), 3);
+        let mut got = Vec::new();
+        for m in &msgs {
+            let (total, seqs) = decode_missing_report(m).unwrap();
+            assert_eq!(total, 150);
+            got.extend(seqs);
+        }
+        assert_eq!(got, missing);
+    }
+
+    #[test]
+    fn empty_report_still_answers() {
+        let msgs = encode_missing_reports(&[]);
+        assert_eq!(msgs.len(), 1);
+        let (total, seqs) = decode_missing_report(&msgs[0]).unwrap();
+        assert_eq!(total, 0);
+        assert!(seqs.is_empty());
+    }
+}

@@ -1,10 +1,12 @@
-//! On-wire protocol codecs: SDP (§3), SCP command framing, and the
-//! EIEIO live-event protocol (§6.9; Rast et al. 2015).
+//! On-wire protocol codecs: SDP (§3), SCP command framing, the EIEIO
+//! live-event protocol (§6.9; Rast et al. 2015), and the bulk
+//! data-plane framing of §6.8 ([`bulk`]).
 //!
 //! These are real byte-level encoders/decoders — the simulated machine
 //! and the host-side tools exchange exactly these frames, so the codec
 //! layer is exercised the way a physical deployment would exercise it.
 
+pub mod bulk;
 mod eieio;
 mod sdp;
 

@@ -1,11 +1,33 @@
-//! Small shared utilities: deterministic PRNG, byte codecs, JSON, and a
-//! lightweight property-testing helper (the vendor bundle carries no
-//! rand/serde_json/proptest).
+//! Small shared utilities: deterministic PRNG, byte codecs, JSON, an
+//! FNV digest, and a lightweight property-testing helper (the vendor
+//! bundle carries no rand/serde_json/proptest).
 
 pub mod bytes;
 pub mod json;
 pub mod par;
 pub mod prop;
+
+/// FNV-1a offset basis: the seed for an incremental [`fnv1a_64_extend`]
+/// digest.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Extend an FNV-1a digest with more bytes (incremental form — the
+/// fabric probe digests many fields into one running hash).
+pub fn fnv1a_64_extend(h: &mut u64, bytes: &[u8]) {
+    for b in bytes {
+        *h ^= *b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+/// FNV-1a over a byte slice: the cheap, dependency-free content digest
+/// the benches and equivalence suites use to prove two data paths moved
+/// byte-identical payloads.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv1a_64_extend(&mut h, bytes);
+    h
+}
 
 /// SplitMix64 PRNG — deterministic, dependency-free randomness for the
 /// Poisson sources, synthetic workload generators and the simulator's
@@ -121,5 +143,12 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(7) < 7);
         }
+    }
+
+    #[test]
+    fn fnv_distinguishes_and_repeats() {
+        assert_eq!(fnv1a_64(b"abc"), fnv1a_64(b"abc"));
+        assert_ne!(fnv1a_64(b"abc"), fnv1a_64(b"abd"));
+        assert_ne!(fnv1a_64(b""), fnv1a_64(b"\0"));
     }
 }

@@ -1,0 +1,241 @@
+//! Experiment E12 — bulk data plane correctness: seeded frame-loss
+//! recovery on both directions, multi-board fast ≡ SCAMP equivalence,
+//! and the simulated-time concurrency of per-board streams.
+
+use std::collections::BTreeMap;
+
+use spinntools::front::{DataPlaneOptions, FastPath};
+use spinntools::machine::{ChipCoord, Machine, MachineBuilder};
+use spinntools::simulator::{scamp, SimConfig, SimMachine};
+use spinntools::util::{fnv1a_64, SplitMix64};
+
+fn picker() -> impl FnMut(ChipCoord) -> Option<u8> {
+    let mut used: BTreeMap<ChipCoord, u8> = BTreeMap::new();
+    move |chip| {
+        let next = used.entry(chip).or_insert(17);
+        let c = *next;
+        *next -= 1;
+        Some(c)
+    }
+}
+
+fn pattern(len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+/// Seeded ~1-in-`denom` frame dropper that only afflicts the first
+/// attempt, so re-requests always recover.
+fn lossy(seed: u64, denom: u64) -> impl FnMut(u32, u32) -> bool {
+    let mut s = seed;
+    move |_seq, attempt| {
+        if attempt > 0 {
+            return false;
+        }
+        s = s
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (s >> 33) % denom == 0
+    }
+}
+
+/// Two chips per board of a 3-board (one-triad) toroid.
+fn chips_per_board(machine: &Machine, per_board: usize) -> Vec<ChipCoord> {
+    let mut out = Vec::new();
+    for eth in machine.ethernet_chips() {
+        let eth = (eth.x, eth.y);
+        out.extend(
+            machine
+                .chip_coords()
+                .filter(|c| machine.nearest_ethernet(*c) == Some(eth))
+                .take(per_board),
+        );
+    }
+    out
+}
+
+#[test]
+fn data_in_loss_recovers_byte_identical() {
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = SimMachine::boot(m, SimConfig::default());
+    let chip = (7, 7);
+    let data = pattern(100_000, 0xD47A);
+    let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    let fp = FastPath::install(&mut sim, &[chip], picker(), &DataPlaneOptions::default()).unwrap();
+    scamp::signal_start(&mut sim).unwrap();
+    let stats = fp
+        .write_with_loss(&mut sim, chip, addr, &data, lossy(17, 4))
+        .unwrap();
+    assert!(stats.frames_resent > 0, "loss injection never triggered");
+    let got = scamp::read_sdram(&mut sim, chip, addr, data.len()).unwrap();
+    assert_eq!(fnv1a_64(&got), fnv1a_64(&data));
+    assert_eq!(got, data, "recovered image differs from the source");
+}
+
+#[test]
+fn extraction_loss_recovers_byte_identical() {
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = SimMachine::boot(m, SimConfig::default());
+    let chip = (5, 6);
+    let data = pattern(100_000, 0x0D0A);
+    let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    scamp::write_sdram(&mut sim, chip, addr, &data).unwrap();
+    let fp = FastPath::install(&mut sim, &[chip], picker(), &DataPlaneOptions::default()).unwrap();
+    scamp::signal_start(&mut sim).unwrap();
+    let got = fp
+        .read_with_loss(&mut sim, chip, addr, data.len(), lossy(23, 4))
+        .unwrap();
+    assert_eq!(got, data, "recovered read differs from SDRAM");
+    // The reader must actually have streamed extra (re-requested) frames.
+    let reader = fp.reader_of(chip).unwrap();
+    let streamed = *scamp::provenance(&sim, reader)
+        .unwrap()
+        .get("words_streamed")
+        .unwrap();
+    assert!(
+        streamed > data.len().div_ceil(4) as u64,
+        "no re-requested frames were streamed ({streamed} words)"
+    );
+}
+
+#[test]
+fn multi_board_extraction_matches_scamp() {
+    // Fast path ≡ SCAMP path on a multi-board (one-triad, 3-board)
+    // machine, with chips on every board.
+    let m = MachineBuilder::triads(1, 1).build();
+    let mut sim = SimMachine::boot(m.clone(), SimConfig::default());
+    let chips = chips_per_board(&m, 2);
+    assert_eq!(chips.len(), 6);
+    let mut reqs = Vec::new();
+    let mut datas = Vec::new();
+    for (i, chip) in chips.iter().enumerate() {
+        let data = pattern(48_000 + 321 * i, 0xBEEF + i as u64);
+        let addr = scamp::alloc_sdram(&mut sim, *chip, data.len() as u32).unwrap();
+        scamp::write_sdram(&mut sim, *chip, addr, &data).unwrap();
+        reqs.push((*chip, addr, data.len()));
+        datas.push(data);
+    }
+    let fp = FastPath::install(&mut sim, &chips, picker(), &DataPlaneOptions::default()).unwrap();
+    assert_eq!(fp.n_boards(), 3, "a gatherer on every board");
+    scamp::signal_start(&mut sim).unwrap();
+    let fast = fp.read_many(&mut sim, &reqs).unwrap();
+    for (((chip, addr, len), fast), src) in reqs.iter().zip(&fast).zip(&datas) {
+        let slow = scamp::read_sdram(&mut sim, *chip, *addr, *len).unwrap();
+        assert_eq!(fnv1a_64(fast), fnv1a_64(&slow), "fast ≠ scamp on {chip:?}");
+        assert_eq!(fast, src, "fast read corrupted {chip:?}");
+    }
+}
+
+#[test]
+fn multi_board_streams_overlap_in_simulated_time() {
+    // One transfer per board: read_many must cost roughly one board's
+    // stream time, not three — the E12 scaling claim at test scale.
+    let m = MachineBuilder::triads(1, 1).build();
+    let len = 64 * 1024;
+    let setup = |sim: &mut SimMachine| -> (FastPath, Vec<(ChipCoord, u32, usize)>) {
+        let chips = chips_per_board(&sim.machine, 1);
+        let mut reqs = Vec::new();
+        for chip in &chips {
+            let data = pattern(len, 0xCAFE);
+            let addr = scamp::alloc_sdram(sim, *chip, len as u32).unwrap();
+            scamp::write_sdram(sim, *chip, addr, &data).unwrap();
+            reqs.push((*chip, addr, len));
+        }
+        let fp = FastPath::install(sim, &chips, picker(), &DataPlaneOptions::default()).unwrap();
+        scamp::signal_start(sim).unwrap();
+        (fp, reqs)
+    };
+
+    let mut par_sim = SimMachine::boot(m.clone(), SimConfig::default());
+    let (fp, reqs) = setup(&mut par_sim);
+    let t0 = par_sim.now_ns();
+    fp.read_many(&mut par_sim, &reqs).unwrap();
+    let t_parallel = par_sim.now_ns() - t0;
+
+    let mut ser_sim = SimMachine::boot(m, SimConfig::default());
+    let (fp, reqs) = setup(&mut ser_sim);
+    let t0 = ser_sim.now_ns();
+    for (chip, addr, len) in &reqs {
+        fp.read(&mut ser_sim, *chip, *addr, *len).unwrap();
+    }
+    let t_serial = ser_sim.now_ns() - t0;
+
+    assert!(
+        t_parallel * 10 < t_serial * 6,
+        "3-board extraction did not overlap: parallel {t_parallel} ns vs serial {t_serial} ns"
+    );
+}
+
+#[test]
+fn multi_board_loading_matches_scamp_and_overlaps() {
+    let m = MachineBuilder::triads(1, 1).build();
+    let mut sim = SimMachine::boot(m, SimConfig::default());
+    let chips = chips_per_board(&sim.machine, 1);
+    let len = 64 * 1024;
+    let datas: Vec<Vec<u8>> = (0..chips.len())
+        .map(|i| pattern(len, 0xF00D + i as u64))
+        .collect();
+    let addrs: Vec<u32> = chips
+        .iter()
+        .map(|c| scamp::alloc_sdram(&mut sim, *c, len as u32).unwrap())
+        .collect();
+    let fp = FastPath::install(&mut sim, &chips, picker(), &DataPlaneOptions::default()).unwrap();
+    scamp::signal_start(&mut sim).unwrap();
+
+    // Parallel multi-board load…
+    let reqs: Vec<(ChipCoord, u32, &[u8])> = chips
+        .iter()
+        .zip(&addrs)
+        .zip(&datas)
+        .map(|((c, a), d)| (*c, *a, d.as_slice()))
+        .collect();
+    let t0 = sim.now_ns();
+    fp.write_many(&mut sim, &reqs).unwrap();
+    let t_parallel = sim.now_ns() - t0;
+    for ((chip, addr), data) in chips.iter().zip(&addrs).zip(&datas) {
+        let got = scamp::read_sdram(&mut sim, *chip, *addr, len).unwrap();
+        assert_eq!(fnv1a_64(&got), fnv1a_64(data), "load corrupted {chip:?}");
+    }
+
+    // …versus the same transfers one at a time.
+    let t0 = sim.now_ns();
+    for ((chip, addr), data) in chips.iter().zip(&addrs).zip(&datas) {
+        fp.write(&mut sim, *chip, *addr, data).unwrap();
+    }
+    let t_serial = sim.now_ns() - t0;
+    assert!(
+        t_parallel * 10 < t_serial * 6,
+        "3-board loading did not overlap: parallel {t_parallel} ns vs serial {t_serial} ns"
+    );
+}
+
+#[test]
+fn fast_data_in_beats_batched_scamp_3x() {
+    // The E12 acceptance shape at test scale, on a far chip.
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = SimMachine::boot(m, SimConfig::default());
+    let chip = (7, 7);
+    let data = pattern(64 * 1024, 0x3A3A);
+    let a = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    let b = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    let fp = FastPath::install(&mut sim, &[chip], picker(), &DataPlaneOptions::default()).unwrap();
+    scamp::signal_start(&mut sim).unwrap();
+
+    let t0 = sim.now_ns();
+    scamp::write_sdram_batched(&mut sim, chip, a, &data).unwrap();
+    let t_batched = sim.now_ns() - t0;
+
+    let t1 = sim.now_ns();
+    fp.write(&mut sim, chip, b, &data).unwrap();
+    let t_fast = sim.now_ns() - t1;
+
+    assert!(
+        t_fast * 3 <= t_batched,
+        "fast data-in {t_fast} ns vs batched SCAMP {t_batched} ns"
+    );
+    assert_eq!(
+        scamp::read_sdram(&mut sim, chip, a, data.len()).unwrap(),
+        scamp::read_sdram(&mut sim, chip, b, data.len()).unwrap(),
+        "the two write paths disagree"
+    );
+}
