@@ -1,0 +1,270 @@
+//! Experiment E13 — incremental re-mapping speedup (DESIGN.md §7).
+//!
+//! The §6.5 "graph changed" path exists so a small graph delta costs a
+//! small re-map. This bench measures exactly that on the 576-chip
+//! (12-board) workload the E9 mapping bench uses: a Conway 88x88 grid
+//! (~7.7k vertices), mutated by removing the top ~10% of rows (a
+//! contiguous -vertex delta, the shape a parameter sweep produces), and
+//! compares
+//!
+//! - a full from-scratch map of the mutated graph, vs
+//! - an incremental re-map against the persistent pipeline state
+//!   (pinned placements, reused trees/keys, per-chip table merging),
+//!
+//! with a target of ≥ 5x. Mapping equivalence is checked with the E2
+//! routing oracle on a seeded sample of partitions, and end-to-end
+//! recording equality (incremental ≡ from-scratch, FNV digests) is
+//! proven on a smaller end-to-end instance. Results land in
+//! `BENCH_incremental.json` at the repository root.
+//!
+//! ```sh
+//! cargo bench --bench incremental
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::apps::networks::conway_machine_graph;
+use spinntools::front::{MachineSpec, SpiNNTools, ToolsConfig};
+use spinntools::graph::{MachineGraph, VertexId};
+use spinntools::machine::MachineBuilder;
+use spinntools::mapping::{
+    map_graph_incremental, tables::check_tables, MappingConfig, PipelineState,
+};
+use spinntools::util::json::Json;
+use spinntools::util::{fnv1a_64, SplitMix64};
+
+const ROWS: u32 = 88;
+const COLS: u32 = 88;
+/// Rows removed by the delta (top of the grid): 9/88 ≈ 10.2%.
+const CUT_ROWS: u32 = 9;
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+/// Remove the top `CUT_ROWS` rows (row-major vertex ids).
+fn apply_cut(graph: &mut MachineGraph) -> usize {
+    let mut removed = 0;
+    for r in (ROWS - CUT_ROWS)..ROWS {
+        for c in 0..COLS {
+            graph.remove_vertex(VertexId(r * COLS + c)).unwrap();
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// E2 oracle over a seeded sample of partitions.
+fn check_sampled_routing(
+    machine: &spinntools::machine::Machine,
+    graph: &MachineGraph,
+    mapping: &spinntools::mapping::Mapping,
+    samples: usize,
+    seed: u64,
+) {
+    let partitions: Vec<_> = graph.partitions().collect();
+    let mut rng = SplitMix64::new(seed);
+    for _ in 0..samples {
+        let p = partitions[rng.below(partitions.len())];
+        let src = mapping.placement(p.pre).expect("source placed");
+        let key = mapping.keys[&(p.pre, p.id.clone())];
+        let expected: Vec<_> = graph
+            .partition_targets(p)
+            .into_iter()
+            .map(|t| {
+                let l = mapping.placement(t).expect("target placed");
+                (l.chip(), l.p)
+            })
+            .collect();
+        check_tables(machine, &mapping.tables, src.chip(), key.base, &expected)
+            .expect("incremental mapping routes a sampled partition wrongly");
+    }
+}
+
+/// End-to-end digest check at a smaller scale: recordings after
+/// `run; cut; run` must digest-match a fresh build of the cut graph.
+fn end_to_end_digests() -> (u64, u64) {
+    let rows = 16u32;
+    let cut = 2u32; // 12.5%
+    let alive = |r: u32, c: u32| (r * 31 + c * 17) % 3 == 0;
+
+    let build = |tools: &mut SpiNNTools, skip_top: u32| -> Vec<(u32, u32, VertexId)> {
+        let mut ids = Vec::new();
+        let mut map = BTreeMap::new();
+        for r in 0..(rows - skip_top) {
+            for c in 0..rows {
+                let id = tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                    .unwrap();
+                map.insert((r, c), id);
+                ids.push((r, c, id));
+            }
+        }
+        for (&(r, c), &id) in &map {
+            for dr in -1..=1i64 {
+                for dc in -1..=1i64 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    let (nr, nc) = (r as i64 + dr, c as i64 + dc);
+                    if nr >= 0 && nc >= 0 && (nr as u32) < rows - skip_top && (nc as u32) < rows {
+                        tools
+                            .add_machine_edge(id, map[&(nr as u32, nc as u32)], STATE_PARTITION)
+                            .unwrap();
+                    }
+                }
+            }
+        }
+        ids
+    };
+
+    // Incremental: full grid, run, cut the top rows, run again.
+    let mut inc = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let ids = build(&mut inc, 0);
+    inc.run_ticks(2).unwrap();
+    for (r, _, id) in &ids {
+        if *r >= rows - cut {
+            inc.remove_machine_vertex(*id).unwrap();
+        }
+    }
+    inc.run_ticks(4).unwrap();
+    let mut inc_digest = 0u64;
+    for (r, _, id) in &ids {
+        if *r < rows - cut {
+            inc_digest ^= fnv1a_64(inc.recording(*id)).rotate_left((*r % 61) as u32);
+        }
+    }
+
+    // From scratch: the cut grid directly.
+    let mut fresh = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let fids = build(&mut fresh, cut);
+    fresh.run_ticks(4).unwrap();
+    let mut fresh_digest = 0u64;
+    for (r, _, id) in &fids {
+        fresh_digest ^= fnv1a_64(fresh.recording(*id)).rotate_left((*r % 61) as u32);
+    }
+    (inc_digest, fresh_digest)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E13: incremental re-mapping on a 576-chip (12-board) virtual machine");
+    let machine = MachineBuilder::boards(12).build();
+    assert_eq!(machine.n_chips(), 576);
+    let config = MappingConfig::default();
+
+    // Baseline state: map the full grid once (this also warms the
+    // persistent pipeline the incremental pass will diff against).
+    let mut graph = conway_machine_graph(ROWS, COLS, |r, c| (r + c) % 3 == 0);
+    let mut state = PipelineState::new();
+    let t = Instant::now();
+    let first = map_graph_incremental(&mut state, &machine, &graph, &config, &Default::default())?;
+    let initial_ms = ms(t);
+    println!(
+        "initial full map: {:.1} ms ({} vertices, {} tables)",
+        initial_ms,
+        graph.n_vertices(),
+        first.mapping.tables.len()
+    );
+
+    // The delta: cut the top ~10% of rows.
+    let removed = apply_cut(&mut graph);
+    println!("delta: removed {removed} vertices ({:.1}%)", 100.0 * removed as f64 / (ROWS * COLS) as f64);
+
+    // Incremental re-map against the warm state.
+    let t = Instant::now();
+    let inc = map_graph_incremental(&mut state, &machine, &graph, &config, &Default::default())?;
+    let incremental_ms = ms(t);
+    let cached = inc.stages.iter().filter(|s| s.cached).count();
+    println!(
+        "incremental re-map: {:.1} ms ({} stages cached, {} tables reinstalled)",
+        incremental_ms,
+        cached,
+        inc.install_chips.len()
+    );
+
+    // Full from-scratch map of the mutated graph (fresh state).
+    let mut fresh_state = PipelineState::new();
+    let t = Instant::now();
+    let full =
+        map_graph_incremental(&mut fresh_state, &machine, &graph, &config, &Default::default())?;
+    let full_ms = ms(t);
+    println!("from-scratch map of mutated graph: {full_ms:.1} ms");
+
+    // Equivalence: the incremental mapping must route every sampled
+    // partition exactly like the oracle demands, and pins must hold.
+    check_sampled_routing(&machine, &graph, &inc.mapping, 150, 0xE13);
+    let pins_held = graph
+        .vertex_ids()
+        .all(|v| inc.mapping.placement(v) == first.mapping.placement(v));
+    let same_placement_count = inc.mapping.placements.len() == full.mapping.placements.len();
+    assert!(pins_held, "a surviving vertex moved during incremental re-map");
+    assert!(same_placement_count);
+
+    let speedup = full_ms / incremental_ms.max(1e-6);
+    let target_met = speedup >= 5.0;
+    println!("remap speedup: {speedup:.2}x (target >= 5x: {})", if target_met { "MET" } else { "MISSED" });
+
+    // End-to-end recording digests (smaller instance).
+    let (inc_digest, fresh_digest) = end_to_end_digests();
+    let digests_equal = inc_digest == fresh_digest;
+    println!(
+        "end-to-end recording digests: incremental {inc_digest:#018x} vs from-scratch {fresh_digest:#018x} ({})",
+        if digests_equal { "EQUAL" } else { "DIVERGED" }
+    );
+    assert!(digests_equal, "incremental run diverged from from-scratch run");
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "experiment".to_string(),
+        Json::Str("E13_incremental_remapping".to_string()),
+    );
+    root.insert("machine_chips".to_string(), Json::Num(machine.n_chips() as f64));
+    root.insert("vertices_before".to_string(), Json::Num((ROWS * COLS) as f64));
+    root.insert("vertices_removed".to_string(), Json::Num(removed as f64));
+    root.insert("initial_full_map_ms".to_string(), Json::Num(initial_ms));
+    root.insert("incremental_remap_ms".to_string(), Json::Num(incremental_ms));
+    root.insert("from_scratch_remap_ms".to_string(), Json::Num(full_ms));
+    root.insert("speedup".to_string(), Json::Num(speedup));
+    root.insert("target_speedup".to_string(), Json::Num(5.0));
+    root.insert("target_met".to_string(), Json::Bool(target_met));
+    root.insert("stages_cached".to_string(), Json::Num(cached as f64));
+    root.insert(
+        "stages_total".to_string(),
+        Json::Num(inc.stages.len() as f64),
+    );
+    root.insert(
+        "tables_reinstalled".to_string(),
+        Json::Num(inc.install_chips.len() as f64),
+    );
+    root.insert(
+        "tables_total".to_string(),
+        Json::Num(inc.mapping.tables.len() as f64),
+    );
+    root.insert("pins_held".to_string(), Json::Bool(pins_held));
+    root.insert("recording_digests_equal".to_string(), Json::Bool(digests_equal));
+    root.insert(
+        "stages".to_string(),
+        Json::Arr(
+            inc.stages
+                .iter()
+                .map(|s| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(s.name.clone()));
+                    o.insert("cached".to_string(), Json::Bool(s.cached));
+                    o.insert("elapsed_us".to_string(), Json::Num(s.elapsed_us as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_incremental.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
+    Ok(())
+}

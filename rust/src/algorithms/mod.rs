@@ -14,9 +14,19 @@ use std::any::Any;
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Type-erased token store.
+///
+/// Tokens may carry an *input fingerprint* (`set_fp`/`put_with_fp`): a
+/// digest of the content the token was derived from, used by
+/// [`Executor::execute_cached`] to decide stage cleanliness. The
+/// fingerprint table is independent of the value table — `put`/`take`
+/// never touch it — because stages routinely `take` a token, transform
+/// it, and re-`put` it within one algorithm; the executor re-stamps the
+/// fingerprints of every declared output after the stage runs, so a
+/// stale entry can only be observed by code that bypasses the executor.
 #[derive(Default)]
 pub struct Blackboard {
     items: BTreeMap<String, Box<dyn Any>>,
+    fps: BTreeMap<String, u64>,
 }
 
 impl Blackboard {
@@ -26,6 +36,22 @@ impl Blackboard {
 
     pub fn put<T: Any>(&mut self, token: &str, value: T) {
         self.items.insert(token.to_string(), Box::new(value));
+    }
+
+    /// `put` plus an input fingerprint for the token.
+    pub fn put_with_fp<T: Any>(&mut self, token: &str, value: T, fp: u64) {
+        self.put(token, value);
+        self.set_fp(token, fp);
+    }
+
+    /// Stamp a token's fingerprint without touching its value.
+    pub fn set_fp(&mut self, token: &str, fp: u64) {
+        self.fps.insert(token.to_string(), fp);
+    }
+
+    /// A token's fingerprint, if one was stamped.
+    pub fn fp_of(&self, token: &str) -> Option<u64> {
+        self.fps.get(token).copied()
     }
 
     /// Insert a marker token (implicit output, e.g. "data_loaded").
@@ -87,6 +113,14 @@ pub struct Algorithm {
     pub name: String,
     pub inputs: Vec<String>,
     pub outputs: Vec<String>,
+    /// The tokens whose *fingerprints* key this stage's cache entry
+    /// (see [`Executor::execute_cached`]). `None` means "all declared
+    /// inputs". Narrowing this below `inputs` is a soundness claim by
+    /// the author: the excluded inputs cannot change the output while
+    /// the included fingerprints are stable (e.g. the mapping pipeline's
+    /// tag allocator excludes `placements` because pinned placements
+    /// never move while the tag-request digest is unchanged).
+    fp_inputs: Option<Vec<String>>,
     body: Body,
 }
 
@@ -101,8 +135,20 @@ impl Algorithm {
             name: name.to_string(),
             inputs: inputs.iter().map(|s| s.to_string()).collect(),
             outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            fp_inputs: None,
             body: Body::Plain(Box::new(run)),
         }
+    }
+
+    /// Override which tokens' fingerprints key this stage's cache entry.
+    pub fn with_fp_inputs(mut self, tokens: &[&str]) -> Self {
+        self.fp_inputs = Some(tokens.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    /// The tokens whose fingerprints key this stage (DESIGN.md §7).
+    pub fn fp_tokens(&self) -> &[String] {
+        self.fp_inputs.as_deref().unwrap_or(&self.inputs)
     }
 
     /// An algorithm with a declared shardable inner loop, in three
@@ -145,6 +191,7 @@ impl Algorithm {
             name: name.to_string(),
             inputs: inputs.iter().map(|s| s.to_string()).collect(),
             outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            fp_inputs: None,
             body: Body::Sharded(Box::new(body)),
         }
     }
@@ -166,6 +213,65 @@ pub struct Executor {
 /// The order the executor chose (kept for provenance/debugging).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Workflow(pub Vec<String>);
+
+/// Per-stage record of one [`Executor::execute_cached`] pass — the
+/// §6.3.5 provenance of the pipeline itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageStat {
+    pub name: String,
+    /// True when the stage was skipped because its input fingerprints
+    /// were unchanged and its outputs were still on the blackboard.
+    pub cached: bool,
+    /// Wall-clock of the stage body (0 for cache hits).
+    pub elapsed_us: u64,
+}
+
+/// Fingerprint-keyed stage memo (DESIGN.md §7). Each executed stage
+/// records the combined fingerprint of the tokens it declared it reads;
+/// on the next pass over a *persistent* blackboard, a stage whose
+/// fingerprint is unchanged and whose outputs are still present is
+/// skipped outright. Tokens without a stamped fingerprint are treated as
+/// always-changed (a fresh nonce per lookup), so forgetting to stamp an
+/// input degrades to correct-but-uncached behaviour.
+#[derive(Debug, Default)]
+pub struct StageCache {
+    /// stage name -> input fingerprint at its last execution.
+    fps: BTreeMap<String, u64>,
+    nonce: u64,
+    /// Stats of the most recent `execute_cached` pass.
+    pub last_run: Vec<StageStat>,
+}
+
+impl StageCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forget every memoised stage (the next pass re-runs everything).
+    pub fn clear(&mut self) {
+        self.fps.clear();
+        self.last_run.clear();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fps.is_empty()
+    }
+
+    fn next_nonce(&mut self) -> u64 {
+        self.nonce = self.nonce.wrapping_add(1);
+        self.nonce ^ 0x9E37_79B9_7F4A_7C15
+    }
+}
+
+/// The derived fingerprint of a stage output: a pure function of the
+/// stage's input fingerprint and the output token name, so downstream
+/// cache keys flow through the DAG without hashing any actual output.
+fn derived_fp(in_fp: u64, output: &str) -> u64 {
+    let mut h = crate::util::FNV_OFFSET;
+    crate::util::fnv1a_64_extend(&mut h, &in_fp.to_le_bytes());
+    crate::util::fnv1a_64_extend(&mut h, output.as_bytes());
+    h
+}
 
 impl Executor {
     pub fn new(algorithms: Vec<Algorithm>) -> Self {
@@ -225,9 +331,25 @@ impl Executor {
     /// their inputs become available (matching the paper's engine, which
     /// executes the provided algorithm list, not a minimal slice).
     pub fn execute(
+        self,
+        board: &mut Blackboard,
+        goals: &[&str],
+    ) -> anyhow::Result<Workflow> {
+        let mut cache = StageCache::new();
+        self.execute_cached(board, goals, &mut cache)
+    }
+
+    /// [`Self::execute`] with fingerprint-keyed stage skipping: a stage
+    /// whose `fp_tokens` digests match its entry in `cache` — and whose
+    /// declared outputs are still on `board` — does not run at all; the
+    /// prior outputs on the persistent blackboard stand in for it. Every
+    /// pass records per-stage hit/miss and wall-clock into
+    /// `cache.last_run` for provenance.
+    pub fn execute_cached(
         mut self,
         board: &mut Blackboard,
         goals: &[&str],
+        cache: &mut StageCache,
     ) -> anyhow::Result<Workflow> {
         let initial: BTreeSet<String> = board.tokens().map(|s| s.to_string()).collect();
         let plan = self.plan(&initial, goals)?;
@@ -237,8 +359,35 @@ impl Executor {
             .drain(..)
             .map(|a| (a.name.clone(), a))
             .collect();
+        cache.last_run.clear();
         for name in &plan.0 {
             let alg = by_name.get_mut(name).unwrap();
+            // Combined fingerprint of the declared cache-key tokens.
+            let mut in_fp = crate::util::FNV_OFFSET;
+            crate::util::fnv1a_64_extend(&mut in_fp, name.as_bytes());
+            for token in alg.fp_tokens() {
+                let fp = match board.fp_of(token) {
+                    Some(fp) => fp,
+                    // Unstamped input: treat as always-changed.
+                    None => cache.next_nonce(),
+                };
+                crate::util::fnv1a_64_extend(&mut in_fp, token.as_bytes());
+                crate::util::fnv1a_64_extend(&mut in_fp, &fp.to_le_bytes());
+            }
+            let clean = cache.fps.get(name) == Some(&in_fp)
+                && alg.outputs.iter().all(|o| board.has(o));
+            if clean {
+                for o in &alg.outputs {
+                    board.set_fp(o, derived_fp(in_fp, o));
+                }
+                cache.last_run.push(StageStat {
+                    name: name.clone(),
+                    cached: true,
+                    elapsed_us: 0,
+                });
+                continue;
+            }
+            let t0 = std::time::Instant::now();
             match &mut alg.body {
                 Body::Plain(run) => run(board),
                 Body::Sharded(run) => run(board, threads),
@@ -250,7 +399,14 @@ impl Executor {
                     board.has(o),
                     "algorithm '{name}' did not produce declared output '{o}'"
                 );
+                board.set_fp(o, derived_fp(in_fp, o));
             }
+            cache.fps.insert(name.clone(), in_fp);
+            cache.last_run.push(StageStat {
+                name: name.clone(),
+                cached: false,
+                elapsed_us: t0.elapsed().as_micros() as u64,
+            });
         }
         Ok(plan)
     }
@@ -408,5 +564,107 @@ mod tests {
             .execute(&mut board, &["out"])
             .unwrap_err();
         assert!(err.to_string().contains("item 2 broke"), "{err}");
+    }
+
+    /// A pipeline of two counting stages for the cache tests.
+    fn counting_algs(runs: std::rc::Rc<std::cell::RefCell<Vec<&'static str>>>) -> Vec<Algorithm> {
+        let r1 = runs.clone();
+        let r2 = runs;
+        vec![
+            Algorithm::new("double", &["x"], &["y"], move |b| {
+                r1.borrow_mut().push("double");
+                let x: u64 = *b.get("x")?;
+                b.put("y", x * 2);
+                Ok(())
+            }),
+            Algorithm::new("stringify", &["y"], &["s"], move |b| {
+                r2.borrow_mut().push("stringify");
+                let y: u64 = *b.get("y")?;
+                b.put("s", format!("{y}"));
+                Ok(())
+            }),
+        ]
+    }
+
+    #[test]
+    fn cached_execution_skips_clean_stages() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let runs = Rc::new(RefCell::new(Vec::new()));
+        let mut board = Blackboard::new();
+        let mut cache = StageCache::new();
+        board.put_with_fp("x", 21u64, 100);
+        Executor::new(counting_algs(runs.clone()))
+            .execute_cached(&mut board, &["s"], &mut cache)
+            .unwrap();
+        assert_eq!(*runs.borrow(), vec!["double", "stringify"]);
+        assert!(cache.last_run.iter().all(|s| !s.cached));
+
+        // Same fingerprints: both stages are clean and skipped.
+        board.put_with_fp("x", 21u64, 100);
+        Executor::new(counting_algs(runs.clone()))
+            .execute_cached(&mut board, &["s"], &mut cache)
+            .unwrap();
+        assert_eq!(runs.borrow().len(), 2, "no stage should have re-run");
+        assert!(cache.last_run.iter().all(|s| s.cached));
+        assert_eq!(board.get::<String>("s").unwrap(), "42");
+
+        // Changed input fingerprint: the whole chain re-runs (the
+        // derived fingerprint of y changes, dirtying stringify too).
+        board.put_with_fp("x", 30u64, 101);
+        Executor::new(counting_algs(runs.clone()))
+            .execute_cached(&mut board, &["s"], &mut cache)
+            .unwrap();
+        assert_eq!(runs.borrow().len(), 4);
+        assert_eq!(board.get::<String>("s").unwrap(), "60");
+    }
+
+    #[test]
+    fn unstamped_inputs_always_rerun() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let runs = Rc::new(RefCell::new(Vec::new()));
+        let mut board = Blackboard::new();
+        let mut cache = StageCache::new();
+        board.put("x", 5u64); // no fingerprint stamped
+        for _ in 0..2 {
+            Executor::new(counting_algs(runs.clone()))
+                .execute_cached(&mut board, &["s"], &mut cache)
+                .unwrap();
+        }
+        assert_eq!(runs.borrow().len(), 4, "unstamped token must defeat the cache");
+    }
+
+    #[test]
+    fn fp_inputs_narrow_the_cache_key() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let runs = Rc::new(RefCell::new(0usize));
+        let make = |runs: Rc<RefCell<usize>>| {
+            Algorithm::new("narrow", &["a", "b"], &["out"], move |board| {
+                *runs.borrow_mut() += 1;
+                board.mark("out");
+                Ok(())
+            })
+            .with_fp_inputs(&["a"])
+        };
+        let mut board = Blackboard::new();
+        let mut cache = StageCache::new();
+        board.put_with_fp("a", 1u64, 7);
+        board.put_with_fp("b", 1u64, 7);
+        Executor::new(vec![make(runs.clone())])
+            .execute_cached(&mut board, &["out"], &mut cache)
+            .unwrap();
+        // b changes, but only a's fingerprint keys the stage.
+        board.put_with_fp("b", 2u64, 8);
+        Executor::new(vec![make(runs.clone())])
+            .execute_cached(&mut board, &["out"], &mut cache)
+            .unwrap();
+        assert_eq!(*runs.borrow(), 1, "change to excluded input must not dirty");
+        board.put_with_fp("a", 2u64, 9);
+        Executor::new(vec![make(runs.clone())])
+            .execute_cached(&mut board, &["out"], &mut cache)
+            .unwrap();
+        assert_eq!(*runs.borrow(), 2);
     }
 }

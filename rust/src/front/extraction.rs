@@ -91,6 +91,8 @@ pub struct WriteStats {
 
 /// The data-in half of one board's plane.
 struct BoardDataIn {
+    /// The dispatcher core itself (a system core placement must avoid).
+    dispatcher: CoreLocation,
     /// Reverse-IP-tagged port the dispatcher receives frames on; also
     /// the (forward) tag port the board's writers report missing
     /// sequences to.
@@ -103,6 +105,8 @@ struct BoardDataIn {
 struct BoardPlane {
     /// Extraction gatherer, when the extraction half is installed.
     gatherer: Option<CoreLocation>,
+    /// The IP tag the gatherer forwards extraction frames through.
+    extract_tag: Option<u8>,
     extract_port: u16,
     data_in: Option<BoardDataIn>,
 }
@@ -115,6 +119,10 @@ pub struct FastPath {
     readers: BTreeMap<ChipCoord, (CoreLocation, u32)>,
     /// chip -> (writer core, data-in stream key).
     writers: BTreeMap<ChipCoord, (CoreLocation, u32)>,
+    /// chip -> the plane's stream routing entries on it. Kept so an
+    /// incremental re-map can reinstall a chip's *user* table and
+    /// re-append these without reinstalling the plane.
+    stream_entries: BTreeMap<ChipCoord, Vec<RoutingEntry>>,
     /// Host-side drain pool width.
     threads: usize,
 }
@@ -160,7 +168,7 @@ impl FastPath {
         let mut board_errors: Vec<String> = Vec::new();
         for (i, &eth) in eths.iter().enumerate() {
             let extract_port = opts.port_base + 2 * i as u16;
-            let mut install_gatherer = || -> Result<CoreLocation, String> {
+            let mut install_gatherer = || -> Result<(CoreLocation, u8), String> {
                 let p = free_core(eth).ok_or_else(|| {
                     format!("no free core on ethernet chip {eth:?} for the gatherer")
                 })?;
@@ -181,11 +189,11 @@ impl FastPath {
                     BTreeMap::new(),
                 )
                 .map_err(|e| e.to_string())?;
-                Ok(gatherer)
+                Ok((gatherer, extract_tag))
             };
-            let gatherer = if opts.extraction {
+            let (gatherer, extract_tag) = if opts.extraction {
                 match install_gatherer() {
-                    Ok(g) => Some(g),
+                    Ok((g, t)) => (Some(g), Some(t)),
                     Err(e) => {
                         board_errors.push(e);
                         // Extraction was asked for and this board cannot
@@ -195,7 +203,7 @@ impl FastPath {
                     }
                 }
             } else {
-                None
+                (None, None)
             };
             let mut install_data_in = || -> Result<BoardDataIn, String> {
                 let p = free_core(eth).ok_or_else(|| {
@@ -227,7 +235,7 @@ impl FastPath {
                     BTreeMap::new(),
                 )
                 .map_err(|e| e.to_string())?;
-                Ok(BoardDataIn { port, reply_tag })
+                Ok(BoardDataIn { dispatcher, port, reply_tag })
             };
             let data_in = if opts.data_in {
                 match install_data_in() {
@@ -243,7 +251,7 @@ impl FastPath {
             if gatherer.is_none() && data_in.is_none() {
                 continue; // nothing was installed on this board
             }
-            boards.insert(eth, BoardPlane { gatherer, extract_port, data_in });
+            boards.insert(eth, BoardPlane { gatherer, extract_tag, extract_port, data_in });
         }
         anyhow::ensure!(
             !boards.is_empty(),
@@ -361,14 +369,20 @@ impl FastPath {
         }
         // Append the stream entries to the already-loaded tables; the
         // capacity planning above guarantees these reloads fit.
-        for (chip, entries) in extra_entries {
-            let mut table = sim.chip(chip)?.table.clone();
+        for (chip, entries) in &extra_entries {
+            let mut table = sim.chip(*chip)?.table.clone();
             for e in entries {
-                table.push(e);
+                table.push(*e);
             }
-            scamp::load_routing_table(sim, chip, table)?;
+            scamp::load_routing_table(sim, *chip, table)?;
         }
-        Ok(FastPath { boards, readers, writers, threads: opts.threads })
+        Ok(FastPath {
+            boards,
+            readers,
+            writers,
+            stream_entries: extra_entries,
+            threads: opts.threads,
+        })
     }
 
     /// The board (Ethernet chip) serving `chip`, with its plane.
@@ -797,6 +811,65 @@ impl FastPath {
     /// Boards with an installed plane.
     pub fn n_boards(&self) -> usize {
         self.boards.len()
+    }
+
+    /// Every core the plane occupies (gatherers, dispatchers, readers,
+    /// writers). The incremental placer reserves these so a re-map can
+    /// never hand a new vertex a system core.
+    pub fn system_cores(&self) -> std::collections::BTreeSet<CoreLocation> {
+        let mut out = std::collections::BTreeSet::new();
+        for plane in self.boards.values() {
+            if let Some(g) = plane.gatherer {
+                out.insert(g);
+            }
+            if let Some(din) = &plane.data_in {
+                out.insert(din.dispatcher);
+            }
+        }
+        out.extend(self.readers.values().map(|(c, _)| *c));
+        out.extend(self.writers.values().map(|(c, _)| *c));
+        out
+    }
+
+    /// The plane's stream routing entries on `chip` (empty slice when
+    /// the plane has none there). An incremental re-map appends these
+    /// after a user-table reinstall so the streams keep flowing.
+    pub fn stream_entries(&self, chip: ChipCoord) -> &[RoutingEntry] {
+        self.stream_entries
+            .get(&chip)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// The (board, IP tag) pairs the plane owns — the extraction tag
+    /// and the data-in report tag per board. An incremental re-map must
+    /// not hand these to user vertices: the tag allocator knows nothing
+    /// of the plane, so the front end checks for collisions and falls
+    /// back to a full re-map (which re-seeds the plane's allocator from
+    /// the user tags) when one appears.
+    pub fn system_tags(&self) -> std::collections::BTreeSet<(ChipCoord, u8)> {
+        let mut out = std::collections::BTreeSet::new();
+        for (board, plane) in &self.boards {
+            if let Some(t) = plane.extract_tag {
+                out.insert((*board, t));
+            }
+            if let Some(din) = &plane.data_in {
+                out.insert((*board, din.reply_tag));
+            }
+        }
+        out
+    }
+
+    /// The (board, UDP port) pairs carrying the plane's reverse IP tags
+    /// (the per-board data-in dispatcher ports). Same collision rule as
+    /// [`Self::system_tags`].
+    pub fn system_reverse_ports(&self) -> std::collections::BTreeSet<(ChipCoord, u16)> {
+        self.boards
+            .iter()
+            .filter_map(|(board, plane)| {
+                plane.data_in.as_ref().map(|din| (*board, din.port))
+            })
+            .collect()
     }
 }
 

@@ -17,5 +17,5 @@ pub use buffer::{plan_run_cycles, RunCyclePlan};
 pub use config::{ExtractionMethod, LoadMethod, MachineSpec, ToolsConfig};
 pub use extraction::{DataPlaneOptions, FastPath, WriteStats};
 pub use live::{LiveEventListener, LiveInjector};
-pub use provenance::{ProvenanceReport, VertexProvenance};
+pub use provenance::{ProvenanceReport, RemapReport, VertexProvenance};
 pub use tools::SpiNNTools;

@@ -14,6 +14,53 @@ pub struct VertexProvenance {
     pub counters: BTreeMap<String, u64>,
 }
 
+/// What the last (re-)mapping pass did (DESIGN.md §7): which pipeline
+/// stages actually ran vs. were served from the fingerprint cache, and
+/// how much of the machine state had to be rewritten. A full first map
+/// reports `stages_cached == 0`; a small incremental delta reports
+/// `stages_rerun` strictly below the stage count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RemapReport {
+    /// Pipeline stages that executed this pass.
+    pub stages_rerun: usize,
+    /// Pipeline stages skipped via the fingerprint stage cache.
+    pub stages_cached: usize,
+    /// Vertices whose binary/regions were (re)loaded — new vertices
+    /// plus existing ones whose region bytes changed.
+    pub vertices_replaced: usize,
+    /// Chips whose routing tables were reinstalled.
+    pub tables_rewritten: usize,
+    /// Per-stage (name, cached, elapsed µs), in execution order.
+    pub stages: Vec<(String, bool, u64)>,
+}
+
+impl RemapReport {
+    /// Build a report from one pipeline pass's stage stats plus the
+    /// front end's load/install counters (shared by the first-run and
+    /// reconcile paths so the two can never drift).
+    pub fn from_stages(
+        stages: &[crate::algorithms::StageStat],
+        vertices_replaced: usize,
+        tables_rewritten: usize,
+    ) -> Self {
+        Self {
+            stages_rerun: stages.iter().filter(|s| !s.cached).count(),
+            stages_cached: stages.iter().filter(|s| s.cached).count(),
+            vertices_replaced,
+            tables_rewritten,
+            stages: stages
+                .iter()
+                .map(|s| (s.name.clone(), s.cached, s.elapsed_us))
+                .collect(),
+        }
+    }
+
+    /// Total pipeline stages this pass considered.
+    pub fn stage_count(&self) -> usize {
+        self.stages_rerun + self.stages_cached
+    }
+}
+
 /// The whole-run provenance report.
 #[derive(Debug, Clone, Default)]
 pub struct ProvenanceReport {
@@ -21,6 +68,9 @@ pub struct ProvenanceReport {
     pub routers: BTreeMap<ChipCoord, RouterStats>,
     /// Human-readable anomalies ("error/warning lines", §6.3.5).
     pub anomalies: Vec<String>,
+    /// What the most recent mapping pass re-ran vs. reused (§6.5 /
+    /// DESIGN.md §7); `None` before the first run.
+    pub remap: Option<RemapReport>,
 }
 
 impl ProvenanceReport {

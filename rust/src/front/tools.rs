@@ -1,6 +1,10 @@
-//! The [`SpiNNTools`] façade: the full Figure-8 execution flow.
+//! The [`SpiNNTools`] façade: the full Figure-8 execution flow,
+//! including the §6.5 "graph changed" branch: a mutation between runs
+//! triggers [`SpiNNTools::run_ticks`]'s *reconcile* path, which re-maps
+//! incrementally against the persistent pipeline state (DESIGN.md §7)
+//! and reloads only what actually changed.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
 
 use crate::apps::AppRegistry;
@@ -10,14 +14,15 @@ use crate::graph::{
 };
 use crate::machine::{ChipCoord, CoreLocation, Machine};
 use crate::mapping::database::{MappingDatabase, NotificationProtocol};
-use crate::mapping::{map_graph_via_engine, GraphMapping, Mapping};
+use crate::mapping::{map_graph_incremental, GraphMapping, Mapping, PipelineState};
 use crate::runtime::Runtime;
 use crate::simulator::{scamp, CoreState, SimMachine};
+use crate::util::fnv1a_64;
 
 use super::buffer::{plan_run_cycles, RunCyclePlan};
 use super::config::{ExtractionMethod, LoadMethod, ToolsConfig};
 use super::extraction::{DataPlaneOptions, FastPath};
-use super::provenance::ProvenanceReport;
+use super::provenance::{ProvenanceReport, RemapReport};
 
 /// Everything that exists once a graph has been mapped and loaded.
 struct RunState {
@@ -36,6 +41,11 @@ struct RunState {
     labels: Vec<(String, CoreLocation)>,
     ticks_done: u64,
     database: MappingDatabase,
+    /// Per-vertex, per-region (length, FNV digest) of the bytes loaded
+    /// into SDRAM — how reconcile decides which regions to re-transfer.
+    region_digests: BTreeMap<VertexId, BTreeMap<u32, (u32, u64)>>,
+    /// What the most recent mapping pass re-ran vs. reused.
+    last_remap: Option<RemapReport>,
 }
 
 /// The SpiNNTools engine (Figure 8): setup → graphs → run → results.
@@ -46,6 +56,15 @@ pub struct SpiNNTools {
     runtime: Option<Rc<Runtime>>,
     registry: AppRegistry,
     state: Option<RunState>,
+    /// Persistent mapping-pipeline state (stage cache + prior outputs),
+    /// the engine of incremental re-mapping. Cleared by [`Self::reset`].
+    pipeline: PipelineState,
+    /// Graph revisions `(machine, application)` at the last map; `None`
+    /// before the first run and after `reset`.
+    mapped_revisions: Option<(u64, u64)>,
+    /// Why the last reconcile fell back to a full re-map, if it did
+    /// (surfaced as a provenance anomaly).
+    remap_note: Option<String>,
     pub notifications: NotificationProtocol,
 }
 
@@ -65,17 +84,24 @@ impl SpiNNTools {
             runtime,
             registry,
             state: None,
+            pipeline: PipelineState::new(),
+            mapped_revisions: None,
+            remap_note: None,
             notifications: NotificationProtocol::default(),
         })
     }
 
     // -- graph creation (§6.2) ---------------------------------------------
+    //
+    // Mutations are legal at any time. Between runs they are journalled
+    // (the graphs' change journals) and the next `run_ticks` takes the
+    // §6.5 "graph changed" branch: an incremental re-map + reload of
+    // only what changed, after which the run restarts from tick 0.
 
     pub fn add_machine_vertex(
         &mut self,
         v: std::sync::Arc<dyn MachineVertexImpl>,
     ) -> anyhow::Result<VertexId> {
-        self.ensure_not_running("add vertices")?;
         Ok(self.machine_graph.add_vertex(v))
     }
 
@@ -85,16 +111,26 @@ impl SpiNNTools {
         post: VertexId,
         partition: &str,
     ) -> anyhow::Result<()> {
-        self.ensure_not_running("add edges")?;
         self.machine_graph.add_edge(pre, post, partition);
         Ok(())
+    }
+
+    /// Remove a machine vertex (and every edge touching it). The id is
+    /// tombstoned, never reused; a next run re-maps incrementally.
+    pub fn remove_machine_vertex(&mut self, v: VertexId) -> anyhow::Result<()> {
+        self.machine_graph.remove_vertex(v)
+    }
+
+    /// Declare a machine vertex's resources/data changed out-of-band:
+    /// the next run re-validates its pin and re-diffs its regions.
+    pub fn touch_machine_vertex(&mut self, v: VertexId) -> anyhow::Result<()> {
+        self.machine_graph.touch_vertex(v)
     }
 
     pub fn add_application_vertex(
         &mut self,
         v: std::sync::Arc<dyn ApplicationVertexImpl>,
     ) -> anyhow::Result<AppVertexId> {
-        self.ensure_not_running("add vertices")?;
         Ok(self.app_graph.add_vertex(v))
     }
 
@@ -105,7 +141,6 @@ impl SpiNNTools {
         partition: &str,
         payload: Option<std::sync::Arc<dyn std::any::Any + Send + Sync>>,
     ) -> anyhow::Result<()> {
-        self.ensure_not_running("add edges")?;
         self.app_graph.add_edge(pre, post, partition, payload);
         Ok(())
     }
@@ -138,10 +173,14 @@ impl SpiNNTools {
     fn ensure_not_running(&self, what: &str) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.state.is_none(),
-            "cannot {what} after a run has started; reset() first (graph \
-             changes require a remap, §6.5)"
+            "cannot {what} after a run has started; reset() first"
         );
         Ok(())
+    }
+
+    /// `(machine graph, application graph)` revisions right now.
+    fn graph_revisions(&self) -> (u64, u64) {
+        (self.machine_graph.revision(), self.app_graph.revision())
     }
 
     // -- graph execution (§6.3) --------------------------------------------
@@ -153,14 +192,71 @@ impl SpiNNTools {
     }
 
     /// Run for a number of timesteps. The first call performs machine
-    /// discovery, mapping, data generation and loading; later calls
-    /// resume (§6.5) in the established Figure-9 cycle unit.
+    /// discovery, mapping, data generation and loading. Later calls
+    /// resume (§6.5) in the established Figure-9 cycle unit — unless
+    /// the graph was mutated in between, in which case the run is
+    /// *reconciled*: an incremental re-map (stage cache + pinned
+    /// placements), a delta reload, and a restart from tick 0, with the
+    /// work done recorded in [`Self::remap_report`].
     pub fn run_ticks(&mut self, ticks: u64) -> anyhow::Result<()> {
         if self.state.is_none() {
             self.first_run(ticks)
+        } else if self.mapped_revisions != Some(self.graph_revisions()) {
+            self.reconcile(ticks)
         } else {
             self.resume_run(ticks)
         }
+    }
+
+    /// Generate every (non-virtual) vertex's data regions against a
+    /// mapping, with per-region FNV digests for the reconcile diff.
+    #[allow(clippy::type_complexity)]
+    fn generate_all_regions(
+        run_graph: &MachineGraph,
+        mapping: &Mapping,
+        graph_mapping: Option<&GraphMapping>,
+        app_graph: &ApplicationGraph,
+        timestep_us: u32,
+    ) -> anyhow::Result<(
+        BTreeMap<VertexId, BTreeMap<u32, Vec<u8>>>,
+        BTreeMap<VertexId, u64>,
+        BTreeMap<VertexId, BTreeMap<u32, (u32, u64)>>,
+    )> {
+        let mut region_data: BTreeMap<VertexId, BTreeMap<u32, Vec<u8>>> = BTreeMap::new();
+        let mut data_bytes: BTreeMap<VertexId, u64> = BTreeMap::new();
+        let mut digests: BTreeMap<VertexId, BTreeMap<u32, (u32, u64)>> = BTreeMap::new();
+        for (vid, vertex) in run_graph.vertices() {
+            if vertex.virtual_link().is_some() {
+                continue;
+            }
+            let placement = mapping
+                .placement(vid)
+                .ok_or_else(|| anyhow::anyhow!("vertex {} unplaced", vertex.label()))?;
+            let ctx = DataGenContext {
+                vertex: vid,
+                placement,
+                timestep_us,
+                graph: run_graph,
+                placements: mapping.placements.as_map(),
+                keys: &mapping.keys,
+                iptags: &mapping.iptags,
+                reverse_iptags: &mapping.reverse_iptags,
+                app_graph: graph_mapping.map(|_| app_graph),
+                graph_mapping,
+            };
+            let regions = vertex.generate_data(&ctx);
+            let total: u64 = regions.iter().map(|r| r.data.len() as u64).sum();
+            data_bytes.insert(vid, total);
+            digests.insert(
+                vid,
+                regions
+                    .iter()
+                    .map(|r| (r.id, (r.data.len() as u32, fnv1a_64(&r.data))))
+                    .collect(),
+            );
+            region_data.insert(vid, regions.into_iter().map(|r| (r.id, r.data)).collect());
+        }
+        Ok((region_data, data_bytes, digests))
     }
 
     fn first_run(&mut self, ticks: u64) -> anyhow::Result<()> {
@@ -169,6 +265,8 @@ impl SpiNNTools {
             "it is an error to add vertices to both the application and \
              machine graphs (§6.2)"
         );
+        // A first run is a from-scratch map by definition.
+        self.pipeline.clear();
 
         // ---- machine discovery (§6.3.1) --------------------------------
         let template = self.config.machine.template();
@@ -201,36 +299,28 @@ impl SpiNNTools {
         let mut sim = SimMachine::boot(machine.clone(), self.config.sim.clone());
 
         // ---- mapping (§6.3.2), on the Figure-10 engine ------------------
-        let (mapping, _workflow) =
-            map_graph_via_engine(&machine, &run_graph, &self.config.mapping)?;
+        let outcome = map_graph_incremental(
+            &mut self.pipeline,
+            &machine,
+            &run_graph,
+            &self.config.mapping,
+            &BTreeSet::new(),
+        )?;
+        let mapping = outcome.mapping;
+        let remap = RemapReport::from_stages(
+            &outcome.stages,
+            run_graph.n_vertices(),
+            mapping.tables.len(),
+        );
 
         // ---- data generation (§6.3.3) -----------------------------------
-        let mut region_data: BTreeMap<VertexId, BTreeMap<u32, Vec<u8>>> = BTreeMap::new();
-        let mut data_bytes: BTreeMap<VertexId, u64> = BTreeMap::new();
-        for (vid, vertex) in run_graph.vertices() {
-            if vertex.virtual_link().is_some() {
-                continue;
-            }
-            let placement = mapping
-                .placement(vid)
-                .ok_or_else(|| anyhow::anyhow!("vertex {} unplaced", vertex.label()))?;
-            let ctx = DataGenContext {
-                vertex: vid,
-                placement,
-                timestep_us: self.config.timestep_us,
-                graph: &run_graph,
-                placements: mapping.placements.as_map(),
-                keys: &mapping.keys,
-                iptags: &mapping.iptags,
-                reverse_iptags: &mapping.reverse_iptags,
-                app_graph: graph_mapping.as_ref().map(|_| &self.app_graph),
-                graph_mapping: graph_mapping.as_ref(),
-            };
-            let regions = vertex.generate_data(&ctx);
-            let total: u64 = regions.iter().map(|r| r.data.len() as u64).sum();
-            data_bytes.insert(vid, total);
-            region_data.insert(vid, regions.into_iter().map(|r| (r.id, r.data)).collect());
-        }
+        let (mut region_data, data_bytes, region_digests) = Self::generate_all_regions(
+            &run_graph,
+            &mapping,
+            graph_mapping.as_ref(),
+            &self.app_graph,
+            self.config.timestep_us,
+        )?;
 
         // ---- Figure-9 run-cycle planning --------------------------------
         let plan = plan_run_cycles(
@@ -307,7 +397,9 @@ impl SpiNNTools {
             if vertex.virtual_link().is_some() {
                 continue;
             }
-            let loc = mapping.placement(vid).unwrap();
+            let loc = mapping
+                .placement(vid)
+                .ok_or_else(|| anyhow::anyhow!("vertex {} unplaced at load", vertex.label()))?;
             labels.push((vertex.label(), loc));
             let app = self.registry.create(&vertex.binary_name())?;
             let mut recording_sizes = BTreeMap::new();
@@ -374,16 +466,22 @@ impl SpiNNTools {
             labels,
             ticks_done: 0,
             database,
+            region_digests,
+            last_remap: Some(remap),
         };
         let cycles = state.plan.cycles.clone();
         Self::run_cycles(&mut state, &cycles, self.config.extraction)?;
         self.state = Some(state);
+        self.mapped_revisions = Some(self.graph_revisions());
         self.check_completion()
     }
 
     fn resume_run(&mut self, ticks: u64) -> anyhow::Result<()> {
         let extraction = self.config.extraction;
-        let state = self.state.as_mut().unwrap();
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("resume_run without a run state"))?;
         // "The minimum time calculated previously is respected" (§6.5).
         let unit = state.plan.steps_per_cycle;
         let mut cycles = Vec::new();
@@ -396,6 +494,312 @@ impl SpiNNTools {
         scamp::signal_resume(&mut state.sim)?;
         Self::run_cycles(state, &cycles, extraction)?;
         self.check_completion()
+    }
+
+    // -- the §6.5 "graph changed" branch ------------------------------------
+
+    /// Re-map and reload after a graph mutation, then restart the run
+    /// from tick 0. Incremental wherever the fingerprints and pins
+    /// allow; any infeasibility (pinned placement conflicts, TCAM
+    /// overflow with the data plane's stream entries, a new device
+    /// vertex needing a virtual chip, application-graph changes) falls
+    /// back to a full from-scratch re-map — semantically identical,
+    /// just slower. Recordings from before the mutation are discarded:
+    /// the mutated graph is a new workload.
+    fn reconcile(&mut self, ticks: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.machine_graph.n_vertices() == 0 || self.app_graph.n_vertices() == 0,
+            "it is an error to add vertices to both the application and \
+             machine graphs (§6.2)"
+        );
+        self.remap_note = None;
+        // Application graphs re-split globally — there is no sound
+        // per-vertex pinning across the splitter — so any app-graph
+        // change is a full re-map.
+        let app_changed = self
+            .mapped_revisions
+            .map(|(_, a)| a != self.app_graph.revision())
+            .unwrap_or(true);
+        let was_app_run = self
+            .state
+            .as_ref()
+            .is_some_and(|s| s.graph_mapping.is_some());
+        if app_changed || was_app_run {
+            return self.full_remap(ticks, "application graph changed");
+        }
+        if let Err(e) = self.reconcile_map_and_load(ticks) {
+            return self.full_remap(ticks, &e.to_string());
+        }
+        self.mapped_revisions = Some(self.graph_revisions());
+        // The run itself is outside the fallback: a core hitting a
+        // runtime error is a real failure, not a mapping infeasibility.
+        let extraction = self.config.extraction;
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("reconcile lost the run state"))?;
+        let cycles = state.plan.cycles.clone();
+        Self::run_cycles(state, &cycles, extraction)?;
+        self.check_completion()
+    }
+
+    /// Tear everything down and re-run the whole Figure-8 flow with the
+    /// current graphs. `why` is surfaced as a provenance anomaly so the
+    /// fallback is never silent.
+    fn full_remap(&mut self, ticks: u64, why: &str) -> anyhow::Result<()> {
+        self.remap_note = Some(format!("graph change forced a full re-map: {why}"));
+        self.state = None;
+        self.pipeline.clear();
+        self.first_run(ticks)
+    }
+
+    /// The incremental half of [`Self::reconcile`]: map against the
+    /// persistent pipeline, unload removed vertices, reinstall only
+    /// changed routing tables (with the data plane's stream entries
+    /// re-appended), rewrite only regions whose bytes changed, and
+    /// restart every application core from Ready.
+    fn reconcile_map_and_load(&mut self, ticks: u64) -> anyhow::Result<()> {
+        let run_graph = self.machine_graph.clone();
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("reconcile without a run state"))?;
+        let machine = state.sim.machine.clone();
+        anyhow::ensure!(
+            run_graph.n_vertices() <= machine.n_application_cores(),
+            "graph needs {} cores; machine has {}",
+            run_graph.n_vertices(),
+            machine.n_application_cores()
+        );
+        let reserved: BTreeSet<CoreLocation> = state
+            .fast_path
+            .as_ref()
+            .map(|fp| fp.system_cores())
+            .unwrap_or_default();
+
+        // ---- incremental mapping ---------------------------------------
+        let outcome = map_graph_incremental(
+            &mut self.pipeline,
+            &machine,
+            &run_graph,
+            &self.config.mapping,
+            &reserved,
+        )?;
+        let mapping = outcome.mapping;
+
+        // ---- unload vertices that left the graph -----------------------
+        let prior_placements: Vec<(VertexId, CoreLocation)> =
+            state.mapping.placements.iter().collect();
+        for (vid, loc) in &prior_placements {
+            if mapping.placement(*vid).is_none() {
+                // Virtual (device) vertices have no simulated core.
+                if state.run_graph.vertex(*vid).virtual_link().is_none() {
+                    scamp::unload_app(&mut state.sim, *loc)?;
+                }
+                state.region_digests.remove(vid);
+            }
+        }
+
+        // ---- data regeneration + Figure-9 plan -------------------------
+        let (mut region_data, data_bytes, new_digests) = Self::generate_all_regions(
+            &run_graph,
+            &mapping,
+            None,
+            &self.app_graph,
+            self.config.timestep_us,
+        )?;
+        let plan = plan_run_cycles(
+            &machine,
+            &run_graph,
+            &mapping.placements,
+            &data_bytes,
+            ticks,
+            self.config.recording_slack_bytes,
+        )?;
+
+        // ---- reinstall only the routing tables that changed ------------
+        // `install_table` under each load invalidates the chip's route
+        // cache, so stale memoised lookups cannot survive the re-map.
+        let mut tables_rewritten = 0usize;
+        for chip in &outcome.install_chips {
+            let mut table = mapping.tables.get(chip).cloned().unwrap_or_default();
+            if let Some(fp) = &state.fast_path {
+                for e in fp.stream_entries(*chip) {
+                    table.push(*e);
+                }
+            }
+            scamp::load_routing_table(&mut state.sim, *chip, table)?;
+            tables_rewritten += 1;
+        }
+
+        // ---- (re)apply tags (idempotent overwrites) --------------------
+        // The tag allocator knows nothing of the data plane's system
+        // tags (installed after the first map): a newly-allocated user
+        // tag landing on one would silently hijack the plane's streams.
+        // Collisions force the full-re-map fallback, which re-seeds the
+        // plane's allocator from the user tags.
+        if let Some(fp) = &state.fast_path {
+            let stags = fp.system_tags();
+            let sports = fp.system_reverse_ports();
+            for tag in mapping.iptags.values() {
+                anyhow::ensure!(
+                    !stags.contains(&(tag.board, tag.tag)),
+                    "user IP tag {} on board {:?} collides with a data-plane tag",
+                    tag.tag,
+                    tag.board
+                );
+            }
+            for rtag in mapping.reverse_iptags.values() {
+                anyhow::ensure!(
+                    !sports.contains(&(rtag.board, rtag.port)),
+                    "user reverse IP tag port {} on board {:?} collides with the data plane",
+                    rtag.port,
+                    rtag.board
+                );
+            }
+        }
+        for tag in mapping.iptags.values() {
+            scamp::set_iptag(
+                &mut state.sim,
+                tag.board,
+                tag.tag,
+                &tag.host,
+                tag.port,
+                tag.strip_sdp,
+            )?;
+        }
+        for rtag in mapping.reverse_iptags.values() {
+            scamp::set_reverse_iptag(&mut state.sim, rtag.board, rtag.port, rtag.destination)?;
+        }
+
+        // ---- per-vertex reload: new in full, survivors by region diff --
+        let mut labels = Vec::new();
+        let mut vertices_replaced = 0usize;
+        let mut fast_reqs: Vec<(ChipCoord, u32, Vec<u8>)> = Vec::new();
+        for (vid, vertex) in run_graph.vertices() {
+            if vertex.virtual_link().is_some() {
+                continue;
+            }
+            let loc = mapping
+                .placement(vid)
+                .ok_or_else(|| anyhow::anyhow!("vertex {} unplaced at reload", vertex.label()))?;
+            labels.push((vertex.label(), loc));
+            let app = self.registry.create(&vertex.binary_name())?;
+            let mut recording_sizes = BTreeMap::new();
+            if let Some(bytes) = plan.recording_bytes.get(&vid) {
+                recording_sizes.insert(0u32, *bytes as u32);
+            }
+            let regions = region_data.remove(&vid).unwrap_or_default();
+            let is_new = state.mapping.placement(vid).is_none();
+            let use_fast = self.config.loading == LoadMethod::FastMulticast
+                && state
+                    .fast_path
+                    .as_ref()
+                    .is_some_and(|fp| fp.has_writer(loc.chip()));
+            let mut write = |sim: &mut SimMachine,
+                             fast_reqs: &mut Vec<(ChipCoord, u32, Vec<u8>)>,
+                             addr: u32,
+                             data: Vec<u8>|
+             -> anyhow::Result<()> {
+                if use_fast {
+                    fast_reqs.push((loc.chip(), addr, data));
+                } else if self.config.loading == LoadMethod::Scamp {
+                    scamp::write_sdram(sim, loc.chip(), addr, &data)?;
+                } else {
+                    scamp::write_sdram_batched(sim, loc.chip(), addr, &data)?;
+                }
+                Ok(())
+            };
+            if is_new {
+                let mut table = BTreeMap::new();
+                for (id, data) in regions {
+                    let addr = scamp::alloc_sdram(&mut state.sim, loc.chip(), data.len() as u32)?;
+                    table.insert(id, (addr, data.len() as u32));
+                    if !data.is_empty() {
+                        write(&mut state.sim, &mut fast_reqs, addr, data)?;
+                    }
+                }
+                scamp::install_app(
+                    &mut state.sim,
+                    loc,
+                    &vertex.binary_name(),
+                    app,
+                    table,
+                    recording_sizes,
+                )?;
+                vertices_replaced += 1;
+            } else {
+                let old_table = scamp::region_table(&state.sim, loc)?;
+                let old_digests =
+                    state.region_digests.get(&vid).cloned().unwrap_or_default();
+                let mut table = BTreeMap::new();
+                let mut rewrote = false;
+                for (id, data) in regions {
+                    let len = data.len() as u32;
+                    let unchanged = old_digests.get(&id).copied()
+                        == Some((len, fnv1a_64(&data)))
+                        && old_table.get(&id).map(|(_, l)| *l) == Some(len);
+                    // Same-length regions are rewritten in place; a new
+                    // length takes a fresh allocation (the simulated
+                    // bump allocator does not reclaim — documented).
+                    let addr = match old_table.get(&id).copied() {
+                        Some((addr, olen)) if olen == len => addr,
+                        _ => scamp::alloc_sdram(&mut state.sim, loc.chip(), len)?,
+                    };
+                    table.insert(id, (addr, len));
+                    if unchanged || data.is_empty() {
+                        continue;
+                    }
+                    rewrote = true;
+                    write(&mut state.sim, &mut fast_reqs, addr, data)?;
+                }
+                scamp::reload_app(
+                    &mut state.sim,
+                    loc,
+                    &vertex.binary_name(),
+                    app,
+                    table,
+                    recording_sizes,
+                )?;
+                if rewrote {
+                    vertices_replaced += 1;
+                }
+            }
+        }
+        if !fast_reqs.is_empty() {
+            let fp = state
+                .fast_path
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("fast requests without a data plane"))?;
+            let reqs: Vec<(ChipCoord, u32, &[u8])> = fast_reqs
+                .iter()
+                .map(|(chip, addr, data)| (*chip, *addr, data.as_slice()))
+                .collect();
+            fp.write_many(&mut state.sim, &reqs)?;
+        }
+
+        // ---- database + notifications + restart ------------------------
+        let database = MappingDatabase::build(&run_graph, &mapping.placements, &mapping.keys);
+        self.notifications.database_ready(&database);
+        // Every reinstalled user core is Ready; the data plane's system
+        // cores are untouched (they serve transfers in any state and
+        // rejoin at the next run cycle).
+        scamp::signal_start(&mut state.sim)?;
+
+        state.run_graph = run_graph;
+        state.mapping = mapping;
+        state.plan = plan;
+        state.recordings.clear();
+        state.labels = labels;
+        state.ticks_done = 0;
+        state.database = database;
+        state.region_digests = new_digests;
+        state.last_remap = Some(RemapReport::from_stages(
+            &outcome.stages,
+            vertices_replaced,
+            tables_rewritten,
+        ));
+        Ok(())
     }
 
     /// The Figure-9 loop: run a cycle, drain recordings, flush, resume.
@@ -426,7 +830,10 @@ impl SpiNNTools {
         let mut fast: Vec<(VertexId, CoreLocation, u32, usize)> = Vec::new();
         let mut slow: Vec<(VertexId, CoreLocation, u32, usize)> = Vec::new();
         for vid in vids {
-            let loc = state.mapping.placement(vid).unwrap();
+            let loc = state
+                .mapping
+                .placement(vid)
+                .ok_or_else(|| anyhow::anyhow!("recording vertex {vid:?} unplaced"))?;
             let (addr, written, _) = scamp::recording_info(&state.sim, loc, 0)?;
             if written == 0 {
                 continue;
@@ -447,7 +854,10 @@ impl SpiNNTools {
                 .iter()
                 .map(|(_, loc, addr, written)| (loc.chip(), *addr, *written))
                 .collect();
-            let fp = state.fast_path.as_ref().unwrap();
+            let fp = state
+                .fast_path
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("fast reads without a data plane"))?;
             let datas = fp.read_many(&mut state.sim, &reqs)?;
             for ((vid, loc, _, _), data) in fast.iter().zip(datas) {
                 state
@@ -472,7 +882,10 @@ impl SpiNNTools {
 
     /// §6.3.5 failure detection: error if any core ended in RTE.
     fn check_completion(&mut self) -> anyhow::Result<()> {
-        let state = self.state.as_ref().unwrap();
+        let state = self
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("completion check without a run state"))?;
         let bad: Vec<String> = scamp::core_states(&state.sim)
             .into_iter()
             .filter(|(_, s)| *s == CoreState::RunTimeError)
@@ -539,10 +952,20 @@ impl SpiNNTools {
                         "bulk data plane unavailable (SCAMP fallback in use): {e}"
                     ));
                 }
+                if let Some(note) = &self.remap_note {
+                    report.anomalies.push(note.clone());
+                }
+                report.remap = state.last_remap.clone();
                 report
             }
             None => ProvenanceReport::default(),
         }
+    }
+
+    /// What the most recent mapping pass re-ran vs. served from the
+    /// stage cache (§6.5 / DESIGN.md §7). `None` before the first run.
+    pub fn remap_report(&self) -> Option<&RemapReport> {
+        self.state.as_ref().and_then(|s| s.last_remap.as_ref())
     }
 
     pub fn database(&self) -> Option<&MappingDatabase> {
@@ -587,8 +1010,17 @@ impl SpiNNTools {
     }
 
     /// Forget the run entirely (graphs survive; the next run remaps).
+    /// Provably from-scratch: the persistent pipeline state (stage
+    /// cache + prior stage outputs) is dropped and both graphs' change
+    /// journals are cleared, so nothing of the previous mapping can
+    /// leak into the next run.
     pub fn reset(&mut self) {
         self.state = None;
+        self.pipeline.clear();
+        self.mapped_revisions = None;
+        self.remap_note = None;
+        self.machine_graph.clear_journal();
+        self.app_graph.clear_journal();
     }
 }
 
@@ -696,17 +1128,83 @@ mod tests {
     }
 
     #[test]
-    fn graph_changes_after_run_rejected() {
+    fn graph_changes_after_run_trigger_incremental_remap() {
+        // §6.5's "graph changed" branch: mutations between runs are
+        // journalled and the next run reconciles incrementally instead
+        // of erroring (the pre-incremental behaviour) or re-running the
+        // whole pipeline.
         let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
-        conway_graph(&mut tools, 3, 3, &[]);
-        tools.run_ticks(1).unwrap();
-        assert!(tools
-            .add_machine_vertex(ConwayCellVertex::arc(9, 9, false))
-            .is_err());
+        let ids = conway_graph(&mut tools, 3, 3, &[(1, 0), (1, 1), (1, 2)]);
+        tools.run_ticks(4).unwrap();
+        let first = tools.remap_report().unwrap().clone();
+        assert_eq!(first.stages_cached, 0, "first map is full");
+
+        // Add a vertex wired into the corner: placement and routing
+        // re-run, but e.g. the tag allocator is clean — strictly fewer
+        // stages than the total.
+        let extra = tools
+            .add_machine_vertex(ConwayCellVertex::arc(9, 9, true))
+            .unwrap();
+        tools.add_machine_edge(extra, ids[0], STATE_PARTITION).unwrap();
+        tools.run_ticks(4).unwrap();
+        let report = tools.remap_report().unwrap().clone();
+        assert!(
+            report.stages_rerun < report.stage_count(),
+            "small delta must reuse cached stages: {report:?}"
+        );
+        assert_eq!(report.stage_count(), first.stage_count());
+        assert_eq!(tools.ticks_done(), 4, "reconcile restarts from tick 0");
+
+        // Equivalence: a fresh instance built directly with the final
+        // graph records byte-identical behaviour.
+        let mut fresh = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let fids = conway_graph(&mut fresh, 3, 3, &[(1, 0), (1, 1), (1, 2)]);
+        let fextra = fresh
+            .add_machine_vertex(ConwayCellVertex::arc(9, 9, true))
+            .unwrap();
+        fresh.add_machine_edge(fextra, fids[0], STATE_PARTITION).unwrap();
+        fresh.run_ticks(4).unwrap();
+        for (a, b) in ids.iter().zip(&fids) {
+            assert_eq!(tools.recording(*a), fresh.recording(*b));
+        }
+        assert_eq!(tools.recording(extra), fresh.recording(fextra));
+        assert_eq!(tools.recording(extra).len(), 4);
+    }
+
+    #[test]
+    fn reset_clears_journal_and_stage_cache() {
+        // Regression (reset bugfix): a reset run must be provably
+        // from-scratch — no cached stage may survive reset, and the
+        // delta journal must be emptied.
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let ids = conway_graph(&mut tools, 3, 3, &[(1, 1)]);
+        tools.run_ticks(2).unwrap();
+        tools.remove_machine_vertex(ids[0]).unwrap();
         tools.reset();
-        assert!(tools
-            .add_machine_vertex(ConwayCellVertex::arc(9, 9, false))
-            .is_ok());
+        assert!(tools.machine_graph.journal().is_empty(), "journal survived reset");
+        assert!(tools.pipeline.is_fresh(), "stage cache survived reset");
+        tools.run_ticks(2).unwrap();
+        let report = tools.remap_report().unwrap();
+        assert_eq!(report.stages_cached, 0, "reset run must not reuse stages");
+        assert_eq!(tools.ticks_done(), 2);
+    }
+
+    #[test]
+    fn remove_vertex_reconciles_and_restarts() {
+        // Killing one wing of the blinker leaves a 2-cell pair that
+        // dies out — compare against a fresh build of the same graph.
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let ids = conway_graph(&mut tools, 3, 3, &[(1, 0), (1, 1), (1, 2)]);
+        tools.run_ticks(2).unwrap();
+        tools.remove_machine_vertex(ids[(1 * 3 + 0) as usize]).unwrap();
+        tools.run_ticks(3).unwrap();
+        // Remaining pair: both alive at step 1 (initial), dead after.
+        assert_eq!(tools.recording(ids[(1 * 3 + 1) as usize]), &[1, 0, 0]);
+        assert_eq!(tools.recording(ids[(1 * 3 + 2) as usize]), &[1, 0, 0]);
+        // The removed vertex has no recordings after the reconcile.
+        assert!(tools.recording(ids[(1 * 3 + 0) as usize]).is_empty());
+        let report = tools.remap_report().unwrap();
+        assert!(report.stages_rerun < report.stage_count(), "{report:?}");
     }
 
     #[test]

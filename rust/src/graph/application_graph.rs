@@ -5,8 +5,7 @@ use std::any::Any;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-
-
+use super::journal::{ChangeJournal, GraphDelta};
 use super::vertex::ApplicationVertexImpl;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -41,6 +40,7 @@ pub struct ApplicationGraph {
     edges: Vec<ApplicationEdge>,
     partitions: BTreeMap<(AppVertexId, String), AppOutgoingPartition>,
     edge_partition: Vec<String>,
+    journal: ChangeJournal,
 }
 
 impl ApplicationGraph {
@@ -48,9 +48,46 @@ impl ApplicationGraph {
         Self::default()
     }
 
+    /// The change journal. Application-graph deltas always force a full
+    /// re-split + re-map (splitting is a global optimisation; there is
+    /// no sound per-vertex pinning across it), so the front end only
+    /// consults the revision, never the per-delta log.
+    pub fn journal(&self) -> &ChangeJournal {
+        &self.journal
+    }
+
+    pub fn revision(&self) -> u64 {
+        self.journal.revision()
+    }
+
+    pub fn clear_journal(&mut self) {
+        self.journal.clear();
+    }
+
+    /// FNV-1a digest over the canonical content (labels, atom counts,
+    /// edges and their partitions).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::FNV_OFFSET;
+        let mut put = |bytes: &[u8]| crate::util::fnv1a_64_extend(&mut h, bytes);
+        for (vid, vertex) in self.vertices() {
+            put(&vid.0.to_le_bytes());
+            put(vertex.label().as_bytes());
+            put(&vertex.n_atoms().to_le_bytes());
+            put(&vertex.max_atoms_per_core().to_le_bytes());
+        }
+        for (eid, e) in self.edges() {
+            put(&eid.0.to_le_bytes());
+            put(&e.pre.0.to_le_bytes());
+            put(&e.post.0.to_le_bytes());
+            put(self.partition_of_edge(eid).as_bytes());
+        }
+        h
+    }
+
     pub fn add_vertex(&mut self, v: Arc<dyn ApplicationVertexImpl>) -> AppVertexId {
         let id = AppVertexId(self.vertices.len() as u32);
         self.vertices.push(v);
+        self.journal.record(GraphDelta::VertexAdded(id.0));
         id
     }
 
@@ -75,6 +112,7 @@ impl ApplicationGraph {
             })
             .edges
             .push(id);
+        self.journal.record(GraphDelta::EdgeAdded(id.0));
         id
     }
 

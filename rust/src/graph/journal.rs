@@ -1,0 +1,139 @@
+//! The graph change journal: the §6.5 "graph changed" detector made
+//! precise. Both graph levels carry one of these; every mutation bumps a
+//! monotone revision and appends a typed delta, so the front end can ask
+//! "what changed since the mapping at revision R?" and re-run only the
+//! invalidated pipeline stages (DESIGN.md §7) instead of tearing the
+//! whole run state down.
+//!
+//! Ids are stored raw (`u32`) so one journal type serves both
+//! [`crate::graph::VertexId`] and [`crate::graph::AppVertexId`] spaces.
+
+/// One recorded mutation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphDelta {
+    VertexAdded(u32),
+    VertexRemoved(u32),
+    EdgeAdded(u32),
+    EdgeRemoved(u32),
+    /// The vertex's resources / generated data must be treated as
+    /// changed (no structural delta). The vertex stays pinned if its new
+    /// footprint still fits its chip (the incremental placer re-charges
+    /// current resources); otherwise the re-map falls back to full.
+    VertexTouched(u32),
+}
+
+/// Counts of each delta kind over a revision window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaSummary {
+    pub vertices_added: usize,
+    pub vertices_removed: usize,
+    pub edges_added: usize,
+    pub edges_removed: usize,
+    pub vertices_touched: usize,
+}
+
+impl DeltaSummary {
+    pub fn is_empty(&self) -> bool {
+        *self == DeltaSummary::default()
+    }
+}
+
+/// Monotone revision counter plus the typed delta log.
+#[derive(Debug, Clone, Default)]
+pub struct ChangeJournal {
+    revision: u64,
+    /// (revision the delta produced, what changed).
+    deltas: Vec<(u64, GraphDelta)>,
+}
+
+impl ChangeJournal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current revision. `0` means "never mutated".
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Record one mutation, bumping the revision.
+    pub fn record(&mut self, delta: GraphDelta) {
+        self.revision += 1;
+        self.deltas.push((self.revision, delta));
+    }
+
+    /// Deltas recorded strictly after `revision`, oldest first.
+    pub fn deltas_since(&self, revision: u64) -> impl Iterator<Item = GraphDelta> + '_ {
+        self.deltas
+            .iter()
+            .filter(move |(r, _)| *r > revision)
+            .map(|(_, d)| *d)
+    }
+
+    /// Per-kind counts of the deltas strictly after `revision`.
+    pub fn summary_since(&self, revision: u64) -> DeltaSummary {
+        let mut s = DeltaSummary::default();
+        for d in self.deltas_since(revision) {
+            match d {
+                GraphDelta::VertexAdded(_) => s.vertices_added += 1,
+                GraphDelta::VertexRemoved(_) => s.vertices_removed += 1,
+                GraphDelta::EdgeAdded(_) => s.edges_added += 1,
+                GraphDelta::EdgeRemoved(_) => s.edges_removed += 1,
+                GraphDelta::VertexTouched(_) => s.vertices_touched += 1,
+            }
+        }
+        s
+    }
+
+    /// Number of logged deltas (all revisions).
+    pub fn len(&self) -> usize {
+        self.deltas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    /// Drop the delta log. The revision counter is kept monotone so
+    /// stale "since" markers held by callers can never alias a future
+    /// revision; [`SpiNNTools::reset`](crate::front::SpiNNTools::reset)
+    /// uses this to make a reset run provably from-scratch.
+    pub fn clear(&mut self) {
+        self.deltas.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_windows() {
+        let mut j = ChangeJournal::new();
+        assert_eq!(j.revision(), 0);
+        j.record(GraphDelta::VertexAdded(0));
+        j.record(GraphDelta::EdgeAdded(0));
+        let at = j.revision();
+        j.record(GraphDelta::VertexRemoved(0));
+        assert_eq!(j.revision(), 3);
+        assert_eq!(j.deltas_since(at).count(), 1);
+        let s = j.summary_since(0);
+        assert_eq!(s.vertices_added, 1);
+        assert_eq!(s.edges_added, 1);
+        assert_eq!(s.vertices_removed, 1);
+        assert!(j.summary_since(3).is_empty());
+    }
+
+    #[test]
+    fn clear_keeps_revision_monotone() {
+        let mut j = ChangeJournal::new();
+        j.record(GraphDelta::VertexAdded(7));
+        let r = j.revision();
+        j.clear();
+        assert!(j.is_empty());
+        assert_eq!(j.revision(), r);
+        j.record(GraphDelta::VertexTouched(7));
+        assert_eq!(j.revision(), r + 1);
+        assert_eq!(j.summary_since(r).vertices_touched, 1);
+    }
+}

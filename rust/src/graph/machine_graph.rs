@@ -1,11 +1,16 @@
 //! The machine graph: vertices that each fit one core, machine edges,
 //! and outgoing edge partitions (Figure 6 a/b).
+//!
+//! Mutations (including [`MachineGraph::remove_vertex`]) are recorded in
+//! a [`ChangeJournal`] so the front end can re-map incrementally (§6.5's
+//! "graph changed" branch, DESIGN.md §7). Removal uses tombstones:
+//! vertex and edge ids are positional, so removed slots stay allocated
+//! and every id handed out remains stable for the graph's lifetime.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-
-
+use super::journal::{ChangeJournal, GraphDelta};
 use super::vertex::MachineVertexImpl;
 
 /// Handle to a machine vertex within its graph.
@@ -42,11 +47,20 @@ pub const DEFAULT_PARTITION: &str = "default";
 #[derive(Default, Clone)]
 pub struct MachineGraph {
     vertices: Vec<Arc<dyn MachineVertexImpl>>,
+    /// Tombstones: `false` marks a removed vertex slot (ids stay stable).
+    vertex_live: Vec<bool>,
     edges: Vec<MachineEdge>,
+    edge_live: Vec<bool>,
     /// (pre, partition id) -> partition, insertion-ordered by BTreeMap.
+    /// Holds only live edges; a partition whose last edge is removed is
+    /// dropped entirely.
     partitions: BTreeMap<(VertexId, String), OutgoingEdgePartition>,
-    /// edge -> partition id (reverse index).
+    /// edge -> partition id (reverse index; kept for removed edges too).
     edge_partition: Vec<String>,
+    /// Per-vertex "data/resources changed" epochs (see
+    /// [`MachineGraph::touch_vertex`]); folded into the fingerprints.
+    touch_epochs: BTreeMap<VertexId, u64>,
+    journal: ChangeJournal,
 }
 
 impl MachineGraph {
@@ -57,15 +71,18 @@ impl MachineGraph {
     pub fn add_vertex(&mut self, v: Arc<dyn MachineVertexImpl>) -> VertexId {
         let id = VertexId(self.vertices.len() as u32);
         self.vertices.push(v);
+        self.vertex_live.push(true);
+        self.journal.record(GraphDelta::VertexAdded(id.0));
         id
     }
 
     /// Add an edge in the given outgoing edge partition of `pre`.
     pub fn add_edge(&mut self, pre: VertexId, post: VertexId, partition: &str) -> EdgeId {
-        assert!((pre.0 as usize) < self.vertices.len(), "bad pre vertex");
-        assert!((post.0 as usize) < self.vertices.len(), "bad post vertex");
+        assert!(self.is_live(pre), "bad pre vertex");
+        assert!(self.is_live(post), "bad post vertex");
         let eid = EdgeId(self.edges.len() as u32);
         self.edges.push(MachineEdge { pre, post });
+        self.edge_live.push(true);
         self.edge_partition.push(partition.to_string());
         self.partitions
             .entry((pre, partition.to_string()))
@@ -76,7 +93,82 @@ impl MachineGraph {
             })
             .edges
             .push(eid);
+        self.journal.record(GraphDelta::EdgeAdded(eid.0));
         eid
+    }
+
+    /// Remove a vertex and every edge incident to it. The slot is
+    /// tombstoned: the id is never reused, existing ids stay valid.
+    pub fn remove_vertex(&mut self, v: VertexId) -> anyhow::Result<()> {
+        anyhow::ensure!(self.is_live(v), "vertex {v:?} is not live");
+        let incident: Vec<EdgeId> = self
+            .edges()
+            .filter(|(_, e)| e.pre == v || e.post == v)
+            .map(|(id, _)| id)
+            .collect();
+        for eid in incident {
+            self.remove_edge_inner(eid);
+        }
+        self.vertex_live[v.0 as usize] = false;
+        self.touch_epochs.remove(&v);
+        self.journal.record(GraphDelta::VertexRemoved(v.0));
+        Ok(())
+    }
+
+    /// Remove a single edge (tombstoned, like vertices).
+    pub fn remove_edge(&mut self, e: EdgeId) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.edge_live.get(e.0 as usize).copied().unwrap_or(false),
+            "edge {e:?} is not live"
+        );
+        self.remove_edge_inner(e);
+        Ok(())
+    }
+
+    fn remove_edge_inner(&mut self, eid: EdgeId) {
+        self.edge_live[eid.0 as usize] = false;
+        let pre = self.edges[eid.0 as usize].pre;
+        let pkey = (pre, self.edge_partition[eid.0 as usize].clone());
+        if let Some(p) = self.partitions.get_mut(&pkey) {
+            p.edges.retain(|e| *e != eid);
+            if p.edges.is_empty() {
+                self.partitions.remove(&pkey);
+            }
+        }
+        self.journal.record(GraphDelta::EdgeRemoved(eid.0));
+    }
+
+    /// Declare that a vertex's resources or generated data changed in a
+    /// way the graph structure does not show. Bumps the vertex's touch
+    /// epoch (folded into [`Self::vertices_fingerprint`]) and journals a
+    /// [`GraphDelta::VertexTouched`]; on the next run the placer stage
+    /// re-runs (re-validating the pin against current resources) and
+    /// data generation re-diffs the vertex's regions.
+    pub fn touch_vertex(&mut self, v: VertexId) -> anyhow::Result<()> {
+        anyhow::ensure!(self.is_live(v), "vertex {v:?} is not live");
+        *self.touch_epochs.entry(v).or_insert(0) += 1;
+        self.journal.record(GraphDelta::VertexTouched(v.0));
+        Ok(())
+    }
+
+    /// Whether `id` names a live (non-removed) vertex.
+    pub fn is_live(&self, id: VertexId) -> bool {
+        self.vertex_live.get(id.0 as usize).copied().unwrap_or(false)
+    }
+
+    /// The change journal (revision counter + typed delta log).
+    pub fn journal(&self) -> &ChangeJournal {
+        &self.journal
+    }
+
+    /// The current graph revision (`journal().revision()`).
+    pub fn revision(&self) -> u64 {
+        self.journal.revision()
+    }
+
+    /// Drop the journal's delta log (revision stays monotone).
+    pub fn clear_journal(&mut self) {
+        self.journal.clear();
     }
 
     pub fn vertex(&self, id: VertexId) -> &Arc<dyn MachineVertexImpl> {
@@ -84,21 +176,26 @@ impl MachineGraph {
     }
 
     pub fn n_vertices(&self) -> usize {
-        self.vertices.len()
+        self.vertex_live.iter().filter(|l| **l).count()
     }
 
     pub fn n_edges(&self) -> usize {
-        self.edges.len()
+        self.edge_live.iter().filter(|l| **l).count()
     }
 
-    pub fn vertex_ids(&self) -> impl Iterator<Item = VertexId> {
-        (0..self.vertices.len() as u32).map(VertexId)
+    pub fn vertex_ids(&self) -> impl Iterator<Item = VertexId> + '_ {
+        self.vertex_live
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| **l)
+            .map(|(i, _)| VertexId(i as u32))
     }
 
     pub fn vertices(&self) -> impl Iterator<Item = (VertexId, &Arc<dyn MachineVertexImpl>)> {
         self.vertices
             .iter()
             .enumerate()
+            .filter(|(i, _)| self.vertex_live[*i])
             .map(|(i, v)| (VertexId(i as u32), v))
     }
 
@@ -110,6 +207,7 @@ impl MachineGraph {
         self.edges
             .iter()
             .enumerate()
+            .filter(|(i, _)| self.edge_live[*i])
             .map(|(i, e)| (EdgeId(i as u32), *e))
     }
 
@@ -160,6 +258,79 @@ impl MachineGraph {
             .filter(|(_, e)| e.pre == v)
             .map(|(id, _)| id)
             .collect()
+    }
+
+    // -- content fingerprints (DESIGN.md §7) --------------------------------
+
+    /// FNV-1a digest over the live *vertex* content: ids, labels,
+    /// binaries, resource footprints, constraints and touch epochs —
+    /// everything placement depends on, and nothing it does not (edges
+    /// are deliberately excluded, so adding an edge does not invalidate
+    /// a cached placement stage).
+    pub fn vertices_fingerprint(&self) -> u64 {
+        let mut h = crate::util::FNV_OFFSET;
+        let mut put = |bytes: &[u8]| crate::util::fnv1a_64_extend(&mut h, bytes);
+        for (vid, vertex) in self.vertices() {
+            put(&vid.0.to_le_bytes());
+            put(vertex.label().as_bytes());
+            put(vertex.binary_name().as_bytes());
+            let r = vertex.resources();
+            put(&r.dtcm_bytes.to_le_bytes());
+            put(&r.itcm_bytes.to_le_bytes());
+            put(&r.sdram_bytes.to_le_bytes());
+            put(&r.cpu_cycles_per_step.to_le_bytes());
+            if let Some(loc) = vertex.placement_constraint() {
+                put(&[1, loc.p]);
+                put(&loc.x.to_le_bytes());
+                put(&loc.y.to_le_bytes());
+            }
+            if let Some(chip) = vertex.chip_constraint() {
+                put(&[2]);
+                put(&chip.0.to_le_bytes());
+                put(&chip.1.to_le_bytes());
+            }
+            if let Some(vl) = vertex.virtual_link() {
+                put(&[3, vl.direction.id()]);
+                put(&vl.attached_to.0.to_le_bytes());
+                put(&vl.attached_to.1.to_le_bytes());
+            }
+            put(&self.touch_epochs.get(&vid).copied().unwrap_or(0).to_le_bytes());
+        }
+        h
+    }
+
+    /// FNV-1a digest over the live *topology*: every outgoing edge
+    /// partition with its key demand and deduplicated target set — what
+    /// routing and key allocation depend on.
+    pub fn partitions_fingerprint(&self) -> u64 {
+        let mut h = crate::util::FNV_OFFSET;
+        let mut put = |bytes: &[u8]| crate::util::fnv1a_64_extend(&mut h, bytes);
+        for partition in self.partitions() {
+            put(&partition.pre.0.to_le_bytes());
+            put(partition.id.as_bytes());
+            let n_keys = self
+                .vertex(partition.pre)
+                .n_keys_for_partition(&partition.id);
+            put(&n_keys.to_le_bytes());
+            for target in self.partition_targets(partition) {
+                put(&target.0.to_le_bytes());
+            }
+        }
+        h
+    }
+
+    /// FNV-1a digest over the whole canonical graph content (vertices,
+    /// topology, and the exact live edge multiset).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::FNV_OFFSET;
+        crate::util::fnv1a_64_extend(&mut h, &self.vertices_fingerprint().to_le_bytes());
+        crate::util::fnv1a_64_extend(&mut h, &self.partitions_fingerprint().to_le_bytes());
+        for (eid, e) in self.edges() {
+            crate::util::fnv1a_64_extend(&mut h, &eid.0.to_le_bytes());
+            crate::util::fnv1a_64_extend(&mut h, &e.pre.0.to_le_bytes());
+            crate::util::fnv1a_64_extend(&mut h, &e.post.0.to_le_bytes());
+        }
+        h
     }
 }
 
@@ -285,5 +456,79 @@ mod tests {
         let mut g = MachineGraph::new();
         let a = g.add_vertex(TestVertex::arc("a"));
         g.add_edge(a, VertexId(99), DEFAULT_PARTITION);
+    }
+
+    #[test]
+    fn remove_vertex_tombstones_and_journals() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        let c = g.add_vertex(TestVertex::arc("c"));
+        g.add_edge(a, b, "p");
+        g.add_edge(b, c, "p");
+        g.add_edge(c, a, "q");
+        let rev = g.revision();
+        g.remove_vertex(b).unwrap();
+        assert!(!g.is_live(b));
+        assert!(g.is_live(a) && g.is_live(c));
+        assert_eq!(g.n_vertices(), 2);
+        // Both edges touching b died with it; c->a survives.
+        assert_eq!(g.n_edges(), 1);
+        assert_eq!(g.partitions_of(a).count(), 0, "a's partition emptied out");
+        assert_eq!(g.partitions_of(c).count(), 1);
+        // Ids stay stable: c is still VertexId(2).
+        assert_eq!(c, VertexId(2));
+        assert_eq!(g.vertex(c).label(), "c");
+        let s = g.journal().summary_since(rev);
+        assert_eq!(s.vertices_removed, 1);
+        assert_eq!(s.edges_removed, 2);
+        // Double removal is an error, as is touching a dead vertex.
+        assert!(g.remove_vertex(b).is_err());
+        assert!(g.touch_vertex(b).is_err());
+    }
+
+    #[test]
+    fn fingerprints_track_the_right_mutations() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        let v0 = g.vertices_fingerprint();
+        let p0 = g.partitions_fingerprint();
+        let f0 = g.fingerprint();
+        // Adding an edge changes topology + whole, not vertices.
+        g.add_edge(a, b, "p");
+        assert_eq!(g.vertices_fingerprint(), v0, "edge must not dirty placement");
+        assert_ne!(g.partitions_fingerprint(), p0);
+        assert_ne!(g.fingerprint(), f0);
+        // Adding a vertex changes the vertex digest.
+        g.add_vertex(TestVertex::arc("c"));
+        assert_ne!(g.vertices_fingerprint(), v0);
+        // Touch bumps the vertex digest without structural change.
+        let v1 = g.vertices_fingerprint();
+        g.touch_vertex(a).unwrap();
+        assert_ne!(g.vertices_fingerprint(), v1);
+        // Fingerprints are content functions: same build, same digests.
+        let rebuild = || {
+            let mut g2 = MachineGraph::new();
+            let a2 = g2.add_vertex(TestVertex::arc("a"));
+            let b2 = g2.add_vertex(TestVertex::arc("b"));
+            g2.add_edge(a2, b2, "p");
+            g2.fingerprint()
+        };
+        assert_eq!(rebuild(), rebuild());
+    }
+
+    #[test]
+    fn remove_edge_alone() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        let e1 = g.add_edge(a, b, "p");
+        let e2 = g.add_edge(a, b, "p");
+        g.remove_edge(e1).unwrap();
+        assert_eq!(g.n_edges(), 1);
+        let p = g.partition(a, "p").unwrap();
+        assert_eq!(p.edges, vec![e2]);
+        assert!(g.remove_edge(e1).is_err());
     }
 }

@@ -15,6 +15,7 @@
 //! recording behaviour, mirroring how users subclass the Python classes.
 
 pub mod application_graph;
+pub mod journal;
 pub mod machine_graph;
 pub mod resources;
 pub mod vertex;
@@ -22,6 +23,7 @@ pub mod vertex;
 pub use application_graph::{
     AppEdgeId, AppOutgoingPartition, AppVertexId, ApplicationEdge, ApplicationGraph,
 };
+pub use journal::{ChangeJournal, DeltaSummary, GraphDelta};
 pub use machine_graph::{
     EdgeId, MachineEdge, MachineGraph, OutgoingEdgePartition, VertexId, DEFAULT_PARTITION,
 };

@@ -140,7 +140,7 @@ impl RoutingEntry {
 }
 
 /// An ordered multicast routing table (first match wins).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RoutingTable {
     entries: Vec<RoutingEntry>,
 }

@@ -16,14 +16,50 @@ use crate::graph::{KeyRange, MachineGraph, VertexId};
 pub fn allocate_keys(
     graph: &MachineGraph,
 ) -> anyhow::Result<BTreeMap<(VertexId, String), KeyRange>> {
+    let (keys, _, _) = allocate_keys_incremental(graph, &BTreeMap::new(), 0)?;
+    Ok(keys)
+}
+
+/// Incremental key allocation (DESIGN.md §7): partitions already in
+/// `prior` whose block-size demand is unchanged keep their exact range;
+/// removed partitions' ranges are retired; new (or resized) partitions
+/// take fresh blocks strictly above `cursor`, the session's high-water
+/// mark. Freed ranges are **never reused** within a session: a retired
+/// key may still be matched by an aggressive compression cover on an
+/// untouched chip, so reuse could hijack packets — monotone allocation
+/// makes that impossible by construction.
+///
+/// With an empty `prior` and `cursor == 0` this is exactly the
+/// from-scratch allocator (the wrapper above), so first runs are
+/// byte-identical to the historical behaviour.
+///
+/// Returns `(keys, rekeyed partitions, new high-water cursor)`.
+#[allow(clippy::type_complexity)]
+pub fn allocate_keys_incremental(
+    graph: &MachineGraph,
+    prior: &BTreeMap<(VertexId, String), KeyRange>,
+    cursor: u64,
+) -> anyhow::Result<(
+    BTreeMap<(VertexId, String), KeyRange>,
+    Vec<(VertexId, String)>,
+    u64,
+)> {
     let mut out = BTreeMap::new();
-    let mut cursor: u64 = 0;
+    let mut rekeyed = Vec::new();
+    let mut cursor = cursor;
     for partition in graph.partitions() {
+        let key = (partition.pre, partition.id.clone());
         let n_keys = graph
             .vertex(partition.pre)
             .n_keys_for_partition(&partition.id)
             .max(1);
         let block = (n_keys as u64).next_power_of_two();
+        if let Some(kr) = prior.get(&key) {
+            if kr.n_keys() == block {
+                out.insert(key, *kr);
+                continue;
+            }
+        }
         // Align the cursor to the block size.
         cursor = cursor.div_ceil(block) * block;
         anyhow::ensure!(
@@ -33,13 +69,11 @@ pub fn allocate_keys(
             partition.id
         );
         let mask = !(block as u32 - 1);
-        out.insert(
-            (partition.pre, partition.id.clone()),
-            KeyRange::new(cursor as u32, mask),
-        );
+        out.insert(key.clone(), KeyRange::new(cursor as u32, mask));
+        rekeyed.push(key);
         cursor += block;
     }
-    Ok(out)
+    Ok((out, rekeyed, cursor))
 }
 
 #[cfg(test)]
@@ -126,6 +160,42 @@ mod tests {
         let k1 = keys[&(a, "p1".to_string())];
         let k2 = keys[&(a, "p2".to_string())];
         assert_ne!(k1.base, k2.base, "each message type needs its own keys");
+    }
+
+    #[test]
+    fn incremental_keeps_old_ranges_and_never_reuses_freed_space() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(Arc::new(ManyKeys(100)));
+        let b = g.add_vertex(Arc::new(ManyKeys(3)));
+        let c = g.add_vertex(TestVertex::arc("c"));
+        let e_ab = g.add_edge(a, b, "x");
+        g.add_edge(b, c, "y");
+        let (prior, rekeyed, cursor) =
+            allocate_keys_incremental(&g, &BTreeMap::new(), 0).unwrap();
+        assert_eq!(rekeyed.len(), 2, "first run allocates everything");
+        // Drop a's partition, add a new one from c.
+        g.remove_edge(e_ab).unwrap();
+        g.add_edge(c, a, "z");
+        let (keys, rekeyed, cursor2) =
+            allocate_keys_incremental(&g, &prior, cursor).unwrap();
+        // Survivor keeps its exact range.
+        assert_eq!(keys[&(b, "y".to_string())], prior[&(b, "y".to_string())]);
+        // Removed partition is gone.
+        assert!(!keys.contains_key(&(a, "x".to_string())));
+        // New partition sits strictly above the old high-water mark —
+        // never inside the freed 128-key block of (a, "x").
+        assert_eq!(rekeyed, vec![(c, "z".to_string())]);
+        let kz = keys[&(c, "z".to_string())];
+        assert!(kz.base as u64 >= cursor, "freed key space reused");
+        assert!(cursor2 > cursor);
+        // All surviving ranges stay pairwise disjoint.
+        for (k1, r1) in &keys {
+            for (k2, r2) in &keys {
+                if k1 != k2 {
+                    assert!(!r2.contains(r1.base), "{k1:?} overlaps {k2:?}");
+                }
+            }
+        }
     }
 
     #[test]

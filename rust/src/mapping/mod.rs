@@ -16,6 +16,15 @@
 //!    al. 2016);
 //! 7. [`tags`] — IP tag / reverse IP tag allocation on Ethernet chips;
 //! 8. [`database`] — the mapping database external live apps read (§6.9).
+//!
+//! Steps 2–7 are delta-aware: run against a persistent
+//! [`PipelineState`], [`map_graph_incremental`] re-executes only the
+//! stages (and within them only the partitions/chips) a graph change
+//! invalidated (DESIGN.md §7).
+
+// The engine stages pass wide context tuples through the sharded
+// split/process/merge hooks; naming each would obscure, not clarify.
+#![allow(clippy::type_complexity)]
 
 pub mod compress;
 pub mod database;
@@ -138,165 +147,472 @@ impl Mapping {
     }
 }
 
-/// Run the same pipeline through the Figure-10 algorithm execution
-/// engine: each step is an [`crate::algorithms::Algorithm`] with token
-/// inputs/outputs, and the executor derives the workflow order. The
-/// router, table generator and compressor declare shardable inner loops
-/// the executor fans out over `config.options.threads` workers; their
-/// order-preserving joins keep the result byte-identical to the serial
-/// [`map_graph`] path. Returns the mapping plus the executed workflow
-/// (for provenance).
-pub fn map_graph_via_engine(
+/// Persistent pipeline state for incremental re-mapping (DESIGN.md §7):
+/// the [`Blackboard`](crate::algorithms::Blackboard) carrying every
+/// stage's last outputs plus the fingerprint-keyed
+/// [`StageCache`](crate::algorithms::StageCache). The front end keeps
+/// one of these across runs; [`crate::front::SpiNNTools::reset`]
+/// clears it so a reset run is provably from-scratch.
+///
+/// If [`map_graph_incremental`] returns an error the board may be left
+/// partially mutated — the caller must `clear()` before mapping again.
+#[derive(Default)]
+pub struct PipelineState {
+    board: crate::algorithms::Blackboard,
+    cache: crate::algorithms::StageCache,
+}
+
+impl PipelineState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forget every cached stage and token: the next map is full.
+    pub fn clear(&mut self) {
+        *self = Self::default();
+    }
+
+    /// True when no mapping has been memoised (fresh or just cleared).
+    pub fn is_fresh(&self) -> bool {
+        self.cache.is_empty()
+    }
+
+    /// Per-stage hit/miss/wall-clock of the most recent map.
+    pub fn stage_stats(&self) -> &[crate::algorithms::StageStat] {
+        &self.cache.last_run
+    }
+}
+
+/// Everything one [`map_graph_incremental`] pass produces.
+pub struct MapOutcome {
+    pub mapping: Mapping,
+    pub workflow: crate::algorithms::Workflow,
+    /// Per-stage hit/miss/elapsed provenance for this pass.
+    pub stages: Vec<crate::algorithms::StageStat>,
+    /// Chips whose routing table differs from the prior map and must be
+    /// (re)installed — on a fresh map, every chip that has a table.
+    pub install_chips: std::collections::BTreeSet<ChipCoord>,
+}
+
+/// Content digest of a machine (geometry, faults, core/SDRAM capacity):
+/// the cache key guarding every machine-dependent pipeline stage.
+pub fn machine_fingerprint(machine: &Machine) -> u64 {
+    let mut h = crate::util::FNV_OFFSET;
+    let mut put = |bytes: &[u8]| crate::util::fnv1a_64_extend(&mut h, bytes);
+    put(&machine.width.to_le_bytes());
+    put(&machine.height.to_le_bytes());
+    for chip in machine.chips() {
+        put(&chip.x.to_le_bytes());
+        put(&chip.y.to_le_bytes());
+        put(&[chip.is_virtual as u8]);
+        put(&chip.sdram.user_size().to_le_bytes());
+        for p in chip.application_processors() {
+            put(&[p.id]);
+        }
+        for d in crate::machine::ALL_DIRECTIONS {
+            match machine.link_target((chip.x, chip.y), d) {
+                Some(t) => {
+                    put(&[1, d.id()]);
+                    put(&t.0.to_le_bytes());
+                    put(&t.1.to_le_bytes());
+                }
+                None => put(&[0, d.id()]),
+            }
+        }
+    }
+    h
+}
+
+fn config_fingerprint(config: &MappingConfig) -> u64 {
+    crate::util::fnv1a_64(&[
+        config.use_default_routes as u8,
+        config.compress_tables as u8,
+        config.enforce_table_capacity as u8,
+    ])
+}
+
+/// Digest of the graph's IP-tag / reverse-IP-tag demands — the cache
+/// key of the tag allocator. Placements are deliberately *not* part of
+/// it: while this digest is stable, every tag-bearing vertex is pinned
+/// (incremental placement never moves a surviving vertex), so its
+/// nearest-Ethernet assignment cannot change.
+fn tag_requests_fingerprint(graph: &MachineGraph) -> u64 {
+    let mut h = crate::util::FNV_OFFSET;
+    let mut put = |bytes: &[u8]| crate::util::fnv1a_64_extend(&mut h, bytes);
+    for (vid, vertex) in graph.vertices() {
+        let r = vertex.resources();
+        if r.iptags.is_empty() && r.reverse_iptags.is_empty() {
+            continue;
+        }
+        put(&vid.0.to_le_bytes());
+        for t in &r.iptags {
+            put(t.host.as_bytes());
+            put(&t.port.to_le_bytes());
+            put(&[t.strip_sdp as u8]);
+            put(t.label.as_bytes());
+        }
+        for t in &r.reverse_iptags {
+            put(&t.port.to_le_bytes());
+            put(t.label.as_bytes());
+        }
+    }
+    h
+}
+
+/// Does this prior tree still serve this route item exactly (same
+/// source chip, same delivered (chip, core) set)? If so the tree can be
+/// reused verbatim: `build_tree` is deterministic in (machine, source,
+/// dests), and the machine is fingerprint-guarded.
+fn tree_matches(tree: &router::RoutingTree, item: &router::RouteItem) -> bool {
+    if tree.source != item.source {
+        return false;
+    }
+    let want: Vec<(ChipCoord, u8)> = item
+        .dests
+        .iter()
+        .flat_map(|(c, ps)| ps.iter().map(move |p| (*c, *p)))
+        .collect();
+    tree.destinations() == want
+}
+
+/// Run the Figure-10 pipeline against the persistent `state`,
+/// incrementally where the fingerprints allow (DESIGN.md §7):
+///
+/// - stages whose input fingerprints are unchanged are **skipped**
+///   outright (the prior outputs on the blackboard stand in);
+/// - the placer pins every vertex of the prior placements to its core
+///   and only places new vertices (`reserved` protects the bulk data
+///   plane's system cores);
+/// - the router rebuilds only trees whose endpoints changed, the key
+///   allocator re-keys only new/resized partitions (monotone key
+///   space — freed ranges are never reused), and tables are regenerated
+///   and re-compressed only on chips those trees/keys touch, with
+///   [`compress::compress_exact`] on incrementally-dirty tables so a
+///   retired key can never be captured by a fresh cover.
+///
+/// On a fresh `state` this is exactly the historical full pipeline.
+/// The sharded inner loops still fan out over
+/// `config.options.threads`; output remains thread-count-invariant.
+pub fn map_graph_incremental(
+    state: &mut PipelineState,
     machine: &Machine,
     graph: &MachineGraph,
     config: &MappingConfig,
-) -> anyhow::Result<(Mapping, crate::algorithms::Workflow)> {
+    reserved: &std::collections::BTreeSet<CoreLocation>,
+) -> anyhow::Result<MapOutcome> {
     use crate::algorithms::{Algorithm, Blackboard, Executor};
     use crate::machine::router::RoutingTable;
+    use std::collections::BTreeSet;
 
-    let mut board = Blackboard::new();
-    board.put("machine", machine.clone());
+    // A different machine or mapping config invalidates everything the
+    // board holds (dirty-set plumbing only tracks *graph* deltas):
+    // start over rather than reason about partial invalidation.
+    let machine_fp = machine_fingerprint(machine);
+    let config_fp = config_fingerprint(config);
+    if state.board.fp_of("machine").is_some_and(|fp| fp != machine_fp)
+        || state.board.fp_of("mapping_config").is_some_and(|fp| fp != config_fp)
+    {
+        state.clear();
+    }
+
+    let board = &mut state.board;
+    board.put_with_fp("machine", machine.clone(), machine_fp);
     board.put("machine_graph", graph.clone());
-    board.put("mapping_config", config.clone());
+    board.put_with_fp("mapping_config", config.clone(), config_fp);
+    // Fingerprint markers: the graph rides the board as one (unstamped)
+    // data token, while invalidation is keyed on these content digests —
+    // so e.g. adding an edge dirties routing without dirtying placement.
+    board.put_with_fp("graph_vertices", (), graph.vertices_fingerprint());
+    board.put_with_fp("graph_partitions", (), graph.partitions_fingerprint());
+    board.put_with_fp("tag_requests", (), tag_requests_fingerprint(graph));
 
+    let reserved_cores = reserved.clone();
     let algorithms = vec![
+        // Placement: pin-and-extend when a prior placement exists.
         Algorithm::new(
             "radial_placer",
-            &["machine", "machine_graph"],
+            &["machine", "machine_graph", "graph_vertices"],
             &["placements"],
-            |b| {
+            move |b| {
+                let prior: Option<Placements> = if b.has("placements") {
+                    Some(b.take("placements")?)
+                } else {
+                    None
+                };
                 let m: &Machine = b.get("machine")?;
                 let g: &MachineGraph = b.get("machine_graph")?;
-                let p = placer::place(m, g)?;
+                let p = match &prior {
+                    Some(prev) => placer::place_incremental(m, g, prev, &reserved_cores)?,
+                    None => placer::place(m, g)?,
+                };
                 b.put("placements", p);
                 Ok(())
             },
-        ),
-        // Sharded: one work item per outgoing edge partition; each tree
-        // is grown independently against a shared machine context. The
-        // machine token rides through the context (no clone) and the
-        // merge returns it to the blackboard for the later algorithms.
+        )
+        .with_fp_inputs(&["machine", "graph_vertices"]),
+        // Routing, sharded per *dirty* partition: prior trees whose
+        // endpoints are unchanged are reused verbatim; the chips of
+        // every dropped/rebuilt tree (old and new shape) are collected
+        // for the table generator.
         Algorithm::sharded(
             "ner_router",
-            &["machine", "machine_graph", "placements"],
-            &["routing_trees"],
+            &["machine", "machine_graph", "graph_partitions", "placements"],
+            &["routing_trees", "route_dirty_chips"],
             |b: &mut Blackboard| {
                 let items = {
                     let g: &MachineGraph = b.get("machine_graph")?;
                     let p: &Placements = b.get("placements")?;
                     router::route_items(g, p)?
                 };
+                let prior: RoutingForest = if b.has("routing_trees") {
+                    b.take("routing_trees")?
+                } else {
+                    RoutingForest::default()
+                };
                 let m: Machine = b.take("machine")?;
-                Ok((m, items))
+                let mut prior_trees = prior.trees;
+                let mut kept: BTreeMap<(VertexId, String), router::RoutingTree> =
+                    BTreeMap::new();
+                let mut dirty: BTreeSet<ChipCoord> = BTreeSet::new();
+                let mut work: Vec<router::RouteItem> = Vec::new();
+                for item in items {
+                    match prior_trees.remove(&item.key) {
+                        Some(tree) if tree_matches(&tree, &item) => {
+                            kept.insert(item.key.clone(), tree);
+                        }
+                        Some(old) => {
+                            dirty.extend(RoutingForest::tree_chips(&old, &m));
+                            work.push(item);
+                        }
+                        None => work.push(item),
+                    }
+                }
+                // Trees whose partition no longer exists: retire them,
+                // dirtying every chip they touched.
+                for (_, old) in prior_trees {
+                    dirty.extend(RoutingForest::tree_chips(&old, &m));
+                }
+                Ok(((m, kept, dirty), work))
             },
-            |m: &Machine, item: &router::RouteItem| {
+            |ctx: &(Machine, BTreeMap<(VertexId, String), router::RoutingTree>, BTreeSet<ChipCoord>),
+             item: &router::RouteItem| {
+                let (m, _, _) = ctx;
                 Ok((item.key.clone(), router::build_tree(m, item.source, &item.dests)?))
             },
-            |b: &mut Blackboard, m, keyed_trees: Vec<((VertexId, String), router::RoutingTree)>| {
-                b.put("machine", m);
-                let mut forest = RoutingForest::default();
-                for (key, tree) in keyed_trees {
+            |b: &mut Blackboard,
+             ctx,
+             built: Vec<((VertexId, String), router::RoutingTree)>| {
+                let (m, kept, mut dirty) = ctx;
+                let mut forest = RoutingForest { trees: kept };
+                for (key, tree) in built {
+                    dirty.extend(RoutingForest::tree_chips(&tree, &m));
                     forest.trees.insert(key, tree);
                 }
+                b.put("machine", m);
                 b.put("routing_trees", forest);
+                b.put("route_dirty_chips", dirty);
                 Ok(())
             },
-        ),
+        )
+        .with_fp_inputs(&["machine", "graph_partitions", "placements"]),
+        // Key allocation: monotone incremental (see
+        // [`keys::allocate_keys_incremental`]).
         Algorithm::new(
             "key_allocator",
-            &["machine_graph"],
-            &["routing_keys"],
+            &["machine_graph", "graph_partitions"],
+            &["routing_keys", "rekeyed_partitions", "key_cursor"],
             |b| {
+                let prior: BTreeMap<(VertexId, String), KeyRange> =
+                    if b.has("routing_keys") { b.take("routing_keys")? } else { BTreeMap::new() };
+                let cursor: u64 = if b.has("key_cursor") { b.take("key_cursor")? } else { 0 };
                 let g: &MachineGraph = b.get("machine_graph")?;
-                let k = keys::allocate_keys(g)?;
-                b.put("routing_keys", k);
+                let (keys, rekeyed, cursor) =
+                    keys::allocate_keys_incremental(g, &prior, cursor)?;
+                b.put("routing_keys", keys);
+                b.put("rekeyed_partitions", rekeyed);
+                b.put("key_cursor", cursor);
                 Ok(())
             },
-        ),
-        // Sharded: one work item per chip. The forest is *moved* into
-        // the context (split into parallel key/tree vectors, no clone)
-        // so workers never touch the blackboard; the merge reassembles
-        // it and returns the routing_trees token.
+        )
+        .with_fp_inputs(&["graph_partitions"]),
+        // Table generation, sharded per *dirty* chip: the union of the
+        // router's dirty chips, the chips of partitions whose key range
+        // changed since this stage last ran (diffed against the stage's
+        // own key snapshot — exact even when the key allocator was a
+        // cache hit), and chips whose table must vanish. Clean chips
+        // keep their prior (uncompressed) table verbatim.
         Algorithm::sharded(
             "table_generator",
-            &["machine", "machine_graph", "routing_trees", "routing_keys", "mapping_config"],
-            &["routing_tables"],
+            &[
+                "machine", "machine_graph", "routing_trees", "routing_keys",
+                "mapping_config", "route_dirty_chips",
+            ],
+            &["routing_tables", "tables_dirty_chips", "tables_keys_snapshot"],
             |b: &mut Blackboard| {
                 let f: RoutingForest = b.take("routing_trees")?;
-                let (ranges, work, use_default) = {
+                let had_prior = b.has("routing_tables");
+                let prior_tables: BTreeMap<ChipCoord, RoutingTable> =
+                    if had_prior { b.take("routing_tables")? } else { BTreeMap::new() };
+                let snapshot: BTreeMap<(VertexId, String), KeyRange> =
+                    if b.has("tables_keys_snapshot") {
+                        b.take("tables_keys_snapshot")?
+                    } else {
+                        BTreeMap::new()
+                    };
+                let (ranges, work_all, use_default, dirty, new_snapshot) = {
                     let m: &Machine = b.get("machine")?;
                     let k: &BTreeMap<(VertexId, String), KeyRange> = b.get("routing_keys")?;
                     let c: &MappingConfig = b.get("mapping_config")?;
-                    let (trees_ref, ranges, work) = tables::plan_chips(m, &f, k)?;
+                    let (trees_ref, ranges, work_all) = tables::plan_chips(m, &f, k)?;
                     drop(trees_ref);
-                    (ranges, work, c.use_default_routes)
+                    let dirty: BTreeSet<ChipCoord> = if had_prior {
+                        let mut d = b.get::<BTreeSet<ChipCoord>>("route_dirty_chips")?.clone();
+                        for (key, kr) in k.iter() {
+                            if snapshot.get(key) != Some(kr) {
+                                if let Some(tree) = f.trees.get(key) {
+                                    d.extend(RoutingForest::tree_chips(tree, m));
+                                }
+                            }
+                        }
+                        let planned: BTreeSet<ChipCoord> =
+                            work_all.iter().map(|(c, _)| *c).collect();
+                        d.extend(prior_tables.keys().filter(|c| !planned.contains(c)));
+                        d
+                    } else {
+                        work_all.iter().map(|(c, _)| *c).collect()
+                    };
+                    (ranges, work_all, c.use_default_routes, dirty, k.clone())
                 };
+                let work: Vec<tables::ChipWork> = work_all
+                    .into_iter()
+                    .filter(|(c, _)| dirty.contains(c))
+                    .collect();
                 // Forest order matches plan_chips' range/index order.
                 let (tree_keys, trees): (Vec<(VertexId, String)>, Vec<router::RoutingTree>) =
                     f.trees.into_iter().unzip();
-                Ok(((tree_keys, trees, ranges, use_default), work))
+                Ok((
+                    (tree_keys, trees, ranges, use_default, prior_tables, dirty, new_snapshot),
+                    work,
+                ))
             },
-            |ctx: &(Vec<(VertexId, String)>, Vec<router::RoutingTree>, Vec<KeyRange>, bool),
+            |ctx: &(
+                Vec<(VertexId, String)>,
+                Vec<router::RoutingTree>,
+                Vec<KeyRange>,
+                bool,
+                BTreeMap<ChipCoord, RoutingTable>,
+                BTreeSet<ChipCoord>,
+                BTreeMap<(VertexId, String), KeyRange>,
+            ),
              item: &tables::ChipWork| {
-                let (_, trees, ranges, use_default) = ctx;
+                let (_, trees, ranges, use_default, _, _, _) = ctx;
                 Ok((item.0, tables::chip_table(trees, ranges, item.0, &item.1, *use_default)))
             },
             |b: &mut Blackboard, ctx, chip_tables: Vec<(ChipCoord, RoutingTable)>| {
-                let (tree_keys, trees, _, _) = ctx;
+                let (tree_keys, trees, _, _, prior_tables, dirty, new_snapshot) = ctx;
                 b.put("routing_trees", RoutingForest {
                     trees: tree_keys.into_iter().zip(trees).collect(),
                 });
-                let t: BTreeMap<ChipCoord, RoutingTable> = chip_tables
-                    .into_iter()
-                    .filter(|(_, table)| !table.is_empty())
-                    .collect();
-                b.put("routing_tables", t);
-                Ok(())
-            },
-        ),
-        // Sharded: one work item per oversubscribed table; fitting
-        // tables ride along in the context untouched.
-        Algorithm::sharded(
-            "table_compressor",
-            &["routing_tables", "mapping_config"],
-            &["compressed_tables"],
-            |b: &mut Blackboard| {
-                let c: &MappingConfig = b.get("mapping_config")?;
-                let run_compressor = c.compress_tables;
-                let enforce = c.enforce_table_capacity;
-                let mut t: BTreeMap<ChipCoord, RoutingTable> = b.take("routing_tables")?;
-                let mut victims = Vec::new();
-                if run_compressor {
-                    let chips: Vec<ChipCoord> =
-                        t.iter().filter(|(_, tb)| !tb.fits()).map(|(c, _)| *c).collect();
-                    for chip in chips {
-                        let table = t.remove(&chip).unwrap();
-                        victims.push((chip, table));
+                let mut tables = prior_tables;
+                let mut regen: BTreeMap<ChipCoord, RoutingTable> =
+                    chip_tables.into_iter().collect();
+                let mut changed: BTreeSet<ChipCoord> = BTreeSet::new();
+                for chip in &dirty {
+                    let old = tables.remove(chip);
+                    let new = regen.remove(chip).filter(|t| !t.is_empty());
+                    match (old, new) {
+                        (Some(o), Some(n)) => {
+                            if o != n {
+                                changed.insert(*chip);
+                            }
+                            tables.insert(*chip, n);
+                        }
+                        (Some(_), None) => {
+                            changed.insert(*chip); // table vanished
+                        }
+                        (None, Some(n)) => {
+                            changed.insert(*chip);
+                            tables.insert(*chip, n);
+                        }
+                        (None, None) => {}
                     }
                 }
-                Ok(((t, enforce), victims))
+                b.put("routing_tables", tables);
+                b.put("tables_dirty_chips", changed);
+                b.put("tables_keys_snapshot", new_snapshot);
+                Ok(())
             },
-            |_ctx: &(BTreeMap<ChipCoord, RoutingTable>, bool),
-             item: &(ChipCoord, RoutingTable)| {
-                Ok((item.0, compress::compress(&item.1)))
+        )
+        .with_fp_inputs(&["machine", "routing_trees", "routing_keys", "mapping_config"]),
+        // Compression, sharded per changed chip. Fresh maps use the
+        // aggressive order-exploiting compressor (historical behaviour);
+        // incrementally-dirty tables use `compress_exact`, whose covers
+        // can never capture a key outside the originals — required
+        // because retired keys may still be sent nowhere near this chip
+        // in a later session epoch.
+        Algorithm::sharded(
+            "table_compressor",
+            &["routing_tables", "mapping_config", "tables_dirty_chips"],
+            &["compressed_tables", "install_chips"],
+            |b: &mut Blackboard| {
+                let (run_compressor, enforce) = {
+                    let c: &MappingConfig = b.get("mapping_config")?;
+                    (c.compress_tables, c.enforce_table_capacity)
+                };
+                let had_prior = b.has("compressed_tables");
+                let prior: BTreeMap<ChipCoord, RoutingTable> =
+                    if had_prior { b.take("compressed_tables")? } else { BTreeMap::new() };
+                let dirty: BTreeSet<ChipCoord> = if had_prior {
+                    b.get::<BTreeSet<ChipCoord>>("tables_dirty_chips")?.clone()
+                } else {
+                    b.get::<BTreeMap<ChipCoord, RoutingTable>>("routing_tables")?
+                        .keys()
+                        .copied()
+                        .collect()
+                };
+                let uncompressed: &BTreeMap<ChipCoord, RoutingTable> =
+                    b.get("routing_tables")?;
+                let work: Vec<(ChipCoord, RoutingTable, bool)> = dirty
+                    .iter()
+                    .filter_map(|c| uncompressed.get(c).map(|t| (*c, t.clone(), had_prior)))
+                    .collect();
+                Ok(((prior, dirty, enforce, run_compressor), work))
+            },
+            |ctx: &(BTreeMap<ChipCoord, RoutingTable>, BTreeSet<ChipCoord>, bool, bool),
+             item: &(ChipCoord, RoutingTable, bool)| {
+                let (_, _, _, run_compressor) = ctx;
+                let (chip, table, exact) = item;
+                let out = if *run_compressor && !table.fits() {
+                    if *exact { compress::compress_exact(table) } else { compress::compress(table) }
+                } else {
+                    table.clone()
+                };
+                Ok((*chip, out))
             },
             |b: &mut Blackboard, ctx, compressed: Vec<(ChipCoord, RoutingTable)>| {
-                let (mut t, enforce) = ctx;
-                for (chip, table) in compressed {
-                    t.insert(chip, table);
+                let (prior, dirty, enforce, _) = ctx;
+                let mut out = prior;
+                for chip in &dirty {
+                    out.remove(chip);
                 }
-                if enforce {
-                    for (chip, table) in &t {
+                for (chip, table) in compressed {
+                    if enforce {
                         anyhow::ensure!(
                             table.fits(),
                             "routing table on chip {chip:?} exceeds TCAM after compression"
                         );
                     }
+                    out.insert(chip, table);
                 }
-                b.put("compressed_tables", t);
+                b.put("compressed_tables", out);
+                b.put("install_chips", dirty);
                 Ok(())
             },
-        ),
+        )
+        .with_fp_inputs(&["routing_tables", "mapping_config"]),
+        // Tag allocation: cheap, so a miss re-runs it in full. Keyed on
+        // the tag-request digest (not placements — see
+        // `tag_requests_fingerprint` for the soundness argument).
         Algorithm::new(
             "tag_allocator",
             &["machine", "machine_graph", "placements"],
@@ -309,30 +625,74 @@ pub fn map_graph_via_engine(
                 b.put("ip_tags", tags);
                 Ok(())
             },
-        ),
+        )
+        .with_fp_inputs(&["machine", "tag_requests"]),
     ];
 
     let workflow = Executor::new(algorithms)
         .with_threads(config.options.threads)
-        .execute(
-            &mut board,
+        .execute_cached(
+            board,
             &["placements", "compressed_tables", "routing_keys", "ip_tags"],
+            &mut state.cache,
         )?;
 
-    let placements: Placements = board.take("placements")?;
-    let forest: RoutingForest = board.take("routing_trees")?;
-    let keys: BTreeMap<(VertexId, String), KeyRange> = board.take("routing_keys")?;
-    let tables: BTreeMap<ChipCoord, crate::machine::router::RoutingTable> =
-        board.take("compressed_tables")?;
-    let (iptags, reverse_iptags): (
-        BTreeMap<(VertexId, String), AllocatedIpTag>,
-        BTreeMap<(VertexId, String), AllocatedReverseIpTag>,
-    ) = board.take("ip_tags")?;
+    // Clone the outputs off the board: the board itself stays intact as
+    // the prior state of the next incremental pass.
+    let placements = board.get::<Placements>("placements")?.clone();
+    let forest = board.get::<RoutingForest>("routing_trees")?.clone();
+    let keys = board
+        .get::<BTreeMap<(VertexId, String), KeyRange>>("routing_keys")?
+        .clone();
+    let tables = board
+        .get::<BTreeMap<ChipCoord, crate::machine::router::RoutingTable>>("compressed_tables")?
+        .clone();
+    let (iptags, reverse_iptags) = board
+        .get::<(
+            BTreeMap<(VertexId, String), AllocatedIpTag>,
+            BTreeMap<(VertexId, String), AllocatedReverseIpTag>,
+        )>("ip_tags")?
+        .clone();
+    // A cached compressor means no table changed at all this pass; the
+    // persisted install set describes an *earlier* pass, not this one.
+    let compressor_ran = state
+        .cache
+        .last_run
+        .iter()
+        .any(|s| s.name == "table_compressor" && !s.cached);
+    let install_chips = if compressor_ran {
+        board
+            .get::<std::collections::BTreeSet<ChipCoord>>("install_chips")?
+            .clone()
+    } else {
+        std::collections::BTreeSet::new()
+    };
 
-    Ok((
-        Mapping { placements, forest, keys, tables, iptags, reverse_iptags },
+    Ok(MapOutcome {
+        mapping: Mapping { placements, forest, keys, tables, iptags, reverse_iptags },
         workflow,
-    ))
+        stages: state.cache.last_run.clone(),
+        install_chips,
+    })
+}
+
+/// Run the pipeline through the Figure-10 engine from a fresh
+/// [`PipelineState`]: the historical one-shot entry point. Returns the
+/// mapping plus the executed workflow (for provenance).
+pub fn map_graph_via_engine(
+    machine: &Machine,
+    graph: &MachineGraph,
+    config: &MappingConfig,
+) -> anyhow::Result<(Mapping, crate::algorithms::Workflow)> {
+    let mut state = PipelineState::new();
+    let out = map_graph_incremental(
+        &mut state,
+        machine,
+        graph,
+        config,
+        &std::collections::BTreeSet::new(),
+    )?;
+    Ok((out.mapping, out.workflow))
 }
 
 #[cfg(test)]
@@ -361,5 +721,114 @@ mod engine_tests {
         let pos = |n: &str| workflow.0.iter().position(|x| x == n).unwrap();
         assert!(pos("radial_placer") < pos("ner_router"));
         assert!(pos("table_generator") < pos("table_compressor"));
+    }
+
+    #[test]
+    fn incremental_noop_pass_hits_every_stage() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        g.add_edge(a, b, "p");
+        let mut state = PipelineState::new();
+        let cfg = MappingConfig::default();
+        let first =
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+        assert!(first.stages.iter().all(|s| !s.cached), "first map is full");
+        assert!(!first.install_chips.is_empty());
+        let again =
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+        assert!(again.stages.iter().all(|s| s.cached), "{:?}", again.stages);
+        assert!(again.install_chips.is_empty(), "no table changed");
+        assert_eq!(first.mapping.keys, again.mapping.keys);
+        assert_eq!(
+            first.mapping.placements.of(a),
+            again.mapping.placements.of(a)
+        );
+    }
+
+    #[test]
+    fn incremental_delta_pass_is_partial_and_routes_correctly() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        g.add_edge(a, b, "p");
+        let mut state = PipelineState::new();
+        let cfg = MappingConfig::default();
+        let first =
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+        // Grow the graph: a new vertex and a new partition.
+        let c = g.add_vertex(TestVertex::arc("c"));
+        g.add_edge(a, c, "q");
+        let third =
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+        let cached = third.stages.iter().filter(|s| s.cached).count();
+        assert!(cached >= 1, "a small delta must reuse stages: {:?}", third.stages);
+        // Pins held, old keys survived, new partition exists.
+        assert_eq!(third.mapping.placements.of(a), first.mapping.placements.of(a));
+        assert_eq!(third.mapping.placements.of(b), first.mapping.placements.of(b));
+        assert_eq!(
+            third.mapping.keys[&(a, "p".to_string())],
+            first.mapping.keys[&(a, "p".to_string())]
+        );
+        assert!(third.mapping.forest.trees.contains_key(&(a, "q".to_string())));
+        // The merged tables still route every partition to exactly its
+        // targets (the E2 oracle).
+        for p in g.partitions() {
+            let src = third.mapping.placement(p.pre).unwrap();
+            let key = third.mapping.keys[&(p.pre, p.id.clone())];
+            let expected: Vec<_> = g
+                .partition_targets(p)
+                .into_iter()
+                .map(|t| {
+                    let l = third.mapping.placement(t).unwrap();
+                    (l.chip(), l.p)
+                })
+                .collect();
+            tables::check_tables(&m, &third.mapping.tables, src.chip(), key.base, &expected)
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn incremental_remove_retires_trees_and_keys() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        let c = g.add_vertex(TestVertex::arc("c"));
+        g.add_edge(a, b, "p");
+        g.add_edge(c, b, "r");
+        let mut state = PipelineState::new();
+        let cfg = MappingConfig::default();
+        let first =
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+        g.remove_vertex(a).unwrap();
+        let second =
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+        assert_eq!(second.mapping.placements.of(a), None);
+        assert!(!second.mapping.keys.contains_key(&(a, "p".to_string())));
+        assert!(!second.mapping.forest.trees.contains_key(&(a, "p".to_string())));
+        // The surviving partition kept its key and its tree.
+        assert_eq!(
+            second.mapping.keys[&(c, "r".to_string())],
+            first.mapping.keys[&(c, "r".to_string())]
+        );
+        assert_eq!(second.mapping.placements.of(c), first.mapping.placements.of(c));
+        for p in g.partitions() {
+            let src = second.mapping.placement(p.pre).unwrap();
+            let key = second.mapping.keys[&(p.pre, p.id.clone())];
+            let expected: Vec<_> = g
+                .partition_targets(p)
+                .into_iter()
+                .map(|t| {
+                    let l = second.mapping.placement(t).unwrap();
+                    (l.chip(), l.p)
+                })
+                .collect();
+            tables::check_tables(&m, &second.mapping.tables, src.chip(), key.base, &expected)
+                .unwrap();
+        }
     }
 }

@@ -217,6 +217,131 @@ pub fn place(machine: &Machine, graph: &MachineGraph) -> anyhow::Result<Placemen
     Ok(placements)
 }
 
+/// Incremental placement (DESIGN.md §7): every vertex present in
+/// `prior` keeps its exact core (the *pin*), vertices no longer in the
+/// graph simply vanish, and only new vertices are placed — into the
+/// capacity the pins and `reserved` cores (the bulk data plane's system
+/// cores) leave over, with the same constrained-first + radial
+/// first-fit policy as [`place`].
+///
+/// Errors when the pins make placement infeasible (a new constrained
+/// vertex collides with a pin, or no capacity remains) — the caller
+/// falls back to a full from-scratch re-map. New *virtual* vertices are
+/// also an error: they need a machine rebuild to gain their virtual
+/// chip.
+pub fn place_incremental(
+    machine: &Machine,
+    graph: &MachineGraph,
+    prior: &Placements,
+    reserved: &std::collections::BTreeSet<CoreLocation>,
+) -> anyhow::Result<Placements> {
+    let mut placements = Placements::default();
+    let mut ledgers: BTreeMap<ChipCoord, ChipLedger> = machine
+        .chips()
+        .filter(|c| !c.is_virtual)
+        .map(|c| {
+            (
+                (c.x, c.y),
+                ChipLedger {
+                    free_cores: c
+                        .application_processors()
+                        .map(|p| p.id)
+                        .filter(|p| !reserved.contains(&CoreLocation::new(c.x, c.y, *p)))
+                        .collect(),
+                    sdram_free: c.sdram.user_size() as u64,
+                },
+            )
+        })
+        .collect();
+
+    // Pass 1: pins. Charge their cores and SDRAM so new vertices see
+    // only the genuinely remaining capacity.
+    let mut new_plain: Vec<VertexId> = Vec::new();
+    let mut new_chip_constrained: Vec<(VertexId, ChipCoord)> = Vec::new();
+    let mut new_core_constrained: Vec<(VertexId, CoreLocation)> = Vec::new();
+    for (vid, vertex) in graph.vertices() {
+        if let Some(loc) = prior.of(vid) {
+            if vertex.virtual_link().is_none() {
+                let ledger = ledgers
+                    .get_mut(&loc.chip())
+                    .ok_or_else(|| anyhow::anyhow!("pinned chip {:?} missing", loc.chip()))?;
+                let pos = ledger.free_cores.iter().position(|p| *p == loc.p).ok_or_else(
+                    || anyhow::anyhow!("pinned core {loc} no longer available"),
+                )?;
+                ledger.free_cores.remove(pos);
+                charge_sdram(ledger, graph, vid, loc.chip())?;
+            }
+            placements.insert(vid, loc)?;
+        } else if vertex.virtual_link().is_some() {
+            anyhow::bail!(
+                "new device vertex {} needs a virtual chip (full re-map required)",
+                vertex.label()
+            );
+        } else if let Some(loc) = vertex.placement_constraint() {
+            new_core_constrained.push((vid, loc));
+        } else if let Some(chip) = vertex.chip_constraint() {
+            new_chip_constrained.push((vid, chip));
+        } else {
+            new_plain.push(vid);
+        }
+    }
+
+    // Pass 2: new constrained vertices (same order as the full placer).
+    for (vid, loc) in new_core_constrained {
+        let ledger = ledgers
+            .get_mut(&loc.chip())
+            .ok_or_else(|| anyhow::anyhow!("constraint on missing chip {:?}", loc.chip()))?;
+        let pos = ledger
+            .free_cores
+            .iter()
+            .position(|p| *p == loc.p)
+            .ok_or_else(|| anyhow::anyhow!("constrained core {loc} unavailable"))?;
+        ledger.free_cores.remove(pos);
+        charge_sdram(ledger, graph, vid, loc.chip())?;
+        placements.insert(vid, loc)?;
+    }
+    for (vid, chip) in new_chip_constrained {
+        let ledger = ledgers
+            .get_mut(&chip)
+            .ok_or_else(|| anyhow::anyhow!("chip constraint on missing chip {chip:?}"))?;
+        let p = ledger
+            .free_cores
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no free core on constrained chip {chip:?}"))?;
+        ledger.free_cores.retain(|c| *c != p);
+        charge_sdram(ledger, graph, vid, chip)?;
+        placements.insert(vid, CoreLocation::new(chip.0, chip.1, p))?;
+    }
+
+    // Pass 3: new plain vertices, radial first-fit over the remainder.
+    let order = radial_chip_order(machine);
+    let mut chip_cursor = 0usize;
+    for vid in new_plain {
+        let sdram = graph.vertex(vid).resources().sdram_bytes;
+        let mut tried = 0usize;
+        loop {
+            anyhow::ensure!(
+                tried < order.len(),
+                "machine full: cannot place new vertex {} incrementally",
+                graph.vertex(vid).label()
+            );
+            let chip = order[(chip_cursor + tried) % order.len()];
+            let ledger = ledgers.get_mut(&chip).unwrap();
+            if !ledger.free_cores.is_empty() && ledger.sdram_free >= sdram {
+                let p = ledger.free_cores.remove(0);
+                ledger.sdram_free -= sdram;
+                placements.insert(vid, CoreLocation::new(chip.0, chip.1, p))?;
+                chip_cursor = (chip_cursor + tried) % order.len();
+                break;
+            }
+            tried += 1;
+        }
+    }
+
+    Ok(placements)
+}
+
 fn charge_sdram(
     ledger: &mut ChipLedger,
     graph: &MachineGraph,
@@ -346,6 +471,94 @@ mod tests {
         }
         let p = place(&m, &g).unwrap();
         assert!(!p.used_chips().contains(&(1, 1)));
+    }
+
+    #[test]
+    fn incremental_pins_survivors_and_places_new() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let ids: Vec<_> = (0..20)
+            .map(|i| g.add_vertex(TestVertex::arc(&format!("v{i}"))))
+            .collect();
+        let prior = place(&m, &g).unwrap();
+        // Remove one vertex, add two.
+        g.remove_vertex(ids[3]).unwrap();
+        let n1 = g.add_vertex(TestVertex::arc("n1"));
+        let n2 = g.add_vertex(TestVertex::arc("n2"));
+        let inc = place_incremental(&m, &g, &prior, &Default::default()).unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            if i == 3 {
+                assert_eq!(inc.of(*id), None, "removed vertex must be unplaced");
+            } else {
+                assert_eq!(inc.of(*id), prior.of(*id), "survivor moved");
+            }
+        }
+        let l1 = inc.of(n1).unwrap();
+        let l2 = inc.of(n2).unwrap();
+        assert_ne!(l1, l2, "new vertices need distinct cores");
+        assert_eq!(inc.len(), 21);
+    }
+
+    #[test]
+    fn incremental_respects_reserved_cores() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(TestVertex::arc("a"));
+        let prior = place(&m, &g).unwrap();
+        // Reserve every remaining core on the machine except one.
+        let mut reserved = BTreeSet::new();
+        let mut left = None;
+        for chip in m.chips().filter(|c| !c.is_virtual) {
+            for p in chip.application_processors().map(|p| p.id) {
+                let loc = CoreLocation::new(chip.x, chip.y, p);
+                if prior.of(a) == Some(loc) {
+                    continue;
+                }
+                if left.is_none() {
+                    left = Some(loc);
+                } else {
+                    reserved.insert(loc);
+                }
+            }
+        }
+        let b = g.add_vertex(TestVertex::arc("b"));
+        let inc = place_incremental(&m, &g, &prior, &reserved).unwrap();
+        assert_eq!(inc.of(b), left, "only the unreserved core may host b");
+        // One more vertex no longer fits.
+        g.add_vertex(TestVertex::arc("c"));
+        assert!(place_incremental(&m, &g, &prior, &reserved).is_err());
+    }
+
+    #[test]
+    fn incremental_conflicting_constraint_errors() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let loc = CoreLocation::new(0, 0, 1);
+        g.add_vertex(TestVertex::constrained("a", loc));
+        let prior = place(&m, &g).unwrap();
+        // A new vertex demanding the pinned core must fail (full re-map).
+        g.add_vertex(TestVertex::constrained("b", loc));
+        assert!(place_incremental(&m, &g, &prior, &Default::default()).is_err());
+    }
+
+    #[test]
+    fn incremental_matches_full_for_pure_appends() {
+        // With no SDRAM pressure, appending vertices incrementally lands
+        // them exactly where a full re-place of the final graph would.
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        for i in 0..10 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        let prior = place(&m, &g).unwrap();
+        for i in 10..25 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        let full = place(&m, &g).unwrap();
+        let inc = place_incremental(&m, &g, &prior, &Default::default()).unwrap();
+        for v in g.vertex_ids() {
+            assert_eq!(inc.of(v), full.of(v), "{v:?}");
+        }
     }
 
     #[test]

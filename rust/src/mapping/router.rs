@@ -60,9 +60,22 @@ impl RoutingTree {
 }
 
 /// All routing trees of a mapped graph.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct RoutingForest {
     pub trees: BTreeMap<(VertexId, String), RoutingTree>,
+}
+
+impl RoutingForest {
+    /// The real (non-virtual) chips a tree occupies — path chips
+    /// included, since every chip on the path holds a node (possibly
+    /// elided at table-generation time, but still invalidated by it).
+    pub fn tree_chips(tree: &RoutingTree, machine: &Machine) -> Vec<ChipCoord> {
+        tree.nodes
+            .keys()
+            .filter(|c| machine.chip(**c).map(|ch| !ch.is_virtual).unwrap_or(false))
+            .copied()
+            .collect()
+    }
 }
 
 /// One routing work item: an outgoing edge partition with its placements

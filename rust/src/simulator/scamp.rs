@@ -203,6 +203,97 @@ pub fn install_app(
     Ok(())
 }
 
+/// A core's region table (region id -> (sdram addr, length)) — how the
+/// incremental reloader (§6.5 "graph changed" path) finds where a
+/// still-valid region already lives so it can skip or overwrite it
+/// in place instead of re-transferring everything.
+pub fn region_table(
+    sim: &SimMachine,
+    loc: CoreLocation,
+) -> anyhow::Result<BTreeMap<u32, (u32, u32)>> {
+    Ok(sim
+        .chip(loc.chip())?
+        .cores
+        .get(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
+        .regions
+        .clone())
+}
+
+/// Unload a core entirely (back to Idle, app dropped). Used when a
+/// graph mutation removed the vertex that lived there. The bump
+/// allocator does not reclaim the core's SDRAM; stray multicast packets
+/// to an idle core are silently ignored by the fabric.
+pub fn unload_app(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<()> {
+    let chip = sim.chip_mut(loc.chip())?;
+    let core = chip
+        .cores
+        .get_mut(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+    anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded");
+    *core = SimCore::idle();
+    Ok(())
+}
+
+/// Replace the binary on an already-loaded core for a re-mapped run:
+/// the fresh `app` starts from Ready with tick counters zeroed, the
+/// given region table (regions themselves were written by the caller —
+/// often just the old ones, verified unchanged by digest), and
+/// recording channels reused in place when their capacity matches the
+/// request (write cursors reset), reallocated otherwise. Charges one
+/// flood-fill like the first load.
+pub fn reload_app(
+    sim: &mut SimMachine,
+    loc: CoreLocation,
+    binary_name: &str,
+    app: Box<dyn CoreApp>,
+    region_table: BTreeMap<u32, (u32, u32)>,
+    recording_sizes: BTreeMap<u32, u32>,
+) -> anyhow::Result<()> {
+    // Harvest reusable recording channels from the outgoing core.
+    let old_recordings = {
+        let chip = sim.chip_mut(loc.chip())?;
+        let core = chip
+            .cores
+            .get_mut(&loc.p)
+            .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+        anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded; install instead");
+        std::mem::take(&mut core.recordings)
+    };
+    let mut recordings = BTreeMap::new();
+    for (channel, size) in &recording_sizes {
+        let reuse = old_recordings
+            .get(channel)
+            .filter(|ch| ch.capacity == *size as usize)
+            .map(|ch| ch.addr);
+        let addr = match reuse {
+            Some(addr) => addr,
+            None => alloc_sdram(sim, loc.chip(), *size)?,
+        };
+        recordings.insert(
+            *channel,
+            RecordingChannel { addr, capacity: *size as usize, write_pos: 0, lost_bytes: 0 },
+        );
+    }
+    sim.advance_host_time(sim.config.wire.eth_read_rtt_ns); // binary load
+    let chip = sim.chip_mut(loc.chip())?;
+    let core = chip
+        .cores
+        .get_mut(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+    *core = SimCore {
+        app: Some(app),
+        state: CoreState::Ready,
+        binary_name: binary_name.to_string(),
+        regions: region_table,
+        recordings,
+        provenance: BTreeMap::new(),
+        ticks_done: 0,
+        run_until: 0,
+    };
+    Ok(())
+}
+
 /// Start signal: every Ready core runs `on_start` and becomes Running
 /// (it will not tick until a run cycle begins).
 pub fn signal_start(sim: &mut SimMachine) -> anyhow::Result<()> {

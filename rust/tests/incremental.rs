@@ -1,0 +1,259 @@
+//! E13 — incremental re-mapping equivalence (DESIGN.md §7).
+//!
+//! The contract of the §6.5 "graph changed" branch: `mutate → run`
+//! through the incremental reconcile path must produce recordings
+//! **byte-identical** to a fresh `SpiNNTools` built directly from the
+//! final graph and run for the same duration — across add-vertex,
+//! add-edge and remove-vertex deltas, at mapping-pool widths 1/2/8 —
+//! while re-running strictly fewer pipeline stages than the stage
+//! count.
+//!
+//! Cells are identified by grid position, not `VertexId`: the two tools
+//! instances number vertices differently (the incremental one carries
+//! tombstones), and key values / placements legitimately differ — only
+//! the *recorded behaviour* must match.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{MachineSpec, SpiNNTools, ToolsConfig};
+use spinntools::graph::VertexId;
+use spinntools::util::{prop, SplitMix64};
+
+type Pos = (u32, u32);
+
+/// A replayable workload description.
+#[derive(Clone)]
+struct Model {
+    cells: BTreeMap<Pos, bool>,
+    /// Directed edges, all in [`STATE_PARTITION`].
+    edges: BTreeSet<(Pos, Pos)>,
+}
+
+impl Model {
+    /// A `rows x cols` Conway grid with 8-neighbour links and a seeded
+    /// alive pattern.
+    fn grid(rows: u32, cols: u32, rng: &mut SplitMix64) -> Model {
+        let mut cells = BTreeMap::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                cells.insert((r, c), rng.below(3) == 0);
+            }
+        }
+        let mut edges = BTreeSet::new();
+        for r in 0..rows as i64 {
+            for c in 0..cols as i64 {
+                for dr in -1..=1i64 {
+                    for dc in -1..=1i64 {
+                        if (dr, dc) == (0, 0) {
+                            continue;
+                        }
+                        let (nr, nc) = (r + dr, c + dc);
+                        if nr >= 0 && nc >= 0 && nr < rows as i64 && nc < cols as i64 {
+                            edges.insert((
+                                (r as u32, c as u32),
+                                (nr as u32, nc as u32),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Model { cells, edges }
+    }
+
+    fn random_pos(&self, rng: &mut SplitMix64) -> Pos {
+        let all: Vec<Pos> = self.cells.keys().copied().collect();
+        all[rng.below(all.len())]
+    }
+}
+
+/// Build a tools instance from a model; returns position -> vertex id.
+fn build(tools: &mut SpiNNTools, model: &Model) -> BTreeMap<Pos, VertexId> {
+    let mut ids = BTreeMap::new();
+    for (pos, alive) in &model.cells {
+        ids.insert(
+            *pos,
+            tools
+                .add_machine_vertex(ConwayCellVertex::arc(pos.0, pos.1, *alive))
+                .unwrap(),
+        );
+    }
+    for (a, b) in &model.edges {
+        tools.add_machine_edge(ids[a], ids[b], STATE_PARTITION).unwrap();
+    }
+    ids
+}
+
+/// One graph delta, applicable both to a live tools instance (the
+/// incremental path) and to the model (the from-scratch reference).
+enum Delta {
+    AddVertex { pos: Pos, alive: bool, link_to: Pos },
+    AddEdge { a: Pos, b: Pos },
+    RemoveVertex { pos: Pos },
+}
+
+impl Delta {
+    fn apply_to_model(&self, model: &mut Model) {
+        match self {
+            Delta::AddVertex { pos, alive, link_to } => {
+                model.cells.insert(*pos, *alive);
+                model.edges.insert((*pos, *link_to));
+                model.edges.insert((*link_to, *pos));
+            }
+            Delta::AddEdge { a, b } => {
+                model.edges.insert((*a, *b));
+                model.edges.insert((*b, *a));
+            }
+            Delta::RemoveVertex { pos } => {
+                model.cells.remove(pos);
+                model.edges.retain(|(x, y)| x != pos && y != pos);
+            }
+        }
+    }
+
+    fn apply_to_tools(&self, tools: &mut SpiNNTools, ids: &mut BTreeMap<Pos, VertexId>) {
+        match self {
+            Delta::AddVertex { pos, alive, link_to } => {
+                let id = tools
+                    .add_machine_vertex(ConwayCellVertex::arc(pos.0, pos.1, *alive))
+                    .unwrap();
+                tools.add_machine_edge(id, ids[link_to], STATE_PARTITION).unwrap();
+                tools.add_machine_edge(ids[link_to], id, STATE_PARTITION).unwrap();
+                ids.insert(*pos, id);
+            }
+            Delta::AddEdge { a, b } => {
+                tools.add_machine_edge(ids[a], ids[b], STATE_PARTITION).unwrap();
+                tools.add_machine_edge(ids[b], ids[a], STATE_PARTITION).unwrap();
+            }
+            Delta::RemoveVertex { pos } => {
+                let id = ids.remove(pos).unwrap();
+                tools.remove_machine_vertex(id).unwrap();
+            }
+        }
+    }
+}
+
+/// The property: for `delta`, at every pool width, incremental
+/// recordings after `run(T1); mutate; run(T2)` equal a fresh build of
+/// the final graph run for `T2`.
+fn check_delta_equivalence(base: &Model, delta: Delta, t1: u64, t2: u64) {
+    let mut final_model = base.clone();
+    delta.apply_to_model(&mut final_model);
+
+    for threads in [1usize, 2, 8] {
+        // Incremental path.
+        let mut inc = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3).with_mapping_threads(threads),
+        )
+        .unwrap();
+        let mut inc_ids = build(&mut inc, base);
+        inc.run_ticks(t1).unwrap();
+        delta.apply_to_tools(&mut inc, &mut inc_ids);
+        inc.run_ticks(t2).unwrap();
+        let report = inc.remap_report().expect("reconcile must report").clone();
+        assert!(
+            report.stages_rerun < report.stage_count(),
+            "threads={threads}: small delta re-ran every stage: {report:?}"
+        );
+
+        // From-scratch reference: the final graph, fresh.
+        let mut fresh = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3).with_mapping_threads(threads),
+        )
+        .unwrap();
+        let fresh_ids = build(&mut fresh, &final_model);
+        fresh.run_ticks(t2).unwrap();
+
+        for (pos, fid) in &fresh_ids {
+            let f = fresh.recording(*fid);
+            let i = inc.recording(inc_ids[pos]);
+            assert_eq!(f.len() as u64, t2, "{pos:?}: wrong recording length");
+            assert_eq!(
+                f, i,
+                "threads={threads}: cell {pos:?} diverged (incremental vs fresh)"
+            );
+        }
+        // No survivor recordings for removed cells.
+        for pos in base.cells.keys() {
+            if !final_model.cells.contains_key(pos) {
+                // The id map dropped it; nothing to check beyond the
+                // fresh side not having it either.
+                assert!(!fresh_ids.contains_key(pos));
+            }
+        }
+    }
+}
+
+#[test]
+fn e13_add_vertex_delta_matches_from_scratch() {
+    prop::check(4, 0xADD__0001, |rng| {
+        let base = Model::grid(4, 4, rng);
+        let link_to = base.random_pos(rng);
+        let delta = Delta::AddVertex {
+            pos: (9, rng.below(4) as u32),
+            alive: rng.below(2) == 0,
+            link_to,
+        };
+        check_delta_equivalence(&base, delta, 2, 4);
+    });
+}
+
+#[test]
+fn e13_add_edge_delta_matches_from_scratch() {
+    prop::check(4, 0xADD__ED6E, |rng| {
+        let base = Model::grid(4, 4, rng);
+        // Two distinct cells, possibly already adjacent — re-adding a
+        // parallel edge is legal and changes the neighbour count.
+        let a = base.random_pos(rng);
+        let mut b = base.random_pos(rng);
+        while b == a {
+            b = base.random_pos(rng);
+        }
+        check_delta_equivalence(&base, Delta::AddEdge { a, b }, 2, 4);
+    });
+}
+
+#[test]
+fn e13_remove_vertex_delta_matches_from_scratch() {
+    prop::check(4, 0x0DE1_E7E, |rng| {
+        let base = Model::grid(4, 4, rng);
+        let pos = base.random_pos(rng);
+        check_delta_equivalence(&base, Delta::RemoveVertex { pos }, 2, 4);
+    });
+}
+
+#[test]
+fn e13_chained_deltas_stay_equivalent() {
+    // Several reconciles in sequence against one instance: the stage
+    // cache and journals must stay coherent across epochs.
+    let mut rng = SplitMix64::new(0xC4A1);
+    let mut model = Model::grid(4, 4, &mut rng);
+    let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+    let mut ids = build(&mut tools, &model);
+    tools.run_ticks(2).unwrap();
+
+    let deltas = [
+        Delta::AddVertex { pos: (9, 0), alive: true, link_to: (0, 0) },
+        Delta::RemoveVertex { pos: (2, 2) },
+        Delta::AddEdge { a: (0, 0), b: (3, 3) },
+    ];
+    for (i, delta) in deltas.into_iter().enumerate() {
+        delta.apply_to_model(&mut model);
+        delta.apply_to_tools(&mut tools, &mut ids);
+        tools.run_ticks(3).unwrap();
+
+        let mut fresh = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let fresh_ids = build(&mut fresh, &model);
+        fresh.run_ticks(3).unwrap();
+        for (pos, fid) in &fresh_ids {
+            assert_eq!(
+                fresh.recording(*fid),
+                tools.recording(ids[pos]),
+                "epoch {i}: cell {pos:?} diverged"
+            );
+        }
+        let report = tools.remap_report().unwrap();
+        assert!(report.stages_rerun < report.stage_count(), "epoch {i}: {report:?}");
+    }
+}
