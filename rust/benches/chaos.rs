@@ -1,0 +1,299 @@
+//! Experiment E14 — self-healing: heal-time vs full re-map
+//! (DESIGN.md §8).
+//!
+//! When a chip dies under a running workload, the supervisor re-maps
+//! *incrementally*: survivors stay pinned, the key allocator is a cache
+//! hit, and only the trees/tables the dead chip invalidated are
+//! rebuilt. This bench measures that heal re-map against a full
+//! from-scratch re-map of the same graph on the same degraded machine,
+//! on the 576-chip (12-board) 88x88 Conway workload the E9/E13 benches
+//! use — target: heal-map strictly faster, aiming ≥ 2x.
+//!
+//! A second, smaller end-to-end section drives the whole supervised
+//! tools flow: a mid-run chip death on a SpiNN-5 board, healed and then
+//! checked byte-identical (FNV digests) against a fresh run on the
+//! equivalently boot-degraded machine, with the `HealReport` timings
+//! recorded. Results land in `BENCH_chaos.json` at the repository root.
+//!
+//! ```sh
+//! cargo bench --bench chaos
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::apps::networks::conway_machine_graph;
+use spinntools::front::{
+    BootFaults, HealPolicy, MachineSpec, SpiNNTools, SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::machine::MachineBuilder;
+use spinntools::mapping::{
+    map_graph_incremental, tables::check_tables, MappingConfig, PipelineState,
+};
+use spinntools::simulator::{ChaosPlan, Fault};
+use spinntools::util::json::Json;
+use spinntools::util::{fnv1a_64, SplitMix64};
+
+const ROWS: u32 = 88;
+const COLS: u32 = 88;
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+/// E2 oracle over a seeded sample of partitions (as in the E13 bench).
+fn check_sampled_routing(
+    machine: &spinntools::machine::Machine,
+    graph: &spinntools::graph::MachineGraph,
+    mapping: &spinntools::mapping::Mapping,
+    samples: usize,
+    seed: u64,
+) {
+    let partitions: Vec<_> = graph.partitions().collect();
+    let mut rng = SplitMix64::new(seed);
+    for _ in 0..samples {
+        let p = partitions[rng.below(partitions.len())];
+        let src = mapping.placement(p.pre).expect("source placed");
+        let key = mapping.keys[&(p.pre, p.id.clone())];
+        let expected: Vec<_> = graph
+            .partition_targets(p)
+            .into_iter()
+            .map(|t| {
+                let l = mapping.placement(t).expect("target placed");
+                (l.chip(), l.p)
+            })
+            .collect();
+        check_tables(machine, &mapping.tables, src.chip(), key.base, &expected)
+            .expect("healed mapping routes a sampled partition wrongly");
+    }
+}
+
+/// End-to-end: supervised 8x8 Conway run on SpiNN-5, chip death at tick
+/// 2, healed, digest-compared against the boot-degraded twin. Returns
+/// (digests equal, heal report fields).
+fn end_to_end_heal() -> (bool, u64, u64, usize, usize) {
+    let rows = 8u32;
+    let alive = |r: u32, c: u32| (r * 31 + c * 17) % 3 == 0;
+    let build = |tools: &mut SpiNNTools| -> Vec<VertexId> {
+        let mut ids = Vec::new();
+        let mut map = BTreeMap::new();
+        for r in 0..rows {
+            for c in 0..rows {
+                let id = tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                    .unwrap();
+                map.insert((r, c), id);
+                ids.push(id);
+            }
+        }
+        for (&(r, c), &id) in &map {
+            for dr in -1..=1i64 {
+                for dc in -1..=1i64 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    let (nr, nc) = (r as i64 + dr, c as i64 + dc);
+                    if nr >= 0 && nc >= 0 && (nr as u32) < rows && (nc as u32) < rows {
+                        tools
+                            .add_machine_edge(id, map[&(nr as u32, nc as u32)], STATE_PARTITION)
+                            .unwrap();
+                    }
+                }
+            }
+        }
+        ids
+    };
+    let supervision = SupervisorConfig {
+        poll_interval_ticks: 1,
+        policy: HealPolicy::Remap,
+        max_heals: 4,
+    };
+
+    // Probe for a non-Ethernet chip the workload uses.
+    let mut probe = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let pids = build(&mut probe);
+    probe.run_ticks(1).unwrap();
+    let machine = MachineSpec::Spinn5.template();
+    let victim = pids
+        .iter()
+        .map(|v| probe.mapping().unwrap().placement(*v).unwrap().chip())
+        .find(|c| !machine.chip(*c).unwrap().is_ethernet())
+        .expect("workload spans more than the Ethernet chip");
+
+    let mut healed = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5).with_supervision(supervision),
+    )
+    .unwrap();
+    let hids = build(&mut healed);
+    healed.inject_chaos(ChaosPlan::new().with(2, Fault::ChipDeath(victim)));
+    healed.run_ticks(8).unwrap();
+    let report = healed.heal_reports()[0].clone();
+
+    let mut fresh = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5)
+            .with_supervision(supervision)
+            .with_boot_faults(BootFaults { chips: vec![victim], ..Default::default() }),
+    )
+    .unwrap();
+    let fids = build(&mut fresh);
+    fresh.run_ticks(8).unwrap();
+
+    let digest = |tools: &SpiNNTools, ids: &[VertexId]| -> u64 {
+        let mut h = 0u64;
+        for (i, id) in ids.iter().enumerate() {
+            h ^= fnv1a_64(tools.recording(*id)).rotate_left((i % 61) as u32);
+        }
+        h
+    };
+    let equal = digest(&healed, &hids) == digest(&fresh, &fids);
+    (
+        equal,
+        report.heal_elapsed_us,
+        report.map_elapsed_us,
+        report.vertices_moved,
+        report.tables_rewritten,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E14: heal-time vs full re-map on a 576-chip (12-board) virtual machine");
+    let machine = MachineBuilder::boards(12).build();
+    assert_eq!(machine.n_chips(), 576);
+    let config = MappingConfig::default();
+    let graph = conway_machine_graph(ROWS, COLS, |r, c| (r + c) % 3 == 0);
+
+    // Warm pipeline: the state a running workload would hold.
+    let mut state = PipelineState::new();
+    let t = Instant::now();
+    let first = map_graph_incremental(
+        &mut state, &machine, &graph, &config, &Default::default(), &Default::default(),
+    )?;
+    let initial_ms = ms(t);
+    println!(
+        "initial full map: {initial_ms:.1} ms ({} vertices, {} tables)",
+        graph.n_vertices(),
+        first.mapping.tables.len()
+    );
+
+    // The fault: kill the chip hosting the middle vertex.
+    let dead = first
+        .mapping
+        .placement(VertexId((ROWS / 2) * COLS + COLS / 2))
+        .expect("middle vertex placed")
+        .chip();
+    let victims = graph
+        .vertex_ids()
+        .filter(|v| first.mapping.placement(*v).map(|l| l.chip()) == Some(dead))
+        .count();
+    let mut degraded = machine.clone();
+    degraded.remove_chip(dead);
+    let mut forbidden = BTreeSet::new();
+    forbidden.insert(dead);
+    println!("fault: chip {dead:?} died ({victims} resident vertices displaced)");
+
+    // Heal re-map against the warm state (what the supervisor runs).
+    let t = Instant::now();
+    let heal = map_graph_incremental(
+        &mut state, &degraded, &graph, &config, &Default::default(), &forbidden,
+    )?;
+    let heal_ms = ms(t);
+    let cached = heal.stages.iter().filter(|s| s.cached).count();
+    println!(
+        "heal re-map: {heal_ms:.1} ms ({cached} stages cached, {} tables to reinstall)",
+        heal.install_chips.len()
+    );
+
+    // Full from-scratch re-map of the same graph on the same degraded
+    // machine (what a heal-less toolchain would have to do).
+    let mut fresh_state = PipelineState::new();
+    let t = Instant::now();
+    let full = map_graph_incremental(
+        &mut fresh_state, &degraded, &graph, &config, &Default::default(), &forbidden,
+    )?;
+    let full_ms = ms(t);
+    println!("full re-map on degraded machine: {full_ms:.1} ms");
+
+    // Soundness: survivors pinned, victims off the dead chip, oracle ok.
+    let mut moved = 0usize;
+    for v in graph.vertex_ids() {
+        let was = first.mapping.placement(v).unwrap();
+        let now = heal.mapping.placement(v).unwrap();
+        assert_ne!(now.chip(), dead, "vertex left on the dead chip");
+        if was.chip() == dead {
+            moved += 1;
+        } else {
+            assert_eq!(was, now, "survivor moved during heal");
+        }
+    }
+    assert_eq!(moved, victims);
+    assert_eq!(
+        heal.mapping.placements.len(),
+        full.mapping.placements.len()
+    );
+    check_sampled_routing(&degraded, &graph, &heal.mapping, 150, 0xE14);
+
+    let speedup = full_ms / heal_ms.max(1e-6);
+    let target_met = speedup >= 2.0 && heal_ms < full_ms;
+    println!(
+        "heal speedup over full re-map: {speedup:.2}x (heal < full: {}; target >= 2x: {})",
+        heal_ms < full_ms,
+        if target_met { "MET" } else { "MISSED" }
+    );
+
+    // End-to-end supervised heal at SpiNN-5 scale.
+    let (digests_equal, heal_us, map_us, e2e_moved, e2e_tables) = end_to_end_heal();
+    println!(
+        "end-to-end heal: recordings {} (heal {heal_us} us, map {map_us} us, \
+         {e2e_moved} vertices moved, {e2e_tables} tables rewritten)",
+        if digests_equal { "EQUAL to boot-degraded twin" } else { "DIVERGED" }
+    );
+    assert!(digests_equal, "healed run diverged from the boot-degraded twin");
+
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("E14_self_healing".to_string()));
+    root.insert("machine_chips".to_string(), Json::Num(machine.n_chips() as f64));
+    root.insert("vertices".to_string(), Json::Num(graph.n_vertices() as f64));
+    root.insert("dead_chip_residents".to_string(), Json::Num(victims as f64));
+    root.insert("initial_full_map_ms".to_string(), Json::Num(initial_ms));
+    root.insert("heal_remap_ms".to_string(), Json::Num(heal_ms));
+    root.insert("full_remap_ms".to_string(), Json::Num(full_ms));
+    root.insert("speedup".to_string(), Json::Num(speedup));
+    root.insert("target_speedup".to_string(), Json::Num(2.0));
+    root.insert("target_met".to_string(), Json::Bool(target_met));
+    root.insert("stages_cached".to_string(), Json::Num(cached as f64));
+    root.insert("stages_total".to_string(), Json::Num(heal.stages.len() as f64));
+    root.insert(
+        "tables_reinstalled".to_string(),
+        Json::Num(heal.install_chips.len() as f64),
+    );
+    root.insert("e2e_recording_digests_equal".to_string(), Json::Bool(digests_equal));
+    root.insert("e2e_heal_elapsed_us".to_string(), Json::Num(heal_us as f64));
+    root.insert("e2e_heal_map_us".to_string(), Json::Num(map_us as f64));
+    root.insert("e2e_vertices_moved".to_string(), Json::Num(e2e_moved as f64));
+    root.insert("e2e_tables_rewritten".to_string(), Json::Num(e2e_tables as f64));
+    root.insert(
+        "stages".to_string(),
+        Json::Arr(
+            heal.stages
+                .iter()
+                .map(|s| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(s.name.clone()));
+                    o.insert("cached".to_string(), Json::Bool(s.cached));
+                    o.insert("elapsed_us".to_string(), Json::Num(s.elapsed_us as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_chaos.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
+    Ok(())
+}

@@ -159,7 +159,7 @@ fn main() -> anyhow::Result<()> {
     let mut graph = conway_machine_graph(ROWS, COLS, |r, c| (r + c) % 3 == 0);
     let mut state = PipelineState::new();
     let t = Instant::now();
-    let first = map_graph_incremental(&mut state, &machine, &graph, &config, &Default::default())?;
+    let first = map_graph_incremental(&mut state, &machine, &graph, &config, &Default::default(), &Default::default())?;
     let initial_ms = ms(t);
     println!(
         "initial full map: {:.1} ms ({} vertices, {} tables)",
@@ -174,7 +174,7 @@ fn main() -> anyhow::Result<()> {
 
     // Incremental re-map against the warm state.
     let t = Instant::now();
-    let inc = map_graph_incremental(&mut state, &machine, &graph, &config, &Default::default())?;
+    let inc = map_graph_incremental(&mut state, &machine, &graph, &config, &Default::default(), &Default::default())?;
     let incremental_ms = ms(t);
     let cached = inc.stages.iter().filter(|s| s.cached).count();
     println!(
@@ -188,7 +188,7 @@ fn main() -> anyhow::Result<()> {
     let mut fresh_state = PipelineState::new();
     let t = Instant::now();
     let full =
-        map_graph_incremental(&mut fresh_state, &machine, &graph, &config, &Default::default())?;
+        map_graph_incremental(&mut fresh_state, &machine, &graph, &config, &Default::default(), &Default::default())?;
     let full_ms = ms(t);
     println!("from-scratch map of mutated graph: {full_ms:.1} ms");
 

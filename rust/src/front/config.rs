@@ -2,7 +2,7 @@
 
 use std::path::PathBuf;
 
-use crate::machine::{Machine, MachineBuilder};
+use crate::machine::{ChipCoord, CoreLocation, Direction, Machine, MachineBuilder};
 use crate::mapping::MappingConfig;
 use crate::simulator::SimConfig;
 
@@ -63,6 +63,72 @@ pub enum LoadMethod {
     FastMulticast,
 }
 
+/// What the run supervisor does when it catches a runtime failure
+/// (dead core, dead chip, dead link) mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealPolicy {
+    /// Stop the run with a diagnostic error: the failure classification
+    /// plus each failed core's IOBUF text.
+    Abort,
+    /// Self-heal: re-discover the degraded machine, re-map incrementally
+    /// around the dead resources (survivors stay pinned), reload the
+    /// displaced vertices, and restart the run from tick 0.
+    Remap,
+}
+
+/// Run supervision (§6.3.5 taken seriously at million-core scale): poll
+/// core states on a cadence *during* the run instead of only at its
+/// end, classify failures, and apply a [`HealPolicy`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SupervisorConfig {
+    /// How many timer ticks run between core-state polls. The run is
+    /// executed in chunks of this many ticks (each chunk pauses at its
+    /// boundary exactly like a Figure-9 cycle edge).
+    pub poll_interval_ticks: u64,
+    pub policy: HealPolicy,
+    /// Upper bound on heals within one `run_ticks` call — a machine
+    /// failing faster than it can be healed must eventually abort.
+    pub max_heals: usize,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self { poll_interval_ticks: 1, policy: HealPolicy::Remap, max_heals: 4 }
+    }
+}
+
+/// Boot-time fault injection (§2's blacklist): resources removed from
+/// the machine at discovery, before any mapping happens. The
+/// equivalently-degraded twin of a runtime [`crate::simulator::Fault`]
+/// set — the chaos property suite compares healed runs against fresh
+/// runs built with these.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BootFaults {
+    pub chips: Vec<ChipCoord>,
+    pub cores: Vec<CoreLocation>,
+    pub links: Vec<(ChipCoord, Direction)>,
+}
+
+impl BootFaults {
+    pub fn is_empty(&self) -> bool {
+        self.chips.is_empty() && self.cores.is_empty() && self.links.is_empty()
+    }
+
+    /// Apply the blacklist to a machine builder.
+    pub fn apply(&self, mut builder: MachineBuilder) -> MachineBuilder {
+        for c in &self.chips {
+            builder = builder.dead_chip(*c);
+        }
+        for loc in &self.cores {
+            builder = builder.dead_core(loc.chip(), loc.p);
+        }
+        for (c, d) in &self.links {
+            builder = builder.dead_link(*c, *d);
+        }
+        builder
+    }
+}
+
 /// Full tool configuration (§6.1).
 #[derive(Debug, Clone)]
 pub struct ToolsConfig {
@@ -86,6 +152,12 @@ pub struct ToolsConfig {
     pub data_plane_threads: usize,
     /// Safety margin of SDRAM per chip left unallocated to recording.
     pub recording_slack_bytes: u64,
+    /// Mid-run failure supervision. `None` (the default) keeps the
+    /// historical behaviour: core states are only checked when the run
+    /// completes.
+    pub supervision: Option<SupervisorConfig>,
+    /// Resources blacklisted at machine discovery (§2).
+    pub boot_faults: BootFaults,
 }
 
 impl ToolsConfig {
@@ -101,7 +173,22 @@ impl ToolsConfig {
             fast_port: 17895,
             data_plane_threads: 0,
             recording_slack_bytes: 1024 * 1024,
+            supervision: None,
+            boot_faults: BootFaults::default(),
         }
+    }
+
+    /// The machine builder for discovery, with the boot-time blacklist
+    /// applied (§6.3.1 + §2).
+    pub fn machine_builder(&self) -> MachineBuilder {
+        self.boot_faults.apply(self.machine.build())
+    }
+
+    /// A template machine for resource estimation before discovery —
+    /// also blacklist-aware, so capacity estimates match what discovery
+    /// will actually find.
+    pub fn machine_template(&self) -> Machine {
+        self.machine_builder().build()
     }
 
     /// A virtual SpiNN-5 machine of `n` boards.
@@ -157,6 +244,18 @@ impl ToolsConfig {
         self.mapping.options.threads = threads;
         self
     }
+
+    /// Enable mid-run supervision (poll cadence + heal policy).
+    pub fn with_supervision(mut self, supervision: SupervisorConfig) -> Self {
+        self.supervision = Some(supervision);
+        self
+    }
+
+    /// Blacklist resources at machine discovery (§2).
+    pub fn with_boot_faults(mut self, faults: BootFaults) -> Self {
+        self.boot_faults = faults;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +285,33 @@ mod tests {
     fn timestep_propagates_to_sim() {
         let c = ToolsConfig::new(MachineSpec::Spinn3).with_timestep_us(500);
         assert_eq!(c.sim.timestep_us, 500);
+    }
+
+    #[test]
+    fn boot_faults_shape_the_discovered_machine() {
+        let faults = BootFaults {
+            chips: vec![(1, 1)],
+            cores: vec![CoreLocation::new(0, 1, 3)],
+            links: vec![((0, 0), Direction::East)],
+        };
+        let c = ToolsConfig::new(MachineSpec::Spinn3).with_boot_faults(faults);
+        let m = c.machine_template();
+        assert!(m.chip((1, 1)).is_none());
+        assert!(m.chip((0, 1)).unwrap().processor(3).is_none());
+        assert_eq!(m.link_target((0, 0), Direction::East), None);
+        // Default config: no blacklist, no supervision.
+        let plain = ToolsConfig::new(MachineSpec::Spinn3);
+        assert!(plain.boot_faults.is_empty());
+        assert!(plain.supervision.is_none());
+        assert_eq!(plain.machine_template().n_chips(), 4);
+    }
+
+    #[test]
+    fn supervisor_defaults() {
+        let s = SupervisorConfig::default();
+        assert_eq!(s.poll_interval_ticks, 1);
+        assert_eq!(s.policy, HealPolicy::Remap);
+        assert!(s.max_heals >= 1);
     }
 
     #[test]

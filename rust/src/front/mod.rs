@@ -14,8 +14,11 @@ mod provenance;
 mod tools;
 
 pub use buffer::{plan_run_cycles, RunCyclePlan};
-pub use config::{ExtractionMethod, LoadMethod, MachineSpec, ToolsConfig};
+pub use config::{
+    BootFaults, ExtractionMethod, HealPolicy, LoadMethod, MachineSpec, SupervisorConfig,
+    ToolsConfig,
+};
 pub use extraction::{DataPlaneOptions, FastPath, WriteStats};
 pub use live::{LiveEventListener, LiveInjector};
-pub use provenance::{ProvenanceReport, RemapReport, VertexProvenance};
+pub use provenance::{HealReport, ProvenanceReport, RemapReport, VertexProvenance};
 pub use tools::SpiNNTools;

@@ -61,6 +61,29 @@ impl RemapReport {
     }
 }
 
+/// One self-healing pass (DESIGN.md §8): what failed, what the heal
+/// moved, and what it cost. Recorded by the run supervisor every time
+/// [`crate::front::config::HealPolicy::Remap`] repairs a run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HealReport {
+    /// Human-readable descriptions of the faults this heal repaired
+    /// (classification + location + any IOBUF excerpt).
+    pub faults: Vec<String>,
+    /// Vertices whose placement changed (displaced off dead resources).
+    pub vertices_moved: usize,
+    /// Chips whose routing tables were reinstalled.
+    pub tables_rewritten: usize,
+    /// Host wall-clock of the mapping pass alone, µs.
+    pub map_elapsed_us: u64,
+    /// Host wall-clock of the whole heal (re-discovery, re-map, reload,
+    /// restart), µs.
+    pub heal_elapsed_us: u64,
+    /// Pipeline stages served from the fingerprint cache during the
+    /// heal's re-map (the reason heal-time beats a full re-map).
+    pub stages_cached: usize,
+    pub stages_rerun: usize,
+}
+
 /// The whole-run provenance report.
 #[derive(Debug, Clone, Default)]
 pub struct ProvenanceReport {
@@ -71,6 +94,8 @@ pub struct ProvenanceReport {
     /// What the most recent mapping pass re-ran vs. reused (§6.5 /
     /// DESIGN.md §7); `None` before the first run.
     pub remap: Option<RemapReport>,
+    /// Every self-healing pass of the current run state, in order.
+    pub heals: Vec<HealReport>,
 }
 
 impl ProvenanceReport {
@@ -87,6 +112,11 @@ impl ProvenanceReport {
                 report
                     .anomalies
                     .push(format!("core {loc} ({label}) hit a runtime error"));
+            }
+            if state == CoreState::Watchdog {
+                report
+                    .anomalies
+                    .push(format!("core {loc} ({label}) stalled (watchdog fired)"));
             }
             for (k, v) in &counters {
                 if k.starts_with("rte:") {

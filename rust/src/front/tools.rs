@@ -2,10 +2,17 @@
 //! including the §6.5 "graph changed" branch: a mutation between runs
 //! triggers [`SpiNNTools::run_ticks`]'s *reconcile* path, which re-maps
 //! incrementally against the persistent pipeline state (DESIGN.md §7)
-//! and reloads only what actually changed.
+//! and reloads only what actually changed — and the §6.3.5 failure
+//! branch grown into a *run supervisor* (DESIGN.md §8): with
+//! [`SupervisorConfig`] set, core states are polled on a cadence during
+//! the run, failures are classified (RTE / watchdog / unreachable chip /
+//! packets lost to a dead link), and [`HealPolicy::Remap`] re-discovers
+//! the degraded machine, re-maps incrementally around the dead
+//! resources, reloads the displaced vertices and restarts.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
+use std::time::Instant;
 
 use crate::apps::AppRegistry;
 use crate::graph::{
@@ -16,13 +23,13 @@ use crate::machine::{ChipCoord, CoreLocation, Machine};
 use crate::mapping::database::{MappingDatabase, NotificationProtocol};
 use crate::mapping::{map_graph_incremental, GraphMapping, Mapping, PipelineState};
 use crate::runtime::Runtime;
-use crate::simulator::{scamp, CoreState, SimMachine};
+use crate::simulator::{scamp, ChaosPlan, CoreState, SimMachine};
 use crate::util::fnv1a_64;
 
 use super::buffer::{plan_run_cycles, RunCyclePlan};
-use super::config::{ExtractionMethod, LoadMethod, ToolsConfig};
+use super::config::{ExtractionMethod, HealPolicy, LoadMethod, SupervisorConfig, ToolsConfig};
 use super::extraction::{DataPlaneOptions, FastPath};
-use super::provenance::{ProvenanceReport, RemapReport};
+use super::provenance::{HealReport, ProvenanceReport, RemapReport};
 
 /// Everything that exists once a graph has been mapped and loaded.
 struct RunState {
@@ -46,6 +53,70 @@ struct RunState {
     region_digests: BTreeMap<VertexId, BTreeMap<u32, (u32, u64)>>,
     /// What the most recent mapping pass re-ran vs. reused.
     last_remap: Option<RemapReport>,
+    /// Chaos events not yet scheduled into the simulator (drained as
+    /// their ticks come into a run window; never re-fired).
+    chaos: Option<ChaosPlan>,
+    /// Cores quarantined by earlier heals: permanently excluded from
+    /// re-discovery even after unloading reset their visible state.
+    excluded_cores: BTreeSet<CoreLocation>,
+    /// Dead-link packet losses already attributed to a finding.
+    link_loss_seen: u64,
+    /// One entry per self-healing pass of this run state.
+    heal_reports: Vec<HealReport>,
+}
+
+/// What the supervisor found wrong during a poll.
+enum FaultFinding {
+    /// A core in `RunTimeError` (watchdog = false) or `Watchdog`
+    /// (watchdog = true), with its IOBUF text read back.
+    CoreFailure {
+        loc: CoreLocation,
+        label: String,
+        watchdog: bool,
+        iobuf: String,
+    },
+    /// A whole chip stopped answering: every vertex on it vanished from
+    /// the core-state poll.
+    UnreachableChip { chip: ChipCoord, labels: Vec<String> },
+    /// Packets died on a link that was alive when routes were installed.
+    LinkLoss { packets: u64 },
+}
+
+impl FaultFinding {
+    fn describe(&self) -> String {
+        match self {
+            FaultFinding::CoreFailure { loc, label, watchdog, iobuf } => {
+                let kind = if *watchdog { "watchdog" } else { "RTE" };
+                let iobuf = iobuf.trim();
+                if iobuf.is_empty() {
+                    format!("{kind} on core {loc} ({label})")
+                } else {
+                    format!("{kind} on core {loc} ({label}); iobuf: {iobuf}")
+                }
+            }
+            FaultFinding::UnreachableChip { chip, labels } => {
+                format!("chip {chip:?} unreachable (vertices {labels:?})")
+            }
+            FaultFinding::LinkLoss { packets } => {
+                format!("{packets} packets lost on a dead link")
+            }
+        }
+    }
+}
+
+/// How one pass of the watched run loop ended.
+enum RunOutcome {
+    Completed,
+    Faulted(Vec<FaultFinding>),
+}
+
+/// What [`SpiNNTools::remap_and_reload`] did, for heal reporting.
+struct ReloadSummary {
+    vertices_moved: usize,
+    tables_rewritten: usize,
+    map_elapsed_us: u64,
+    stages_cached: usize,
+    stages_rerun: usize,
 }
 
 /// The SpiNNTools engine (Figure 8): setup → graphs → run → results.
@@ -65,6 +136,9 @@ pub struct SpiNNTools {
     /// Why the last reconcile fell back to a full re-map, if it did
     /// (surfaced as a provenance anomaly).
     remap_note: Option<String>,
+    /// Chaos injected before the run state exists; moved into the run
+    /// state by the run driver.
+    pending_chaos: Option<ChaosPlan>,
     pub notifications: NotificationProtocol,
 }
 
@@ -87,8 +161,25 @@ impl SpiNNTools {
             pipeline: PipelineState::new(),
             mapped_revisions: None,
             remap_note: None,
+            pending_chaos: None,
             notifications: NotificationProtocol::default(),
         })
+    }
+
+    /// Inject a chaos plan: its faults strike at their ticks during the
+    /// next (or current) run. Used by the chaos test suite and the E14
+    /// bench; a production front end would never call this — real
+    /// machines bring their own chaos.
+    pub fn inject_chaos(&mut self, plan: ChaosPlan) {
+        match &mut self.state {
+            Some(state) => state.chaos = Some(plan),
+            None => self.pending_chaos = Some(plan),
+        }
+    }
+
+    /// The self-healing passes of the current run state, in order.
+    pub fn heal_reports(&self) -> &[HealReport] {
+        self.state.as_ref().map(|s| s.heal_reports.as_slice()).unwrap_or(&[])
     }
 
     // -- graph creation (§6.2) ---------------------------------------------
@@ -269,7 +360,9 @@ impl SpiNNTools {
         self.pipeline.clear();
 
         // ---- machine discovery (§6.3.1) --------------------------------
-        let template = self.config.machine.template();
+        // Boot-faulted resources (§2's blacklist) are excluded here, so
+        // the rest of the flow never sees them.
+        let template = self.config.machine_template();
 
         // Application graphs are first converted to a machine graph to
         // size the machine (§6.3.1) — the same split is then used on.
@@ -281,7 +374,7 @@ impl SpiNNTools {
         };
 
         // Virtual chips for device vertices (§5.1/§7.2).
-        let mut builder = self.config.machine.build();
+        let mut builder = self.config.machine_builder();
         let mut next_virtual = (template.width + 1, template.height + 1);
         for (_, vertex) in run_graph.vertices() {
             if let Some(vl) = vertex.virtual_link() {
@@ -304,6 +397,7 @@ impl SpiNNTools {
             &machine,
             &run_graph,
             &self.config.mapping,
+            &BTreeSet::new(),
             &BTreeSet::new(),
         )?;
         let mapping = outcome.mapping;
@@ -454,7 +548,7 @@ impl SpiNNTools {
 
         // ---- running (§6.3.5) -------------------------------------------
         scamp::signal_start(&mut sim)?;
-        let mut state = RunState {
+        let state = RunState {
             sim,
             run_graph,
             graph_mapping,
@@ -468,16 +562,18 @@ impl SpiNNTools {
             database,
             region_digests,
             last_remap: Some(remap),
+            chaos: None,
+            excluded_cores: BTreeSet::new(),
+            link_loss_seen: 0,
+            heal_reports: Vec::new(),
         };
         let cycles = state.plan.cycles.clone();
-        Self::run_cycles(&mut state, &cycles, self.config.extraction)?;
         self.state = Some(state);
         self.mapped_revisions = Some(self.graph_revisions());
-        self.check_completion()
+        self.drive_run(cycles, ticks)
     }
 
     fn resume_run(&mut self, ticks: u64) -> anyhow::Result<()> {
-        let extraction = self.config.extraction;
         let state = self
             .state
             .as_mut()
@@ -492,8 +588,7 @@ impl SpiNNTools {
             remaining -= c;
         }
         scamp::signal_resume(&mut state.sim)?;
-        Self::run_cycles(state, &cycles, extraction)?;
-        self.check_completion()
+        self.drive_run(cycles, ticks)
     }
 
     // -- the §6.5 "graph changed" branch ------------------------------------
@@ -533,14 +628,12 @@ impl SpiNNTools {
         self.mapped_revisions = Some(self.graph_revisions());
         // The run itself is outside the fallback: a core hitting a
         // runtime error is a real failure, not a mapping infeasibility.
-        let extraction = self.config.extraction;
         let state = self
             .state
-            .as_mut()
+            .as_ref()
             .ok_or_else(|| anyhow::anyhow!("reconcile lost the run state"))?;
         let cycles = state.plan.cycles.clone();
-        Self::run_cycles(state, &cycles, extraction)?;
-        self.check_completion()
+        self.drive_run(cycles, ticks)
     }
 
     /// Tear everything down and re-run the whole Figure-8 flow with the
@@ -559,32 +652,66 @@ impl SpiNNTools {
     /// re-appended), rewrite only regions whose bytes changed, and
     /// restart every application core from Ready.
     fn reconcile_map_and_load(&mut self, ticks: u64) -> anyhow::Result<()> {
+        let machine = self
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("reconcile without a run state"))?
+            .sim
+            .machine
+            .clone();
+        self.remap_and_reload(ticks, machine, &BTreeSet::new())?;
+        Ok(())
+    }
+
+    /// Incrementally re-map the current machine graph against `machine`
+    /// (with `forbidden` chips quarantined) and reload the delta:
+    /// vertices that left the graph are unloaded, *moved* vertices —
+    /// displaced off dead resources by a heal, or re-placed after a
+    /// graph change — are unloaded at their old core (when it is still
+    /// reachable) and installed in full at the new one, survivors are
+    /// reloaded in place with only changed region bytes re-transferred,
+    /// and every application core restarts from Ready. Shared by the
+    /// §6.5 reconcile path (`machine` = the live machine, no forbidden
+    /// chips) and the supervisor's heal path (`machine` = the degraded
+    /// re-discovered view, `forbidden` = the chips that died).
+    fn remap_and_reload(
+        &mut self,
+        ticks: u64,
+        machine: Machine,
+        forbidden: &BTreeSet<ChipCoord>,
+    ) -> anyhow::Result<ReloadSummary> {
         let run_graph = self.machine_graph.clone();
         let state = self
             .state
             .as_mut()
-            .ok_or_else(|| anyhow::anyhow!("reconcile without a run state"))?;
-        let machine = state.sim.machine.clone();
+            .ok_or_else(|| anyhow::anyhow!("remap without a run state"))?;
         anyhow::ensure!(
             run_graph.n_vertices() <= machine.n_application_cores(),
             "graph needs {} cores; machine has {}",
             run_graph.n_vertices(),
             machine.n_application_cores()
         );
-        let reserved: BTreeSet<CoreLocation> = state
+        let mut reserved: BTreeSet<CoreLocation> = state
             .fast_path
             .as_ref()
             .map(|fp| fp.system_cores())
             .unwrap_or_default();
+        // Cores quarantined by earlier heals stay off-limits even when
+        // the machine view passed in (e.g. the live machine on a plain
+        // reconcile) still lists their processors.
+        reserved.extend(state.excluded_cores.iter().copied());
 
         // ---- incremental mapping ---------------------------------------
+        let map_t0 = Instant::now();
         let outcome = map_graph_incremental(
             &mut self.pipeline,
             &machine,
             &run_graph,
             &self.config.mapping,
             &reserved,
+            forbidden,
         )?;
+        let map_elapsed_us = map_t0.elapsed().as_micros() as u64;
         let mapping = outcome.mapping;
 
         // ---- unload vertices that left the graph -----------------------
@@ -592,8 +719,11 @@ impl SpiNNTools {
             state.mapping.placements.iter().collect();
         for (vid, loc) in &prior_placements {
             if mapping.placement(*vid).is_none() {
-                // Virtual (device) vertices have no simulated core.
-                if state.run_graph.vertex(*vid).virtual_link().is_none() {
+                // Virtual (device) vertices have no simulated core, and
+                // cores on dead chips are beyond unloading.
+                if state.run_graph.vertex(*vid).virtual_link().is_none()
+                    && scamp::core_state(&state.sim, *loc).is_ok()
+                {
                     scamp::unload_app(&mut state.sim, *loc)?;
                 }
                 state.region_digests.remove(vid);
@@ -620,8 +750,14 @@ impl SpiNNTools {
         // ---- reinstall only the routing tables that changed ------------
         // `install_table` under each load invalidates the chip's route
         // cache, so stale memoised lookups cannot survive the re-map.
+        // Chips that died take their tables to the grave: the pipeline
+        // marks them "changed" (their table vanished) but there is no
+        // router left to load.
         let mut tables_rewritten = 0usize;
         for chip in &outcome.install_chips {
+            if state.sim.machine.chip(*chip).is_none() {
+                continue;
+            }
             let mut table = mapping.tables.get(chip).cloned().unwrap_or_default();
             if let Some(fp) = &state.fast_path {
                 for e in fp.stream_entries(*chip) {
@@ -672,9 +808,10 @@ impl SpiNNTools {
             scamp::set_reverse_iptag(&mut state.sim, rtag.board, rtag.port, rtag.destination)?;
         }
 
-        // ---- per-vertex reload: new in full, survivors by region diff --
+        // ---- per-vertex reload: new/moved in full, survivors by diff ---
         let mut labels = Vec::new();
         let mut vertices_replaced = 0usize;
+        let mut vertices_moved = 0usize;
         let mut fast_reqs: Vec<(ChipCoord, u32, Vec<u8>)> = Vec::new();
         for (vid, vertex) in run_graph.vertices() {
             if vertex.virtual_link().is_some() {
@@ -690,7 +827,24 @@ impl SpiNNTools {
                 recording_sizes.insert(0u32, *bytes as u32);
             }
             let regions = region_data.remove(&vid).unwrap_or_default();
-            let is_new = state.mapping.placement(vid).is_none();
+            let old_loc = state.mapping.placement(vid);
+            let moved = old_loc.is_some_and(|ol| ol != loc);
+            if moved {
+                // Displaced off a dead resource (or re-placed after a
+                // graph change): clear the old core when it is still
+                // reachable and loaded, then install fresh at the new
+                // one. The old region bytes are unreachable or stale
+                // either way, so the diff path does not apply.
+                vertices_moved += 1;
+                let ol = old_loc.expect("moved implies a prior placement");
+                if scamp::core_state(&state.sim, ol)
+                    .is_ok_and(|s| s != CoreState::Idle)
+                {
+                    scamp::unload_app(&mut state.sim, ol)?;
+                }
+                state.region_digests.remove(&vid);
+            }
+            let is_new = old_loc.is_none() || moved;
             let use_fast = self.config.loading == LoadMethod::FastMulticast
                 && state
                     .fast_path
@@ -792,6 +946,9 @@ impl SpiNNTools {
         state.recordings.clear();
         state.labels = labels;
         state.ticks_done = 0;
+        // Re-baseline the dead-link loss counter: losses before this
+        // remap are already attributed to a finding (or predate it).
+        state.link_loss_seen = state.sim.total_router_stats().mc_dead_link;
         state.database = database;
         state.region_digests = new_digests;
         state.last_remap = Some(RemapReport::from_stages(
@@ -799,24 +956,276 @@ impl SpiNNTools {
             vertices_replaced,
             tables_rewritten,
         ));
-        Ok(())
+        Ok(ReloadSummary {
+            vertices_moved,
+            tables_rewritten,
+            map_elapsed_us,
+            stages_cached: outcome.stages.iter().filter(|s| s.cached).count(),
+            stages_rerun: outcome.stages.iter().filter(|s| !s.cached).count(),
+        })
     }
 
-    /// The Figure-9 loop: run a cycle, drain recordings, flush, resume.
-    fn run_cycles(
+    /// The run driver: execute the Figure-9 cycles, supervised when
+    /// [`ToolsConfig::supervision`] is set. A detected failure either
+    /// aborts with the failed cores' IOBUF text attached
+    /// ([`HealPolicy::Abort`]) or heals — re-discover, re-map around the
+    /// dead resources, reload the displaced vertices — and restarts from
+    /// tick 0 ([`HealPolicy::Remap`]), replaying the *whole* tick
+    /// history (ticks completed by earlier `run_ticks` calls plus this
+    /// one) on the degraded machine, so the final recordings equal an
+    /// unfaulted full run on that machine.
+    fn drive_run(&mut self, mut cycles: Vec<u64>, total_ticks: u64) -> anyhow::Result<()> {
+        let supervision = self.config.supervision;
+        let extraction = self.config.extraction;
+        // Ticks already completed before this call (a resumed run): a
+        // heal's restart must cover them too.
+        let base_ticks = self
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("run driver without a run state"))?
+            .ticks_done;
+        let mut heals_done = 0usize;
+        loop {
+            let pending = self.pending_chaos.take();
+            let state = self
+                .state
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("run driver without a run state"))?;
+            if let Some(plan) = pending {
+                state.chaos = Some(plan);
+            }
+            match Self::run_cycles_watched(state, &cycles, extraction, supervision.as_ref())? {
+                RunOutcome::Completed => return self.check_completion(),
+                RunOutcome::Faulted(findings) => {
+                    let sup =
+                        supervision.expect("findings can only surface under supervision");
+                    match sup.policy {
+                        HealPolicy::Abort => {
+                            let mut msg = String::from("run aborted by supervisor:");
+                            for f in &findings {
+                                msg.push_str("\n  - ");
+                                msg.push_str(&f.describe());
+                            }
+                            anyhow::bail!("{msg}");
+                        }
+                        HealPolicy::Remap => {
+                            anyhow::ensure!(
+                                heals_done < sup.max_heals,
+                                "machine is failing faster than it can heal \
+                                 ({} heal(s) exhausted); latest: {}",
+                                sup.max_heals,
+                                findings[0].describe()
+                            );
+                            heals_done += 1;
+                            self.heal(&findings, base_ticks + total_ticks)?;
+                            cycles = self
+                                .state
+                                .as_ref()
+                                .expect("heal keeps the run state")
+                                .plan
+                                .cycles
+                                .clone();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The Figure-9 loop: run a cycle, drain recordings, flush, resume —
+    /// supervised. Under supervision each cycle runs in
+    /// `poll_interval_ticks` chunks; after every chunk the core states
+    /// are polled and classified. Chaos events whose tick falls inside a
+    /// chunk are scheduled into the simulator as that chunk starts (and
+    /// drained from the plan: a healed run's restart does not re-fire
+    /// them).
+    fn run_cycles_watched(
         state: &mut RunState,
         cycles: &[u64],
         extraction: ExtractionMethod,
-    ) -> anyhow::Result<()> {
+        supervision: Option<&SupervisorConfig>,
+    ) -> anyhow::Result<RunOutcome> {
+        let timestep_ns = state.sim.config.timestep_us as u64 * 1000;
         for (i, cycle) in cycles.iter().enumerate() {
             if i > 0 {
                 scamp::signal_resume(&mut state.sim)?;
             }
-            state.sim.start_run_cycle(*cycle);
-            state.sim.run_until_idle()?;
+            let chunk = supervision
+                .map(|s| s.poll_interval_ticks.max(1))
+                .unwrap_or(*cycle)
+                .max(1);
+            let mut done_in_cycle = 0u64;
+            while done_in_cycle < *cycle {
+                let step = chunk.min(*cycle - done_in_cycle);
+                if done_in_cycle > 0 {
+                    scamp::signal_resume(&mut state.sim)?;
+                }
+                // Chaos due within this chunk's tick window strikes
+                // mid-tick-interval, after its tick's timer events.
+                let abs_done = state.ticks_done + done_in_cycle;
+                if let Some(plan) = &mut state.chaos {
+                    let mut rest = Vec::with_capacity(plan.events.len());
+                    for ev in plan.events.drain(..) {
+                        if ev.at_tick <= abs_done + step {
+                            let delta = ev.at_tick.saturating_sub(abs_done);
+                            state
+                                .sim
+                                .schedule_fault(delta * timestep_ns + timestep_ns / 2, ev.fault);
+                        } else {
+                            rest.push(ev);
+                        }
+                    }
+                    plan.events = rest;
+                }
+                state.sim.start_run_cycle(step);
+                state.sim.run_until_idle()?;
+                done_in_cycle += step;
+                if supervision.is_some() {
+                    let findings = Self::supervisor_poll(state)?;
+                    if !findings.is_empty() {
+                        return Ok(RunOutcome::Faulted(findings));
+                    }
+                }
+            }
             state.ticks_done += cycle;
             Self::extract_recordings(state, extraction)?;
         }
+        Ok(RunOutcome::Completed)
+    }
+
+    /// Unload every loaded application core that is neither a current
+    /// placement nor a quarantined (excluded) core: the cleanup sweep
+    /// between a failed heal attempt and its full-re-map retry, removing
+    /// apps the failed attempt installed before erroring.
+    fn unload_unmapped_cores(&mut self) -> anyhow::Result<()> {
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("cleanup without a run state"))?;
+        let loaded: Vec<CoreLocation> = scamp::core_states(&state.sim).into_keys().collect();
+        for loc in loaded {
+            if state.mapping.placements.at(loc).is_none()
+                && !state.excluded_cores.contains(&loc)
+            {
+                scamp::unload_app(&mut state.sim, loc)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One supervisor poll (the §6.3.5 state scan run *during* the run):
+    /// classify every user vertex's core as healthy, failed (RTE /
+    /// watchdog — IOBUF read back immediately), or unreachable (its whole
+    /// chip vanished from the scan), and check the routers for packets
+    /// lost to links that died under installed routes.
+    fn supervisor_poll(state: &mut RunState) -> anyhow::Result<Vec<FaultFinding>> {
+        let states = scamp::core_states(&state.sim);
+        let mut findings = Vec::new();
+        let mut unreachable: BTreeMap<ChipCoord, Vec<String>> = BTreeMap::new();
+        let mut failed: Vec<(CoreLocation, String, bool)> = Vec::new();
+        for (label, loc) in &state.labels {
+            match states.get(loc) {
+                Some(CoreState::RunTimeError) => failed.push((*loc, label.clone(), false)),
+                Some(CoreState::Watchdog) => failed.push((*loc, label.clone(), true)),
+                Some(_) => {}
+                None => {
+                    unreachable.entry(loc.chip()).or_default().push(label.clone());
+                }
+            }
+        }
+        for (loc, label, watchdog) in failed {
+            let iobuf = scamp::read_iobuf(&mut state.sim, loc).unwrap_or_default();
+            findings.push(FaultFinding::CoreFailure { loc, label, watchdog, iobuf });
+        }
+        for (chip, labels) in unreachable {
+            findings.push(FaultFinding::UnreachableChip { chip, labels });
+        }
+        let lost = state.sim.total_router_stats().mc_dead_link;
+        if lost > state.link_loss_seen {
+            findings.push(FaultFinding::LinkLoss { packets: lost - state.link_loss_seen });
+            state.link_loss_seen = lost;
+        }
+        Ok(findings)
+    }
+
+    /// Self-heal around the findings: quarantine the failed cores,
+    /// re-discover the degraded machine, re-map incrementally (survivor
+    /// vertices stay pinned; the placer treats the newly-dead chips as
+    /// forbidden), reload the displaced vertices, and leave the run
+    /// state ready to restart from tick 0. Infeasible incremental maps
+    /// fall back to a cleared pipeline — a full re-map on the degraded
+    /// machine. The whole pass is recorded as a [`HealReport`].
+    fn heal(&mut self, findings: &[FaultFinding], total_ticks: u64) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let fault_descs: Vec<String> = findings.iter().map(|f| f.describe()).collect();
+        let (machine, forbidden) = {
+            let state = self
+                .state
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("heal without a run state"))?;
+            for f in findings {
+                if let FaultFinding::CoreFailure { loc, .. } = f {
+                    state.excluded_cores.insert(*loc);
+                }
+            }
+            // The bulk data plane is retired by a heal: its stream
+            // routes and per-chip writer/reader assignments were planned
+            // against the healthy machine, and replaying its lossless
+            // recovery protocol into a dead chip would never complete.
+            // Loading/extraction fall back to the SCAMP paths; the
+            // plane's (benign, still-loaded) system cores are
+            // quarantined so nothing gets placed on top of them.
+            if let Some(fp) = state.fast_path.take() {
+                state.excluded_cores.extend(fp.system_cores());
+                state.data_plane_error = Some(
+                    "bulk data plane retired by self-heal (stream routes \
+                     predate the fault); SCAMP fallback in use"
+                        .to_string(),
+                );
+            }
+            // Re-discover while the failed cores still show their failed
+            // states (the persistent quarantine covers later heals, after
+            // unloading has reset them to Idle).
+            let machine =
+                scamp::rediscover_machine(&mut state.sim, &state.excluded_cores);
+            for f in findings {
+                if let FaultFinding::CoreFailure { loc, .. } = f {
+                    if scamp::core_state(&state.sim, *loc)
+                        .is_ok_and(|s| s != CoreState::Idle)
+                    {
+                        scamp::unload_app(&mut state.sim, *loc)?;
+                    }
+                }
+            }
+            (machine, state.sim.dead_chips())
+        };
+        let summary = match self.remap_and_reload(total_ticks, machine.clone(), &forbidden) {
+            Ok(s) => s,
+            Err(e) => {
+                // Same contract as reconcile: infeasibility is never
+                // silent, and the fallback is a genuine from-scratch map
+                // (on the degraded machine — the healthy one is gone).
+                // The failed attempt may have installed vertices at new
+                // cores before erroring; sweep those ghosts out first so
+                // the retry cannot double-load or leave duplicates
+                // running.
+                self.remap_note =
+                    Some(format!("heal fell back to a full re-map: {e}"));
+                self.unload_unmapped_cores()?;
+                self.pipeline.clear();
+                self.remap_and_reload(total_ticks, machine, &forbidden)?
+            }
+        };
+        let state = self.state.as_mut().expect("heal keeps the run state");
+        state.heal_reports.push(HealReport {
+            faults: fault_descs,
+            vertices_moved: summary.vertices_moved,
+            tables_rewritten: summary.tables_rewritten,
+            map_elapsed_us: summary.map_elapsed_us,
+            heal_elapsed_us: t0.elapsed().as_micros() as u64,
+            stages_cached: summary.stages_cached,
+            stages_rerun: summary.stages_rerun,
+        });
         Ok(())
     }
 
@@ -880,7 +1289,8 @@ impl SpiNNTools {
         Ok(())
     }
 
-    /// §6.3.5 failure detection: error if any core ended in RTE.
+    /// §6.3.5 failure detection: error if any core ended in RTE (or
+    /// stalled into the watchdog).
     fn check_completion(&mut self) -> anyhow::Result<()> {
         let state = self
             .state
@@ -888,7 +1298,7 @@ impl SpiNNTools {
             .ok_or_else(|| anyhow::anyhow!("completion check without a run state"))?;
         let bad: Vec<String> = scamp::core_states(&state.sim)
             .into_iter()
-            .filter(|(_, s)| *s == CoreState::RunTimeError)
+            .filter(|(_, s)| matches!(s, CoreState::RunTimeError | CoreState::Watchdog))
             .map(|(l, _)| l.to_string())
             .collect();
         if !bad.is_empty() {
@@ -955,7 +1365,20 @@ impl SpiNNTools {
                 if let Some(note) = &self.remap_note {
                     report.anomalies.push(note.clone());
                 }
+                for heal in &state.heal_reports {
+                    for fault in &heal.faults {
+                        report
+                            .anomalies
+                            .push(format!("healed around runtime fault: {fault}"));
+                    }
+                }
+                for (t, fault) in &state.sim.fault_log {
+                    report
+                        .anomalies
+                        .push(format!("fault injected at {t} ns: {fault}"));
+                }
                 report.remap = state.last_remap.clone();
+                report.heals = state.heal_reports.clone();
                 report
             }
             None => ProvenanceReport::default(),
@@ -1019,6 +1442,7 @@ impl SpiNNTools {
         self.pipeline.clear();
         self.mapped_revisions = None;
         self.remap_note = None;
+        self.pending_chaos = None;
         self.machine_graph.clear_journal();
         self.app_graph.clear_journal();
     }
@@ -1028,7 +1452,7 @@ impl SpiNNTools {
 mod tests {
     use super::*;
     use crate::apps::conway::{ConwayCellVertex, STATE_PARTITION};
-    use crate::front::config::MachineSpec;
+    use crate::front::config::{BootFaults, MachineSpec};
 
     /// Build an r x c Conway machine graph.
     fn conway_graph(tools: &mut SpiNNTools, rows: u32, cols: u32, live: &[(u32, u32)]) -> Vec<VertexId> {
@@ -1274,6 +1698,88 @@ mod tests {
             "anomalies: {:?}",
             report.anomalies
         );
+    }
+
+    #[test]
+    fn supervisor_abort_surfaces_iobuf_text() {
+        use crate::simulator::{ChaosPlan, Fault};
+        let mut tools = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3).with_supervision(SupervisorConfig {
+                poll_interval_ticks: 1,
+                policy: HealPolicy::Abort,
+                max_heals: 4,
+            }),
+        )
+        .unwrap();
+        let ids = conway_graph(&mut tools, 3, 3, &[(1, 0), (1, 1), (1, 2)]);
+        tools.run_ticks(2).unwrap();
+        let victim = tools.mapping().unwrap().placement(ids[0]).unwrap();
+        tools.inject_chaos(ChaosPlan::new().with(4, Fault::CoreRte(victim)));
+        let err = tools.run_ticks(4).unwrap_err().to_string();
+        assert!(err.contains("aborted by supervisor"), "{err}");
+        assert!(err.contains("RTE on core"), "{err}");
+        assert!(err.contains("[chaos] RTE injected"), "iobuf text missing: {err}");
+    }
+
+    #[test]
+    fn supervisor_heals_chip_death_and_reports() {
+        use crate::simulator::{ChaosPlan, Fault};
+        let mut tools = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3)
+                .with_supervision(SupervisorConfig::default()),
+        )
+        .unwrap();
+        let ids = conway_graph(&mut tools, 5, 5, &[(2, 1), (2, 2), (2, 3)]);
+        // Find which non-boot chip will host vertices, then kill it
+        // mid-run. 25 vertices span 2 chips; (1,0) is the second in
+        // radial order.
+        tools.inject_chaos(ChaosPlan::new().with(2, Fault::ChipDeath((1, 0))));
+        tools.run_ticks(4).unwrap();
+        // The run healed: one report, with vertices moved off the chip.
+        let heals = tools.heal_reports();
+        assert_eq!(heals.len(), 1, "expected exactly one heal");
+        assert!(heals[0].vertices_moved > 0);
+        assert!(heals[0].faults.iter().any(|f| f.contains("unreachable")), "{:?}", heals[0].faults);
+        assert!(heals[0].stages_cached > 0, "heal must reuse pipeline stages");
+        // Nothing lives on the dead chip; the machine view lost it.
+        let mapping = tools.mapping().unwrap();
+        for id in &ids {
+            assert_ne!(mapping.placement(*id).unwrap().chip(), (1, 0));
+        }
+        assert!(tools.machine().unwrap().chip((1, 0)).is_none());
+        // Post-heal recordings equal a fresh run on the degraded board.
+        let mut fresh = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3)
+                .with_supervision(SupervisorConfig::default())
+                .with_boot_faults(BootFaults { chips: vec![(1, 0)], ..Default::default() }),
+        )
+        .unwrap();
+        let fids = conway_graph(&mut fresh, 5, 5, &[(2, 1), (2, 2), (2, 3)]);
+        fresh.run_ticks(4).unwrap();
+        for (a, b) in ids.iter().zip(&fids) {
+            assert_eq!(tools.recording(*a), fresh.recording(*b), "vertex {a:?}");
+        }
+        // Provenance carries the heal + the injected fault.
+        let report = tools.provenance();
+        assert_eq!(report.heals.len(), 1);
+        assert!(report
+            .anomalies
+            .iter()
+            .any(|a| a.contains("healed around runtime fault")));
+    }
+
+    #[test]
+    fn unsupervised_chaos_still_fails_the_run() {
+        use crate::simulator::{ChaosPlan, Fault};
+        // Without supervision the historical contract holds: the failure
+        // surfaces as a completion error, not a heal.
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let ids = conway_graph(&mut tools, 3, 3, &[(1, 1)]);
+        let _ = ids;
+        tools.inject_chaos(ChaosPlan::new().with(1, Fault::CoreRte(CoreLocation::new(0, 0, 1))));
+        let err = tools.run_ticks(3).unwrap_err().to_string();
+        assert!(err.contains("error state"), "{err}");
+        assert!(tools.heal_reports().is_empty());
     }
 
     #[test]

@@ -198,6 +198,46 @@ impl Machine {
         (w, h)
     }
 
+    /// Remove a chip from the machine entirely (runtime chip death or a
+    /// degraded re-discovery view): neighbours lose the link toward it
+    /// and any virtual link touching it is dropped. The builder-time
+    /// [`MachineBuilder::dead_chip`] delegates here.
+    pub fn remove_chip(&mut self, c: ChipCoord) {
+        self.chips.remove(&c);
+        let coords: Vec<ChipCoord> = self.chip_coords().collect();
+        for cc in coords {
+            for d in super::geometry::ALL_DIRECTIONS {
+                if self.neighbour_coord(cc, d) == Some(c) {
+                    if let Some(chip) = self.chip_mut(cc) {
+                        chip.remove_link(d);
+                    }
+                }
+            }
+        }
+        self.virtual_links
+            .retain(|(from, _), to| *from != c && *to != c);
+    }
+
+    /// Remove a link in both directions (runtime link death). Geometry
+    /// is unaffected; only link health changes. Explicit virtual links
+    /// (device wires) die the same way — `link_target` consults the
+    /// virtual-link table before geometry, so they must be dropped here
+    /// or the wire would survive its own death.
+    pub fn remove_link(&mut self, c: ChipCoord, d: Direction) {
+        if let Some(to) = self.virtual_links.remove(&(c, d)) {
+            self.virtual_links.remove(&(to, d.opposite()));
+        }
+        let other = self.neighbour_coord(c, d);
+        if let Some(chip) = self.chip_mut(c) {
+            chip.remove_link(d);
+        }
+        if let Some(o) = other {
+            if let Some(chip) = self.chip_mut(o) {
+                chip.remove_link(d.opposite());
+            }
+        }
+    }
+
     /// Manhattan-ish hop distance on the hexagonal fabric: with diagonal
     /// NE/SW moves, distance((dx,dy)) = max(|dx|,|dy|) when signs match,
     /// |dx|+|dy| when they differ.
@@ -329,16 +369,7 @@ impl MachineBuilder {
 
     /// Blacklist a whole chip (§2 fault tolerance).
     pub fn dead_chip(mut self, c: ChipCoord) -> Self {
-        self.machine.chips.remove(&c);
-        // Neighbours lose the link toward the dead chip.
-        let coords: Vec<ChipCoord> = self.machine.chip_coords().collect();
-        for cc in coords {
-            for d in super::geometry::ALL_DIRECTIONS {
-                if self.machine.neighbour_coord(cc, d) == Some(c) {
-                    self.machine.chip_mut(cc).unwrap().remove_link(d);
-                }
-            }
-        }
+        self.machine.remove_chip(c);
         self
     }
 
@@ -352,15 +383,7 @@ impl MachineBuilder {
 
     /// Blacklist a link (both directions).
     pub fn dead_link(mut self, c: ChipCoord, d: Direction) -> Self {
-        let other = self.machine.neighbour_coord(c, d);
-        if let Some(chip) = self.machine.chip_mut(c) {
-            chip.remove_link(d);
-        }
-        if let Some(o) = other {
-            if let Some(chip) = self.machine.chip_mut(o) {
-                chip.remove_link(d.opposite());
-            }
-        }
+        self.machine.remove_link(c, d);
         self
     }
 
@@ -477,6 +500,19 @@ mod tests {
     fn dead_core_removed() {
         let m = MachineBuilder::spinn3().dead_core((0, 0), 17).build();
         assert_eq!(m.chip((0, 0)).unwrap().processors.len(), 17);
+    }
+
+    #[test]
+    fn remove_link_kills_virtual_wires_too() {
+        // `link_target` consults virtual links before geometry, so a
+        // device wire must actually die when its link is removed.
+        let mut m = MachineBuilder::spinn5()
+            .virtual_chip((100, 100), (0, 0), Direction::SouthWest)
+            .build();
+        assert_eq!(m.link_target((0, 0), Direction::SouthWest), Some((100, 100)));
+        m.remove_link((0, 0), Direction::SouthWest);
+        assert_eq!(m.link_target((0, 0), Direction::SouthWest), None);
+        assert_eq!(m.link_target((100, 100), Direction::NorthEast), None);
     }
 
     #[test]

@@ -282,13 +282,22 @@ fn tree_matches(tree: &router::RoutingTree, item: &router::RouteItem) -> bool {
 ///   outright (the prior outputs on the blackboard stand in);
 /// - the placer pins every vertex of the prior placements to its core
 ///   and only places new vertices (`reserved` protects the bulk data
-///   plane's system cores);
-/// - the router rebuilds only trees whose endpoints changed, the key
+///   plane's system cores); pins whose core no longer exists — the
+///   machine degraded at runtime, or the chip is in `forbidden` — are
+///   *displaced* and re-placed like new vertices;
+/// - the router rebuilds only trees whose endpoints changed **or whose
+///   path crosses a dead link/chip** ([`router::tree_valid`]), the key
 ///   allocator re-keys only new/resized partitions (monotone key
 ///   space — freed ranges are never reused), and tables are regenerated
 ///   and re-compressed only on chips those trees/keys touch, with
 ///   [`compress::compress_exact`] on incrementally-dirty tables so a
 ///   retired key can never be captured by a fresh cover.
+///
+/// A *machine* change is therefore an ordinary delta, not a reset: the
+/// self-healing run supervisor feeds the degraded re-discovered machine
+/// (plus the newly-dead chips as `forbidden`) straight back in, and only
+/// the work the faults invalidated re-runs. A *config* change still
+/// clears the whole state — config is not delta-tracked.
 ///
 /// On a fresh `state` this is exactly the historical full pipeline.
 /// The sharded inner loops still fan out over
@@ -299,21 +308,34 @@ pub fn map_graph_incremental(
     graph: &MachineGraph,
     config: &MappingConfig,
     reserved: &std::collections::BTreeSet<CoreLocation>,
+    forbidden: &std::collections::BTreeSet<ChipCoord>,
 ) -> anyhow::Result<MapOutcome> {
     use crate::algorithms::{Algorithm, Blackboard, Executor};
     use crate::machine::router::RoutingTable;
     use std::collections::BTreeSet;
 
-    // A different machine or mapping config invalidates everything the
-    // board holds (dirty-set plumbing only tracks *graph* deltas):
-    // start over rather than reason about partial invalidation.
+    // A different mapping config invalidates everything the board holds
+    // (config is not delta-tracked): start over rather than reason about
+    // partial invalidation. Machine changes, by contrast, flow through
+    // the stages as deltas — see the docs above.
     let machine_fp = machine_fingerprint(machine);
     let config_fp = config_fingerprint(config);
-    if state.board.fp_of("machine").is_some_and(|fp| fp != machine_fp)
-        || state.board.fp_of("mapping_config").is_some_and(|fp| fp != config_fp)
+    if state
+        .board
+        .fp_of("mapping_config")
+        .is_some_and(|fp| fp != config_fp)
     {
         state.clear();
     }
+
+    let forbidden_fp = {
+        let mut h = crate::util::FNV_OFFSET;
+        for c in forbidden {
+            crate::util::fnv1a_64_extend(&mut h, &c.0.to_le_bytes());
+            crate::util::fnv1a_64_extend(&mut h, &c.1.to_le_bytes());
+        }
+        h
+    };
 
     let board = &mut state.board;
     board.put_with_fp("machine", machine.clone(), machine_fp);
@@ -325,13 +347,16 @@ pub fn map_graph_incremental(
     board.put_with_fp("graph_vertices", (), graph.vertices_fingerprint());
     board.put_with_fp("graph_partitions", (), graph.partitions_fingerprint());
     board.put_with_fp("tag_requests", (), tag_requests_fingerprint(graph));
+    board.put_with_fp("forbidden_chips", forbidden.clone(), forbidden_fp);
 
     let reserved_cores = reserved.clone();
+    let forbidden_placer = forbidden.clone();
     let algorithms = vec![
-        // Placement: pin-and-extend when a prior placement exists.
+        // Placement: pin-and-extend when a prior placement exists (pins
+        // on dead/forbidden resources displace, DESIGN.md §8).
         Algorithm::new(
             "radial_placer",
-            &["machine", "machine_graph", "graph_vertices"],
+            &["machine", "machine_graph", "graph_vertices", "forbidden_chips"],
             &["placements"],
             move |b| {
                 let prior: Option<Placements> = if b.has("placements") {
@@ -342,21 +367,32 @@ pub fn map_graph_incremental(
                 let m: &Machine = b.get("machine")?;
                 let g: &MachineGraph = b.get("machine_graph")?;
                 let p = match &prior {
-                    Some(prev) => placer::place_incremental(m, g, prev, &reserved_cores)?,
-                    None => placer::place(m, g)?,
+                    Some(prev) => placer::place_incremental(
+                        m,
+                        g,
+                        prev,
+                        &reserved_cores,
+                        &forbidden_placer,
+                    )?,
+                    None => placer::place_avoiding(m, g, &forbidden_placer)?,
                 };
                 b.put("placements", p);
                 Ok(())
             },
         )
-        .with_fp_inputs(&["machine", "graph_vertices"]),
+        .with_fp_inputs(&["machine", "graph_vertices", "forbidden_chips"]),
         // Routing, sharded per *dirty* partition: prior trees whose
-        // endpoints are unchanged are reused verbatim; the chips of
-        // every dropped/rebuilt tree (old and new shape) are collected
-        // for the table generator.
+        // endpoints are unchanged — and which are still *sound* on the
+        // (possibly degraded) machine with the forbidden chips
+        // quarantined — are reused verbatim; the chips of every
+        // dropped/rebuilt tree (old and new shape) are collected for
+        // the table generator.
         Algorithm::sharded(
             "ner_router",
-            &["machine", "machine_graph", "graph_partitions", "placements"],
+            &[
+                "machine", "machine_graph", "graph_partitions", "placements",
+                "forbidden_chips",
+            ],
             &["routing_trees", "route_dirty_chips"],
             |b: &mut Blackboard| {
                 let items = {
@@ -364,6 +400,8 @@ pub fn map_graph_incremental(
                     let p: &Placements = b.get("placements")?;
                     router::route_items(g, p)?
                 };
+                let forbidden: BTreeSet<ChipCoord> =
+                    b.get::<BTreeSet<ChipCoord>>("forbidden_chips")?.clone();
                 let prior: RoutingForest = if b.has("routing_trees") {
                     b.take("routing_trees")?
                 } else {
@@ -377,7 +415,10 @@ pub fn map_graph_incremental(
                 let mut work: Vec<router::RouteItem> = Vec::new();
                 for item in items {
                     match prior_trees.remove(&item.key) {
-                        Some(tree) if tree_matches(&tree, &item) => {
+                        Some(tree)
+                            if tree_matches(&tree, &item)
+                                && router::tree_valid(&tree, &m, &forbidden) =>
+                        {
                             kept.insert(item.key.clone(), tree);
                         }
                         Some(old) => {
@@ -392,17 +433,25 @@ pub fn map_graph_incremental(
                 for (_, old) in prior_trees {
                     dirty.extend(RoutingForest::tree_chips(&old, &m));
                 }
-                Ok(((m, kept, dirty), work))
+                Ok(((m, forbidden, kept, dirty), work))
             },
-            |ctx: &(Machine, BTreeMap<(VertexId, String), router::RoutingTree>, BTreeSet<ChipCoord>),
+            |ctx: &(
+                Machine,
+                BTreeSet<ChipCoord>,
+                BTreeMap<(VertexId, String), router::RoutingTree>,
+                BTreeSet<ChipCoord>,
+            ),
              item: &router::RouteItem| {
-                let (m, _, _) = ctx;
-                Ok((item.key.clone(), router::build_tree(m, item.source, &item.dests)?))
+                let (m, forbidden, _, _) = ctx;
+                Ok((
+                    item.key.clone(),
+                    router::build_tree_avoiding(m, item.source, &item.dests, forbidden)?,
+                ))
             },
             |b: &mut Blackboard,
              ctx,
              built: Vec<((VertexId, String), router::RoutingTree)>| {
-                let (m, kept, mut dirty) = ctx;
+                let (m, _, kept, mut dirty) = ctx;
                 let mut forest = RoutingForest { trees: kept };
                 for (key, tree) in built {
                     dirty.extend(RoutingForest::tree_chips(&tree, &m));
@@ -414,7 +463,7 @@ pub fn map_graph_incremental(
                 Ok(())
             },
         )
-        .with_fp_inputs(&["machine", "graph_partitions", "placements"]),
+        .with_fp_inputs(&["machine", "graph_partitions", "placements", "forbidden_chips"]),
         // Key allocation: monotone incremental (see
         // [`keys::allocate_keys_incremental`]).
         Algorithm::new(
@@ -612,10 +661,12 @@ pub fn map_graph_incremental(
         .with_fp_inputs(&["routing_tables", "mapping_config"]),
         // Tag allocation: cheap, so a miss re-runs it in full. Keyed on
         // the tag-request digest (not placements — see
-        // `tag_requests_fingerprint` for the soundness argument).
+        // `tag_requests_fingerprint` for the soundness argument; the
+        // machine and forbidden-chip digests cover every way a pinned
+        // tag-bearing vertex can be displaced).
         Algorithm::new(
             "tag_allocator",
-            &["machine", "machine_graph", "placements"],
+            &["machine", "machine_graph", "placements", "forbidden_chips"],
             &["ip_tags"],
             |b| {
                 let m: &Machine = b.get("machine")?;
@@ -626,7 +677,7 @@ pub fn map_graph_incremental(
                 Ok(())
             },
         )
-        .with_fp_inputs(&["machine", "tag_requests"]),
+        .with_fp_inputs(&["machine", "tag_requests", "forbidden_chips"]),
     ];
 
     let workflow = Executor::new(algorithms)
@@ -691,6 +742,7 @@ pub fn map_graph_via_engine(
         graph,
         config,
         &std::collections::BTreeSet::new(),
+        &std::collections::BTreeSet::new(),
     )?;
     Ok((out.mapping, out.workflow))
 }
@@ -733,11 +785,11 @@ mod engine_tests {
         let mut state = PipelineState::new();
         let cfg = MappingConfig::default();
         let first =
-            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default(), &Default::default()).unwrap();
         assert!(first.stages.iter().all(|s| !s.cached), "first map is full");
         assert!(!first.install_chips.is_empty());
         let again =
-            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default(), &Default::default()).unwrap();
         assert!(again.stages.iter().all(|s| s.cached), "{:?}", again.stages);
         assert!(again.install_chips.is_empty(), "no table changed");
         assert_eq!(first.mapping.keys, again.mapping.keys);
@@ -757,12 +809,12 @@ mod engine_tests {
         let mut state = PipelineState::new();
         let cfg = MappingConfig::default();
         let first =
-            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default(), &Default::default()).unwrap();
         // Grow the graph: a new vertex and a new partition.
         let c = g.add_vertex(TestVertex::arc("c"));
         g.add_edge(a, c, "q");
         let third =
-            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default(), &Default::default()).unwrap();
         let cached = third.stages.iter().filter(|s| s.cached).count();
         assert!(cached >= 1, "a small delta must reuse stages: {:?}", third.stages);
         // Pins held, old keys survived, new partition exists.
@@ -792,6 +844,76 @@ mod engine_tests {
     }
 
     #[test]
+    fn degraded_machine_remap_displaces_victims_and_keeps_cache() {
+        // The heal shape (DESIGN.md §8): after a chip dies mid-run, the
+        // degraded machine + forbidden set flow back through the warm
+        // pipeline — survivors stay pinned, victims displace, the key
+        // allocator is a cache hit, and the merged tables still satisfy
+        // the routing oracle.
+        let m = MachineBuilder::grid(4, 4, false).build();
+        let mut g = MachineGraph::new();
+        // Enough vertices to occupy several chips (17 app cores each).
+        let ids: Vec<_> = (0..40)
+            .map(|i| g.add_vertex(TestVertex::arc(&format!("v{i}"))))
+            .collect();
+        for w in ids.windows(2) {
+            g.add_edge(w[0], w[1], "p");
+        }
+        let mut state = PipelineState::new();
+        let cfg = MappingConfig::default();
+        let first =
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default(), &Default::default()).unwrap();
+        // Chip death: pick the chip hosting v20.
+        let dead = first.mapping.placement(ids[20]).unwrap().chip();
+        let mut degraded = m.clone();
+        degraded.remove_chip(dead);
+        let mut forbidden = std::collections::BTreeSet::new();
+        forbidden.insert(dead);
+        let healed =
+            map_graph_incremental(&mut state, &degraded, &g, &cfg, &Default::default(), &forbidden)
+                .unwrap();
+        // Keys: pure graph function — must be served from the cache.
+        let key_stage = healed
+            .stages
+            .iter()
+            .find(|s| s.name == "key_allocator")
+            .unwrap();
+        assert!(key_stage.cached, "key allocator must not re-run: {:?}", healed.stages);
+        assert_eq!(healed.mapping.keys, first.mapping.keys);
+        // Survivors pinned, victims displaced off the dead chip.
+        let mut moved = 0;
+        for id in &ids {
+            let was = first.mapping.placement(*id).unwrap();
+            let now = healed.mapping.placement(*id).unwrap();
+            assert_ne!(now.chip(), dead);
+            if was.chip() == dead {
+                moved += 1;
+            } else {
+                assert_eq!(was, now, "survivor moved during heal");
+            }
+        }
+        assert!(moved > 0);
+        // No tree mentions the dead chip, and the oracle holds.
+        for tree in healed.mapping.forest.trees.values() {
+            assert!(!tree.nodes.contains_key(&dead));
+        }
+        for p in g.partitions() {
+            let src = healed.mapping.placement(p.pre).unwrap();
+            let key = healed.mapping.keys[&(p.pre, p.id.clone())];
+            let expected: Vec<_> = g
+                .partition_targets(p)
+                .into_iter()
+                .map(|t| {
+                    let l = healed.mapping.placement(t).unwrap();
+                    (l.chip(), l.p)
+                })
+                .collect();
+            tables::check_tables(&degraded, &healed.mapping.tables, src.chip(), key.base, &expected)
+                .unwrap();
+        }
+    }
+
+    #[test]
     fn incremental_remove_retires_trees_and_keys() {
         let m = MachineBuilder::spinn3().build();
         let mut g = MachineGraph::new();
@@ -803,10 +925,10 @@ mod engine_tests {
         let mut state = PipelineState::new();
         let cfg = MappingConfig::default();
         let first =
-            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default(), &Default::default()).unwrap();
         g.remove_vertex(a).unwrap();
         let second =
-            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default()).unwrap();
+            map_graph_incremental(&mut state, &m, &g, &cfg, &Default::default(), &Default::default()).unwrap();
         assert_eq!(second.mapping.placements.of(a), None);
         assert!(!second.mapping.keys.contains_key(&(a, "p".to_string())));
         assert!(!second.mapping.forest.trees.contains_key(&(a, "p".to_string())));

@@ -121,10 +121,22 @@ struct ChipLedger {
 
 /// Place every vertex of `graph` on `machine`.
 pub fn place(machine: &Machine, graph: &MachineGraph) -> anyhow::Result<Placements> {
+    place_avoiding(machine, graph, &BTreeSet::new())
+}
+
+/// [`place`] with a first-class set of *forbidden* chips: chips that are
+/// physically present in `machine` but must not host any vertex — how a
+/// degraded-machine re-map (chips that died at runtime, §2's blacklist
+/// grown mid-run) is expressed without rebuilding the machine object.
+pub fn place_avoiding(
+    machine: &Machine,
+    graph: &MachineGraph,
+    forbidden: &BTreeSet<ChipCoord>,
+) -> anyhow::Result<Placements> {
     let mut placements = Placements::default();
     let mut ledgers: BTreeMap<ChipCoord, ChipLedger> = machine
         .chips()
-        .filter(|c| !c.is_virtual)
+        .filter(|c| !c.is_virtual && !forbidden.contains(&(c.x, c.y)))
         .map(|c| {
             (
                 (c.x, c.y),
@@ -185,8 +197,10 @@ pub fn place(machine: &Machine, graph: &MachineGraph) -> anyhow::Result<Placemen
         placements.insert(vid, CoreLocation::new(chip.0, chip.1, p))?;
     }
 
-    // Pass 2: everything else, radial first-fit.
-    let order = radial_chip_order(machine);
+    // Pass 2: everything else, radial first-fit (forbidden chips carry
+    // no ledger and are skipped from the visit order entirely).
+    let mut order = radial_chip_order(machine);
+    order.retain(|c| ledgers.contains_key(c));
     let mut chip_cursor = 0usize;
     for vid in unplaced {
         let sdram = graph.vertex(vid).resources().sdram_bytes;
@@ -218,27 +232,35 @@ pub fn place(machine: &Machine, graph: &MachineGraph) -> anyhow::Result<Placemen
 }
 
 /// Incremental placement (DESIGN.md §7): every vertex present in
-/// `prior` keeps its exact core (the *pin*), vertices no longer in the
-/// graph simply vanish, and only new vertices are placed — into the
-/// capacity the pins and `reserved` cores (the bulk data plane's system
-/// cores) leave over, with the same constrained-first + radial
-/// first-fit policy as [`place`].
+/// `prior` keeps its exact core (the *pin*) while that core still
+/// exists, vertices no longer in the graph simply vanish, and only new
+/// vertices are placed — into the capacity the pins, the `reserved`
+/// cores (the bulk data plane's system cores) and the `forbidden` chips
+/// (chips that died at runtime) leave over, with the same
+/// constrained-first + radial first-fit policy as [`place`].
 ///
-/// Errors when the pins make placement infeasible (a new constrained
-/// vertex collides with a pin, or no capacity remains) — the caller
-/// falls back to a full from-scratch re-map. New *virtual* vertices are
-/// also an error: they need a machine rebuild to gain their virtual
-/// chip.
+/// A pin whose core is gone — its chip removed from the machine or
+/// listed in `forbidden`, its processor blacklisted by re-discovery, or
+/// its core newly reserved — does not error: the vertex is *displaced*
+/// and re-placed like a new vertex. This is the self-healing move: on a
+/// degraded machine the survivors stay put and only the victims travel.
+///
+/// Errors when placement is infeasible (a new constrained vertex
+/// collides with a pin, a displaced vertex's constraint names a dead
+/// resource, or no capacity remains) — the caller falls back to a full
+/// from-scratch re-map. New *virtual* vertices are also an error: they
+/// need a machine rebuild to gain their virtual chip.
 pub fn place_incremental(
     machine: &Machine,
     graph: &MachineGraph,
     prior: &Placements,
     reserved: &std::collections::BTreeSet<CoreLocation>,
+    forbidden: &BTreeSet<ChipCoord>,
 ) -> anyhow::Result<Placements> {
     let mut placements = Placements::default();
     let mut ledgers: BTreeMap<ChipCoord, ChipLedger> = machine
         .chips()
-        .filter(|c| !c.is_virtual)
+        .filter(|c| !c.is_virtual && !forbidden.contains(&(c.x, c.y)))
         .map(|c| {
             (
                 (c.x, c.y),
@@ -255,29 +277,45 @@ pub fn place_incremental(
         .collect();
 
     // Pass 1: pins. Charge their cores and SDRAM so new vertices see
-    // only the genuinely remaining capacity.
+    // only the genuinely remaining capacity; pins whose core no longer
+    // exists fall through to the new-vertex passes (displacement).
     let mut new_plain: Vec<VertexId> = Vec::new();
     let mut new_chip_constrained: Vec<(VertexId, ChipCoord)> = Vec::new();
     let mut new_core_constrained: Vec<(VertexId, CoreLocation)> = Vec::new();
     for (vid, vertex) in graph.vertices() {
         if let Some(loc) = prior.of(vid) {
-            if vertex.virtual_link().is_none() {
-                let ledger = ledgers
-                    .get_mut(&loc.chip())
-                    .ok_or_else(|| anyhow::anyhow!("pinned chip {:?} missing", loc.chip()))?;
-                let pos = ledger.free_cores.iter().position(|p| *p == loc.p).ok_or_else(
-                    || anyhow::anyhow!("pinned core {loc} no longer available"),
-                )?;
-                ledger.free_cores.remove(pos);
-                charge_sdram(ledger, graph, vid, loc.chip())?;
+            if vertex.virtual_link().is_some() {
+                // Virtual (device) vertices sit on virtual chips, which
+                // cannot die at runtime: the pin always holds.
+                placements.insert(vid, loc)?;
+                continue;
             }
-            placements.insert(vid, loc)?;
+            let sdram = vertex.resources().sdram_bytes;
+            let held = match ledgers.get_mut(&loc.chip()) {
+                Some(ledger) => {
+                    match ledger.free_cores.iter().position(|p| *p == loc.p) {
+                        Some(pos) if ledger.sdram_free >= sdram => {
+                            ledger.free_cores.remove(pos);
+                            ledger.sdram_free -= sdram;
+                            true
+                        }
+                        _ => false,
+                    }
+                }
+                None => false,
+            };
+            if held {
+                placements.insert(vid, loc)?;
+                continue;
+            }
+            // Displaced: the pinned core is dead/forbidden/reserved.
         } else if vertex.virtual_link().is_some() {
             anyhow::bail!(
                 "new device vertex {} needs a virtual chip (full re-map required)",
                 vertex.label()
             );
-        } else if let Some(loc) = vertex.placement_constraint() {
+        }
+        if let Some(loc) = vertex.placement_constraint() {
             new_core_constrained.push((vid, loc));
         } else if let Some(chip) = vertex.chip_constraint() {
             new_chip_constrained.push((vid, chip));
@@ -314,8 +352,10 @@ pub fn place_incremental(
         placements.insert(vid, CoreLocation::new(chip.0, chip.1, p))?;
     }
 
-    // Pass 3: new plain vertices, radial first-fit over the remainder.
-    let order = radial_chip_order(machine);
+    // Pass 3: new + displaced plain vertices, radial first-fit over the
+    // remainder (forbidden chips carry no ledger and are not visited).
+    let mut order = radial_chip_order(machine);
+    order.retain(|c| ledgers.contains_key(c));
     let mut chip_cursor = 0usize;
     for vid in new_plain {
         let sdram = graph.vertex(vid).resources().sdram_bytes;
@@ -485,7 +525,7 @@ mod tests {
         g.remove_vertex(ids[3]).unwrap();
         let n1 = g.add_vertex(TestVertex::arc("n1"));
         let n2 = g.add_vertex(TestVertex::arc("n2"));
-        let inc = place_incremental(&m, &g, &prior, &Default::default()).unwrap();
+        let inc = place_incremental(&m, &g, &prior, &Default::default(), &Default::default()).unwrap();
         for (i, id) in ids.iter().enumerate() {
             if i == 3 {
                 assert_eq!(inc.of(*id), None, "removed vertex must be unplaced");
@@ -522,11 +562,11 @@ mod tests {
             }
         }
         let b = g.add_vertex(TestVertex::arc("b"));
-        let inc = place_incremental(&m, &g, &prior, &reserved).unwrap();
+        let inc = place_incremental(&m, &g, &prior, &reserved, &Default::default()).unwrap();
         assert_eq!(inc.of(b), left, "only the unreserved core may host b");
         // One more vertex no longer fits.
         g.add_vertex(TestVertex::arc("c"));
-        assert!(place_incremental(&m, &g, &prior, &reserved).is_err());
+        assert!(place_incremental(&m, &g, &prior, &reserved, &Default::default()).is_err());
     }
 
     #[test]
@@ -538,7 +578,7 @@ mod tests {
         let prior = place(&m, &g).unwrap();
         // A new vertex demanding the pinned core must fail (full re-map).
         g.add_vertex(TestVertex::constrained("b", loc));
-        assert!(place_incremental(&m, &g, &prior, &Default::default()).is_err());
+        assert!(place_incremental(&m, &g, &prior, &Default::default(), &Default::default()).is_err());
     }
 
     #[test]
@@ -555,9 +595,89 @@ mod tests {
             g.add_vertex(TestVertex::arc(&format!("v{i}")));
         }
         let full = place(&m, &g).unwrap();
-        let inc = place_incremental(&m, &g, &prior, &Default::default()).unwrap();
+        let inc = place_incremental(&m, &g, &prior, &Default::default(), &Default::default()).unwrap();
         for v in g.vertex_ids() {
             assert_eq!(inc.of(v), full.of(v), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn forbidden_chips_never_host() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        for i in 0..30 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        let mut forbidden = BTreeSet::new();
+        forbidden.insert((0u32, 0u32));
+        forbidden.insert((1u32, 1u32));
+        let p = place_avoiding(&m, &g, &forbidden).unwrap();
+        assert_eq!(p.len(), 30);
+        for (_, loc) in p.iter() {
+            assert!(!forbidden.contains(&loc.chip()), "placed on forbidden {loc}");
+        }
+        // Capacity shrinks accordingly: 2 chips x 17 cores = 34 < 35.
+        let mut big = MachineGraph::new();
+        for i in 0..35 {
+            big.add_vertex(TestVertex::arc(&format!("b{i}")));
+        }
+        assert!(place_avoiding(&m, &big, &forbidden).is_err());
+    }
+
+    #[test]
+    fn incremental_displaces_pins_on_forbidden_chips() {
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let ids: Vec<_> = (0..20)
+            .map(|i| g.add_vertex(TestVertex::arc(&format!("v{i}"))))
+            .collect();
+        let prior = place(&m, &g).unwrap();
+        // Forbid the chip hosting v0: its residents move, others stay.
+        let dead = prior.of(ids[0]).unwrap().chip();
+        let mut forbidden = BTreeSet::new();
+        forbidden.insert(dead);
+        let inc =
+            place_incremental(&m, &g, &prior, &Default::default(), &forbidden).unwrap();
+        assert_eq!(inc.len(), 20, "every vertex must survive the chip death");
+        let mut moved = 0;
+        for id in &ids {
+            let was = prior.of(*id).unwrap();
+            let now = inc.of(*id).unwrap();
+            assert_ne!(now.chip(), dead, "vertex left on forbidden chip");
+            if was.chip() == dead {
+                moved += 1;
+                assert_ne!(was, now);
+            } else {
+                assert_eq!(was, now, "survivor moved");
+            }
+        }
+        assert!(moved > 0, "the dead chip hosted someone");
+    }
+
+    #[test]
+    fn incremental_displaces_pin_on_removed_core() {
+        // A machine whose re-discovery blacklisted one core: the pin on
+        // it is displaced, everything else holds.
+        let m = MachineBuilder::spinn3().build();
+        let mut g = MachineGraph::new();
+        let ids: Vec<_> = (0..5)
+            .map(|i| g.add_vertex(TestVertex::arc(&format!("v{i}"))))
+            .collect();
+        let prior = place(&m, &g).unwrap();
+        let victim_loc = prior.of(ids[2]).unwrap();
+        let degraded = MachineBuilder::spinn3()
+            .dead_core(victim_loc.chip(), victim_loc.p)
+            .build();
+        let inc =
+            place_incremental(&degraded, &g, &prior, &Default::default(), &Default::default())
+                .unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            if i == 2 {
+                assert_ne!(inc.of(*id), Some(victim_loc), "victim must move");
+                assert!(inc.of(*id).is_some());
+            } else {
+                assert_eq!(inc.of(*id), prior.of(*id), "survivor moved");
+            }
         }
     }
 

@@ -155,6 +155,24 @@ pub fn build_tree(
     source: ChipCoord,
     dest_cores: &BTreeMap<ChipCoord, BTreeSet<u8>>,
 ) -> anyhow::Result<RoutingTree> {
+    build_tree_avoiding(machine, source, dest_cores, &BTreeSet::new())
+}
+
+/// [`build_tree`] with a first-class set of *forbidden* chips: chips
+/// still present in `machine` that the tree must neither touch nor
+/// traverse — how routes are rebuilt around chips that died at runtime
+/// without rebuilding the machine object. Targets (and the source) on a
+/// forbidden chip are an error: the placer must displace them first.
+pub fn build_tree_avoiding(
+    machine: &Machine,
+    source: ChipCoord,
+    dest_cores: &BTreeMap<ChipCoord, BTreeSet<u8>>,
+    forbidden: &BTreeSet<ChipCoord>,
+) -> anyhow::Result<RoutingTree> {
+    anyhow::ensure!(
+        !forbidden.contains(&source),
+        "route source {source:?} is on a forbidden (dead) chip"
+    );
     let mut tree = RoutingTree::new(source);
 
     // Nearest targets first: they form the trunk later targets graft onto.
@@ -162,6 +180,10 @@ pub fn build_tree(
     targets.sort_by_key(|t| (machine.hop_distance(source, *t), *t));
 
     for t in targets {
+        anyhow::ensure!(
+            !forbidden.contains(&t),
+            "route target {t:?} is on a forbidden (dead) chip"
+        );
         if !tree.nodes.contains_key(&t) {
             // Grow a path from the nearest tree chip.
             let start = *tree
@@ -169,7 +191,7 @@ pub fn build_tree(
                 .keys()
                 .min_by_key(|c| (machine.hop_distance(**c, t), **c))
                 .unwrap();
-            let path = find_path(machine, start, t)?;
+            let path = find_path_avoiding(machine, start, t, forbidden)?;
             graft(&mut tree, start, &path, machine);
         }
         let node = tree.nodes.get_mut(&t).unwrap();
@@ -178,6 +200,31 @@ pub fn build_tree(
         }
     }
     Ok(tree)
+}
+
+/// Is this (previously built) tree still sound on `machine` with
+/// `forbidden` chips quarantined? Sound means: every chip the tree
+/// touches still exists and is not forbidden, and every out-link still
+/// lands on the tree node it was built toward. Trees that fail are
+/// rebuilt by the incremental router; trees that pass are reused
+/// verbatim.
+pub fn tree_valid(
+    tree: &RoutingTree,
+    machine: &Machine,
+    forbidden: &BTreeSet<ChipCoord>,
+) -> bool {
+    for (chip, node) in &tree.nodes {
+        if forbidden.contains(chip) || machine.chip(*chip).is_none() {
+            return false;
+        }
+        for d in &node.out_links {
+            match machine.link_target(*chip, *d) {
+                Some(next) if tree.nodes.contains_key(&next) && !forbidden.contains(&next) => {}
+                _ => return false,
+            }
+        }
+    }
+    true
 }
 
 /// Attach `path` (a list of directions from `start`) to the tree; only
@@ -217,13 +264,24 @@ pub fn find_path(
     from: ChipCoord,
     to: ChipCoord,
 ) -> anyhow::Result<Vec<Direction>> {
+    find_path_avoiding(machine, from, to, &BTreeSet::new())
+}
+
+/// [`find_path`] that additionally refuses to step onto `forbidden`
+/// chips (runtime-dead chips still present in the machine object).
+pub fn find_path_avoiding(
+    machine: &Machine,
+    from: ChipCoord,
+    to: ChipCoord,
+    forbidden: &BTreeSet<ChipCoord>,
+) -> anyhow::Result<Vec<Direction>> {
     let mut path = Vec::new();
     let mut cur = from;
     let mut fuel = (machine.width + machine.height) as usize + 4;
     while cur != to {
         if fuel == 0 {
             // Geometry said we should have arrived; fall back to BFS.
-            return bfs_path(machine, from, to);
+            return bfs_path(machine, from, to, forbidden);
         }
         fuel -= 1;
         let (dx, dy) = machine.shortest_vector(cur, to);
@@ -231,9 +289,11 @@ pub fn find_path(
         let mut stepped = false;
         for d in ideal {
             if let Some(next) = machine.link_target(cur, d) {
-                // Never step onto an unrelated virtual chip.
-                let ok = next == to
-                    || machine.chip(next).map(|c| !c.is_virtual).unwrap_or(false);
+                // Never step onto an unrelated virtual chip or a
+                // quarantined (runtime-dead) chip.
+                let ok = (next == to
+                    || machine.chip(next).map(|c| !c.is_virtual).unwrap_or(false))
+                    && !forbidden.contains(&next);
                 if ok {
                     path.push(d);
                     cur = next;
@@ -244,7 +304,7 @@ pub fn find_path(
         }
         if !stepped {
             // Faults block every productive direction: BFS the rest.
-            let rest = bfs_path(machine, cur, to)?;
+            let rest = bfs_path(machine, cur, to, forbidden)?;
             path.extend(rest);
             return Ok(path);
         }
@@ -291,6 +351,7 @@ fn bfs_path(
     machine: &Machine,
     from: ChipCoord,
     to: ChipCoord,
+    forbidden: &BTreeSet<ChipCoord>,
 ) -> anyhow::Result<Vec<Direction>> {
     let mut prev: BTreeMap<ChipCoord, (ChipCoord, Direction)> = BTreeMap::new();
     let mut queue = VecDeque::new();
@@ -311,8 +372,9 @@ fn bfs_path(
         }
         for d in ALL_DIRECTIONS {
             if let Some(n) = machine.link_target(c, d) {
-                let ok = n == to
-                    || machine.chip(n).map(|ch| !ch.is_virtual).unwrap_or(false);
+                let ok = (n == to
+                    || machine.chip(n).map(|ch| !ch.is_virtual).unwrap_or(false))
+                    && !forbidden.contains(&n);
                 if ok && seen.insert(n) {
                     prev.insert(n, (c, d));
                     queue.push_back(n);
@@ -409,6 +471,48 @@ mod tests {
         let m = MachineBuilder::grid(8, 8, false).dead_chip((2, 0)).build();
         let tree = build_tree(&m, (0, 0), &dests(&[((4, 0), 1)])).unwrap();
         assert_eq!(walk(&m, &tree), vec![((4, 0), 1)]);
+    }
+
+    #[test]
+    fn routes_around_forbidden_chip_without_machine_rebuild() {
+        // The chip is still in the machine (it died at runtime); the
+        // tree must detour exactly as if it were blacklisted at boot.
+        let m = MachineBuilder::grid(8, 8, false).build();
+        let mut forbidden = BTreeSet::new();
+        forbidden.insert((2u32, 0u32));
+        let tree =
+            build_tree_avoiding(&m, (0, 0), &dests(&[((4, 0), 1)]), &forbidden).unwrap();
+        assert_eq!(walk(&m, &tree), vec![((4, 0), 1)]);
+        assert!(!tree.nodes.contains_key(&(2, 0)), "tree crossed the dead chip");
+        // Equivalent boot-time-dead machine takes the same detour length.
+        let boot = MachineBuilder::grid(8, 8, false).dead_chip((2, 0)).build();
+        let boot_tree = build_tree(&boot, (0, 0), &dests(&[((4, 0), 1)])).unwrap();
+        assert_eq!(tree.n_links(), boot_tree.n_links());
+        // A target on the forbidden chip is the placer's bug, not ours.
+        assert!(build_tree_avoiding(&m, (0, 0), &dests(&[((2, 0), 1)]), &forbidden).is_err());
+    }
+
+    #[test]
+    fn tree_validity_tracks_machine_and_forbidden_state() {
+        let m = MachineBuilder::grid(8, 8, false).build();
+        let tree = build_tree(&m, (0, 0), &dests(&[((4, 0), 1), ((2, 2), 3)])).unwrap();
+        assert!(tree_valid(&tree, &m, &BTreeSet::new()));
+        // A link the tree uses dies: invalid.
+        let mut cut = m.clone();
+        cut.remove_link((1, 0), Direction::East);
+        assert!(!tree_valid(&tree, &cut, &BTreeSet::new()));
+        // A chip the tree crosses dies: invalid.
+        let mut dead = m.clone();
+        dead.remove_chip((3, 0));
+        assert!(!tree_valid(&tree, &dead, &BTreeSet::new()));
+        // Same chip quarantined via `forbidden` on the intact machine.
+        let mut forbidden = BTreeSet::new();
+        forbidden.insert((3u32, 0u32));
+        assert!(!tree_valid(&tree, &m, &forbidden));
+        // An unrelated fault leaves the tree valid.
+        let mut far = m.clone();
+        far.remove_chip((7, 7));
+        assert!(tree_valid(&tree, &far, &BTreeSet::new()));
     }
 
     #[test]

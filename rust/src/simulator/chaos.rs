@@ -1,0 +1,188 @@
+//! The chaos engine: seeded runtime fault injection.
+//!
+//! At the scale the paper targets (a million cores; ten million on
+//! SpiNNaker-2) dead cores, chips and links are the steady state, not
+//! the exception. Boot-time faults are already first-class — the machine
+//! representation excludes blacklisted resources at discovery — but a
+//! long run must also survive *mid-execution* failures. A [`ChaosPlan`]
+//! schedules such failures as ordinary simulator events: at its tick a
+//! [`Fault`] mutates the live [`super::SimMachine`] — dead cores stop
+//! dispatching, dead links and chips swallow packets, and core states
+//! flip so the front end's run supervisor can observe the failure
+//! exactly the way the real tools do (polling core state, §6.3.5).
+//!
+//! All injection is deterministic: a plan is data, and
+//! [`ChaosPlan::single_random`] derives one reproducibly from a seed.
+
+use crate::machine::{ChipCoord, CoreLocation, Direction, Machine, ALL_DIRECTIONS};
+use crate::util::SplitMix64;
+
+/// One injectable failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// The application on this core hits a run-time error: the core
+    /// enters `RunTimeError`, stops ticking, and an error blob lands in
+    /// its IOBUF.
+    CoreRte(CoreLocation),
+    /// The core hangs (stops servicing its timer); the watchdog fires
+    /// and SCAMP reports `Watchdog`.
+    CoreStall(CoreLocation),
+    /// The whole chip dies: every core stops dispatching, the router
+    /// swallows traffic, SCAMP can no longer reach it, and neighbours
+    /// lose their links toward it.
+    ChipDeath(ChipCoord),
+    /// One inter-chip link dies (both directions). Packets routed over
+    /// it are gone for good — reinjection replays into the same void.
+    LinkDeath(ChipCoord, Direction),
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::CoreRte(loc) => write!(f, "core {loc} RTE"),
+            Fault::CoreStall(loc) => write!(f, "core {loc} stalled (watchdog)"),
+            Fault::ChipDeath(c) => write!(f, "chip {c:?} died"),
+            Fault::LinkDeath(c, d) => write!(f, "link {c:?}/{d:?} died"),
+        }
+    }
+}
+
+/// A fault scheduled at an absolute run tick (tick `t` means "after
+/// timer tick `t` completes, before `t + 1` begins", counting from the
+/// start of the run — tick 0 fires before the first timer event).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub at_tick: u64,
+    pub fault: Fault,
+}
+
+/// A schedule of mid-run faults, injected via
+/// [`crate::front::SpiNNTools::inject_chaos`] (or scheduled directly on
+/// a [`super::SimMachine`] in tests).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    pub events: Vec<ChaosEvent>,
+}
+
+impl ChaosPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder: add one fault at a tick.
+    pub fn with(mut self, at_tick: u64, fault: Fault) -> Self {
+        self.events.push(ChaosEvent { at_tick, fault });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// A reproducible single-fault plan: one fault of a seed-chosen kind
+    /// at a seed-chosen tick in `1..=max_tick`, targeting a seed-chosen
+    /// *eligible* resource of `machine`. Ethernet chips are never killed
+    /// (the board would lose its host connection — a failure the tools
+    /// cannot heal around), monitor cores are never targeted, and
+    /// chip/link targets are real (non-virtual) chips.
+    pub fn single_random(seed: u64, machine: &Machine, max_tick: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let at_tick = 1 + rng.below(max_tick.max(1) as usize) as u64;
+        let chips: Vec<ChipCoord> = machine
+            .chips()
+            .filter(|c| !c.is_virtual && !c.is_ethernet())
+            .map(|c| (c.x, c.y))
+            .collect();
+        if chips.is_empty() {
+            return Self::new();
+        }
+        let fault = match rng.below(4) {
+            0 => {
+                let (loc, _) = pick_core(&mut rng, machine, &chips);
+                Fault::CoreRte(loc)
+            }
+            1 => {
+                let (loc, _) = pick_core(&mut rng, machine, &chips);
+                Fault::CoreStall(loc)
+            }
+            2 => Fault::ChipDeath(chips[rng.below(chips.len())]),
+            _ => {
+                // A link of a non-Ethernet chip that actually works.
+                let mut pick = None;
+                for _ in 0..64 {
+                    let c = chips[rng.below(chips.len())];
+                    let d = ALL_DIRECTIONS[rng.below(6)];
+                    if machine.link_target(c, d).is_some() {
+                        pick = Some((c, d));
+                        break;
+                    }
+                }
+                match pick {
+                    Some((c, d)) => Fault::LinkDeath(c, d),
+                    None => Fault::ChipDeath(chips[rng.below(chips.len())]),
+                }
+            }
+        };
+        Self::new().with(at_tick, fault)
+    }
+}
+
+/// A random application core on a random eligible chip.
+fn pick_core(
+    rng: &mut SplitMix64,
+    machine: &Machine,
+    chips: &[ChipCoord],
+) -> (CoreLocation, ChipCoord) {
+    let c = chips[rng.below(chips.len())];
+    let procs: Vec<u8> = machine
+        .chip(c)
+        .map(|ch| ch.application_processors().map(|p| p.id).collect())
+        .unwrap_or_default();
+    let p = if procs.is_empty() { 1 } else { procs[rng.below(procs.len())] };
+    (CoreLocation::new(c.0, c.1, p), c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineBuilder;
+
+    #[test]
+    fn single_random_is_deterministic_and_eligible() {
+        let m = MachineBuilder::spinn5().build();
+        for seed in 0..32u64 {
+            let a = ChaosPlan::single_random(seed, &m, 8);
+            let b = ChaosPlan::single_random(seed, &m, 8);
+            assert_eq!(a, b, "plan for seed {seed} not reproducible");
+            assert_eq!(a.events.len(), 1);
+            let ev = &a.events[0];
+            assert!((1..=8).contains(&ev.at_tick));
+            let chip_of = |f: &Fault| match f {
+                Fault::CoreRte(l) | Fault::CoreStall(l) => l.chip(),
+                Fault::ChipDeath(c) => *c,
+                Fault::LinkDeath(c, _) => *c,
+            };
+            let chip = m.chip(chip_of(&ev.fault)).expect("fault targets a real chip");
+            assert!(!chip.is_ethernet(), "must not target the Ethernet chip");
+            assert!(!chip.is_virtual);
+            if let Fault::CoreRte(l) | Fault::CoreStall(l) = &ev.fault {
+                assert_ne!(l.p, 0, "must not target the monitor core");
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_cover_every_fault_kind() {
+        let m = MachineBuilder::spinn5().build();
+        let mut kinds = [false; 4];
+        for seed in 0..64u64 {
+            match ChaosPlan::single_random(seed, &m, 4).events[0].fault {
+                Fault::CoreRte(_) => kinds[0] = true,
+                Fault::CoreStall(_) => kinds[1] = true,
+                Fault::ChipDeath(_) => kinds[2] = true,
+                Fault::LinkDeath(_, _) => kinds[3] = true,
+            }
+        }
+        assert!(kinds.iter().all(|k| *k), "kinds seen: {kinds:?}");
+    }
+}

@@ -29,6 +29,10 @@ pub enum CoreState {
     Finished,
     /// The app returned an error (§6.3.5's failure detection).
     RunTimeError,
+    /// The core stopped servicing its timer and the hardware watchdog
+    /// fired — the state SCAMP reports for a hung core. Reached only via
+    /// injected stall faults (the chaos engine) on this simulator.
+    Watchdog,
 }
 
 /// A recording channel: a region of SDRAM with a write cursor (the
@@ -55,6 +59,7 @@ pub struct CoreCtx<'a> {
     pub(super) recordings: &'a mut BTreeMap<u32, RecordingChannel>,
     pub(super) sdram: &'a mut SdramStore,
     pub(super) provenance: &'a mut BTreeMap<String, u64>,
+    pub(super) iobuf: &'a mut String,
     pub(super) exit_requested: &'a mut bool,
 }
 
@@ -128,6 +133,16 @@ impl<'a> CoreCtx<'a> {
         }
     }
 
+    /// Append a line to the core's IOBUF — the SARK `io_printf` buffer
+    /// the host reads back with `CMD_IOBUF` after a failure
+    /// ([`crate::simulator::scamp::read_iobuf`]).
+    pub fn log(&mut self, msg: &str) {
+        self.iobuf.push_str(msg);
+        if !msg.ends_with('\n') {
+            self.iobuf.push('\n');
+        }
+    }
+
     /// Enter the Finished completion state after this event.
     pub fn exit(&mut self) {
         *self.exit_requested = true;
@@ -189,6 +204,9 @@ pub(crate) struct SimCore {
     pub regions: BTreeMap<u32, (u32, u32)>,
     pub recordings: BTreeMap<u32, RecordingChannel>,
     pub provenance: BTreeMap<String, u64>,
+    /// The SARK IOBUF: `io_printf` text plus error blobs appended by the
+    /// simulator when the app faults, read back via `scamp::read_iobuf`.
+    pub iobuf: String,
     /// Ticks completed so far.
     pub ticks_done: u64,
     /// Target tick count for the current run cycle.
@@ -204,6 +222,7 @@ impl SimCore {
             regions: BTreeMap::new(),
             recordings: BTreeMap::new(),
             provenance: BTreeMap::new(),
+            iobuf: String::new(),
             ticks_done: 0,
             run_until: 0,
         }

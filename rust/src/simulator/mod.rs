@@ -23,12 +23,14 @@
 //! benchmarking; `tests/fabric_equivalence.rs` proves the two modes
 //! byte-identical.
 
+pub mod chaos;
 mod core;
 pub mod queue;
 pub mod scamp;
 mod sdram;
 
 pub use self::core::{CoreApp, CoreCtx, CoreState, RecordingChannel};
+pub use chaos::{ChaosEvent, ChaosPlan, Fault};
 pub use sdram::{SdramStore, SDRAM_BASE};
 
 use std::collections::{BTreeMap, VecDeque};
@@ -171,6 +173,11 @@ pub struct RouterStats {
     /// Route-cache misses (first sighting of a key, or after a table
     /// load invalidated the cache).
     pub cache_misses: u64,
+    /// Packets routed into a link that no longer exists — zero on a
+    /// healthy run (mapping never routes over boot-time-dead links), so
+    /// any non-zero value means a link died *under* an installed route:
+    /// the signal the run supervisor heals on.
+    pub mc_dead_link: u64,
 }
 
 impl RouterStats {
@@ -211,6 +218,11 @@ pub(crate) struct SimChip {
     /// The single hardware dropped-packet register (§6.10).
     pub dropped_register: Option<(u32, Option<u32>)>,
     pub drop_overflow: bool,
+    /// Chip killed mid-run by a [`Fault::ChipDeath`]: cores stop
+    /// dispatching, the router swallows traffic, and every SCAMP access
+    /// errors ("unreachable"). The husk stays in the store so in-flight
+    /// events land somewhere harmless.
+    pub dead: bool,
 }
 
 impl SimChip {
@@ -225,6 +237,7 @@ impl SimChip {
             router_stats: RouterStats::default(),
             dropped_register: None,
             drop_overflow: false,
+            dead: false,
         }
     }
 
@@ -421,6 +434,27 @@ impl ChipStore {
         }
     }
 
+    /// Kill one direction of a link in the frozen fast-fabric link map
+    /// (the legacy store consults the live [`Machine`] per hop, which
+    /// the fault handler mutates, so it needs no update here).
+    fn kill_link_slot(&mut self, c: ChipCoord, d: Direction) {
+        if let ChipStore::Fast { width, height, link_dest, .. } = self {
+            if let Some(i) = Self::slot_of(*width, *height, c) {
+                link_dest[i * 6 + d.id() as usize] = LinkDest::Dead;
+            }
+        }
+    }
+
+    /// Mark a chip dead in place (see [`SimChip::dead`]).
+    fn kill_chip(&mut self, c: ChipCoord) {
+        if let Some(chip) = self.get_mut(c) {
+            chip.dead = true;
+        }
+        for d in ALL_DIRECTIONS {
+            self.kill_link_slot(c, d);
+        }
+    }
+
     /// Chips in `(x, y)`-lexicographic order — exactly the iteration
     /// order of the legacy `BTreeMap<ChipCoord, _>`, so anything that
     /// schedules events while iterating (e.g. [`SimMachine::
@@ -468,6 +502,8 @@ enum EventKind {
     HostUdp { port: u16, data: Vec<u8> },
     /// The reinjection core services the dropped-packet register.
     Reinject(ChipCoord),
+    /// A scheduled chaos fault strikes (see [`chaos`]).
+    Fault(Fault),
 }
 
 /// The simulated machine.
@@ -482,6 +518,10 @@ pub struct SimMachine {
     /// UDP frames that reached the host: (arrival time, port, payload).
     pub host_inbox: VecDeque<(u64, u16, Vec<u8>)>,
     pub stats: SimStats,
+    /// Every fault applied so far, with its strike time — the chaos
+    /// engine's own provenance, and how the front end learns which
+    /// chips died (the machine no longer lists them).
+    pub fault_log: Vec<(u64, Fault)>,
     /// Reusable outbox buffers for [`Self::with_core_app`], so the per-
     /// callback allocations disappear from the hot path.
     scratch_mc: Vec<(u32, Option<u32>)>,
@@ -512,6 +552,7 @@ impl SimMachine {
             device_inbox,
             host_inbox: VecDeque::new(),
             stats: SimStats::default(),
+            fault_log: Vec::new(),
             scratch_mc: Vec::new(),
             scratch_sdp: Vec::new(),
         }
@@ -532,26 +573,114 @@ impl SimMachine {
     }
 
     pub(crate) fn chip(&self, c: ChipCoord) -> anyhow::Result<&SimChip> {
-        self.store
-            .get(c)
-            .ok_or_else(|| anyhow::anyhow!("no such chip {c:?}"))
+        match self.store.get(c) {
+            Some(chip) if chip.dead => anyhow::bail!("chip {c:?} unreachable (dead)"),
+            Some(chip) => Ok(chip),
+            None => anyhow::bail!("no such chip {c:?}"),
+        }
     }
 
     pub(crate) fn chip_mut(&mut self, c: ChipCoord) -> anyhow::Result<&mut SimChip> {
-        self.store
-            .get_mut(c)
-            .ok_or_else(|| anyhow::anyhow!("no such chip {c:?}"))
+        match self.store.get_mut(c) {
+            Some(chip) if chip.dead => anyhow::bail!("chip {c:?} unreachable (dead)"),
+            Some(chip) => Ok(chip),
+            None => anyhow::bail!("no such chip {c:?}"),
+        }
     }
 
-    /// Router stats for provenance extraction.
+    // -- chaos (runtime fault injection) --------------------------------
+
+    /// Schedule a fault `delay_ns` into the simulated future. The fault
+    /// strikes during the next `run_until_idle`, interleaved
+    /// deterministically with ordinary traffic.
+    pub fn schedule_fault(&mut self, delay_ns: u64, fault: Fault) {
+        let t = self.time_ns + delay_ns;
+        self.push_event(t, EventKind::Fault(fault));
+    }
+
+    /// Chips killed at runtime so far (from the fault log).
+    pub fn dead_chips(&self) -> std::collections::BTreeSet<ChipCoord> {
+        self.fault_log
+            .iter()
+            .filter_map(|(_, f)| match f {
+                Fault::ChipDeath(c) => Some(*c),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Apply one fault to the live machine, immediately. Chip and link
+    /// deaths mutate [`Self::machine`] itself (the degraded topology is
+    /// what a re-discovery reads back) *and* the fabric's frozen link
+    /// map; core faults flip the core's run state and write an error
+    /// blob into its IOBUF.
+    pub fn apply_fault(&mut self, fault: Fault) -> anyhow::Result<()> {
+        let now = self.time_ns;
+        match &fault {
+            Fault::CoreRte(loc) | Fault::CoreStall(loc) => {
+                let rte = matches!(fault, Fault::CoreRte(_));
+                let Ok(chip) = self.chip_mut(loc.chip()) else {
+                    return Ok(()); // chip already dead: nothing left to fail
+                };
+                let Some(core) = chip.cores.get_mut(&loc.p) else {
+                    return Ok(());
+                };
+                if matches!(core.state, CoreState::Idle | CoreState::Finished) {
+                    return Ok(()); // nothing running to kill
+                }
+                if rte {
+                    core.state = CoreState::RunTimeError;
+                    core.iobuf.push_str(&format!(
+                        "[chaos] RTE injected at {now} ns (tick {})\n",
+                        core.ticks_done
+                    ));
+                    *core.provenance.entry("chaos_rte".into()).or_insert(0) += 1;
+                } else {
+                    core.state = CoreState::Watchdog;
+                    core.iobuf.push_str(&format!(
+                        "[chaos] core stalled at {now} ns (tick {}); watchdog fired\n",
+                        core.ticks_done
+                    ));
+                    *core.provenance.entry("chaos_stall".into()).or_insert(0) += 1;
+                }
+            }
+            Fault::ChipDeath(c) => {
+                self.machine.remove_chip(*c);
+                self.store.kill_chip(*c);
+                // Neighbours' frozen links toward the corpse go dead
+                // (their Machine links were pruned by remove_chip).
+                for d in ALL_DIRECTIONS {
+                    if let Some(n) = self.machine.neighbour_coord(*c, d) {
+                        self.store.kill_link_slot(n, d.opposite());
+                    }
+                }
+            }
+            Fault::LinkDeath(c, d) => {
+                let target = self.machine.link_target(*c, *d);
+                self.machine.remove_link(*c, *d);
+                self.store.kill_link_slot(*c, *d);
+                if let Some(n) = target {
+                    self.store.kill_link_slot(n, d.opposite());
+                }
+            }
+        }
+        self.fault_log.push((now, fault));
+        Ok(())
+    }
+
+    /// Router stats for provenance extraction (`None` for missing or
+    /// dead chips — a dead chip's counters cannot be read back).
     pub fn router_stats(&self, c: ChipCoord) -> Option<RouterStats> {
-        self.store.get(c).map(|ch| ch.router_stats)
+        self.store.get(c).filter(|ch| !ch.dead).map(|ch| ch.router_stats)
     }
 
     /// Sum of router stats across the machine.
     pub fn total_router_stats(&self) -> RouterStats {
         let mut out = RouterStats::default();
         for (_, ch) in self.store.ordered() {
+            if ch.dead {
+                continue; // a dead chip's counters are unreadable
+            }
             out.mc_routed += ch.router_stats.mc_routed;
             out.mc_default_routed += ch.router_stats.mc_default_routed;
             out.mc_dropped += ch.router_stats.mc_dropped;
@@ -559,6 +688,7 @@ impl SimMachine {
             out.mc_lost_forever += ch.router_stats.mc_lost_forever;
             out.cache_hits += ch.router_stats.cache_hits;
             out.cache_misses += ch.router_stats.cache_misses;
+            out.mc_dead_link += ch.router_stats.mc_dead_link;
         }
         out
     }
@@ -619,6 +749,7 @@ impl SimMachine {
                 Ok(())
             }
             EventKind::Reinject(chip) => self.handle_reinject(chip),
+            EventKind::Fault(fault) => self.apply_fault(fault),
         }
     }
 
@@ -638,6 +769,11 @@ impl SimMachine {
             }
             return Ok(());
         };
+        if sim_chip.dead {
+            // A dead chip's router forwards nothing; in-flight packets
+            // vanish (its statistics are unreadable anyway).
+            return Ok(());
+        }
         let decision = if cached {
             let SimChip { table, route_cache, router_stats, .. } = &mut *sim_chip;
             let (decision, hit) = route_cache.route(table, key, entered);
@@ -695,6 +831,7 @@ impl SimMachine {
                     if let Some(c) = self.store.get_mut(chip) {
                         c.router_stats.mc_dropped += 1;
                         c.router_stats.mc_lost_forever += 1;
+                        c.router_stats.mc_dead_link += 1;
                     }
                     continue;
                 }
@@ -754,6 +891,9 @@ impl SimMachine {
         let Some(c) = self.store.get_mut(chip) else {
             return Ok(());
         };
+        if c.dead {
+            return Ok(());
+        }
         if let Some((key, payload)) = c.dropped_register.take() {
             c.router_stats.mc_reinjected += 1;
             // Re-issue as if sent by the monitor core.
@@ -771,9 +911,15 @@ impl SimMachine {
     }
 
     fn handle_tick(&mut self, loc: CoreLocation) -> anyhow::Result<()> {
-        // Check run state first.
+        // Check run state first. A tick landing on a dead chip (the chip
+        // died with ticks in flight) simply evaporates.
         {
-            let chip = self.chip_mut(loc.chip())?;
+            let Some(chip) = self.store.get_mut(loc.chip()) else {
+                return Ok(());
+            };
+            if chip.dead {
+                return Ok(());
+            }
             let core = chip
                 .cores
                 .get_mut(&loc.p)
@@ -789,11 +935,17 @@ impl SimMachine {
         }
         let timestep_ns = self.config.timestep_us as u64 * 1000;
         self.with_core_app(loc, |app, ctx| app.on_timer(ctx))?;
-        // Schedule the next tick (or pause at the boundary).
-        let (done, until, state) = {
-            let chip = self.chip(loc.chip())?;
-            let core = &chip.cores[&loc.p];
-            (core.ticks_done, core.run_until, core.state)
+        // Schedule the next tick (or pause at the boundary). The chip may
+        // have died *during* the callback's event; then there is nothing
+        // left to schedule.
+        let Some((done, until, state)) = ({
+            let chip = self.store.get(loc.chip()).filter(|c| !c.dead);
+            chip.map(|c| {
+                let core = &c.cores[&loc.p];
+                (core.ticks_done, core.run_until, core.state)
+            })
+        }) else {
+            return Ok(());
         };
         if state == CoreState::Running {
             if done < until {
@@ -836,10 +988,16 @@ impl SimMachine {
                 .store
                 .get_mut(loc.chip())
                 .ok_or_else(|| anyhow::anyhow!("no chip {:?}", loc.chip()))?;
+            if chip.dead {
+                return Ok(()); // event to a dead chip: evaporates
+            }
             let core = chip
                 .cores
                 .get_mut(&loc.p)
                 .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+            if matches!(core.state, CoreState::RunTimeError | CoreState::Watchdog) {
+                return Ok(()); // failed cores dispatch nothing further
+            }
             let Some(mut app) = core.app.take() else {
                 return Ok(()); // packet to an idle core: silently ignored
             };
@@ -854,6 +1012,7 @@ impl SimMachine {
                 recordings: &mut core.recordings,
                 sdram: &mut chip.sdram,
                 provenance: &mut core.provenance,
+                iobuf: &mut core.iobuf,
                 exit_requested: &mut exit_requested,
             };
             let result = f(app.as_mut(), &mut ctx);
@@ -886,12 +1045,15 @@ impl SimMachine {
         self.scratch_mc = mc_out;
         self.scratch_sdp = sdp_out;
         // A failing callback marks the core RTE but does not stop the
-        // simulation: the tools detect the state afterwards (§6.3.5).
+        // simulation: the tools detect the state afterwards (§6.3.5) and
+        // read the error text back out of the IOBUF.
         if let Err(e) = result {
             let chip = self.store.get_mut(loc.chip()).unwrap();
             let core = chip.cores.get_mut(&loc.p).unwrap();
             core.provenance
                 .insert(format!("rte: {e}"), 1);
+            core.iobuf
+                .push_str(&format!("RTE at {time_ns} ns: {e}\n"));
         }
         Ok(())
     }
@@ -910,7 +1072,11 @@ impl SimMachine {
                 .ok_or_else(|| anyhow::anyhow!("no ethernet for {from}"))?;
             let hops = self.machine.hop_distance(from.chip(), eth) as u64;
             let relay = hops * self.config.wire.p2p_per_hop_ns;
-            let chip = self.chip(eth)?;
+            let Ok(chip) = self.chip(eth) else {
+                // The board's Ethernet chip died under us: the message is
+                // lost, but a surviving sender must not crash the run.
+                return Ok(());
+            };
             let Some((_, port, strip)) = chip.iptags.get(&msg.header.tag).cloned() else {
                 anyhow::bail!("SDP with unset IP tag {} at {eth:?}", msg.header.tag)
             };
@@ -1011,6 +1177,9 @@ impl SimMachine {
         let timestep_ns = self.config.timestep_us as u64 * 1000;
         let mut locs: Vec<CoreLocation> = Vec::new();
         for (c, chip) in self.store.ordered() {
+            if chip.dead {
+                continue;
+            }
             for (p, core) in &chip.cores {
                 if matches!(core.state, CoreState::Running | CoreState::Paused) {
                     locs.push(CoreLocation::new(c.0, c.1, *p));
@@ -1288,6 +1457,96 @@ mod tests {
         assert!(stats.mc_dropped > 0);
         assert_eq!(stats.mc_reinjected, 0);
         assert!((rx.lock().unwrap().len() as u64) < 32, "some packets must be lost");
+    }
+
+    fn chaos_pair(mode: FabricMode) -> SimMachine {
+        // a on (0,0) sends key 0x10 East to b on (1,0); b replies 0x20.
+        let machine = MachineBuilder::spinn3().build();
+        let config = SimConfig { fabric: mode, ..SimConfig::default() };
+        let mut sim = SimMachine::boot(machine, config);
+        sim.chip_mut((0, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
+            RoutingEntry::new(0x10, !0, Route::EMPTY.with_link(Direction::East)),
+            RoutingEntry::new(0x20, !0, Route::EMPTY.with_processor(1)),
+        ]));
+        sim.chip_mut((1, 0)).unwrap().install_table(RoutingTable::from_entries(vec![
+            RoutingEntry::new(0x10, !0, Route::EMPTY.with_processor(1)),
+            RoutingEntry::new(0x20, !0, Route::EMPTY.with_link(Direction::West)),
+        ]));
+        sim
+    }
+
+    #[test]
+    fn chip_death_mid_run_swallows_traffic_and_hides_the_chip() {
+        for mode in [FabricMode::Fast, FabricMode::Legacy] {
+            let mut sim = chaos_pair(mode);
+            let rx_a = shared();
+            let a = CoreLocation::new(0, 0, 1);
+            let b = CoreLocation::new(1, 0, 1);
+            scamp::load_app(&mut sim, a, Box::new(PingApp { key: 0x10, received: rx_a.clone() }), Default::default(), Default::default()).unwrap();
+            scamp::load_app(&mut sim, b, Box::new(PingApp { key: 0x20, received: shared() }), Default::default(), Default::default()).unwrap();
+            scamp::signal_start(&mut sim).unwrap();
+            // Kill (1,0) halfway through a 10-tick run.
+            let timestep = sim.config.timestep_us as u64 * 1000;
+            sim.schedule_fault(5 * timestep + timestep / 2, Fault::ChipDeath((1, 0)));
+            sim.start_run_cycle(10);
+            sim.run_until_idle().unwrap();
+            // b's replies stop at the fault: a hears ~5 of 10.
+            let heard = rx_a.lock().unwrap().len();
+            assert!((4..=6).contains(&heard), "mode {mode:?}: a heard {heard}");
+            // The dead chip is gone from machine and SCAMP's view.
+            assert!(sim.machine.chip((1, 0)).is_none());
+            assert!(scamp::core_state(&sim, b).is_err());
+            assert!(!scamp::core_states(&sim).contains_key(&b));
+            assert_eq!(sim.dead_chips().into_iter().collect::<Vec<_>>(), vec![(1, 0)]);
+            // a survives the whole run.
+            assert_eq!(scamp::core_state(&sim, a).unwrap(), CoreState::Paused);
+        }
+    }
+
+    #[test]
+    fn link_death_mid_run_counts_dead_link_drops() {
+        for mode in [FabricMode::Fast, FabricMode::Legacy] {
+            let mut sim = chaos_pair(mode);
+            let a = CoreLocation::new(0, 0, 1);
+            let rx_b = shared();
+            scamp::load_app(&mut sim, a, Box::new(PingApp { key: 0x10, received: shared() }), Default::default(), Default::default()).unwrap();
+            scamp::load_app(&mut sim, CoreLocation::new(1, 0, 1), Box::new(PingAppSilent { received: rx_b.clone() }), Default::default(), Default::default()).unwrap();
+            scamp::signal_start(&mut sim).unwrap();
+            let timestep = sim.config.timestep_us as u64 * 1000;
+            sim.schedule_fault(4 * timestep + timestep / 2, Fault::LinkDeath((0, 0), Direction::East));
+            sim.start_run_cycle(10);
+            sim.run_until_idle().unwrap();
+            let heard = rx_b.lock().unwrap().len();
+            assert_eq!(heard, 4, "mode {mode:?}: packets before the cut arrive");
+            let stats = sim.router_stats((0, 0)).unwrap();
+            assert_eq!(stats.mc_dead_link, 6, "mode {mode:?}: post-cut sends die on the link");
+            assert_eq!(sim.machine.link_target((0, 0), Direction::East), None);
+        }
+    }
+
+    #[test]
+    fn core_faults_flip_state_and_write_iobuf() {
+        let mut sim = chaos_pair(FabricMode::Fast);
+        let a = CoreLocation::new(0, 0, 1);
+        let b = CoreLocation::new(1, 0, 1);
+        scamp::load_app(&mut sim, a, Box::new(PingApp { key: 0x10, received: shared() }), Default::default(), Default::default()).unwrap();
+        scamp::load_app(&mut sim, b, Box::new(PingApp { key: 0x20, received: shared() }), Default::default(), Default::default()).unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        let timestep = sim.config.timestep_us as u64 * 1000;
+        sim.schedule_fault(2 * timestep + timestep / 2, Fault::CoreRte(a));
+        sim.schedule_fault(3 * timestep + timestep / 2, Fault::CoreStall(b));
+        sim.start_run_cycle(8);
+        sim.run_until_idle().unwrap();
+        assert_eq!(scamp::core_state(&sim, a).unwrap(), CoreState::RunTimeError);
+        assert_eq!(scamp::core_state(&sim, b).unwrap(), CoreState::Watchdog);
+        let iobuf_a = scamp::read_iobuf(&mut sim, a).unwrap();
+        assert!(iobuf_a.contains("[chaos] RTE injected"), "{iobuf_a}");
+        let iobuf_b = scamp::read_iobuf(&mut sim, b).unwrap();
+        assert!(iobuf_b.contains("watchdog fired"), "{iobuf_b}");
+        // Failed cores stop mid-run and never reach the tick target.
+        let prov = scamp::provenance(&sim, a).unwrap();
+        assert_eq!(prov.get("chaos_rte"), Some(&1));
+        assert_eq!(sim.fault_log.len(), 2);
     }
 
     #[test]

@@ -197,6 +197,7 @@ pub fn install_app(
         regions: region_table,
         recordings,
         provenance: BTreeMap::new(),
+        iobuf: String::new(),
         ticks_done: 0,
         run_until: 0,
     };
@@ -288,6 +289,7 @@ pub fn reload_app(
         regions: region_table,
         recordings,
         provenance: BTreeMap::new(),
+        iobuf: String::new(),
         ticks_done: 0,
         run_until: 0,
     };
@@ -344,8 +346,13 @@ fn set_state(sim: &mut SimMachine, loc: CoreLocation, state: CoreState) -> anyho
         .cores
         .get_mut(&loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
-    // Do not clobber terminal states reached during callbacks.
-    if !matches!(core.state, CoreState::RunTimeError | CoreState::Finished) || state == CoreState::Finished {
+    // Do not clobber failure states reached during callbacks or injected
+    // by the chaos engine.
+    if !matches!(
+        core.state,
+        CoreState::RunTimeError | CoreState::Finished | CoreState::Watchdog
+    ) || state == CoreState::Finished
+    {
         core.state = state;
     }
     Ok(())
@@ -385,6 +392,54 @@ pub fn provenance(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<BTreeMa
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
         .provenance
         .clone())
+}
+
+/// Read a core's IOBUF (the `CMD_IOBUF` error readback of §6.3.5: the
+/// tools pull the SARK `io_printf` buffer off every failed core so the
+/// error text reaches the user). Charged like an SDRAM read of the
+/// buffer's length. Errors for dead/unreachable chips — a dead chip's
+/// IOBUF is gone with it.
+pub fn read_iobuf(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<String> {
+    let text = sim
+        .chip(loc.chip())?
+        .cores
+        .get(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
+        .iobuf
+        .clone();
+    let cost = chunk_cost(sim, loc.chip());
+    let chunks = text.len().div_ceil(SCP_CHUNK).max(1) as u64;
+    sim.advance_host_time(cost * chunks);
+    Ok(text)
+}
+
+/// Re-discover the machine after runtime faults (§6.3.1, run again):
+/// returns the degraded [`Machine`] view with every newly-dead resource
+/// excluded — chips and links the chaos engine killed are already gone
+/// from the live `sim.machine`, and this adds the *core*-level
+/// blacklist: cores currently in `RunTimeError`/`Watchdog` plus any in
+/// `extra_excluded` (cores a supervisor quarantined in an earlier heal,
+/// whose states have since been reset by unloading). Charged one SCP
+/// round trip per chip, like the initial discovery sweep.
+pub fn rediscover_machine(
+    sim: &mut SimMachine,
+    extra_excluded: &std::collections::BTreeSet<CoreLocation>,
+) -> crate::machine::Machine {
+    let mut machine = sim.machine.clone();
+    let mut excluded: Vec<CoreLocation> = extra_excluded.iter().copied().collect();
+    for (loc, state) in core_states(sim) {
+        if matches!(state, CoreState::RunTimeError | CoreState::Watchdog) {
+            excluded.push(loc);
+        }
+    }
+    for loc in excluded {
+        if let Some(chip) = machine.chip_mut(loc.chip()) {
+            chip.processors.retain(|p| p.id != loc.p);
+        }
+    }
+    let cost = sim.config.wire.eth_read_rtt_ns * machine.n_chips() as u64;
+    sim.advance_host_time(cost);
+    machine
 }
 
 /// Recording-channel descriptor: (sdram addr, bytes written, capacity).
@@ -526,6 +581,42 @@ mod tests {
         let prov = provenance(&sim, loc).unwrap();
         assert_eq!(prov.get("recording_overflow"), Some(&3));
         assert_eq!(core_state(&sim, loc).unwrap(), CoreState::Paused);
+    }
+
+    #[test]
+    fn iobuf_captures_rte_text_and_rediscovery_excludes_failures() {
+        struct BadApp;
+        impl CoreApp for BadApp {
+            fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+                if ctx.tick >= 2 {
+                    anyhow::bail!("synapse row overran DTCM")
+                }
+                ctx.log("tick ok");
+                Ok(())
+            }
+        }
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let loc = CoreLocation::new(1, 1, 2);
+        load_app(&mut sim, loc, Box::new(BadApp), BTreeMap::new(), BTreeMap::new()).unwrap();
+        signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(5);
+        sim.run_until_idle().unwrap();
+        assert_eq!(core_state(&sim, loc).unwrap(), CoreState::RunTimeError);
+        let text = read_iobuf(&mut sim, loc).unwrap();
+        assert!(text.contains("tick ok"), "{text}");
+        assert!(text.contains("RTE at"), "{text}");
+        assert!(text.contains("synapse row overran DTCM"), "{text}");
+        // Re-discovery blacklists the failed core but keeps the chip.
+        let degraded = rediscover_machine(&mut sim, &Default::default());
+        let chip = degraded.chip((1, 1)).unwrap();
+        assert!(chip.processor(2).is_none(), "failed core must be excluded");
+        assert_eq!(chip.n_application_cores(), 16);
+        // Extra exclusions apply even when states were since reset.
+        let mut extra = std::collections::BTreeSet::new();
+        extra.insert(CoreLocation::new(0, 1, 5));
+        let degraded = rediscover_machine(&mut sim, &extra);
+        assert!(degraded.chip((0, 1)).unwrap().processor(5).is_none());
     }
 
     #[test]

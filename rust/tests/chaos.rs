@@ -1,0 +1,303 @@
+//! Chaos property suite (DESIGN.md §8, experiment E14).
+//!
+//! The heal property: for seeded random **single-fault** plans — a core
+//! RTE, a whole-chip death, or a link death at a random tick — injected
+//! into a supervised run, the run completes, and the surviving vertices'
+//! recordings are **byte-identical** to a fresh run of the same graph on
+//! the *equivalently boot-degraded* machine (the fault expressed as a §2
+//! blacklist instead of a runtime event). This holds at mapping
+//! worker-pool widths 1, 2 and 8.
+//!
+//! That single equality is a strong oracle: if the heal left any tree
+//! crossing the dead resource, any vertex un-reloaded, or any routing
+//! table stale, packets die and the Conway states diverge within a tick
+//! or two.
+//!
+//! `HealPolicy::Abort` is covered separately: the run must stop with a
+//! clean error carrying the failed core's IOBUF text.
+//!
+//! CI runs this suite under a fixed seed matrix via `CHAOS_SEED`.
+
+use std::collections::BTreeSet;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{
+    BootFaults, HealPolicy, MachineSpec, SpiNNTools, SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::machine::{ChipCoord, CoreLocation, ALL_DIRECTIONS};
+use spinntools::simulator::{ChaosPlan, Fault};
+use spinntools::util::{prop, SplitMix64};
+
+const ROWS: u32 = 6;
+const COLS: u32 = 6;
+const TICKS: u64 = 6;
+
+/// Base seed for the property cases; CI sweeps a matrix of these.
+fn base_seed() -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0A5)
+}
+
+fn supervised(policy: HealPolicy) -> SupervisorConfig {
+    SupervisorConfig { poll_interval_ticks: 1, policy, max_heals: 4 }
+}
+
+/// Build the ROWS x COLS Conway grid into `tools`; returns vertex ids.
+fn build_grid(tools: &mut SpiNNTools, seed: u64) -> Vec<VertexId> {
+    let alive = |r: u32, c: u32| (r.wrapping_mul(31) ^ c.wrapping_mul(17) ^ seed as u32) % 3 == 0;
+    let mut ids = Vec::new();
+    for r in 0..ROWS {
+        for c in 0..COLS {
+            ids.push(
+                tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                    .unwrap(),
+            );
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < ROWS as i64 && c < COLS as i64)
+            .then_some((r * COLS as i64 + c) as usize)
+    };
+    for r in 0..ROWS as i64 {
+        for c in 0..COLS as i64 {
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        tools
+                            .add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)
+                            .unwrap();
+                    }
+                }
+            }
+        }
+    }
+    ids
+}
+
+/// The deterministic placement of this workload (a scratch pre-run):
+/// used to aim faults at resources that actually carry the run.
+fn probe_placements(seed: u64) -> Vec<(VertexId, CoreLocation)> {
+    let mut probe = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let ids = build_grid(&mut probe, seed);
+    probe.run_ticks(1).unwrap();
+    let mapping = probe.mapping().unwrap();
+    ids.iter().map(|v| (*v, mapping.placement(*v).unwrap())).collect()
+}
+
+/// A seeded single fault aimed at a resource the workload uses, plus
+/// the equivalent boot-time blacklist.
+fn pick_fault(rng: &mut SplitMix64, placements: &[(VertexId, CoreLocation)]) -> (Fault, BootFaults) {
+    let machine = MachineSpec::Spinn5.template();
+    let used_chips: Vec<ChipCoord> = {
+        let set: BTreeSet<ChipCoord> = placements.iter().map(|(_, l)| l.chip()).collect();
+        set.into_iter().collect()
+    };
+    // Chips eligible for whole-chip death: used, but not the Ethernet
+    // chip (killing the board's host link is not healable).
+    let killable: Vec<ChipCoord> = used_chips
+        .iter()
+        .copied()
+        .filter(|c| !machine.chip(*c).map(|ch| ch.is_ethernet()).unwrap_or(true))
+        .collect();
+    match rng.below(3) {
+        0 => {
+            let (_, loc) = placements[rng.below(placements.len())];
+            (
+                Fault::CoreRte(loc),
+                BootFaults { cores: vec![loc], ..Default::default() },
+            )
+        }
+        1 => {
+            let chip = killable[rng.below(killable.len())];
+            (
+                Fault::ChipDeath(chip),
+                BootFaults { chips: vec![chip], ..Default::default() },
+            )
+        }
+        _ => {
+            // A link between two *used* adjacent chips: Conway cells on
+            // both sides exchange state over it every tick, so its death
+            // is both observable and harmful until healed.
+            let mut pairs = Vec::new();
+            for a in &used_chips {
+                for d in ALL_DIRECTIONS {
+                    if let Some(b) = machine.link_target(*a, d) {
+                        if used_chips.contains(&b) {
+                            pairs.push((*a, d));
+                        }
+                    }
+                }
+            }
+            assert!(!pairs.is_empty(), "workload spans adjacent chips");
+            let (chip, d) = pairs[rng.below(pairs.len())];
+            (
+                Fault::LinkDeath(chip, d),
+                BootFaults { links: vec![(chip, d)], ..Default::default() },
+            )
+        }
+    }
+}
+
+/// Run the workload with the fault injected mid-run and heal it, at the
+/// given mapping pool width; return per-vertex recordings.
+fn chaos_run(seed: u64, threads: usize, fault: &Fault, at_tick: u64) -> Vec<Vec<u8>> {
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5)
+            .with_supervision(supervised(HealPolicy::Remap))
+            .with_mapping_threads(threads),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.inject_chaos(ChaosPlan::new().with(at_tick, fault.clone()));
+    tools.run_ticks(TICKS).unwrap_or_else(|e| {
+        panic!("supervised run failed to heal {fault} (threads {threads}): {e}")
+    });
+    // The supervisor must have noticed and healed (every picked fault is
+    // observable: a failed core, a dead used chip, or a loaded link).
+    let heals = tools.heal_reports();
+    assert_eq!(heals.len(), 1, "expected one heal for {fault}, got {}", heals.len());
+    assert!(!heals[0].faults.is_empty());
+    // Nothing may remain placed on a dead resource.
+    let mapping = tools.mapping().unwrap();
+    for id in &ids {
+        let loc = mapping.placement(*id).unwrap();
+        match fault {
+            Fault::ChipDeath(c) => assert_ne!(loc.chip(), *c),
+            Fault::CoreRte(f) | Fault::CoreStall(f) => assert_ne!(loc, *f),
+            Fault::LinkDeath(_, _) => {}
+        }
+    }
+    ids.iter().map(|v| tools.recording(*v).to_vec()).collect()
+}
+
+/// Run the same workload on the equivalently boot-degraded machine.
+fn degraded_run(seed: u64, threads: usize, faults: &BootFaults) -> Vec<Vec<u8>> {
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5)
+            .with_supervision(supervised(HealPolicy::Remap))
+            .with_mapping_threads(threads)
+            .with_boot_faults(faults.clone()),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.run_ticks(TICKS).unwrap();
+    assert!(tools.heal_reports().is_empty(), "boot-degraded run must not need healing");
+    ids.iter().map(|v| tools.recording(*v).to_vec()).collect()
+}
+
+#[test]
+fn heal_property_single_faults_match_boot_degraded_runs() {
+    let placements = probe_placements(base_seed());
+    prop::check(4, base_seed(), |rng| {
+        let seed = base_seed();
+        let (fault, boot) = pick_fault(rng, &placements);
+        let at_tick = 1 + rng.below(3) as u64;
+        let reference = degraded_run(seed, 1, &boot);
+        for v in &reference {
+            assert_eq!(v.len(), TICKS as usize, "one state byte per tick");
+        }
+        for threads in [1usize, 2, 8] {
+            let healed = chaos_run(seed, threads, &fault, at_tick);
+            assert_eq!(
+                healed, reference,
+                "healed run diverged from boot-degraded run \
+                 (fault {fault}, tick {at_tick}, threads {threads})"
+            );
+            // Pool width must not change the boot-degraded run either.
+            if threads > 1 {
+                assert_eq!(degraded_run(seed, threads, &boot), reference);
+            }
+        }
+    });
+}
+
+#[test]
+fn abort_policy_surfaces_clean_error_with_iobuf() {
+    let placements = probe_placements(7);
+    let victim = placements[placements.len() / 2].1;
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5).with_supervision(supervised(HealPolicy::Abort)),
+    )
+    .unwrap();
+    build_grid(&mut tools, 7);
+    tools.inject_chaos(ChaosPlan::new().with(2, Fault::CoreRte(victim)));
+    let err = tools.run_ticks(TICKS).unwrap_err().to_string();
+    assert!(err.contains("run aborted by supervisor"), "{err}");
+    assert!(err.contains(&format!("{victim}")), "{err}");
+    assert!(err.contains("[chaos] RTE injected"), "IOBUF text must ride the error: {err}");
+    // No heal happened.
+    assert!(tools.heal_reports().is_empty());
+}
+
+#[test]
+fn watchdog_stall_is_detected_and_healed() {
+    let placements = probe_placements(11);
+    let victim = placements[3].1;
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5).with_supervision(supervised(HealPolicy::Remap)),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, 11);
+    tools.inject_chaos(ChaosPlan::new().with(2, Fault::CoreStall(victim)));
+    tools.run_ticks(TICKS).unwrap();
+    let heals = tools.heal_reports();
+    assert_eq!(heals.len(), 1);
+    assert!(
+        heals[0].faults.iter().any(|f| f.contains("watchdog")),
+        "{:?}",
+        heals[0].faults
+    );
+    // The stalled core is quarantined: nothing lives there now.
+    let mapping = tools.mapping().unwrap();
+    for id in &ids {
+        assert_ne!(mapping.placement(*id), Some(victim));
+    }
+    // And the equivalence oracle holds for the stall too.
+    let reference = degraded_run(
+        11,
+        1,
+        &BootFaults { cores: vec![victim], ..Default::default() },
+    );
+    let healed: Vec<Vec<u8>> = ids.iter().map(|v| tools.recording(*v).to_vec()).collect();
+    assert_eq!(healed, reference);
+}
+
+#[test]
+fn max_heals_bounds_a_machine_dying_in_pieces() {
+    // Two chip deaths with max_heals = 1: the second fault must abort
+    // with the budget-exhausted error rather than looping forever.
+    let placements = probe_placements(13);
+    let machine = MachineSpec::Spinn5.template();
+    let mut used: Vec<ChipCoord> = placements
+        .iter()
+        .map(|(_, l)| l.chip())
+        .filter(|c| !machine.chip(*c).map(|ch| ch.is_ethernet()).unwrap_or(true))
+        .collect();
+    used.sort();
+    used.dedup();
+    assert!(used.len() >= 2, "workload must span two killable chips");
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5).with_supervision(SupervisorConfig {
+            poll_interval_ticks: 1,
+            policy: HealPolicy::Remap,
+            max_heals: 1,
+        }),
+    )
+    .unwrap();
+    build_grid(&mut tools, 13);
+    tools.inject_chaos(
+        ChaosPlan::new()
+            .with(1, Fault::ChipDeath(used[0]))
+            .with(3, Fault::ChipDeath(used[1])),
+    );
+    let err = tools.run_ticks(TICKS).unwrap_err().to_string();
+    assert!(err.contains("failing faster than it can heal"), "{err}");
+    assert_eq!(tools.heal_reports().len(), 1, "exactly the budgeted heal ran");
+}

@@ -7,10 +7,11 @@
 
 use spinntools::apps::networks::{conway_machine_graph, microcircuit_machine_graph};
 use spinntools::graph::MachineGraph;
-use spinntools::machine::{Machine, MachineBuilder};
+use spinntools::machine::{ChipCoord, Machine, MachineBuilder, ALL_DIRECTIONS};
 use spinntools::mapping::{
-    map_graph, map_graph_via_engine, Mapping, MappingConfig, MappingOptions,
+    map_graph, map_graph_via_engine, router, Mapping, MappingConfig, MappingOptions,
 };
+use spinntools::util::prop;
 
 /// Canonical text form of everything mapping produces; equal strings
 /// mean equal mappings (every constituent is a deterministic
@@ -63,6 +64,89 @@ fn microcircuit_mapping_identical_at_1_2_8_threads() {
     let graph = microcircuit_machine_graph(&machine, 0.05, 20260728).expect("split");
     assert!(graph.n_vertices() >= 16, "workload too small to exercise sharding");
     assert_thread_invariant(&machine, &graph, "microcircuit 5% / 3 boards");
+}
+
+/// Satellite (chaos PR): random boot-time fault sets — dead chips, dead
+/// cores, dead links — on the big Conway workload. The mapping must (a)
+/// never place a vertex on a dead resource, (b) never route a tree over
+/// a dead link or through a dead chip, and (c) stay byte-identical
+/// across worker-pool widths 1/2/8. Debug builds run the 20x20 grid on
+/// one SpiNN-5 board; release builds (CI runs `cargo test --release`)
+/// run the bench-shaped 88x88 grid on the 576-chip machine.
+#[test]
+fn mapping_with_random_boot_faults_is_sound_and_thread_invariant() {
+    let (rows, cases) = if cfg!(debug_assertions) { (20u32, 3u32) } else { (88u32, 2u32) };
+    prop::check(cases, 0xFA07, |rng| {
+        let mut builder = if cfg!(debug_assertions) {
+            MachineBuilder::spinn5()
+        } else {
+            MachineBuilder::boards(12)
+        };
+        let template = if cfg!(debug_assertions) {
+            MachineBuilder::spinn5().build()
+        } else {
+            MachineBuilder::boards(12).build()
+        };
+        let (w, h) = (template.width as usize, template.height as usize);
+        // Random chips to kill: real, non-Ethernet, not the boot chip.
+        let mut dead_chips: Vec<ChipCoord> = Vec::new();
+        for _ in 0..rng.below(3) {
+            let c = (rng.below(w) as u32, rng.below(h) as u32);
+            let eligible = template
+                .chip(c)
+                .map(|ch| !ch.is_ethernet() && !ch.is_virtual)
+                .unwrap_or(false)
+                && c != (0, 0);
+            if eligible && !dead_chips.contains(&c) {
+                builder = builder.dead_chip(c);
+                dead_chips.push(c);
+            }
+        }
+        // Random dead cores and links.
+        for _ in 0..1 + rng.below(4) {
+            let c = (rng.below(w) as u32, rng.below(h) as u32);
+            builder = builder.dead_core(c, 1 + rng.below(16) as u8);
+        }
+        for _ in 0..1 + rng.below(5) {
+            let c = (rng.below(w) as u32, rng.below(h) as u32);
+            builder = builder.dead_link(c, ALL_DIRECTIONS[rng.below(6)]);
+        }
+        let machine = builder.build();
+        let graph = conway_machine_graph(rows, rows, |r, c| (r + c) % 3 == 0);
+        let baseline = match map_graph(&machine, &graph, &config(1)) {
+            Ok(m) => m,
+            // Random faults can isolate a target; that is the router's
+            // error to raise, not a mapping to verify.
+            Err(_) => return,
+        };
+        // (a) placements only on live resources.
+        for (_, loc) in baseline.placements.iter() {
+            let chip = machine
+                .chip(loc.chip())
+                .unwrap_or_else(|| panic!("vertex placed on dead chip {:?}", loc.chip()));
+            assert!(
+                chip.processor(loc.p).is_some(),
+                "vertex placed on dead core {loc}"
+            );
+        }
+        // (b) every tree walks only working links (tree_valid re-walks
+        // each hop against the machine's live link table).
+        for (key, tree) in &baseline.forest.trees {
+            assert!(
+                router::tree_valid(tree, &machine, &Default::default()),
+                "tree {key:?} traverses a dead resource"
+            );
+            for chip in tree.nodes.keys() {
+                assert!(!dead_chips.contains(chip), "tree {key:?} crosses dead chip {chip:?}");
+            }
+        }
+        // (c) pool-width invariance on the faulted machine.
+        let base_fp = fingerprint(&baseline);
+        for threads in [2usize, 8] {
+            let sharded = fingerprint(&map_graph(&machine, &graph, &config(threads)).unwrap());
+            assert_eq!(base_fp, sharded, "faulted-machine mapping differs at {threads} threads");
+        }
+    });
 }
 
 #[test]
