@@ -1,0 +1,239 @@
+//! Experiment E15 — checkpoint/restore: heal-from-snapshot vs tick-0
+//! replay (DESIGN.md §9).
+//!
+//! A supervised Conway workload on the 576-chip (12-board) virtual
+//! machine loses a chip near the end of its run. With
+//! [`ToolsConfig::checkpoint`] set, the supervisor restores the newest
+//! run snapshot and replays only the short tail after it; without it,
+//! the heal restarts the whole history from tick 0. This bench measures
+//! the *recovery cost* — faulted-run wall time minus the matching
+//! clean-run wall time — in three configurations:
+//!
+//! 1. checkpointed, short run (`T1` ticks, fault near the end);
+//! 2. checkpointed, 4x run (`T2 = 4*T1` ticks, same-length tail) —
+//!    recovery must stay flat, i.e. independent of elapsed ticks;
+//! 3. un-checkpointed, 4x run — the tick-0 replay the snapshot path is
+//!    measured against, target ≥ 2x slower than (2).
+//!
+//! Correctness ride-along: the checkpointed and un-checkpointed healed
+//! runs must produce byte-identical recordings (FNV digests) — restore
+//! plus tail-replay is equivalent to full replay. Results land in
+//! `BENCH_checkpoint.json` at the repository root.
+//!
+//! ```sh
+//! cargo bench --bench checkpoint
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{
+    CheckpointConfig, HealPolicy, MachineSpec, SpiNNTools, SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::simulator::{ChaosPlan, Fault};
+use spinntools::util::fnv1a_64;
+use spinntools::util::json::Json;
+
+const ROWS: u32 = 88;
+const COLS: u32 = 88;
+const BOARDS: u32 = 12;
+
+/// Short run length; the long run is `4 * T1`. Both faults strike
+/// `TAIL` ticks before the end so the snapshot path replays the same
+/// tail at either length.
+const T1: u64 = 8;
+const T2: u64 = 4 * T1;
+const TAIL: u64 = 2;
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+/// The E9/E13/E14 Conway workload, built through the tools API.
+fn build_grid(tools: &mut SpiNNTools) -> Vec<VertexId> {
+    let alive = |r: u32, c: u32| (r + c) % 3 == 0;
+    let mut ids = Vec::new();
+    let mut map = BTreeMap::new();
+    for r in 0..ROWS {
+        for c in 0..COLS {
+            let id = tools
+                .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                .unwrap();
+            map.insert((r, c), id);
+            ids.push(id);
+        }
+    }
+    for (&(r, c), &id) in &map {
+        for dr in -1..=1i64 {
+            for dc in -1..=1i64 {
+                if (dr, dc) == (0, 0) {
+                    continue;
+                }
+                let (nr, nc) = (r as i64 + dr, c as i64 + dc);
+                if nr >= 0 && nc >= 0 && (nr as u32) < ROWS && (nc as u32) < COLS {
+                    tools
+                        .add_machine_edge(id, map[&(nr as u32, nc as u32)], STATE_PARTITION)
+                        .unwrap();
+                }
+            }
+        }
+    }
+    ids
+}
+
+fn config(checkpointed: bool) -> ToolsConfig {
+    let base = ToolsConfig::new(MachineSpec::Boards(BOARDS)).with_supervision(SupervisorConfig {
+        poll_interval_ticks: TAIL,
+        policy: HealPolicy::Remap,
+        max_heals: 4,
+    });
+    if checkpointed {
+        base.with_checkpoint(CheckpointConfig { interval_ticks: TAIL, keep: 2 })
+    } else {
+        base
+    }
+}
+
+/// One timed run: build, optionally schedule a chip death, run `ticks`.
+/// Returns (wall ms, recording digest, restored_from_tick of the first
+/// heal if any heal happened).
+fn timed_run(
+    checkpointed: bool,
+    fault: Option<(u64, spinntools::machine::ChipCoord)>,
+    ticks: u64,
+) -> (f64, u64, Option<Option<u64>>) {
+    let mut tools = SpiNNTools::new(config(checkpointed)).unwrap();
+    let ids = build_grid(&mut tools);
+    if let Some((at, chip)) = fault {
+        tools.inject_chaos(ChaosPlan::new().with(at, Fault::ChipDeath(chip)));
+    }
+    let t = Instant::now();
+    tools.run_ticks(ticks).unwrap();
+    let elapsed = ms(t);
+    let mut digest = 0u64;
+    for (i, id) in ids.iter().enumerate() {
+        digest ^= fnv1a_64(tools.recording(*id)).rotate_left((i % 61) as u32);
+    }
+    let restored = tools
+        .heal_reports()
+        .first()
+        .map(|r| r.restored_from_tick);
+    if fault.is_some() {
+        assert_eq!(tools.heal_reports().len(), 1, "exactly one heal expected");
+    } else {
+        assert!(tools.heal_reports().is_empty(), "clean run must not heal");
+    }
+    (elapsed, digest, restored)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "# E15: heal-from-snapshot vs tick-0 replay on a {}-chip ({BOARDS}-board) machine",
+        MachineSpec::Boards(BOARDS).template().n_chips()
+    );
+    let machine = MachineSpec::Boards(BOARDS).template();
+    assert_eq!(machine.n_chips(), 576);
+
+    // Probe run: find a non-Ethernet chip the workload occupies (the
+    // mapping is deterministic, so the victim is stable across runs).
+    let mut probe = SpiNNTools::new(ToolsConfig::new(MachineSpec::Boards(BOARDS))).unwrap();
+    let pids = build_grid(&mut probe);
+    probe.run_ticks(1).unwrap();
+    let victim = pids
+        .iter()
+        .map(|v| probe.mapping().unwrap().placement(*v).unwrap().chip())
+        .find(|c| !machine.chip(*c).unwrap().is_ethernet())
+        .expect("workload spans more than the Ethernet chips");
+    drop(probe);
+    println!(
+        "workload: {ROWS}x{COLS} Conway ({} vertices); victim chip {victim:?}",
+        ROWS * COLS
+    );
+
+    // Clean baselines, one per configuration, so the faulted runs can
+    // be reduced to pure recovery cost (the checkpointed baselines also
+    // absorb the steady-state capture overhead).
+    let (clean_short_ckpt, _, _) = timed_run(true, None, T1);
+    println!("clean {T1}-tick run, checkpointed:    {clean_short_ckpt:.1} ms");
+    let (clean_long_ckpt, _, _) = timed_run(true, None, T2);
+    println!("clean {T2}-tick run, checkpointed:   {clean_long_ckpt:.1} ms");
+    let (clean_long_plain, _, _) = timed_run(false, None, T2);
+    println!("clean {T2}-tick run, no checkpoint:  {clean_long_plain:.1} ms");
+
+    // Faulted runs: the chip dies TAIL ticks before the end.
+    let (faulted_short_ckpt, _, restored_short) = timed_run(true, Some((T1 - TAIL, victim)), T1);
+    println!("faulted {T1}-tick run, checkpointed:  {faulted_short_ckpt:.1} ms");
+    let (faulted_long_ckpt, digest_ckpt, restored_long) =
+        timed_run(true, Some((T2 - TAIL, victim)), T2);
+    println!("faulted {T2}-tick run, checkpointed: {faulted_long_ckpt:.1} ms");
+    let (faulted_long_plain, digest_plain, restored_plain) =
+        timed_run(false, Some((T2 - TAIL, victim)), T2);
+    println!("faulted {T2}-tick run, no checkpoint: {faulted_long_plain:.1} ms");
+
+    // The snapshot path restored from the tick the fault struck at
+    // (captured on the clean poll just before), at either run length;
+    // the plain path replayed from tick 0.
+    assert_eq!(restored_short, Some(Some(T1 - TAIL)), "short heal missed its snapshot");
+    assert_eq!(restored_long, Some(Some(T2 - TAIL)), "long heal missed its snapshot");
+    assert_eq!(restored_plain, Some(None), "un-checkpointed heal cannot restore");
+
+    // Correctness: restore + tail-replay must be byte-identical to the
+    // full tick-0 replay of the same faulted run.
+    assert_eq!(
+        digest_ckpt, digest_plain,
+        "checkpointed heal diverged from the tick-0-replay heal"
+    );
+    println!("recordings: checkpointed heal EQUAL to tick-0-replay heal");
+
+    let recovery_short = (faulted_short_ckpt - clean_short_ckpt).max(1e-6);
+    let recovery_long = (faulted_long_ckpt - clean_long_ckpt).max(1e-6);
+    let recovery_tick0 = (faulted_long_plain - clean_long_plain).max(1e-6);
+    let independence_ratio = recovery_long / recovery_short;
+    let speedup = recovery_tick0 / recovery_long;
+    let independent = independence_ratio < 2.0;
+    let target_met = speedup >= 2.0;
+    println!(
+        "recovery cost: {recovery_short:.1} ms at {T1} ticks, {recovery_long:.1} ms at {T2} \
+         ticks (ratio {independence_ratio:.2} — {})",
+        if independent { "independent of elapsed ticks" } else { "NOT flat" }
+    );
+    println!(
+        "tick-0 replay recovery: {recovery_tick0:.1} ms; snapshot speedup {speedup:.2}x \
+         (target >= 2x at {T2} ticks: {})",
+        if target_met { "MET" } else { "MISSED" }
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("E15_checkpoint_restore".to_string()));
+    root.insert("machine_chips".to_string(), Json::Num(machine.n_chips() as f64));
+    root.insert("vertices".to_string(), Json::Num((ROWS * COLS) as f64));
+    root.insert("short_run_ticks".to_string(), Json::Num(T1 as f64));
+    root.insert("long_run_ticks".to_string(), Json::Num(T2 as f64));
+    root.insert("replay_tail_ticks".to_string(), Json::Num(TAIL as f64));
+    root.insert("checkpoint_interval_ticks".to_string(), Json::Num(TAIL as f64));
+    root.insert("clean_short_ckpt_ms".to_string(), Json::Num(clean_short_ckpt));
+    root.insert("clean_long_ckpt_ms".to_string(), Json::Num(clean_long_ckpt));
+    root.insert("clean_long_plain_ms".to_string(), Json::Num(clean_long_plain));
+    root.insert("faulted_short_ckpt_ms".to_string(), Json::Num(faulted_short_ckpt));
+    root.insert("faulted_long_ckpt_ms".to_string(), Json::Num(faulted_long_ckpt));
+    root.insert("faulted_long_plain_ms".to_string(), Json::Num(faulted_long_plain));
+    root.insert("recovery_short_ms".to_string(), Json::Num(recovery_short));
+    root.insert("recovery_long_ms".to_string(), Json::Num(recovery_long));
+    root.insert("recovery_tick0_ms".to_string(), Json::Num(recovery_tick0));
+    root.insert("independence_ratio".to_string(), Json::Num(independence_ratio));
+    root.insert("independent_of_elapsed_ticks".to_string(), Json::Bool(independent));
+    root.insert("speedup_vs_tick0".to_string(), Json::Num(speedup));
+    root.insert("target_speedup".to_string(), Json::Num(2.0));
+    root.insert("target_met".to_string(), Json::Bool(target_met));
+    root.insert("digests_equal".to_string(), Json::Bool(true));
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_checkpoint.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
+    Ok(())
+}

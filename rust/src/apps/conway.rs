@@ -158,6 +158,22 @@ impl CoreApp for ConwayCellApp {
     fn on_resume(&mut self, _ctx: &mut CoreCtx) -> anyhow::Result<()> {
         Ok(())
     }
+
+    fn snapshot_state(&self) -> Option<Vec<u8>> {
+        // `key`/`n_neighbours` are static config re-read by `on_start`;
+        // the evolving state is the cell itself plus the mid-phase fold.
+        let mut w = ByteWriter::new();
+        w.u32(self.alive as u32).u32(self.alive_neighbours).u32(self.received);
+        Some(w.finish())
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        self.alive = r.u32()? != 0;
+        self.alive_neighbours = r.u32()?;
+        self.received = r.u32()?;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -259,6 +275,22 @@ impl CoreApp for ConwayTileApp {
         let bytes: Vec<u8> = self.board.iter().map(|c| *c as u8).collect();
         ctx.record(STATE_CHANNEL, &bytes);
         ctx.count("tile_steps", 1);
+        Ok(())
+    }
+
+    fn snapshot_state(&self) -> Option<Vec<u8>> {
+        // `side` (and the runtime handle) come back via `on_start`; the
+        // board is the only evolving state. Cells are 0/1, one byte each.
+        let mut w = ByteWriter::new();
+        w.u32(self.board.len() as u32);
+        w.bytes(&self.board.iter().map(|c| *c as u8).collect::<Vec<u8>>());
+        Some(w.finish())
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let n = r.u32()? as usize;
+        self.board = r.bytes(n)?.iter().map(|b| *b as i32).collect();
         Ok(())
     }
 }

@@ -476,6 +476,23 @@ impl CoreApp for LifPopulationApp {
         }
         Ok(())
     }
+
+    fn snapshot_state(&self) -> Option<Vec<u8>> {
+        // Config, params and synaptic matrices are rebuilt from the
+        // regions by `on_start`; the packed f32[6*pad] buffer is the
+        // evolving state.
+        let mut w = ByteWriter::new();
+        w.u32(self.state.len() as u32);
+        w.f32s(&self.state);
+        Some(w.finish())
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let n = r.u32()? as usize;
+        self.state = r.f32s(n)?;
+        Ok(())
+    }
 }
 
 /// Decode a recorded spike bitmap back into (tick, atom) pairs; ticks

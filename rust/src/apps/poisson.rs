@@ -209,6 +209,20 @@ impl CoreApp for PoissonSourceApp {
         }
         Ok(())
     }
+
+    fn snapshot_state(&self) -> Option<Vec<u8>> {
+        // Config is re-read by `on_start`; the only evolving state is
+        // the RNG position in its stream.
+        let mut w = ByteWriter::new();
+        w.u64(self.rng.state());
+        Some(w.finish())
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        self.rng = SplitMix64::new(r.u64()?);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

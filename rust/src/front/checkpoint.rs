@@ -1,0 +1,624 @@
+//! Checkpoint/restore run persistence (DESIGN.md §9, experiment E15).
+//!
+//! A [`RunSnapshot`] is a serializable capture of everything a run has
+//! *computed* so far: per-core evolving app state, recording buffers
+//! and cursors, provenance counters and IOBUF text, the host-side
+//! recording store, the mapping pipeline's placements and key
+//! allocations, and the not-yet-fired tail of any injected chaos plan.
+//! SDRAM region bytes are stored once in a digest-keyed blob store —
+//! successive snapshots of an interval only add blobs for regions whose
+//! bytes actually changed, so a checkpoint cadence costs O(delta), not
+//! O(machine).
+//!
+//! Snapshots are written by the run driver on a
+//! [`CheckpointConfig::interval_ticks`] cadence and consumed in three
+//! places:
+//!
+//! - `heal()` restores from the newest snapshot instead of replaying
+//!   the whole tick history from tick 0 after a mid-run fault;
+//! - `reconcile()` restores the surviving vertices after a graph
+//!   mutation, preserving their pre-mutation recordings;
+//! - `suspend()` / `resume_from()` carry a run across process restarts.
+//!
+//! Storage is pluggable through the [`Checkpointer`] trait; the crate
+//! ships an in-memory store (tests, single-process runs) and a
+//! file-backed store (restart survival).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::graph::{KeyRange, VertexId};
+use crate::machine::{CoreLocation, ALL_DIRECTIONS};
+use crate::simulator::scamp::CoreSnapshot;
+use crate::simulator::{ChaosEvent, Fault};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// When and how densely the run driver writes snapshots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// Ticks between snapshot captures. Snapshots land on supervisor
+    /// poll boundaries (or run-cycle edges when unsupervised), so the
+    /// effective cadence is the next boundary at or after this many
+    /// ticks since the previous capture.
+    pub interval_ticks: u64,
+    /// How many snapshots to retain; older ones are pruned after each
+    /// capture. Region blobs are content-addressed and shared between
+    /// snapshots, so retention is cheap.
+    pub keep: usize,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        Self { interval_ticks: 1, keep: 2 }
+    }
+}
+
+/// A complete, serializable capture of a run at one tick boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSnapshot {
+    /// The tick this snapshot was taken at (all cores had completed
+    /// exactly this many ticks).
+    pub tick: u64,
+    /// The Figure-9 cycle unit the run was planned with — a resumed run
+    /// keeps honouring it (§6.5).
+    pub steps_per_cycle: u64,
+    /// `(machine graph, application graph)` revisions at capture time:
+    /// a resume against mutated graphs must reconcile, not blindly
+    /// continue.
+    pub revisions: (u64, u64),
+    /// Per-vertex core capture (app state, recording buffers + cursors,
+    /// provenance, IOBUF, tick counter). Keyed by vertex — not core —
+    /// so a restore after a heal can land the same state on a *moved*
+    /// vertex's new core.
+    pub cores: BTreeMap<VertexId, CoreSnapshot>,
+    /// Per-vertex, per-region `(length, FNV-1a digest)` of the SDRAM
+    /// bytes at capture time. The bytes themselves live in the
+    /// [`Checkpointer`] blob store under the digest.
+    pub regions: BTreeMap<VertexId, BTreeMap<u32, (u32, u64)>>,
+    /// The host-side store of already-extracted recordings,
+    /// `(vertex, channel) -> bytes`.
+    pub host_recordings: BTreeMap<(VertexId, u32), Vec<u8>>,
+    /// Chaos events that had not yet fired at capture time. Restored on
+    /// `resume_from` (a suspended plan keeps its future); *not*
+    /// restored by a heal (the live plan has already drained the event
+    /// that caused the fault).
+    pub pending_chaos: Vec<ChaosEvent>,
+    /// The placements at capture time, used to re-seed the mapping
+    /// pipeline on `resume_from` so every vertex stays pinned.
+    pub placements: Vec<(VertexId, CoreLocation)>,
+    /// The key allocations at capture time (same role as
+    /// `placements`: surviving partitions keep their exact ranges).
+    pub keys: BTreeMap<(VertexId, String), KeyRange>,
+    /// The key allocator's high-water mark, so resumed allocations
+    /// never collide with suspended ones.
+    pub key_cursor: u64,
+}
+
+const MAGIC: &[u8; 4] = b"SNAP";
+const VERSION: u32 = 1;
+
+fn write_blob(w: &mut ByteWriter, data: &[u8]) {
+    w.u32(data.len() as u32);
+    w.bytes(data);
+}
+
+fn read_blob(r: &mut ByteReader) -> anyhow::Result<Vec<u8>> {
+    let n = r.u32()? as usize;
+    Ok(r.bytes(n)?.to_vec())
+}
+
+fn write_str(w: &mut ByteWriter, s: &str) {
+    write_blob(w, s.as_bytes());
+}
+
+fn read_str(r: &mut ByteReader) -> anyhow::Result<String> {
+    Ok(String::from_utf8(read_blob(r)?)?)
+}
+
+fn write_fault(w: &mut ByteWriter, fault: &Fault) {
+    match fault {
+        Fault::CoreRte(loc) => {
+            w.u8(0).u32(loc.x).u32(loc.y).u8(loc.p);
+        }
+        Fault::CoreStall(loc) => {
+            w.u8(1).u32(loc.x).u32(loc.y).u8(loc.p);
+        }
+        Fault::ChipDeath(c) => {
+            w.u8(2).u32(c.0).u32(c.1);
+        }
+        Fault::LinkDeath(c, d) => {
+            w.u8(3).u32(c.0).u32(c.1).u8(d.id());
+        }
+    }
+}
+
+fn read_fault(r: &mut ByteReader) -> anyhow::Result<Fault> {
+    Ok(match r.u8()? {
+        0 => Fault::CoreRte(CoreLocation::new(r.u32()?, r.u32()?, r.u8()?)),
+        1 => Fault::CoreStall(CoreLocation::new(r.u32()?, r.u32()?, r.u8()?)),
+        2 => Fault::ChipDeath((r.u32()?, r.u32()?)),
+        3 => {
+            let c = (r.u32()?, r.u32()?);
+            let id = r.u8()?;
+            let d = ALL_DIRECTIONS
+                .into_iter()
+                .find(|d| d.id() == id)
+                .ok_or_else(|| anyhow::anyhow!("bad direction id {id} in snapshot"))?;
+            Fault::LinkDeath(c, d)
+        }
+        t => anyhow::bail!("bad fault tag {t} in snapshot"),
+    })
+}
+
+impl RunSnapshot {
+    /// Serialize to the little-endian snapshot format (magic `SNAP`,
+    /// version 1). The format is self-contained except for region
+    /// bytes, which live in the blob store under the digests recorded
+    /// in [`Self::regions`].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC).u32(VERSION);
+        w.u64(self.tick)
+            .u64(self.steps_per_cycle)
+            .u64(self.revisions.0)
+            .u64(self.revisions.1)
+            .u64(self.key_cursor);
+
+        w.u32(self.cores.len() as u32);
+        for (vid, core) in &self.cores {
+            w.u32(vid.0);
+            match &core.app_state {
+                Some(state) => {
+                    w.u8(1);
+                    write_blob(&mut w, state);
+                }
+                None => {
+                    w.u8(0);
+                }
+            }
+            w.u32(core.recordings.len() as u32);
+            for (ch, (data, lost)) in &core.recordings {
+                w.u32(*ch);
+                write_blob(&mut w, data);
+                w.u64(*lost);
+            }
+            w.u32(core.provenance.len() as u32);
+            for (k, v) in &core.provenance {
+                write_str(&mut w, k);
+                w.u64(*v);
+            }
+            write_str(&mut w, &core.iobuf);
+            w.u64(core.ticks_done);
+        }
+
+        w.u32(self.regions.len() as u32);
+        for (vid, regions) in &self.regions {
+            w.u32(vid.0).u32(regions.len() as u32);
+            for (id, (len, digest)) in regions {
+                w.u32(*id).u32(*len).u64(*digest);
+            }
+        }
+
+        w.u32(self.host_recordings.len() as u32);
+        for ((vid, ch), data) in &self.host_recordings {
+            w.u32(vid.0).u32(*ch);
+            write_blob(&mut w, data);
+        }
+
+        w.u32(self.pending_chaos.len() as u32);
+        for ev in &self.pending_chaos {
+            w.u64(ev.at_tick);
+            write_fault(&mut w, &ev.fault);
+        }
+
+        w.u32(self.placements.len() as u32);
+        for (vid, loc) in &self.placements {
+            w.u32(vid.0).u32(loc.x).u32(loc.y).u8(loc.p);
+        }
+
+        w.u32(self.keys.len() as u32);
+        for ((vid, partition), range) in &self.keys {
+            w.u32(vid.0);
+            write_str(&mut w, partition);
+            w.u32(range.base).u32(range.mask);
+        }
+        w.finish()
+    }
+
+    /// Decode [`Self::to_bytes`]' output.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        anyhow::ensure!(r.bytes(4)? == MAGIC, "not a run snapshot (bad magic)");
+        let version = r.u32()?;
+        anyhow::ensure!(version == VERSION, "unsupported snapshot version {version}");
+        let tick = r.u64()?;
+        let steps_per_cycle = r.u64()?;
+        let revisions = (r.u64()?, r.u64()?);
+        let key_cursor = r.u64()?;
+
+        let mut cores = BTreeMap::new();
+        for _ in 0..r.u32()? {
+            let vid = VertexId(r.u32()?);
+            let app_state = match r.u8()? {
+                0 => None,
+                _ => Some(read_blob(&mut r)?),
+            };
+            let mut recordings = BTreeMap::new();
+            for _ in 0..r.u32()? {
+                let ch = r.u32()?;
+                let data = read_blob(&mut r)?;
+                let lost = r.u64()?;
+                recordings.insert(ch, (data, lost));
+            }
+            let mut provenance = BTreeMap::new();
+            for _ in 0..r.u32()? {
+                let k = read_str(&mut r)?;
+                let v = r.u64()?;
+                provenance.insert(k, v);
+            }
+            let iobuf = read_str(&mut r)?;
+            let ticks_done = r.u64()?;
+            cores.insert(
+                vid,
+                CoreSnapshot { app_state, recordings, provenance, iobuf, ticks_done },
+            );
+        }
+
+        let mut regions = BTreeMap::new();
+        for _ in 0..r.u32()? {
+            let vid = VertexId(r.u32()?);
+            let mut per_vertex = BTreeMap::new();
+            for _ in 0..r.u32()? {
+                let id = r.u32()?;
+                let len = r.u32()?;
+                let digest = r.u64()?;
+                per_vertex.insert(id, (len, digest));
+            }
+            regions.insert(vid, per_vertex);
+        }
+
+        let mut host_recordings = BTreeMap::new();
+        for _ in 0..r.u32()? {
+            let vid = VertexId(r.u32()?);
+            let ch = r.u32()?;
+            host_recordings.insert((vid, ch), read_blob(&mut r)?);
+        }
+
+        let mut pending_chaos = Vec::new();
+        for _ in 0..r.u32()? {
+            let at_tick = r.u64()?;
+            let fault = read_fault(&mut r)?;
+            pending_chaos.push(ChaosEvent { at_tick, fault });
+        }
+
+        let mut placements = Vec::new();
+        for _ in 0..r.u32()? {
+            let vid = VertexId(r.u32()?);
+            let loc = CoreLocation::new(r.u32()?, r.u32()?, r.u8()?);
+            placements.push((vid, loc));
+        }
+
+        let mut keys = BTreeMap::new();
+        for _ in 0..r.u32()? {
+            let vid = VertexId(r.u32()?);
+            let partition = read_str(&mut r)?;
+            let base = r.u32()?;
+            let mask = r.u32()?;
+            keys.insert((vid, partition), KeyRange { base, mask });
+        }
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after snapshot");
+        Ok(Self {
+            tick,
+            steps_per_cycle,
+            revisions,
+            cores,
+            regions,
+            host_recordings,
+            pending_chaos,
+            placements,
+            keys,
+            key_cursor,
+        })
+    }
+}
+
+/// Pluggable snapshot storage. Two stores in one: a content-addressed
+/// blob store for SDRAM region bytes (shared between snapshots — a
+/// region that has not changed since the last capture is never stored
+/// twice) and a per-tick snapshot store for the serialized
+/// [`RunSnapshot`]s.
+///
+/// Blobs are deliberately not garbage-collected when snapshots are
+/// pruned: the digest space is shared, collection would need reference
+/// counting across every retained snapshot, and the store is bounded by
+/// the working set of distinct region contents anyway.
+pub trait Checkpointer {
+    /// Store region bytes under their digest (idempotent).
+    fn put_blob(&mut self, digest: u64, bytes: &[u8]) -> anyhow::Result<()>;
+    fn has_blob(&self, digest: u64) -> bool;
+    fn get_blob(&self, digest: u64) -> anyhow::Result<Vec<u8>>;
+    /// Store a snapshot under its tick (replacing any previous capture
+    /// at the same tick).
+    fn put_snapshot(&mut self, snapshot: &RunSnapshot) -> anyhow::Result<()>;
+    fn get_snapshot(&self, tick: u64) -> anyhow::Result<RunSnapshot>;
+    fn remove_snapshot(&mut self, tick: u64) -> anyhow::Result<()>;
+    /// Ticks of every stored snapshot, ascending.
+    fn snapshot_ticks(&self) -> Vec<u64>;
+
+    /// The newest stored snapshot at or before `tick`, if any.
+    fn newest_at_or_before(&self, tick: u64) -> Option<u64> {
+        self.snapshot_ticks().into_iter().filter(|t| *t <= tick).max()
+    }
+
+    /// Drop all but the newest `keep` snapshots.
+    fn prune(&mut self, keep: usize) -> anyhow::Result<()> {
+        let ticks = self.snapshot_ticks();
+        if ticks.len() > keep {
+            for t in &ticks[..ticks.len() - keep] {
+                self.remove_snapshot(*t)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// In-memory snapshot storage: the default store the run driver creates
+/// when checkpointing is enabled without an explicit store. Snapshots
+/// are held *serialized*, so the codec is exercised on every capture
+/// and restore, not only by the file-backed store.
+#[derive(Debug, Default)]
+pub struct MemoryCheckpointer {
+    blobs: BTreeMap<u64, Vec<u8>>,
+    snapshots: BTreeMap<u64, Vec<u8>>,
+}
+
+impl MemoryCheckpointer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Checkpointer for MemoryCheckpointer {
+    fn put_blob(&mut self, digest: u64, bytes: &[u8]) -> anyhow::Result<()> {
+        self.blobs.entry(digest).or_insert_with(|| bytes.to_vec());
+        Ok(())
+    }
+
+    fn has_blob(&self, digest: u64) -> bool {
+        self.blobs.contains_key(&digest)
+    }
+
+    fn get_blob(&self, digest: u64) -> anyhow::Result<Vec<u8>> {
+        self.blobs
+            .get(&digest)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("blob {digest:#018x} not in checkpoint store"))
+    }
+
+    fn put_snapshot(&mut self, snapshot: &RunSnapshot) -> anyhow::Result<()> {
+        self.snapshots.insert(snapshot.tick, snapshot.to_bytes());
+        Ok(())
+    }
+
+    fn get_snapshot(&self, tick: u64) -> anyhow::Result<RunSnapshot> {
+        let bytes = self
+            .snapshots
+            .get(&tick)
+            .ok_or_else(|| anyhow::anyhow!("no snapshot at tick {tick}"))?;
+        RunSnapshot::from_bytes(bytes)
+    }
+
+    fn remove_snapshot(&mut self, tick: u64) -> anyhow::Result<()> {
+        self.snapshots.remove(&tick);
+        Ok(())
+    }
+
+    fn snapshot_ticks(&self) -> Vec<u64> {
+        self.snapshots.keys().copied().collect()
+    }
+}
+
+/// File-backed snapshot storage: snapshots survive the process.
+/// `dir/snap-<tick>.snap` holds each serialized snapshot;
+/// `dir/blobs/<digest>.blob` holds each region blob.
+#[derive(Debug)]
+pub struct FileCheckpointer {
+    dir: PathBuf,
+}
+
+impl FileCheckpointer {
+    pub fn new(dir: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(dir.join("blobs"))?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn blob_path(&self, digest: u64) -> PathBuf {
+        self.dir.join("blobs").join(format!("{digest:016x}.blob"))
+    }
+
+    fn snapshot_path(&self, tick: u64) -> PathBuf {
+        self.dir.join(format!("snap-{tick:020}.snap"))
+    }
+}
+
+impl Checkpointer for FileCheckpointer {
+    fn put_blob(&mut self, digest: u64, bytes: &[u8]) -> anyhow::Result<()> {
+        let path = self.blob_path(digest);
+        if !path.exists() {
+            std::fs::write(path, bytes)?;
+        }
+        Ok(())
+    }
+
+    fn has_blob(&self, digest: u64) -> bool {
+        self.blob_path(digest).exists()
+    }
+
+    fn get_blob(&self, digest: u64) -> anyhow::Result<Vec<u8>> {
+        std::fs::read(self.blob_path(digest))
+            .map_err(|e| anyhow::anyhow!("blob {digest:#018x} not in checkpoint store: {e}"))
+    }
+
+    fn put_snapshot(&mut self, snapshot: &RunSnapshot) -> anyhow::Result<()> {
+        std::fs::write(self.snapshot_path(snapshot.tick), snapshot.to_bytes())?;
+        Ok(())
+    }
+
+    fn get_snapshot(&self, tick: u64) -> anyhow::Result<RunSnapshot> {
+        let bytes = std::fs::read(self.snapshot_path(tick))
+            .map_err(|e| anyhow::anyhow!("no snapshot at tick {tick}: {e}"))?;
+        RunSnapshot::from_bytes(&bytes)
+    }
+
+    fn remove_snapshot(&mut self, tick: u64) -> anyhow::Result<()> {
+        let path = self.snapshot_path(tick);
+        if path.exists() {
+            std::fs::remove_file(path)?;
+        }
+        Ok(())
+    }
+
+    fn snapshot_ticks(&self) -> Vec<u64> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut ticks: Vec<u64> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let tick = name.strip_prefix("snap-")?.strip_suffix(".snap")?;
+                tick.parse().ok()
+            })
+            .collect();
+        ticks.sort_unstable();
+        ticks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::Direction;
+
+    fn sample_snapshot(tick: u64) -> RunSnapshot {
+        let mut cores = BTreeMap::new();
+        cores.insert(
+            VertexId(3),
+            CoreSnapshot {
+                app_state: Some(vec![1, 2, 3]),
+                recordings: BTreeMap::from([(0, (vec![9, 8], 4u64))]),
+                provenance: BTreeMap::from([("spikes_out".to_string(), 17u64)]),
+                iobuf: "hello\n".to_string(),
+                ticks_done: tick,
+            },
+        );
+        cores.insert(
+            VertexId(4),
+            CoreSnapshot {
+                app_state: None,
+                recordings: BTreeMap::new(),
+                provenance: BTreeMap::new(),
+                iobuf: String::new(),
+                ticks_done: tick,
+            },
+        );
+        RunSnapshot {
+            tick,
+            steps_per_cycle: 8,
+            revisions: (5, 0),
+            cores,
+            regions: BTreeMap::from([(
+                VertexId(3),
+                BTreeMap::from([(0u32, (12u32, 0xfeed_beefu64))]),
+            )]),
+            host_recordings: BTreeMap::from([((VertexId(3), 0u32), vec![5, 6, 7])]),
+            pending_chaos: vec![
+                ChaosEvent { at_tick: tick + 2, fault: Fault::ChipDeath((1, 0)) },
+                ChaosEvent {
+                    at_tick: tick + 3,
+                    fault: Fault::LinkDeath((0, 0), Direction::NorthEast),
+                },
+                ChaosEvent {
+                    at_tick: tick + 4,
+                    fault: Fault::CoreRte(CoreLocation::new(1, 1, 5)),
+                },
+            ],
+            placements: vec![
+                (VertexId(3), CoreLocation::new(0, 0, 1)),
+                (VertexId(4), CoreLocation::new(1, 0, 2)),
+            ],
+            keys: BTreeMap::from([(
+                (VertexId(3), "spikes".to_string()),
+                KeyRange { base: 0x100, mask: 0xffff_ff00 },
+            )]),
+            key_cursor: 0x200,
+        }
+    }
+
+    #[test]
+    fn codec_round_trips() {
+        let snap = sample_snapshot(7);
+        let decoded = RunSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(decoded, snap);
+    }
+
+    #[test]
+    fn codec_rejects_garbage() {
+        assert!(RunSnapshot::from_bytes(b"not a snapshot").is_err());
+        let mut bytes = sample_snapshot(1).to_bytes();
+        bytes.push(0); // trailing byte
+        assert!(RunSnapshot::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn memory_store_round_trips_and_prunes() {
+        let mut store = MemoryCheckpointer::new();
+        for tick in [2u64, 4, 6, 8] {
+            store.put_snapshot(&sample_snapshot(tick)).unwrap();
+        }
+        store.put_blob(0xabc, &[1, 2, 3]).unwrap();
+        assert!(store.has_blob(0xabc));
+        assert_eq!(store.get_blob(0xabc).unwrap(), vec![1, 2, 3]);
+        assert!(store.get_blob(0xdef).is_err());
+        assert_eq!(store.newest_at_or_before(7), Some(6));
+        assert_eq!(store.newest_at_or_before(1), None);
+        store.prune(2).unwrap();
+        assert_eq!(store.snapshot_ticks(), vec![6, 8]);
+        assert_eq!(store.get_snapshot(8).unwrap(), sample_snapshot(8));
+        assert!(store.get_snapshot(2).is_err());
+        // Pruning never drops blobs (content-addressed, shared).
+        assert!(store.has_blob(0xabc));
+    }
+
+    #[test]
+    fn file_store_round_trips_and_prunes() {
+        let dir = std::env::temp_dir().join(format!(
+            "spinntools-ckpt-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = FileCheckpointer::new(&dir).unwrap();
+        for tick in [3u64, 5, 9] {
+            store.put_snapshot(&sample_snapshot(tick)).unwrap();
+        }
+        store.put_blob(0x77, &[4, 5]).unwrap();
+        assert!(store.has_blob(0x77));
+        assert_eq!(store.get_blob(0x77).unwrap(), vec![4, 5]);
+        assert_eq!(store.snapshot_ticks(), vec![3, 5, 9]);
+        assert_eq!(store.newest_at_or_before(8), Some(5));
+        store.prune(1).unwrap();
+        assert_eq!(store.snapshot_ticks(), vec![9]);
+        assert_eq!(store.get_snapshot(9).unwrap(), sample_snapshot(9));
+        // A second handle on the same directory sees the same state —
+        // the restart-survival property.
+        let reopened = FileCheckpointer::new(&dir).unwrap();
+        assert_eq!(reopened.snapshot_ticks(), vec![9]);
+        assert_eq!(reopened.get_snapshot(9).unwrap(), sample_snapshot(9));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -158,6 +158,12 @@ pub struct ToolsConfig {
     pub supervision: Option<SupervisorConfig>,
     /// Resources blacklisted at machine discovery (§2).
     pub boot_faults: BootFaults,
+    /// Periodic run snapshots (DESIGN.md §9, E15). `None` (the default)
+    /// keeps the historical behaviour: heals and reconciles replay the
+    /// whole tick history from tick 0. With a cadence set, they restore
+    /// from the newest snapshot and replay only the tail, and
+    /// `suspend`/`resume_from` can carry a run across process restarts.
+    pub checkpoint: Option<crate::front::checkpoint::CheckpointConfig>,
 }
 
 impl ToolsConfig {
@@ -175,6 +181,7 @@ impl ToolsConfig {
             recording_slack_bytes: 1024 * 1024,
             supervision: None,
             boot_faults: BootFaults::default(),
+            checkpoint: None,
         }
     }
 
@@ -256,6 +263,15 @@ impl ToolsConfig {
         self.boot_faults = faults;
         self
     }
+
+    /// Enable periodic run snapshots (DESIGN.md §9, E15).
+    pub fn with_checkpoint(
+        mut self,
+        checkpoint: crate::front::checkpoint::CheckpointConfig,
+    ) -> Self {
+        self.checkpoint = Some(checkpoint);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -304,6 +320,17 @@ mod tests {
         assert!(plain.boot_faults.is_empty());
         assert!(plain.supervision.is_none());
         assert_eq!(plain.machine_template().n_chips(), 4);
+    }
+
+    #[test]
+    fn checkpoint_defaults_off() {
+        use crate::front::CheckpointConfig;
+        let c = ToolsConfig::new(MachineSpec::Spinn3);
+        assert!(c.checkpoint.is_none());
+        let c = c.with_checkpoint(CheckpointConfig { interval_ticks: 4, keep: 3 });
+        assert_eq!(c.checkpoint, Some(CheckpointConfig { interval_ticks: 4, keep: 3 }));
+        let d = CheckpointConfig::default();
+        assert!(d.interval_ticks >= 1 && d.keep >= 1);
     }
 
     #[test]

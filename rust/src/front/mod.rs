@@ -6,6 +6,7 @@
 //! extraction of results and provenance → resume/reset → close.
 
 mod buffer;
+mod checkpoint;
 mod config;
 mod extraction;
 pub mod fabric_probe;
@@ -14,6 +15,9 @@ mod provenance;
 mod tools;
 
 pub use buffer::{plan_run_cycles, RunCyclePlan};
+pub use checkpoint::{
+    CheckpointConfig, Checkpointer, FileCheckpointer, MemoryCheckpointer, RunSnapshot,
+};
 pub use config::{
     BootFaults, ExtractionMethod, HealPolicy, LoadMethod, MachineSpec, SupervisorConfig,
     ToolsConfig,

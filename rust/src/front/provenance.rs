@@ -82,6 +82,11 @@ pub struct HealReport {
     /// heal's re-map (the reason heal-time beats a full re-map).
     pub stages_cached: usize,
     pub stages_rerun: usize,
+    /// The snapshot tick this heal restored from (DESIGN.md §9): the
+    /// restart replayed only `total - restored_from_tick` ticks.
+    /// `None` when checkpointing is off — the restart replayed the
+    /// whole history from tick 0.
+    pub restored_from_tick: Option<u64>,
 }
 
 /// The whole-run provenance report.

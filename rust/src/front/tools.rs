@@ -21,12 +21,13 @@ use crate::graph::{
 };
 use crate::machine::{ChipCoord, CoreLocation, Machine};
 use crate::mapping::database::{MappingDatabase, NotificationProtocol};
-use crate::mapping::{map_graph_incremental, GraphMapping, Mapping, PipelineState};
+use crate::mapping::{map_graph_incremental, GraphMapping, Mapping, PipelineState, Placements};
 use crate::runtime::Runtime;
 use crate::simulator::{scamp, ChaosPlan, CoreState, SimMachine};
 use crate::util::fnv1a_64;
 
 use super::buffer::{plan_run_cycles, RunCyclePlan};
+use super::checkpoint::{CheckpointConfig, Checkpointer, MemoryCheckpointer, RunSnapshot};
 use super::config::{ExtractionMethod, HealPolicy, LoadMethod, SupervisorConfig, ToolsConfig};
 use super::extraction::{DataPlaneOptions, FastPath};
 use super::provenance::{HealReport, ProvenanceReport, RemapReport};
@@ -139,6 +140,13 @@ pub struct SpiNNTools {
     /// Chaos injected before the run state exists; moved into the run
     /// state by the run driver.
     pending_chaos: Option<ChaosPlan>,
+    /// Snapshot storage (DESIGN.md §9). Lazily created (in-memory) by
+    /// the run driver when [`ToolsConfig::checkpoint`] is set and no
+    /// store was installed via [`Self::set_checkpointer`].
+    checkpointer: Option<Box<dyn Checkpointer>>,
+    /// What the most recent reconcile threw away, when it had no
+    /// snapshot to restore from (surfaced as a provenance anomaly).
+    discard_note: Option<String>,
     pub notifications: NotificationProtocol,
 }
 
@@ -162,8 +170,23 @@ impl SpiNNTools {
             mapped_revisions: None,
             remap_note: None,
             pending_chaos: None,
+            checkpointer: None,
+            discard_note: None,
             notifications: NotificationProtocol::default(),
         })
+    }
+
+    /// Install a snapshot store (e.g. a
+    /// [`super::checkpoint::FileCheckpointer`] for restart survival).
+    /// Without one, enabling [`ToolsConfig::checkpoint`] uses an
+    /// in-memory store created at the first run.
+    pub fn set_checkpointer(&mut self, store: Box<dyn Checkpointer>) {
+        self.checkpointer = Some(store);
+    }
+
+    /// The installed snapshot store, if any.
+    pub fn checkpointer(&self) -> Option<&dyn Checkpointer> {
+        self.checkpointer.as_deref()
     }
 
     /// Inject a chaos plan: its faults strike at their ticks during the
@@ -287,8 +310,10 @@ impl SpiNNTools {
     /// resume (§6.5) in the established Figure-9 cycle unit — unless
     /// the graph was mutated in between, in which case the run is
     /// *reconciled*: an incremental re-map (stage cache + pinned
-    /// placements), a delta reload, and a restart from tick 0, with the
-    /// work done recorded in [`Self::remap_report`].
+    /// placements), a delta reload, and a restart — from the newest
+    /// snapshot when [`ToolsConfig::checkpoint`] is set, from tick 0
+    /// otherwise — with the work done recorded in
+    /// [`Self::remap_report`].
     pub fn run_ticks(&mut self, ticks: u64) -> anyhow::Result<()> {
         if self.state.is_none() {
             self.first_run(ticks)
@@ -351,13 +376,28 @@ impl SpiNNTools {
     }
 
     fn first_run(&mut self, ticks: u64) -> anyhow::Result<()> {
+        // A first run is a from-scratch map by definition.
+        self.pipeline.clear();
+        self.prepare_run(ticks)?;
+        let cycles = self
+            .state
+            .as_ref()
+            .map(|s| s.plan.cycles.clone())
+            .unwrap_or_default();
+        self.drive_run(cycles, ticks)
+    }
+
+    /// Everything a first run does *before* driving ticks: discovery,
+    /// mapping, data generation, run-cycle planning, loading, and the
+    /// start signal. Split from [`Self::first_run`] so
+    /// [`Self::resume_from`] can rebuild a loaded machine and then lay
+    /// a snapshot over it instead of running.
+    fn prepare_run(&mut self, ticks: u64) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.machine_graph.n_vertices() == 0 || self.app_graph.n_vertices() == 0,
             "it is an error to add vertices to both the application and \
              machine graphs (§6.2)"
         );
-        // A first run is a from-scratch map by definition.
-        self.pipeline.clear();
 
         // ---- machine discovery (§6.3.1) --------------------------------
         // Boot-faulted resources (§2's blacklist) are excluded here, so
@@ -534,7 +574,13 @@ impl SpiNNTools {
             }
         }
         if !fast_reqs.is_empty() {
-            let fp = fast_path.as_ref().expect("fast_reqs imply an installed plane");
+            let fp = fast_path.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{} fast-load request(s) queued but no data plane is installed \
+                     (loading = FastMulticast without a usable plane)",
+                    fast_reqs.len()
+                )
+            })?;
             let reqs: Vec<(ChipCoord, u32, &[u8])> = fast_reqs
                 .iter()
                 .map(|(chip, addr, data)| (*chip, *addr, data.as_slice()))
@@ -567,10 +613,9 @@ impl SpiNNTools {
             link_loss_seen: 0,
             heal_reports: Vec::new(),
         };
-        let cycles = state.plan.cycles.clone();
         self.state = Some(state);
         self.mapped_revisions = Some(self.graph_revisions());
-        self.drive_run(cycles, ticks)
+        Ok(())
     }
 
     fn resume_run(&mut self, ticks: u64) -> anyhow::Result<()> {
@@ -593,14 +638,16 @@ impl SpiNNTools {
 
     // -- the §6.5 "graph changed" branch ------------------------------------
 
-    /// Re-map and reload after a graph mutation, then restart the run
-    /// from tick 0. Incremental wherever the fingerprints and pins
+    /// Re-map and reload after a graph mutation, then restart the run —
+    /// from the newest snapshot when one exists (survivors keep their
+    /// state and the pre-mutation recordings survive), from tick 0
+    /// otherwise (the discarded recordings surface as a provenance
+    /// anomaly). Incremental wherever the fingerprints and pins
     /// allow; any infeasibility (pinned placement conflicts, TCAM
     /// overflow with the data plane's stream entries, a new device
     /// vertex needing a virtual chip, application-graph changes) falls
     /// back to a full from-scratch re-map — semantically identical,
-    /// just slower. Recordings from before the mutation are discarded:
-    /// the mutated graph is a new workload.
+    /// just slower.
     fn reconcile(&mut self, ticks: u64) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.machine_graph.n_vertices() == 0 || self.app_graph.n_vertices() == 0,
@@ -608,6 +655,21 @@ impl SpiNNTools {
              machine graphs (§6.2)"
         );
         self.remap_note = None;
+        self.discard_note = None;
+        // What the pre-mutation run had already recorded. If there is no
+        // snapshot to restore it from, throwing it away must not be
+        // silent (it surfaces as a provenance anomaly).
+        let (rec_bytes, rec_channels) = self
+            .state
+            .as_ref()
+            .map(|s| {
+                (
+                    s.recordings.values().map(Vec::len).sum::<usize>(),
+                    s.recordings.len(),
+                )
+            })
+            .unwrap_or((0, 0));
+        let restore = self.newest_snapshot();
         // Application graphs re-split globally — there is no sound
         // per-vertex pinning across the splitter — so any app-graph
         // change is a full re-map.
@@ -620,12 +682,24 @@ impl SpiNNTools {
             .as_ref()
             .is_some_and(|s| s.graph_mapping.is_some());
         if app_changed || was_app_run {
+            self.note_reconcile_discard(rec_bytes, rec_channels);
             return self.full_remap(ticks, "application graph changed");
         }
         if let Err(e) = self.reconcile_map_and_load(ticks) {
+            self.note_reconcile_discard(rec_bytes, rec_channels);
             return self.full_remap(ticks, &e.to_string());
         }
         self.mapped_revisions = Some(self.graph_revisions());
+        if let Some(snap) = &restore {
+            // Preserve the pre-mutation run: recordings come back from
+            // the snapshot, unchanged survivors get their evolving state
+            // back, and the run continues from the snapshot tick.
+            // Vertices whose regions the mutation rewrote start fresh —
+            // their new data must win, so they are not restored over.
+            self.apply_snapshot_survivors(snap)?;
+        } else {
+            self.note_reconcile_discard(rec_bytes, rec_channels);
+        }
         // The run itself is outside the fallback: a core hitting a
         // runtime error is a real failure, not a mapping infeasibility.
         let state = self
@@ -636,6 +710,17 @@ impl SpiNNTools {
         self.drive_run(cycles, ticks)
     }
 
+    /// Record that a reconcile threw away the pre-mutation recordings
+    /// because it had no snapshot to restore them from.
+    fn note_reconcile_discard(&mut self, bytes: usize, channels: usize) {
+        if bytes > 0 {
+            self.discard_note = Some(format!(
+                "reconcile discarded {bytes} byte(s) of recordings from {channels} \
+                 channel(s); enable ToolsConfig::checkpoint to preserve them"
+            ));
+        }
+    }
+
     /// Tear everything down and re-run the whole Figure-8 flow with the
     /// current graphs. `why` is surfaced as a provenance anomaly so the
     /// fallback is never silent.
@@ -643,6 +728,13 @@ impl SpiNNTools {
         self.remap_note = Some(format!("graph change forced a full re-map: {why}"));
         self.state = None;
         self.pipeline.clear();
+        if let Some(store) = self.checkpointer.as_deref_mut() {
+            // Stale snapshots cannot be laid over a from-scratch re-map
+            // (the torn-down run is a new workload), and their high
+            // ticks would suppress every capture of the restarted run.
+            // Region blobs stay — identical data re-captures for free.
+            store.prune(0)?;
+        }
         self.first_run(ticks)
     }
 
@@ -836,7 +928,12 @@ impl SpiNNTools {
                 // one. The old region bytes are unreachable or stale
                 // either way, so the diff path does not apply.
                 vertices_moved += 1;
-                let ol = old_loc.expect("moved implies a prior placement");
+                let ol = old_loc.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "vertex {} flagged as moved without a prior placement",
+                        vertex.label()
+                    )
+                })?;
                 if scamp::core_state(&state.sim, ol)
                     .is_ok_and(|s| s != CoreState::Idle)
                 {
@@ -977,6 +1074,11 @@ impl SpiNNTools {
     fn drive_run(&mut self, mut cycles: Vec<u64>, total_ticks: u64) -> anyhow::Result<()> {
         let supervision = self.config.supervision;
         let extraction = self.config.extraction;
+        let ckpt = self.config.checkpoint;
+        if ckpt.is_some() && self.checkpointer.is_none() {
+            self.checkpointer = Some(Box::new(MemoryCheckpointer::new()));
+        }
+        let revisions = self.graph_revisions();
         // Ticks already completed before this call (a resumed run): a
         // heal's restart must cover them too.
         let base_ticks = self
@@ -986,6 +1088,9 @@ impl SpiNNTools {
             .ticks_done;
         let mut heals_done = 0usize;
         loop {
+            // Re-read each pass: a heal's re-map may advance the key
+            // allocator, and later captures must carry the new cursor.
+            let key_cursor = self.pipeline.key_cursor().unwrap_or(0);
             let pending = self.pending_chaos.take();
             let state = self
                 .state
@@ -994,11 +1099,26 @@ impl SpiNNTools {
             if let Some(plan) = pending {
                 state.chaos = Some(plan);
             }
-            match Self::run_cycles_watched(state, &cycles, extraction, supervision.as_ref())? {
+            match Self::run_cycles_watched(
+                state,
+                &cycles,
+                extraction,
+                supervision.as_ref(),
+                ckpt,
+                self.checkpointer.as_deref_mut(),
+                revisions,
+                key_cursor,
+            )? {
                 RunOutcome::Completed => return self.check_completion(),
                 RunOutcome::Faulted(findings) => {
-                    let sup =
-                        supervision.expect("findings can only surface under supervision");
+                    let sup = supervision.ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "run driver surfaced {} fault finding(s) without supervision \
+                             configured; first: {}",
+                            findings.len(),
+                            findings[0].describe()
+                        )
+                    })?;
                     match sup.policy {
                         HealPolicy::Abort => {
                             let mut msg = String::from("run aborted by supervisor:");
@@ -1021,7 +1141,12 @@ impl SpiNNTools {
                             cycles = self
                                 .state
                                 .as_ref()
-                                .expect("heal keeps the run state")
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "run state lost while healing around: {}",
+                                        findings[0].describe()
+                                    )
+                                })?
                                 .plan
                                 .cycles
                                 .clone();
@@ -1038,20 +1163,39 @@ impl SpiNNTools {
     /// are polled and classified. Chaos events whose tick falls inside a
     /// chunk are scheduled into the simulator as that chunk starts (and
     /// drained from the plan: a healed run's restart does not re-fire
-    /// them).
+    /// them). A chaos tick landing exactly *on* a chunk boundary belongs
+    /// to the next chunk — "after tick `t` completes" means after the
+    /// boundary, so the boundary poll still observes a pre-fault
+    /// machine. That is also what makes checkpoint captures sound:
+    /// snapshots are taken only after a clean poll, so every stored
+    /// snapshot predates the effects of any fault found later.
+    ///
+    /// With [`CheckpointConfig`] set, a [`RunSnapshot`] is captured at
+    /// the first clean chunk boundary at or past each
+    /// `interval_ticks`-sized stride (recordings are drained to the
+    /// host first, so core-side buffers are empty in the capture).
+    #[allow(clippy::too_many_arguments)]
     fn run_cycles_watched(
         state: &mut RunState,
         cycles: &[u64],
         extraction: ExtractionMethod,
         supervision: Option<&SupervisorConfig>,
+        ckpt: Option<CheckpointConfig>,
+        mut store: Option<&mut dyn Checkpointer>,
+        revisions: (u64, u64),
+        key_cursor: u64,
     ) -> anyhow::Result<RunOutcome> {
         let timestep_ns = state.sim.config.timestep_us as u64 * 1000;
         for (i, cycle) in cycles.iter().enumerate() {
             if i > 0 {
                 scamp::signal_resume(&mut state.sim)?;
             }
+            // Supervised runs chunk at the poll cadence (captures ride
+            // the poll boundaries); unsupervised checkpointing runs
+            // chunk at the capture cadence.
             let chunk = supervision
                 .map(|s| s.poll_interval_ticks.max(1))
+                .or(ckpt.map(|c| c.interval_ticks))
                 .unwrap_or(*cycle)
                 .max(1);
             let mut done_in_cycle = 0u64;
@@ -1061,12 +1205,16 @@ impl SpiNNTools {
                     scamp::signal_resume(&mut state.sim)?;
                 }
                 // Chaos due within this chunk's tick window strikes
-                // mid-tick-interval, after its tick's timer events.
+                // mid-tick-interval, after its tick's timer events. The
+                // window is `(abs_done, abs_done + step)` — an event at
+                // exactly `abs_done + step` fires as the *next* chunk
+                // starts (same point in tick time, observed one poll
+                // later).
                 let abs_done = state.ticks_done + done_in_cycle;
                 if let Some(plan) = &mut state.chaos {
                     let mut rest = Vec::with_capacity(plan.events.len());
                     for ev in plan.events.drain(..) {
-                        if ev.at_tick <= abs_done + step {
+                        if ev.at_tick < abs_done + step {
                             let delta = ev.at_tick.saturating_sub(abs_done);
                             state
                                 .sim
@@ -1086,11 +1234,270 @@ impl SpiNNTools {
                         return Ok(RunOutcome::Faulted(findings));
                     }
                 }
+                if let (Some(cfg), Some(store)) = (ckpt, store.as_deref_mut()) {
+                    let abs = state.ticks_done + done_in_cycle;
+                    let last = store.snapshot_ticks().last().copied().unwrap_or(0);
+                    if abs > last && abs - last >= cfg.interval_ticks {
+                        Self::capture_snapshot(
+                            state, abs, revisions, key_cursor, extraction, store,
+                        )?;
+                        store.prune(cfg.keep)?;
+                    }
+                }
             }
             state.ticks_done += cycle;
             Self::extract_recordings(state, extraction)?;
         }
         Ok(RunOutcome::Completed)
+    }
+
+    // -- checkpoint/restore (DESIGN.md §9, E15) ------------------------------
+
+    /// Capture a [`RunSnapshot`] of the run at `tick` into `store`.
+    /// Recordings are drained to the host first (so the per-core
+    /// capture carries empty buffers that always fit a later, smaller
+    /// replay plan), then every placed vertex's core is captured and
+    /// any region blob the store has not seen is read back from SDRAM —
+    /// the incremental half: regions unchanged since the last capture
+    /// cost nothing.
+    fn capture_snapshot(
+        state: &mut RunState,
+        tick: u64,
+        revisions: (u64, u64),
+        key_cursor: u64,
+        extraction: ExtractionMethod,
+        store: &mut dyn Checkpointer,
+    ) -> anyhow::Result<RunSnapshot> {
+        Self::extract_recordings(state, extraction)?;
+        let mut placements = Vec::new();
+        for (vid, vertex) in state.run_graph.vertices() {
+            if vertex.virtual_link().is_some() {
+                continue;
+            }
+            let loc = state.mapping.placement(vid).ok_or_else(|| {
+                anyhow::anyhow!("vertex {} unplaced at snapshot capture", vertex.label())
+            })?;
+            placements.push((vid, loc));
+        }
+        let mut cores = BTreeMap::new();
+        let mut regions = BTreeMap::new();
+        for (vid, loc) in &placements {
+            cores.insert(*vid, scamp::capture_core(&mut state.sim, *loc)?);
+            if let Some(digests) = state.region_digests.get(vid) {
+                let table = scamp::region_table(&state.sim, *loc)?;
+                for (id, (len, digest)) in digests {
+                    if *len == 0 || store.has_blob(*digest) {
+                        continue;
+                    }
+                    let (addr, alen) = table.get(id).copied().ok_or_else(|| {
+                        anyhow::anyhow!("region {id} of vertex {vid:?} missing at capture")
+                    })?;
+                    anyhow::ensure!(
+                        alen == *len,
+                        "region {id} of vertex {vid:?}: digest says {len} bytes, \
+                         table says {alen}"
+                    );
+                    let bytes =
+                        scamp::read_sdram(&mut state.sim, loc.chip(), addr, *len as usize)?;
+                    store.put_blob(*digest, &bytes)?;
+                }
+                regions.insert(*vid, digests.clone());
+            }
+        }
+        let snap = RunSnapshot {
+            tick,
+            steps_per_cycle: state.plan.steps_per_cycle,
+            revisions,
+            cores,
+            regions,
+            host_recordings: state.recordings.clone(),
+            pending_chaos: state
+                .chaos
+                .as_ref()
+                .map(|p| p.events.clone())
+                .unwrap_or_default(),
+            placements,
+            keys: state.mapping.keys.clone(),
+            key_cursor,
+        };
+        store.put_snapshot(&snap)?;
+        Ok(snap)
+    }
+
+    /// The newest stored snapshot, decoded — `None` when checkpointing
+    /// is off, no store is installed, or nothing has been captured yet.
+    fn newest_snapshot(&self) -> Option<RunSnapshot> {
+        if self.config.checkpoint.is_none() {
+            return None;
+        }
+        let store = self.checkpointer.as_ref()?;
+        let tick = store.snapshot_ticks().last().copied()?;
+        store.get_snapshot(tick).ok()
+    }
+
+    /// Restore a snapshot onto the *current* run state (which must be
+    /// freshly mapped and started — every user core Ready→Running with
+    /// its static regions loaded). Vertices in the snapshot that are no
+    /// longer placed (removed by a reconcile) are skipped; vertices not
+    /// in the snapshot (added by a reconcile) keep their fresh state
+    /// and start counting ticks from zero. Region bytes are rewritten
+    /// only where the loaded digest differs from the captured one; app
+    /// state, recording cursors, provenance and IOBUF are restored on
+    /// every captured core, and the host recording store is reset to
+    /// the captured prefix.
+    fn apply_snapshot(&mut self, snap: &RunSnapshot) -> anyhow::Result<()> {
+        self.apply_snapshot_inner(snap, false)
+    }
+
+    /// The reconcile flavour of [`Self::apply_snapshot`]: restore only
+    /// vertices whose region data the mutation did *not* rewrite. The
+    /// mutated vertices keep their freshly loaded data and start their
+    /// local tick stream from zero; the host recording store is still
+    /// reset to the captured prefix, so nothing recorded before the
+    /// mutation is lost.
+    fn apply_snapshot_survivors(&mut self, snap: &RunSnapshot) -> anyhow::Result<()> {
+        self.apply_snapshot_inner(snap, true)
+    }
+
+    fn apply_snapshot_inner(
+        &mut self,
+        snap: &RunSnapshot,
+        survivors_only: bool,
+    ) -> anyhow::Result<()> {
+        let checkpointer = &self.checkpointer;
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("snapshot restore without a run state"))?;
+        if !survivors_only {
+            for (vid, regions) in &snap.regions {
+                let Some(loc) = state.mapping.placement(*vid) else {
+                    continue;
+                };
+                let current = state.region_digests.get(vid).cloned().unwrap_or_default();
+                let table = scamp::region_table(&state.sim, loc)?;
+                for (id, (len, digest)) in regions {
+                    if current.get(id).copied() == Some((*len, *digest)) || *len == 0 {
+                        continue;
+                    }
+                    let (addr, alen) = table.get(id).copied().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "snapshot region {id} of vertex {vid:?} has no allocation at restore"
+                        )
+                    })?;
+                    anyhow::ensure!(
+                        alen == *len,
+                        "snapshot region {id} of vertex {vid:?} is {len} bytes but the \
+                         loaded allocation is {alen} (regenerated data changed size)"
+                    );
+                    let bytes = checkpointer
+                        .as_ref()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("snapshot restore needs a checkpoint store for blobs")
+                        })?
+                        .get_blob(*digest)?;
+                    scamp::write_sdram(&mut state.sim, loc.chip(), addr, &bytes)?;
+                    state
+                        .region_digests
+                        .entry(*vid)
+                        .or_default()
+                        .insert(*id, (*len, *digest));
+                }
+            }
+        }
+        for (vid, core_snap) in &snap.cores {
+            let Some(loc) = state.mapping.placement(*vid) else {
+                continue;
+            };
+            if survivors_only
+                && state.region_digests.get(vid) != snap.regions.get(vid)
+            {
+                continue;
+            }
+            scamp::restore_core(&mut state.sim, loc, core_snap, snap.tick)?;
+        }
+        state.recordings = snap
+            .host_recordings
+            .iter()
+            .filter(|((vid, _), _)| state.mapping.placement(*vid).is_some())
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
+        state.ticks_done = snap.tick;
+        scamp::signal_resume(&mut state.sim)?;
+        Ok(())
+    }
+
+    /// Capture and return a [`RunSnapshot`] of the paused run — the
+    /// suspend half of surviving a process restart. The snapshot (and
+    /// its region blobs) are also written to the checkpoint store; with
+    /// a [`super::checkpoint::FileCheckpointer`] installed, a new
+    /// process can rebuild the graphs and [`Self::resume_from`] it.
+    pub fn suspend(&mut self) -> anyhow::Result<RunSnapshot> {
+        anyhow::ensure!(
+            self.state.is_some(),
+            "suspend before any run (nothing to capture)"
+        );
+        let revisions = self.graph_revisions();
+        anyhow::ensure!(
+            self.mapped_revisions == Some(revisions),
+            "graph mutated since the last run; run_ticks() to reconcile before suspending"
+        );
+        if self.checkpointer.is_none() {
+            self.checkpointer = Some(Box::new(MemoryCheckpointer::new()));
+        }
+        let key_cursor = self.pipeline.key_cursor().unwrap_or(0);
+        let extraction = self.config.extraction;
+        let store = self
+            .checkpointer
+            .as_deref_mut()
+            .ok_or_else(|| anyhow::anyhow!("suspend without a checkpoint store"))?;
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("suspend before any run (nothing to capture)"))?;
+        let tick = state.ticks_done;
+        Self::capture_snapshot(state, tick, revisions, key_cursor, extraction, store)
+    }
+
+    /// Rebuild a run from a [`RunSnapshot`] — the resume half of
+    /// surviving a process restart. The graphs must already be rebuilt
+    /// to the exact revisions the snapshot was taken at; the mapping
+    /// pipeline is re-seeded with the snapshot's placements and key
+    /// allocations (every vertex lands back on its core), the machine
+    /// is mapped and loaded as a first run, and the snapshot is applied
+    /// on top. The next [`Self::run_ticks`] continues from
+    /// `snapshot.tick` in the original Figure-9 cycle unit.
+    pub fn resume_from(&mut self, snap: &RunSnapshot) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.state.is_none(),
+            "resume_from over an active run; reset() first"
+        );
+        anyhow::ensure!(
+            self.graph_revisions() == snap.revisions,
+            "graphs at revisions {:?} do not match the snapshot's {:?} — rebuild \
+             them exactly as they were when the snapshot was taken",
+            self.graph_revisions(),
+            snap.revisions
+        );
+        self.pipeline.clear();
+        let mut placements = Placements::default();
+        for (vid, loc) in &snap.placements {
+            placements.insert(*vid, *loc)?;
+        }
+        self.pipeline.seed(placements, snap.keys.clone(), snap.key_cursor);
+        // Map/load exactly like a first run, but plan for one original
+        // cycle unit (so the rebuilt plan keeps the suspended run's
+        // Figure-9 cadence) and do not drive any ticks.
+        self.prepare_run(snap.steps_per_cycle.max(1))?;
+        self.apply_snapshot(snap)?;
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("resume_from lost the run state"))?;
+        if !snap.pending_chaos.is_empty() {
+            state.chaos = Some(ChaosPlan { events: snap.pending_chaos.clone() });
+        }
+        Ok(())
     }
 
     /// Unload every loaded application core that is neither a current
@@ -1152,12 +1559,21 @@ impl SpiNNTools {
     /// re-discover the degraded machine, re-map incrementally (survivor
     /// vertices stay pinned; the placer treats the newly-dead chips as
     /// forbidden), reload the displaced vertices, and leave the run
-    /// state ready to restart from tick 0. Infeasible incremental maps
-    /// fall back to a cleared pipeline — a full re-map on the degraded
-    /// machine. The whole pass is recorded as a [`HealReport`].
+    /// state ready to restart. With checkpointing on, the restart
+    /// resumes from the newest [`RunSnapshot`] — every stored snapshot
+    /// was captured at a clean poll, so it predates the fault — and
+    /// replays only the tail; without, it replays the *whole* tick
+    /// history from tick 0. Infeasible incremental maps fall back to a
+    /// cleared pipeline — a full re-map on the degraded machine. The
+    /// whole pass is recorded as a [`HealReport`].
     fn heal(&mut self, findings: &[FaultFinding], total_ticks: u64) -> anyhow::Result<()> {
         let t0 = Instant::now();
         let fault_descs: Vec<String> = findings.iter().map(|f| f.describe()).collect();
+        let restore = self.newest_snapshot();
+        let replay_ticks = restore
+            .as_ref()
+            .map(|s| total_ticks.saturating_sub(s.tick))
+            .unwrap_or(total_ticks);
         let (machine, forbidden) = {
             let state = self
                 .state
@@ -1199,7 +1615,7 @@ impl SpiNNTools {
             }
             (machine, state.sim.dead_chips())
         };
-        let summary = match self.remap_and_reload(total_ticks, machine.clone(), &forbidden) {
+        let summary = match self.remap_and_reload(replay_ticks, machine.clone(), &forbidden) {
             Ok(s) => s,
             Err(e) => {
                 // Same contract as reconcile: infeasibility is never
@@ -1213,10 +1629,20 @@ impl SpiNNTools {
                     Some(format!("heal fell back to a full re-map: {e}"));
                 self.unload_unmapped_cores()?;
                 self.pipeline.clear();
-                self.remap_and_reload(total_ticks, machine, &forbidden)?
+                self.remap_and_reload(replay_ticks, machine, &forbidden)?
             }
         };
-        let state = self.state.as_mut().expect("heal keeps the run state");
+        // Lay the snapshot over the freshly reloaded machine: survivors
+        // get their evolving state back in place; displaced vertices got
+        // a fresh install at the new core above and now get the same
+        // state restored there. Fired chaos events were drained from the
+        // live plan already, so nothing re-fires during the tail replay.
+        if let Some(snap) = &restore {
+            self.apply_snapshot(snap)?;
+        }
+        let state = self.state.as_mut().ok_or_else(|| {
+            anyhow::anyhow!("run state lost while recording a heal of: {}", fault_descs.join("; "))
+        })?;
         state.heal_reports.push(HealReport {
             faults: fault_descs,
             vertices_moved: summary.vertices_moved,
@@ -1225,6 +1651,7 @@ impl SpiNNTools {
             heal_elapsed_us: t0.elapsed().as_micros() as u64,
             stages_cached: summary.stages_cached,
             stages_rerun: summary.stages_rerun,
+            restored_from_tick: restore.as_ref().map(|s| s.tick),
         });
         Ok(())
     }
@@ -1365,6 +1792,9 @@ impl SpiNNTools {
                 if let Some(note) = &self.remap_note {
                     report.anomalies.push(note.clone());
                 }
+                if let Some(note) = &self.discard_note {
+                    report.anomalies.push(note.clone());
+                }
                 for heal in &state.heal_reports {
                     for fault in &heal.faults {
                         report
@@ -1442,7 +1872,11 @@ impl SpiNNTools {
         self.pipeline.clear();
         self.mapped_revisions = None;
         self.remap_note = None;
+        self.discard_note = None;
         self.pending_chaos = None;
+        // In-memory snapshots die with the run; a FileCheckpointer's
+        // files survive on disk for cross-process resume_from.
+        self.checkpointer = None;
         self.machine_graph.clear_journal();
         self.app_graph.clear_journal();
     }

@@ -181,6 +181,34 @@ impl PipelineState {
     pub fn stage_stats(&self) -> &[crate::algorithms::StageStat] {
         &self.cache.last_run
     }
+
+    /// Seed a fresh pipeline with a prior map's placements and key
+    /// allocations — the restore half of a run snapshot. The next
+    /// [`map_graph_incremental`] pass treats the seeded tokens exactly
+    /// like its own previous outputs: every seeded vertex stays pinned
+    /// to its core and surviving partitions keep their exact key
+    /// ranges, with new allocations above `key_cursor`. Tokens are
+    /// deliberately left unstamped, so every stage re-runs once (no
+    /// stale cache hit against a board the stages never saw) and the
+    /// cache warms from there.
+    pub fn seed(
+        &mut self,
+        placements: Placements,
+        keys: BTreeMap<(VertexId, String), KeyRange>,
+        key_cursor: u64,
+    ) {
+        self.board.put("placements", placements);
+        self.board.put("routing_keys", keys);
+        self.board.put("key_cursor", key_cursor);
+    }
+
+    /// The key allocator's high-water mark after the most recent map
+    /// (`None` before any map) — captured into run snapshots so a
+    /// resumed run's allocator never re-issues a range the suspended
+    /// run already handed out.
+    pub fn key_cursor(&self) -> Option<u64> {
+        self.board.get::<u64>("key_cursor").ok().copied()
+    }
 }
 
 /// Everything one [`map_graph_incremental`] pass produces.

@@ -191,6 +191,25 @@ pub trait CoreApp {
         let _ = ctx;
         Ok(())
     }
+
+    /// Serialize the app's *evolving* state for a run snapshot.
+    ///
+    /// Only state that changes after `on_start` belongs here — static
+    /// configuration is re-read from the data regions when the restored
+    /// binary's `on_start` runs again, so apps that keep no evolving
+    /// state (gatherers, dispatchers, sources driven purely by region
+    /// data) can keep the default `None` and restore for free.
+    fn snapshot_state(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state captured by [`CoreApp::snapshot_state`]. Called
+    /// after `on_start` has re-initialised the app from its regions, so
+    /// implementations only overwrite the evolving fields.
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let _ = bytes;
+        anyhow::bail!("app recorded snapshot state but has no restore_state")
+    }
 }
 
 /// Per-core simulator state.

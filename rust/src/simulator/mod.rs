@@ -1,6 +1,6 @@
 //! A discrete-event simulator of a SpiNNaker machine.
 //!
-//! The hardware substitute for this reproduction (DESIGN.md §2): a
+//! The hardware substitute for this reproduction (DESIGN.md §4): a
 //! cycle-approximate model of the router fabric (TCAM matching, default
 //! routing, bounded output queues with the §2 drop-after-wait behaviour
 //! and the single dropped-packet register of §6.10), per-chip SDRAM,
@@ -14,7 +14,7 @@
 //! # The fabric fast path (experiment E11)
 //!
 //! The per-packet-per-hop hot path runs on three structures chosen by
-//! [`FabricMode`] (DESIGN.md §4): a flat chip arena indexed `y * width
+//! [`FabricMode`] (DESIGN.md §5): a flat chip arena indexed `y * width
 //! + x` with per-(chip, link) busy cursors and frozen link targets in
 //! dense slots, a per-chip [`RouteCache`] memoising the first-match
 //! TCAM scan, and a bucketed calendar [`queue::CalendarQueue`] making

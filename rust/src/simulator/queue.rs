@@ -1,4 +1,4 @@
-//! Event queues for the simulator fabric (DESIGN.md §4, "fabric fast
+//! Event queues for the simulator fabric (DESIGN.md §5, "fabric fast
 //! path").
 //!
 //! The dispatch loop needs a priority queue ordered by `(time,

@@ -460,6 +460,107 @@ pub fn recording_info(
     Ok((ch.addr, ch.write_pos, ch.capacity))
 }
 
+/// One core's captured run state: everything a checkpoint needs to put
+/// an equivalent core back on (possibly different) silicon. App state
+/// comes from [`CoreApp::snapshot_state`]; recording buffers carry the
+/// bytes written since the last Figure-9 drain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreSnapshot {
+    /// Evolving app state, if the binary keeps any.
+    pub app_state: Option<Vec<u8>>,
+    /// channel -> (undrained buffer bytes, lost_bytes counter).
+    pub recordings: BTreeMap<u32, (Vec<u8>, u64)>,
+    pub provenance: BTreeMap<String, u64>,
+    pub iobuf: String,
+    pub ticks_done: u64,
+}
+
+/// Capture a loaded core's run state. A host-side operation, charged
+/// like the SDRAM reads it is made of.
+pub fn capture_core(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<CoreSnapshot> {
+    let (snap, bytes_moved) = {
+        let chip = sim.chip(loc.chip())?;
+        let core = chip
+            .cores
+            .get(&loc.p)
+            .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+        anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded");
+        let app_state = core.app.as_ref().and_then(|a| a.snapshot_state());
+        let mut recordings = BTreeMap::new();
+        let mut moved = app_state.as_ref().map(|s| s.len()).unwrap_or(0);
+        for (id, ch) in &core.recordings {
+            let data = chip.sdram.read(ch.addr, ch.write_pos)?;
+            moved += data.len();
+            recordings.insert(*id, (data, ch.lost_bytes));
+        }
+        (
+            CoreSnapshot {
+                app_state,
+                recordings,
+                provenance: core.provenance.clone(),
+                iobuf: core.iobuf.clone(),
+                ticks_done: core.ticks_done,
+            },
+            moved,
+        )
+    };
+    let cost = chunk_cost(sim, loc.chip());
+    let chunks = bytes_moved.div_ceil(SCP_CHUNK).max(1) as u64;
+    sim.advance_host_time(cost * chunks);
+    Ok(snap)
+}
+
+/// Restore a captured core onto a loaded-and-started core: overwrite
+/// the evolving app state (static config was re-read by `on_start`),
+/// refill the recording buffers at their *current* addresses, put back
+/// provenance/IOBUF, and park the core `Paused` at `resume_tick` so the
+/// next run cycle continues the tail instead of replaying history.
+pub fn restore_core(
+    sim: &mut SimMachine,
+    loc: CoreLocation,
+    snap: &CoreSnapshot,
+    resume_tick: u64,
+) -> anyhow::Result<()> {
+    let bytes_moved = snap.app_state.as_ref().map(|s| s.len()).unwrap_or(0)
+        + snap.recordings.values().map(|(d, _)| d.len()).sum::<usize>();
+    let cost = chunk_cost(sim, loc.chip());
+    let chunks = bytes_moved.div_ceil(SCP_CHUNK).max(1) as u64;
+    sim.advance_host_time(cost * chunks);
+    let chip = sim.chip_mut(loc.chip())?;
+    let core = chip
+        .cores
+        .get_mut(&loc.p)
+        .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
+    anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded");
+    for (id, (data, lost)) in &snap.recordings {
+        let ch = core.recordings.get_mut(id).ok_or_else(|| {
+            anyhow::anyhow!("core {loc} has no recording channel {id} to restore")
+        })?;
+        anyhow::ensure!(
+            data.len() <= ch.capacity,
+            "snapshot channel {id} holds {} bytes, buffer capacity is {}",
+            data.len(),
+            ch.capacity
+        );
+        chip.sdram.write(ch.addr, data)?;
+        ch.write_pos = data.len();
+        ch.lost_bytes = *lost;
+    }
+    if let Some(state) = &snap.app_state {
+        let app = core
+            .app
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("core {loc} has snapshot state but no app"))?;
+        app.restore_state(state)?;
+    }
+    core.provenance = snap.provenance.clone();
+    core.iobuf = snap.iobuf.clone();
+    core.ticks_done = resume_tick;
+    core.run_until = resume_tick;
+    core.state = CoreState::Paused;
+    Ok(())
+}
+
 /// Reset a recording channel after extraction (the Figure-9 flush).
 pub fn clear_recording(sim: &mut SimMachine, loc: CoreLocation, channel: u32) -> anyhow::Result<()> {
     let chip = sim.chip_mut(loc.chip())?;
@@ -617,6 +718,38 @@ mod tests {
         extra.insert(CoreLocation::new(0, 1, 5));
         let degraded = rediscover_machine(&mut sim, &extra);
         assert!(degraded.chip((0, 1)).unwrap().processor(5).is_none());
+    }
+
+    #[test]
+    fn capture_restore_continues_the_tick_stream() {
+        let m = MachineBuilder::spinn3().build();
+        let mut sim = SimMachine::boot(m, SimConfig::default());
+        let loc = CoreLocation::new(0, 0, 1);
+        let mut rec = BTreeMap::new();
+        rec.insert(0u32, 1024u32);
+        load_app(&mut sim, loc, Box::new(Recorder), BTreeMap::new(), rec.clone()).unwrap();
+        signal_start(&mut sim).unwrap();
+        sim.start_run_cycle(3);
+        sim.run_until_idle().unwrap();
+        let snap = capture_core(&mut sim, loc).unwrap();
+        assert_eq!(snap.ticks_done, 3);
+        assert_eq!(snap.recordings[&0].0.len(), 12);
+        // Simulate a reload (fresh binary state, cursors reset), then
+        // restore: the tick stream must continue at 4, not replay 1..3.
+        reload_app(&mut sim, loc, "app.aplx", Box::new(Recorder), BTreeMap::new(), rec).unwrap();
+        signal_start(&mut sim).unwrap();
+        restore_core(&mut sim, loc, &snap, 3).unwrap();
+        assert_eq!(core_state(&sim, loc).unwrap(), CoreState::Paused);
+        sim.start_run_cycle(2);
+        sim.run_until_idle().unwrap();
+        let (addr, written, _) = recording_info(&sim, loc, 0).unwrap();
+        assert_eq!(written, 20);
+        let data = read_sdram(&mut sim, loc.chip(), addr, written).unwrap();
+        let ticks: Vec<u32> = data
+            .chunks(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(ticks, vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

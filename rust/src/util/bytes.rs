@@ -135,6 +135,12 @@ impl<'a> ByteReader<'a> {
         (0..n).map(|_| self.u32()).collect()
     }
 
+    /// Consume exactly `n` bytes (the payload of a length-prefixed blob,
+    /// as the snapshot codec writes them) or error on underrun.
+    pub fn bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        self.take(n)
+    }
+
     /// Consume and return every remaining byte (the tail payload of a
     /// frame) in one slice — cheaper than a byte-at-a-time loop on the
     /// UDP/SDP decode paths.
@@ -193,5 +199,17 @@ mod tests {
         let buf = [1u8, 2];
         let mut r = ByteReader::new(&buf);
         assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn counted_bytes_round_trip() {
+        let mut w = ByteWriter::new();
+        w.u32(3).bytes(&[7, 8, 9]).u8(0xFF);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        let n = r.u32().unwrap() as usize;
+        assert_eq!(r.bytes(n).unwrap(), &[7, 8, 9]);
+        assert_eq!(r.u8().unwrap(), 0xFF);
+        assert!(r.bytes(1).is_err());
     }
 }

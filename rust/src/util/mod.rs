@@ -43,6 +43,13 @@ impl SplitMix64 {
         Self { state: seed }
     }
 
+    /// The raw generator state. `SplitMix64::new(rng.state())` resumes
+    /// the exact stream — `new` stores the seed verbatim — which is how
+    /// run snapshots serialize a core's RNG without replaying draws.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);

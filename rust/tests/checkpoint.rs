@@ -1,0 +1,496 @@
+//! Checkpoint/restore property suite (DESIGN.md §9, experiment E15).
+//!
+//! The core property: a run that is snapshotted at tick `k`, torn down,
+//! rebuilt in a fresh [`SpiNNTools`] instance and resumed from the
+//! snapshot produces recordings **byte-identical** to the uninterrupted
+//! run — at mapping worker-pool widths 1, 2 and 8, and both with and
+//! without a fault injected after `k`. With a fault, the healed run
+//! must also report which snapshot it restored from, and still match a
+//! fresh run on the equivalently boot-degraded machine (the same
+//! oracle as the chaos suite, now with only the tail replayed).
+//!
+//! Regressions pinned here:
+//! - a chaos event landing exactly on a poll boundary belongs to the
+//!   *next* chunk, so the boundary poll (and any snapshot captured at
+//!   it) still sees a pre-fault machine;
+//! - `reconcile()` preserves pre-mutation recordings when checkpointing
+//!   is on, and surfaces the discard as a provenance anomaly when off;
+//! - a heal during a *resumed* run covers the base ticks of earlier
+//!   `run_ticks` calls.
+//!
+//! CI runs this suite under a fixed seed matrix via `CHAOS_SEED`.
+
+use std::collections::BTreeSet;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{
+    BootFaults, CheckpointConfig, Checkpointer, FileCheckpointer, HealPolicy, MachineSpec,
+    RunSnapshot, SpiNNTools, SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::machine::ChipCoord;
+use spinntools::simulator::{ChaosPlan, Fault};
+
+const ROWS: u32 = 6;
+const COLS: u32 = 6;
+const TICKS: u64 = 6;
+
+/// Base seed for the grid pattern; CI sweeps a matrix of these.
+fn base_seed() -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0A5)
+}
+
+fn supervised() -> SupervisorConfig {
+    SupervisorConfig { poll_interval_ticks: 1, policy: HealPolicy::Remap, max_heals: 4 }
+}
+
+fn every_tick() -> CheckpointConfig {
+    CheckpointConfig { interval_ticks: 1, keep: 2 }
+}
+
+/// Build the ROWS x COLS Conway grid into `tools`; returns vertex ids.
+fn build_grid(tools: &mut SpiNNTools, seed: u64) -> Vec<VertexId> {
+    let alive = |r: u32, c: u32| (r.wrapping_mul(31) ^ c.wrapping_mul(17) ^ seed as u32) % 3 == 0;
+    let mut ids = Vec::new();
+    for r in 0..ROWS {
+        for c in 0..COLS {
+            ids.push(
+                tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                    .unwrap(),
+            );
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < ROWS as i64 && c < COLS as i64)
+            .then_some((r * COLS as i64 + c) as usize)
+    };
+    for r in 0..ROWS as i64 {
+        for c in 0..COLS as i64 {
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        tools
+                            .add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)
+                            .unwrap();
+                    }
+                }
+            }
+        }
+    }
+    ids
+}
+
+fn recordings(tools: &SpiNNTools, ids: &[VertexId]) -> Vec<Vec<u8>> {
+    ids.iter().map(|v| tools.recording(*v).to_vec()).collect()
+}
+
+/// The uninterrupted reference: no checkpointing, one `run_ticks`.
+fn plain_run(seed: u64, threads: usize) -> Vec<Vec<u8>> {
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5).with_mapping_threads(threads),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.run_ticks(TICKS).unwrap();
+    recordings(&tools, &ids)
+}
+
+/// The same workload on the equivalently boot-degraded machine.
+fn degraded_run(seed: u64, faults: &BootFaults) -> Vec<Vec<u8>> {
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5)
+            .with_supervision(supervised())
+            .with_boot_faults(faults.clone()),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.run_ticks(TICKS).unwrap();
+    assert!(tools.heal_reports().is_empty(), "boot-degraded run must not heal");
+    recordings(&tools, &ids)
+}
+
+/// A used, killable (non-Ethernet) chip of this workload's deterministic
+/// placement — the target for every injected chip death below.
+fn killable_used_chip(seed: u64) -> ChipCoord {
+    let mut probe = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let ids = build_grid(&mut probe, seed);
+    probe.run_ticks(1).unwrap();
+    let mapping = probe.mapping().unwrap();
+    let machine = MachineSpec::Spinn5.template();
+    let used: BTreeSet<ChipCoord> = ids
+        .iter()
+        .map(|v| mapping.placement(*v).unwrap().chip())
+        .collect();
+    used.into_iter()
+        .find(|c| !machine.chip(*c).map(|ch| ch.is_ethernet()).unwrap_or(true))
+        .expect("workload uses a killable chip")
+}
+
+#[test]
+fn checkpointing_is_observation_only() {
+    // Captures ride chunk boundaries; chunking must not perturb the
+    // simulation, so a checkpointed run equals the plain run exactly.
+    let seed = base_seed();
+    let reference = plain_run(seed, 1);
+    for interval in [1u64, 2, 5] {
+        let mut tools = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn5)
+                .with_checkpoint(CheckpointConfig { interval_ticks: interval, keep: 2 }),
+        )
+        .unwrap();
+        let ids = build_grid(&mut tools, seed);
+        tools.run_ticks(TICKS).unwrap();
+        assert_eq!(
+            recordings(&tools, &ids),
+            reference,
+            "checkpoint interval {interval} changed the simulation"
+        );
+        let ticks = tools.checkpointer().expect("store auto-created").snapshot_ticks();
+        assert!(!ticks.is_empty(), "no snapshot captured at interval {interval}");
+        assert!(ticks.len() <= 2, "prune must respect keep=2: {ticks:?}");
+    }
+}
+
+#[test]
+fn suspend_resume_matches_uninterrupted_run() {
+    // E15 core property, clean half: snapshot at tick k, rebuild in a
+    // fresh instance, resume, run to the end — byte-identical to the
+    // uninterrupted run, at every pool width. The snapshot crosses the
+    // "process boundary" through its serialized form.
+    let seed = base_seed();
+    for threads in [1usize, 2, 8] {
+        let reference = plain_run(seed, threads);
+        for k in [1u64, 3, 5] {
+            let snap_bytes = {
+                let mut tools = SpiNNTools::new(
+                    ToolsConfig::new(MachineSpec::Spinn5)
+                        .with_mapping_threads(threads)
+                        .with_checkpoint(every_tick()),
+                )
+                .unwrap();
+                build_grid(&mut tools, seed);
+                tools.run_ticks(k).unwrap();
+                tools.suspend().unwrap().to_bytes()
+            };
+            let snap = RunSnapshot::from_bytes(&snap_bytes).unwrap();
+            assert_eq!(snap.tick, k);
+
+            let mut tools = SpiNNTools::new(
+                ToolsConfig::new(MachineSpec::Spinn5)
+                    .with_mapping_threads(threads)
+                    .with_checkpoint(every_tick()),
+            )
+            .unwrap();
+            let ids = build_grid(&mut tools, seed);
+            tools.resume_from(&snap).unwrap();
+            assert_eq!(tools.ticks_done(), k);
+            tools.run_ticks(TICKS - k).unwrap();
+            assert_eq!(
+                recordings(&tools, &ids),
+                reference,
+                "resume at k={k}, threads {threads} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn suspend_resume_then_fault_matches_degraded_run() {
+    // E15 core property, faulty half: resume from tick k, then lose a
+    // chip at tick k+1. The healed tail must restore from a snapshot
+    // (not replay from 0) and still match the boot-degraded oracle.
+    let seed = base_seed();
+    let chip = killable_used_chip(seed);
+    let reference = degraded_run(seed, &BootFaults { chips: vec![chip], ..Default::default() });
+    for threads in [1usize, 2, 8] {
+        let k = 2u64;
+        let snap = {
+            let mut tools = SpiNNTools::new(
+                ToolsConfig::new(MachineSpec::Spinn5)
+                    .with_mapping_threads(threads)
+                    .with_checkpoint(every_tick()),
+            )
+            .unwrap();
+            build_grid(&mut tools, seed);
+            tools.run_ticks(k).unwrap();
+            tools.suspend().unwrap()
+        };
+        let mut tools = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn5)
+                .with_mapping_threads(threads)
+                .with_supervision(supervised())
+                .with_checkpoint(every_tick()),
+        )
+        .unwrap();
+        let ids = build_grid(&mut tools, seed);
+        tools.resume_from(&snap).unwrap();
+        tools.inject_chaos(ChaosPlan::new().with(k + 1, Fault::ChipDeath(chip)));
+        tools.run_ticks(TICKS - k).unwrap();
+        let heals = tools.heal_reports();
+        assert_eq!(heals.len(), 1, "threads {threads}");
+        let restored = heals[0].restored_from_tick.expect("heal must restore from a snapshot");
+        assert!(restored >= k, "restore point {restored} predates the resume at {k}");
+        assert_eq!(
+            recordings(&tools, &ids),
+            reference,
+            "healed resumed run diverged (threads {threads})"
+        );
+    }
+}
+
+#[test]
+fn heal_restores_from_snapshot_not_tick_zero() {
+    // The tentpole behaviour: with checkpointing on, a heal resumes from
+    // the newest pre-fault snapshot and replays only the tail.
+    let seed = base_seed();
+    let chip = killable_used_chip(seed);
+    let reference = degraded_run(seed, &BootFaults { chips: vec![chip], ..Default::default() });
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5)
+            .with_supervision(supervised())
+            .with_checkpoint(every_tick()),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.inject_chaos(ChaosPlan::new().with(3, Fault::ChipDeath(chip)));
+    tools.run_ticks(TICKS).unwrap();
+    let heals = tools.heal_reports();
+    assert_eq!(heals.len(), 1);
+    // The fault strikes inside tick window (3, 4); the tick-3 poll was
+    // clean, so a tick-3 snapshot exists and is the restore point.
+    assert_eq!(heals[0].restored_from_tick, Some(3));
+    assert_eq!(recordings(&tools, &ids), reference);
+}
+
+#[test]
+fn chunk_boundary_chaos_defers_to_next_chunk() {
+    // Regression: an event at exactly `abs_done + step` used to be
+    // scheduled into the *current* chunk (`<=` instead of `<`), so the
+    // tick-2 poll already saw the dead chip and no tick-2 snapshot was
+    // ever captured. "After tick 2" must mean after the boundary: the
+    // tick-2 poll is clean, the tick-2 snapshot exists, and the fault is
+    // observed by the tick-4 poll — one poll later, same strike tick.
+    let seed = base_seed();
+    let chip = killable_used_chip(seed);
+    let reference = degraded_run(seed, &BootFaults { chips: vec![chip], ..Default::default() });
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn5)
+            .with_supervision(SupervisorConfig {
+                poll_interval_ticks: 2,
+                policy: HealPolicy::Remap,
+                max_heals: 4,
+            })
+            .with_checkpoint(CheckpointConfig { interval_ticks: 2, keep: 2 }),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.inject_chaos(ChaosPlan::new().with(2, Fault::ChipDeath(chip)));
+    tools.run_ticks(TICKS).unwrap();
+    let heals = tools.heal_reports();
+    assert_eq!(heals.len(), 1);
+    assert_eq!(
+        heals[0].restored_from_tick,
+        Some(2),
+        "boundary poll must predate the boundary fault"
+    );
+    assert_eq!(recordings(&tools, &ids), reference);
+}
+
+/// Build the 3x3 blinker used by the reconcile tests (small enough that
+/// removing one cell is a visible mutation).
+fn blinker(tools: &mut SpiNNTools) -> Vec<VertexId> {
+    let mut ids = Vec::new();
+    for r in 0..3u32 {
+        for c in 0..3u32 {
+            let alive = r == 1;
+            ids.push(
+                tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive))
+                    .unwrap(),
+            );
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < 3 && c < 3).then_some((r * 3 + c) as usize)
+    };
+    for r in 0..3i64 {
+        for c in 0..3i64 {
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        tools
+                            .add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)
+                            .unwrap();
+                    }
+                }
+            }
+        }
+    }
+    ids
+}
+
+#[test]
+fn reconcile_preserves_recordings_with_checkpointing() {
+    // Satellite of the tentpole: a graph mutation between runs used to
+    // silently discard everything recorded so far. With checkpointing
+    // the pre-mutation recordings survive and the run continues from
+    // the snapshot tick.
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
+    )
+    .unwrap();
+    let ids = blinker(&mut tools);
+    tools.run_ticks(2).unwrap();
+    let pre = recordings(&tools, &ids);
+    assert!(pre.iter().all(|r| r.len() == 2));
+    tools.remove_machine_vertex(ids[3]).unwrap(); // (1,0): one wing
+    tools.run_ticks(2).unwrap();
+    assert_eq!(tools.ticks_done(), 4, "2 restored + 2 new");
+    for (i, id) in ids.iter().enumerate() {
+        if i == 3 {
+            assert!(tools.recording(*id).is_empty(), "removed vertex keeps nothing");
+            continue;
+        }
+        let rec = tools.recording(*id);
+        assert_eq!(rec.len(), 4, "vertex {i}: pre-mutation ticks preserved");
+        assert_eq!(&rec[..2], &pre[i][..], "vertex {i}: pre-mutation bytes intact");
+    }
+    let report = tools.provenance();
+    assert!(
+        !report.anomalies.iter().any(|a| a.contains("discarded")),
+        "nothing was discarded: {:?}",
+        report.anomalies
+    );
+}
+
+#[test]
+fn reconcile_without_checkpointing_surfaces_the_discard() {
+    // The historical behaviour is kept when checkpointing is off, but
+    // the discard is no longer silent.
+    let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+    let ids = blinker(&mut tools);
+    tools.run_ticks(2).unwrap();
+    tools.remove_machine_vertex(ids[3]).unwrap();
+    tools.run_ticks(2).unwrap();
+    assert_eq!(tools.ticks_done(), 2, "restart from tick 0");
+    assert_eq!(tools.recording(ids[4]).len(), 2, "only post-mutation ticks remain");
+    let report = tools.provenance();
+    assert!(
+        report.anomalies.iter().any(|a| a.contains("reconcile discarded")),
+        "discard must be a provenance anomaly: {:?}",
+        report.anomalies
+    );
+}
+
+#[test]
+fn resumed_run_heal_covers_base_ticks() {
+    // Satellite regression: run_ticks(a), fault, heal, run_ticks(b) —
+    // the heal's restart must cover the base `a` ticks too, with and
+    // without a snapshot to restore from.
+    let seed = base_seed();
+    let chip = killable_used_chip(seed);
+    let reference = degraded_run(seed, &BootFaults { chips: vec![chip], ..Default::default() });
+    for checkpoint in [None, Some(every_tick())] {
+        let mut config =
+            ToolsConfig::new(MachineSpec::Spinn5).with_supervision(supervised());
+        if let Some(c) = checkpoint {
+            config = config.with_checkpoint(c);
+        }
+        let mut tools = SpiNNTools::new(config).unwrap();
+        let ids = build_grid(&mut tools, seed);
+        tools.run_ticks(2).unwrap();
+        tools.inject_chaos(ChaosPlan::new().with(3, Fault::ChipDeath(chip)));
+        tools.run_ticks(TICKS - 2).unwrap();
+        assert_eq!(tools.ticks_done(), TICKS);
+        let heals = tools.heal_reports();
+        assert_eq!(heals.len(), 1);
+        assert_eq!(
+            heals[0].restored_from_tick,
+            checkpoint.map(|_| 3),
+            "checkpoint={checkpoint:?}"
+        );
+        assert_eq!(
+            recordings(&tools, &ids),
+            reference,
+            "checkpoint={checkpoint:?} diverged from the degraded oracle"
+        );
+    }
+}
+
+#[test]
+fn file_checkpointer_survives_process_restart() {
+    // suspend() in one "process", resume_from() in another: everything
+    // needed crosses through the file store.
+    let dir = std::env::temp_dir().join(format!(
+        "spinntools-ckpt-restart-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let reference = {
+        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let ids = blinker(&mut tools);
+        tools.run_ticks(4).unwrap();
+        recordings(&tools, &ids)
+    };
+
+    {
+        let mut tools = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
+        )
+        .unwrap();
+        tools.set_checkpointer(Box::new(FileCheckpointer::new(&dir).unwrap()));
+        blinker(&mut tools);
+        tools.run_ticks(2).unwrap();
+        tools.suspend().unwrap();
+    } // "process" exits; only the directory survives
+
+    let store = FileCheckpointer::new(&dir).unwrap();
+    let newest = *store.snapshot_ticks().last().expect("snapshot on disk");
+    assert_eq!(newest, 2);
+    let snap = store.get_snapshot(newest).unwrap();
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
+    )
+    .unwrap();
+    tools.set_checkpointer(Box::new(store));
+    let ids = blinker(&mut tools);
+    tools.resume_from(&snap).unwrap();
+    tools.run_ticks(2).unwrap();
+    assert_eq!(recordings(&tools, &ids), reference);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_from_rejects_mismatched_graphs() {
+    let snap = {
+        let mut tools = SpiNNTools::new(
+            ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
+        )
+        .unwrap();
+        blinker(&mut tools);
+        tools.run_ticks(2).unwrap();
+        tools.suspend().unwrap()
+    };
+    // One vertex short: the revisions cannot match.
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
+    )
+    .unwrap();
+    tools
+        .add_machine_vertex(ConwayCellVertex::arc(0, 0, true))
+        .unwrap();
+    let err = tools.resume_from(&snap).unwrap_err().to_string();
+    assert!(err.contains("do not match the snapshot"), "{err}");
+}
