@@ -1,0 +1,295 @@
+//! Experiment E16 — the cost of surviving an unreliable wire
+//! (DESIGN.md §10).
+//!
+//! Three questions, answered in `BENCH_wire.json`:
+//!
+//! 1. **What does reliability cost when nothing goes wrong?** Nothing:
+//!    the lossless wire takes the draw-free fast path, and this bench
+//!    *asserts* zero retries/timeouts on it.
+//! 2. **What does loss cost when it happens?** SCAMP and bulk-plane
+//!    transfers, plus a whole Conway workload, run at 0‰ / 10‰ / 50‰
+//!    frame loss; the simulated-time overhead ratios quantify the
+//!    retry/backoff/re-request tax. Results stay byte-identical at
+//!    every loss level.
+//! 3. **How fast does silence turn into a heal?** A board that stops
+//!    answering mid-run is escalated and healed around; the bench
+//!    records the virtual time from first timeout to escalation and
+//!    the wall-clock heal latency from the `HealReport`.
+//!
+//! ```sh
+//! cargo bench --bench wire
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{
+    BootFaults, DataPlaneOptions, FastPath, HealPolicy, MachineSpec, SpiNNTools,
+    SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::machine::{ChipCoord, MachineBuilder};
+use spinntools::simulator::{
+    scamp, ChaosPlan, Fault, SimConfig, SimMachine, WireFaults, WireStats,
+};
+use spinntools::util::json::Json;
+use spinntools::util::SplitMix64;
+
+const SEED: u64 = 0xE16;
+const ROWS: u32 = 6;
+const TICKS: u64 = 6;
+
+fn pattern(len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+fn picker() -> impl FnMut(ChipCoord) -> Option<u8> {
+    let mut used: BTreeMap<ChipCoord, u8> = BTreeMap::new();
+    move |chip| {
+        let next = used.entry(chip).or_insert(17);
+        let c = *next;
+        *next -= 1;
+        Some(c)
+    }
+}
+
+/// SCAMP + bulk-plane transfers at one loss level; returns the JSON row
+/// plus (scamp virtual ns, bulk virtual ns).
+fn transfer_row(loss_permille: u16) -> (BTreeMap<String, Json>, u64, u64) {
+    let faults = if loss_permille == 0 {
+        WireFaults::none()
+    } else {
+        WireFaults::lossy(SEED, loss_permille)
+    };
+    let mut config = SimConfig::default();
+    config.wire.faults = faults;
+    let mut sim = SimMachine::boot(MachineBuilder::spinn5().build(), config);
+    let chip = (4, 4);
+    let data = pattern(64 * 1024, SEED);
+
+    let t0 = sim.now_ns();
+    let a = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    scamp::write_sdram(&mut sim, chip, a, &data).unwrap();
+    let scamp_back = scamp::read_sdram(&mut sim, chip, a, data.len()).unwrap();
+    let scamp_ns = sim.now_ns() - t0;
+    assert_eq!(scamp_back, data, "SCAMP image diverged at {loss_permille} permille");
+
+    let fp = FastPath::install(&mut sim, &[chip], picker(), &DataPlaneOptions::default())
+        .unwrap();
+    scamp::signal_start(&mut sim).unwrap();
+    let bulk = pattern(256 * 1024, SEED ^ 1);
+    let b = scamp::alloc_sdram(&mut sim, chip, bulk.len() as u32).unwrap();
+    let t0 = sim.now_ns();
+    fp.write(&mut sim, chip, b, &bulk).unwrap();
+    let back = fp.read(&mut sim, chip, b, bulk.len()).unwrap();
+    let bulk_ns = sim.now_ns() - t0;
+    assert_eq!(back, bulk, "bulk image diverged at {loss_permille} permille");
+
+    let stats = sim.wire_stats();
+    if loss_permille == 0 {
+        assert_eq!(
+            stats,
+            WireStats::default(),
+            "the lossless wire must record zero transport work"
+        );
+    }
+    let mut row = BTreeMap::new();
+    row.insert("loss_permille".into(), Json::Num(loss_permille as f64));
+    row.insert("scamp_virtual_ns".into(), Json::Num(scamp_ns as f64));
+    row.insert("bulk_virtual_ns".into(), Json::Num(bulk_ns as f64));
+    row.insert("scp_retries".into(), Json::Num(stats.scp_retries as f64));
+    row.insert("scp_timeouts".into(), Json::Num(stats.scp_timeouts as f64));
+    row.insert("frames_lost".into(), Json::Num(stats.frames_lost as f64));
+    row.insert("backoff_wait_ns".into(), Json::Num(stats.backoff_wait_ns as f64));
+    (row, scamp_ns, bulk_ns)
+}
+
+/// Build the Conway grid (same shape as `tests/wire.rs`).
+fn build_grid(tools: &mut SpiNNTools) -> Vec<VertexId> {
+    let alive = |r: u32, c: u32| (r * 31 + c * 17) % 3 == 0;
+    let mut ids = Vec::new();
+    for r in 0..ROWS {
+        for c in 0..ROWS {
+            ids.push(
+                tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                    .unwrap(),
+            );
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < ROWS as i64 && c < ROWS as i64)
+            .then_some((r * ROWS as i64 + c) as usize)
+    };
+    for r in 0..ROWS as i64 {
+        for c in 0..ROWS as i64 {
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    if (dr, dc) != (0, 0) {
+                        if let Some(n) = idx(r + dr, c + dc) {
+                            tools
+                                .add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)
+                                .unwrap();
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ids
+}
+
+/// A whole workload at one loss level: (recordings, wall ms, stats).
+fn workload_row(loss_permille: u16) -> (Vec<Vec<u8>>, f64, WireStats) {
+    let faults = if loss_permille == 0 {
+        WireFaults::none()
+    } else {
+        WireFaults::lossy(SEED, loss_permille)
+    };
+    let t = Instant::now();
+    let mut tools =
+        SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5).with_wire_faults(faults)).unwrap();
+    let ids = build_grid(&mut tools);
+    tools.run_ticks(TICKS).unwrap();
+    let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+    let recs = ids.iter().map(|v| tools.recording(*v).to_vec()).collect();
+    (recs, wall_ms, tools.provenance().wire)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E16: reliable transport over an unreliable wire");
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("E16_unreliable_wire".to_string()));
+
+    // ---- retry overhead at 0 / 10 / 50 permille loss -------------------
+    let mut rows = Vec::new();
+    let mut base = (0u64, 0u64);
+    for loss in [0u16, 10, 50] {
+        let (mut row, scamp_ns, bulk_ns) = transfer_row(loss);
+        if loss == 0 {
+            base = (scamp_ns, bulk_ns);
+        }
+        let scamp_ratio = scamp_ns as f64 / base.0.max(1) as f64;
+        let bulk_ratio = bulk_ns as f64 / base.1.max(1) as f64;
+        row.insert("scamp_overhead_ratio".into(), Json::Num(scamp_ratio));
+        row.insert("bulk_overhead_ratio".into(), Json::Num(bulk_ratio));
+        println!(
+            "loss {loss:>2} permille: scamp x{scamp_ratio:.3}, bulk x{bulk_ratio:.3} \
+             simulated-time overhead"
+        );
+        rows.push(Json::Obj(row));
+    }
+    root.insert("transfer_rows".to_string(), Json::Arr(rows));
+
+    // ---- whole workload at the same loss levels ------------------------
+    let mut rows = Vec::new();
+    let mut reference: Option<Vec<Vec<u8>>> = None;
+    for loss in [0u16, 10, 50] {
+        let (recs, wall_ms, stats) = workload_row(loss);
+        match &reference {
+            None => {
+                assert_eq!(stats, WireStats::default());
+                reference = Some(recs);
+            }
+            Some(r) => assert_eq!(
+                &recs, r,
+                "workload diverged from the lossless twin at {loss} permille"
+            ),
+        }
+        println!(
+            "workload at {loss:>2} permille: {wall_ms:.1} ms wall, {} retries, {} frames lost",
+            stats.scp_retries, stats.frames_lost
+        );
+        let mut row = BTreeMap::new();
+        row.insert("loss_permille".into(), Json::Num(loss as f64));
+        row.insert("wall_ms".into(), Json::Num(wall_ms));
+        row.insert("scp_retries".into(), Json::Num(stats.scp_retries as f64));
+        row.insert("frames_lost".into(), Json::Num(stats.frames_lost as f64));
+        row.insert("byte_identical".into(), Json::Bool(true));
+        rows.push(Json::Obj(row));
+    }
+    root.insert("workload_rows".to_string(), Json::Arr(rows));
+
+    // ---- escalation latency: silence -> error --------------------------
+    let mut sim = SimMachine::boot(MachineBuilder::spinn5().build(), SimConfig::default());
+    sim.apply_fault(Fault::BoardSilent { board: (0, 0), duration_ns: u64::MAX })?;
+    let t0 = sim.now_ns();
+    let err = scamp::read_sdram(&mut sim, (2, 2), 0x6000_0000, 64)
+        .expect_err("silent board must escalate");
+    let escalate_ns = sim.now_ns() - t0;
+    assert!(err.to_string().contains("escalated"));
+    println!(
+        "silence -> escalation: {:.3} ms virtual ({} timeouts)",
+        escalate_ns as f64 / 1e6,
+        sim.wire_stats().scp_timeouts
+    );
+    root.insert("escalation_virtual_ns".to_string(), Json::Num(escalate_ns as f64));
+    root.insert(
+        "escalation_timeouts".to_string(),
+        Json::Num(sim.wire_stats().scp_timeouts as f64),
+    );
+
+    // ---- escalation -> heal: a board dies under a supervised run -------
+    let spec = MachineSpec::Boards(3);
+    let template = spec.template();
+    let boards: Vec<ChipCoord> = template.ethernet_chips().map(|c| (c.x, c.y)).collect();
+    let root_board = boards[0];
+    let banished: Vec<ChipCoord> = template
+        .chip_coords()
+        .filter(|c| template.nearest_ethernet(*c) == Some(root_board) && *c != root_board)
+        .collect();
+    let boot = BootFaults { chips: banished, ..Default::default() };
+    let supervision = SupervisorConfig {
+        poll_interval_ticks: 1,
+        policy: HealPolicy::Remap,
+        max_heals: 4,
+    };
+    // Probe for a used non-root board.
+    let dark = {
+        let mut probe =
+            SpiNNTools::new(ToolsConfig::new(spec).with_boot_faults(boot.clone())).unwrap();
+        let ids = build_grid(&mut probe);
+        probe.run_ticks(1).unwrap();
+        let mapping = probe.mapping().unwrap();
+        ids.iter()
+            .filter_map(|v| mapping.placement(*v))
+            .filter_map(|loc| template.nearest_ethernet(loc.chip()))
+            .find(|b| *b != root_board)
+            .expect("workload spans a non-root board")
+    };
+    let t = Instant::now();
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(spec)
+            .with_boot_faults(boot)
+            .with_supervision(supervision),
+    )
+    .unwrap();
+    build_grid(&mut tools);
+    tools.inject_chaos(
+        ChaosPlan::new().with(2, Fault::BoardSilent { board: dark, duration_ns: u64::MAX }),
+    );
+    tools.run_ticks(TICKS)?;
+    let run_ms = t.elapsed().as_secs_f64() * 1e3;
+    let heals = tools.heal_reports();
+    assert_eq!(heals.len(), 1, "expected exactly one heal");
+    let heal = &heals[0];
+    println!(
+        "silent board {dark:?}: healed in {:.1} ms ({} vertices moved, whole run {run_ms:.1} ms)",
+        heal.heal_elapsed_us as f64 / 1e3,
+        heal.vertices_moved
+    );
+    root.insert("heal_elapsed_us".to_string(), Json::Num(heal.heal_elapsed_us as f64));
+    root.insert("heal_map_us".to_string(), Json::Num(heal.map_elapsed_us as f64));
+    root.insert("heal_vertices_moved".to_string(), Json::Num(heal.vertices_moved as f64));
+    root.insert("heal_run_wall_ms".to_string(), Json::Num(run_ms));
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_wire.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
+    Ok(())
+}

@@ -129,6 +129,12 @@ fn write_fault(w: &mut ByteWriter, fault: &Fault) {
         Fault::LinkDeath(c, d) => {
             w.u8(3).u32(c.0).u32(c.1).u8(d.id());
         }
+        Fault::LinkBrownout { board, loss_permille, duration_ns } => {
+            w.u8(4).u32(board.0).u32(board.1).u16(*loss_permille).u64(*duration_ns);
+        }
+        Fault::BoardSilent { board, duration_ns } => {
+            w.u8(5).u32(board.0).u32(board.1).u64(*duration_ns);
+        }
     }
 }
 
@@ -146,6 +152,12 @@ fn read_fault(r: &mut ByteReader) -> anyhow::Result<Fault> {
                 .ok_or_else(|| anyhow::anyhow!("bad direction id {id} in snapshot"))?;
             Fault::LinkDeath(c, d)
         }
+        4 => Fault::LinkBrownout {
+            board: (r.u32()?, r.u32()?),
+            loss_permille: r.u16()?,
+            duration_ns: r.u64()?,
+        },
+        5 => Fault::BoardSilent { board: (r.u32()?, r.u32()?), duration_ns: r.u64()? },
         t => anyhow::bail!("bad fault tag {t} in snapshot"),
     })
 }

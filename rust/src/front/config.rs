@@ -264,6 +264,15 @@ impl ToolsConfig {
         self
     }
 
+    /// Run every host↔machine exchange over a seeded unreliable wire
+    /// (frame loss, duplication, reordering, jitter — DESIGN.md §10).
+    /// The reliable transport must make results byte-identical to a
+    /// clean-wire run; `WireFaults::none()` restores the clean wire.
+    pub fn with_wire_faults(mut self, faults: crate::simulator::WireFaults) -> Self {
+        self.sim.wire.faults = faults;
+        self
+    }
+
     /// Enable periodic run snapshots (DESIGN.md §9, E15).
     pub fn with_checkpoint(
         mut self,

@@ -53,8 +53,11 @@ pub const STREAM_KEY_BASE: u32 = 0xFF00_0000;
 /// the whole plane as flow-controlled, never dropped).
 pub const DATA_IN_KEY_BASE: u32 = 0xFF80_0000;
 
-/// Re-request rounds before a transfer is declared failed.
-const MAX_ATTEMPTS: u32 = 3;
+/// Re-request rounds before a transfer is declared failed, from the
+/// wire configuration (always at least one round).
+fn retry_rounds(sim: &SimMachine) -> u32 {
+    sim.config.wire.bulk_retry_rounds.max(1)
+}
 
 /// Installation options for the bulk data plane.
 #[derive(Debug, Clone)]
@@ -131,9 +134,15 @@ pub struct FastPath {
 /// board: the dispatcher must have fanned a frame's words onto the
 /// fabric before the next frame arrives, or two streams' words would
 /// interleave at their writers. 64 words + header at the core's packet
-/// emission spacing, plus margin.
+/// emission spacing, plus margin. An unreliable wire widens the gap by
+/// the worst-case delivery skew (latency jitter plus the duplicate
+/// reordering window on each side) so a delayed frame still lands
+/// before its successor's fan-out begins.
 fn dispatch_frame_gap_ns(sim: &SimMachine) -> u64 {
+    let f = &sim.config.wire.faults;
     (bulk::WORDS_PER_FRAME as u64 + 4) * sim.config.send_spacing_ns.max(1)
+        + f.jitter_ns
+        + 2 * f.reorder_window_ns
 }
 
 impl FastPath {
@@ -401,7 +410,8 @@ impl FastPath {
     // -- extraction (machine -> host) ----------------------------------------
 
     /// Read `len` bytes from `addr` on `chip` through the stream
-    /// protocol, re-requesting missing frames up to 3 times.
+    /// protocol, re-requesting missing frames for up to
+    /// `wire.bulk_retry_rounds` rounds.
     pub fn read(
         &self,
         sim: &mut SimMachine,
@@ -437,10 +447,23 @@ impl FastPath {
         ))?;
         sim.run_until_idle()?;
         let mut frames = filter_dropped(sim.take_host_udp(port), 0, &mut drop);
-        for attempt in 1..=MAX_ATTEMPTS {
+        for attempt in 1..=retry_rounds(sim) {
             let (data, missing) = speedup::reassemble(&frames, len);
             if missing.is_empty() {
                 return Ok(data);
+            }
+            if frames.is_empty() {
+                // Nothing arrived at all: the read command itself was
+                // lost on the wire, so the gatherer never saw the stream
+                // header and a re-request could not flush a partial last
+                // frame. Replay the whole command instead.
+                sim.host_send_sdp(SdpMessage::new(
+                    header,
+                    speedup::encode_read_command(addr, len as u32),
+                ))?;
+                sim.run_until_idle()?;
+                frames.extend(filter_dropped(sim.take_host_udp(port), attempt, &mut drop));
+                continue;
             }
             // "The missing sequences are then requested again" (§6.8),
             // batched to fit the SDP payload limit.
@@ -569,6 +592,7 @@ impl FastPath {
             bulk::encode_write_command(addr, data.len() as u32),
         ))?;
         sim.run_until_idle()?;
+        self.ensure_session(sim, chip, addr, data.len())?;
         let frame_gap = dispatch_frame_gap_ns(sim);
         let mut slot = 0u64;
         for seq in 0..bulk::frames_of(data.len()) as u32 {
@@ -588,8 +612,70 @@ impl FastPath {
         self.finish_write(sim, chip, data, &mut drop, &mut stats)
     }
 
+    /// Confirm a writer actually holds the session the host just opened.
+    ///
+    /// The session-open command crosses the unreliable wire like any
+    /// other frame: if it is lost, the writer holds no (or a stale,
+    /// fully-acknowledged) session, and a later missing-sequence query
+    /// would report "nothing missing" for data that was never written —
+    /// a silently corrupt load. A freshly opened session is
+    /// unmistakable: every one of its frames is still missing. Anything
+    /// else means the command was lost, so re-send it, bounded by
+    /// `wire.bulk_retry_rounds`. The clean wire cannot lose the command
+    /// and skips the check entirely (keeping its timing identical).
+    fn ensure_session(
+        &self,
+        sim: &mut SimMachine,
+        chip: ChipCoord,
+        addr: u32,
+        len: usize,
+    ) -> anyhow::Result<()> {
+        if !sim.wire_active() {
+            return Ok(());
+        }
+        let (writer, _) = self.writers[&chip];
+        let (board, plane) = self.plane_of(sim, chip)?;
+        let port = plane
+            .data_in
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no data-in dispatcher on board {board:?}"))?
+            .port;
+        let total = bulk::frames_of(len) as u32;
+        for _ in 0..retry_rounds(sim) {
+            sim.host_send_sdp(SdpMessage::new(
+                SdpHeader::to_core(writer, WRITER_SDP_PORT),
+                bulk::encode_check_command(),
+            ))?;
+            sim.run_until_idle()?;
+            // Every report frame of one reply carries the same claimed
+            // missing total, so a single surviving frame settles the
+            // question — no need for the whole set to cross the wire.
+            let mut claimed = None;
+            for m in &sim.take_host_udp(port) {
+                claimed = Some(bulk::decode_missing_report(m)?.0);
+            }
+            match claimed {
+                // All frames of a fresh session are still missing.
+                Some(t) if t == total => return Ok(()),
+                // No session (or a stale, fully-acked one): re-open.
+                Some(_) => {
+                    sim.host_send_sdp(SdpMessage::new(
+                        SdpHeader::to_core(writer, WRITER_SDP_PORT),
+                        bulk::encode_write_command(addr, len as u32),
+                    ))?;
+                    sim.run_until_idle()?;
+                }
+                // Check command or every report frame lost: ask again.
+                None => {}
+            }
+        }
+        anyhow::bail!("write session to {chip:?} could not be opened after retries")
+    }
+
     /// Drive one open write session to completion: query the writer for
-    /// missing sequences and re-send them, up to [`MAX_ATTEMPTS`] rounds.
+    /// missing sequences and re-send them, up to `wire.bulk_retry_rounds`
+    /// rounds. A bounded loop: exhaustion surfaces a transport error
+    /// rather than retrying forever.
     fn finish_write(
         &self,
         sim: &mut SimMachine,
@@ -600,9 +686,13 @@ impl FastPath {
     ) -> anyhow::Result<WriteStats> {
         let (writer, key) = self.writers[&chip];
         let (board, plane) = self.plane_of(sim, chip)?;
-        let port = plane.data_in.as_ref().expect("session implies dispatcher").port;
+        let port = plane
+            .data_in
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no data-in dispatcher on board {board:?}"))?
+            .port;
         let frame_gap = dispatch_frame_gap_ns(sim);
-        for attempt in 1..=MAX_ATTEMPTS {
+        for attempt in 1..=retry_rounds(sim) {
             let missing = self.query_missing(sim, writer, port)?;
             if missing.is_empty() {
                 return Ok(*stats);
@@ -636,33 +726,48 @@ impl FastPath {
     }
 
     /// Ask a writer for the missing sequences of its current session.
+    ///
+    /// The report itself crosses the unreliable wire: a lost report
+    /// frame truncates the sequence set and a duplicated check command
+    /// (or report frame) repeats it, so the query re-asks — bounded by
+    /// `wire.bulk_retry_rounds` — until a self-consistent report arrives,
+    /// deduplicating repeated sequences along the way.
     fn query_missing(
         &self,
         sim: &mut SimMachine,
         writer: CoreLocation,
         port: u16,
     ) -> anyhow::Result<Vec<u32>> {
-        sim.host_send_sdp(SdpMessage::new(
-            SdpHeader::to_core(writer, WRITER_SDP_PORT),
-            bulk::encode_check_command(),
-        ))?;
-        sim.run_until_idle()?;
-        let msgs = sim.take_host_udp(port);
-        anyhow::ensure!(!msgs.is_empty(), "no missing-sequence report from {writer}");
-        let mut total = 0u32;
-        let mut seqs = Vec::new();
-        for m in &msgs {
-            let (t, s) = bulk::decode_missing_report(m)?;
-            total = t;
-            seqs.extend(s);
+        let mut last_err = None;
+        for _ in 0..retry_rounds(sim) {
+            sim.host_send_sdp(SdpMessage::new(
+                SdpHeader::to_core(writer, WRITER_SDP_PORT),
+                bulk::encode_check_command(),
+            ))?;
+            sim.run_until_idle()?;
+            let msgs = sim.take_host_udp(port);
+            if msgs.is_empty() {
+                last_err = Some(anyhow::anyhow!("no missing-sequence report from {writer}"));
+                continue;
+            }
+            let mut total = 0u32;
+            let mut seqs = Vec::new();
+            for m in &msgs {
+                let (t, s) = bulk::decode_missing_report(m)?;
+                total = t;
+                seqs.extend(s);
+            }
+            seqs.sort_unstable();
+            seqs.dedup();
+            if seqs.len() == total as usize {
+                return Ok(seqs);
+            }
+            last_err = Some(anyhow::anyhow!(
+                "incomplete missing-sequence report ({} of {total}) from {writer}",
+                seqs.len()
+            ));
         }
-        anyhow::ensure!(
-            seqs.len() == total as usize,
-            "incomplete missing-sequence report ({} of {total})",
-            seqs.len()
-        );
-        seqs.sort_unstable();
-        Ok(seqs)
+        Err(last_err.expect("retry_rounds is at least 1"))
     }
 
     /// Write a batch of transfers through the data-in streams. Transfers
@@ -722,6 +827,10 @@ impl FastPath {
             ))?;
         }
         sim.run_until_idle()?;
+        for &idx in wave {
+            let (chip, addr, data) = reqs[idx];
+            self.ensure_session(sim, chip, addr, data.len())?;
+        }
         // Lay the frame schedule out as future events: per-board cursors
         // keep one board's frames a dispatcher-window apart, the host
         // cursor models NIC serialisation across boards. One
@@ -743,7 +852,13 @@ impl FastPath {
             cursors.push(Cursor {
                 idx,
                 board,
-                port: plane.data_in.as_ref().expect("checked in write_many").port,
+                port: plane
+                    .data_in
+                    .as_ref()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no data-in dispatcher on board {board:?}")
+                    })?
+                    .port,
                 key: self.writers[&chip].1,
                 next: 0,
                 frames: bulk::frames_of(data.len()) as u32,

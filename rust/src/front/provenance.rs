@@ -3,7 +3,7 @@
 use std::collections::BTreeMap;
 
 use crate::machine::{ChipCoord, CoreLocation};
-use crate::simulator::{scamp, CoreState, RouterStats, SimMachine};
+use crate::simulator::{scamp, CoreState, RouterStats, SimMachine, WireStats};
 
 /// One core's provenance.
 #[derive(Debug, Clone)]
@@ -87,6 +87,10 @@ pub struct HealReport {
     /// `None` when checkpointing is off — the restart replayed the
     /// whole history from tick 0.
     pub restored_from_tick: Option<u64>,
+    /// Host-link transport counters at the moment of the heal: how many
+    /// timeouts/retries/escalations the reliable wire layer absorbed
+    /// before (and while) this failure was repaired.
+    pub wire: WireStats,
 }
 
 /// The whole-run provenance report.
@@ -101,6 +105,10 @@ pub struct ProvenanceReport {
     pub remap: Option<RemapReport>,
     /// Every self-healing pass of the current run state, in order.
     pub heals: Vec<HealReport>,
+    /// Host-link transport counters for the whole run: a lossless wire
+    /// reports all-zero; retries/timeouts/escalations quantify what the
+    /// reliable transport absorbed.
+    pub wire: WireStats,
 }
 
 impl ProvenanceReport {
@@ -160,6 +168,13 @@ impl ProvenanceReport {
                 }
                 report.routers.insert(chip, stats);
             }
+        }
+        report.wire = sim.wire_stats();
+        if report.wire.escalations > 0 {
+            report.anomalies.push(format!(
+                "host link escalations: {} board(s) went silent past the SCP retry budget",
+                report.wire.escalations
+            ));
         }
         report
     }

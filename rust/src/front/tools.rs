@@ -1599,6 +1599,15 @@ impl SpiNNTools {
                         .to_string(),
                 );
             }
+            // Boards whose host link escalated (or sits in a silent
+            // chaos episode) are powered off before re-discovery: every
+            // chip on the board becomes an ordinary dead chip, so the
+            // existing forbidden-resource machinery — placement, routing,
+            // rediscovery exclusion, core silencing — maps around the
+            // dark board exactly as it does around chip death.
+            for board in state.sim.wire_unreachable_boards() {
+                state.sim.power_off_board(board)?;
+            }
             // Re-discover while the failed cores still show their failed
             // states (the persistent quarantine covers later heals, after
             // unloading has reset them to Idle).
@@ -1652,6 +1661,7 @@ impl SpiNNTools {
             stages_cached: summary.stages_cached,
             stages_rerun: summary.stages_rerun,
             restored_from_tick: restore.as_ref().map(|s| s.tick),
+            wire: state.sim.wire_stats(),
         });
         Ok(())
     }

@@ -34,6 +34,20 @@ pub enum Fault {
     /// One inter-chip link dies (both directions). Packets routed over
     /// it are gone for good — reinjection replays into the same void.
     LinkDeath(ChipCoord, Direction),
+    /// The *host* link of one board degrades: for `duration_ns` every
+    /// UDP frame between the host and `board`'s Ethernet chip suffers an
+    /// extra `loss_permille` loss on top of the base wire-fault plan.
+    /// The fabric itself is untouched — only host traffic suffers.
+    LinkBrownout {
+        board: ChipCoord,
+        loss_permille: u16,
+        duration_ns: u64,
+    },
+    /// The board's host link goes completely dark for `duration_ns`
+    /// (`u64::MAX` = permanently): no frame crosses in either direction.
+    /// The reliable SCP layer retries, backs off, and finally escalates
+    /// the board to the supervisor/heal path.
+    BoardSilent { board: ChipCoord, duration_ns: u64 },
 }
 
 impl std::fmt::Display for Fault {
@@ -43,6 +57,17 @@ impl std::fmt::Display for Fault {
             Fault::CoreStall(loc) => write!(f, "core {loc} stalled (watchdog)"),
             Fault::ChipDeath(c) => write!(f, "chip {c:?} died"),
             Fault::LinkDeath(c, d) => write!(f, "link {c:?}/{d:?} died"),
+            Fault::LinkBrownout { board, loss_permille, duration_ns } => write!(
+                f,
+                "host link of board {board:?} browned out ({loss_permille}‰ loss for {duration_ns} ns)"
+            ),
+            Fault::BoardSilent { board, duration_ns } => {
+                if *duration_ns == u64::MAX {
+                    write!(f, "host link of board {board:?} silent (permanently)")
+                } else {
+                    write!(f, "host link of board {board:?} silent for {duration_ns} ns")
+                }
+            }
         }
     }
 }
@@ -161,6 +186,9 @@ mod tests {
                 Fault::CoreRte(l) | Fault::CoreStall(l) => l.chip(),
                 Fault::ChipDeath(c) => *c,
                 Fault::LinkDeath(c, _) => *c,
+                // Wire faults target the host link, never drawn by
+                // single_random (they are scheduled explicitly).
+                Fault::LinkBrownout { board, .. } | Fault::BoardSilent { board, .. } => *board,
             };
             let chip = m.chip(chip_of(&ev.fault)).expect("fault targets a real chip");
             assert!(!chip.is_ethernet(), "must not target the Ethernet chip");
@@ -181,6 +209,9 @@ mod tests {
                 Fault::CoreStall(_) => kinds[1] = true,
                 Fault::ChipDeath(_) => kinds[2] = true,
                 Fault::LinkDeath(_, _) => kinds[3] = true,
+                Fault::LinkBrownout { .. } | Fault::BoardSilent { .. } => {
+                    panic!("single_random never draws wire faults")
+                }
             }
         }
         assert!(kinds.iter().all(|k| *k), "kinds seen: {kinds:?}");

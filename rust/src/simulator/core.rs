@@ -230,6 +230,10 @@ pub(crate) struct SimCore {
     pub ticks_done: u64,
     /// Target tick count for the current run cycle.
     pub run_until: u64,
+    /// The core's transmitter is busy until this time: callbacks that
+    /// overlap an earlier callback's paced packet train queue behind it
+    /// instead of interleaving with it (see `SimMachine::with_core_app`).
+    pub tx_busy_ns: u64,
 }
 
 impl SimCore {
@@ -244,6 +248,7 @@ impl SimCore {
             iobuf: String::new(),
             ticks_done: 0,
             run_until: 0,
+            tx_busy_ns: 0,
         }
     }
 }

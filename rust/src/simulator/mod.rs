@@ -33,11 +33,12 @@ pub use self::core::{CoreApp, CoreCtx, CoreState, RecordingChannel};
 pub use chaos::{ChaosEvent, ChaosPlan, Fault};
 pub use sdram::{SdramStore, SDRAM_BASE};
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::machine::router::{PacketSource, Route, RouteCache, RoutingDecision, RoutingTable};
 use crate::machine::{Chip, ChipCoord, CoreLocation, Direction, Machine, ALL_DIRECTIONS};
 use crate::transport::SdpMessage;
+use crate::util::SplitMix64;
 
 use self::core::SimCore;
 use self::queue::{CalendarQueue, EventQueue, HeapQueue};
@@ -85,6 +86,17 @@ pub struct WireModel {
     /// `front::extraction`). 5 µs/frame ≈ 400 Mb/s ≈ gigabit Ethernet
     /// with headroom.
     pub host_udp_gap_ns: u64,
+    /// Per-request timeout before the host's reliable SCP layer
+    /// retransmits (SpiNNMan uses 1 s wall-clock; virtual time here).
+    pub scp_timeout_ns: u64,
+    /// Retransmissions per SCP request before the board is declared
+    /// silent and escalated to the supervisor/heal path.
+    pub scp_retries: u32,
+    /// Re-request/retransmission rounds in the bulk data plane
+    /// (`front::extraction`) before a transport error is surfaced.
+    pub bulk_retry_rounds: u32,
+    /// Seeded fault plan applied to every host↔machine UDP frame.
+    pub faults: WireFaults,
 }
 
 impl Default for WireModel {
@@ -98,8 +110,157 @@ impl Default for WireModel {
             udp_frame_ns: 50_000,
             scp_pipeline_window: 8,
             host_udp_gap_ns: 5_000,
+            scp_timeout_ns: 1_000_000,
+            scp_retries: 8,
+            bulk_retry_rounds: 8,
+            faults: WireFaults::none(),
         }
     }
+}
+
+/// Seeded fault plan for the host↔machine wire: the UDP leg between the
+/// tools and the board Ethernet chips loses, duplicates, reorders and
+/// delays frames. Probabilities are in permille (integer — the plan is
+/// embedded in `Eq` types like [`chaos::Fault`]) and drawn from a
+/// deterministic [`crate::util::SplitMix64`] stream seeded at boot, so a
+/// given (seed, workload) pair always observes the same fault pattern.
+/// The all-zero plan is the default and takes a draw-free fast path that
+/// leaves timing bit-identical to a faultless build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireFaults {
+    /// RNG seed for the fault stream.
+    pub seed: u64,
+    /// Host→machine frame loss probability, permille.
+    pub loss_h2m_permille: u16,
+    /// Machine→host frame loss probability, permille.
+    pub loss_m2h_permille: u16,
+    /// Host→machine frame duplication probability, permille.
+    pub dup_h2m_permille: u16,
+    /// Machine→host frame duplication probability, permille.
+    pub dup_m2h_permille: u16,
+    /// Frames are delayed by up to this much extra (uniform), which
+    /// reorders frames relative to each other.
+    pub reorder_window_ns: u64,
+    /// Additional per-frame latency jitter (uniform in `[0, jitter]`).
+    pub jitter_ns: u64,
+}
+
+impl WireFaults {
+    /// A perfect wire (the default): no draws, no overhead.
+    pub fn none() -> Self {
+        Self {
+            seed: 0,
+            loss_h2m_permille: 0,
+            loss_m2h_permille: 0,
+            dup_h2m_permille: 0,
+            dup_m2h_permille: 0,
+            reorder_window_ns: 0,
+            jitter_ns: 0,
+        }
+    }
+
+    /// Symmetric loss-only plan.
+    pub fn lossy(seed: u64, loss_permille: u16) -> Self {
+        Self {
+            seed,
+            loss_h2m_permille: loss_permille,
+            loss_m2h_permille: loss_permille,
+            ..Self::none()
+        }
+    }
+
+    /// The adversarial plan used by the CI `WIRE_SEED` matrix: 5% loss
+    /// each way, 2% duplication, 20 µs reordering window, 5 µs jitter.
+    pub fn from_seed(seed: u64) -> Self {
+        Self {
+            seed,
+            loss_h2m_permille: 50,
+            loss_m2h_permille: 50,
+            dup_h2m_permille: 20,
+            dup_m2h_permille: 20,
+            reorder_window_ns: 20_000,
+            jitter_ns: 5_000,
+        }
+    }
+
+    /// True when no fault can ever fire (the zero-overhead fast path).
+    pub fn is_clean(&self) -> bool {
+        self.loss_h2m_permille == 0
+            && self.loss_m2h_permille == 0
+            && self.dup_h2m_permille == 0
+            && self.dup_m2h_permille == 0
+            && self.reorder_window_ns == 0
+            && self.jitter_ns == 0
+    }
+}
+
+impl Default for WireFaults {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Per-run counters of the reliable transport layer, surfaced in
+/// provenance and in each `HealReport`. On a clean wire every field
+/// stays zero (asserted by `tests/wire.rs` and E16). Integer-only so it
+/// can ride in `Eq` report types.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// UDP frames eaten by the wire (either direction).
+    pub frames_lost: u64,
+    /// UDP frames the wire delivered twice.
+    pub frames_duplicated: u64,
+    /// UDP frames delivered late (jitter/reorder draw > 0).
+    pub frames_delayed: u64,
+    /// SCP requests that timed out awaiting a reply.
+    pub scp_timeouts: u64,
+    /// SCP retransmissions issued after a timeout.
+    pub scp_retries: u64,
+    /// Duplicate SCP replies discarded by the host's sequence check.
+    pub dup_replies_dropped: u64,
+    /// Duplicate SCP commands discarded by SCAMP's sequence check —
+    /// what keeps non-idempotent ops (alloc, signal) exactly-once.
+    pub dup_commands_dropped: u64,
+    /// Virtual time spent in timeout + exponential backoff.
+    pub backoff_wait_ns: u64,
+    /// Boards declared silent after the retry budget exhausted.
+    pub escalations: u64,
+}
+
+/// Direction of a host↔machine UDP frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WireDirection {
+    HostToMachine,
+    MachineToHost,
+}
+
+/// A scheduled wire degradation episode on one board's host link
+/// (installed by [`chaos::Fault::LinkBrownout`] / `BoardSilent`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WireEpisodeKind {
+    /// Extra frame loss on top of the base plan.
+    Brownout { loss_permille: u16 },
+    /// The board answers nothing at all.
+    Silent,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct WireEpisode {
+    pub board: ChipCoord,
+    pub from_ns: u64,
+    /// `u64::MAX` = until further notice.
+    pub until_ns: u64,
+    pub kind: WireEpisodeKind,
+}
+
+/// Outcome of one SCP request/response attempt on a faulty wire (see
+/// [`SimMachine::wire_scp_attempt`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ScpAttempt {
+    /// The command reached SCAMP on this attempt.
+    pub delivered: bool,
+    /// The reply made it back to the host.
+    pub replied: bool,
 }
 
 /// Simulator configuration.
@@ -526,6 +687,16 @@ pub struct SimMachine {
     /// callback allocations disappear from the hot path.
     scratch_mc: Vec<(u32, Option<u32>)>,
     scratch_sdp: Vec<SdpMessage>,
+    /// Deterministic stream the wire-fault plan draws from. Touched only
+    /// when a fault can actually fire — a clean wire is draw-free.
+    wire_rng: SplitMix64,
+    /// Link degradation episodes installed by chaos faults.
+    wire_episodes: Vec<WireEpisode>,
+    /// Boards whose SCP retry budget exhausted: the host treats them as
+    /// unreachable until the heal path powers them off.
+    wire_escalated: BTreeSet<ChipCoord>,
+    /// Reliable-transport counters (see [`WireStats`]).
+    wire_stats: WireStats,
 }
 
 impl SimMachine {
@@ -543,6 +714,7 @@ impl SimMachine {
             .filter(|c| c.is_virtual)
             .map(|c| ((c.x, c.y), Vec::new()))
             .collect();
+        let wire_rng = SplitMix64::new(config.wire.faults.seed ^ 0x5A17_E00D);
         Self {
             machine,
             config,
@@ -555,6 +727,10 @@ impl SimMachine {
             fault_log: Vec::new(),
             scratch_mc: Vec::new(),
             scratch_sdp: Vec::new(),
+            wire_rng,
+            wire_episodes: Vec::new(),
+            wire_escalated: BTreeSet::new(),
+            wire_stats: WireStats::default(),
         }
     }
 
@@ -607,6 +783,198 @@ impl SimMachine {
                 _ => None,
             })
             .collect()
+    }
+
+    // -- the unreliable wire (seeded host-link faults, E16) -------------
+
+    /// Reliable-transport counters for this run so far.
+    pub fn wire_stats(&self) -> WireStats {
+        self.wire_stats
+    }
+
+    pub(crate) fn wire_stats_mut(&mut self) -> &mut WireStats {
+        &mut self.wire_stats
+    }
+
+    /// True when any wire fault can fire; the clean wire skips every
+    /// draw so fault-free runs are timing-identical to a faultless
+    /// build (`legacy_fabric_is_byte_identical` pins this).
+    pub(crate) fn wire_active(&self) -> bool {
+        !self.config.wire.faults.is_clean()
+            || !self.wire_episodes.is_empty()
+            || !self.wire_escalated.is_empty()
+    }
+
+    /// Is `board`'s host link answering nothing at `at_ns`?
+    pub(crate) fn wire_board_silent(&self, board: ChipCoord, at_ns: u64) -> bool {
+        self.wire_escalated.contains(&board)
+            || self.wire_episodes.iter().any(|e| {
+                e.board == board
+                    && matches!(e.kind, WireEpisodeKind::Silent)
+                    && e.from_ns <= at_ns
+                    && at_ns < e.until_ns
+            })
+    }
+
+    /// Effective frame-loss probability (permille) on `board`'s link.
+    fn wire_loss_permille(&self, board: ChipCoord, at_ns: u64, dir: WireDirection) -> u64 {
+        let f = &self.config.wire.faults;
+        let base = match dir {
+            WireDirection::HostToMachine => f.loss_h2m_permille,
+            WireDirection::MachineToHost => f.loss_m2h_permille,
+        } as u64;
+        let brown: u64 = self
+            .wire_episodes
+            .iter()
+            .filter(|e| e.board == board && e.from_ns <= at_ns && at_ns < e.until_ns)
+            .map(|e| match e.kind {
+                WireEpisodeKind::Brownout { loss_permille } => loss_permille as u64,
+                WireEpisodeKind::Silent => 0, // handled by wire_board_silent
+            })
+            .sum();
+        (base + brown).min(1000)
+    }
+
+    /// Can the host currently talk to `c` at all? True only for chips
+    /// behind a silent or escalated board — ordinary frame loss is
+    /// recoverable and does not make a chip unreachable.
+    pub fn host_unreachable(&self, c: ChipCoord) -> bool {
+        match self.machine.nearest_ethernet(c) {
+            Some(board) => self.wire_board_silent(board, self.time_ns),
+            None => false,
+        }
+    }
+
+    /// Boards the host currently cannot reach (escalated, or inside a
+    /// silent episode) — what the heal path powers off and maps around.
+    pub fn wire_unreachable_boards(&self) -> BTreeSet<ChipCoord> {
+        let now = self.time_ns;
+        let mut out = self.wire_escalated.clone();
+        for e in &self.wire_episodes {
+            if matches!(e.kind, WireEpisodeKind::Silent) && e.from_ns <= now && now < e.until_ns {
+                out.insert(e.board);
+            }
+        }
+        out
+    }
+
+    /// Record that `board` exhausted its SCP retry budget: from now on
+    /// the host treats every chip behind it as unreachable, which the
+    /// supervisor observes as missing cores and converts into a heal.
+    pub(crate) fn note_wire_escalation(&mut self, board: ChipCoord) {
+        if self.wire_escalated.insert(board) {
+            self.wire_stats.escalations += 1;
+        }
+    }
+
+    /// Power a host-unreachable board off (the allocator's response to a
+    /// dead host link): every chip on the board dies, so placement,
+    /// routing and re-discovery treat it exactly like chip death.
+    pub fn power_off_board(&mut self, board: ChipCoord) -> anyhow::Result<()> {
+        let chips: Vec<ChipCoord> = self
+            .machine
+            .chip_coords()
+            .filter(|c| self.machine.nearest_ethernet(*c) == Some(board))
+            .collect();
+        for c in chips {
+            self.apply_fault(Fault::ChipDeath(c))?;
+        }
+        self.wire_escalated.remove(&board);
+        Ok(())
+    }
+
+    /// The wire's verdict for one host↔machine UDP frame leaving at
+    /// `base_ns`: up to two delivery times (none = lost, two = the wire
+    /// duplicated it). The clean wire answers without consuming a draw.
+    fn wire_frame_times(
+        &mut self,
+        board: ChipCoord,
+        dir: WireDirection,
+        base_ns: u64,
+    ) -> ([u64; 2], usize) {
+        if !self.wire_active() {
+            return ([base_ns, 0], 1);
+        }
+        if self.wire_board_silent(board, base_ns) {
+            self.wire_stats.frames_lost += 1;
+            return ([0, 0], 0);
+        }
+        let loss = self.wire_loss_permille(board, base_ns, dir);
+        if loss > 0 && (self.wire_rng.below(1000) as u64) < loss {
+            self.wire_stats.frames_lost += 1;
+            return ([0, 0], 0);
+        }
+        let f = self.config.wire.faults;
+        let spread = f.jitter_ns + f.reorder_window_ns;
+        let mut t = base_ns;
+        if spread > 0 {
+            let d = self.wire_rng.below(spread as usize + 1) as u64;
+            if d > 0 {
+                self.wire_stats.frames_delayed += 1;
+            }
+            t += d;
+        }
+        let dup = match dir {
+            WireDirection::HostToMachine => f.dup_h2m_permille,
+            WireDirection::MachineToHost => f.dup_m2h_permille,
+        } as u64;
+        if dup > 0 && (self.wire_rng.below(1000) as u64) < dup {
+            self.wire_stats.frames_duplicated += 1;
+            // The copy trails the original by at least 1 ns (so the
+            // receiver sees original-then-copy) and at most the spread.
+            let lag = 1 + self.wire_rng.below(spread.max(1) as usize) as u64;
+            return ([t, t + lag], 2);
+        }
+        ([t, 0], 1)
+    }
+
+    /// The wire's verdict on one SCP request/response attempt against
+    /// `board` at the current host time (the synchronous-cost-model twin
+    /// of [`Self::wire_frame_times`], used by `scamp`'s reliable
+    /// exchange). Draws and counts loss and duplication for both legs;
+    /// duplicates are recorded as dropped by the respective sequence
+    /// check, never surfaced. `delivered_before` means an earlier
+    /// attempt of the same request reached SCAMP (its reply was lost) —
+    /// the retransmission is then counted against SCAMP's
+    /// duplicate-command check, which is what keeps non-idempotent
+    /// operations exactly-once.
+    pub(crate) fn wire_scp_attempt(
+        &mut self,
+        board: ChipCoord,
+        delivered_before: bool,
+    ) -> ScpAttempt {
+        let now = self.time_ns;
+        if self.wire_board_silent(board, now) {
+            return ScpAttempt { delivered: false, replied: false };
+        }
+        let f = self.config.wire.faults;
+        let loss_req = self.wire_loss_permille(board, now, WireDirection::HostToMachine);
+        if loss_req > 0 && (self.wire_rng.below(1000) as u64) < loss_req {
+            self.wire_stats.frames_lost += 1;
+            return ScpAttempt { delivered: false, replied: false };
+        }
+        if delivered_before {
+            self.wire_stats.dup_commands_dropped += 1;
+        }
+        if f.dup_h2m_permille > 0
+            && (self.wire_rng.below(1000) as u64) < f.dup_h2m_permille as u64
+        {
+            // The wire duplicated the command; SCAMP's check eats it.
+            self.wire_stats.frames_duplicated += 1;
+            self.wire_stats.dup_commands_dropped += 1;
+        }
+        let loss_rep = self.wire_loss_permille(board, now, WireDirection::MachineToHost);
+        if loss_rep > 0 && (self.wire_rng.below(1000) as u64) < loss_rep {
+            self.wire_stats.frames_lost += 1;
+            return ScpAttempt { delivered: true, replied: false };
+        }
+        if f.dup_m2h_permille > 0
+            && (self.wire_rng.below(1000) as u64) < f.dup_m2h_permille as u64
+        {
+            self.wire_stats.frames_duplicated += 1;
+            self.wire_stats.dup_replies_dropped += 1;
+        }
+        ScpAttempt { delivered: true, replied: true }
     }
 
     /// Apply one fault to the live machine, immediately. Chip and link
@@ -662,6 +1030,22 @@ impl SimMachine {
                 if let Some(n) = target {
                     self.store.kill_link_slot(n, d.opposite());
                 }
+            }
+            Fault::LinkBrownout { board, loss_permille, duration_ns } => {
+                self.wire_episodes.push(WireEpisode {
+                    board: *board,
+                    from_ns: now,
+                    until_ns: now.saturating_add(*duration_ns),
+                    kind: WireEpisodeKind::Brownout { loss_permille: *loss_permille },
+                });
+            }
+            Fault::BoardSilent { board, duration_ns } => {
+                self.wire_episodes.push(WireEpisode {
+                    board: *board,
+                    from_ns: now,
+                    until_ns: now.saturating_add(*duration_ns),
+                    kind: WireEpisodeKind::Silent,
+                });
             }
         }
         self.fault_log.push((now, fault));
@@ -1033,10 +1417,26 @@ impl SimMachine {
             }
         }
         // Flush outboxes. Successive packets from one callback are
-        // spaced out as the core would actually produce them.
+        // spaced out as the core would actually produce them, and the
+        // core's transmitter is serialised *across* callbacks: when a
+        // second callback fires while an earlier one's packets are still
+        // being issued (a duplicated wire command re-triggering a bulk
+        // stream, say), its packets queue behind them rather than
+        // interleaving mid-stream. With no overlap — every workload on a
+        // clean wire — `start == time_ns` and timing is unchanged.
         let spacing = self.config.send_spacing_ns;
-        for (i, (key, payload)) in mc_out.drain(..).enumerate() {
-            self.inject_mc_after(loc, key, payload, i as u64 * spacing);
+        if !mc_out.is_empty() {
+            let start = {
+                let chip = self.store.get_mut(loc.chip()).unwrap();
+                let core = chip.cores.get_mut(&loc.p).unwrap();
+                let start = core.tx_busy_ns.max(time_ns);
+                core.tx_busy_ns = start + mc_out.len() as u64 * spacing;
+                start
+            };
+            let head_delay = start - time_ns;
+            for (i, (key, payload)) in mc_out.drain(..).enumerate() {
+                self.inject_mc_after(loc, key, payload, head_delay + i as u64 * spacing);
+            }
         }
         for msg in sdp_out.drain(..) {
             self.route_sdp(loc, msg)?;
@@ -1087,10 +1487,19 @@ impl SimMachine {
             let depart = busy.max(ready);
             self.store
                 .set_udp_busy(eth, depart + self.config.wire.udp_frame_ns);
-            self.push_event(
-                depart + self.config.wire.udp_frame_ns,
-                EventKind::HostUdp { port, data },
-            );
+            let t0 = depart + self.config.wire.udp_frame_ns;
+            let (times, n) = self.wire_frame_times(eth, WireDirection::MachineToHost, t0);
+            match n {
+                0 => {} // the wire ate the frame; the host re-requests
+                1 => self.push_event(times[0], EventKind::HostUdp { port, data }),
+                _ => {
+                    self.push_event(
+                        times[0],
+                        EventKind::HostUdp { port, data: data.clone() },
+                    );
+                    self.push_event(times[1], EventKind::HostUdp { port, data });
+                }
+            }
         } else {
             // On-machine SDP: hop-proportional latency.
             let dest = msg.header.dest();
@@ -1114,10 +1523,16 @@ impl SimMachine {
             .nearest_ethernet(dest.chip())
             .ok_or_else(|| anyhow::anyhow!("no ethernet for {dest}"))?;
         let hops = self.machine.hop_distance(eth, dest.chip()) as u64;
-        self.push_event(
-            now + self.config.wire.udp_frame_ns + hops * self.config.wire.p2p_per_hop_ns,
-            EventKind::DeliverSdp(msg),
-        );
+        let t0 = now + self.config.wire.udp_frame_ns + hops * self.config.wire.p2p_per_hop_ns;
+        let (times, n) = self.wire_frame_times(eth, WireDirection::HostToMachine, t0);
+        match n {
+            0 => {} // lost on the wire; recovered by retry/re-request
+            1 => self.push_event(times[0], EventKind::DeliverSdp(msg)),
+            _ => {
+                self.push_event(times[0], EventKind::DeliverSdp(msg.clone()));
+                self.push_event(times[1], EventKind::DeliverSdp(msg));
+            }
+        }
         Ok(())
     }
 
@@ -1149,10 +1564,16 @@ impl SimMachine {
         header.src_port = 7; // came from the outside world
         let msg = SdpMessage::new(header, data);
         let hops = self.machine.hop_distance(board, dest.chip()) as u64;
-        self.push_event(
-            now + self.config.wire.udp_frame_ns + hops * self.config.wire.p2p_per_hop_ns,
-            EventKind::DeliverSdp(msg),
-        );
+        let t0 = now + self.config.wire.udp_frame_ns + hops * self.config.wire.p2p_per_hop_ns;
+        let (times, n) = self.wire_frame_times(board, WireDirection::HostToMachine, t0);
+        match n {
+            0 => {} // lost; the writer's missing-seq report re-requests it
+            1 => self.push_event(times[0], EventKind::DeliverSdp(msg)),
+            _ => {
+                self.push_event(times[0], EventKind::DeliverSdp(msg.clone()));
+                self.push_event(times[1], EventKind::DeliverSdp(msg));
+            }
+        }
         Ok(())
     }
 

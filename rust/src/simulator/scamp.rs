@@ -27,8 +27,77 @@ fn chunk_cost(sim: &SimMachine, chip: ChipCoord) -> u64 {
     }
 }
 
+/// One reliable SCP conversation: `chunks` sequenced request/response
+/// pairs to `chip`, each costing `cost` virtual time on success.
+///
+/// On a clean wire this is exactly `advance_host_time(chunks * cost)` —
+/// draw-free and bit-identical to the pre-reliability cost model (the
+/// E1 ratio tests pin it). Under a seeded [`super::WireFaults`] plan
+/// each request draws its fate: a lost request or reply burns the
+/// per-request timeout plus exponential backoff and is retransmitted; a
+/// re-delivered command (earlier attempt arrived but its reply was
+/// lost, or the wire duplicated the frame) is discarded by SCAMP's
+/// sequence check so the operation executes exactly once — which is why
+/// non-idempotent ops (alloc, signal) ride this path too; duplicated
+/// replies are discarded by the host's own sequence check. When one
+/// request exhausts the retry budget the board is escalated — the
+/// supervisor sees its cores vanish and heals around it — and a
+/// distinguishable error is returned instead of hanging.
+fn scp_exchange(sim: &mut SimMachine, chip: ChipCoord, chunks: u64, cost: u64) -> anyhow::Result<()> {
+    if !sim.wire_active() {
+        sim.advance_host_time(cost.saturating_mul(chunks));
+        return Ok(());
+    }
+    let board = sim.machine.nearest_ethernet(chip).unwrap_or(chip);
+    let timeout = sim.config.wire.scp_timeout_ns;
+    let budget = sim.config.wire.scp_retries;
+    for _ in 0..chunks {
+        let mut delivered_before = false;
+        let mut attempt: u32 = 0;
+        loop {
+            let outcome = sim.wire_scp_attempt(board, delivered_before);
+            delivered_before |= outcome.delivered;
+            if outcome.replied {
+                sim.advance_host_time(cost);
+                break;
+            }
+            // No reply inside the request window: timeout.
+            sim.wire_stats_mut().scp_timeouts += 1;
+            if attempt >= budget {
+                sim.note_wire_escalation(board);
+                anyhow::bail!(
+                    "board {board:?} silent: no SCP reply from chip {chip:?} after {} attempts \
+                     (escalated to the supervisor)",
+                    attempt + 1
+                );
+            }
+            // Exponential backoff: double the wait per retry, capped.
+            let backoff = timeout.saturating_mul(1 << attempt.min(6));
+            sim.advance_host_time(timeout + backoff);
+            let stats = sim.wire_stats_mut();
+            stats.backoff_wait_ns += backoff;
+            stats.scp_retries += 1;
+            attempt += 1;
+        }
+    }
+    Ok(())
+}
+
+/// The board SCAMP broadcast commands (signals) are issued through.
+fn root_board(sim: &SimMachine) -> Option<ChipCoord> {
+    sim.machine
+        .chips()
+        .filter(|c| c.is_ethernet() && !c.is_virtual)
+        .map(|c| (c.x, c.y))
+        .next()
+}
+
 /// Allocate a segment of SDRAM on a chip (the SCAMP `sdram_alloc` call).
+/// Rides the reliable exchange: allocation is non-idempotent, so the
+/// machine-side duplicate-command check is what keeps a retransmitted
+/// alloc from leaking a second segment.
 pub fn alloc_sdram(sim: &mut SimMachine, chip: ChipCoord, len: u32) -> anyhow::Result<u32> {
+    scp_exchange(sim, chip, 1, 0)?;
     sim.chip_mut(chip)?.sdram.alloc(len)
 }
 
@@ -45,7 +114,7 @@ pub fn read_sdram(
 ) -> anyhow::Result<Vec<u8>> {
     let cost = chunk_cost(sim, chip);
     let chunks = len.div_ceil(SCP_CHUNK).max(1) as u64;
-    sim.advance_host_time(cost * chunks);
+    scp_exchange(sim, chip, chunks, cost)?;
     sim.chip(chip)?.sdram.read(addr, len)
 }
 
@@ -58,7 +127,7 @@ pub fn write_sdram(
 ) -> anyhow::Result<()> {
     let cost = chunk_cost(sim, chip);
     let chunks = data.len().div_ceil(SCP_CHUNK).max(1) as u64;
-    sim.advance_host_time(cost * chunks);
+    scp_exchange(sim, chip, chunks, cost)?;
     sim.chip_mut(chip)?.sdram.write(addr, data)
 }
 
@@ -80,7 +149,48 @@ pub fn write_sdram_batched(
     let window = sim.config.wire.scp_pipeline_window.max(1);
     let chunks = data.len().div_ceil(SCP_CHUNK).max(1) as u64;
     let windows = chunks.div_ceil(window);
-    sim.advance_host_time(chunks * (cost / 2) + windows * cost);
+    if !sim.wire_active() {
+        sim.advance_host_time(chunks * (cost / 2) + windows * cost);
+        return sim.chip_mut(chip)?.sdram.write(addr, data);
+    }
+    // Window-aware retransmission: only the window-boundary exchange is
+    // acknowledged, so when it times out the host must stream the whole
+    // window again (go-back-N) — each failed attempt re-pays the
+    // in-window serialisation cost before the next boundary exchange.
+    let board = sim.machine.nearest_ethernet(chip).unwrap_or(chip);
+    let timeout = sim.config.wire.scp_timeout_ns;
+    let budget = sim.config.wire.scp_retries;
+    let mut remaining = chunks;
+    while remaining > 0 {
+        let in_window = remaining.min(window);
+        let mut delivered_before = false;
+        let mut attempt: u32 = 0;
+        loop {
+            sim.advance_host_time(in_window * (cost / 2));
+            let outcome = sim.wire_scp_attempt(board, delivered_before);
+            delivered_before |= outcome.delivered;
+            if outcome.replied {
+                sim.advance_host_time(cost);
+                break;
+            }
+            sim.wire_stats_mut().scp_timeouts += 1;
+            if attempt >= budget {
+                sim.note_wire_escalation(board);
+                anyhow::bail!(
+                    "board {board:?} silent: batched write window to chip {chip:?} unacknowledged \
+                     after {} attempts (escalated to the supervisor)",
+                    attempt + 1
+                );
+            }
+            let backoff = timeout.saturating_mul(1 << attempt.min(6));
+            sim.advance_host_time(timeout + backoff);
+            let stats = sim.wire_stats_mut();
+            stats.backoff_wait_ns += backoff;
+            stats.scp_retries += 1;
+            attempt += 1;
+        }
+        remaining -= in_window;
+    }
     sim.chip_mut(chip)?.sdram.write(addr, data)
 }
 
@@ -96,7 +206,8 @@ pub fn load_routing_table(
         "routing table for {chip:?} has {} entries (TCAM holds {ROUTER_ENTRIES})",
         table.len()
     );
-    sim.advance_host_time(sim.config.wire.eth_read_rtt_ns);
+    let rtt = sim.config.wire.eth_read_rtt_ns;
+    scp_exchange(sim, chip, 1, rtt)?;
     // Through install_table so the chip's route cache is invalidated.
     sim.chip_mut(chip)?.install_table(table);
     Ok(())
@@ -111,6 +222,7 @@ pub fn set_iptag(
     port: u16,
     strip_sdp: bool,
 ) -> anyhow::Result<()> {
+    scp_exchange(sim, board, 1, 0)?;
     sim.chip_mut(board)?
         .iptags
         .insert(tag, (host.to_string(), port, strip_sdp));
@@ -124,6 +236,7 @@ pub fn set_reverse_iptag(
     port: u16,
     dest: CoreLocation,
 ) -> anyhow::Result<()> {
+    scp_exchange(sim, board, 1, 0)?;
     sim.chip_mut(board)?.reverse_iptags.insert(port, dest);
     Ok(())
 }
@@ -179,7 +292,8 @@ pub fn install_app(
             RecordingChannel { addr, capacity: *size as usize, write_pos: 0, lost_bytes: 0 },
         );
     }
-    sim.advance_host_time(sim.config.wire.eth_read_rtt_ns); // binary load
+    let rtt = sim.config.wire.eth_read_rtt_ns;
+    scp_exchange(sim, loc.chip(), 1, rtt)?; // binary load
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
@@ -200,6 +314,7 @@ pub fn install_app(
         iobuf: String::new(),
         ticks_done: 0,
         run_until: 0,
+        tx_busy_ns: 0,
     };
     Ok(())
 }
@@ -276,7 +391,8 @@ pub fn reload_app(
             RecordingChannel { addr, capacity: *size as usize, write_pos: 0, lost_bytes: 0 },
         );
     }
-    sim.advance_host_time(sim.config.wire.eth_read_rtt_ns); // binary load
+    let rtt = sim.config.wire.eth_read_rtt_ns;
+    scp_exchange(sim, loc.chip(), 1, rtt)?; // binary load
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
@@ -292,13 +408,18 @@ pub fn reload_app(
         iobuf: String::new(),
         ticks_done: 0,
         run_until: 0,
+        tx_busy_ns: 0,
     };
     Ok(())
 }
 
 /// Start signal: every Ready core runs `on_start` and becomes Running
-/// (it will not tick until a run cycle begins).
+/// (it will not tick until a run cycle begins). The signal command is
+/// one broadcast through the reliable exchange — duplicated signal
+/// frames are dropped by SCAMP's sequence check, so a run never starts
+/// twice.
 pub fn signal_start(sim: &mut SimMachine) -> anyhow::Result<()> {
+    signal_exchange(sim)?;
     let locs = cores_in_state(sim, CoreState::Ready);
     for loc in locs {
         sim.with_core_app(loc, |app, ctx| app.on_start(ctx))?;
@@ -307,8 +428,18 @@ pub fn signal_start(sim: &mut SimMachine) -> anyhow::Result<()> {
     sim.run_until_idle()
 }
 
+/// The reliable exchange carrying one broadcast signal (start / resume /
+/// stop), issued via the root board.
+fn signal_exchange(sim: &mut SimMachine) -> anyhow::Result<()> {
+    match root_board(sim) {
+        Some(board) => scp_exchange(sim, board, 1, 0),
+        None => Ok(()),
+    }
+}
+
 /// Resume signal after a pause: `on_resume` for every Paused core.
 pub fn signal_resume(sim: &mut SimMachine) -> anyhow::Result<()> {
+    signal_exchange(sim)?;
     let locs = cores_in_state(sim, CoreState::Paused);
     for loc in locs {
         sim.with_core_app(loc, |app, ctx| app.on_resume(ctx))?;
@@ -318,6 +449,7 @@ pub fn signal_resume(sim: &mut SimMachine) -> anyhow::Result<()> {
 
 /// Stop signal: running/paused cores become Finished.
 pub fn signal_stop(sim: &mut SimMachine) -> anyhow::Result<()> {
+    signal_exchange(sim)?;
     for state in [CoreState::Running, CoreState::Paused] {
         for loc in cores_in_state(sim, state) {
             set_state(sim, loc, CoreState::Finished)?;
@@ -358,8 +490,15 @@ fn set_state(sim: &mut SimMachine, loc: CoreLocation, state: CoreState) -> anyho
     Ok(())
 }
 
-/// One core's run state (the CMD_CORE_STATE poll of §6.3.5).
+/// One core's run state (the CMD_CORE_STATE poll of §6.3.5). Errors
+/// when the core's board is host-unreachable (silent or escalated wire)
+/// — the poll cannot cross a dark link.
 pub fn core_state(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<CoreState> {
+    anyhow::ensure!(
+        !sim.host_unreachable(loc.chip()),
+        "chip {:?} unreachable (board host link silent)",
+        loc.chip()
+    );
     Ok(sim
         .chip(loc.chip())?
         .cores
@@ -368,10 +507,15 @@ pub fn core_state(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<CoreSta
         .state)
 }
 
-/// All loaded cores and their states.
+/// All loaded cores and their states. Chips behind a silent board do
+/// not answer and are absent from the scan — exactly what the run
+/// supervisor observes as "cores vanished" and converts into a heal.
 pub fn core_states(sim: &SimMachine) -> BTreeMap<CoreLocation, CoreState> {
     let mut out = BTreeMap::new();
     for c in sim.machine.chip_coords().collect::<Vec<_>>() {
+        if sim.host_unreachable(c) {
+            continue;
+        }
         if let Ok(chip) = sim.chip(c) {
             for (p, core) in &chip.cores {
                 if core.state != CoreState::Idle {
@@ -409,7 +553,7 @@ pub fn read_iobuf(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<Str
         .clone();
     let cost = chunk_cost(sim, loc.chip());
     let chunks = text.len().div_ceil(SCP_CHUNK).max(1) as u64;
-    sim.advance_host_time(cost * chunks);
+    scp_exchange(sim, loc.chip(), chunks, cost)?;
     Ok(text)
 }
 
@@ -437,8 +581,36 @@ pub fn rediscover_machine(
             chip.processors.retain(|p| p.id != loc.p);
         }
     }
-    let cost = sim.config.wire.eth_read_rtt_ns * machine.n_chips() as u64;
-    sim.advance_host_time(cost);
+    // Sweep chip state through the reliable SCP layer, one exchange per
+    // chip: ordinary frame loss is retried invisibly, while a board
+    // whose host link is dark (or that exhausts its retry budget
+    // mid-sweep) is dropped from the discovered view with all its
+    // chips, exactly as a dead board would be.
+    let rtt = sim.config.wire.eth_read_rtt_ns;
+    let coords: Vec<ChipCoord> = machine.chip_coords().collect();
+    let mut dark_boards = std::collections::BTreeSet::new();
+    for c in coords {
+        let board = sim.machine.nearest_ethernet(c).unwrap_or(c);
+        if dark_boards.contains(&board) {
+            continue;
+        }
+        if sim.host_unreachable(c) || scp_exchange(sim, c, 1, rtt).is_err() {
+            dark_boards.insert(board);
+        }
+    }
+    if !dark_boards.is_empty() {
+        let dark_chips: Vec<ChipCoord> = machine
+            .chip_coords()
+            .filter(|c| {
+                sim.machine
+                    .nearest_ethernet(*c)
+                    .is_some_and(|b| dark_boards.contains(&b))
+            })
+            .collect();
+        for c in dark_chips {
+            machine.remove_chip(c);
+        }
+    }
     machine
 }
 
@@ -506,7 +678,7 @@ pub fn capture_core(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<C
     };
     let cost = chunk_cost(sim, loc.chip());
     let chunks = bytes_moved.div_ceil(SCP_CHUNK).max(1) as u64;
-    sim.advance_host_time(cost * chunks);
+    scp_exchange(sim, loc.chip(), chunks, cost)?;
     Ok(snap)
 }
 
@@ -525,7 +697,7 @@ pub fn restore_core(
         + snap.recordings.values().map(|(d, _)| d.len()).sum::<usize>();
     let cost = chunk_cost(sim, loc.chip());
     let chunks = bytes_moved.div_ceil(SCP_CHUNK).max(1) as u64;
-    sim.advance_host_time(cost * chunks);
+    scp_exchange(sim, loc.chip(), chunks, cost)?;
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores

@@ -26,7 +26,7 @@ use spinntools::front::{
 };
 use spinntools::graph::VertexId;
 use spinntools::machine::{ChipCoord, CoreLocation, ALL_DIRECTIONS};
-use spinntools::simulator::{ChaosPlan, Fault};
+use spinntools::simulator::{ChaosPlan, Fault, WireFaults};
 use spinntools::util::{prop, SplitMix64};
 
 const ROWS: u32 = 6;
@@ -39,6 +39,22 @@ fn base_seed() -> u64 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC0A5)
+}
+
+/// CI's combined matrix row re-runs this whole suite over an unreliable
+/// wire (`WIRE_FAULTS=1`, seeded by `WIRE_SEED`): the reliable transport
+/// must make every assertion hold unchanged while frames are being
+/// lost, duplicated and reordered underneath the heals.
+fn env_wire(config: ToolsConfig) -> ToolsConfig {
+    let on = std::env::var("WIRE_FAULTS").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+    if !on {
+        return config;
+    }
+    let seed = std::env::var("WIRE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x31E5);
+    config.with_wire_faults(WireFaults::from_seed(seed))
 }
 
 fn supervised(policy: HealPolicy) -> SupervisorConfig {
@@ -84,7 +100,7 @@ fn build_grid(tools: &mut SpiNNTools, seed: u64) -> Vec<VertexId> {
 /// The deterministic placement of this workload (a scratch pre-run):
 /// used to aim faults at resources that actually carry the run.
 fn probe_placements(seed: u64) -> Vec<(VertexId, CoreLocation)> {
-    let mut probe = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let mut probe = SpiNNTools::new(env_wire(ToolsConfig::new(MachineSpec::Spinn5))).unwrap();
     let ids = build_grid(&mut probe, seed);
     probe.run_ticks(1).unwrap();
     let mapping = probe.mapping().unwrap();
@@ -148,11 +164,11 @@ fn pick_fault(rng: &mut SplitMix64, placements: &[(VertexId, CoreLocation)]) -> 
 /// Run the workload with the fault injected mid-run and heal it, at the
 /// given mapping pool width; return per-vertex recordings.
 fn chaos_run(seed: u64, threads: usize, fault: &Fault, at_tick: u64) -> Vec<Vec<u8>> {
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5)
             .with_supervision(supervised(HealPolicy::Remap))
             .with_mapping_threads(threads),
-    )
+    ))
     .unwrap();
     let ids = build_grid(&mut tools, seed);
     tools.inject_chaos(ChaosPlan::new().with(at_tick, fault.clone()));
@@ -171,7 +187,9 @@ fn chaos_run(seed: u64, threads: usize, fault: &Fault, at_tick: u64) -> Vec<Vec<
         match fault {
             Fault::ChipDeath(c) => assert_ne!(loc.chip(), *c),
             Fault::CoreRte(f) | Fault::CoreStall(f) => assert_ne!(loc, *f),
-            Fault::LinkDeath(_, _) => {}
+            // Wire-level faults never aim at placed vertices (and the
+            // single-fault plans here never draw them anyway).
+            Fault::LinkDeath(_, _) | Fault::LinkBrownout { .. } | Fault::BoardSilent { .. } => {}
         }
     }
     ids.iter().map(|v| tools.recording(*v).to_vec()).collect()
@@ -179,12 +197,12 @@ fn chaos_run(seed: u64, threads: usize, fault: &Fault, at_tick: u64) -> Vec<Vec<
 
 /// Run the same workload on the equivalently boot-degraded machine.
 fn degraded_run(seed: u64, threads: usize, faults: &BootFaults) -> Vec<Vec<u8>> {
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5)
             .with_supervision(supervised(HealPolicy::Remap))
             .with_mapping_threads(threads)
             .with_boot_faults(faults.clone()),
-    )
+    ))
     .unwrap();
     let ids = build_grid(&mut tools, seed);
     tools.run_ticks(TICKS).unwrap();
@@ -222,9 +240,9 @@ fn heal_property_single_faults_match_boot_degraded_runs() {
 fn abort_policy_surfaces_clean_error_with_iobuf() {
     let placements = probe_placements(7);
     let victim = placements[placements.len() / 2].1;
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5).with_supervision(supervised(HealPolicy::Abort)),
-    )
+    ))
     .unwrap();
     build_grid(&mut tools, 7);
     tools.inject_chaos(ChaosPlan::new().with(2, Fault::CoreRte(victim)));
@@ -240,9 +258,9 @@ fn abort_policy_surfaces_clean_error_with_iobuf() {
 fn watchdog_stall_is_detected_and_healed() {
     let placements = probe_placements(11);
     let victim = placements[3].1;
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5).with_supervision(supervised(HealPolicy::Remap)),
-    )
+    ))
     .unwrap();
     let ids = build_grid(&mut tools, 11);
     tools.inject_chaos(ChaosPlan::new().with(2, Fault::CoreStall(victim)));
@@ -283,13 +301,13 @@ fn max_heals_bounds_a_machine_dying_in_pieces() {
     used.sort();
     used.dedup();
     assert!(used.len() >= 2, "workload must span two killable chips");
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5).with_supervision(SupervisorConfig {
             poll_interval_ticks: 1,
             policy: HealPolicy::Remap,
             max_heals: 1,
         }),
-    )
+    ))
     .unwrap();
     build_grid(&mut tools, 13);
     tools.inject_chaos(

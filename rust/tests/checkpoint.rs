@@ -29,7 +29,7 @@ use spinntools::front::{
 };
 use spinntools::graph::VertexId;
 use spinntools::machine::ChipCoord;
-use spinntools::simulator::{ChaosPlan, Fault};
+use spinntools::simulator::{ChaosPlan, Fault, WireFaults};
 
 const ROWS: u32 = 6;
 const COLS: u32 = 6;
@@ -41,6 +41,22 @@ fn base_seed() -> u64 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xC0A5)
+}
+
+/// CI's combined matrix row re-runs this whole suite over an unreliable
+/// wire (`WIRE_FAULTS=1`, seeded by `WIRE_SEED`): snapshot capture,
+/// restore and the healed tail replay all cross the faulty link, and
+/// every byte-identity assertion must hold unchanged.
+fn env_wire(config: ToolsConfig) -> ToolsConfig {
+    let on = std::env::var("WIRE_FAULTS").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+    if !on {
+        return config;
+    }
+    let seed = std::env::var("WIRE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x31E5);
+    config.with_wire_faults(WireFaults::from_seed(seed))
 }
 
 fn supervised() -> SupervisorConfig {
@@ -93,9 +109,9 @@ fn recordings(tools: &SpiNNTools, ids: &[VertexId]) -> Vec<Vec<u8>> {
 
 /// The uninterrupted reference: no checkpointing, one `run_ticks`.
 fn plain_run(seed: u64, threads: usize) -> Vec<Vec<u8>> {
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5).with_mapping_threads(threads),
-    )
+    ))
     .unwrap();
     let ids = build_grid(&mut tools, seed);
     tools.run_ticks(TICKS).unwrap();
@@ -104,11 +120,11 @@ fn plain_run(seed: u64, threads: usize) -> Vec<Vec<u8>> {
 
 /// The same workload on the equivalently boot-degraded machine.
 fn degraded_run(seed: u64, faults: &BootFaults) -> Vec<Vec<u8>> {
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5)
             .with_supervision(supervised())
             .with_boot_faults(faults.clone()),
-    )
+    ))
     .unwrap();
     let ids = build_grid(&mut tools, seed);
     tools.run_ticks(TICKS).unwrap();
@@ -119,7 +135,7 @@ fn degraded_run(seed: u64, faults: &BootFaults) -> Vec<Vec<u8>> {
 /// A used, killable (non-Ethernet) chip of this workload's deterministic
 /// placement — the target for every injected chip death below.
 fn killable_used_chip(seed: u64) -> ChipCoord {
-    let mut probe = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    let mut probe = SpiNNTools::new(env_wire(ToolsConfig::new(MachineSpec::Spinn5))).unwrap();
     let ids = build_grid(&mut probe, seed);
     probe.run_ticks(1).unwrap();
     let mapping = probe.mapping().unwrap();
@@ -140,10 +156,10 @@ fn checkpointing_is_observation_only() {
     let seed = base_seed();
     let reference = plain_run(seed, 1);
     for interval in [1u64, 2, 5] {
-        let mut tools = SpiNNTools::new(
+        let mut tools = SpiNNTools::new(env_wire(
             ToolsConfig::new(MachineSpec::Spinn5)
                 .with_checkpoint(CheckpointConfig { interval_ticks: interval, keep: 2 }),
-        )
+        ))
         .unwrap();
         let ids = build_grid(&mut tools, seed);
         tools.run_ticks(TICKS).unwrap();
@@ -169,11 +185,11 @@ fn suspend_resume_matches_uninterrupted_run() {
         let reference = plain_run(seed, threads);
         for k in [1u64, 3, 5] {
             let snap_bytes = {
-                let mut tools = SpiNNTools::new(
+                let mut tools = SpiNNTools::new(env_wire(
                     ToolsConfig::new(MachineSpec::Spinn5)
                         .with_mapping_threads(threads)
                         .with_checkpoint(every_tick()),
-                )
+                ))
                 .unwrap();
                 build_grid(&mut tools, seed);
                 tools.run_ticks(k).unwrap();
@@ -182,11 +198,11 @@ fn suspend_resume_matches_uninterrupted_run() {
             let snap = RunSnapshot::from_bytes(&snap_bytes).unwrap();
             assert_eq!(snap.tick, k);
 
-            let mut tools = SpiNNTools::new(
+            let mut tools = SpiNNTools::new(env_wire(
                 ToolsConfig::new(MachineSpec::Spinn5)
                     .with_mapping_threads(threads)
                     .with_checkpoint(every_tick()),
-            )
+            ))
             .unwrap();
             let ids = build_grid(&mut tools, seed);
             tools.resume_from(&snap).unwrap();
@@ -212,22 +228,22 @@ fn suspend_resume_then_fault_matches_degraded_run() {
     for threads in [1usize, 2, 8] {
         let k = 2u64;
         let snap = {
-            let mut tools = SpiNNTools::new(
+            let mut tools = SpiNNTools::new(env_wire(
                 ToolsConfig::new(MachineSpec::Spinn5)
                     .with_mapping_threads(threads)
                     .with_checkpoint(every_tick()),
-            )
+            ))
             .unwrap();
             build_grid(&mut tools, seed);
             tools.run_ticks(k).unwrap();
             tools.suspend().unwrap()
         };
-        let mut tools = SpiNNTools::new(
+        let mut tools = SpiNNTools::new(env_wire(
             ToolsConfig::new(MachineSpec::Spinn5)
                 .with_mapping_threads(threads)
                 .with_supervision(supervised())
                 .with_checkpoint(every_tick()),
-        )
+        ))
         .unwrap();
         let ids = build_grid(&mut tools, seed);
         tools.resume_from(&snap).unwrap();
@@ -252,11 +268,11 @@ fn heal_restores_from_snapshot_not_tick_zero() {
     let seed = base_seed();
     let chip = killable_used_chip(seed);
     let reference = degraded_run(seed, &BootFaults { chips: vec![chip], ..Default::default() });
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5)
             .with_supervision(supervised())
             .with_checkpoint(every_tick()),
-    )
+    ))
     .unwrap();
     let ids = build_grid(&mut tools, seed);
     tools.inject_chaos(ChaosPlan::new().with(3, Fault::ChipDeath(chip)));
@@ -280,7 +296,7 @@ fn chunk_boundary_chaos_defers_to_next_chunk() {
     let seed = base_seed();
     let chip = killable_used_chip(seed);
     let reference = degraded_run(seed, &BootFaults { chips: vec![chip], ..Default::default() });
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn5)
             .with_supervision(SupervisorConfig {
                 poll_interval_ticks: 2,
@@ -288,7 +304,7 @@ fn chunk_boundary_chaos_defers_to_next_chunk() {
                 max_heals: 4,
             })
             .with_checkpoint(CheckpointConfig { interval_ticks: 2, keep: 2 }),
-    )
+    ))
     .unwrap();
     let ids = build_grid(&mut tools, seed);
     tools.inject_chaos(ChaosPlan::new().with(2, Fault::ChipDeath(chip)));
@@ -345,9 +361,9 @@ fn reconcile_preserves_recordings_with_checkpointing() {
     // silently discard everything recorded so far. With checkpointing
     // the pre-mutation recordings survive and the run continues from
     // the snapshot tick.
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
-    )
+    ))
     .unwrap();
     let ids = blinker(&mut tools);
     tools.run_ticks(2).unwrap();
@@ -377,7 +393,7 @@ fn reconcile_preserves_recordings_with_checkpointing() {
 fn reconcile_without_checkpointing_surfaces_the_discard() {
     // The historical behaviour is kept when checkpointing is off, but
     // the discard is no longer silent.
-    let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+    let mut tools = SpiNNTools::new(env_wire(ToolsConfig::new(MachineSpec::Spinn3))).unwrap();
     let ids = blinker(&mut tools);
     tools.run_ticks(2).unwrap();
     tools.remove_machine_vertex(ids[3]).unwrap();
@@ -406,7 +422,7 @@ fn resumed_run_heal_covers_base_ticks() {
         if let Some(c) = checkpoint {
             config = config.with_checkpoint(c);
         }
-        let mut tools = SpiNNTools::new(config).unwrap();
+        let mut tools = SpiNNTools::new(env_wire(config)).unwrap();
         let ids = build_grid(&mut tools, seed);
         tools.run_ticks(2).unwrap();
         tools.inject_chaos(ChaosPlan::new().with(3, Fault::ChipDeath(chip)));
@@ -438,16 +454,16 @@ fn file_checkpointer_survives_process_restart() {
     let _ = std::fs::remove_dir_all(&dir);
 
     let reference = {
-        let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn3)).unwrap();
+        let mut tools = SpiNNTools::new(env_wire(ToolsConfig::new(MachineSpec::Spinn3))).unwrap();
         let ids = blinker(&mut tools);
         tools.run_ticks(4).unwrap();
         recordings(&tools, &ids)
     };
 
     {
-        let mut tools = SpiNNTools::new(
+        let mut tools = SpiNNTools::new(env_wire(
             ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
-        )
+        ))
         .unwrap();
         tools.set_checkpointer(Box::new(FileCheckpointer::new(&dir).unwrap()));
         blinker(&mut tools);
@@ -459,9 +475,9 @@ fn file_checkpointer_survives_process_restart() {
     let newest = *store.snapshot_ticks().last().expect("snapshot on disk");
     assert_eq!(newest, 2);
     let snap = store.get_snapshot(newest).unwrap();
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
-    )
+    ))
     .unwrap();
     tools.set_checkpointer(Box::new(store));
     let ids = blinker(&mut tools);
@@ -475,18 +491,18 @@ fn file_checkpointer_survives_process_restart() {
 #[test]
 fn resume_from_rejects_mismatched_graphs() {
     let snap = {
-        let mut tools = SpiNNTools::new(
+        let mut tools = SpiNNTools::new(env_wire(
             ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
-        )
+        ))
         .unwrap();
         blinker(&mut tools);
         tools.run_ticks(2).unwrap();
         tools.suspend().unwrap()
     };
     // One vertex short: the revisions cannot match.
-    let mut tools = SpiNNTools::new(
+    let mut tools = SpiNNTools::new(env_wire(
         ToolsConfig::new(MachineSpec::Spinn3).with_checkpoint(every_tick()),
-    )
+    ))
     .unwrap();
     tools
         .add_machine_vertex(ConwayCellVertex::arc(0, 0, true))

@@ -1,0 +1,477 @@
+//! Unreliable-wire property suite (DESIGN.md §10, experiment E16).
+//!
+//! The transport property: under a seeded plan of host-link frame
+//! loss, duplication, reordering and jitter, every workload completes
+//! with results **byte-identical** to its lossless twin — SCP
+//! operations (including non-idempotent alloc/signal) execute exactly
+//! once, the bulk data planes re-request their way to complete images,
+//! and a board that stops answering altogether is *escalated* (a
+//! bounded, distinguishable error, or a supervisor heal) instead of
+//! hanging the host.
+//!
+//! The flip side is pinned too: on a lossless wire the transport layer
+//! must be invisible — zero retries, zero timeouts, zero draws.
+//!
+//! CI runs this suite under a fixed seed matrix via `WIRE_SEED`.
+
+use std::collections::BTreeSet;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{
+    BootFaults, DataPlaneOptions, ExtractionMethod, FastPath, HealPolicy, LoadMethod,
+    MachineSpec, SpiNNTools, SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::machine::{ChipCoord, Machine, MachineBuilder};
+use spinntools::simulator::{
+    scamp, ChaosPlan, Fault, SimConfig, SimMachine, WireFaults, WireStats,
+};
+use spinntools::util::{prop, SplitMix64};
+
+const ROWS: u32 = 6;
+const COLS: u32 = 6;
+const TICKS: u64 = 6;
+
+/// Base seed for the property cases; CI sweeps a matrix of these.
+fn base_seed() -> u64 {
+    std::env::var("WIRE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x31E5)
+}
+
+/// A simulator booted over a faulty wire. The plan must be in place
+/// *at boot* — that is when the wire RNG is seeded.
+fn faulty_sim(machine: Machine, faults: WireFaults) -> SimMachine {
+    let mut config = SimConfig::default();
+    config.wire.faults = faults;
+    SimMachine::boot(machine, config)
+}
+
+fn pattern(len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+/// Core picker for fast-path system cores (mirrors the E12 suite).
+fn picker() -> impl FnMut(ChipCoord) -> Option<u8> {
+    let mut used: std::collections::BTreeMap<ChipCoord, u8> = std::collections::BTreeMap::new();
+    move |chip| {
+        let next = used.entry(chip).or_insert(17);
+        let c = *next;
+        *next -= 1;
+        Some(c)
+    }
+}
+
+/// Build the ROWS x COLS Conway grid into `tools`; returns vertex ids.
+fn build_grid(tools: &mut SpiNNTools, seed: u64) -> Vec<VertexId> {
+    let alive = |r: u32, c: u32| (r.wrapping_mul(31) ^ c.wrapping_mul(17) ^ seed as u32) % 3 == 0;
+    let mut ids = Vec::new();
+    for r in 0..ROWS {
+        for c in 0..COLS {
+            ids.push(
+                tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                    .unwrap(),
+            );
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < ROWS as i64 && c < COLS as i64)
+            .then_some((r * COLS as i64 + c) as usize)
+    };
+    for r in 0..ROWS as i64 {
+        for c in 0..COLS as i64 {
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        tools
+                            .add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)
+                            .unwrap();
+                    }
+                }
+            }
+        }
+    }
+    ids
+}
+
+/// Run the Conway workload under `config`; return (recordings, wire
+/// stats).
+fn workload_run(config: ToolsConfig, seed: u64) -> (Vec<Vec<u8>>, WireStats) {
+    let mut tools = SpiNNTools::new(config).unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.run_ticks(TICKS).unwrap();
+    let recs = ids.iter().map(|v| tools.recording(*v).to_vec()).collect();
+    (recs, tools.provenance().wire)
+}
+
+// ---------------------------------------------------------------------------
+// The lossless wire is invisible
+
+#[test]
+fn clean_wire_records_zero_transport_work() {
+    let (recs, wire) = workload_run(ToolsConfig::new(MachineSpec::Spinn5), base_seed());
+    assert!(recs.iter().all(|r| !r.is_empty()), "workload recorded nothing");
+    assert_eq!(
+        wire,
+        WireStats::default(),
+        "a lossless wire must report zero retries/timeouts/draws"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// SCP: recovery + exactly-once
+
+#[test]
+fn scp_round_trips_exactly_once_under_loss_and_duplication() {
+    prop::check(6, base_seed(), |rng| {
+        let m = MachineBuilder::spinn5().build();
+        let mut sim = faulty_sim(m, WireFaults::from_seed(rng.next_u64()));
+        let chip = (3, 4);
+        let data = pattern(4096, rng.next_u64());
+        // Two allocs over the faulty wire: retransmitted alloc commands
+        // must not leak segments, so the second lands exactly one
+        // segment after the first.
+        let a = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+        let b = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+        assert_eq!(
+            b - a,
+            data.len() as u32,
+            "a retransmitted alloc leaked an SDRAM segment"
+        );
+        scamp::write_sdram(&mut sim, chip, a, &data).unwrap();
+        assert_eq!(scamp::read_sdram(&mut sim, chip, a, data.len()).unwrap(), data);
+        scamp::write_sdram_batched(&mut sim, chip, b, &data).unwrap();
+        assert_eq!(scamp::read_sdram(&mut sim, chip, b, data.len()).unwrap(), data);
+        let stats = sim.wire_stats();
+        assert!(
+            stats.frames_lost + stats.frames_duplicated + stats.scp_retries > 0,
+            "the fault plan never fired: {stats:?}"
+        );
+        assert_eq!(stats.escalations, 0, "recoverable loss must not escalate");
+    });
+}
+
+#[test]
+fn duplicated_commands_and_replies_are_deduplicated() {
+    // A duplication-only plan: every op must still execute exactly once.
+    let faults = WireFaults {
+        seed: base_seed(),
+        dup_h2m_permille: 500,
+        dup_m2h_permille: 500,
+        ..WireFaults::none()
+    };
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = faulty_sim(m, faults);
+    let chip = (2, 5);
+    let data = pattern(2048, 0xD0B1);
+    let a = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    let b = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    assert_eq!(b - a, data.len() as u32);
+    scamp::write_sdram(&mut sim, chip, a, &data).unwrap();
+    assert_eq!(scamp::read_sdram(&mut sim, chip, a, data.len()).unwrap(), data);
+    let stats = sim.wire_stats();
+    assert!(
+        stats.dup_commands_dropped + stats.dup_replies_dropped > 0,
+        "the duplicate checks never fired: {stats:?}"
+    );
+    assert_eq!(stats.scp_retries, 0, "duplication alone must not cost retries");
+}
+
+// ---------------------------------------------------------------------------
+// Bulk data plane under the seeded wire
+
+#[test]
+fn bulk_planes_round_trip_under_seeded_faults() {
+    prop::check(4, base_seed() ^ 0xB01C, |rng| {
+        let m = MachineBuilder::spinn5().build();
+        let mut sim = faulty_sim(m, WireFaults::from_seed(rng.next_u64()));
+        let chip = (5, 5);
+        let data = pattern(50_000, rng.next_u64());
+        let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+        let fp = FastPath::install(&mut sim, &[chip], picker(), &DataPlaneOptions::default())
+            .unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        fp.write(&mut sim, chip, addr, &data).unwrap();
+        assert_eq!(
+            fp.read(&mut sim, chip, addr, data.len()).unwrap(),
+            data,
+            "bulk image differs after wire-fault recovery"
+        );
+        let stats = sim.wire_stats();
+        assert!(
+            stats.frames_lost + stats.frames_duplicated + stats.frames_delayed > 0,
+            "the fault plan never touched the data plane: {stats:?}"
+        );
+        assert_eq!(stats.escalations, 0);
+    });
+}
+
+#[test]
+fn bulk_plane_survives_lost_session_and_read_commands() {
+    // Heavy host→machine loss (20%): session-open and read commands are
+    // themselves lost regularly, which must surface as re-opened
+    // sessions and replayed reads — never as a silently empty write or
+    // a hung transfer.
+    prop::check(3, base_seed() ^ 0xC3D, |rng| {
+        let m = MachineBuilder::spinn5().build();
+        let faults = WireFaults {
+            seed: rng.next_u64(),
+            loss_h2m_permille: 200,
+            loss_m2h_permille: 50,
+            ..WireFaults::none()
+        };
+        let mut sim = faulty_sim(m, faults);
+        let chip = (6, 3);
+        let fp = FastPath::install(&mut sim, &[chip], picker(), &DataPlaneOptions::default())
+            .unwrap();
+        scamp::signal_start(&mut sim).unwrap();
+        for round in 0..2u64 {
+            let data = pattern(40_000, rng.next_u64() ^ round);
+            let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+            fp.write(&mut sim, chip, addr, &data).unwrap();
+            assert_eq!(fp.read(&mut sim, chip, addr, data.len()).unwrap(), data);
+        }
+        assert!(sim.wire_stats().frames_lost > 0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Whole workloads: byte-identical to the lossless twin
+
+#[test]
+fn workloads_byte_identical_to_lossless_twin_across_threads() {
+    let seed = base_seed();
+    for threads in [1usize, 2, 8] {
+        let config = || {
+            ToolsConfig::new(MachineSpec::Spinn5)
+                .with_mapping_threads(threads)
+                .with_data_plane_threads(threads)
+        };
+        let (clean, clean_wire) = workload_run(config(), seed);
+        assert_eq!(clean_wire, WireStats::default());
+        let (faulty, wire) = workload_run(
+            config().with_wire_faults(WireFaults::from_seed(seed ^ threads as u64)),
+            seed,
+        );
+        assert!(
+            wire.frames_lost + wire.frames_duplicated + wire.scp_retries > 0,
+            "fault plan never fired at threads {threads}: {wire:?}"
+        );
+        assert_eq!(wire.escalations, 0);
+        assert_eq!(
+            faulty, clean,
+            "recordings diverged from the lossless twin at threads {threads}"
+        );
+    }
+}
+
+#[test]
+fn fast_data_plane_workload_byte_identical_under_faults() {
+    let seed = base_seed() ^ 0xFA57;
+    let config = || {
+        ToolsConfig::new(MachineSpec::Spinn5)
+            .with_loading(LoadMethod::FastMulticast)
+            .with_extraction(ExtractionMethod::FastMulticast)
+            .with_data_plane_threads(2)
+    };
+    let (clean, clean_wire) = workload_run(config(), seed);
+    assert_eq!(clean_wire, WireStats::default());
+    let (faulty, wire) = workload_run(
+        config().with_wire_faults(WireFaults::from_seed(seed)),
+        seed,
+    );
+    assert!(wire.frames_lost + wire.frames_duplicated + wire.frames_delayed > 0);
+    assert_eq!(faulty, clean, "fast-plane recordings diverged from the lossless twin");
+}
+
+// ---------------------------------------------------------------------------
+// Escalation: silence is an error (or a heal), never a hang
+
+#[test]
+fn silent_board_escalates_scp_instead_of_hanging() {
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = faulty_sim(m, WireFaults::none());
+    sim.apply_fault(Fault::BoardSilent { board: (0, 0), duration_ns: u64::MAX })
+        .unwrap();
+    let err = scamp::read_sdram(&mut sim, (2, 2), 0x6000_0000, 64)
+        .expect_err("a permanently silent board must fail the exchange")
+        .to_string();
+    assert!(err.contains("escalated"), "unexpected error shape: {err}");
+    let stats = sim.wire_stats();
+    assert_eq!(stats.escalations, 1);
+    assert_eq!(stats.scp_timeouts, sim.config.wire.scp_retries as u64 + 1);
+    assert!(stats.backoff_wait_ns > 0, "retries must pay exponential backoff");
+    // Every chip behind the board is now flagged unreachable — what the
+    // supervisor turns into a heal.
+    assert!(sim.host_unreachable((2, 2)));
+    assert!(sim.wire_unreachable_boards().contains(&(0, 0)));
+}
+
+#[test]
+fn brownout_rides_out_on_backoff() {
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = faulty_sim(m, WireFaults::none());
+    let chip = (1, 1);
+    let data = pattern(64, 0xB0);
+    let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    // Total loss for 5 ms: shorter than the retry budget's backoff
+    // horizon, so the exchange must wait the episode out and succeed.
+    sim.apply_fault(Fault::LinkBrownout {
+        board: (0, 0),
+        loss_permille: 1000,
+        duration_ns: 5_000_000,
+    })
+    .unwrap();
+    scamp::write_sdram(&mut sim, chip, addr, &data).unwrap();
+    assert_eq!(scamp::read_sdram(&mut sim, chip, addr, data.len()).unwrap(), data);
+    let stats = sim.wire_stats();
+    assert!(stats.scp_retries > 0, "the brownout never cost a retry");
+    assert_eq!(stats.escalations, 0, "a transient brownout must not escalate");
+}
+
+#[test]
+fn rediscovery_under_loss_keeps_the_machine_and_drops_silent_boards() {
+    let m = MachineBuilder::triads(1, 1).build();
+    let n = m.n_chips();
+    let boards: Vec<ChipCoord> = m.ethernet_chips().map(|c| (c.x, c.y)).collect();
+    assert_eq!(boards.len(), 3);
+    let mut sim = faulty_sim(m, WireFaults::lossy(base_seed(), 50));
+    // Recoverable loss: the sweep retries invisibly, nothing is dropped.
+    let seen = scamp::rediscover_machine(&mut sim, &BTreeSet::new());
+    assert_eq!(seen.n_chips(), n, "lossy (but answering) chips were dropped");
+    assert!(sim.wire_stats().scp_retries > 0, "the sweep never hit the loss plan");
+    // One board goes permanently silent: the sweep must drop exactly
+    // that board's chips and keep the rest.
+    let dark = boards[1];
+    sim.apply_fault(Fault::BoardSilent { board: dark, duration_ns: u64::MAX })
+        .unwrap();
+    let seen = scamp::rediscover_machine(&mut sim, &BTreeSet::new());
+    assert_eq!(seen.n_chips(), n - 48, "a silent board is 48 chips gone");
+    assert!(
+        seen.chip_coords().all(|c| sim.machine.nearest_ethernet(c) != Some(dark)),
+        "chips behind the silent board survived re-discovery"
+    );
+}
+
+/// All chips of `board` except (optionally) its Ethernet chip.
+fn board_chips(machine: &Machine, board: ChipCoord, keep_eth: bool) -> Vec<ChipCoord> {
+    machine
+        .chip_coords()
+        .filter(|c| machine.nearest_ethernet(*c) == Some(board))
+        .filter(|c| !(keep_eth && *c == board))
+        .collect()
+}
+
+#[test]
+fn silent_board_escalates_to_heal_byte_identical_to_degraded_twin() {
+    let seed = base_seed();
+    let spec = MachineSpec::Boards(3);
+    let template = spec.template();
+    let boards: Vec<ChipCoord> = template.ethernet_chips().map(|c| (c.x, c.y)).collect();
+    assert_eq!(boards.len(), 3);
+    // Keep the workload off the root board (bar its Ethernet chip, the
+    // signal root) so it spans the other boards — one of which can then
+    // go dark mid-run.
+    let root = boards[0];
+    let boot = BootFaults {
+        chips: board_chips(&template, root, true),
+        ..Default::default()
+    };
+    let supervision = SupervisorConfig {
+        poll_interval_ticks: 1,
+        policy: HealPolicy::Remap,
+        max_heals: 4,
+    };
+
+    // Probe the deterministic placement for a used non-root board.
+    let dark = {
+        let mut probe = SpiNNTools::new(
+            ToolsConfig::new(spec).with_boot_faults(boot.clone()),
+        )
+        .unwrap();
+        let ids = build_grid(&mut probe, seed);
+        probe.run_ticks(1).unwrap();
+        let mapping = probe.mapping().unwrap();
+        let used: BTreeSet<ChipCoord> = ids
+            .iter()
+            .filter_map(|v| mapping.placement(*v))
+            .filter_map(|loc| template.nearest_ethernet(loc.chip()))
+            .collect();
+        *used
+            .iter()
+            .find(|b| **b != root)
+            .expect("workload must span a non-root board")
+    };
+
+    // The run under test: the used board goes permanently silent at
+    // tick 2; the supervisor must power it off and heal around it.
+    let mut tools = SpiNNTools::new(
+        ToolsConfig::new(spec)
+            .with_boot_faults(boot.clone())
+            .with_supervision(supervision),
+    )
+    .unwrap();
+    let ids = build_grid(&mut tools, seed);
+    tools.inject_chaos(ChaosPlan::new().with(
+        2,
+        Fault::BoardSilent { board: dark, duration_ns: u64::MAX },
+    ));
+    tools
+        .run_ticks(TICKS)
+        .unwrap_or_else(|e| panic!("a silent board must heal, not fail: {e}"));
+    let heals = tools.heal_reports();
+    assert_eq!(heals.len(), 1, "expected exactly one heal");
+    assert!(
+        heals[0].faults.iter().any(|f| f.contains("unreachable")),
+        "heal did not classify the silent board: {:?}",
+        heals[0].faults
+    );
+    let mapping = tools.mapping().unwrap();
+    for id in &ids {
+        let chip = mapping.placement(*id).unwrap().chip();
+        assert_ne!(
+            template.nearest_ethernet(chip),
+            Some(dark),
+            "a vertex is still placed behind the silent board"
+        );
+    }
+    let healed: Vec<Vec<u8>> = ids.iter().map(|v| tools.recording(*v).to_vec()).collect();
+
+    // The oracle: a fresh run on the equivalently boot-degraded machine
+    // (the whole dark board blacklisted) must record identical bytes.
+    let mut dead = boot;
+    dead.chips.extend(board_chips(&template, dark, false));
+    let mut twin = SpiNNTools::new(
+        ToolsConfig::new(spec)
+            .with_boot_faults(dead)
+            .with_supervision(supervision),
+    )
+    .unwrap();
+    let twin_ids = build_grid(&mut twin, seed);
+    twin.run_ticks(TICKS).unwrap();
+    assert!(twin.heal_reports().is_empty(), "the degraded twin must not heal");
+    let reference: Vec<Vec<u8>> =
+        twin_ids.iter().map(|v| twin.recording(*v).to_vec()).collect();
+    assert_eq!(healed, reference, "healed run diverged from the degraded twin");
+}
+
+#[test]
+fn unsupervised_silent_board_is_a_bounded_error() {
+    let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5)).unwrap();
+    build_grid(&mut tools, base_seed());
+    tools.inject_chaos(ChaosPlan::new().with(
+        1,
+        Fault::BoardSilent { board: (0, 0), duration_ns: u64::MAX },
+    ));
+    let err = tools
+        .run_ticks(TICKS)
+        .expect_err("an unsupervised run against a silent board must error, not hang")
+        .to_string();
+    assert!(err.contains("silent") || err.contains("unreachable"), "error shape: {err}");
+}
