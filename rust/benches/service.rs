@@ -1,0 +1,168 @@
+//! Experiment E17 — multi-tenant machine service: aggregate throughput
+//! at 1 vs 16 vs 64 tenants on the 576-chip (12-board) virtual machine
+//! (DESIGN.md §11).
+//!
+//! Every tenant runs the same one-board Conway workload for the same
+//! number of ticks, so the service's job is pure multiplexing: carve
+//! board partitions, round-robin the machine one quantum at a time,
+//! queue what does not fit (at 16 and 64 tenants only 12 partitions
+//! exist), free and re-carve boards as jobs finish. Reported per
+//! scenario: wall time, job-ticks/second, and the per-job multiplexing
+//! overhead relative to the single-tenant run.
+//!
+//! Correctness ride-along: every tenant's recording digest — at every
+//! tenancy level — must equal the solo run's digest on a private
+//! machine. Results land in `BENCH_service.json` at the repository
+//! root.
+//!
+//! ```sh
+//! cargo bench --bench service
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{MachineService, MachineSpec, SpiNNTools, ToolsConfig};
+use spinntools::graph::VertexId;
+use spinntools::util::fnv1a_64;
+use spinntools::util::json::Json;
+
+const ROWS: u32 = 8;
+const COLS: u32 = 8;
+const BOARDS: u32 = 12;
+const TICKS: u64 = 6;
+const QUANTUM: u64 = 3;
+const TENANCIES: [usize; 3] = [1, 16, 64];
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+/// The per-tenant workload: an 8x8 Conway torus-free grid, one board.
+fn build_grid(tools: &mut SpiNNTools) -> anyhow::Result<Vec<VertexId>> {
+    let alive = |r: u32, c: u32| (r + c) % 3 == 0;
+    let mut ids = Vec::new();
+    for r in 0..ROWS {
+        for c in 0..COLS {
+            ids.push(tools.add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))?);
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < ROWS as i64 && c < COLS as i64)
+            .then_some((r * COLS as i64 + c) as usize)
+    };
+    for r in 0..ROWS as i64 {
+        for c in 0..COLS as i64 {
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    if (dr, dc) == (0, 0) {
+                        continue;
+                    }
+                    if let Some(n) = idx(r + dr, c + dc) {
+                        tools.add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(ids)
+}
+
+fn digest(recordings: impl Iterator<Item = Vec<u8>>) -> u64 {
+    let mut d = 0u64;
+    for (i, rec) in recordings.enumerate() {
+        d ^= fnv1a_64(&rec).rotate_left((i % 61) as u32);
+    }
+    d
+}
+
+/// One scenario: `n_jobs` identical tenants through one service.
+/// Returns (wall ms of `run_to_completion`, per-job digests, rounds).
+fn scenario(n_jobs: usize) -> anyhow::Result<(f64, Vec<u64>, u64)> {
+    let mut svc =
+        MachineService::new(ToolsConfig::new(MachineSpec::Boards(BOARDS)), QUANTUM)?;
+    let mut jobs = Vec::new();
+    for i in 0..n_jobs {
+        jobs.push(svc.submit(&format!("job{i}"), 1, TICKS, build_grid)?);
+    }
+    let t = Instant::now();
+    svc.run_to_completion()?;
+    let wall = ms(t);
+    let digests = jobs
+        .iter()
+        .map(|&id| {
+            assert!(svc.is_finished(id), "job {id} did not finish");
+            digest(svc.vertices(id).to_vec().iter().map(|v| svc.recording(id, *v).to_vec()))
+        })
+        .collect();
+    let report = svc.report();
+    assert!(report.key_windows_disjoint(), "tenant key windows overlap");
+    assert_eq!(report.boards_retired, 0, "no board should die in a clean bench");
+    Ok((wall, digests, report.rounds))
+}
+
+fn main() -> anyhow::Result<()> {
+    let machine = MachineSpec::Boards(BOARDS).template();
+    assert_eq!(machine.n_chips(), 576);
+    println!(
+        "# E17: multi-tenant service throughput on a {}-chip ({BOARDS}-board) machine",
+        machine.n_chips()
+    );
+    println!(
+        "workload per tenant: {ROWS}x{COLS} Conway ({} vertices), {TICKS} ticks, \
+         1 board, quantum {QUANTUM}",
+        ROWS * COLS
+    );
+
+    // The oracle: the same job alone on a private one-board machine.
+    let solo = {
+        let mut tools = SpiNNTools::new(ToolsConfig::virtual_spinn5(1))?;
+        let ids = build_grid(&mut tools)?;
+        tools.run_ticks(TICKS)?;
+        digest(ids.iter().map(|v| tools.recording(*v).to_vec()))
+    };
+
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("E17_multi_tenant_service".to_string()));
+    root.insert("machine_chips".to_string(), Json::Num(machine.n_chips() as f64));
+    root.insert("boards".to_string(), Json::Num(BOARDS as f64));
+    root.insert("vertices_per_tenant".to_string(), Json::Num((ROWS * COLS) as f64));
+    root.insert("ticks_per_tenant".to_string(), Json::Num(TICKS as f64));
+    root.insert("quantum_ticks".to_string(), Json::Num(QUANTUM as f64));
+
+    let mut per_job_ms_1 = 0.0;
+    let mut all_private = true;
+    for n in TENANCIES {
+        let (wall, digests, rounds) = scenario(n)?;
+        let private = digests.iter().all(|d| *d == solo);
+        all_private &= private;
+        let throughput = (n as u64 * TICKS) as f64 / (wall / 1e3);
+        let per_job = wall / n as f64;
+        if n == 1 {
+            per_job_ms_1 = per_job;
+        }
+        let overhead = per_job / per_job_ms_1;
+        println!(
+            "{n:>3} tenant(s): {wall:>9.1} ms, {throughput:>8.1} job-ticks/s, \
+             {per_job:>8.1} ms/job (x{overhead:.2} vs solo), {rounds} rounds, \
+             recordings {}",
+            if private { "PRIVATE (== solo digest)" } else { "DIVERGED" }
+        );
+        assert!(private, "{n}-tenant scenario: a tenant diverged from the solo oracle");
+        root.insert(format!("wall_ms_{n}"), Json::Num(wall));
+        root.insert(format!("throughput_job_ticks_per_s_{n}"), Json::Num(throughput));
+        root.insert(format!("per_job_ms_{n}"), Json::Num(per_job));
+        root.insert(format!("overhead_vs_solo_{n}"), Json::Num(overhead));
+        root.insert(format!("rounds_{n}"), Json::Num(rounds as f64));
+    }
+    root.insert("recordings_private".to_string(), Json::Bool(all_private));
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_service.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Board-aligned partitioning of one machine among tenants (DESIGN.md
+//! §11). SpiNNaker machines are built from 48-chip boards, each with
+//! its own Ethernet chip and host link, so the board is the natural
+//! isolation unit: giving a tenant whole boards gives it private IP-tag
+//! slots, a private host link, and a chip set no other tenant's
+//! placements or routes can touch.
+//!
+//! The allocator groups the machine's chips by their `nearest_ethernet`
+//! (the board identity SCAMP itself uses), derives board adjacency from
+//! the cross-board chip links, and hands out *connected* sets of free
+//! boards first-fit in deterministic board order. Freed boards return
+//! to the pool; boards that died under a tenant are retired for the
+//! lifetime of the service.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::machine::{ChipCoord, Machine, ALL_DIRECTIONS};
+
+/// Carves one machine into board-aligned partitions.
+pub struct BoardAllocator {
+    /// Board (Ethernet chip) -> the chips on that board.
+    boards: BTreeMap<ChipCoord, BTreeSet<ChipCoord>>,
+    /// Board -> boards reachable over at least one cross-board link.
+    adjacency: BTreeMap<ChipCoord, BTreeSet<ChipCoord>>,
+    /// Boards available for allocation.
+    free: BTreeSet<ChipCoord>,
+    /// Boards permanently removed from service (died under a tenant).
+    retired: BTreeSet<ChipCoord>,
+}
+
+impl BoardAllocator {
+    pub fn new(machine: &Machine) -> Self {
+        let mut boards: BTreeMap<ChipCoord, BTreeSet<ChipCoord>> = BTreeMap::new();
+        for c in machine.chip_coords() {
+            if let Some(eth) = machine.nearest_ethernet(c) {
+                boards.entry(eth).or_default().insert(c);
+            }
+        }
+        let board_of: BTreeMap<ChipCoord, ChipCoord> = boards
+            .iter()
+            .flat_map(|(eth, chips)| chips.iter().map(|c| (*c, *eth)))
+            .collect();
+        let mut adjacency: BTreeMap<ChipCoord, BTreeSet<ChipCoord>> = BTreeMap::new();
+        for (c, eth) in &board_of {
+            for d in ALL_DIRECTIONS {
+                if let Some(to) = machine.link_target(*c, d) {
+                    if let Some(other) = board_of.get(&to) {
+                        if other != eth {
+                            adjacency.entry(*eth).or_default().insert(*other);
+                            adjacency.entry(*other).or_default().insert(*eth);
+                        }
+                    }
+                }
+            }
+        }
+        let free = boards.keys().copied().collect();
+        Self { boards, adjacency, free, retired: BTreeSet::new() }
+    }
+
+    /// Total number of boards in the machine.
+    pub fn n_boards(&self) -> usize {
+        self.boards.len()
+    }
+
+    /// Boards currently free to allocate.
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Boards retired after dying under a tenant.
+    pub fn n_retired(&self) -> usize {
+        self.retired.len()
+    }
+
+    /// Allocate `n` free boards forming a connected set (so a tenant's
+    /// placements can always route inside its own partition), first-fit
+    /// from the lowest free board: a breadth-first growth from each
+    /// candidate seed in deterministic order. Returns `None` when no
+    /// connected set of `n` free boards exists right now — the caller
+    /// queues and retries after a free.
+    pub fn allocate(&mut self, n: usize) -> Option<Vec<ChipCoord>> {
+        if n == 0 || n > self.free.len() {
+            return None;
+        }
+        for seed in self.free.iter().copied().collect::<Vec<_>>() {
+            let mut taken: BTreeSet<ChipCoord> = BTreeSet::new();
+            let mut queue = VecDeque::from([seed]);
+            while let Some(b) = queue.pop_front() {
+                if taken.len() >= n {
+                    break;
+                }
+                if !taken.insert(b) {
+                    continue;
+                }
+                if let Some(next) = self.adjacency.get(&b) {
+                    // Deterministic: BTreeSet iteration is ordered.
+                    for nb in next {
+                        if self.free.contains(nb) && !taken.contains(nb) {
+                            queue.push_back(*nb);
+                        }
+                    }
+                }
+            }
+            if taken.len() == n {
+                for b in &taken {
+                    self.free.remove(b);
+                }
+                return Some(taken.into_iter().collect());
+            }
+        }
+        None
+    }
+
+    /// Return a tenant's boards to the pool. Boards in `dead` (their
+    /// host link or chips died under the tenant) are retired instead of
+    /// freed — nothing sound can be loaded onto them again.
+    pub fn free(&mut self, boards: &[ChipCoord], dead: &BTreeSet<ChipCoord>) {
+        for b in boards {
+            if dead.contains(b) {
+                self.retired.insert(*b);
+            } else if self.boards.contains_key(b) {
+                self.free.insert(*b);
+            }
+        }
+    }
+
+    /// Every chip of the given boards (a tenant's scope).
+    pub fn chips_of(&self, boards: &[ChipCoord]) -> BTreeSet<ChipCoord> {
+        boards
+            .iter()
+            .filter_map(|b| self.boards.get(b))
+            .flatten()
+            .copied()
+            .collect()
+    }
+
+    /// Every chip *not* on the given boards (a tenant's forbidden set —
+    /// including retired boards' chips, which stay forbidden forever).
+    pub fn chips_outside(&self, boards: &[ChipCoord]) -> BTreeSet<ChipCoord> {
+        let own: BTreeSet<ChipCoord> = boards.iter().copied().collect();
+        self.boards
+            .iter()
+            .filter(|(eth, _)| !own.contains(eth))
+            .flat_map(|(_, chips)| chips.iter().copied())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::front::config::MachineSpec;
+    use crate::front::config::ToolsConfig;
+
+    fn machine(spec: MachineSpec) -> Machine {
+        ToolsConfig::new(spec).machine_builder().build()
+    }
+
+    #[test]
+    fn groups_boards_and_allocates_connected_sets() {
+        let m = machine(MachineSpec::Boards(12));
+        let mut alloc = BoardAllocator::new(&m);
+        assert_eq!(alloc.n_boards(), 12);
+        assert_eq!(m.n_chips(), 576);
+
+        let a = alloc.allocate(3).expect("3 connected boards");
+        assert_eq!(a.len(), 3);
+        assert_eq!(alloc.n_free(), 9);
+        // Connected: every board reaches every other within the set.
+        let set: BTreeSet<ChipCoord> = a.iter().copied().collect();
+        let mut seen = BTreeSet::new();
+        let mut queue = VecDeque::from([a[0]]);
+        while let Some(b) = queue.pop_front() {
+            if !seen.insert(b) {
+                continue;
+            }
+            for nb in alloc.adjacency.get(&b).into_iter().flatten() {
+                if set.contains(nb) {
+                    queue.push_back(*nb);
+                }
+            }
+        }
+        assert_eq!(seen, set, "allocated boards are not connected");
+        // Scope and forbidden partition the machine's chips exactly.
+        let scope = alloc.chips_of(&a);
+        let outside = alloc.chips_outside(&a);
+        assert_eq!(scope.len() + outside.len(), m.n_chips());
+        assert!(scope.is_disjoint(&outside));
+        assert_eq!(scope.len(), 3 * 48);
+    }
+
+    #[test]
+    fn free_returns_boards_and_retires_dead_ones() {
+        let m = machine(MachineSpec::Boards(12));
+        let mut alloc = BoardAllocator::new(&m);
+        let a = alloc.allocate(2).unwrap();
+        let b = alloc.allocate(2).unwrap();
+        assert_eq!(alloc.n_free(), 8);
+        // Two tenants never share a board.
+        assert!(a.iter().all(|x| !b.contains(x)));
+
+        let dead: BTreeSet<ChipCoord> = [a[0]].into_iter().collect();
+        alloc.free(&a, &dead);
+        assert_eq!(alloc.n_free(), 9, "one board retired, one freed");
+        assert_eq!(alloc.n_retired(), 1);
+        // The retired board can never be allocated again.
+        let mut grabbed = Vec::new();
+        while let Some(more) = alloc.allocate(1) {
+            grabbed.extend(more);
+        }
+        assert!(!grabbed.contains(&a[0]));
+        assert_eq!(grabbed.len(), 9);
+    }
+
+    #[test]
+    fn refuses_oversized_requests() {
+        let m = machine(MachineSpec::Spinn5);
+        let mut alloc = BoardAllocator::new(&m);
+        assert_eq!(alloc.n_boards(), 1);
+        assert!(alloc.allocate(2).is_none());
+        assert!(alloc.allocate(0).is_none());
+        let one = alloc.allocate(1).unwrap();
+        assert_eq!(alloc.chips_of(&one).len(), 48);
+    }
+}

@@ -162,7 +162,14 @@ impl FastPath {
         opts: &DataPlaneOptions,
     ) -> anyhow::Result<FastPath> {
         let machine = sim.machine.clone();
-        let eths: Vec<ChipCoord> = machine.ethernet_chips().map(|c| (c.x, c.y)).collect();
+        // In a multi-tenant session the sim is scoped to one partition:
+        // the plane only installs on that tenant's boards (and the
+        // per-tenant `port_base` keeps host UDP ports disjoint).
+        let eths: Vec<ChipCoord> = machine
+            .ethernet_chips()
+            .map(|c| (c.x, c.y))
+            .filter(|c| sim.in_scope(*c))
+            .collect();
         anyhow::ensure!(!eths.is_empty(), "machine has no ethernet chip");
 
         // System tags must coexist with the graph tags already installed.
@@ -320,11 +327,16 @@ impl FastPath {
             let Some(plane) = boards.get(&board) else {
                 continue; // board without system cores: SCAMP fallback
             };
-            // Extraction reader: chip -> board gatherer.
+            // Extraction reader: chip -> board gatherer. A stream whose
+            // route would clip a chip outside the session scope is
+            // skipped (SCAMP fallback): a tenant must never append
+            // entries to another tenant's tables.
             if let Some(gatherer) = plane.gatherer {
                 let key = STREAM_KEY_BASE + (i as u32) * 2;
                 if let Ok(planned) = plan_tree(*chip, gatherer, key) {
-                    if fits(sim, &extra_entries, &planned) {
+                    if planned.iter().all(|(c, _)| sim.in_scope(*c))
+                        && fits(sim, &extra_entries, &planned)
+                    {
                         if let Some(p) = free_core(*chip) {
                             let core = CoreLocation::new(chip.0, chip.1, p);
                             let mut region = BTreeMap::new();
@@ -353,7 +365,9 @@ impl FastPath {
                     let core = CoreLocation::new(chip.0, chip.1, p);
                     let key = DATA_IN_KEY_BASE + (i as u32) * 2;
                     if let Ok(planned) = plan_tree(board, core, key) {
-                        if fits(sim, &extra_entries, &planned) {
+                        if planned.iter().all(|(c, _)| sim.in_scope(*c))
+                            && fits(sim, &extra_entries, &planned)
+                        {
                             let mut region = BTreeMap::new();
                             let mut w = ByteWriter::new();
                             w.u32(key);

@@ -55,6 +55,65 @@ pub struct LiveEvent {
     pub payload: Option<u32>,
 }
 
+/// A tenant-lifecycle event of the multi-tenant machine service
+/// (DESIGN.md §11): what happened to a named job, in service order.
+/// Host-side observers (dashboards, schedulers) subscribe to the log
+/// the way live data consumers subscribe to the LPG stream — both are
+/// the §6.9 "see what the machine is doing while it runs" channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LifecycleEvent {
+    /// The job entered the queue.
+    Submitted { tenant: String, boards: usize },
+    /// A partition was carved and the session came up on it.
+    Admitted { tenant: String, boards: usize, waited_rounds: u64 },
+    /// The first run quantum of a tenancy started.
+    RunStarted { tenant: String },
+    /// A supervised run self-healed inside the tenant's partition.
+    Healed { tenant: String, faults: usize },
+    /// The tenant was suspended and its partition withdrawn.
+    Evicted { tenant: String, reason: String },
+    /// The tenant resumed from a snapshot in a fresh partition.
+    Resumed { tenant: String, from_tick: u64 },
+    /// The job ran to completion and its boards were freed.
+    Finished { tenant: String, ticks: u64 },
+}
+
+impl LifecycleEvent {
+    /// The job the event is about.
+    pub fn tenant(&self) -> &str {
+        match self {
+            LifecycleEvent::Submitted { tenant, .. }
+            | LifecycleEvent::Admitted { tenant, .. }
+            | LifecycleEvent::RunStarted { tenant }
+            | LifecycleEvent::Healed { tenant, .. }
+            | LifecycleEvent::Evicted { tenant, .. }
+            | LifecycleEvent::Resumed { tenant, .. }
+            | LifecycleEvent::Finished { tenant, .. } => tenant,
+        }
+    }
+}
+
+/// Ordered log of every tenant's lifecycle, kept by the service.
+#[derive(Debug, Default)]
+pub struct LifecycleLog {
+    events: Vec<LifecycleEvent>,
+}
+
+impl LifecycleLog {
+    pub fn push(&mut self, event: LifecycleEvent) {
+        self.events.push(event);
+    }
+
+    pub fn events(&self) -> &[LifecycleEvent] {
+        &self.events
+    }
+
+    /// The events concerning one job, in order.
+    pub fn of_tenant(&self, tenant: &str) -> Vec<&LifecycleEvent> {
+        self.events.iter().filter(|e| e.tenant() == tenant).collect()
+    }
+}
+
 /// Sends events into the machine through a Reverse IP Tag Multicast
 /// Source's UDP port.
 pub struct LiveInjector {
@@ -76,5 +135,42 @@ impl LiveInjector {
             sim.host_send_udp(self.board, self.port, batch.encode())?;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_log_orders_and_filters_by_tenant() {
+        let mut log = LifecycleLog::default();
+        log.push(LifecycleEvent::Submitted { tenant: "a".into(), boards: 2 });
+        log.push(LifecycleEvent::Submitted { tenant: "b".into(), boards: 1 });
+        log.push(LifecycleEvent::Admitted {
+            tenant: "a".into(),
+            boards: 2,
+            waited_rounds: 0,
+        });
+        log.push(LifecycleEvent::RunStarted { tenant: "a".into() });
+        log.push(LifecycleEvent::Evicted {
+            tenant: "a".into(),
+            reason: "board died".into(),
+        });
+        log.push(LifecycleEvent::Resumed { tenant: "a".into(), from_tick: 40 });
+        log.push(LifecycleEvent::Finished { tenant: "a".into(), ticks: 100 });
+        assert_eq!(log.events().len(), 7);
+
+        let a = log.of_tenant("a");
+        assert_eq!(a.len(), 6, "b's submission is not a's history");
+        assert!(matches!(a[0], LifecycleEvent::Submitted { boards: 2, .. }));
+        assert!(matches!(
+            a.last().unwrap(),
+            LifecycleEvent::Finished { ticks: 100, .. }
+        ));
+        // An eviction is always followed (for this tenant) by a resume
+        // or nothing — here the resume carries the snapshot tick.
+        assert!(matches!(a[4], LifecycleEvent::Resumed { from_tick: 40, .. }));
+        assert_eq!(log.of_tenant("b").len(), 1);
     }
 }

@@ -5,6 +5,7 @@
 //! → data generation → loading → running in Figure-9 buffer cycles →
 //! extraction of results and provenance → resume/reset → close.
 
+mod allocator;
 mod buffer;
 mod checkpoint;
 mod config;
@@ -12,8 +13,10 @@ mod extraction;
 pub mod fabric_probe;
 mod live;
 mod provenance;
+mod service;
 mod tools;
 
+pub use allocator::BoardAllocator;
 pub use buffer::{plan_run_cycles, RunCyclePlan};
 pub use checkpoint::{
     CheckpointConfig, Checkpointer, FileCheckpointer, MemoryCheckpointer, RunSnapshot,
@@ -23,6 +26,9 @@ pub use config::{
     ToolsConfig,
 };
 pub use extraction::{DataPlaneOptions, FastPath, WriteStats};
-pub use live::{LiveEventListener, LiveInjector};
-pub use provenance::{HealReport, ProvenanceReport, RemapReport, VertexProvenance};
+pub use live::{LifecycleEvent, LifecycleLog, LiveEventListener, LiveInjector};
+pub use provenance::{
+    HealReport, ProvenanceReport, RemapReport, ServiceReport, TenantReport, VertexProvenance,
+};
+pub use service::MachineService;
 pub use tools::SpiNNTools;

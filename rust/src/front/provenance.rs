@@ -159,6 +159,12 @@ impl ProvenanceReport {
             });
         }
         for chip in sim.machine.chip_coords().collect::<Vec<_>>() {
+            // A scoped (multi-tenant) session reports only its own
+            // partition's routers: another tenant's drops are not this
+            // run's anomalies.
+            if !sim.in_scope(chip) {
+                continue;
+            }
             if let Some(stats) = sim.router_stats(chip) {
                 if stats.mc_dropped > 0 {
                     report.anomalies.push(format!(
@@ -193,6 +199,58 @@ impl ProvenanceReport {
             .iter()
             .filter_map(|v| v.counters.get(name))
             .sum()
+    }
+}
+
+/// One tenant's slice of a [`ServiceReport`] (DESIGN.md §11): where the
+/// job ran, which key window its multicast traffic was confined to, and
+/// what the tenancy cost it.
+#[derive(Debug, Clone, Default)]
+pub struct TenantReport {
+    pub name: String,
+    /// Ethernet chips of the boards the tenant finished on.
+    pub boards: Vec<ChipCoord>,
+    /// The `[base, limit)` multicast key window the session allocated
+    /// inside — pairwise disjoint across tenants by construction.
+    pub key_space: (u64, u64),
+    /// Final placements (label, core), all inside the partition.
+    pub placements: Vec<(String, CoreLocation)>,
+    /// Self-healing passes that ran inside this tenant's partition.
+    pub heals: usize,
+    /// Times the tenant was suspended and moved to a fresh partition.
+    pub evictions: usize,
+    /// Scheduler rounds spent queued before (first) admission.
+    pub queue_rounds: u64,
+    /// Simulated ticks the job completed.
+    pub ticks_done: u64,
+}
+
+/// What the multi-tenant machine service did with its machine: one
+/// entry per job, plus the pool-level accounting. Attached to the
+/// service's provenance the way [`HealReport`]s attach to a run's.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceReport {
+    pub tenants: Vec<TenantReport>,
+    /// Boards in the machine when the service opened.
+    pub boards_total: usize,
+    /// Boards retired after dying under a tenant.
+    pub boards_retired: usize,
+    /// Scheduler rounds the service ran.
+    pub rounds: u64,
+}
+
+impl ServiceReport {
+    /// Sanity invariant used by the tenant property suite: no two
+    /// tenants' key windows overlap.
+    pub fn key_windows_disjoint(&self) -> bool {
+        for (i, a) in self.tenants.iter().enumerate() {
+            for b in self.tenants.iter().skip(i + 1) {
+                if a.key_space.0 < b.key_space.1 && b.key_space.0 < a.key_space.1 {
+                    return false;
+                }
+            }
+        }
+        true
     }
 }
 

@@ -1,0 +1,728 @@
+//! The multi-tenant machine service (DESIGN.md §11): one live machine,
+//! partitioned board-by-board among many concurrent jobs.
+//!
+//! Real SpiNNaker installations put a job manager (spalloc) in front of
+//! the machine: users ask for boards, the manager carves a partition,
+//! and each job's SpiNNTools session runs against its slice as if it
+//! were a private machine. This module reproduces that layer on the
+//! simulator. A [`MachineService`] owns the single [`SimMachine`] and
+//! round-robins it among admitted tenants, one run *quantum* at a time;
+//! each tenant is a full [`SpiNNTools`] session made partition-aware by
+//! [`SpiNNTools::make_shared`]:
+//!
+//! - **placement/routing**: every chip outside the partition is in the
+//!   session's forbidden set on every mapping pass, and the sim's sweep
+//!   scope confines discovery, polling, signalling and provenance to
+//!   the partition while the machine is on loan;
+//! - **multicast keys**: each job allocates inside a private 16M-key
+//!   window (`job id << 24`), so two tenants' traffic can never share a
+//!   key even on the shared router fabric (the data plane's reserved
+//!   key ranges above `0xFF00_0000` stay global — its streams are
+//!   chip-disjoint by the partition instead);
+//! - **host data plane**: per-tenant UDP port windows (64 ports apart)
+//!   and per-board IP-tag slots on boards no other tenant owns.
+//!
+//! Admission is strict FIFO with head-of-line blocking (a small job
+//! never overtakes a big one — fairness is checked by the tenant
+//! property suite); freed boards return to the pool and are reused;
+//! boards that die under a tenant are retired. A tenant whose run fails
+//! (e.g. chaos killed enough of its partition that healing is
+//! exhausted) is *evicted*: suspended via its newest checkpoint,
+//! re-queued at the front, re-admitted into a fresh partition, and
+//! resumed from the snapshot (PR 6's suspend/resume machinery).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::rc::Rc;
+
+use crate::graph::VertexId;
+use crate::machine::router::RoutingTable;
+use crate::machine::{ChipCoord, Machine};
+use crate::simulator::{scamp, ChaosPlan, SimMachine};
+
+use super::allocator::BoardAllocator;
+use super::checkpoint::{Checkpointer, MemoryCheckpointer, RunSnapshot};
+use super::config::ToolsConfig;
+use super::live::{LifecycleEvent, LifecycleLog};
+use super::provenance::{ServiceReport, TenantReport};
+use super::tools::SpiNNTools;
+
+/// Keys per tenant window: 16M, so 255 windows fit below the data
+/// plane's reserved ranges at `0xFF00_0000`.
+const SLOT_KEYS: u64 = 1 << 24;
+
+/// Evictions before a job is declared failed instead of re-queued.
+const MAX_EVICTIONS: usize = 3;
+
+/// Where a job is in its service lifecycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum JobPhase {
+    /// In the queue (fresh, or suspended awaiting re-admission).
+    Waiting,
+    /// Owns a partition; gets a quantum every round.
+    Active,
+    Finished,
+    Failed,
+}
+
+/// A checkpoint store shared between the service and a tenant session:
+/// the session writes snapshots through it during runs, and the
+/// service reads the newest one back at eviction — surviving the
+/// session's `reset()`, which drops the session's *handle* but not the
+/// store.
+struct SharedCheckpointer(Rc<RefCell<MemoryCheckpointer>>);
+
+impl Checkpointer for SharedCheckpointer {
+    fn put_blob(&mut self, digest: u64, bytes: &[u8]) -> anyhow::Result<()> {
+        self.0.borrow_mut().put_blob(digest, bytes)
+    }
+    fn has_blob(&self, digest: u64) -> bool {
+        self.0.borrow().has_blob(digest)
+    }
+    fn get_blob(&self, digest: u64) -> anyhow::Result<Vec<u8>> {
+        self.0.borrow().get_blob(digest)
+    }
+    fn put_snapshot(&mut self, snapshot: &RunSnapshot) -> anyhow::Result<()> {
+        self.0.borrow_mut().put_snapshot(snapshot)
+    }
+    fn get_snapshot(&self, tick: u64) -> anyhow::Result<RunSnapshot> {
+        self.0.borrow().get_snapshot(tick)
+    }
+    fn remove_snapshot(&mut self, tick: u64) -> anyhow::Result<()> {
+        self.0.borrow_mut().remove_snapshot(tick)
+    }
+    fn snapshot_ticks(&self) -> Vec<u64> {
+        self.0.borrow().snapshot_ticks()
+    }
+}
+
+/// One job and its tenant session.
+struct Job {
+    name: String,
+    want_boards: usize,
+    ticks: u64,
+    tools: SpiNNTools,
+    vertices: Vec<VertexId>,
+    phase: JobPhase,
+    /// Ethernet chips of the boards currently (or last) held.
+    boards: Vec<ChipCoord>,
+    key_space: (u64, u64),
+    /// Snapshot store surviving session resets (see
+    /// [`SharedCheckpointer`]).
+    store: Rc<RefCell<MemoryCheckpointer>>,
+    /// Snapshot to resume from at the next quantum (set at
+    /// re-admission after an eviction).
+    resume_snap: Option<RunSnapshot>,
+    submitted_round: u64,
+    queued_since: u64,
+    first_admitted_round: Option<u64>,
+    evictions: usize,
+    /// Heal reports seen in the *current* run state (resets with it).
+    heals_seen: usize,
+    /// Heals across the whole job, all tenancies.
+    heals_total: usize,
+    run_started: bool,
+    fail_reason: Option<String>,
+}
+
+/// Partitions one simulated machine among many concurrent jobs.
+pub struct MachineService {
+    config: ToolsConfig,
+    /// The one live machine; `None` only transiently while on loan
+    /// inside a quantum.
+    sim: Option<SimMachine>,
+    allocator: BoardAllocator,
+    jobs: BTreeMap<u64, Job>,
+    /// Job ids awaiting (re-)admission, FIFO; evictions re-queue at
+    /// the front.
+    queue: VecDeque<u64>,
+    next_id: u64,
+    /// Ticks each active tenant runs per scheduler round.
+    quantum: u64,
+    lifecycle: LifecycleLog,
+    rounds: u64,
+}
+
+impl MachineService {
+    /// Boot the machine described by `config` and open the service on
+    /// it. `config` is also the template for every tenant session
+    /// (supervision, checkpointing, load/extraction methods); the
+    /// per-tenant key window and port window are overlaid per job.
+    pub fn new(config: ToolsConfig, quantum: u64) -> anyhow::Result<Self> {
+        anyhow::ensure!(quantum > 0, "service quantum must be at least one tick");
+        let machine = config.machine_builder().build();
+        let sim = SimMachine::boot(machine, config.sim.clone());
+        let allocator = BoardAllocator::new(&sim.machine);
+        anyhow::ensure!(allocator.n_boards() > 0, "machine has no boards to serve");
+        Ok(Self {
+            config,
+            sim: Some(sim),
+            allocator,
+            jobs: BTreeMap::new(),
+            queue: VecDeque::new(),
+            next_id: 0,
+            quantum,
+            lifecycle: LifecycleLog::default(),
+            rounds: 0,
+        })
+    }
+
+    /// Submit a job: `build` constructs its machine graph on a fresh
+    /// tenant session immediately; the job then queues for `boards`
+    /// connected boards and runs `ticks` timesteps once admitted.
+    /// Returns the job id.
+    pub fn submit(
+        &mut self,
+        name: &str,
+        boards: usize,
+        ticks: u64,
+        build: impl FnOnce(&mut SpiNNTools) -> anyhow::Result<Vec<VertexId>>,
+    ) -> anyhow::Result<u64> {
+        anyhow::ensure!(boards >= 1, "job {name} requests no boards");
+        anyhow::ensure!(
+            boards <= self.allocator.n_boards(),
+            "job {name} wants {boards} board(s); the machine has {}",
+            self.allocator.n_boards()
+        );
+        anyhow::ensure!(ticks >= 1, "job {name} runs no ticks");
+        let id = self.next_id;
+        anyhow::ensure!(
+            id < 255,
+            "multicast key space exhausted: at most 255 jobs per service lifetime"
+        );
+        // Port windows must stay within u16 for the data plane.
+        self.config
+            .fast_port
+            .checked_add((id as u16).saturating_mul(64).saturating_add(63))
+            .ok_or_else(|| anyhow::anyhow!("data-plane port window overflows u16"))?;
+        self.next_id += 1;
+        let mut tools = SpiNNTools::new(self.config.clone())?;
+        let vertices = build(&mut tools)?;
+        let job = Job {
+            name: name.to_string(),
+            want_boards: boards,
+            ticks,
+            tools,
+            vertices,
+            phase: JobPhase::Waiting,
+            boards: Vec::new(),
+            key_space: (id * SLOT_KEYS, (id + 1) * SLOT_KEYS),
+            store: Rc::new(RefCell::new(MemoryCheckpointer::new())),
+            resume_snap: None,
+            submitted_round: self.rounds,
+            queued_since: self.rounds,
+            first_admitted_round: None,
+            evictions: 0,
+            heals_seen: 0,
+            heals_total: 0,
+            run_started: false,
+            fail_reason: None,
+        };
+        self.lifecycle.push(LifecycleEvent::Submitted {
+            tenant: name.to_string(),
+            boards,
+        });
+        self.jobs.insert(id, job);
+        self.queue.push_back(id);
+        Ok(id)
+    }
+
+    /// One scheduler round: admit from the head of the queue while
+    /// partitions fit, then give every active tenant one run quantum.
+    pub fn tick_round(&mut self) -> anyhow::Result<()> {
+        self.rounds += 1;
+        self.admit_waiting()?;
+        let active: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.phase == JobPhase::Active)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in active {
+            self.run_quantum(id)?;
+        }
+        Ok(())
+    }
+
+    /// Drive scheduler rounds until every job has finished or failed.
+    /// A job whose request can no longer be satisfied (the head of the
+    /// queue, with nothing running and nothing admissible) is failed
+    /// rather than deadlocking the service.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<()> {
+        while self
+            .jobs
+            .values()
+            .any(|j| matches!(j.phase, JobPhase::Waiting | JobPhase::Active))
+        {
+            let before = self.progress_key();
+            self.tick_round()?;
+            if self.progress_key() == before {
+                let Some(head) = self.queue.pop_front() else {
+                    anyhow::bail!("service stalled with an empty queue");
+                };
+                let retired = self.allocator.n_retired();
+                let job = self
+                    .jobs
+                    .get_mut(&head)
+                    .ok_or_else(|| anyhow::anyhow!("queued job {head} unknown"))?;
+                job.phase = JobPhase::Failed;
+                job.fail_reason = Some(format!(
+                    "no connected set of {} free board(s) can ever form ({} retired)",
+                    job.want_boards, retired
+                ));
+                self.lifecycle.push(LifecycleEvent::Evicted {
+                    tenant: job.name.clone(),
+                    reason: job.fail_reason.clone().unwrap_or_default(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// `(ticks run, jobs settled, jobs active)` — unchanged across a
+    /// round means the service can make no further progress.
+    fn progress_key(&self) -> (u64, usize, usize) {
+        (
+            self.jobs.values().map(|j| j.tools.ticks_done()).sum(),
+            self.jobs
+                .values()
+                .filter(|j| matches!(j.phase, JobPhase::Finished | JobPhase::Failed))
+                .count(),
+            self.jobs
+                .values()
+                .filter(|j| j.phase == JobPhase::Active)
+                .count(),
+        )
+    }
+
+    /// Strict FIFO admission with head-of-line blocking: the head is
+    /// admitted as soon as a connected partition of its size exists;
+    /// nothing behind it may overtake.
+    fn admit_waiting(&mut self) -> anyhow::Result<()> {
+        while let Some(&id) = self.queue.front() {
+            let want = self
+                .jobs
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("queued job {id} unknown"))?
+                .want_boards;
+            let Some(boards) = self.allocator.allocate(want) else {
+                break;
+            };
+            self.queue.pop_front();
+            self.admit(id, boards)?;
+        }
+        Ok(())
+    }
+
+    fn admit(&mut self, id: u64, boards: Vec<ChipCoord>) -> anyhow::Result<()> {
+        let scope = self.allocator.chips_of(&boards);
+        let forbidden = self.allocator.chips_outside(&boards);
+        let fast_port = self.config.fast_port + (id as u16) * 64;
+        let rounds = self.rounds;
+        let job = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("admitting unknown job {id}"))?;
+        if job.first_admitted_round.is_some() {
+            // Re-admission after an eviction: new partition, same key
+            // window (the snapshot's key allocations stay valid).
+            job.tools.set_partition(scope, forbidden)?;
+            let newest = job.store.borrow().snapshot_ticks().last().copied();
+            job.resume_snap = match newest {
+                Some(tick) => Some(job.store.borrow().get_snapshot(tick)?),
+                None => None,
+            };
+            if let Some(snap) = &mut job.resume_snap {
+                // Chaos events captured pending in the snapshot were
+                // armed against the *old* partition — replaying them
+                // onto the new one (or onto the retired board) would be
+                // nonsense, so an eviction discharges them.
+                snap.pending_chaos.clear();
+            }
+        } else {
+            job.tools
+                .make_shared(scope, forbidden, job.key_space, fast_port)?;
+            job.first_admitted_round = Some(rounds);
+        }
+        // The session's reset() drops its checkpointer handle, so the
+        // shared store is (re-)installed at every admission.
+        job.tools
+            .set_checkpointer(Box::new(SharedCheckpointer(job.store.clone())));
+        job.phase = JobPhase::Active;
+        job.boards = boards;
+        self.lifecycle.push(LifecycleEvent::Admitted {
+            tenant: job.name.clone(),
+            boards: job.boards.len(),
+            waited_rounds: rounds.saturating_sub(job.queued_since + 1),
+        });
+        Ok(())
+    }
+
+    /// Lend the machine to one tenant for a quantum of ticks, then take
+    /// it back — on success *and* on failure (a failing tenant must
+    /// never walk off with the machine).
+    fn run_quantum(&mut self, id: u64) -> anyhow::Result<()> {
+        let sim = self
+            .sim
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("service machine missing at quantum start"))?;
+        let quantum = self.quantum;
+        let job = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("running unknown job {id}"))?;
+        job.tools.lend_sim(sim)?;
+        if !job.run_started {
+            job.run_started = true;
+            self.lifecycle.push(LifecycleEvent::RunStarted {
+                tenant: job.name.clone(),
+            });
+        }
+        let res = Self::drive_tenant(job, quantum, &mut self.lifecycle);
+        let sim = job.tools.reclaim_sim()?;
+        self.sim = Some(sim);
+        // Surface any self-heals that ran inside the quantum.
+        let heals = job.tools.heal_reports().len();
+        if heals > job.heals_seen {
+            let faults: usize = job.tools.heal_reports()[job.heals_seen..]
+                .iter()
+                .map(|h| h.faults.len())
+                .sum();
+            job.heals_total += heals - job.heals_seen;
+            job.heals_seen = heals;
+            self.lifecycle.push(LifecycleEvent::Healed {
+                tenant: job.name.clone(),
+                faults,
+            });
+        }
+        match res {
+            Ok(()) if job.tools.ticks_done() >= job.ticks => self.finish(id),
+            Ok(()) => Ok(()),
+            Err(e) => self.evict(id, &e.to_string()),
+        }
+    }
+
+    /// One tenant's quantum: resume from a pending snapshot first
+    /// (re-admission), then run up to `quantum` of the remaining ticks.
+    fn drive_tenant(
+        job: &mut Job,
+        quantum: u64,
+        lifecycle: &mut LifecycleLog,
+    ) -> anyhow::Result<()> {
+        if let Some(snap) = job.resume_snap.take() {
+            let from = snap.tick;
+            job.tools.resume_from(&snap)?;
+            lifecycle.push(LifecycleEvent::Resumed {
+                tenant: job.name.clone(),
+                from_tick: from,
+            });
+        }
+        let remaining = job.ticks.saturating_sub(job.tools.ticks_done());
+        if remaining == 0 {
+            return Ok(());
+        }
+        job.tools.run_ticks(remaining.min(quantum))
+    }
+
+    /// The job ran all its ticks: sweep its partition clean, free the
+    /// boards, keep the session (and its recordings) readable.
+    fn finish(&mut self, id: u64) -> anyhow::Result<()> {
+        self.release_partition(id)?;
+        let job = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("finishing unknown job {id}"))?;
+        job.phase = JobPhase::Finished;
+        self.lifecycle.push(LifecycleEvent::Finished {
+            tenant: job.name.clone(),
+            ticks: job.tools.ticks_done(),
+        });
+        Ok(())
+    }
+
+    /// The tenant's quantum failed (typically: chaos outran its healing
+    /// budget). Suspend via the newest checkpoint, withdraw the
+    /// partition, and re-queue at the front for a fresh one — or fail
+    /// the job outright after [`MAX_EVICTIONS`].
+    fn evict(&mut self, id: u64, reason: &str) -> anyhow::Result<()> {
+        self.release_partition(id)?;
+        let rounds = self.rounds;
+        let job = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("evicting unknown job {id}"))?;
+        job.evictions += 1;
+        // The session survives eviction; the run state does not. Its
+        // snapshots live in the shared store, picked back up at
+        // re-admission.
+        job.tools.reset();
+        job.heals_seen = 0;
+        self.lifecycle.push(LifecycleEvent::Evicted {
+            tenant: job.name.clone(),
+            reason: reason.to_string(),
+        });
+        if job.evictions > MAX_EVICTIONS {
+            job.phase = JobPhase::Failed;
+            job.fail_reason = Some(format!("evicted {} times; last: {reason}", job.evictions));
+        } else {
+            job.phase = JobPhase::Waiting;
+            job.queued_since = rounds;
+            self.queue.push_front(id);
+        }
+        Ok(())
+    }
+
+    /// Sweep a leaving tenant's partition (unload cores, clear routing
+    /// tables and tags on every board the host can still reach) and
+    /// return its boards to the pool, retiring the dead ones.
+    fn release_partition(&mut self, id: u64) -> anyhow::Result<()> {
+        let job = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("releasing unknown job {id}"))?;
+        // `job.boards` is kept as "last held" for reporting; the
+        // allocator is the owner of record, and a re-admission
+        // overwrites it.
+        let boards = job.boards.clone();
+        let scope = self.allocator.chips_of(&boards);
+        let mut sim = self
+            .sim
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("service machine missing at release"))?;
+        let swept = Self::sweep_partition(&mut sim, &scope, &boards);
+        let dead: BTreeSet<ChipCoord> = {
+            let dead_chips = sim.dead_chips();
+            boards
+                .iter()
+                .filter(|b| sim.host_unreachable(**b) || dead_chips.contains(*b))
+                .copied()
+                .collect()
+        };
+        self.sim = Some(sim);
+        self.allocator.free(&boards, &dead);
+        swept
+    }
+
+    /// Scrub every trace of a tenancy off its boards, so the next
+    /// tenant admitted onto them starts from a machine
+    /// indistinguishable from freshly booted (modulo the SDRAM bump
+    /// allocator's high-water mark): cores unloaded, routing tables
+    /// emptied, IP tag slots freed. Chips the host can no longer reach
+    /// are skipped — they are retired with their board.
+    fn sweep_partition(
+        sim: &mut SimMachine,
+        scope: &BTreeSet<ChipCoord>,
+        boards: &[ChipCoord],
+    ) -> anyhow::Result<()> {
+        sim.set_scope(Some(scope.clone()));
+        let res = (|| -> anyhow::Result<()> {
+            for (loc, _) in scamp::core_states(sim) {
+                scamp::unload_app(sim, loc)?;
+            }
+            let dead = sim.dead_chips();
+            for chip in scope {
+                if sim.host_unreachable(*chip) || dead.contains(chip) {
+                    continue;
+                }
+                scamp::load_routing_table(sim, *chip, RoutingTable::new())?;
+            }
+            for board in boards {
+                if sim.host_unreachable(*board) || dead.contains(board) {
+                    continue;
+                }
+                scamp::clear_tags(sim, *board)?;
+            }
+            Ok(())
+        })();
+        sim.set_scope(None);
+        res
+    }
+
+    // -- results and introspection ---------------------------------------
+
+    /// A finished (or running) job's recording for one of its vertices.
+    pub fn recording(&self, id: u64, v: VertexId) -> &[u8] {
+        self.jobs
+            .get(&id)
+            .map(|j| j.tools.recording(v))
+            .unwrap_or(&[])
+    }
+
+    /// The vertex ids the job's build closure returned.
+    pub fn vertices(&self, id: u64) -> &[VertexId] {
+        self.jobs
+            .get(&id)
+            .map(|j| j.vertices.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Ethernet chips of the boards the job currently holds — or last
+    /// held, for a job whose partition has been released.
+    pub fn boards_of(&self, id: u64) -> &[ChipCoord] {
+        self.jobs
+            .get(&id)
+            .map(|j| j.boards.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn is_finished(&self, id: u64) -> bool {
+        self.jobs
+            .get(&id)
+            .is_some_and(|j| j.phase == JobPhase::Finished)
+    }
+
+    pub fn is_failed(&self, id: u64) -> bool {
+        self.jobs
+            .get(&id)
+            .is_some_and(|j| j.phase == JobPhase::Failed)
+    }
+
+    /// Jobs still queued for admission.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The tenant session (recordings, provenance, mapping) of a job.
+    pub fn session(&self, id: u64) -> Option<&SpiNNTools> {
+        self.jobs.get(&id).map(|j| &j.tools)
+    }
+
+    /// Mutable tenant session — the chaos tests inject fault plans
+    /// through this.
+    pub fn session_mut(&mut self, id: u64) -> Option<&mut SpiNNTools> {
+        self.jobs.get_mut(&id).map(|j| &mut j.tools)
+    }
+
+    /// Inject a chaos plan into one tenant's next quantum.
+    pub fn inject_chaos(&mut self, id: u64, plan: ChaosPlan) -> anyhow::Result<()> {
+        self.jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("chaos for unknown job {id}"))?
+            .tools
+            .inject_chaos(plan);
+        Ok(())
+    }
+
+    /// The machine the service is partitioning.
+    pub fn machine(&self) -> Option<&Machine> {
+        self.sim.as_ref().map(|s| &s.machine)
+    }
+
+    /// The ordered tenant-lifecycle log (§6.9 live channel).
+    pub fn lifecycle(&self) -> &LifecycleLog {
+        &self.lifecycle
+    }
+
+    /// Per-tenant accounting for provenance (DESIGN.md §11).
+    pub fn report(&self) -> ServiceReport {
+        let rounds = self.rounds;
+        let tenants = self
+            .jobs
+            .values()
+            .map(|j| TenantReport {
+                name: j.name.clone(),
+                boards: j.boards.clone(),
+                key_space: j.key_space,
+                placements: j
+                    .tools
+                    .provenance()
+                    .vertices
+                    .iter()
+                    .map(|v| (v.label.clone(), v.placement))
+                    .collect(),
+                heals: j.heals_total,
+                evictions: j.evictions,
+                queue_rounds: j
+                    .first_admitted_round
+                    .unwrap_or(rounds)
+                    .saturating_sub(j.submitted_round + 1),
+                ticks_done: j.tools.ticks_done(),
+            })
+            .collect();
+        ServiceReport {
+            tenants,
+            boards_total: self.allocator.n_boards(),
+            boards_retired: self.allocator.n_retired(),
+            rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+    use crate::front::config::MachineSpec;
+
+    /// A 3-cell blinker row: oscillates with period 2.
+    fn blinker(tools: &mut SpiNNTools) -> anyhow::Result<Vec<VertexId>> {
+        let ids = vec![
+            tools.add_machine_vertex(ConwayCellVertex::arc(0, 0, true))?,
+            tools.add_machine_vertex(ConwayCellVertex::arc(0, 1, true))?,
+            tools.add_machine_vertex(ConwayCellVertex::arc(0, 2, true))?,
+        ];
+        for a in 0..3usize {
+            for b in 0..3usize {
+                if a != b {
+                    tools.add_machine_edge(ids[a], ids[b], STATE_PARTITION)?;
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    #[test]
+    fn one_board_machine_serialises_two_jobs_fifo() {
+        let config = ToolsConfig::new(MachineSpec::Spinn5);
+        let mut svc = MachineService::new(config, 2).unwrap();
+        let a = svc.submit("a", 1, 4, blinker).unwrap();
+        let b = svc.submit("b", 1, 4, blinker).unwrap();
+        // One board: b must wait for a's boards to free.
+        svc.tick_round().unwrap();
+        assert_eq!(svc.queue_len(), 1, "b queued behind a");
+        svc.run_to_completion().unwrap();
+        assert!(svc.is_finished(a) && svc.is_finished(b));
+        // Both see the same physics, sequentially, on reused boards.
+        let va = svc.vertices(a).to_vec();
+        let vb = svc.vertices(b).to_vec();
+        assert_eq!(svc.recording(a, va[0]), svc.recording(b, vb[0]));
+        assert_eq!(svc.recording(a, va[0]), &[1, 1, 1, 1]);
+        // FIFO order is visible in the lifecycle log.
+        let finishes: Vec<&str> = svc
+            .lifecycle()
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                LifecycleEvent::Finished { tenant, .. } => Some(tenant.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(finishes, ["a", "b"]);
+        let report = svc.report();
+        assert!(report.key_windows_disjoint());
+        assert_eq!(report.boards_retired, 0);
+    }
+
+    #[test]
+    fn two_tenants_share_a_machine_concurrently() {
+        let config = ToolsConfig::new(MachineSpec::Boards(3));
+        let mut svc = MachineService::new(config, 2).unwrap();
+        let a = svc.submit("a", 1, 6, blinker).unwrap();
+        let b = svc.submit("b", 1, 6, blinker).unwrap();
+        svc.tick_round().unwrap();
+        // Both admitted at once on disjoint boards.
+        let ba = svc.boards_of(a).to_vec();
+        let bb = svc.boards_of(b).to_vec();
+        assert!(!ba.is_empty() && !bb.is_empty());
+        assert!(ba.iter().all(|x| !bb.contains(x)));
+        svc.run_to_completion().unwrap();
+        let va = svc.vertices(a).to_vec();
+        assert_eq!(svc.recording(a, va[1]), &[1, 1, 1, 1, 1, 1]);
+        let vb = svc.vertices(b).to_vec();
+        assert_eq!(
+            svc.recording(a, va[0]),
+            svc.recording(b, vb[0]),
+            "tenants on different boards see identical physics"
+        );
+    }
+}

@@ -120,6 +120,27 @@ struct ReloadSummary {
     stages_rerun: usize,
 }
 
+/// A tenant session's share of one physical machine (the multi-tenant
+/// [`super::MachineService`]). The service owns the single live
+/// [`SimMachine`] and *lends* it to one session at a time; between
+/// quanta the session's run state holds a chipless
+/// [`SimMachine::hollow`] placeholder. While on loan the sim's scope is
+/// set to this session's partition, so every host-side sweep (core
+/// polls, signals, rediscovery, router provenance) is confined to it.
+struct SharedSession {
+    /// Chips of this tenant's partition — the sim scope while on loan.
+    scope: BTreeSet<ChipCoord>,
+    /// Chips outside the partition (other tenants' and retired boards),
+    /// quarantined from placement and routing on every mapping pass.
+    forbidden: BTreeSet<ChipCoord>,
+    /// The lent machine, parked here when no run state exists yet to
+    /// hold it (first run, or a resume after eviction).
+    lent: Option<SimMachine>,
+    /// Whether the service's machine currently lives in this session
+    /// (in `lent` or as the run state's sim).
+    holding: bool,
+}
+
 /// The SpiNNTools engine (Figure 8): setup → graphs → run → results.
 pub struct SpiNNTools {
     config: ToolsConfig,
@@ -147,6 +168,10 @@ pub struct SpiNNTools {
     /// What the most recent reconcile threw away, when it had no
     /// snapshot to restore from (surfaced as a provenance anomaly).
     discard_note: Option<String>,
+    /// `Some` when this session is a tenant of a shared machine (the
+    /// multi-tenant service): partition scope, forbidden chips, and the
+    /// loan slot for the service's machine.
+    shared: Option<SharedSession>,
     pub notifications: NotificationProtocol,
 }
 
@@ -172,6 +197,7 @@ impl SpiNNTools {
             pending_chaos: None,
             checkpointer: None,
             discard_note: None,
+            shared: None,
             notifications: NotificationProtocol::default(),
         })
     }
@@ -203,6 +229,124 @@ impl SpiNNTools {
     /// The self-healing passes of the current run state, in order.
     pub fn heal_reports(&self) -> &[HealReport] {
         self.state.as_ref().map(|s| s.heal_reports.as_slice()).unwrap_or(&[])
+    }
+
+    // -- shared (multi-tenant) sessions (DESIGN.md §11) ----------------------
+
+    /// Turn this session into a tenant of a shared machine: placement
+    /// and routing are confined to `scope`, the `forbidden` chips
+    /// (everyone else's, plus retired boards) are quarantined on every
+    /// mapping pass, multicast keys are allocated inside `key_space =
+    /// [base, limit)`, and the bulk data plane binds its host UDP ports
+    /// from `fast_port`. Called by [`super::MachineService`] at
+    /// admission, before the first loan.
+    pub fn make_shared(
+        &mut self,
+        scope: BTreeSet<ChipCoord>,
+        forbidden: BTreeSet<ChipCoord>,
+        key_space: (u64, u64),
+        fast_port: u16,
+    ) -> anyhow::Result<()> {
+        self.ensure_not_running("enter a shared session")?;
+        anyhow::ensure!(key_space.0 < key_space.1, "empty tenant key window");
+        anyhow::ensure!(
+            key_space.1 <= super::extraction::STREAM_KEY_BASE as u64,
+            "tenant key window {:#x}..{:#x} collides with the data-plane key ranges",
+            key_space.0,
+            key_space.1
+        );
+        self.config.mapping.key_space = key_space;
+        self.config.fast_port = fast_port;
+        self.shared = Some(SharedSession {
+            scope,
+            forbidden,
+            lent: None,
+            holding: false,
+        });
+        Ok(())
+    }
+
+    /// Move a shared session to a new partition (re-admission after an
+    /// eviction). The key window is untouched on purpose: a snapshot
+    /// being resumed carries key allocations from the old partition,
+    /// and they stay valid precisely because the window follows the
+    /// tenant, not the boards.
+    pub fn set_partition(
+        &mut self,
+        scope: BTreeSet<ChipCoord>,
+        forbidden: BTreeSet<ChipCoord>,
+    ) -> anyhow::Result<()> {
+        let sh = self
+            .shared
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("set_partition on a non-shared session"))?;
+        anyhow::ensure!(
+            !sh.holding,
+            "cannot move the partition while the machine is on loan"
+        );
+        sh.scope = scope;
+        sh.forbidden = forbidden;
+        Ok(())
+    }
+
+    /// Accept the service's machine on loan for one run quantum. The
+    /// sim's sweep scope becomes this tenant's partition; the machine
+    /// lands in the run state if one exists (replacing the hollow
+    /// placeholder), else it is parked for the next
+    /// [`Self::run_ticks`] / [`Self::resume_from`].
+    pub fn lend_sim(&mut self, mut sim: SimMachine) -> anyhow::Result<()> {
+        let sh = self
+            .shared
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("lend_sim on a non-shared session"))?;
+        anyhow::ensure!(!sh.holding, "machine already on loan to this session");
+        sim.set_scope(Some(sh.scope.clone()));
+        match self.state.as_mut() {
+            Some(state) => state.sim = sim,
+            None => sh.lent = Some(sim),
+        }
+        sh.holding = true;
+        Ok(())
+    }
+
+    /// Return the machine to the service after a quantum, leaving a
+    /// hollow placeholder behind. The sweep scope is lifted on the way
+    /// out; the run state (recordings included) survives and stays
+    /// readable between loans.
+    pub fn reclaim_sim(&mut self) -> anyhow::Result<SimMachine> {
+        let sh = self
+            .shared
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("reclaim_sim on a non-shared session"))?;
+        anyhow::ensure!(sh.holding, "machine is not on loan to this session");
+        let mut sim = match sh.lent.take() {
+            Some(sim) => sim,
+            None => {
+                let state = self.state.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("shared session lost the machine it was holding")
+                })?;
+                std::mem::replace(&mut state.sim, SimMachine::hollow())
+            }
+        };
+        sim.set_scope(None);
+        sh.holding = false;
+        Ok(sim)
+    }
+
+    /// Whether this session is a tenant of a shared machine.
+    pub fn is_shared(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// If a shared session's on-loan machine is attached to the run
+    /// state, detach it (scope intact — it is still on loan) so tearing
+    /// the state down cannot drop the service's only machine.
+    fn park_lent_sim(&mut self) {
+        if let (Some(sh), Some(state)) = (self.shared.as_mut(), self.state.as_mut()) {
+            if sh.holding && sh.lent.is_none() {
+                sh.lent = Some(std::mem::replace(&mut state.sim, SimMachine::hollow()));
+            }
+        }
     }
 
     // -- graph creation (§6.2) ---------------------------------------------
@@ -398,6 +542,9 @@ impl SpiNNTools {
             "it is an error to add vertices to both the application and \
              machine graphs (§6.2)"
         );
+        if self.shared.is_some() {
+            return self.prepare_run_shared(ticks);
+        }
 
         // ---- machine discovery (§6.3.1) --------------------------------
         // Boot-faulted resources (§2's blacklist) are excluded here, so
@@ -430,7 +577,107 @@ impl SpiNNTools {
             machine.n_application_cores()
         );
         let mut sim = SimMachine::boot(machine.clone(), self.config.sim.clone());
+        let res = self.prepare_tail(
+            ticks,
+            machine,
+            run_graph,
+            graph_mapping,
+            &BTreeSet::new(),
+            &mut sim,
+        );
+        self.finish_prepare(res, sim)
+    }
 
+    /// [`Self::prepare_run`] for a shared (multi-tenant) session: no
+    /// machine is booted here — it arrives on loan from the
+    /// [`super::MachineService`], already scoped to this tenant's
+    /// partition — and every chip outside the partition rides into the
+    /// mapper as forbidden, on top of whatever has actually died.
+    fn prepare_run_shared(&mut self, ticks: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.app_graph.n_vertices() == 0,
+            "application graphs are not supported in shared (multi-tenant) sessions"
+        );
+        let run_graph = self.machine_graph.clone();
+        anyhow::ensure!(
+            run_graph.vertices().all(|(_, v)| v.virtual_link().is_none()),
+            "virtual device vertices are not supported in shared sessions"
+        );
+        let (mut sim, forbidden) = {
+            let sh = self
+                .shared
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("shared prepare without a shared session"))?;
+            anyhow::ensure!(
+                sh.holding,
+                "shared session has no machine on loan; the service must lend it first"
+            );
+            let sim = sh.lent.take().ok_or_else(|| {
+                anyhow::anyhow!("shared session machine is held by a previous run; reset() first")
+            })?;
+            let mut forbidden = sh.forbidden.clone();
+            forbidden.extend(sim.dead_chips());
+            (sim, forbidden)
+        };
+        let machine = sim.machine.clone();
+        // Capacity is judged against the partition, not the (shared)
+        // machine: the mapper never sees the other tenants' cores.
+        let in_scope_cores: usize = machine
+            .chips()
+            .filter(|c| sim.in_scope((c.x, c.y)))
+            .map(|c| c.application_processors().count())
+            .sum();
+        anyhow::ensure!(
+            run_graph.n_vertices() <= in_scope_cores,
+            "graph needs {} cores; partition has {}",
+            run_graph.n_vertices(),
+            in_scope_cores
+        );
+        let res = self.prepare_tail(ticks, machine, run_graph, None, &forbidden, &mut sim);
+        self.finish_prepare(res, sim)
+    }
+
+    /// Land the prepared machine: on success it becomes the new run
+    /// state's sim (replacing the hollow placeholder
+    /// [`Self::prepare_tail`] left there); on failure in a shared
+    /// session it goes back into the loan slot — it is the service's
+    /// only machine, and an error must not drop it.
+    fn finish_prepare(&mut self, res: anyhow::Result<()>, sim: SimMachine) -> anyhow::Result<()> {
+        match res {
+            Ok(()) => {
+                let state = self
+                    .state
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("prepare finished without a run state"))?;
+                state.sim = sim;
+                self.mapped_revisions = Some(self.graph_revisions());
+                Ok(())
+            }
+            Err(e) => {
+                if let Some(sh) = self.shared.as_mut() {
+                    sh.lent = Some(sim);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Everything after machine acquisition, shared between the booted
+    /// (exclusive) and on-loan (shared) paths: mapping, data
+    /// generation, run-cycle planning, loading, and the start signal.
+    /// Works through `sim` by reference and leaves a hollow placeholder
+    /// in the new run state — [`Self::finish_prepare`] decides where
+    /// the real machine lands.
+    #[allow(clippy::too_many_arguments)]
+    fn prepare_tail(
+        &mut self,
+        ticks: u64,
+        machine: Machine,
+        run_graph: MachineGraph,
+        graph_mapping: Option<GraphMapping>,
+        forbidden: &BTreeSet<ChipCoord>,
+        sim: &mut SimMachine,
+    ) -> anyhow::Result<()> {
         // ---- mapping (§6.3.2), on the Figure-10 engine ------------------
         let outcome = map_graph_incremental(
             &mut self.pipeline,
@@ -438,7 +685,7 @@ impl SpiNNTools {
             &run_graph,
             &self.config.mapping,
             &BTreeSet::new(),
-            &BTreeSet::new(),
+            forbidden,
         )?;
         let mapping = outcome.mapping;
         let remap = RemapReport::from_stages(
@@ -468,13 +715,13 @@ impl SpiNNTools {
 
         // ---- loading (§6.3.4) -------------------------------------------
         for (chip, table) in &mapping.tables {
-            scamp::load_routing_table(&mut sim, *chip, table.clone())?;
+            scamp::load_routing_table(sim, *chip, table.clone())?;
         }
         for tag in mapping.iptags.values() {
-            scamp::set_iptag(&mut sim, tag.board, tag.tag, &tag.host, tag.port, tag.strip_sdp)?;
+            scamp::set_iptag(sim, tag.board, tag.tag, &tag.host, tag.port, tag.strip_sdp)?;
         }
         for rtag in mapping.reverse_iptags.values() {
-            scamp::set_reverse_iptag(&mut sim, rtag.board, rtag.port, rtag.destination)?;
+            scamp::set_reverse_iptag(sim, rtag.board, rtag.port, rtag.destination)?;
         }
 
         // Bulk data plane (system cores outside the user graph) — set up
@@ -507,13 +754,13 @@ impl SpiNNTools {
                 data_in: self.config.loading == LoadMethod::FastMulticast,
                 threads: self.config.data_plane_threads,
             };
-            match FastPath::install(&mut sim, &chips, picker, &opts) {
+            match FastPath::install(sim, &chips, picker, &opts) {
                 Ok(fp) => {
                     // Start the plane's system binaries now — the user
                     // graph is not loaded yet, so only they are Ready —
                     // else the data-in cores could not serve the region
                     // load below (their on_start reads the stream config).
-                    scamp::signal_start(&mut sim)?;
+                    scamp::signal_start(sim)?;
                     (Some(fp), None)
                 }
                 Err(e) => (None, Some(e.to_string())),
@@ -545,7 +792,7 @@ impl SpiNNTools {
                 && fast_path.as_ref().is_some_and(|fp| fp.has_writer(loc.chip()));
             if self.config.loading == LoadMethod::Scamp {
                 scamp::load_app_named(
-                    &mut sim,
+                    sim,
                     loc,
                     &vertex.binary_name(),
                     app,
@@ -555,16 +802,16 @@ impl SpiNNTools {
             } else {
                 let mut table = BTreeMap::new();
                 for (id, data) in regions {
-                    let addr = scamp::alloc_sdram(&mut sim, loc.chip(), data.len() as u32)?;
+                    let addr = scamp::alloc_sdram(sim, loc.chip(), data.len() as u32)?;
                     table.insert(id, (addr, data.len() as u32));
                     if use_fast {
                         fast_reqs.push((loc.chip(), addr, data));
                     } else if !data.is_empty() {
-                        scamp::write_sdram_batched(&mut sim, loc.chip(), addr, &data)?;
+                        scamp::write_sdram_batched(sim, loc.chip(), addr, &data)?;
                     }
                 }
                 scamp::install_app(
-                    &mut sim,
+                    sim,
                     loc,
                     &vertex.binary_name(),
                     app,
@@ -585,7 +832,7 @@ impl SpiNNTools {
                 .iter()
                 .map(|(chip, addr, data)| (*chip, *addr, data.as_slice()))
                 .collect();
-            fp.write_many(&mut sim, &reqs)?;
+            fp.write_many(sim, &reqs)?;
         }
 
         // ---- database + notifications (Figure 8) ------------------------
@@ -593,9 +840,11 @@ impl SpiNNTools {
         self.notifications.database_ready(&database);
 
         // ---- running (§6.3.5) -------------------------------------------
-        scamp::signal_start(&mut sim)?;
+        scamp::signal_start(sim)?;
         let state = RunState {
-            sim,
+            // The real machine is the caller's local; finish_prepare
+            // swaps it in over this placeholder once the tail succeeds.
+            sim: SimMachine::hollow(),
             run_graph,
             graph_mapping,
             mapping,
@@ -614,7 +863,6 @@ impl SpiNNTools {
             heal_reports: Vec::new(),
         };
         self.state = Some(state);
-        self.mapped_revisions = Some(self.graph_revisions());
         Ok(())
     }
 
@@ -726,6 +974,7 @@ impl SpiNNTools {
     /// fallback is never silent.
     fn full_remap(&mut self, ticks: u64, why: &str) -> anyhow::Result<()> {
         self.remap_note = Some(format!("graph change forced a full re-map: {why}"));
+        self.park_lent_sim();
         self.state = None;
         self.pipeline.clear();
         if let Some(store) = self.checkpointer.as_deref_mut() {
@@ -773,15 +1022,33 @@ impl SpiNNTools {
         forbidden: &BTreeSet<ChipCoord>,
     ) -> anyhow::Result<ReloadSummary> {
         let run_graph = self.machine_graph.clone();
+        // In a shared session the machine view still contains the other
+        // tenants' chips (re-discovery filters its *sweep* to the scope,
+        // not the clone), so the partition boundary rides in as
+        // forbidden chips and capacity is judged against the partition
+        // alone.
+        let mut forbidden_all = forbidden.clone();
+        let capacity: usize = match &self.shared {
+            Some(sh) => {
+                forbidden_all.extend(sh.forbidden.iter().copied());
+                machine
+                    .chips()
+                    .filter(|c| sh.scope.contains(&(c.x, c.y)))
+                    .map(|c| c.application_processors().count())
+                    .sum()
+            }
+            None => machine.n_application_cores(),
+        };
+        let forbidden = &forbidden_all;
         let state = self
             .state
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("remap without a run state"))?;
         anyhow::ensure!(
-            run_graph.n_vertices() <= machine.n_application_cores(),
+            run_graph.n_vertices() <= capacity,
             "graph needs {} cores; machine has {}",
             run_graph.n_vertices(),
-            machine.n_application_cores()
+            capacity
         );
         let mut reserved: BTreeSet<CoreLocation> = state
             .fast_path
@@ -1606,6 +1873,12 @@ impl SpiNNTools {
             // rediscovery exclusion, core silencing — maps around the
             // dark board exactly as it does around chip death.
             for board in state.sim.wire_unreachable_boards() {
+                // A shared session only owns its partition: another
+                // tenant's dark board is not ours to power off (their
+                // own heal will take it down inside their scope).
+                if !state.sim.in_scope(board) {
+                    continue;
+                }
                 state.sim.power_off_board(board)?;
             }
             // Re-discover while the failed cores still show their failed
@@ -1878,6 +2151,7 @@ impl SpiNNTools {
     /// journals are cleared, so nothing of the previous mapping can
     /// leak into the next run.
     pub fn reset(&mut self) {
+        self.park_lent_sim();
         self.state = None;
         self.pipeline.clear();
         self.mapped_revisions = None;

@@ -44,6 +44,27 @@ pub fn allocate_keys_incremental(
     Vec<(VertexId, String)>,
     u64,
 )> {
+    allocate_keys_incremental_bounded(graph, prior, cursor, 1u64 << 32)
+}
+
+/// [`allocate_keys_incremental`] with an explicit upper bound on the key
+/// space: allocations must fit strictly below `limit`. This is how the
+/// multi-tenant [`crate::front::MachineService`] namespaces keys — each
+/// tenant's session allocates inside a disjoint `[base, limit)` window
+/// (the base arrives as the session's starting cursor), so two tenants'
+/// multicast traffic can never share a key even though they share one
+/// physical router fabric.
+#[allow(clippy::type_complexity)]
+pub fn allocate_keys_incremental_bounded(
+    graph: &MachineGraph,
+    prior: &BTreeMap<(VertexId, String), KeyRange>,
+    cursor: u64,
+    limit: u64,
+) -> anyhow::Result<(
+    BTreeMap<(VertexId, String), KeyRange>,
+    Vec<(VertexId, String)>,
+    u64,
+)> {
     let mut out = BTreeMap::new();
     let mut rekeyed = Vec::new();
     let mut cursor = cursor;
@@ -63,7 +84,7 @@ pub fn allocate_keys_incremental(
         // Align the cursor to the block size.
         cursor = cursor.div_ceil(block) * block;
         anyhow::ensure!(
-            cursor + block <= (1u64 << 32),
+            cursor + block <= limit,
             "multicast key space exhausted at partition ({:?}, {})",
             partition.pre,
             partition.id
@@ -196,6 +217,24 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn bounded_window_is_respected() {
+        let mut g = MachineGraph::new();
+        let a = g.add_vertex(Arc::new(ManyKeys(100)));
+        let b = g.add_vertex(TestVertex::arc("b"));
+        g.add_edge(a, b, "x");
+        let base = 0x0100_0000u64;
+        let limit = 0x0200_0000u64;
+        let (keys, _, cursor) =
+            allocate_keys_incremental_bounded(&g, &BTreeMap::new(), base, limit).unwrap();
+        let kr = keys[&(a, "x".to_string())];
+        assert!(kr.base as u64 >= base, "allocation below the window base");
+        assert!(cursor <= limit);
+        // A window too small for the block errors instead of spilling
+        // past the tenant boundary.
+        assert!(allocate_keys_incremental_bounded(&g, &BTreeMap::new(), base, base + 64).is_err());
     }
 
     #[test]

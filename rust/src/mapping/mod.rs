@@ -95,6 +95,12 @@ pub struct MappingConfig {
     pub compress_tables: bool,
     /// Fail if a compressed table still exceeds the 1024-entry TCAM.
     pub enforce_table_capacity: bool,
+    /// `[base, limit)` window of the 32-bit multicast key space this
+    /// session may allocate from. The default is the whole space, which
+    /// makes single-session behaviour byte-identical to the historical
+    /// allocator; the multi-tenant service gives each tenant a disjoint
+    /// window so no two sessions can ever mint the same key.
+    pub key_space: (u64, u64),
     /// Host-side execution options (worker-pool width).
     pub options: MappingOptions,
 }
@@ -105,6 +111,7 @@ impl Default for MappingConfig {
             use_default_routes: true,
             compress_tables: true,
             enforce_table_capacity: true,
+            key_space: (0, 1u64 << 32),
             options: MappingOptions::default(),
         }
     }
@@ -252,11 +259,14 @@ pub fn machine_fingerprint(machine: &Machine) -> u64 {
 }
 
 fn config_fingerprint(config: &MappingConfig) -> u64 {
-    crate::util::fnv1a_64(&[
+    let mut h = crate::util::fnv1a_64(&[
         config.use_default_routes as u8,
         config.compress_tables as u8,
         config.enforce_table_capacity as u8,
-    ])
+    ]);
+    crate::util::fnv1a_64_extend(&mut h, &config.key_space.0.to_le_bytes());
+    crate::util::fnv1a_64_extend(&mut h, &config.key_space.1.to_le_bytes());
+    h
 }
 
 /// Digest of the graph's IP-tag / reverse-IP-tag demands — the cache
@@ -379,6 +389,7 @@ pub fn map_graph_incremental(
 
     let reserved_cores = reserved.clone();
     let forbidden_placer = forbidden.clone();
+    let (key_base, key_limit) = config.key_space;
     let algorithms = vec![
         // Placement: pin-and-extend when a prior placement exists (pins
         // on dead/forbidden resources displace, DESIGN.md §8).
@@ -493,18 +504,25 @@ pub fn map_graph_incremental(
         )
         .with_fp_inputs(&["machine", "graph_partitions", "placements", "forbidden_chips"]),
         // Key allocation: monotone incremental (see
-        // [`keys::allocate_keys_incremental`]).
+        // [`keys::allocate_keys_incremental`]), confined to the
+        // session's `key_space` window. The cursor is clamped up to the
+        // window base so a seeded/fresh session starts allocating inside
+        // its own namespace; the window limit bounds exhaustion.
         Algorithm::new(
             "key_allocator",
             &["machine_graph", "graph_partitions"],
             &["routing_keys", "rekeyed_partitions", "key_cursor"],
-            |b| {
+            move |b| {
                 let prior: BTreeMap<(VertexId, String), KeyRange> =
                     if b.has("routing_keys") { b.take("routing_keys")? } else { BTreeMap::new() };
                 let cursor: u64 = if b.has("key_cursor") { b.take("key_cursor")? } else { 0 };
                 let g: &MachineGraph = b.get("machine_graph")?;
-                let (keys, rekeyed, cursor) =
-                    keys::allocate_keys_incremental(g, &prior, cursor)?;
+                let (keys, rekeyed, cursor) = keys::allocate_keys_incremental_bounded(
+                    g,
+                    &prior,
+                    cursor.max(key_base),
+                    key_limit,
+                )?;
                 b.put("routing_keys", keys);
                 b.put("rekeyed_partitions", rekeyed);
                 b.put("key_cursor", cursor);

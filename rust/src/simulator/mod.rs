@@ -697,6 +697,14 @@ pub struct SimMachine {
     wire_escalated: BTreeSet<ChipCoord>,
     /// Reliable-transport counters (see [`WireStats`]).
     wire_stats: WireStats,
+    /// Session scope: when set, host-side machine-wide sweeps (run-cycle
+    /// scheduling, core-state scans, broadcast signals, provenance) are
+    /// confined to these chips. This is how the multi-tenant
+    /// [`crate::front::MachineService`] multiplexes one machine: the
+    /// fabric itself stays global (a misrouted packet still crosses the
+    /// boundary and is observable), but a tenant's control plane only
+    /// ever touches its own partition. `None` = the whole machine.
+    scope: Option<BTreeSet<ChipCoord>>,
 }
 
 impl SimMachine {
@@ -731,7 +739,33 @@ impl SimMachine {
             wire_episodes: Vec::new(),
             wire_escalated: BTreeSet::new(),
             wire_stats: WireStats::default(),
+            scope: None,
         }
+    }
+
+    /// A chipless placeholder machine — what a multi-tenant session
+    /// holds while its real simulator is lent back to the service
+    /// between run quanta. Every SCAMP operation against it errors
+    /// ("no such chip"), so accidental use is loud, not silent.
+    pub fn hollow() -> Self {
+        Self::boot(Machine::new(1, 1, false), SimConfig::default())
+    }
+
+    /// Confine host-side machine-wide sweeps to `scope` (see the field
+    /// doc). `None` restores whole-machine behaviour.
+    pub fn set_scope(&mut self, scope: Option<BTreeSet<ChipCoord>>) {
+        self.scope = scope;
+    }
+
+    /// The current session scope, if any.
+    pub fn scope(&self) -> Option<&BTreeSet<ChipCoord>> {
+        self.scope.as_ref()
+    }
+
+    /// Is `c` visible to the current session? Always true when no scope
+    /// is set.
+    pub fn in_scope(&self, c: ChipCoord) -> bool {
+        self.scope.as_ref().map_or(true, |s| s.contains(&c))
     }
 
     pub fn now_ns(&self) -> u64 {
@@ -1058,12 +1092,16 @@ impl SimMachine {
         self.store.get(c).filter(|ch| !ch.dead).map(|ch| ch.router_stats)
     }
 
-    /// Sum of router stats across the machine.
+    /// Sum of router stats across the machine (the session scope, when
+    /// one is set — a tenant only reads its own routers).
     pub fn total_router_stats(&self) -> RouterStats {
         let mut out = RouterStats::default();
-        for (_, ch) in self.store.ordered() {
+        for (c, ch) in self.store.ordered() {
             if ch.dead {
                 continue; // a dead chip's counters are unreadable
+            }
+            if !self.in_scope(c) {
+                continue;
             }
             out.mc_routed += ch.router_stats.mc_routed;
             out.mc_default_routed += ch.router_stats.mc_default_routed;
@@ -1598,7 +1636,7 @@ impl SimMachine {
         let timestep_ns = self.config.timestep_us as u64 * 1000;
         let mut locs: Vec<CoreLocation> = Vec::new();
         for (c, chip) in self.store.ordered() {
-            if chip.dead {
+            if chip.dead || !self.in_scope(c) {
                 continue;
             }
             for (p, core) in &chip.cores {

@@ -83,11 +83,13 @@ fn scp_exchange(sim: &mut SimMachine, chip: ChipCoord, chunks: u64, cost: u64) -
     Ok(())
 }
 
-/// The board SCAMP broadcast commands (signals) are issued through.
+/// The board SCAMP broadcast commands (signals) are issued through —
+/// the first Ethernet chip inside the session scope, so a tenant's
+/// signals never cross into (or depend on) another tenant's boards.
 fn root_board(sim: &SimMachine) -> Option<ChipCoord> {
     sim.machine
         .chips()
-        .filter(|c| c.is_ethernet() && !c.is_virtual)
+        .filter(|c| c.is_ethernet() && !c.is_virtual && sim.in_scope((c.x, c.y)))
         .map(|c| (c.x, c.y))
         .next()
 }
@@ -238,6 +240,18 @@ pub fn set_reverse_iptag(
 ) -> anyhow::Result<()> {
     scp_exchange(sim, board, 1, 0)?;
     sim.chip_mut(board)?.reverse_iptags.insert(port, dest);
+    Ok(())
+}
+
+/// Remove every IP tag and reverse IP tag from a board's Ethernet chip
+/// — the multi-tenant service's sweep when a partition is freed, so the
+/// next tenant's data plane finds all tag slots free again (the tag
+/// allocators seed themselves from what is installed on the chip).
+pub fn clear_tags(sim: &mut SimMachine, board: ChipCoord) -> anyhow::Result<()> {
+    scp_exchange(sim, board, 1, 0)?;
+    let chip = sim.chip_mut(board)?;
+    chip.iptags.clear();
+    chip.reverse_iptags.clear();
     Ok(())
 }
 
@@ -461,6 +475,9 @@ pub fn signal_stop(sim: &mut SimMachine) -> anyhow::Result<()> {
 fn cores_in_state(sim: &SimMachine, want: CoreState) -> Vec<CoreLocation> {
     let mut out = Vec::new();
     for c in sim.machine.chip_coords().collect::<Vec<_>>() {
+        if !sim.in_scope(c) {
+            continue;
+        }
         if let Ok(chip) = sim.chip(c) {
             for (p, core) in &chip.cores {
                 if core.state == want {
@@ -510,10 +527,12 @@ pub fn core_state(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<CoreSta
 /// All loaded cores and their states. Chips behind a silent board do
 /// not answer and are absent from the scan — exactly what the run
 /// supervisor observes as "cores vanished" and converts into a heal.
+/// Confined to the session scope when one is set: a tenant's poll
+/// neither sees nor pays for other tenants' cores.
 pub fn core_states(sim: &SimMachine) -> BTreeMap<CoreLocation, CoreState> {
     let mut out = BTreeMap::new();
     for c in sim.machine.chip_coords().collect::<Vec<_>>() {
-        if sim.host_unreachable(c) {
+        if sim.host_unreachable(c) || !sim.in_scope(c) {
             continue;
         }
         if let Ok(chip) = sim.chip(c) {
@@ -590,6 +609,12 @@ pub fn rediscover_machine(
     let coords: Vec<ChipCoord> = machine.chip_coords().collect();
     let mut dark_boards = std::collections::BTreeSet::new();
     for c in coords {
+        // Out-of-scope chips belong to other tenants: the sweep does not
+        // touch (or pay for) them, and their boards cannot be declared
+        // dark by this session.
+        if !sim.in_scope(c) {
+            continue;
+        }
         let board = sim.machine.nearest_ethernet(c).unwrap_or(c);
         if dark_boards.contains(&board) {
             continue;

@@ -1,0 +1,431 @@
+//! Multi-tenant machine service property suite (DESIGN.md §11,
+//! experiment E17).
+//!
+//! The core property: a machine partitioned among N concurrent tenants
+//! is **observationally private** — every tenant's recordings are
+//! byte-identical to the same job run alone on a machine of its own,
+//! no two tenants' placements, multicast key windows, or IP-tag slots
+//! ever overlap, and a fault (even a whole-board death) inside one
+//! tenant's partition never perturbs another tenant's results.
+//!
+//! Also pinned here:
+//! - a single-tenant service is byte-identical to the direct
+//!   [`SpiNNTools`] path, over both the SCAMP and the data-plane
+//!   load/extraction methods (the per-tenant port windows collapse to
+//!   the defaults for job 0);
+//! - admission is strict FIFO with head-of-line blocking (a small job
+//!   never overtakes a blocked big one), freed boards are reused, and
+//!   boards that die under a tenant are retired;
+//! - a board death evicts its tenant via the newest checkpoint and the
+//!   job resumes from the snapshot — not from tick 0 — in a fresh
+//!   partition.
+//!
+//! CI runs this suite under a fixed seed matrix via `SERVICE_SEED`,
+//! and re-runs it over an unreliable wire in the combined
+//! `WIRE_FAULTS=1` row.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::{
+    CheckpointConfig, ExtractionMethod, HealPolicy, LifecycleEvent, LoadMethod, MachineService,
+    MachineSpec, SpiNNTools, SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::machine::ChipCoord;
+use spinntools::simulator::{ChaosPlan, Fault, WireFaults};
+
+const TICKS: u64 = 6;
+const QUANTUM: u64 = 2;
+
+/// Base seed for the tenant mix; CI sweeps a matrix of these.
+fn base_seed() -> u64 {
+    std::env::var("SERVICE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5E81)
+}
+
+/// CI's combined matrix row re-runs this whole suite over an unreliable
+/// wire (`WIRE_FAULTS=1`, seeded by `WIRE_SEED`): every quantum, sweep,
+/// checkpoint and resume crosses the faulty link, and every isolation
+/// assertion must hold unchanged.
+fn env_wire(config: ToolsConfig) -> ToolsConfig {
+    let on = std::env::var("WIRE_FAULTS").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+    if !on {
+        return config;
+    }
+    let seed = std::env::var("WIRE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x31E5);
+    config.with_wire_faults(WireFaults::from_seed(seed))
+}
+
+fn supervised() -> SupervisorConfig {
+    SupervisorConfig { poll_interval_ticks: 1, policy: HealPolicy::Remap, max_heals: 4 }
+}
+
+fn every_tick() -> CheckpointConfig {
+    CheckpointConfig { interval_ticks: 1, keep: 2 }
+}
+
+/// A seeded `rows x cols` Conway grid as a job-builder closure: the
+/// same closure shape [`MachineService::submit`] takes, reusable for
+/// building the solo oracle.
+fn grid(
+    rows: u32,
+    cols: u32,
+    seed: u64,
+) -> impl FnOnce(&mut SpiNNTools) -> anyhow::Result<Vec<VertexId>> {
+    move |tools| {
+        let alive =
+            |r: u32, c: u32| (r.wrapping_mul(31) ^ c.wrapping_mul(17) ^ seed as u32) % 3 == 0;
+        let mut ids = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                ids.push(tools.add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))?);
+            }
+        }
+        let idx = |r: i64, c: i64| -> Option<usize> {
+            (r >= 0 && c >= 0 && r < rows as i64 && c < cols as i64)
+                .then_some((r * cols as i64 + c) as usize)
+        };
+        for r in 0..rows as i64 {
+            for c in 0..cols as i64 {
+                for dr in -1..=1 {
+                    for dc in -1..=1 {
+                        if (dr, dc) == (0, 0) {
+                            continue;
+                        }
+                        if let Some(n) = idx(r + dr, c + dc) {
+                            tools.add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(ids)
+    }
+}
+
+/// The seeded tenant mix: job `i`'s grid shape and pattern seed.
+fn mix(i: u64) -> (u32, u32, u64) {
+    let s = base_seed()
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(i.wrapping_mul(0xA24B_AED4_963E_E407));
+    (3 + (s % 3) as u32, 3 + ((s >> 8) % 3) as u32, s)
+}
+
+/// The oracle: the same job run alone, one uninterrupted `run_ticks`,
+/// on a machine of its own.
+fn solo_run(rows: u32, cols: u32, seed: u64, config: ToolsConfig) -> Vec<Vec<u8>> {
+    let mut tools = SpiNNTools::new(env_wire(config)).unwrap();
+    let ids = grid(rows, cols, seed)(&mut tools).unwrap();
+    tools.run_ticks(TICKS).unwrap();
+    ids.iter().map(|v| tools.recording(*v).to_vec()).collect()
+}
+
+fn service_recordings(svc: &MachineService, id: u64) -> Vec<Vec<u8>> {
+    svc.vertices(id)
+        .to_vec()
+        .iter()
+        .map(|v| svc.recording(id, *v).to_vec())
+        .collect()
+}
+
+#[test]
+fn single_tenant_service_matches_direct_path() {
+    // Satellite regression: with one tenant, the service must be a
+    // transparent wrapper — job 0's key window starts at 0 and its port
+    // window is the configured base, so nothing observable differs.
+    let seed = base_seed();
+    for (load, extract) in [
+        (LoadMethod::Scamp, ExtractionMethod::Scamp),
+        (LoadMethod::FastMulticast, ExtractionMethod::FastMulticast),
+    ] {
+        let config = || {
+            env_wire(
+                ToolsConfig::new(MachineSpec::Spinn5)
+                    .with_loading(load)
+                    .with_extraction(extract),
+            )
+        };
+        let mut tools = SpiNNTools::new(config()).unwrap();
+        let ids = grid(6, 6, seed)(&mut tools).unwrap();
+        tools.run_ticks(TICKS).unwrap();
+        let direct: Vec<Vec<u8>> = ids.iter().map(|v| tools.recording(*v).to_vec()).collect();
+
+        let mut svc = MachineService::new(config(), 3).unwrap(); // two quanta
+        let id = svc.submit("only", 1, TICKS, grid(6, 6, seed)).unwrap();
+        svc.run_to_completion().unwrap();
+        assert!(svc.is_finished(id));
+        assert_eq!(
+            service_recordings(&svc, id),
+            direct,
+            "single-tenant service diverged from the direct path ({load:?}/{extract:?})"
+        );
+    }
+}
+
+#[test]
+fn tenants_match_solo_runs_at_all_widths() {
+    // E17 core property (a): each of three concurrent tenants is
+    // byte-identical to its solo run — at mapping pool widths 1, 2, 8.
+    for threads in [1usize, 2, 8] {
+        let template =
+            env_wire(ToolsConfig::new(MachineSpec::Boards(3)).with_mapping_threads(threads));
+        let mut svc = MachineService::new(template, QUANTUM).unwrap();
+        let mut jobs = Vec::new();
+        for i in 0..3u64 {
+            let (r, c, s) = mix(i);
+            jobs.push((svc.submit(&format!("t{i}"), 1, TICKS, grid(r, c, s)).unwrap(), r, c, s));
+        }
+        svc.run_to_completion().unwrap();
+        let report = svc.report();
+        assert!(report.key_windows_disjoint());
+        assert_eq!(report.boards_retired, 0);
+        for (id, r, c, s) in jobs {
+            assert!(svc.is_finished(id), "threads {threads}: job {id} unfinished");
+            let solo =
+                solo_run(r, c, s, ToolsConfig::virtual_spinn5(1).with_mapping_threads(threads));
+            assert_eq!(
+                service_recordings(&svc, id),
+                solo,
+                "threads {threads}: tenant {id} diverged from its solo run"
+            );
+        }
+    }
+}
+
+#[test]
+fn key_windows_and_placements_never_overlap() {
+    // E17 core property (b): with all three tenants admitted and
+    // mapped, no chip, multicast key, or IP-tag slot is shared.
+    let template = env_wire(ToolsConfig::new(MachineSpec::Boards(3)));
+    let mut svc = MachineService::new(template, QUANTUM).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..3u64 {
+        let (r, c, s) = mix(i);
+        ids.push(svc.submit(&format!("t{i}"), 1, TICKS, grid(r, c, s)).unwrap());
+    }
+    svc.tick_round().unwrap();
+    let machine = MachineSpec::Boards(3).template();
+    let report = svc.report();
+    assert!(report.key_windows_disjoint());
+    let mut chip_owner: BTreeMap<ChipCoord, u64> = BTreeMap::new();
+    let mut tag_owner: BTreeMap<(ChipCoord, u8), u64> = BTreeMap::new();
+    for &id in &ids {
+        let boards: BTreeSet<ChipCoord> = svc.boards_of(id).iter().copied().collect();
+        assert!(!boards.is_empty(), "job {id} not admitted in round 1");
+        let session = svc.session(id).unwrap();
+        let mapping = session.mapping().expect("mapped after the first quantum");
+        let window = report.tenants[id as usize].key_space;
+        for v in svc.vertices(id) {
+            let chip = mapping.placement(*v).expect("placed").chip();
+            assert_eq!(
+                machine.nearest_ethernet(chip).map(|e| boards.contains(&e)),
+                Some(true),
+                "job {id}: vertex placed off-partition at {chip:?}"
+            );
+            if let Some(prev) = chip_owner.insert(chip, id) {
+                assert_eq!(prev, id, "chip {chip:?} shared between tenants");
+            }
+        }
+        for kr in mapping.keys.values() {
+            let base = kr.base as u64;
+            assert!(
+                base >= window.0 && base + kr.n_keys() <= window.1,
+                "job {id}: key block {base:#x}(+{}) outside window {window:x?}",
+                kr.n_keys()
+            );
+        }
+        for tag in mapping.iptags.values() {
+            assert!(boards.contains(&tag.board), "job {id}: IP tag on a foreign board");
+            if let Some(prev) = tag_owner.insert((tag.board, tag.tag), id) {
+                assert_eq!(prev, id, "IP tag slot shared between tenants");
+            }
+        }
+        for tag in mapping.reverse_iptags.values() {
+            assert!(boards.contains(&tag.board), "job {id}: reverse tag on a foreign board");
+        }
+    }
+    for (i, &a) in ids.iter().enumerate() {
+        let ba: BTreeSet<ChipCoord> = svc.boards_of(a).iter().copied().collect();
+        for &b in &ids[i + 1..] {
+            assert!(
+                svc.boards_of(b).iter().all(|x| !ba.contains(x)),
+                "jobs {a} and {b} share a board"
+            );
+        }
+    }
+    svc.run_to_completion().unwrap();
+}
+
+#[test]
+fn queue_is_fifo_and_freed_boards_are_reused() {
+    // E17 core property (d): strict FIFO with head-of-line blocking,
+    // freed partitions coalesce back into the pool and are re-carved.
+    let (r0, c0, s0) = mix(30);
+    let (r1, c1, s1) = mix(31);
+    let (r2, c2, s2) = mix(32);
+    let template = env_wire(ToolsConfig::new(MachineSpec::Boards(3)));
+    let mut svc = MachineService::new(template, QUANTUM).unwrap();
+    let a = svc.submit("a", 2, TICKS, grid(r0, c0, s0)).unwrap();
+    let b = svc.submit("b", 2, TICKS, grid(r1, c1, s1)).unwrap();
+    let c = svc.submit("c", 1, TICKS, grid(r2, c2, s2)).unwrap();
+    svc.tick_round().unwrap();
+    // a holds 2 of the 3 boards. b (the head) needs 2 and blocks; c
+    // would fit the one free board but must not overtake the head.
+    assert_eq!(svc.boards_of(a).len(), 2);
+    assert!(svc.boards_of(b).is_empty());
+    assert!(svc.boards_of(c).is_empty(), "c overtook the blocked head of the queue");
+    assert_eq!(svc.queue_len(), 2);
+    let a_boards: BTreeSet<ChipCoord> = svc.boards_of(a).iter().copied().collect();
+
+    svc.run_to_completion().unwrap();
+    for id in [a, b, c] {
+        assert!(svc.is_finished(id));
+    }
+    let admitted: Vec<&str> = svc
+        .lifecycle()
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            LifecycleEvent::Admitted { tenant, .. } => Some(tenant.as_str()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admitted, ["a", "b", "c"], "admission order must be submission order");
+    assert!(
+        svc.boards_of(b).iter().any(|x| a_boards.contains(x)),
+        "b never reused a's freed boards"
+    );
+    let report = svc.report();
+    assert_eq!(report.tenants[a as usize].queue_rounds, 0);
+    assert!(report.tenants[b as usize].queue_rounds >= 1, "b never waited: {report:?}");
+    assert!(report.key_windows_disjoint());
+    assert_eq!(report.boards_retired, 0);
+    // Queueing and board reuse are invisible in the results.
+    assert_eq!(service_recordings(&svc, a), solo_run(r0, c0, s0, ToolsConfig::virtual_spinn5(2)));
+    assert_eq!(service_recordings(&svc, b), solo_run(r1, c1, s1, ToolsConfig::virtual_spinn5(2)));
+    assert_eq!(service_recordings(&svc, c), solo_run(r2, c2, s2, ToolsConfig::virtual_spinn5(1)));
+}
+
+#[test]
+fn chaos_in_one_tenant_never_perturbs_another() {
+    // E17 core property (c), healable flavour: a chip death inside a's
+    // partition self-heals *within* the partition; a still matches its
+    // solo run, and b never notices.
+    let (ra, ca, sa) = mix(10);
+    let (rb, cb, sb) = mix(11);
+    let template = env_wire(
+        ToolsConfig::new(MachineSpec::Boards(3))
+            .with_supervision(supervised())
+            .with_checkpoint(every_tick()),
+    );
+    let mut svc = MachineService::new(template, QUANTUM).unwrap();
+    let a = svc.submit("a", 1, TICKS, grid(ra, ca, sa)).unwrap();
+    let b = svc.submit("b", 1, TICKS, grid(rb, cb, sb)).unwrap();
+    svc.tick_round().unwrap();
+    // A used, killable (non-Ethernet) chip inside a's partition.
+    let machine = MachineSpec::Boards(3).template();
+    let mapping = svc.session(a).unwrap().mapping().unwrap();
+    let chip = svc
+        .vertices(a)
+        .iter()
+        .map(|v| mapping.placement(*v).unwrap().chip())
+        .find(|c| !machine.chip(*c).map(|ch| ch.is_ethernet()).unwrap_or(true))
+        .expect("tenant a uses a killable chip");
+    svc.inject_chaos(a, ChaosPlan::new().with(3, Fault::ChipDeath(chip))).unwrap();
+    svc.run_to_completion().unwrap();
+    assert!(svc.is_finished(a) && svc.is_finished(b));
+
+    let solo_cfg = || {
+        ToolsConfig::virtual_spinn5(1)
+            .with_supervision(supervised())
+            .with_checkpoint(every_tick())
+    };
+    assert_eq!(
+        service_recordings(&svc, a),
+        solo_run(ra, ca, sa, solo_cfg()),
+        "tenant a's healed run diverged from its solo run"
+    );
+    assert_eq!(
+        service_recordings(&svc, b),
+        solo_run(rb, cb, sb, solo_cfg()),
+        "chaos in tenant a perturbed tenant b"
+    );
+    let healed: Vec<&str> = svc
+        .lifecycle()
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            LifecycleEvent::Healed { tenant, .. } => Some(tenant.as_str()),
+            _ => None,
+        })
+        .collect();
+    assert!(healed.contains(&"a"), "a's heal never surfaced: {healed:?}");
+    assert!(!healed.contains(&"b"), "b healed without a fault");
+    let report = svc.report();
+    assert!(report.tenants[a as usize].heals >= 1);
+    assert_eq!(report.tenants[b as usize].heals, 0);
+    assert_eq!(report.tenants[a as usize].evictions, 0, "an in-partition heal is not an eviction");
+}
+
+#[test]
+fn board_death_evicts_suspends_and_resumes_elsewhere() {
+    // E17 core property (c), unhealable flavour: killing a's Ethernet
+    // chip takes its whole board (and host link) down — nothing inside
+    // the partition is left to heal onto. The service must evict a via
+    // its newest checkpoint, retire the board, re-admit a onto the
+    // spare board, and resume from the snapshot; b never notices.
+    let (ra, ca, sa) = mix(20);
+    let (rb, cb, sb) = mix(21);
+    let template = env_wire(
+        ToolsConfig::new(MachineSpec::Boards(3))
+            .with_supervision(supervised())
+            .with_checkpoint(every_tick()),
+    );
+    let mut svc = MachineService::new(template, QUANTUM).unwrap();
+    let a = svc.submit("a", 1, TICKS, grid(ra, ca, sa)).unwrap();
+    let b = svc.submit("b", 1, TICKS, grid(rb, cb, sb)).unwrap();
+    svc.tick_round().unwrap();
+    let doomed = svc.boards_of(a)[0];
+    svc.inject_chaos(a, ChaosPlan::new().with(3, Fault::ChipDeath(doomed))).unwrap();
+    svc.run_to_completion().unwrap();
+    assert!(svc.is_finished(a), "a must finish after eviction + resume");
+    assert!(svc.is_finished(b));
+    assert_ne!(svc.boards_of(a), [doomed], "a finished on a fresh board");
+
+    let solo_cfg = || {
+        ToolsConfig::virtual_spinn5(1)
+            .with_supervision(supervised())
+            .with_checkpoint(every_tick())
+    };
+    assert_eq!(
+        service_recordings(&svc, a),
+        solo_run(ra, ca, sa, solo_cfg()),
+        "evicted + resumed tenant diverged from its solo run"
+    );
+    assert_eq!(
+        service_recordings(&svc, b),
+        solo_run(rb, cb, sb, solo_cfg()),
+        "a's board death perturbed tenant b"
+    );
+    let of_a = svc.lifecycle().of_tenant("a");
+    assert!(
+        of_a.iter().any(|e| matches!(e, LifecycleEvent::Evicted { .. })),
+        "no eviction surfaced: {of_a:?}"
+    );
+    assert!(
+        of_a.iter()
+            .any(|e| matches!(e, LifecycleEvent::Resumed { from_tick, .. } if *from_tick >= 1)),
+        "resume must come from a snapshot, not tick 0: {of_a:?}"
+    );
+    let report = svc.report();
+    assert_eq!(report.boards_retired, 1, "the dead board must be retired");
+    assert_eq!(report.tenants[a as usize].evictions, 1);
+    assert_eq!(report.tenants[b as usize].evictions, 0);
+    assert!(report.key_windows_disjoint());
+}
