@@ -1,0 +1,259 @@
+//! Experiment E18 — SpiNNaker2-scale mapping and fabric (DESIGN.md §12).
+//!
+//! The paper's pipeline has only ever been exercised here at 576 chips;
+//! SpiNNaker 2 raises the target by orders of magnitude. This bench
+//! streams the full mapping pipeline (hierarchical placement, NER
+//! routing, table generation, tag allocation) over wafer-scale toroids
+//! at 1k/10k/100k chips — measuring wall time and allocated bytes via
+//! [`spinntools::util::mem::AllocCounter`] installed as the global
+//! allocator — then runs a multicast traffic workload on the booted
+//! fast fabric at each scale to get packets/sec. At 1M chips, machine
+//! construction + hierarchical placement run mapping-only.
+//!
+//! Results go to `BENCH_scale.json` at the repository root.
+//!
+//! ```sh
+//! cargo bench --bench scale
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use spinntools::graph::{
+    DataGenContext, DataRegion, MachineGraph, MachineVertexImpl, ResourceRequirements,
+};
+use spinntools::machine::{Machine, MachineBuilder};
+use spinntools::mapping::{map_graph, placer, MappingConfig, MappingOptions};
+use spinntools::simulator::{scamp, CoreApp, CoreCtx, SimConfig, SimMachine};
+use spinntools::util::json::Json;
+use spinntools::util::mem::AllocCounter;
+
+#[global_allocator]
+static ALLOC: AllocCounter = AllocCounter::new();
+
+/// Full-pipeline scales; 1M chips runs construction + placement only.
+const MAP_SCALES: [u32; 3] = [1_000, 10_000, 100_000];
+const MILLION: u32 = 1_000_000;
+/// Cores sending multicast traffic in the fabric phase, and for how
+/// many timer ticks.
+const SENDERS: usize = 1024;
+const TICKS: u64 = 20;
+
+/// A label-free vertex: at a million vertices, even one stored `String`
+/// per vertex would dominate the graph's footprint.
+#[derive(Debug)]
+struct ScaleVertex {
+    idx: u32,
+}
+
+impl MachineVertexImpl for ScaleVertex {
+    fn label(&self) -> String {
+        format!("s{}", self.idx)
+    }
+    fn resources(&self) -> ResourceRequirements {
+        ResourceRequirements::with_sdram(1024)
+    }
+    fn binary_name(&self) -> String {
+        "scale.aplx".into()
+    }
+    fn generate_data(&self, _ctx: &DataGenContext) -> Vec<DataRegion> {
+        vec![]
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// One vertex per chip in a ring, with a longer-range chord from every
+/// 16th vertex so some routes cross many chips and real tables appear.
+fn ring_graph(n_vertices: u32, with_edges: bool) -> MachineGraph {
+    let mut g = MachineGraph::new();
+    let ids: Vec<_> = (0..n_vertices)
+        .map(|idx| g.add_vertex(Arc::new(ScaleVertex { idx })))
+        .collect();
+    if with_edges && n_vertices > 1 {
+        let n = ids.len();
+        for (i, v) in ids.iter().enumerate() {
+            g.add_edge(*v, ids[(i + 1) % n], "ring");
+            if i % 16 == 0 {
+                g.add_edge(*v, ids[(i + 136) % n], "ring");
+            }
+        }
+    }
+    g
+}
+
+/// Sends one multicast packet per timer tick on the vertex's key.
+#[derive(Debug)]
+struct Ticker {
+    key: u32,
+}
+
+impl CoreApp for Ticker {
+    fn on_timer(&mut self, ctx: &mut CoreCtx) -> anyhow::Result<()> {
+        ctx.send_mc(self.key, None);
+        Ok(())
+    }
+}
+
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+fn json_num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Build + map + fabric at one scale.
+fn bench_scale(n_chips: u32) -> anyhow::Result<Json> {
+    // Machine construction, with its allocation footprint isolated.
+    let live0 = ALLOC.live_bytes();
+    let t = Instant::now();
+    let machine: Machine = MachineBuilder::wafer(n_chips).build();
+    let build_ms = ms(t);
+    let machine_bytes = ALLOC.live_bytes().saturating_sub(live0);
+    let per_chip = machine_bytes as f64 / machine.n_chips() as f64;
+    println!(
+        "\n## {} chips ({}x{} torus): built in {build_ms:.1} ms, {machine_bytes} bytes \
+         ({per_chip:.0} B/chip)",
+        machine.n_chips(),
+        machine.width,
+        machine.height
+    );
+
+    // Full mapping pipeline, one vertex per chip, peak bytes attributed.
+    let graph = ring_graph(machine.n_chips() as u32, true);
+    let config = MappingConfig {
+        options: MappingOptions::with_threads(0),
+        ..Default::default()
+    };
+    ALLOC.reset_peak();
+    let map_live0 = ALLOC.live_bytes();
+    let t = Instant::now();
+    let mapping = map_graph(&machine, &graph, &config)?;
+    let map_ms = ms(t);
+    let map_peak = ALLOC.peak_bytes().saturating_sub(map_live0);
+    println!(
+        "   map_graph: {} vertices in {map_ms:.1} ms, peak +{map_peak} bytes, {} tables",
+        graph.n_vertices(),
+        mapping.tables.len()
+    );
+
+    // Fabric: boot the fast fabric, install the mapped tables, put a
+    // Ticker on the first SENDERS placed vertices and run TICKS ticks.
+    let t = Instant::now();
+    let mut sim = SimMachine::boot(machine, SimConfig::default());
+    let boot_ms = ms(t);
+    for (chip, table) in &mapping.tables {
+        scamp::load_routing_table(&mut sim, *chip, table.clone())?;
+    }
+    let senders: Vec<_> = graph.vertex_ids().take(SENDERS).collect();
+    for v in &senders {
+        let loc = mapping.placements.of(*v).expect("sender placed");
+        let key = mapping.keys[&(*v, "ring".to_string())].base;
+        let app = Box::new(Ticker { key });
+        scamp::load_app(&mut sim, loc, app, BTreeMap::new(), BTreeMap::new())?;
+    }
+    scamp::signal_start(&mut sim)?;
+    let sent0 = sim.stats.mc_sent;
+    let t = Instant::now();
+    sim.start_run_cycle(TICKS);
+    sim.run_until_idle()?;
+    let run_s = t.elapsed().as_secs_f64();
+    let sent = sim.stats.mc_sent - sent0;
+    let pkts_per_sec = sent as f64 / run_s.max(1e-9);
+    println!(
+        "   fabric: boot {boot_ms:.1} ms, {} senders x {TICKS} ticks -> {sent} packets, \
+         {pkts_per_sec:.0} pkts/s",
+        senders.len()
+    );
+
+    let mut o = BTreeMap::new();
+    o.insert("chips".into(), json_num(sim.machine.n_chips() as f64));
+    o.insert("machine_build_ms".into(), json_num(build_ms));
+    o.insert("machine_bytes".into(), json_num(machine_bytes as f64));
+    o.insert("machine_bytes_per_chip".into(), json_num(per_chip));
+    o.insert("vertices".into(), json_num(graph.n_vertices() as f64));
+    o.insert("map_ms".into(), json_num(map_ms));
+    o.insert("map_peak_bytes".into(), json_num(map_peak as f64));
+    o.insert("tables".into(), json_num(mapping.tables.len() as f64));
+    o.insert("fabric_boot_ms".into(), json_num(boot_ms));
+    o.insert("fabric_packets".into(), json_num(sent as f64));
+    o.insert("fabric_packets_per_sec".into(), json_num(pkts_per_sec));
+    Ok(Json::Obj(o))
+}
+
+/// 1M chips: construction + hierarchical placement, mapping-only.
+fn bench_million() -> anyhow::Result<Json> {
+    let live0 = ALLOC.live_bytes();
+    let t = Instant::now();
+    let machine = MachineBuilder::wafer(MILLION).build();
+    let build_ms = ms(t);
+    let machine_bytes = ALLOC.live_bytes().saturating_sub(live0);
+    let per_chip = machine_bytes as f64 / machine.n_chips() as f64;
+    println!(
+        "\n## {} chips ({}x{} torus): built in {build_ms:.1} ms, {machine_bytes} bytes \
+         ({per_chip:.0} B/chip)",
+        machine.n_chips(),
+        machine.width,
+        machine.height
+    );
+
+    let graph = ring_graph(MILLION, false); // placement-only: no edges
+    ALLOC.reset_peak();
+    let place_live0 = ALLOC.live_bytes();
+    let t = Instant::now();
+    let placements = placer::place_hierarchical(
+        &machine,
+        &graph,
+        &std::collections::BTreeSet::new(),
+        0,
+    )?;
+    let place_ms = ms(t);
+    let place_peak = ALLOC.peak_bytes().saturating_sub(place_live0);
+    println!(
+        "   hierarchical placement: {} vertices in {place_ms:.1} ms, peak +{place_peak} bytes",
+        placements.len()
+    );
+    assert_eq!(placements.len(), MILLION as usize);
+
+    let mut o = BTreeMap::new();
+    o.insert("chips".into(), json_num(machine.n_chips() as f64));
+    o.insert("machine_build_ms".into(), json_num(build_ms));
+    o.insert("machine_bytes".into(), json_num(machine_bytes as f64));
+    o.insert("machine_bytes_per_chip".into(), json_num(per_chip));
+    o.insert("vertices".into(), json_num(MILLION as f64));
+    o.insert("place_ms".into(), json_num(place_ms));
+    o.insert("place_peak_bytes".into(), json_num(place_peak as f64));
+    o.insert("mapping_only".into(), Json::Bool(true));
+    Ok(Json::Obj(o))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E18: SpiNNaker2-scale mapping + fabric (wafer toroids, allocation-counted)");
+
+    let mut scales = Vec::new();
+    for n in MAP_SCALES {
+        scales.push(bench_scale(n)?);
+    }
+    let million = bench_million()?;
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "experiment".to_string(),
+        Json::Str("E18_spinnaker2_scale".to_string()),
+    );
+    root.insert("senders".to_string(), json_num(SENDERS as f64));
+    root.insert("ticks".to_string(), json_num(TICKS as f64));
+    root.insert("scales".to_string(), Json::Arr(scales));
+    root.insert("million_chips_mapping_only".to_string(), million);
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_scale.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
+    Ok(())
+}

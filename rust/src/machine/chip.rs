@@ -1,14 +1,23 @@
 //! Per-chip structures: processors, SDRAM bookkeeping and the chip record
 //! itself (the `Chip`/`Processor`/`SDRAM`/`Router` classes of Figure 5).
+//!
+//! At SpiNNaker2 scale (100k–1M chips, DESIGN.md §12) the chip record is
+//! the unit the whole machine model multiplies by, so it is kept flat:
+//! the working-core and working-link sets are bitmasks (`u32`/`u8`), and
+//! [`Processor`] records are derived on demand rather than stored. Every
+//! production core is identical silicon (200 MHz, 64 KiB DTCM, 32 KiB
+//! ITCM, core 0 runs the monitor), so a present/absent bit reconstructs
+//! the full record losslessly. One `Chip` is ~64 bytes with no heap
+//! allocations (unless it is an Ethernet chip carrying an IP string),
+//! down from ~500 bytes across three allocations in the pre-SoA layout.
 
-
-
-use super::geometry::Direction;
+use super::geometry::{Direction, ALL_DIRECTIONS};
 use super::{DTCM_PER_CORE, ITCM_PER_CORE, ROUTER_ENTRIES, SDRAM_PER_CHIP};
 
 /// One ARM968 core. Core 0 conventionally runs the SCAMP monitor after
-/// boot; application cores are 1..n.
-#[derive(Debug, Clone)]
+/// boot; application cores are 1..n. Derived on demand from the chip's
+/// working-core bitmask — all production cores share this shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Processor {
     pub id: u8,
     pub is_monitor: bool,
@@ -32,6 +41,15 @@ impl Processor {
 
     pub fn monitor(id: u8) -> Self {
         Self { is_monitor: true, ..Self::application(id) }
+    }
+
+    /// The record for core `id` under the core-0-is-monitor convention.
+    fn for_id(id: u8) -> Self {
+        if id == 0 {
+            Self::monitor(id)
+        } else {
+            Self::application(id)
+        }
     }
 
     /// CPU cycles available per simulation timestep of `timestep_us`.
@@ -61,15 +79,33 @@ impl Sdram {
     }
 }
 
+/// Iterate the set bits of a word, lowest first.
+struct Bits(u32);
+
+impl Iterator for Bits {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.0 == 0 {
+            return None;
+        }
+        let b = self.0.trailing_zeros();
+        self.0 &= self.0 - 1;
+        Some(b)
+    }
+}
+
 /// One SpiNNaker chip as seen by the mapping layer.
 #[derive(Debug, Clone)]
 pub struct Chip {
     pub x: u32,
     pub y: u32,
-    pub processors: Vec<Processor>,
+    /// Working cores, bit `p` set ⇒ core `p` present (bit 0 = monitor).
+    core_mask: u32,
+    /// Working links, bit `d.id()` set ⇒ link `d` present.
+    link_mask: u8,
     pub sdram: Sdram,
-    /// Links that are present and working, by direction.
-    pub working_links: Vec<Direction>,
     /// Routing entries available to applications (SCAMP can consume some).
     pub n_router_entries: usize,
     /// IP address when this is an Ethernet chip.
@@ -84,20 +120,14 @@ pub struct Chip {
 
 impl Chip {
     pub fn new(x: u32, y: u32, n_cores: usize) -> Self {
-        let mut processors = Vec::with_capacity(n_cores);
-        for p in 0..n_cores as u8 {
-            if p == 0 {
-                processors.push(Processor::monitor(p));
-            } else {
-                processors.push(Processor::application(p));
-            }
-        }
+        debug_assert!(n_cores <= 32, "core mask is 32 bits wide");
+        let core_mask = if n_cores >= 32 { u32::MAX } else { (1u32 << n_cores) - 1 };
         Self {
             x,
             y,
-            processors,
+            core_mask,
+            link_mask: 0x3f,
             sdram: Sdram::default(),
-            working_links: super::geometry::ALL_DIRECTIONS.to_vec(),
             n_router_entries: ROUTER_ENTRIES,
             ethernet_ip: None,
             nearest_ethernet: (x, y),
@@ -109,25 +139,66 @@ impl Chip {
         self.ethernet_ip.is_some()
     }
 
-    /// Application (non-monitor) cores.
-    pub fn application_processors(&self) -> impl Iterator<Item = &Processor> {
-        self.processors.iter().filter(|p| !p.is_monitor)
+    /// Working cores, ascending id, as derived [`Processor`] records.
+    pub fn processors(&self) -> impl Iterator<Item = Processor> {
+        Bits(self.core_mask).map(|b| Processor::for_id(b as u8))
+    }
+
+    /// Application (non-monitor) cores, ascending id.
+    pub fn application_processors(&self) -> impl Iterator<Item = Processor> {
+        Bits(self.core_mask & !1).map(|b| Processor::application(b as u8))
+    }
+
+    pub fn n_processors(&self) -> usize {
+        self.core_mask.count_ones() as usize
     }
 
     pub fn n_application_cores(&self) -> usize {
-        self.application_processors().count()
+        (self.core_mask & !1).count_ones() as usize
+    }
+
+    pub fn processor(&self, id: u8) -> Option<Processor> {
+        if id < 32 && self.core_mask & (1 << id) != 0 {
+            Some(Processor::for_id(id))
+        } else {
+            None
+        }
+    }
+
+    /// Mark core `id` dead (§2 blacklist / runtime fault).
+    pub fn remove_processor(&mut self, id: u8) {
+        if id < 32 {
+            self.core_mask &= !(1 << id);
+        }
+    }
+
+    /// The raw working-core bitmask (bit `p` = core `p` present) — the
+    /// simulator boots its per-chip core store straight off this.
+    pub fn core_mask(&self) -> u32 {
+        self.core_mask
     }
 
     pub fn has_link(&self, d: Direction) -> bool {
-        self.working_links.contains(&d)
+        self.link_mask & (1 << d.id()) != 0
     }
 
     pub fn remove_link(&mut self, d: Direction) {
-        self.working_links.retain(|l| *l != d);
+        self.link_mask &= !(1 << d.id());
     }
 
-    pub fn processor(&self, id: u8) -> Option<&Processor> {
-        self.processors.iter().find(|p| p.id == id)
+    /// Reduce the link set to exactly `d` (virtual device chips have a
+    /// single wire back to their attachment point).
+    pub fn set_only_link(&mut self, d: Direction) {
+        self.link_mask = 1 << d.id();
+    }
+
+    /// Links that are present and working, in [`Direction`] id order.
+    pub fn working_links(&self) -> impl Iterator<Item = Direction> {
+        Bits(self.link_mask as u32).map(|b| ALL_DIRECTIONS[b as usize])
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.link_mask.count_ones() as usize
     }
 }
 
@@ -138,10 +209,11 @@ mod tests {
     #[test]
     fn chip_defaults() {
         let c = Chip::new(1, 2, 18);
-        assert_eq!(c.processors.len(), 18);
+        assert_eq!(c.n_processors(), 18);
         assert_eq!(c.n_application_cores(), 17); // core 0 is the monitor
-        assert!(c.processors[0].is_monitor);
-        assert_eq!(c.working_links.len(), 6);
+        assert!(c.processor(0).unwrap().is_monitor);
+        assert!(!c.processor(1).unwrap().is_monitor);
+        assert_eq!(c.n_links(), 6);
         assert!(!c.is_ethernet());
         assert_eq!(c.n_router_entries, 1024);
     }
@@ -163,6 +235,37 @@ mod tests {
         let mut c = Chip::new(0, 0, 18);
         c.remove_link(Direction::North);
         assert!(!c.has_link(Direction::North));
-        assert_eq!(c.working_links.len(), 5);
+        assert_eq!(c.n_links(), 5);
+    }
+
+    #[test]
+    fn processors_derive_from_mask_in_id_order() {
+        let mut c = Chip::new(0, 0, 18);
+        c.remove_processor(3);
+        assert!(c.processor(3).is_none());
+        assert_eq!(c.n_processors(), 17);
+        assert_eq!(c.n_application_cores(), 16);
+        let ids: Vec<u8> = c.processors().map(|p| p.id).collect();
+        assert_eq!(ids.len(), 17);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "ascending id order");
+        assert!(!ids.contains(&3));
+        let app_ids: Vec<u8> = c.application_processors().map(|p| p.id).collect();
+        assert!(!app_ids.contains(&0) && !app_ids.contains(&3));
+    }
+
+    #[test]
+    fn set_only_link_keeps_one_wire() {
+        let mut c = Chip::new(5, 5, 1);
+        c.set_only_link(Direction::SouthWest);
+        assert_eq!(c.working_links().collect::<Vec<_>>(), vec![Direction::SouthWest]);
+        assert!(!c.has_link(Direction::East));
+    }
+
+    #[test]
+    fn chip_record_is_flat() {
+        // The per-chip byte budget DESIGN.md §12 documents: the record
+        // itself must stay within ~64 bytes so a 1M-chip machine fits in
+        // a few hundred MB.
+        assert!(std::mem::size_of::<Chip>() <= 80, "{}", std::mem::size_of::<Chip>());
     }
 }

@@ -1,8 +1,7 @@
 //! The [`Machine`] representation and virtual-machine builders (§5.1).
 
 use std::collections::BTreeMap;
-
-
+use std::iter::Peekable;
 
 use super::chip::Chip;
 use super::geometry::{spinn5_chip_offsets, triad_ethernet_positions, Direction};
@@ -36,8 +35,15 @@ impl std::fmt::Display for CoreLocation {
 
 /// A SpiNNaker machine: chips on a (possibly torus-wrapped) 2D grid.
 ///
-/// BTreeMap keeps iteration deterministic — mapping must be reproducible
-/// run-to-run for the resume path (§6.5) to reuse loaded state.
+/// Storage is a flat slot array indexed `x * height + y` — struct of
+/// arrays rather than a map, so a 1M-chip machine is one allocation with
+/// no per-chip node overhead (DESIGN.md §12). The slot order is exactly
+/// the `(x, y)` lexicographic order the historical `BTreeMap` iterated
+/// in, and off-grid virtual device chips (§5.1 — their coordinates
+/// "don't have to align with the rest of the machine") live in a small
+/// side map merged back into iteration at the right positions, so every
+/// consumer still sees the deterministic order mapping reproducibility
+/// (§6.5) depends on.
 #[derive(Debug, Clone)]
 pub struct Machine {
     pub width: u32,
@@ -45,12 +51,50 @@ pub struct Machine {
     /// Whether links wrap around the edges (true for triad-tiled
     /// multi-board toroids, false for standalone boards).
     pub wrap: bool,
-    chips: BTreeMap<ChipCoord, Chip>,
+    /// In-grid chips, slot `x * height + y`; `None` = no chip (dead, or
+    /// outside a board footprint).
+    grid: Vec<Option<Chip>>,
+    /// Chips whose coordinates fall outside the declared grid (virtual
+    /// device chips parked off-board).
+    off_grid: BTreeMap<ChipCoord, Chip>,
+    /// Chip count, maintained on add/remove (the grid is not scanned).
+    n_chips: usize,
+    /// Cached [`Machine::real_extent`], maintained on add/remove.
+    extent: (u32, u32),
     /// Off-grid adjacencies for virtual (device) chips, §5.1: virtual
     /// chip coordinates "don't have to align with the rest of the
     /// machine", so their links are recorded explicitly rather than
     /// derived from geometry. Key: (chip, link direction) -> other chip.
     virtual_links: BTreeMap<(ChipCoord, Direction), ChipCoord>,
+}
+
+/// Merge two `(x, y)`-sorted chip streams (the grid slots and the
+/// off-grid side map) into one globally sorted stream.
+struct MergeByCoord<A: Iterator, B: Iterator> {
+    a: Peekable<A>,
+    b: Peekable<B>,
+}
+
+impl<'m, A, B> Iterator for MergeByCoord<A, B>
+where
+    A: Iterator<Item = &'m Chip>,
+    B: Iterator<Item = &'m Chip>,
+{
+    type Item = &'m Chip;
+
+    fn next(&mut self) -> Option<&'m Chip> {
+        match (self.a.peek(), self.b.peek()) {
+            (Some(x), Some(y)) => {
+                if (x.x, x.y) <= (y.x, y.y) {
+                    self.a.next()
+                } else {
+                    self.b.next()
+                }
+            }
+            (Some(_), None) => self.a.next(),
+            (None, _) => self.b.next(),
+        }
+    }
 }
 
 impl Machine {
@@ -59,8 +103,20 @@ impl Machine {
             width,
             height,
             wrap,
-            chips: BTreeMap::new(),
+            grid: vec![None; width as usize * height as usize],
+            off_grid: BTreeMap::new(),
+            n_chips: 0,
+            extent: (width.max(1), height.max(1)),
             virtual_links: BTreeMap::new(),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, c: ChipCoord) -> Option<usize> {
+        if c.0 < self.width && c.1 < self.height {
+            Some(c.0 as usize * self.height as usize + c.1 as usize)
+        } else {
+            None
         }
     }
 
@@ -71,39 +127,61 @@ impl Machine {
     }
 
     pub fn add_chip(&mut self, chip: Chip) {
-        self.chips.insert((chip.x, chip.y), chip);
+        let c = (chip.x, chip.y);
+        if !chip.is_virtual {
+            self.extent.0 = self.extent.0.max(chip.x + 1);
+            self.extent.1 = self.extent.1.max(chip.y + 1);
+        }
+        let replaced = match self.slot(c) {
+            Some(i) => self.grid[i].replace(chip).is_some(),
+            None => self.off_grid.insert(c, chip).is_some(),
+        };
+        if !replaced {
+            self.n_chips += 1;
+        }
     }
 
     pub fn chip(&self, c: ChipCoord) -> Option<&Chip> {
-        self.chips.get(&c)
+        match self.slot(c) {
+            Some(i) => self.grid[i].as_ref(),
+            None => self.off_grid.get(&c),
+        }
     }
 
     pub fn chip_mut(&mut self, c: ChipCoord) -> Option<&mut Chip> {
-        self.chips.get_mut(&c)
+        match self.slot(c) {
+            Some(i) => self.grid[i].as_mut(),
+            None => self.off_grid.get_mut(&c),
+        }
     }
 
+    /// All chips in `(x, y)` lexicographic order (off-grid device chips
+    /// merged in at their coordinate positions).
     pub fn chips(&self) -> impl Iterator<Item = &Chip> {
-        self.chips.values()
+        MergeByCoord {
+            a: self.grid.iter().filter_map(|c| c.as_ref()).peekable(),
+            b: self.off_grid.values().peekable(),
+        }
     }
 
     pub fn chip_coords(&self) -> impl Iterator<Item = ChipCoord> + '_ {
-        self.chips.keys().copied()
+        self.chips().map(|c| (c.x, c.y))
     }
 
     pub fn n_chips(&self) -> usize {
-        self.chips.len()
+        self.n_chips
     }
 
     pub fn n_cores(&self) -> usize {
-        self.chips.values().map(|c| c.processors.len()).sum()
+        self.chips().map(|c| c.n_processors()).sum()
     }
 
     pub fn n_application_cores(&self) -> usize {
-        self.chips.values().map(|c| c.n_application_cores()).sum()
+        self.chips().map(|c| c.n_application_cores()).sum()
     }
 
     pub fn ethernet_chips(&self) -> impl Iterator<Item = &Chip> {
-        self.chips.values().filter(|c| c.is_ethernet())
+        self.chips().filter(|c| c.is_ethernet())
     }
 
     /// The chip one hop from `from` in direction `d`, with torus wrap if
@@ -173,7 +251,7 @@ impl Machine {
 
     /// Total working SDRAM for applications, over all chips.
     pub fn total_user_sdram(&self) -> u64 {
-        self.chips.values().map(|c| c.sdram.user_size() as u64).sum()
+        self.chips().map(|c| c.sdram.user_size() as u64).sum()
     }
 
     /// The Ethernet chip responsible for `c` (SCAMP relays host traffic
@@ -187,35 +265,52 @@ impl Machine {
     /// `y < h`, never smaller than the declared grid. The simulator
     /// sizes its flat chip arena (index `y * w + x`) from this, so
     /// virtual device chips parked at off-grid coordinates (§5.1) cost
-    /// nothing.
+    /// nothing. Cached at construction time and maintained on
+    /// [`Machine::add_chip`]/[`Machine::remove_chip`] — construction
+    /// paths call this per chip, so it must not rescan the machine.
     pub fn real_extent(&self) -> (u32, u32) {
+        self.extent
+    }
+
+    fn recompute_extent(&mut self) {
         let mut w = self.width.max(1);
         let mut h = self.height.max(1);
-        for c in self.chips.values().filter(|c| !c.is_virtual) {
+        for c in self.chips().filter(|c| !c.is_virtual) {
             w = w.max(c.x + 1);
             h = h.max(c.y + 1);
         }
-        (w, h)
+        self.extent = (w, h);
     }
 
     /// Remove a chip from the machine entirely (runtime chip death or a
     /// degraded re-discovery view): neighbours lose the link toward it
     /// and any virtual link touching it is dropped. The builder-time
-    /// [`MachineBuilder::dead_chip`] delegates here.
+    /// [`MachineBuilder::dead_chip`] delegates here. O(1) in machine
+    /// size: only the six geometric neighbours are touched.
     pub fn remove_chip(&mut self, c: ChipCoord) {
-        self.chips.remove(&c);
-        let coords: Vec<ChipCoord> = self.chip_coords().collect();
-        for cc in coords {
-            for d in super::geometry::ALL_DIRECTIONS {
-                if self.neighbour_coord(cc, d) == Some(c) {
-                    if let Some(chip) = self.chip_mut(cc) {
-                        chip.remove_link(d);
-                    }
+        let removed = match self.slot(c) {
+            Some(i) => self.grid[i].take(),
+            None => self.off_grid.remove(&c),
+        };
+        let Some(removed) = removed else { return };
+        self.n_chips -= 1;
+        // The six neighbours hold the only geometric links toward `c`:
+        // the chip at neighbour_coord(c, d) reaches c via d.opposite().
+        for d in super::geometry::ALL_DIRECTIONS {
+            if let Some(n) = self.neighbour_coord(c, d) {
+                if let Some(chip) = self.chip_mut(n) {
+                    chip.remove_link(d.opposite());
                 }
             }
         }
         self.virtual_links
             .retain(|(from, _), to| *from != c && *to != c);
+        // Only a real chip parked outside the declared grid can have
+        // stretched the cached extent; in-grid chips are bounded by the
+        // (width, height) floor, so the cache cannot shrink below it.
+        if !removed.is_virtual && (c.0 >= self.width || c.1 >= self.height) {
+            self.recompute_extent();
+        }
     }
 
     /// Remove a link in both directions (runtime link death). Geometry
@@ -331,6 +426,69 @@ impl MachineBuilder {
         Self::triads(tx, ty)
     }
 
+    /// A wafer-scale toroid of at least `n_chips` chips: the smallest
+    /// square triad-tiled torus (side a multiple of 12) with that many
+    /// chips. This is the SpiNNaker2-scale construction path (DESIGN.md
+    /// §12): chips stream straight into the flat slot array, and the
+    /// per-chip nearest-Ethernet assignment is served from a 12x12
+    /// periodic lookup table — the Ethernet lattice repeats every triad,
+    /// so the O(chips x boards) scan [`MachineBuilder::triads`] performs
+    /// is unnecessary. Construction is O(n) with no intermediate maps:
+    /// ~1M chips build in well under a second.
+    pub fn wafer(n_chips: u32) -> Self {
+        let side = ((n_chips.max(1) as f64).sqrt().ceil() as u32).div_ceil(12).max(1) * 12;
+        let (w, h) = (side, side);
+        let mut m = Machine::new(w, h, true);
+        // Nearest-Ethernet offsets, one per position within a triad tile:
+        // the best (dx, dy) to add (mod w/h) to reach the chip's board
+        // Ethernet. The candidate lattice is the 3 per-tile Ethernet
+        // offsets across the 3x3 surrounding tiles; anything further is
+        // at least 13 hops away while the in-tile candidate is <= 22 and
+        // the true optimum <= 8, so the neighbourhood is exhaustive.
+        const TILE_ETHS: [(i64, i64); 3] = [(0, 0), (4, 8), (8, 4)];
+        let mut nearest = [[(0i64, 0i64); 12]; 12];
+        for lx in 0..12i64 {
+            for ly in 0..12i64 {
+                let mut best = (i64::MAX, (0i64, 0i64));
+                for tdx in -1..=1i64 {
+                    for tdy in -1..=1i64 {
+                        for (ex, ey) in TILE_ETHS {
+                            let ddx = tdx * 12 + ex - lx;
+                            let ddy = tdy * 12 + ey - ly;
+                            let key = (ddx.abs() + ddy.abs(), (ddx, ddy));
+                            if key < best {
+                                best = (key.0, key.1);
+                            }
+                        }
+                    }
+                }
+                nearest[lx as usize][ly as usize] = best.1;
+            }
+        }
+        let mut eth_index = 0usize;
+        for x in 0..w {
+            for y in 0..h {
+                let mut chip = Chip::new(x, y, 18);
+                let (ddx, ddy) = nearest[x as usize % 12][y as usize % 12];
+                chip.nearest_ethernet = (
+                    (x as i64 + ddx).rem_euclid(w as i64) as u32,
+                    (y as i64 + ddy).rem_euclid(h as i64) as u32,
+                );
+                if (ddx, ddy) == (0, 0) {
+                    chip.ethernet_ip = Some(format!(
+                        "10.{}.{}.{}",
+                        eth_index / 65536,
+                        (eth_index / 256) % 256,
+                        eth_index % 256
+                    ));
+                    eth_index += 1;
+                }
+                m.add_chip(chip);
+            }
+        }
+        Self { machine: m }
+    }
+
     /// A full rectangular torus (every chip present) — convenient for
     /// unit tests that need exact dimensions.
     pub fn grid(width: u32, height: u32, wrap: bool) -> Self {
@@ -376,7 +534,7 @@ impl MachineBuilder {
     /// Blacklist one core of a chip.
     pub fn dead_core(mut self, c: ChipCoord, p: u8) -> Self {
         if let Some(chip) = self.machine.chip_mut(c) {
-            chip.processors.retain(|proc| proc.id != p);
+            chip.remove_processor(p);
         }
         self
     }
@@ -399,7 +557,7 @@ impl MachineBuilder {
             .chip(attached_to)
             .map(|c| c.nearest_ethernet)
             .unwrap_or((0, 0));
-        chip.working_links = vec![link.opposite()];
+        chip.set_only_link(link.opposite());
         self.machine.add_chip(chip);
         self.machine.add_virtual_link(attached_to, link, coord);
         self
@@ -499,7 +657,7 @@ mod tests {
     #[test]
     fn dead_core_removed() {
         let m = MachineBuilder::spinn3().dead_core((0, 0), 17).build();
-        assert_eq!(m.chip((0, 0)).unwrap().processors.len(), 17);
+        assert_eq!(m.chip((0, 0)).unwrap().n_processors(), 17);
     }
 
     #[test]
@@ -552,5 +710,71 @@ mod tests {
             let e = chip.nearest_ethernet;
             assert!(m.chip(e).unwrap().is_ethernet(), "chip {:?}", (chip.x, chip.y));
         }
+    }
+
+    #[test]
+    fn iteration_order_is_lexicographic_with_off_grid_merged() {
+        // Off-grid virtual chips must interleave at their coordinate
+        // positions, not trail the grid: (0, 999) sorts between (0, 7)
+        // and (1, 0) on an 8-wide board.
+        let m = MachineBuilder::spinn5()
+            .virtual_chip((0, 999), (0, 0), Direction::SouthWest)
+            .virtual_chip((100, 100), (7, 7), Direction::NorthEast)
+            .build();
+        let coords: Vec<ChipCoord> = m.chip_coords().collect();
+        assert_eq!(coords.len(), 50);
+        assert!(coords.windows(2).all(|w| w[0] < w[1]), "sorted: {coords:?}");
+        let i999 = coords.iter().position(|c| *c == (0, 999)).unwrap();
+        assert!(coords[i999 - 1].0 == 0 && coords[i999 + 1] == (1, 0));
+        assert_eq!(*coords.last().unwrap(), (100, 100));
+    }
+
+    #[test]
+    fn extent_cache_tracks_removals() {
+        let mut m = MachineBuilder::spinn5().build();
+        // An off-grid *real* chip stretches the extent...
+        let far = Chip::new(20, 3, 18);
+        m.add_chip(far);
+        assert_eq!(m.real_extent(), (21, 8));
+        // ...and removing it shrinks the cache back to the grid floor.
+        m.remove_chip((20, 3));
+        assert_eq!(m.real_extent(), (8, 8));
+        // In-grid removals never move the extent.
+        m.remove_chip((4, 4));
+        assert_eq!(m.real_extent(), (8, 8));
+    }
+
+    #[test]
+    fn wafer_builds_triad_toroids() {
+        let m = MachineBuilder::wafer(1000).build();
+        // 1000 chips -> 32 side -> rounded up to 36: a 3x3-triad torus.
+        assert_eq!((m.width, m.height), (36, 36));
+        assert_eq!(m.n_chips(), 36 * 36);
+        assert!(m.wrap);
+        // One board Ethernet per 48 chips, at the triad lattice points.
+        assert_eq!(m.ethernet_chips().count(), (36 / 12) * (36 / 12) * 3);
+        assert!(m.chip((0, 0)).unwrap().is_ethernet());
+        assert!(m.chip((4, 8)).unwrap().is_ethernet());
+        assert!(m.chip((20, 16)).unwrap().is_ethernet());
+        // Every chip's board assignment is a real Ethernet chip.
+        for chip in m.chips() {
+            let e = chip.nearest_ethernet;
+            assert!(m.chip(e).unwrap().is_ethernet(), "chip {:?} -> {e:?}", (chip.x, chip.y));
+        }
+        assert_eq!(m.real_extent(), (36, 36));
+    }
+
+    #[test]
+    fn wafer_matches_triads_on_structure() {
+        // Same side -> same chip set, wrap, and Ethernet lattice as the
+        // scan-based triad builder (nearest-Ethernet may tie-break
+        // differently; the lattice itself must agree).
+        let w = MachineBuilder::wafer(144).build();
+        let t = MachineBuilder::triads(1, 1).build();
+        assert_eq!((w.width, w.height), (t.width, t.height));
+        assert_eq!(w.n_chips(), t.n_chips());
+        let we: Vec<ChipCoord> = w.ethernet_chips().map(|c| (c.x, c.y)).collect();
+        let te: Vec<ChipCoord> = t.ethernet_chips().map(|c| (c.x, c.y)).collect();
+        assert_eq!(we, te);
     }
 }

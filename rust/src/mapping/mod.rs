@@ -126,7 +126,14 @@ pub fn map_graph(
     config: &MappingConfig,
 ) -> anyhow::Result<Mapping> {
     let threads = config.options.threads;
-    let placements = placer::place(machine, graph)?;
+    // Big machines take the two-level placer (byte-identical output,
+    // flat ledgers + board-sharded refinement — DESIGN.md §12); small
+    // ones keep the flat path, which needs no sharding setup.
+    let placements = if machine.n_chips() >= placer::HIERARCHICAL_PLACEMENT_THRESHOLD {
+        placer::place_hierarchical(machine, graph, &std::collections::BTreeSet::new(), threads)?
+    } else {
+        placer::place(machine, graph)?
+    };
     let forest = router::route_sharded(machine, graph, &placements, threads)?;
     let keys = keys::allocate_keys(graph)?;
     let mut tables = tables::build_tables(machine, graph, &forest, &keys, config)?;

@@ -231,6 +231,188 @@ pub fn place_avoiding(
     Ok(placements)
 }
 
+/// Machines at or above this many chips take the hierarchical path in
+/// [`crate::mapping::map_graph`]; below it the flat placer is cheaper
+/// (no sharding setup) and the two produce byte-identical output anyway.
+pub const HIERARCHICAL_PLACEMENT_THRESHOLD: usize = 4096;
+
+/// Hierarchical placement for big machines (DESIGN.md §12).
+///
+/// Two levels. The *coarse pass* bin-packs vertices onto boards by
+/// replaying the radial first-fit against flat per-chip capacity
+/// counters — a struct-of-arrays ledger (free-core count, SDRAM
+/// remaining) indexed by radial order position, touched with integer
+/// ops only, no per-chip map lookups. It decides, for every vertex, the
+/// chip and the *slot* (how many plain vertices landed on that chip
+/// before it), and groups the decisions by the chip's board (its
+/// `nearest_ethernet` group). The *refinement pass* then resolves slots
+/// to concrete core ids per board — slot `k` on a chip is the
+/// `k+1`-lowest set bit of the chip's post-constraint free-core mask,
+/// exactly the `free_cores.remove(0)` of the flat placer — sharded
+/// across the [`crate::util::par`] pool, one unit per board.
+///
+/// Because the coarse pass replays the flat algorithm's decisions
+/// exactly and the refinement is a pure per-board function of them, the
+/// result is byte-identical to [`place_avoiding`] on the same inputs at
+/// *every* scale (the A/B digest tests in `tests/scale.rs` pin this at
+/// overlap scales), and thread-invariant: `par_map` preserves item
+/// order and the workers share only immutable state.
+pub fn place_hierarchical(
+    machine: &Machine,
+    graph: &MachineGraph,
+    forbidden: &BTreeSet<ChipCoord>,
+    threads: usize,
+) -> anyhow::Result<Placements> {
+    let mut placements = Placements::default();
+
+    // Radial visit order over placeable chips, and the SoA ledgers.
+    let mut order = radial_chip_order(machine);
+    order.retain(|c| {
+        machine.chip(*c).map(|ch| !ch.is_virtual).unwrap_or(false) && !forbidden.contains(c)
+    });
+    let n = order.len();
+    let mut mask: Vec<u32> = Vec::with_capacity(n); // free app cores
+    let mut sdram_free: Vec<u64> = Vec::with_capacity(n);
+    let mut board_key: Vec<ChipCoord> = Vec::with_capacity(n);
+    for c in &order {
+        let chip = machine.chip(*c).unwrap();
+        mask.push(chip.core_mask() & !1); // core 0 is the monitor
+        sdram_free.push(chip.sdram.user_size() as u64);
+        board_key.push(chip.nearest_ethernet);
+    }
+    // Coordinate -> order position. In-grid coords resolve through a
+    // flat vector (4 bytes/chip); only off-grid chips pay a map.
+    let grid_len = machine.width as usize * machine.height as usize;
+    let mut pos_grid: Vec<u32> = vec![u32::MAX; grid_len];
+    let mut pos_off: BTreeMap<ChipCoord, usize> = BTreeMap::new();
+    for (i, c) in order.iter().enumerate() {
+        if c.0 < machine.width && c.1 < machine.height {
+            pos_grid[c.0 as usize * machine.height as usize + c.1 as usize] = i as u32;
+        } else {
+            pos_off.insert(*c, i);
+        }
+    }
+    let pos = |c: ChipCoord| -> Option<usize> {
+        if c.0 < machine.width && c.1 < machine.height {
+            let p = pos_grid[c.0 as usize * machine.height as usize + c.1 as usize];
+            (p != u32::MAX).then_some(p as usize)
+        } else {
+            pos_off.get(&c).copied()
+        }
+    };
+
+    // Pass 1: constrained vertices, same order and same errors as the
+    // flat placer (these are assumed rare; they mutate the masks the
+    // refinement pass reads, so they must settle first).
+    let mut plain: Vec<VertexId> = Vec::new();
+    let mut chip_constrained: Vec<(VertexId, ChipCoord)> = Vec::new();
+    for (vid, vertex) in graph.vertices() {
+        if let Some(vl) = vertex.virtual_link() {
+            let vchip = find_virtual_chip(machine, vl.attached_to, vl.direction)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no virtual chip for device vertex {} (attached {:?})",
+                        vertex.label(),
+                        vl.attached_to
+                    )
+                })?;
+            placements.insert(vid, CoreLocation::new(vchip.0, vchip.1, 0))?;
+        } else if let Some(loc) = vertex.placement_constraint() {
+            let i = pos(loc.chip())
+                .ok_or_else(|| anyhow::anyhow!("constraint on missing chip {:?}", loc.chip()))?;
+            anyhow::ensure!(
+                loc.p != 0 && loc.p < 32 && mask[i] & (1 << loc.p) != 0,
+                "constrained core {loc} unavailable"
+            );
+            mask[i] &= !(1 << loc.p);
+            let need = vertex.resources().sdram_bytes;
+            anyhow::ensure!(
+                sdram_free[i] >= need,
+                "chip {:?} out of SDRAM for constrained vertex",
+                loc.chip()
+            );
+            sdram_free[i] -= need;
+            placements.insert(vid, loc)?;
+        } else if let Some(chip) = vertex.chip_constraint() {
+            chip_constrained.push((vid, chip));
+        } else {
+            plain.push(vid);
+        }
+    }
+    for (vid, chip) in chip_constrained {
+        let i = pos(chip)
+            .ok_or_else(|| anyhow::anyhow!("chip constraint on missing chip {chip:?}"))?;
+        anyhow::ensure!(mask[i] != 0, "no free core on constrained chip {chip:?}");
+        let p = mask[i].trailing_zeros() as u8;
+        mask[i] &= mask[i] - 1;
+        let need = graph.vertex(vid).resources().sdram_bytes;
+        anyhow::ensure!(
+            sdram_free[i] >= need,
+            "chip {chip:?} out of SDRAM for constrained vertex"
+        );
+        sdram_free[i] -= need;
+        placements.insert(vid, CoreLocation::new(chip.0, chip.1, p))?;
+    }
+
+    // Coarse pass: radial first-fit replay at chip granularity. Only
+    // counters move — which core a slot becomes is the refinement's job.
+    let free_count: Vec<u16> = mask.iter().map(|m| m.count_ones() as u16).collect();
+    let mut taken: Vec<u16> = vec![0; n];
+    let mut board_ids: BTreeMap<ChipCoord, u32> = BTreeMap::new();
+    let mut board_of: Vec<u32> = Vec::with_capacity(n);
+    for bk in &board_key {
+        let next = board_ids.len() as u32;
+        board_of.push(*board_ids.entry(*bk).or_insert(next));
+    }
+    let mut per_board: Vec<Vec<(VertexId, u32, u16)>> = vec![Vec::new(); board_ids.len()];
+    let mut chip_cursor = 0usize;
+    for vid in plain {
+        let need = graph.vertex(vid).resources().sdram_bytes;
+        let mut tried = 0usize;
+        loop {
+            if tried >= order.len() {
+                anyhow::bail!(
+                    "machine full: cannot place vertex {} ({} cores, {} chips)",
+                    graph.vertex(vid).label(),
+                    graph.n_vertices(),
+                    machine.n_chips()
+                );
+            }
+            let i = (chip_cursor + tried) % order.len();
+            if taken[i] < free_count[i] && sdram_free[i] >= need {
+                per_board[board_of[i] as usize].push((vid, i as u32, taken[i]));
+                taken[i] += 1;
+                sdram_free[i] -= need;
+                chip_cursor = i;
+                break;
+            }
+            tried += 1;
+        }
+    }
+
+    // Refinement: per board, resolve slots to core ids off the shared
+    // post-constraint masks. Pure, order-preserving, thread-invariant.
+    let resolved = crate::util::par::par_map(threads, &per_board, |_, items| {
+        items
+            .iter()
+            .map(|&(vid, i, slot)| {
+                let mut m = mask[i as usize];
+                for _ in 0..slot {
+                    m &= m - 1; // drop the slots consumed before this one
+                }
+                let c = order[i as usize];
+                (vid, CoreLocation::new(c.0, c.1, m.trailing_zeros() as u8))
+            })
+            .collect::<Vec<_>>()
+    });
+    for pairs in resolved {
+        for (vid, loc) in pairs {
+            placements.insert(vid, loc)?;
+        }
+    }
+    Ok(placements)
+}
+
 /// Incremental placement (DESIGN.md §7): every vertex present in
 /// `prior` keeps its exact core (the *pin*) while that core still
 /// exists, vertices no longer in the graph simply vanish, and only new
@@ -679,6 +861,54 @@ mod tests {
                 assert_eq!(inc.of(*id), prior.of(*id), "survivor moved");
             }
         }
+    }
+
+    #[test]
+    fn hierarchical_matches_flat_placer() {
+        // Mixed workload: a pinned core, SDRAM-heavy stragglers that
+        // force chip skips, and plain filler. The two-level placer must
+        // reproduce the flat map exactly at every thread count.
+        let m = MachineBuilder::spinn5().build();
+        let mut g = MachineGraph::new();
+        g.add_vertex(TestVertex::constrained("pin", CoreLocation::new(1, 1, 5)));
+        for i in 0..300 {
+            let sdram = if i % 7 == 0 { 30 * 1024 * 1024 } else { 1024 };
+            g.add_vertex(TestVertex::with_sdram(&format!("v{i}"), sdram));
+        }
+        let flat = place(&m, &g).unwrap();
+        for threads in [1, 2, 8] {
+            let h = place_hierarchical(&m, &g, &BTreeSet::new(), threads).unwrap();
+            assert_eq!(h.len(), flat.len());
+            for (v, l) in flat.iter() {
+                assert_eq!(h.of(v), Some(l), "{v:?} with {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_matches_flat_on_degraded_machine() {
+        let m = MachineBuilder::spinn3()
+            .dead_chip((1, 1))
+            .dead_core((0, 1), 4)
+            .build();
+        let mut g = MachineGraph::new();
+        for i in 0..40 {
+            g.add_vertex(TestVertex::arc(&format!("v{i}")));
+        }
+        let mut forbidden = BTreeSet::new();
+        forbidden.insert((0u32, 0u32));
+        let flat = place_avoiding(&m, &g, &forbidden).unwrap();
+        let h = place_hierarchical(&m, &g, &forbidden, 4).unwrap();
+        for (v, l) in flat.iter() {
+            assert_eq!(h.of(v), Some(l), "{v:?}");
+        }
+        assert_eq!(h.len(), flat.len());
+        // And both reject the same overfull graph.
+        for i in 0..20 {
+            g.add_vertex(TestVertex::arc(&format!("x{i}")));
+        }
+        assert!(place_avoiding(&m, &g, &forbidden).is_err());
+        assert!(place_hierarchical(&m, &g, &forbidden, 4).is_err());
     }
 
     #[test]

@@ -119,6 +119,83 @@ pub fn build_tables(
         .collect())
 }
 
+/// Demand-driven table materialization (DESIGN.md §12).
+///
+/// [`build_tables`] materializes every chip's table eagerly, which is
+/// the right shape for the pipeline (the whole map is loaded anyway)
+/// but the wrong one at SpiNNaker2 scale, where a 1M-chip machine may
+/// carry traffic on a few thousand chips: the loader wants tables one
+/// chip at a time, paying only for chips a route actually crosses.
+///
+/// A `TablePlan` is the cheap, traffic-proportional planning half
+/// (resolve key ranges, group trees per touched chip — no entries are
+/// built), borrowed from the forest. Individual tables are then built
+/// on demand with [`TablePlan::table_for`], and compressed only when
+/// oversubscribed via [`TablePlan::loadable_table_for`] — so mapping
+/// cost tracks traffic, not machine size. Materializing every planned
+/// chip reproduces [`build_tables`] byte-for-byte (pinned by tests).
+pub struct TablePlan<'f> {
+    trees: Vec<&'f RoutingTree>,
+    ranges: Vec<KeyRange>,
+    /// Touched chips with their forest-order tree indices, chip-sorted.
+    work: Vec<ChipWork>,
+    use_default_routes: bool,
+}
+
+impl<'f> TablePlan<'f> {
+    pub fn new(
+        machine: &Machine,
+        forest: &'f RoutingForest,
+        keys: &BTreeMap<(VertexId, String), KeyRange>,
+        config: &MappingConfig,
+    ) -> anyhow::Result<TablePlan<'f>> {
+        let (trees, ranges, work) = plan_chips(machine, forest, keys)?;
+        Ok(TablePlan { trees, ranges, work, use_default_routes: config.use_default_routes })
+    }
+
+    /// Chips at least one routing tree touches, ascending — the only
+    /// chips [`Self::table_for`] can return a table for.
+    pub fn chips(&self) -> impl Iterator<Item = ChipCoord> + '_ {
+        self.work.iter().map(|(c, _)| *c)
+    }
+
+    /// Number of touched chips (the plan's size, not the machine's).
+    pub fn n_chips(&self) -> usize {
+        self.work.len()
+    }
+
+    /// Materialize one chip's table. `None` when no tree touches the
+    /// chip or every node on it was elided by default routing — the
+    /// same chips [`build_tables`] omits from its map.
+    pub fn table_for(&self, chip: ChipCoord) -> Option<RoutingTable> {
+        let i = self.work.binary_search_by_key(&chip, |(c, _)| *c).ok()?;
+        let table =
+            chip_table(&self.trees, &self.ranges, chip, &self.work[i].1, self.use_default_routes);
+        (!table.is_empty()).then_some(table)
+    }
+
+    /// [`Self::table_for`], compressed only when the raw table
+    /// oversubscribes the TCAM (the lazy analogue of
+    /// [`super::compress::compress_tables_in_place`]). Errors if the
+    /// table still does not fit after compression.
+    pub fn loadable_table_for(&self, chip: ChipCoord) -> anyhow::Result<Option<RoutingTable>> {
+        let Some(table) = self.table_for(chip) else {
+            return Ok(None);
+        };
+        if table.fits() {
+            return Ok(Some(table));
+        }
+        let compressed = super::compress::compress(&table);
+        anyhow::ensure!(
+            compressed.fits(),
+            "routing table on chip {chip:?} needs {} entries (TCAM holds {})",
+            compressed.len(),
+            crate::machine::ROUTER_ENTRIES
+        );
+        Ok(Some(compressed))
+    }
+}
+
 /// Verify that the generated tables route every key of every partition
 /// from its source to exactly its destination set — the E2/E10 oracle
 /// used by tests and the compression benchmark.
@@ -261,6 +338,41 @@ mod tests {
         let targets = [((4, 0), 1), ((0, 4), 2), ((3, 3), 3), ((0, 0), 4)];
         let tables = tables_for_tree(&m, (0, 0), &targets, key, true);
         check_tables(&m, &tables, (0, 0), key.base, &targets).unwrap();
+    }
+
+    #[test]
+    fn lazy_plan_matches_eager_tables() {
+        let m = MachineBuilder::grid(8, 8, false).build();
+        let key = KeyRange::new(0x200, 0xffff_ff00);
+        let targets = [((4, 0), 1), ((0, 4), 2), ((3, 3), 3)];
+        let tree = build_tree(&m, (0, 0), &dests(&targets)).unwrap();
+        let mut forest = RoutingForest::default();
+        forest.trees.insert((VertexId(0), "p".into()), tree);
+        let mut keys = BTreeMap::new();
+        keys.insert((VertexId(0), "p".to_string()), key);
+        let config = MappingConfig::default();
+        let graph = MachineGraph::new();
+        let eager = build_tables(&m, &graph, &forest, &keys, &config).unwrap();
+        let plan = TablePlan::new(&m, &forest, &keys, &config).unwrap();
+        // Demand-materializing every planned chip reproduces the eager
+        // map exactly, including which chips get no table at all.
+        let mut lazy = BTreeMap::new();
+        for chip in plan.chips() {
+            if let Some(t) = plan.table_for(chip) {
+                lazy.insert(chip, t);
+            }
+        }
+        assert_eq!(lazy, eager);
+        // A chip no route crosses costs nothing and yields nothing.
+        assert!(plan.table_for((7, 7)).is_none());
+        assert!(
+            plan.n_chips() < 64,
+            "plan size must track traffic, not machine size ({})",
+            plan.n_chips()
+        );
+        // Small tables pass through loadable_table_for uncompressed.
+        let c0 = plan.loadable_table_for((0, 0)).unwrap().unwrap();
+        assert_eq!(&c0, &eager[&(0, 0)]);
     }
 
     #[test]

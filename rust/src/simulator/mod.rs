@@ -365,12 +365,87 @@ pub struct SimStats {
     pub sdp_sent: u64,
 }
 
+/// Hot/cold split core store for one chip (DESIGN.md §12): presence is
+/// a 32-bit mask (hot — every router delivery checks it), and the heavy
+/// [`SimCore`] records (app box, recordings, provenance, IOBUF) are
+/// materialised lazily on first *mutation*. At SpiNNaker2 scale most
+/// chips never have an app loaded, so a booted 100k-chip fabric carries
+/// 100k masks instead of 1.8M `BTreeMap` nodes. All mutation goes
+/// through [`CoreMap::get_mut`], so a present-but-unmaterialised core is
+/// observably identical to a fresh `SimCore::idle()` — `get` serves
+/// those from one shared idle stand-in per chip. (The stand-in is a
+/// field, not a `static`: `SimCore` holds a `Box<dyn CoreApp>` slot and
+/// is not `Sync`; it costs ~150 inline bytes and no heap.)
+pub(crate) struct CoreMap {
+    /// Bit `p` set ⇒ core `p` present (mirrors `Chip::core_mask`).
+    present: u32,
+    /// Materialised cores, sorted by id; empty until a core is touched.
+    cores: Vec<(u8, SimCore)>,
+    /// Read-only stand-in for present-but-untouched cores.
+    idle: SimCore,
+}
+
+impl CoreMap {
+    pub fn from_mask(present: u32) -> CoreMap {
+        CoreMap { present, cores: Vec::new(), idle: SimCore::idle() }
+    }
+
+    #[inline]
+    pub fn contains(&self, p: u8) -> bool {
+        p < 32 && self.present & (1 << p) != 0
+    }
+
+    #[inline]
+    pub fn get(&self, p: u8) -> Option<&SimCore> {
+        if !self.contains(p) {
+            return None;
+        }
+        match self.cores.binary_search_by_key(&p, |(id, _)| *id) {
+            Ok(i) => Some(&self.cores[i].1),
+            Err(_) => Some(&self.idle),
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, p: u8) -> Option<&mut SimCore> {
+        if !self.contains(p) {
+            return None;
+        }
+        let i = match self.cores.binary_search_by_key(&p, |(id, _)| *id) {
+            Ok(i) => i,
+            Err(i) => {
+                self.cores.insert(i, (p, SimCore::idle()));
+                i
+            }
+        };
+        Some(&mut self.cores[i].1)
+    }
+
+    /// Present cores in ascending id order (the legacy `BTreeMap`
+    /// iteration order); untouched cores yield the shared idle record.
+    pub fn iter(&self) -> impl Iterator<Item = (u8, &SimCore)> {
+        let mut mask = self.present;
+        std::iter::from_fn(move || {
+            if mask == 0 {
+                return None;
+            }
+            let b = mask.trailing_zeros() as u8;
+            mask &= mask - 1;
+            Some(b)
+        })
+        .map(move |p| match self.cores.binary_search_by_key(&p, |(id, _)| *id) {
+            Ok(i) => (p, &self.cores[i].1),
+            Err(_) => (p, &self.idle),
+        })
+    }
+}
+
 pub(crate) struct SimChip {
     pub table: RoutingTable,
     /// Memoised TCAM lookups (fast fabric); cleared on every table load.
     pub route_cache: RouteCache,
     pub sdram: SdramStore,
-    pub cores: BTreeMap<u8, SimCore>,
+    pub cores: CoreMap,
     /// tag id -> (host, port, strip_sdp).
     pub iptags: BTreeMap<u8, (String, u16, bool)>,
     /// udp port -> destination core.
@@ -392,7 +467,7 @@ impl SimChip {
             table: RoutingTable::new(),
             route_cache: RouteCache::new(),
             sdram: SdramStore::new(chip.sdram.user_size()),
-            cores: chip.processors.iter().map(|p| (p.id, SimCore::idle())).collect(),
+            cores: CoreMap::from_mask(chip.core_mask()),
             iptags: BTreeMap::new(),
             reverse_iptags: BTreeMap::new(),
             router_stats: RouterStats::default(),
@@ -1024,7 +1099,7 @@ impl SimMachine {
                 let Ok(chip) = self.chip_mut(loc.chip()) else {
                     return Ok(()); // chip already dead: nothing left to fail
                 };
-                let Some(core) = chip.cores.get_mut(&loc.p) else {
+                let Some(core) = chip.cores.get_mut(loc.p) else {
                     return Ok(());
                 };
                 if matches!(core.state, CoreState::Idle | CoreState::Finished) {
@@ -1344,7 +1419,7 @@ impl SimMachine {
             }
             let core = chip
                 .cores
-                .get_mut(&loc.p)
+                .get_mut(loc.p)
                 .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
             if core.state != CoreState::Running {
                 return Ok(());
@@ -1363,7 +1438,7 @@ impl SimMachine {
         let Some((done, until, state)) = ({
             let chip = self.store.get(loc.chip()).filter(|c| !c.dead);
             chip.map(|c| {
-                let core = &c.cores[&loc.p];
+                let core = c.cores.get(loc.p).expect("ticked core exists");
                 (core.ticks_done, core.run_until, core.state)
             })
         }) else {
@@ -1377,7 +1452,7 @@ impl SimMachine {
                 let mut pause_needed = false;
                 {
                     let chip = self.chip_mut(loc.chip())?;
-                    let core = chip.cores.get_mut(&loc.p).unwrap();
+                    let core = chip.cores.get_mut(loc.p).unwrap();
                     if core.state == CoreState::Running {
                         core.state = CoreState::Paused;
                         pause_needed = true;
@@ -1415,7 +1490,7 @@ impl SimMachine {
             }
             let core = chip
                 .cores
-                .get_mut(&loc.p)
+                .get_mut(loc.p)
                 .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
             if matches!(core.state, CoreState::RunTimeError | CoreState::Watchdog) {
                 return Ok(()); // failed cores dispatch nothing further
@@ -1445,7 +1520,7 @@ impl SimMachine {
         // Put the app back and update state.
         {
             let chip = self.store.get_mut(loc.chip()).unwrap();
-            let core = chip.cores.get_mut(&loc.p).unwrap();
+            let core = chip.cores.get_mut(loc.p).unwrap();
             core.app = Some(std::mem::replace(&mut app, Box::new(NullApp)));
             drop(app);
             if result.is_err() {
@@ -1466,7 +1541,7 @@ impl SimMachine {
         if !mc_out.is_empty() {
             let start = {
                 let chip = self.store.get_mut(loc.chip()).unwrap();
-                let core = chip.cores.get_mut(&loc.p).unwrap();
+                let core = chip.cores.get_mut(loc.p).unwrap();
                 let start = core.tx_busy_ns.max(time_ns);
                 core.tx_busy_ns = start + mc_out.len() as u64 * spacing;
                 start
@@ -1487,7 +1562,7 @@ impl SimMachine {
         // read the error text back out of the IOBUF.
         if let Err(e) = result {
             let chip = self.store.get_mut(loc.chip()).unwrap();
-            let core = chip.cores.get_mut(&loc.p).unwrap();
+            let core = chip.cores.get_mut(loc.p).unwrap();
             core.provenance
                 .insert(format!("rte: {e}"), 1);
             core.iobuf
@@ -1639,16 +1714,16 @@ impl SimMachine {
             if chip.dead || !self.in_scope(c) {
                 continue;
             }
-            for (p, core) in &chip.cores {
+            for (p, core) in chip.cores.iter() {
                 if matches!(core.state, CoreState::Running | CoreState::Paused) {
-                    locs.push(CoreLocation::new(c.0, c.1, *p));
+                    locs.push(CoreLocation::new(c.0, c.1, p));
                 }
             }
         }
         let now = self.time_ns;
         for loc in locs {
             let chip = self.store.get_mut(loc.chip()).unwrap();
-            let core = chip.cores.get_mut(&loc.p).unwrap();
+            let core = chip.cores.get_mut(loc.p).unwrap();
             core.run_until += run_ticks;
             core.state = CoreState::Running;
             self.push_event(now + timestep_ns, EventKind::Tick(loc));

@@ -311,7 +311,7 @@ pub fn install_app(
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
-        .get_mut(&loc.p)
+        .get_mut(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc} (blacklisted?)"))?;
     anyhow::ensure!(
         core.state == CoreState::Idle,
@@ -344,7 +344,7 @@ pub fn region_table(
     Ok(sim
         .chip(loc.chip())?
         .cores
-        .get(&loc.p)
+        .get(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
         .regions
         .clone())
@@ -358,7 +358,7 @@ pub fn unload_app(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<()>
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
-        .get_mut(&loc.p)
+        .get_mut(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
     anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded");
     *core = SimCore::idle();
@@ -385,7 +385,7 @@ pub fn reload_app(
         let chip = sim.chip_mut(loc.chip())?;
         let core = chip
             .cores
-            .get_mut(&loc.p)
+            .get_mut(loc.p)
             .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
         anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded; install instead");
         std::mem::take(&mut core.recordings)
@@ -410,7 +410,7 @@ pub fn reload_app(
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
-        .get_mut(&loc.p)
+        .get_mut(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
     *core = SimCore {
         app: Some(app),
@@ -479,9 +479,9 @@ fn cores_in_state(sim: &SimMachine, want: CoreState) -> Vec<CoreLocation> {
             continue;
         }
         if let Ok(chip) = sim.chip(c) {
-            for (p, core) in &chip.cores {
+            for (p, core) in chip.cores.iter() {
                 if core.state == want {
-                    out.push(CoreLocation::new(c.0, c.1, *p));
+                    out.push(CoreLocation::new(c.0, c.1, p));
                 }
             }
         }
@@ -493,7 +493,7 @@ fn set_state(sim: &mut SimMachine, loc: CoreLocation, state: CoreState) -> anyho
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
-        .get_mut(&loc.p)
+        .get_mut(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
     // Do not clobber failure states reached during callbacks or injected
     // by the chaos engine.
@@ -519,7 +519,7 @@ pub fn core_state(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<CoreSta
     Ok(sim
         .chip(loc.chip())?
         .cores
-        .get(&loc.p)
+        .get(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
         .state)
 }
@@ -536,9 +536,9 @@ pub fn core_states(sim: &SimMachine) -> BTreeMap<CoreLocation, CoreState> {
             continue;
         }
         if let Ok(chip) = sim.chip(c) {
-            for (p, core) in &chip.cores {
+            for (p, core) in chip.cores.iter() {
                 if core.state != CoreState::Idle {
-                    out.insert(CoreLocation::new(c.0, c.1, *p), core.state);
+                    out.insert(CoreLocation::new(c.0, c.1, p), core.state);
                 }
             }
         }
@@ -551,7 +551,7 @@ pub fn provenance(sim: &SimMachine, loc: CoreLocation) -> anyhow::Result<BTreeMa
     Ok(sim
         .chip(loc.chip())?
         .cores
-        .get(&loc.p)
+        .get(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
         .provenance
         .clone())
@@ -566,7 +566,7 @@ pub fn read_iobuf(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<Str
     let text = sim
         .chip(loc.chip())?
         .cores
-        .get(&loc.p)
+        .get(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?
         .iobuf
         .clone();
@@ -597,7 +597,7 @@ pub fn rediscover_machine(
     }
     for loc in excluded {
         if let Some(chip) = machine.chip_mut(loc.chip()) {
-            chip.processors.retain(|p| p.id != loc.p);
+            chip.remove_processor(loc.p);
         }
     }
     // Sweep chip state through the reliable SCP layer, one exchange per
@@ -648,7 +648,7 @@ pub fn recording_info(
     let core = sim
         .chip(loc.chip())?
         .cores
-        .get(&loc.p)
+        .get(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
     let ch = core
         .recordings
@@ -679,7 +679,7 @@ pub fn capture_core(sim: &mut SimMachine, loc: CoreLocation) -> anyhow::Result<C
         let chip = sim.chip(loc.chip())?;
         let core = chip
             .cores
-            .get(&loc.p)
+            .get(loc.p)
             .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
         anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded");
         let app_state = core.app.as_ref().and_then(|a| a.snapshot_state());
@@ -726,7 +726,7 @@ pub fn restore_core(
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
-        .get_mut(&loc.p)
+        .get_mut(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
     anyhow::ensure!(core.state != CoreState::Idle, "core {loc} is not loaded");
     for (id, (data, lost)) in &snap.recordings {
@@ -763,7 +763,7 @@ pub fn clear_recording(sim: &mut SimMachine, loc: CoreLocation, channel: u32) ->
     let chip = sim.chip_mut(loc.chip())?;
     let core = chip
         .cores
-        .get_mut(&loc.p)
+        .get_mut(loc.p)
         .ok_or_else(|| anyhow::anyhow!("no core {loc}"))?;
     let ch = core
         .recordings

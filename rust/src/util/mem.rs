@@ -1,0 +1,123 @@
+//! Allocation accounting: a [`GlobalAlloc`] wrapper that counts bytes.
+//!
+//! The scale bench (`benches/scale.rs`, experiment E18) needs a peak
+//! memory proxy that is portable and deterministic-ish across CI hosts,
+//! where RSS is neither. [`AllocCounter`] wraps the system allocator
+//! and keeps two relaxed atomic counters: bytes currently live and the
+//! high-water mark. Install it as the binary's `#[global_allocator]`:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: spinntools::util::mem::AllocCounter = spinntools::util::mem::AllocCounter::new();
+//! ```
+//!
+//! Counting is exact for allocation *requests* (layout sizes), not OS
+//! pages — a proxy, but one that moves 1:1 with the data structures
+//! under audit. Relaxed ordering means a reading thread may observe a
+//! peak a few allocations stale; the benches read after joining their
+//! workers, where the counters are quiescent.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Byte-counting wrapper over the system allocator.
+pub struct AllocCounter {
+    live: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl AllocCounter {
+    #[allow(clippy::new_without_default)]
+    pub const fn new() -> AllocCounter {
+        AllocCounter { live: AtomicU64::new(0), peak: AtomicU64::new(0) }
+    }
+
+    /// Bytes currently allocated (sum of live layout sizes).
+    pub fn live_bytes(&self) -> u64 {
+        self.live.load(Relaxed)
+    }
+
+    /// High-water mark of [`Self::live_bytes`] since construction (or
+    /// the last [`Self::reset_peak`]).
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Relaxed)
+    }
+
+    /// Restart peak tracking from the current live count, so a bench
+    /// can attribute a high-water mark to one phase.
+    pub fn reset_peak(&self) {
+        self.peak.store(self.live.load(Relaxed), Relaxed);
+    }
+
+    fn count_alloc(&self, bytes: u64) {
+        let live = self.live.fetch_add(bytes, Relaxed) + bytes;
+        self.peak.fetch_max(live, Relaxed);
+    }
+
+    fn count_dealloc(&self, bytes: u64) {
+        self.live.fetch_sub(bytes, Relaxed);
+    }
+}
+
+// SAFETY: delegates every allocation verbatim to `System`; the counters
+// are side bookkeeping and never influence pointers or layouts.
+unsafe impl GlobalAlloc for AllocCounter {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            self.count_alloc(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        self.count_dealloc(layout.size() as u64);
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            self.count_alloc(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            // Count the delta as free-then-alloc of the same block.
+            self.count_dealloc(layout.size() as u64);
+            self.count_alloc(new_size as u64);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_track_alloc_and_dealloc() {
+        // Drive the GlobalAlloc impl directly (installing a global
+        // allocator inside a test binary would count the whole world).
+        let c = AllocCounter::new();
+        let layout = Layout::from_size_align(4096, 8).unwrap();
+        unsafe {
+            let p = c.alloc(layout);
+            assert!(!p.is_null());
+            assert_eq!(c.live_bytes(), 4096);
+            assert_eq!(c.peak_bytes(), 4096);
+            let p2 = c.realloc(p, layout, 8192);
+            assert!(!p2.is_null());
+            assert_eq!(c.live_bytes(), 8192);
+            assert!(c.peak_bytes() >= 8192);
+            c.dealloc(p2, Layout::from_size_align(8192, 8).unwrap());
+        }
+        assert_eq!(c.live_bytes(), 0);
+        assert!(c.peak_bytes() >= 8192, "peak survives the free");
+        c.reset_peak();
+        assert_eq!(c.peak_bytes(), 0);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bytes;
 pub mod json;
+pub mod mem;
 pub mod par;
 pub mod prop;
 

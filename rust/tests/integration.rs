@@ -1,5 +1,5 @@
 //! Integration tests across the whole stack (experiment ids from
-//! DESIGN.md §12): the Figure-8 flow, Figure-9 pause/resume, live I/O,
+//! DESIGN.md §13): the Figure-8 flow, Figure-9 pause/resume, live I/O,
 //! the application-graph SNN path with the AOT HLO artifacts, and the
 //! simulated-hardware behaviours the toolchain depends on.
 
