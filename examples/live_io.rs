@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     let mut by_vertex: std::collections::BTreeMap<String, Vec<u32>> = Default::default();
     for e in &events {
         by_vertex
-            .entry(e.vertex.clone())
+            .entry(e.vertex().to_string())
             .or_default()
             .push(e.payload.unwrap_or(0));
     }

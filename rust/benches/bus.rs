@@ -1,0 +1,200 @@
+//! Experiment E19 — run-event bus throughput and overhead
+//! (DESIGN.md §13).
+//!
+//! Two questions, answered in `BENCH_bus.json`:
+//!
+//! 1. **How fast does the hub fan out?** A 576-chip (12-board)
+//!    microcircuit storm sizes a realistic event stream; that many
+//!    typed events are then pumped through an [`EventBus`] with 1 / 4 /
+//!    16 ring sinks attached, measuring events/sec (plus the 0-sink
+//!    counter-bump baseline).
+//! 2. **What does observation cost a run?** The supervised Conway
+//!    workload A/B: 0 sinks vs 16 sinks on the same seeded run,
+//!    recordings asserted byte-identical, wall-clock ratio recorded.
+//!
+//! ```sh
+//! cargo bench --bench bus
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use spinntools::apps::conway::{ConwayCellVertex, STATE_PARTITION};
+use spinntools::front::fabric_probe::{run_fabric_probe, ProbeWorkload};
+use spinntools::front::{
+    EventBus, HealPolicy, LiveEvent, LiveSource, MachineSpec, Metrics, RingSink, RunEvent,
+    SpiNNTools, SupervisorConfig, ToolsConfig,
+};
+use spinntools::graph::VertexId;
+use spinntools::simulator::FabricMode;
+use spinntools::util::json::Json;
+
+const SEED: u64 = 0xE19;
+const ROWS: u32 = 6;
+const TICKS: u64 = 8;
+
+/// A representative mix of bus traffic: mostly live spikes, with
+/// metrics, checkpoint and fault lines threaded through.
+fn synth_event(i: u64) -> RunEvent {
+    match i % 8 {
+        0 => RunEvent::CheckpointCaptured { tick: i },
+        1 => RunEvent::Metrics(Metrics {
+            tick: i,
+            sim_ns: i * 1_000_000,
+            ticks_per_sec: 1234.5,
+            packets_per_sec: 67_890.0,
+            packets: i,
+            wire_retries: 0,
+            tenant: None,
+            quantum_latency_us: None,
+        }),
+        2 => RunEvent::Fault { description: format!("synthetic fault {i}") },
+        _ => RunEvent::Live(LiveEvent {
+            source: LiveSource::Known {
+                vertex: "pop_l4e".to_string(),
+                partition: "spikes".to_string(),
+                atom: (i % 512) as u32,
+            },
+            payload: Some(i as u32),
+        }),
+    }
+}
+
+/// Pump `n` synthetic events through a bus with `sinks` ring sinks.
+fn fanout_row(n: u64, sinks: usize) -> (f64, f64) {
+    let bus = EventBus::new();
+    let rings: Vec<RingSink> = (0..sinks).map(|_| RingSink::new(4096)).collect();
+    for r in &rings {
+        bus.attach(Box::new(r.clone()));
+    }
+    let t0 = Instant::now();
+    for i in 0..n {
+        bus.emit(synth_event(i));
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(bus.seq(), n);
+    if sinks > 0 {
+        assert_eq!(rings[0].len(), 4096.min(n as usize), "ring did not keep up");
+    }
+    (wall * 1e3, n as f64 / wall)
+}
+
+/// Build the Conway grid (same shape as `tests/bus.rs`).
+fn build_grid(tools: &mut SpiNNTools) -> Vec<VertexId> {
+    let alive = |r: u32, c: u32| (r * 31 + c * 17) % 3 == 0;
+    let mut ids = Vec::new();
+    for r in 0..ROWS {
+        for c in 0..ROWS {
+            ids.push(
+                tools
+                    .add_machine_vertex(ConwayCellVertex::arc(r, c, alive(r, c)))
+                    .unwrap(),
+            );
+        }
+    }
+    let idx = |r: i64, c: i64| -> Option<usize> {
+        (r >= 0 && c >= 0 && r < ROWS as i64 && c < ROWS as i64)
+            .then_some((r * ROWS as i64 + c) as usize)
+    };
+    for r in 0..ROWS as i64 {
+        for c in 0..ROWS as i64 {
+            for dr in -1..=1 {
+                for dc in -1..=1 {
+                    if (dr, dc) != (0, 0) {
+                        if let Some(n) = idx(r + dr, c + dc) {
+                            tools
+                                .add_machine_edge(ids[idx(r, c).unwrap()], ids[n], STATE_PARTITION)
+                                .unwrap();
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ids
+}
+
+/// The supervised Conway workload with `sinks` ring sinks watching:
+/// (recordings, wall ms, events published).
+fn watched_workload(sinks: usize) -> (Vec<Vec<u8>>, f64, u64) {
+    let t = Instant::now();
+    let mut tools = SpiNNTools::new(ToolsConfig::new(MachineSpec::Spinn5).with_supervision(
+        SupervisorConfig { poll_interval_ticks: 1, policy: HealPolicy::Remap, max_heals: 4 },
+    ))
+    .unwrap();
+    let rings: Vec<RingSink> = (0..sinks).map(|_| RingSink::new(1 << 14)).collect();
+    for r in &rings {
+        tools.bus().attach(Box::new(r.clone()));
+    }
+    let ids = build_grid(&mut tools);
+    tools.run_ticks(TICKS).unwrap();
+    let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+    let recs = ids.iter().map(|v| tools.recording(*v).to_vec()).collect();
+    (recs, wall_ms, tools.bus().seq())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# E19: run-event bus fan-out and observation overhead");
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("E19_event_bus".to_string()));
+
+    // ---- size a realistic stream: the 576-chip storm -------------------
+    let probe = run_fabric_probe(
+        ProbeWorkload::MicrocircuitStorm { scale: 0.1, boards: 12 },
+        16,
+        FabricMode::Fast,
+    )?;
+    // One live event per delivered packet is the worst-case stream an
+    // LPG tap of the whole machine would produce over the timed window.
+    let stream = probe.mc_delivered.clamp(100_000, 2_000_000);
+    println!(
+        "storm on 576 chips: {} packets sent, {} delivered -> stream of {stream} events",
+        probe.mc_sent, probe.mc_delivered
+    );
+    root.insert("storm_workload".to_string(), Json::Str(probe.workload.clone()));
+    root.insert("storm_mc_sent".to_string(), Json::Num(probe.mc_sent as f64));
+    root.insert("storm_mc_delivered".to_string(), Json::Num(probe.mc_delivered as f64));
+    root.insert("stream_events".to_string(), Json::Num(stream as f64));
+
+    // ---- hub fan-out at 0 / 1 / 4 / 16 sinks ---------------------------
+    let mut rows = Vec::new();
+    for sinks in [0usize, 1, 4, 16] {
+        let (wall_ms, events_per_sec) = fanout_row(stream, sinks);
+        println!("{sinks:>3} sinks: {events_per_sec:>12.0} events/sec ({wall_ms:.1} ms)");
+        let mut row = BTreeMap::new();
+        row.insert("sinks".into(), Json::Num(sinks as f64));
+        row.insert("events".into(), Json::Num(stream as f64));
+        row.insert("wall_ms".into(), Json::Num(wall_ms));
+        row.insert("events_per_sec".into(), Json::Num(events_per_sec));
+        rows.push(Json::Obj(row));
+    }
+    root.insert("fanout_rows".to_string(), Json::Arr(rows));
+
+    // ---- observation overhead on a real supervised run -----------------
+    let (plain, unwatched_ms, _) = watched_workload(0);
+    let (watched, watched_ms, published) = watched_workload(16);
+    assert_eq!(
+        watched, plain,
+        "observation changed the run — the bus is not observation-only"
+    );
+    let ratio = watched_ms / unwatched_ms.max(1e-9);
+    println!(
+        "supervised conway: {unwatched_ms:.1} ms unwatched, {watched_ms:.1} ms with 16 sinks \
+         (x{ratio:.3}, {published} events published, byte-identical)"
+    );
+    let mut overhead = BTreeMap::new();
+    overhead.insert("wall_ms_unwatched".to_string(), Json::Num(unwatched_ms));
+    overhead.insert("wall_ms_16_sinks".to_string(), Json::Num(watched_ms));
+    overhead.insert("overhead_ratio".to_string(), Json::Num(ratio));
+    overhead.insert("events_published".to_string(), Json::Num(published as f64));
+    overhead.insert("byte_identical".to_string(), Json::Bool(true));
+    root.insert("overhead".to_string(), Json::Obj(overhead));
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_bus.json");
+    std::fs::write(&out, Json::Obj(root).to_string_pretty())?;
+    println!("\nresults written to {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,613 @@
+//! The unified run-event bus (§6.9 live interaction, DESIGN.md §13).
+//!
+//! Every surface the front end already produces — LPG live data,
+//! tenant lifecycle, heal/chaos/fault findings, checkpoint captures,
+//! provenance anomalies — plus a periodic [`Metrics`] sample, flows
+//! through one typed [`RunEvent`] stream that external consumers
+//! subscribe to *while the run is going*, via pluggable [`Sink`]s.
+//!
+//! The contract, pinned by `tests/bus.rs`:
+//!
+//! - **Observation-only.** Attaching sinks never changes what the run
+//!   computes: no simulated time is spent, no draws are made, and run
+//!   digests are byte-identical with 0 or N sinks attached.
+//! - **Never blocks, never reorders.** Each sink owns a bounded buffer
+//!   with a sequence cursor; a sink that refuses delivery keeps its
+//!   backlog in order, and once the buffer fills, *new* events are
+//!   dropped and counted (`dropped`) rather than stalling the run or
+//!   delivering out of order. Delivered sequence numbers are strictly
+//!   increasing per sink.
+//! - **Subscribable mid-run.** [`EventBus::attach`] works at any point;
+//!   a late sink simply starts at the current sequence number.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::Write as _;
+use std::rc::Rc;
+
+use crate::util::json::Json;
+
+use super::live::{LifecycleEvent, LiveEvent};
+
+/// Default per-sink buffer depth for [`EventBus::attach`] (deep enough
+/// that a well-behaved sink never drops; `attach_buffered` sizes it
+/// explicitly for backpressure tests and tiny consumers).
+pub const DEFAULT_SINK_CAPACITY: usize = 4096;
+
+/// One event on the bus. Everything an operator can watch a run do,
+/// as one typed stream (the taxonomy of DESIGN.md §13).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunEvent {
+    /// A run segment started: `ticks` simulated ticks from `from_tick`.
+    RunStarted { from_tick: u64, ticks: u64 },
+    /// The run segment completed; the session now stands at `ticks_done`.
+    RunCompleted { ticks_done: u64 },
+    /// Decoded (or undecodable) LPG live output — the §6.9 spike channel.
+    Live(LiveEvent),
+    /// Multi-tenant lifecycle (submission/admission/eviction/...),
+    /// mirrored from the service's [`super::LifecycleLog`].
+    Lifecycle(LifecycleEvent),
+    /// The chaos plan injected a fault into the fabric at `at_tick`.
+    ChaosInjected { at_tick: u64, fault: String },
+    /// The run supervisor classified a failure (a heal or abort follows).
+    Fault { description: String },
+    /// A self-healing pass completed (mirrors the pushed `HealReport`).
+    Healed {
+        faults: usize,
+        vertices_moved: usize,
+        restored_from_tick: Option<u64>,
+        heal_elapsed_us: u64,
+    },
+    /// A graph mutation was reconciled into the loaded machine.
+    Reconciled { stages_rerun: usize, stages_cached: usize },
+    /// A checkpoint snapshot was captured at `tick`.
+    CheckpointCaptured { tick: u64 },
+    /// A provenance anomaly line, mirrored once per distinct text.
+    Anomaly { text: String },
+    /// Periodic run telemetry (see [`Metrics`]).
+    Metrics(Metrics),
+}
+
+/// Periodic run telemetry: sampled at supervisor-poll/checkpoint chunk
+/// boundaries by the run driver, and once per quantum (with the tenant
+/// name and quantum latency) by the machine service. Rates are wall
+/// clock, so they are *not* deterministic — they ride the bus only and
+/// never feed back into the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metrics {
+    /// Absolute simulated tick of the sample.
+    pub tick: u64,
+    /// Simulated nanoseconds of the sample.
+    pub sim_ns: u64,
+    /// Simulated ticks per wall-clock second over the sample window.
+    pub ticks_per_sec: f64,
+    /// Multicast packets routed per wall-clock second over the window
+    /// (from the aggregate [`crate::simulator::RouterStats`]).
+    pub packets_per_sec: f64,
+    /// Multicast packets routed during the window.
+    pub packets: u64,
+    /// Cumulative wire retries (SCP retransmits + empty bulk rounds).
+    pub wire_retries: u64,
+    /// The tenant the sample concerns (service quanta only).
+    pub tenant: Option<String>,
+    /// Wall-clock latency of the tenant's last quantum, µs (service
+    /// quanta only).
+    pub quantum_latency_us: Option<u64>,
+}
+
+impl RunEvent {
+    /// Short stable tag for filtering/JSONL (`"metrics"`, `"live"`, ...).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RunEvent::RunStarted { .. } => "run_started",
+            RunEvent::RunCompleted { .. } => "run_completed",
+            RunEvent::Live(_) => "live",
+            RunEvent::Lifecycle(_) => "lifecycle",
+            RunEvent::ChaosInjected { .. } => "chaos_injected",
+            RunEvent::Fault { .. } => "fault",
+            RunEvent::Healed { .. } => "healed",
+            RunEvent::Reconciled { .. } => "reconciled",
+            RunEvent::CheckpointCaptured { .. } => "checkpoint",
+            RunEvent::Anomaly { .. } => "anomaly",
+            RunEvent::Metrics(_) => "metrics",
+        }
+    }
+
+    /// The event as a JSON object (JSONL sink, dashboards).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("type".into(), Json::from(self.kind()));
+        match self {
+            RunEvent::RunStarted { from_tick, ticks } => {
+                o.insert("from_tick".into(), num(*from_tick));
+                o.insert("ticks".into(), num(*ticks));
+            }
+            RunEvent::RunCompleted { ticks_done } => {
+                o.insert("ticks_done".into(), num(*ticks_done));
+            }
+            RunEvent::Live(e) => {
+                if e.is_decoded() {
+                    o.insert("vertex".into(), Json::from(e.vertex()));
+                    o.insert("partition".into(), Json::from(e.partition()));
+                    o.insert("atom".into(), opt_num(e.atom()));
+                } else {
+                    o.insert("raw_key".into(), opt_num(e.raw_key()));
+                }
+                o.insert("payload".into(), opt_num(e.payload));
+            }
+            RunEvent::Lifecycle(e) => {
+                o.insert("tenant".into(), Json::from(e.tenant()));
+                o.insert("event".into(), Json::Str(format!("{e:?}")));
+            }
+            RunEvent::ChaosInjected { at_tick, fault } => {
+                o.insert("at_tick".into(), num(*at_tick));
+                o.insert("fault".into(), Json::Str(fault.clone()));
+            }
+            RunEvent::Fault { description } => {
+                o.insert("description".into(), Json::Str(description.clone()));
+            }
+            RunEvent::Healed {
+                faults,
+                vertices_moved,
+                restored_from_tick,
+                heal_elapsed_us,
+            } => {
+                o.insert("faults".into(), Json::from(*faults));
+                o.insert("vertices_moved".into(), Json::from(*vertices_moved));
+                o.insert("restored_from_tick".into(), opt_num64(*restored_from_tick));
+                o.insert("heal_elapsed_us".into(), num(*heal_elapsed_us));
+            }
+            RunEvent::Reconciled { stages_rerun, stages_cached } => {
+                o.insert("stages_rerun".into(), Json::from(*stages_rerun));
+                o.insert("stages_cached".into(), Json::from(*stages_cached));
+            }
+            RunEvent::CheckpointCaptured { tick } => {
+                o.insert("tick".into(), num(*tick));
+            }
+            RunEvent::Anomaly { text } => {
+                o.insert("text".into(), Json::Str(text.clone()));
+            }
+            RunEvent::Metrics(m) => {
+                o.insert("tick".into(), num(m.tick));
+                o.insert("sim_ns".into(), num(m.sim_ns));
+                o.insert("ticks_per_sec".into(), Json::Num(m.ticks_per_sec));
+                o.insert("packets_per_sec".into(), Json::Num(m.packets_per_sec));
+                o.insert("packets".into(), num(m.packets));
+                o.insert("wire_retries".into(), num(m.wire_retries));
+                o.insert(
+                    "tenant".into(),
+                    m.tenant.as_deref().map(Json::from).unwrap_or(Json::Null),
+                );
+                o.insert("quantum_latency_us".into(), opt_num64(m.quantum_latency_us));
+            }
+        }
+        Json::Obj(o)
+    }
+}
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn opt_num(n: Option<u32>) -> Json {
+    n.map(Json::from).unwrap_or(Json::Null)
+}
+
+fn opt_num64(n: Option<u64>) -> Json {
+    n.map(num).unwrap_or(Json::Null)
+}
+
+/// A bus consumer. `accept` returns `true` when the event was taken;
+/// `false` means "busy — try me again later": the hub keeps the event
+/// (and everything after it) in the sink's bounded buffer, in order.
+pub trait Sink {
+    fn accept(&mut self, seq: u64, event: &RunEvent) -> bool;
+}
+
+/// Handle for detaching a sink and reading its drop counter.
+pub type SinkId = u64;
+
+struct SinkSlot {
+    id: SinkId,
+    sink: Box<dyn Sink>,
+    /// Undelivered backlog, oldest first, capped at `capacity`.
+    buffer: VecDeque<(u64, RunEvent)>,
+    capacity: usize,
+    /// Events dropped because the buffer was full (slow sink).
+    dropped: u64,
+    /// Events handed to the sink so far.
+    delivered: u64,
+    /// Bus sequence number at attach time (a mid-run subscriber's
+    /// cursor starts here, not at zero).
+    attached_at: u64,
+}
+
+impl SinkSlot {
+    /// Hand buffered events to the sink, oldest first, until it
+    /// refuses one. Order is the arrival order; nothing is skipped.
+    fn drain(&mut self) {
+        while let Some((seq, ev)) = self.buffer.front() {
+            if !self.sink.accept(*seq, ev) {
+                break;
+            }
+            self.delivered += 1;
+            self.buffer.pop_front();
+        }
+    }
+}
+
+#[derive(Default)]
+struct Hub {
+    /// Monotonic event counter; the per-sink cursor currency.
+    seq: u64,
+    slots: Vec<SinkSlot>,
+    next_id: SinkId,
+    /// FNV hashes of anomaly texts already mirrored ([`EventBus::emit_anomaly`]
+    /// is called from the idempotent provenance path, so it dedupes).
+    seen_anomalies: BTreeSet<u64>,
+}
+
+/// The per-run event hub: a cheaply clonable handle (the front end is
+/// single-threaded, so sharing is `Rc<RefCell<..>>`, the same idiom as
+/// the service's shared checkpointer). A default bus has no sinks and
+/// makes [`EventBus::emit`] a counter bump — runs that nobody watches
+/// pay nothing.
+#[derive(Clone, Default)]
+pub struct EventBus {
+    hub: Rc<RefCell<Hub>>,
+}
+
+impl std::fmt::Debug for EventBus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let hub = self.hub.borrow();
+        f.debug_struct("EventBus")
+            .field("seq", &hub.seq)
+            .field("sinks", &hub.slots.len())
+            .finish()
+    }
+}
+
+impl EventBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Subscribe a sink (works mid-run) with the default buffer depth.
+    pub fn attach(&self, sink: Box<dyn Sink>) -> SinkId {
+        self.attach_buffered(sink, DEFAULT_SINK_CAPACITY)
+    }
+
+    /// Subscribe a sink with an explicit bounded buffer. `capacity` is
+    /// the most undelivered events the hub will hold for it; beyond
+    /// that, new events are counted in [`EventBus::dropped`] and lost
+    /// to this sink (never to the others).
+    pub fn attach_buffered(&self, sink: Box<dyn Sink>, capacity: usize) -> SinkId {
+        let mut hub = self.hub.borrow_mut();
+        let id = hub.next_id;
+        hub.next_id += 1;
+        let attached_at = hub.seq;
+        hub.slots.push(SinkSlot {
+            id,
+            sink,
+            buffer: VecDeque::new(),
+            capacity: capacity.max(1),
+            dropped: 0,
+            delivered: 0,
+            attached_at,
+        });
+        id
+    }
+
+    /// Unsubscribe; undelivered backlog is discarded.
+    pub fn detach(&self, id: SinkId) {
+        self.hub.borrow_mut().slots.retain(|s| s.id != id);
+    }
+
+    /// Whether anyone is listening — emission sites use this to skip
+    /// building events (and sampling router stats) on unwatched runs.
+    pub fn has_sinks(&self) -> bool {
+        !self.hub.borrow().slots.is_empty()
+    }
+
+    /// Events published so far (the next event gets `seq() + 1`).
+    pub fn seq(&self) -> u64 {
+        self.hub.borrow().seq
+    }
+
+    /// Events a slow sink lost to its full buffer (`None`: unknown id).
+    pub fn dropped(&self, id: SinkId) -> Option<u64> {
+        self.hub.borrow().slots.iter().find(|s| s.id == id).map(|s| s.dropped)
+    }
+
+    /// Events actually handed to a sink so far (`None`: unknown id).
+    pub fn delivered(&self, id: SinkId) -> Option<u64> {
+        self.hub
+            .borrow()
+            .slots
+            .iter()
+            .find(|s| s.id == id)
+            .map(|s| s.delivered)
+    }
+
+    /// The bus sequence number a sink subscribed at (`None`: unknown id).
+    pub fn attached_at(&self, id: SinkId) -> Option<u64> {
+        self.hub
+            .borrow()
+            .slots
+            .iter()
+            .find(|s| s.id == id)
+            .map(|s| s.attached_at)
+    }
+
+    /// Publish one event to every sink. Never blocks: a sink that
+    /// refuses delivery accumulates backlog in its bounded buffer, and
+    /// a full buffer drops (and counts) the new event for that sink.
+    pub fn emit(&self, event: RunEvent) {
+        let mut hub = self.hub.borrow_mut();
+        hub.seq += 1;
+        let seq = hub.seq;
+        if hub.slots.is_empty() {
+            return;
+        }
+        for slot in hub.slots.iter_mut() {
+            if slot.buffer.len() >= slot.capacity {
+                // Dropping the *new* event (not the oldest) keeps what
+                // the sink eventually sees a strict prefix-in-order of
+                // the stream — late data beats reordered data.
+                slot.dropped += 1;
+            } else {
+                slot.buffer.push_back((seq, event.clone()));
+            }
+            slot.drain();
+        }
+    }
+
+    /// Mirror a provenance anomaly, once per distinct text (the
+    /// provenance path re-collects, so the mirror must be idempotent).
+    pub fn emit_anomaly(&self, text: &str) {
+        let h = crate::util::fnv1a_64(text.as_bytes());
+        if !self.hub.borrow_mut().seen_anomalies.insert(h) {
+            return;
+        }
+        self.emit(RunEvent::Anomaly { text: text.to_string() });
+    }
+}
+
+// -- built-in sinks ----------------------------------------------------------
+
+/// In-memory ring: keeps the most recent `capacity` events. Clonable —
+/// keep one handle, attach the other — so tests and dashboards can read
+/// while the bus writes.
+#[derive(Clone)]
+pub struct RingSink {
+    ring: Rc<RefCell<VecDeque<(u64, RunEvent)>>>,
+    capacity: usize,
+}
+
+impl RingSink {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            ring: Rc::new(RefCell::new(VecDeque::new())),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Snapshot of the ring, oldest first, with sequence numbers.
+    pub fn events(&self) -> Vec<(u64, RunEvent)> {
+        self.ring.borrow().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.borrow().is_empty()
+    }
+}
+
+impl Sink for RingSink {
+    fn accept(&mut self, seq: u64, event: &RunEvent) -> bool {
+        let mut ring = self.ring.borrow_mut();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back((seq, event.clone()));
+        true
+    }
+}
+
+/// Calls a closure per event (live dashboards, test probes).
+pub struct CallbackSink<F: FnMut(u64, &RunEvent)> {
+    f: F,
+}
+
+impl<F: FnMut(u64, &RunEvent)> CallbackSink<F> {
+    pub fn new(f: F) -> Self {
+        Self { f }
+    }
+}
+
+impl<F: FnMut(u64, &RunEvent)> Sink for CallbackSink<F> {
+    fn accept(&mut self, seq: u64, event: &RunEvent) -> bool {
+        (self.f)(seq, event);
+        true
+    }
+}
+
+/// Appends one compact JSON object per event to a file — the durable
+/// tail a dashboard (or `tail -f`) follows.
+pub struct JsonlSink {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlSink {
+    pub fn create(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let file = std::fs::File::create(path.as_ref())?;
+        Ok(Self { out: std::io::BufWriter::new(file) })
+    }
+}
+
+impl Sink for JsonlSink {
+    fn accept(&mut self, seq: u64, event: &RunEvent) -> bool {
+        let mut obj = match event.to_json() {
+            Json::Obj(o) => o,
+            other => BTreeMap::from([("event".to_string(), other)]),
+        };
+        obj.insert("seq".into(), num(seq));
+        // A write error must not take the run down: the bus is
+        // observation-only, so the sink just stops consuming.
+        writeln!(self.out, "{}", Json::Obj(obj).to_string_compact()).is_ok()
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(n: u64) -> RunEvent {
+        RunEvent::CheckpointCaptured { tick: n }
+    }
+
+    #[test]
+    fn fan_out_delivers_to_every_sink_in_order() {
+        let bus = EventBus::new();
+        let a = RingSink::new(64);
+        let b = RingSink::new(64);
+        bus.attach(Box::new(a.clone()));
+        bus.attach(Box::new(b.clone()));
+        for n in 0..5 {
+            bus.emit(ev(n));
+        }
+        assert_eq!(a.events().len(), 5);
+        assert_eq!(a.events(), b.events());
+        let seqs: Vec<u64> = a.events().iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4, 5], "sequence numbers are monotonic from 1");
+    }
+
+    #[test]
+    fn mid_run_subscriber_starts_at_current_cursor() {
+        let bus = EventBus::new();
+        for n in 0..3 {
+            bus.emit(ev(n));
+        }
+        let late = RingSink::new(64);
+        let id = bus.attach(Box::new(late.clone()));
+        assert_eq!(bus.attached_at(id), Some(3));
+        bus.emit(ev(99));
+        let got = late.events();
+        assert_eq!(got.len(), 1, "no replay of history");
+        assert_eq!(got[0].0, 4);
+    }
+
+    #[test]
+    fn slow_sink_drops_new_events_counted_never_reordered() {
+        let bus = EventBus::new();
+        // Refuses everything until opened, then takes the backlog.
+        let open = Rc::new(RefCell::new(false));
+        let seen: Rc<RefCell<Vec<u64>>> = Rc::default();
+        let (o2, s2) = (open.clone(), seen.clone());
+        let id = bus.attach_buffered(
+            Box::new(CallbackGate { open: o2, seen: s2 }),
+            3,
+        );
+        let healthy = RingSink::new(64);
+        bus.attach(Box::new(healthy.clone()));
+        for n in 0..8 {
+            bus.emit(ev(n));
+        }
+        // Buffer held 3, the other 5 dropped; the healthy sink saw all 8.
+        assert_eq!(bus.dropped(id), Some(5));
+        assert_eq!(healthy.len(), 8);
+        assert!(seen.borrow().is_empty());
+        *open.borrow_mut() = true;
+        bus.emit(ev(100));
+        // Backlog (1,2,3) then the fresh event (9) — strictly in order,
+        // the overflow gap is a gap, never a reorder.
+        assert_eq!(*seen.borrow(), vec![1, 2, 3, 9]);
+        assert_eq!(bus.delivered(id), Some(4));
+    }
+
+    struct CallbackGate {
+        open: Rc<RefCell<bool>>,
+        seen: Rc<RefCell<Vec<u64>>>,
+    }
+
+    impl Sink for CallbackGate {
+        fn accept(&mut self, seq: u64, _event: &RunEvent) -> bool {
+            if !*self.open.borrow() {
+                return false;
+            }
+            self.seen.borrow_mut().push(seq);
+            true
+        }
+    }
+
+    #[test]
+    fn detach_stops_delivery() {
+        let bus = EventBus::new();
+        let a = RingSink::new(8);
+        let id = bus.attach(Box::new(a.clone()));
+        bus.emit(ev(1));
+        bus.detach(id);
+        bus.emit(ev(2));
+        assert_eq!(a.len(), 1);
+        assert!(!bus.has_sinks());
+    }
+
+    #[test]
+    fn anomaly_mirror_dedupes_by_text() {
+        let bus = EventBus::new();
+        let a = RingSink::new(8);
+        bus.attach(Box::new(a.clone()));
+        bus.emit_anomaly("router (0, 0): 3 dropped packets");
+        bus.emit_anomaly("router (0, 0): 3 dropped packets");
+        bus.emit_anomaly("core 0,0,4 hit a runtime error");
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn ring_keeps_most_recent() {
+        let bus = EventBus::new();
+        let a = RingSink::new(2);
+        bus.attach(Box::new(a.clone()));
+        for n in 0..5 {
+            bus.emit(ev(n));
+        }
+        let ticks: Vec<u64> = a
+            .events()
+            .iter()
+            .map(|(_, e)| match e {
+                RunEvent::CheckpointCaptured { tick } => *tick,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ticks, vec![3, 4]);
+    }
+
+    #[test]
+    fn events_serialize_to_single_json_lines() {
+        let m = RunEvent::Metrics(Metrics {
+            tick: 100,
+            sim_ns: 100_000_000,
+            ticks_per_sec: 123.5,
+            packets_per_sec: 4.0,
+            packets: 4,
+            wire_retries: 0,
+            tenant: Some("a".into()),
+            quantum_latency_us: Some(250),
+        });
+        let line = m.to_json().to_string_compact();
+        assert!(!line.contains('\n'));
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.get("type").unwrap().as_str(), Some("metrics"));
+        assert_eq!(back.get("tick").unwrap().as_usize(), Some(100));
+        assert_eq!(back.get("tenant").unwrap().as_str(), Some("a"));
+    }
+}

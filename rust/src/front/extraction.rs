@@ -59,6 +59,26 @@ fn retry_rounds(sim: &SimMachine) -> u32 {
     sim.config.wire.bulk_retry_rounds.max(1)
 }
 
+/// Pay for one fruitless bulk-plane retry round in simulated time: the
+/// per-request timeout plus capped exponential backoff, mirroring
+/// `scamp::scp_exchange`. Without this, a total blackout
+/// ([`crate::simulator::chaos::Fault::LinkBrownout`] at full loss, or a
+/// `BoardSilent` episode) freezes the retry loop at one instant — every
+/// round re-draws inside the same fault window, so only the SCP path
+/// could ride an episode out. Gated on `wire_active` so the clean wire
+/// stays draw-free and timing-identical.
+fn pay_retry_backoff(sim: &mut SimMachine, attempt: u32) {
+    if !sim.wire_active() {
+        return;
+    }
+    let timeout = sim.config.wire.scp_timeout_ns;
+    let backoff = timeout.saturating_mul(1 << attempt.min(6));
+    sim.advance_host_time(timeout + backoff);
+    let stats = sim.wire_stats_mut();
+    stats.backoff_wait_ns += backoff;
+    stats.bulk_retry_waits += 1;
+}
+
 /// Installation options for the bulk data plane.
 #[derive(Debug, Clone)]
 pub struct DataPlaneOptions {
@@ -452,7 +472,7 @@ impl FastPath {
             .readers
             .get(&chip)
             .ok_or_else(|| anyhow::anyhow!("no fast-path reader on {chip:?}"))?;
-        let (_board, plane) = self.plane_of(sim, chip)?;
+        let (board, plane) = self.plane_of(sim, chip)?;
         let port = plane.extract_port;
         let header = SdpHeader::to_core(reader, READER_SDP_PORT);
         sim.host_send_sdp(SdpMessage::new(
@@ -466,11 +486,15 @@ impl FastPath {
             if missing.is_empty() {
                 return Ok(data);
             }
+            let before = frames.len();
             if frames.is_empty() {
                 // Nothing arrived at all: the read command itself was
                 // lost on the wire, so the gatherer never saw the stream
                 // header and a re-request could not flush a partial last
-                // frame. Replay the whole command instead.
+                // frame. Wait out the timeout + backoff, then replay the
+                // whole command — a blackout episode expires under the
+                // advancing clock instead of eating every round.
+                pay_retry_backoff(sim, attempt - 1);
                 sim.host_send_sdp(SdpMessage::new(
                     header,
                     speedup::encode_read_command(addr, len as u32),
@@ -489,8 +513,22 @@ impl FastPath {
                 sim.run_until_idle()?;
                 frames.extend(filter_dropped(sim.take_host_udp(port), attempt, &mut drop));
             }
+            if frames.len() == before {
+                // A whole re-request round produced nothing (the wire is
+                // dark, not merely lossy): pay the backoff before trying
+                // again.
+                pay_retry_backoff(sim, attempt - 1);
+            }
         }
         let (data, missing) = speedup::reassemble(&frames, len);
+        if !missing.is_empty() && sim.wire_active() {
+            sim.note_wire_escalation(board);
+            anyhow::bail!(
+                "fast read from {chip:?} still missing {} frames after retries \
+                 (escalated to the supervisor)",
+                missing.len()
+            );
+        }
         anyhow::ensure!(
             missing.is_empty(),
             "fast read from {chip:?} still missing {} frames after retries",
@@ -655,7 +693,7 @@ impl FastPath {
             .ok_or_else(|| anyhow::anyhow!("no data-in dispatcher on board {board:?}"))?
             .port;
         let total = bulk::frames_of(len) as u32;
-        for _ in 0..retry_rounds(sim) {
+        for attempt in 0..retry_rounds(sim) {
             sim.host_send_sdp(SdpMessage::new(
                 SdpHeader::to_core(writer, WRITER_SDP_PORT),
                 bulk::encode_check_command(),
@@ -679,11 +717,17 @@ impl FastPath {
                     ))?;
                     sim.run_until_idle()?;
                 }
-                // Check command or every report frame lost: ask again.
-                None => {}
+                // Check command or every report frame lost: wait out the
+                // timeout + backoff (a blackout expires under the
+                // advancing clock), then ask again.
+                None => pay_retry_backoff(sim, attempt),
             }
         }
-        anyhow::bail!("write session to {chip:?} could not be opened after retries")
+        sim.note_wire_escalation(board);
+        anyhow::bail!(
+            "write session to {chip:?} could not be opened after retries \
+             (escalated to the supervisor)"
+        )
     }
 
     /// Drive one open write session to completion: query the writer for
@@ -753,7 +797,7 @@ impl FastPath {
         port: u16,
     ) -> anyhow::Result<Vec<u32>> {
         let mut last_err = None;
-        for _ in 0..retry_rounds(sim) {
+        for attempt in 0..retry_rounds(sim) {
             sim.host_send_sdp(SdpMessage::new(
                 SdpHeader::to_core(writer, WRITER_SDP_PORT),
                 bulk::encode_check_command(),
@@ -761,6 +805,10 @@ impl FastPath {
             sim.run_until_idle()?;
             let msgs = sim.take_host_udp(port);
             if msgs.is_empty() {
+                // The check command (or every report frame) vanished:
+                // wait out the timeout + backoff so a dark wire gets a
+                // chance to come back before the next round.
+                pay_retry_backoff(sim, attempt);
                 last_err = Some(anyhow::anyhow!("no missing-sequence report from {writer}"));
                 continue;
             }
@@ -780,6 +828,10 @@ impl FastPath {
                 "incomplete missing-sequence report ({} of {total}) from {writer}",
                 seqs.len()
             ));
+        }
+        if sim.wire_active() {
+            let board = sim.machine.nearest_ethernet(writer.chip()).unwrap_or(writer.chip());
+            sim.note_wire_escalation(board);
         }
         Err(last_err.expect("retry_rounds is at least 1"))
     }

@@ -7,38 +7,60 @@ use crate::mapping::database::MappingDatabase;
 use crate::simulator::SimMachine;
 use crate::transport::{EieioMessage, EieioType};
 
+use super::bus::{EventBus, RunEvent};
+
 /// Decodes LPG output into (vertex label, partition, atom) events.
 pub struct LiveEventListener {
     port: u16,
     db: MappingDatabase,
+    bus: Option<EventBus>,
 }
 
 impl LiveEventListener {
     /// Built once the mapping database is ready (the Figure-8
     /// notification handshake).
     pub fn new(port: u16, db: MappingDatabase) -> Self {
-        Self { port, db }
+        Self { port, db, bus: None }
     }
 
-    /// Drain pending events from the host inbox.
+    /// Mirror every polled event onto a [`EventBus`] as
+    /// [`RunEvent::Live`], alongside returning it to the caller.
+    pub fn with_bus(mut self, bus: EventBus) -> Self {
+        self.bus = Some(bus);
+        self
+    }
+
+    /// Drain pending events from the host inbox. A key the mapping
+    /// database cannot attribute comes back as
+    /// [`LiveSource::Unknown`] (and bumps `unknown_live_keys` in the
+    /// wire stats) instead of masquerading as a decoded atom.
     pub fn poll(&self, sim: &mut SimMachine) -> anyhow::Result<Vec<LiveEvent>> {
         let mut out = Vec::new();
+        let mut unknown = 0u64;
         for frame in sim.take_host_udp(self.port) {
             let msg = EieioMessage::decode(&frame)?;
             for (key, payload) in msg.events {
-                match self.db.source_of_key(key) {
-                    Some((vertex, partition, atom)) => out.push(LiveEvent {
+                let source = match self.db.source_of_key(key) {
+                    Some((vertex, partition, atom)) => LiveSource::Known {
                         vertex: vertex.to_string(),
                         partition: partition.to_string(),
                         atom,
-                        payload,
-                    }),
-                    None => out.push(LiveEvent {
-                        vertex: String::new(),
-                        partition: String::new(),
-                        atom: key,
-                        payload,
-                    }),
+                    },
+                    None => {
+                        unknown += 1;
+                        LiveSource::Unknown { raw_key: key }
+                    }
+                };
+                out.push(LiveEvent { source, payload });
+            }
+        }
+        if unknown > 0 {
+            sim.wire_stats_mut().unknown_live_keys += unknown;
+        }
+        if let Some(bus) = &self.bus {
+            if bus.has_sinks() {
+                for e in &out {
+                    bus.emit(RunEvent::Live(e.clone()));
                 }
             }
         }
@@ -46,13 +68,60 @@ impl LiveEventListener {
     }
 }
 
-/// One decoded live event.
+/// Where a live event came from: a key the mapping database attributed
+/// to a vertex atom, or a raw key it could not (misrouted packet, stale
+/// table, foreign tenant) — previously indistinguishable from a real
+/// atom of an empty-named vertex.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LiveSource {
+    Known { vertex: String, partition: String, atom: u32 },
+    Unknown { raw_key: u32 },
+}
+
+/// One live event off the LPG stream.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LiveEvent {
-    pub vertex: String,
-    pub partition: String,
-    pub atom: u32,
+    pub source: LiveSource,
     pub payload: Option<u32>,
+}
+
+impl LiveEvent {
+    /// Whether the mapping database attributed the key.
+    pub fn is_decoded(&self) -> bool {
+        matches!(self.source, LiveSource::Known { .. })
+    }
+
+    /// The source vertex label (`""` for an unknown key).
+    pub fn vertex(&self) -> &str {
+        match &self.source {
+            LiveSource::Known { vertex, .. } => vertex,
+            LiveSource::Unknown { .. } => "",
+        }
+    }
+
+    /// The outgoing partition (`""` for an unknown key).
+    pub fn partition(&self) -> &str {
+        match &self.source {
+            LiveSource::Known { partition, .. } => partition,
+            LiveSource::Unknown { .. } => "",
+        }
+    }
+
+    /// The atom within the vertex, when decoded.
+    pub fn atom(&self) -> Option<u32> {
+        match &self.source {
+            LiveSource::Known { atom, .. } => Some(*atom),
+            LiveSource::Unknown { .. } => None,
+        }
+    }
+
+    /// The undecodable multicast key, when not.
+    pub fn raw_key(&self) -> Option<u32> {
+        match &self.source {
+            LiveSource::Known { .. } => None,
+            LiveSource::Unknown { raw_key } => Some(*raw_key),
+        }
+    }
 }
 
 /// A tenant-lifecycle event of the multi-tenant machine service
@@ -93,14 +162,27 @@ impl LifecycleEvent {
     }
 }
 
-/// Ordered log of every tenant's lifecycle, kept by the service.
+/// Ordered log of every tenant's lifecycle, kept by the service. Backed
+/// by the run-event bus: every `push` also publishes
+/// [`RunEvent::Lifecycle`] so mid-run subscribers see lifecycle the
+/// moment it happens, while the borrowing accessors (`events`,
+/// `of_tenant`) keep their pre-bus API.
 #[derive(Debug, Default)]
 pub struct LifecycleLog {
     events: Vec<LifecycleEvent>,
+    bus: Option<EventBus>,
 }
 
 impl LifecycleLog {
+    /// A log that mirrors every event onto `bus`.
+    pub fn with_bus(bus: EventBus) -> Self {
+        Self { events: Vec::new(), bus: Some(bus) }
+    }
+
     pub fn push(&mut self, event: LifecycleEvent) {
+        if let Some(bus) = &self.bus {
+            bus.emit(RunEvent::Lifecycle(event.clone()));
+        }
         self.events.push(event);
     }
 
@@ -141,6 +223,78 @@ impl LiveInjector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::front::bus::RingSink;
+    use crate::graph::KeyRange;
+    use crate::machine::MachineBuilder;
+    use crate::simulator::{SimConfig, SimMachine};
+
+    /// A sim plus a listener whose database maps keys 0x100..0x104 to
+    /// cell_0's "out" partition; anything else is unattributable.
+    fn listener_rig() -> (SimMachine, MappingDatabase) {
+        let sim = SimMachine::boot(MachineBuilder::spinn3().build(), SimConfig::default());
+        let mut db = MappingDatabase::default();
+        db.keys
+            .insert(("cell_0".into(), "out".into()), KeyRange::new(0x100, !0x3));
+        (sim, db)
+    }
+
+    fn inject(sim: &mut SimMachine, port: u16, events: &[(u32, Option<u32>)]) {
+        for msg in EieioMessage::batched(EieioType::Key32, events) {
+            sim.host_inbox.push_back((0, port, msg.encode()));
+        }
+    }
+
+    #[test]
+    fn poll_decodes_mapped_keys() {
+        let (mut sim, db) = listener_rig();
+        let listener = LiveEventListener::new(17895, db);
+        inject(&mut sim, 17895, &[(0x102, None)]);
+        let events = listener.poll(&mut sim).unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert!(e.is_decoded());
+        assert_eq!(e.vertex(), "cell_0");
+        assert_eq!(e.partition(), "out");
+        assert_eq!(e.atom(), Some(2));
+        assert_eq!(e.raw_key(), None);
+        assert_eq!(sim.wire_stats().unknown_live_keys, 0);
+    }
+
+    #[test]
+    fn poll_flags_unmapped_keys_instead_of_faking_atoms() {
+        let (mut sim, db) = listener_rig();
+        let bus = EventBus::new();
+        let ring = RingSink::new(8);
+        bus.attach(Box::new(ring.clone()));
+        let listener = LiveEventListener::new(17895, db).with_bus(bus);
+        inject(&mut sim, 17895, &[(0xDEAD, Some(7)), (0x101, None)]);
+        let events = listener.poll(&mut sim).unwrap();
+        assert_eq!(events.len(), 2);
+        let unknown = &events[0];
+        assert!(!unknown.is_decoded());
+        assert_eq!(unknown.vertex(), "");
+        assert_eq!(unknown.atom(), None, "an unmapped key is not an atom");
+        assert_eq!(unknown.raw_key(), Some(0xDEAD));
+        assert_eq!(unknown.payload, Some(7));
+        assert!(events[1].is_decoded());
+        assert_eq!(sim.wire_stats().unknown_live_keys, 1);
+        // Both mirrored onto the bus as live events.
+        assert_eq!(ring.len(), 2);
+        assert!(matches!(ring.events()[0].1, RunEvent::Live(_)));
+    }
+
+    #[test]
+    fn lifecycle_log_mirrors_pushes_onto_the_bus() {
+        let bus = EventBus::new();
+        let ring = RingSink::new(8);
+        bus.attach(Box::new(ring.clone()));
+        let mut log = LifecycleLog::with_bus(bus);
+        log.push(LifecycleEvent::Submitted { tenant: "a".into(), boards: 1 });
+        log.push(LifecycleEvent::Finished { tenant: "a".into(), ticks: 10 });
+        assert_eq!(log.events().len(), 2, "borrowing accessor API unchanged");
+        let kinds: Vec<&str> = ring.events().iter().map(|(_, e)| e.kind()).collect();
+        assert_eq!(kinds, vec!["lifecycle", "lifecycle"]);
+    }
 
     #[test]
     fn lifecycle_log_orders_and_filters_by_tenant() {

@@ -7,6 +7,7 @@
 
 mod allocator;
 mod buffer;
+pub mod bus;
 mod checkpoint;
 mod config;
 mod extraction;
@@ -25,8 +26,9 @@ pub use config::{
     BootFaults, ExtractionMethod, HealPolicy, LoadMethod, MachineSpec, SupervisorConfig,
     ToolsConfig,
 };
+pub use bus::{CallbackSink, EventBus, JsonlSink, Metrics, RingSink, RunEvent, Sink, SinkId};
 pub use extraction::{DataPlaneOptions, FastPath, WriteStats};
-pub use live::{LifecycleEvent, LifecycleLog, LiveEventListener, LiveInjector};
+pub use live::{LifecycleEvent, LifecycleLog, LiveEvent, LiveEventListener, LiveInjector, LiveSource};
 pub use provenance::{
     HealReport, ProvenanceReport, RemapReport, ServiceReport, TenantReport, VertexProvenance,
 };

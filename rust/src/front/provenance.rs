@@ -182,6 +182,13 @@ impl ProvenanceReport {
                 report.wire.escalations
             ));
         }
+        if report.wire.unknown_live_keys > 0 {
+            report.anomalies.push(format!(
+                "live output: {} multicast key(s) not in the mapping database (stale \
+                 routing entry or foreign traffic?)",
+                report.wire.unknown_live_keys
+            ));
+        }
         report
     }
 

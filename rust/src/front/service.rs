@@ -34,6 +34,7 @@
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::rc::Rc;
+use std::time::Instant;
 
 use crate::graph::VertexId;
 use crate::machine::router::RoutingTable;
@@ -43,6 +44,7 @@ use crate::simulator::{scamp, ChaosPlan, SimMachine};
 use super::allocator::BoardAllocator;
 use super::checkpoint::{Checkpointer, MemoryCheckpointer, RunSnapshot};
 use super::config::ToolsConfig;
+use super::bus::{EventBus, Metrics, RunEvent};
 use super::live::{LifecycleEvent, LifecycleLog};
 use super::provenance::{ServiceReport, TenantReport};
 use super::tools::SpiNNTools;
@@ -140,6 +142,9 @@ pub struct MachineService {
     /// Ticks each active tenant runs per scheduler round.
     quantum: u64,
     lifecycle: LifecycleLog,
+    /// Service-wide event bus; every tenant session and the lifecycle
+    /// log publish onto it, so one subscription watches the machine.
+    bus: EventBus,
     rounds: u64,
 }
 
@@ -154,6 +159,7 @@ impl MachineService {
         let sim = SimMachine::boot(machine, config.sim.clone());
         let allocator = BoardAllocator::new(&sim.machine);
         anyhow::ensure!(allocator.n_boards() > 0, "machine has no boards to serve");
+        let bus = EventBus::new();
         Ok(Self {
             config,
             sim: Some(sim),
@@ -162,7 +168,8 @@ impl MachineService {
             queue: VecDeque::new(),
             next_id: 0,
             quantum,
-            lifecycle: LifecycleLog::default(),
+            lifecycle: LifecycleLog::with_bus(bus.clone()),
+            bus,
             rounds: 0,
         })
     }
@@ -197,6 +204,7 @@ impl MachineService {
             .ok_or_else(|| anyhow::anyhow!("data-plane port window overflows u16"))?;
         self.next_id += 1;
         let mut tools = SpiNNTools::new(self.config.clone())?;
+        tools.set_bus(self.bus.clone());
         let vertices = build(&mut tools)?;
         let job = Job {
             name: name.to_string(),
@@ -378,8 +386,27 @@ impl MachineService {
                 tenant: job.name.clone(),
             });
         }
+        let ticks_before = job.tools.ticks_done();
+        let quantum_started = Instant::now();
         let res = Self::drive_tenant(job, quantum, &mut self.lifecycle);
+        let quantum_latency_us = quantum_started.elapsed().as_micros() as u64;
         let sim = job.tools.reclaim_sim()?;
+        if self.bus.has_sinks() {
+            let wire = sim.wire_stats();
+            let wall = quantum_started.elapsed().as_secs_f64().max(1e-9);
+            let ticks_run = job.tools.ticks_done().saturating_sub(ticks_before);
+            let router = sim.total_router_stats();
+            self.bus.emit(RunEvent::Metrics(Metrics {
+                tick: job.tools.ticks_done(),
+                sim_ns: sim.now_ns(),
+                ticks_per_sec: ticks_run as f64 / wall,
+                packets_per_sec: 0.0,
+                packets: router.mc_routed + router.mc_default_routed,
+                wire_retries: wire.scp_retries + wire.bulk_retry_waits,
+                tenant: Some(job.name.clone()),
+                quantum_latency_us: Some(quantum_latency_us),
+            }));
+        }
         self.sim = Some(sim);
         // Surface any self-heals that ran inside the quantum.
         let heals = job.tools.heal_reports().len();
@@ -611,6 +638,13 @@ impl MachineService {
     /// The ordered tenant-lifecycle log (§6.9 live channel).
     pub fn lifecycle(&self) -> &LifecycleLog {
         &self.lifecycle
+    }
+
+    /// The service-wide event bus: every tenant session, the lifecycle
+    /// log, and the per-quantum scheduler metrics publish here. Attach
+    /// sinks to watch the whole machine; mid-run attachment is fine.
+    pub fn bus(&self) -> &EventBus {
+        &self.bus
     }
 
     /// Per-tenant accounting for provenance (DESIGN.md §11).

@@ -27,6 +27,7 @@ use crate::simulator::{scamp, ChaosPlan, CoreState, SimMachine};
 use crate::util::fnv1a_64;
 
 use super::buffer::{plan_run_cycles, RunCyclePlan};
+use super::bus::{EventBus, Metrics, RunEvent};
 use super::checkpoint::{CheckpointConfig, Checkpointer, MemoryCheckpointer, RunSnapshot};
 use super::config::{ExtractionMethod, HealPolicy, LoadMethod, SupervisorConfig, ToolsConfig};
 use super::extraction::{DataPlaneOptions, FastPath};
@@ -172,6 +173,12 @@ pub struct SpiNNTools {
     /// multi-tenant service): partition scope, forbidden chips, and the
     /// loan slot for the service's machine.
     shared: Option<SharedSession>,
+    /// The unified run-event bus (DESIGN.md §13): every run/heal/chaos/
+    /// checkpoint/metrics event this session produces is published here.
+    /// Observation-only by contract — with no sinks attached, emission
+    /// is a counter bump. Survives [`Self::reset`] so observers outlive
+    /// individual runs.
+    bus: EventBus,
     pub notifications: NotificationProtocol,
 }
 
@@ -198,8 +205,21 @@ impl SpiNNTools {
             checkpointer: None,
             discard_note: None,
             shared: None,
+            bus: EventBus::new(),
             notifications: NotificationProtocol::default(),
         })
+    }
+
+    /// The session's run-event bus: attach [`super::bus::Sink`]s (works
+    /// mid-run) to watch the run live.
+    pub fn bus(&self) -> &EventBus {
+        &self.bus
+    }
+
+    /// Replace the session's bus with a shared one (the multi-tenant
+    /// service points every tenant at the service-wide bus).
+    pub fn set_bus(&mut self, bus: EventBus) {
+        self.bus = bus;
     }
 
     /// Install a snapshot store (e.g. a
@@ -459,13 +479,19 @@ impl SpiNNTools {
     /// otherwise — with the work done recorded in
     /// [`Self::remap_report`].
     pub fn run_ticks(&mut self, ticks: u64) -> anyhow::Result<()> {
+        self.bus.emit(RunEvent::RunStarted {
+            from_tick: self.ticks_done(),
+            ticks,
+        });
         if self.state.is_none() {
             self.first_run(ticks)
         } else if self.mapped_revisions != Some(self.graph_revisions()) {
             self.reconcile(ticks)
         } else {
             self.resume_run(ticks)
-        }
+        }?;
+        self.bus.emit(RunEvent::RunCompleted { ticks_done: self.ticks_done() });
+        Ok(())
     }
 
     /// Generate every (non-virtual) vertex's data regions against a
@@ -938,6 +964,13 @@ impl SpiNNTools {
             return self.full_remap(ticks, &e.to_string());
         }
         self.mapped_revisions = Some(self.graph_revisions());
+        if let Some((rerun, cached)) = self
+            .remap_report()
+            .map(|r| (r.stages_rerun, r.stages_cached))
+        {
+            self.bus
+                .emit(RunEvent::Reconciled { stages_rerun: rerun, stages_cached: cached });
+        }
         if let Some(snap) = &restore {
             // Preserve the pre-mutation run: recordings come back from
             // the snapshot, unchanged survivors get their evolving state
@@ -1354,6 +1387,7 @@ impl SpiNNTools {
             .ok_or_else(|| anyhow::anyhow!("run driver without a run state"))?
             .ticks_done;
         let mut heals_done = 0usize;
+        let bus = self.bus.clone();
         loop {
             // Re-read each pass: a heal's re-map may advance the key
             // allocator, and later captures must carry the new cursor.
@@ -1375,9 +1409,13 @@ impl SpiNNTools {
                 self.checkpointer.as_deref_mut(),
                 revisions,
                 key_cursor,
+                &bus,
             )? {
                 RunOutcome::Completed => return self.check_completion(),
                 RunOutcome::Faulted(findings) => {
+                    for f in &findings {
+                        bus.emit(RunEvent::Fault { description: f.describe() });
+                    }
                     let sup = supervision.ok_or_else(|| {
                         anyhow::anyhow!(
                             "run driver surfaced {} fault finding(s) without supervision \
@@ -1451,8 +1489,19 @@ impl SpiNNTools {
         mut store: Option<&mut dyn Checkpointer>,
         revisions: (u64, u64),
         key_cursor: u64,
+        bus: &EventBus,
     ) -> anyhow::Result<RunOutcome> {
         let timestep_ns = state.sim.config.timestep_us as u64 * 1000;
+        // Metrics sampling window (chunk boundaries). Wall clock and
+        // router totals are read only when someone is listening, so an
+        // unwatched run does no extra work.
+        let mut window_wall = Instant::now();
+        let mut window_packets = if bus.has_sinks() {
+            let r = state.sim.total_router_stats();
+            r.mc_routed + r.mc_default_routed
+        } else {
+            0
+        };
         for (i, cycle) in cycles.iter().enumerate() {
             if i > 0 {
                 scamp::signal_resume(&mut state.sim)?;
@@ -1482,6 +1531,10 @@ impl SpiNNTools {
                     let mut rest = Vec::with_capacity(plan.events.len());
                     for ev in plan.events.drain(..) {
                         if ev.at_tick < abs_done + step {
+                            bus.emit(RunEvent::ChaosInjected {
+                                at_tick: ev.at_tick,
+                                fault: ev.fault.to_string(),
+                            });
                             let delta = ev.at_tick.saturating_sub(abs_done);
                             state
                                 .sim
@@ -1509,7 +1562,27 @@ impl SpiNNTools {
                             state, abs, revisions, key_cursor, extraction, store,
                         )?;
                         store.prune(cfg.keep)?;
+                        bus.emit(RunEvent::CheckpointCaptured { tick: abs });
                     }
+                }
+                if bus.has_sinks() {
+                    let r = state.sim.total_router_stats();
+                    let packets_now = r.mc_routed + r.mc_default_routed;
+                    let packets = packets_now.saturating_sub(window_packets);
+                    let wall = window_wall.elapsed().as_secs_f64().max(1e-9);
+                    let wire = state.sim.wire_stats();
+                    bus.emit(RunEvent::Metrics(Metrics {
+                        tick: state.ticks_done + done_in_cycle,
+                        sim_ns: state.sim.now_ns(),
+                        ticks_per_sec: step as f64 / wall,
+                        packets_per_sec: packets as f64 / wall,
+                        packets,
+                        wire_retries: wire.scp_retries + wire.bulk_retry_waits,
+                        tenant: None,
+                        quantum_latency_us: None,
+                    }));
+                    window_packets = packets_now;
+                    window_wall = Instant::now();
                 }
             }
             state.ticks_done += cycle;
@@ -1925,7 +1998,7 @@ impl SpiNNTools {
         let state = self.state.as_mut().ok_or_else(|| {
             anyhow::anyhow!("run state lost while recording a heal of: {}", fault_descs.join("; "))
         })?;
-        state.heal_reports.push(HealReport {
+        let report = HealReport {
             faults: fault_descs,
             vertices_moved: summary.vertices_moved,
             tables_rewritten: summary.tables_rewritten,
@@ -1935,7 +2008,14 @@ impl SpiNNTools {
             stages_rerun: summary.stages_rerun,
             restored_from_tick: restore.as_ref().map(|s| s.tick),
             wire: state.sim.wire_stats(),
+        };
+        self.bus.emit(RunEvent::Healed {
+            faults: report.faults.len(),
+            vertices_moved: report.vertices_moved,
+            restored_from_tick: report.restored_from_tick,
+            heal_elapsed_us: report.heal_elapsed_us,
         });
+        state.heal_reports.push(report);
         Ok(())
     }
 
@@ -2092,6 +2172,14 @@ impl SpiNNTools {
                 }
                 report.remap = state.last_remap.clone();
                 report.heals = state.heal_reports.clone();
+                // Mirror anomalies onto the bus, once per distinct text
+                // (provenance is re-collected freely; the bus stream
+                // must not repeat).
+                if self.bus.has_sinks() {
+                    for a in &report.anomalies {
+                        self.bus.emit_anomaly(a);
+                    }
+                }
                 report
             }
             None => ProvenanceReport::default(),

@@ -223,8 +223,15 @@ pub struct WireStats {
     pub dup_commands_dropped: u64,
     /// Virtual time spent in timeout + exponential backoff.
     pub backoff_wait_ns: u64,
+    /// Bulk-plane retry rounds that came back empty and paid the
+    /// timeout + backoff wait (the data plane's analogue of
+    /// `scp_retries`; what lets a fast plane ride out a brownout).
+    pub bulk_retry_waits: u64,
     /// Boards declared silent after the retry budget exhausted.
     pub escalations: u64,
+    /// Live-output multicast keys the mapping database could not
+    /// attribute to any vertex (surfaced as a provenance anomaly).
+    pub unknown_live_keys: u64,
 }
 
 /// Direction of a host↔machine UDP frame.

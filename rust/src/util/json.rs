@@ -82,6 +82,50 @@ impl Json {
         out
     }
 
+    /// Single-line serialization (JSONL records, one value per line).
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -386,6 +430,15 @@ mod tests {
         let j = Json::parse(text).unwrap();
         let again = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(j, again);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_round_trips() {
+        let text = r#"{"a": [1, 2.5, -3], "b": "x\ny", "c": null, "d": true}"#;
+        let j = Json::parse(text).unwrap();
+        let s = j.to_string_compact();
+        assert!(!s.contains('\n') && !s.contains("  "));
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Integration tests across the whole stack (experiment ids from
-//! DESIGN.md §13): the Figure-8 flow, Figure-9 pause/resume, live I/O,
+//! DESIGN.md §14): the Figure-8 flow, Figure-9 pause/resume, live I/O,
 //! the application-graph SNN path with the AOT HLO artifacts, and the
 //! simulated-hardware behaviours the toolchain depends on.
 
@@ -206,7 +206,7 @@ fn e6_live_output_via_lpg_and_input_via_riptms() {
     // The LPG flushes on its own timer, so live events lag one tick:
     // after 5 ticks the states of ticks 1..4 have been forwarded.
     assert_eq!(events.len(), 4, "one state event per completed tick");
-    assert!(events.iter().all(|e| e.vertex == "cell_1_1"));
+    assert!(events.iter().all(|e| e.vertex() == "cell_1_1"));
     // Payload carries the cell state; blinker centre is always alive.
     assert!(events.iter().all(|e| e.payload == Some(1)));
 
@@ -459,5 +459,5 @@ fn wrapped_machine_vertex_in_application_graph() {
     let listener = LiveEventListener::new(20123, db);
     let events = listener.poll(tools.sim_mut().unwrap()).unwrap();
     assert!(!events.is_empty(), "LPG should forward the population's spikes");
-    assert!(events.iter().all(|e| e.vertex.starts_with("pop")));
+    assert!(events.iter().all(|e| e.vertex().starts_with("pop")));
 }

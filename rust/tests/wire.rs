@@ -336,6 +336,45 @@ fn brownout_rides_out_on_backoff() {
 }
 
 #[test]
+fn bulk_plane_rides_out_brownout_on_backoff() {
+    // Regression: bulk-plane retry rounds used to advance *no* simulated
+    // time when a round came back completely empty, so a total blackout
+    // spun all its rounds at one frozen instant inside the episode and
+    // escalated — the episode could never expire. Each empty round must
+    // pay timeout + capped exponential backoff (mirroring the SCP
+    // plane), which lets a brownout shorter than the backoff budget
+    // ride out.
+    let m = MachineBuilder::spinn5().build();
+    let mut sim = faulty_sim(m, WireFaults::none());
+    let chip = (1, 1);
+    let data = pattern(40_000, 0xB1);
+    let addr = scamp::alloc_sdram(&mut sim, chip, data.len() as u32).unwrap();
+    let fp = FastPath::install(&mut sim, &[chip], picker(), &DataPlaneOptions::default())
+        .unwrap();
+    scamp::signal_start(&mut sim).unwrap();
+    fp.write(&mut sim, chip, addr, &data).unwrap();
+    // Total loss for 5 ms: shorter than the bulk retry budget's backoff
+    // horizon, so the read must wait the episode out and succeed.
+    sim.apply_fault(Fault::LinkBrownout {
+        board: (0, 0),
+        loss_permille: 1000,
+        duration_ns: 5_000_000,
+    })
+    .unwrap();
+    assert_eq!(
+        fp.read(&mut sim, chip, addr, data.len()).unwrap(),
+        data,
+        "bulk image differs after the brownout"
+    );
+    let stats = sim.wire_stats();
+    assert!(
+        stats.bulk_retry_waits > 0,
+        "the blackout never cost a bulk retry round: {stats:?}"
+    );
+    assert_eq!(stats.escalations, 0, "a transient brownout must not escalate");
+}
+
+#[test]
 fn rediscovery_under_loss_keeps_the_machine_and_drops_silent_boards() {
     let m = MachineBuilder::triads(1, 1).build();
     let n = m.n_chips();
