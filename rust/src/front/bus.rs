@@ -19,6 +19,9 @@
 //!   increasing per sink.
 //! - **Subscribable mid-run.** [`EventBus::attach`] works at any point;
 //!   a late sink simply starts at the current sequence number.
+//! - **Re-entrant.** Sinks are invoked with the hub unborrowed, so a
+//!   sink may call back into the same bus (emit, attach, detach);
+//!   re-entrant emissions queue behind the event being delivered.
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -245,6 +248,15 @@ struct Hub {
     /// FNV hashes of anomaly texts already mirrored ([`EventBus::emit_anomaly`]
     /// is called from the idempotent provenance path, so it dedupes).
     seen_anomalies: BTreeSet<u64>,
+    /// True while a delivery pass has the slots checked out (sinks run
+    /// with the hub unborrowed, so they may call back into the bus).
+    delivering: bool,
+    /// Events emitted re-entrantly from inside a sink, flushed by the
+    /// outer delivery pass after its own event.
+    pending: VecDeque<(u64, RunEvent)>,
+    /// Detaches requested from inside a sink while the slots were
+    /// checked out; applied when the delivery pass returns them.
+    pending_detach: BTreeSet<SinkId>,
 }
 
 /// The per-run event hub: a cheaply clonable handle (the front end is
@@ -298,15 +310,24 @@ impl EventBus {
         id
     }
 
-    /// Unsubscribe; undelivered backlog is discarded.
+    /// Unsubscribe; undelivered backlog is discarded. Safe to call from
+    /// inside a [`Sink`]: mid-delivery the removal is deferred until the
+    /// current pass hands the slots back.
     pub fn detach(&self, id: SinkId) {
-        self.hub.borrow_mut().slots.retain(|s| s.id != id);
+        let mut hub = self.hub.borrow_mut();
+        hub.slots.retain(|s| s.id != id);
+        if hub.delivering {
+            hub.pending_detach.insert(id);
+        }
     }
 
     /// Whether anyone is listening — emission sites use this to skip
     /// building events (and sampling router stats) on unwatched runs.
     pub fn has_sinks(&self) -> bool {
-        !self.hub.borrow().slots.is_empty()
+        let hub = self.hub.borrow();
+        // `delivering` implies at least one slot is checked out of the
+        // hub for the duration of a delivery pass.
+        !hub.slots.is_empty() || hub.delivering
     }
 
     /// Events published so far (the next event gets `seq() + 1`).
@@ -342,23 +363,81 @@ impl EventBus {
     /// Publish one event to every sink. Never blocks: a sink that
     /// refuses delivery accumulates backlog in its bounded buffer, and
     /// a full buffer drops (and counts) the new event for that sink.
+    ///
+    /// Sinks run with the hub unborrowed, so a sink may re-enter the
+    /// bus (emit, attach, detach, counters): re-entrant emissions are
+    /// queued and flushed by the outer call, in order. The one caveat:
+    /// per-sink counters ([`EventBus::dropped`] and friends) queried
+    /// from *inside* a sink return `None` while the slots are checked
+    /// out for delivery.
     pub fn emit(&self, event: RunEvent) {
-        let mut hub = self.hub.borrow_mut();
-        hub.seq += 1;
-        let seq = hub.seq;
-        if hub.slots.is_empty() {
-            return;
-        }
-        for slot in hub.slots.iter_mut() {
-            if slot.buffer.len() >= slot.capacity {
-                // Dropping the *new* event (not the oldest) keeps what
-                // the sink eventually sees a strict prefix-in-order of
-                // the stream — late data beats reordered data.
-                slot.dropped += 1;
-            } else {
-                slot.buffer.push_back((seq, event.clone()));
+        {
+            let mut hub = self.hub.borrow_mut();
+            hub.seq += 1;
+            let seq = hub.seq;
+            if hub.delivering {
+                // Emitted from inside a sink: the outer delivery pass
+                // flushes this after the event it is handing out now.
+                hub.pending.push_back((seq, event));
+                return;
             }
-            slot.drain();
+            if hub.slots.is_empty() {
+                return;
+            }
+            hub.pending.push_back((seq, event));
+            hub.delivering = true;
+        }
+        self.flush_pending();
+    }
+
+    /// Deliver queued events until none remain, checking the slots out
+    /// of the hub for each pass so sinks run without the `RefCell`
+    /// borrowed (re-entrant bus calls from a sink must not panic).
+    fn flush_pending(&self) {
+        loop {
+            let ((seq, event), mut slots) = {
+                let mut hub = self.hub.borrow_mut();
+                match hub.pending.pop_front() {
+                    Some(item) => (item, std::mem::take(&mut hub.slots)),
+                    None => {
+                        hub.delivering = false;
+                        return;
+                    }
+                }
+            };
+            for slot in slots.iter_mut() {
+                // A sink attached (re-entrantly) after this event was
+                // sequenced never sees it — no replay of history.
+                if seq <= slot.attached_at {
+                    continue;
+                }
+                // Drain *first*: a sink that has become ready again
+                // takes its backlog now, which may free the room this
+                // event needs — dropping before draining would lose
+                // the event that arrives at recovery time.
+                slot.drain();
+                if slot.buffer.len() >= slot.capacity {
+                    // Dropping the *new* event (not the oldest) keeps
+                    // what the sink eventually sees a strict
+                    // prefix-in-order of the stream — late data beats
+                    // reordered data.
+                    slot.dropped += 1;
+                } else {
+                    slot.buffer.push_back((seq, event.clone()));
+                    slot.drain();
+                }
+            }
+            let mut hub = self.hub.borrow_mut();
+            // Merge back, honouring anything a sink did re-entrantly:
+            // detaches recorded while the slots were out, and sinks
+            // attached mid-delivery (sitting in `hub.slots` now).
+            let attached_during = std::mem::take(&mut hub.slots);
+            if !hub.pending_detach.is_empty() {
+                let gone = std::mem::take(&mut hub.pending_detach);
+                slots.retain(|s| !gone.contains(&s.id));
+            }
+            slots.extend(attached_during);
+            hub.slots = slots;
         }
     }
 
@@ -547,6 +626,68 @@ mod tests {
             self.seen.borrow_mut().push(seq);
             true
         }
+    }
+
+    #[test]
+    fn reentrant_emit_from_sink_queues_after_current_event() {
+        let bus = EventBus::new();
+        let ring = RingSink::new(8);
+        bus.attach(Box::new(ring.clone()));
+        let b2 = bus.clone();
+        bus.attach(Box::new(CallbackSink::new(move |_, event| {
+            if matches!(event, RunEvent::CheckpointCaptured { tick: 1 }) {
+                b2.emit(ev(2));
+            }
+        })));
+        bus.emit(ev(1));
+        let ticks: Vec<u64> = ring
+            .events()
+            .iter()
+            .map(|(_, e)| match e {
+                RunEvent::CheckpointCaptured { tick } => *tick,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ticks, vec![1, 2], "re-entrant event lands after the one in flight");
+        assert_eq!(bus.seq(), 2);
+    }
+
+    #[test]
+    fn sink_may_detach_itself_mid_delivery() {
+        let bus = EventBus::new();
+        let seen: Rc<RefCell<Vec<u64>>> = Rc::default();
+        let id_cell: Rc<RefCell<Option<SinkId>>> = Rc::default();
+        let (b2, s2, c2) = (bus.clone(), seen.clone(), id_cell.clone());
+        let id = bus.attach(Box::new(CallbackSink::new(move |seq, _| {
+            s2.borrow_mut().push(seq);
+            if let Some(id) = *c2.borrow() {
+                b2.detach(id);
+            }
+        })));
+        *id_cell.borrow_mut() = Some(id);
+        bus.emit(ev(1));
+        bus.emit(ev(2));
+        assert_eq!(*seen.borrow(), vec![1], "gone after detaching during seq 1");
+        assert!(!bus.has_sinks());
+    }
+
+    #[test]
+    fn sink_attached_mid_delivery_misses_current_event() {
+        let bus = EventBus::new();
+        let late = RingSink::new(8);
+        let attached = Rc::new(RefCell::new(false));
+        let (b2, l2, a2) = (bus.clone(), late.clone(), attached.clone());
+        bus.attach(Box::new(CallbackSink::new(move |_, _| {
+            if !*a2.borrow() {
+                *a2.borrow_mut() = true;
+                b2.attach(Box::new(l2.clone()));
+            }
+        })));
+        bus.emit(ev(1));
+        assert!(late.is_empty(), "no replay of the event being delivered");
+        bus.emit(ev(2));
+        let seqs: Vec<u64> = late.events().iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![2]);
     }
 
     #[test]

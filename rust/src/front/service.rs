@@ -379,6 +379,15 @@ impl MachineService {
             .jobs
             .get_mut(&id)
             .ok_or_else(|| anyhow::anyhow!("running unknown job {id}"))?;
+        // Baseline router totals so the quantum's Metrics sample can
+        // report the window *delta* (same semantics as the run-driver
+        // path), not the machine's cumulative count.
+        let packets_before = if self.bus.has_sinks() {
+            let r = sim.total_router_stats();
+            Some(r.mc_routed + r.mc_default_routed)
+        } else {
+            None
+        };
         job.tools.lend_sim(sim)?;
         if !job.run_started {
             job.run_started = true;
@@ -396,12 +405,17 @@ impl MachineService {
             let wall = quantum_started.elapsed().as_secs_f64().max(1e-9);
             let ticks_run = job.tools.ticks_done().saturating_sub(ticks_before);
             let router = sim.total_router_stats();
+            let total = router.mc_routed + router.mc_default_routed;
+            // No pre-quantum baseline (a sink attached during the
+            // quantum): report an empty window, never a cumulative
+            // spike.
+            let packets = packets_before.map_or(0, |b| total.saturating_sub(b));
             self.bus.emit(RunEvent::Metrics(Metrics {
                 tick: job.tools.ticks_done(),
                 sim_ns: sim.now_ns(),
                 ticks_per_sec: ticks_run as f64 / wall,
-                packets_per_sec: 0.0,
-                packets: router.mc_routed + router.mc_default_routed,
+                packets_per_sec: packets as f64 / wall,
+                packets,
                 wire_retries: wire.scp_retries + wire.bulk_retry_waits,
                 tenant: Some(job.name.clone()),
                 quantum_latency_us: Some(quantum_latency_us),

@@ -1492,15 +1492,17 @@ impl SpiNNTools {
         bus: &EventBus,
     ) -> anyhow::Result<RunOutcome> {
         let timestep_ns = state.sim.config.timestep_us as u64 * 1000;
-        // Metrics sampling window (chunk boundaries). Wall clock and
-        // router totals are read only when someone is listening, so an
-        // unwatched run does no extra work.
+        // Metrics sampling window (chunk boundaries). Router totals are
+        // read only when someone is listening, so an unwatched run does
+        // no extra work. The baseline is `None` while unwatched: a sink
+        // attaching mid-run must not see the machine's cumulative
+        // packet count reported as a single window's delta.
         let mut window_wall = Instant::now();
-        let mut window_packets = if bus.has_sinks() {
+        let mut window_packets: Option<u64> = if bus.has_sinks() {
             let r = state.sim.total_router_stats();
-            r.mc_routed + r.mc_default_routed
+            Some(r.mc_routed + r.mc_default_routed)
         } else {
-            0
+            None
         };
         for (i, cycle) in cycles.iter().enumerate() {
             if i > 0 {
@@ -1568,7 +1570,11 @@ impl SpiNNTools {
                 if bus.has_sinks() {
                     let r = state.sim.total_router_stats();
                     let packets_now = r.mc_routed + r.mc_default_routed;
-                    let packets = packets_now.saturating_sub(window_packets);
+                    // First watched boundary since attach: no baseline,
+                    // so report an empty window rather than a spike of
+                    // the whole run's cumulative count.
+                    let packets =
+                        window_packets.map_or(0, |prev| packets_now.saturating_sub(prev));
                     let wall = window_wall.elapsed().as_secs_f64().max(1e-9);
                     let wire = state.sim.wire_stats();
                     bus.emit(RunEvent::Metrics(Metrics {
@@ -1581,9 +1587,11 @@ impl SpiNNTools {
                         tenant: None,
                         quantum_latency_us: None,
                     }));
-                    window_packets = packets_now;
-                    window_wall = Instant::now();
+                    window_packets = Some(packets_now);
+                } else {
+                    window_packets = None;
                 }
+                window_wall = Instant::now();
             }
             state.ticks_done += cycle;
             Self::extract_recordings(state, extraction)?;
